@@ -1,0 +1,61 @@
+//! Model-driven algorithm selection (the paper's §5 put to work): for
+//! every distinct VGG/AlexNet layer and a sweep of machines, print which
+//! method + tile size the Roofline model picks — reproducing the paper's
+//! observations that (a) the winner depends on (layer, CMR, cache) and
+//! (b) optimal FFT tiles are often not powers of two (27, 25, 21, 31...).
+//!
+//! `cargo run --release --example autotune`
+
+use fftconv::model::machine::{probe_host, TABLE1};
+use fftconv::model::select::{best_tiles_per_method, select};
+use fftconv::nets::paper_layers;
+use fftconv::util::bench::Table;
+
+fn main() {
+    let machines = [
+        TABLE1[0].clone(), // KNL, CMR 11
+        TABLE1[3].clone(), // Xeon Gold, CMR 24
+        TABLE1[9].clone(), // i9 @51GB/s, CMR 41
+        probe_host(),
+    ];
+
+    let mut table = Table::new(
+        "model-chosen algorithm per (layer, machine)",
+        &["layer", "machine", "choice", "tile m", "t", "pred ms"],
+    );
+    for layer in paper_layers() {
+        for mach in &machines {
+            let c = select(&layer.shape, mach);
+            table.row(vec![
+                layer.name.to_string(),
+                mach.name.chars().take(24).collect(),
+                c.method.name().to_string(),
+                c.m.to_string(),
+                (c.m + layer.shape.r - 1).to_string(),
+                format!("{:.2}", c.predicted * 1e3),
+            ]);
+        }
+    }
+    table.emit("autotune_choices");
+
+    // the paper's tile-size observation, on the Xeon Gold
+    let gold = &TABLE1[3];
+    let mut tiles = Table::new(
+        "optimal Regular-FFT transform sizes t on Xeon Gold (paper: 27, 25, 21, 16, 9, 31, 15)",
+        &["layer", "t (ours)", "power of two?"],
+    );
+    for layer in paper_layers() {
+        let per = best_tiles_per_method(&layer.shape, gold);
+        let fft = per
+            .iter()
+            .find(|c| c.method == fftconv::model::stages::Method::RegularFft)
+            .unwrap();
+        let t = fft.m + layer.shape.r - 1;
+        tiles.row(vec![
+            layer.name.to_string(),
+            t.to_string(),
+            if t.is_power_of_two() { "yes" } else { "NO" }.to_string(),
+        ]);
+    }
+    tiles.emit("autotune_fft_tiles");
+}

@@ -1,0 +1,142 @@
+//! End-to-end driver (DESIGN.md §6): proves all three layers compose and
+//! runs the paper's workload on a real small model.
+//!
+//! Phase 1 — AOT path: load the Python-lowered HLO artifacts (Pallas
+//! kernels inside JAX graphs), execute the 3-layer ConvNet per method on
+//! the PJRT CPU client from rust, and cross-validate the numerics
+//! against the native engine.  Python is not running.
+//!
+//! Phase 2 — native serving path: register the 12 distinct VGG/AlexNet
+//! layers (host-scaled) with model-chosen algorithms, push batched
+//! requests through the coordinator, and report per-layer latency +
+//! the paper's AlexNet headline comparison.
+//!
+//! `make artifacts && cargo run --release --example e2e_convnet`
+
+use fftconv::conv::{self, ConvAlgorithm, Tensor4};
+use fftconv::coordinator::{ConvRequest, ConvService};
+use fftconv::harness::figures::alexnet_totals;
+use fftconv::harness::BenchConfig;
+use fftconv::model::machine::probe_host;
+use fftconv::model::paper_data;
+use fftconv::nets;
+use fftconv::runtime::{artifacts_available, default_artifact_dir, Runtime};
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    // ---------------- Phase 1: AOT artifacts through PJRT ----------------
+    let dir = default_artifact_dir();
+    if artifacts_available(&dir) {
+        println!("== Phase 1: AOT artifacts (jax+pallas -> HLO text -> rust PJRT)");
+        let rt = Runtime::open(&dir)?;
+        let nets_arts: Vec<_> = rt
+            .artifacts()
+            .iter()
+            .filter(|a| a.kind == "convnet")
+            .cloned()
+            .collect();
+        let base = &nets_arts[0];
+        let inputs: Vec<Tensor4> = base
+            .inputs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| Tensor4::random([s[0], s[1], s[2], s[3]], 42 + i as u64))
+            .collect();
+        let refs: Vec<&Tensor4> = inputs.iter().collect();
+        let mut outputs = Vec::new();
+        for art in &nets_arts {
+            let t0 = std::time::Instant::now();
+            let out = rt.execute(&art.name, &refs)?;
+            println!(
+                "  {:24} -> {:?} in {:6.1} ms (compile cached after first)",
+                art.name,
+                out.shape,
+                t0.elapsed().as_secs_f64() * 1e3
+            );
+            outputs.push((art.name.clone(), out));
+        }
+        let (base_name, base_out) = &outputs[0];
+        for (name, out) in &outputs[1..] {
+            let diff = out.max_abs_diff(base_out) / base_out.max_abs().max(1.0);
+            println!("  {name} vs {base_name}: rel diff {diff:.2e}");
+            assert!(diff < 1e-2, "convnet methods disagree");
+        }
+        println!("  all AOT convnet methods agree ✓\n");
+    } else {
+        println!("== Phase 1 SKIPPED: run `make artifacts` first\n");
+    }
+
+    // ---------------- Phase 2: native serving path ----------------
+    println!("== Phase 2: coordinator serving host-scaled VGG+AlexNet layers");
+    let host = probe_host();
+    println!(
+        "  host: {} (CMR {:.1})",
+        host.name,
+        host.cmr()
+    );
+    let cfg = BenchConfig::from_env();
+    let layers = nets::host_layers(1, cfg.max_x.min(34)); // request-sized images
+    let mut svc = ConvService::new(host, 2, 4, Duration::from_millis(5));
+    for layer in &layers {
+        let mut p = layer.problem();
+        p.batch = 4;
+        let w = Tensor4::random(p.weight_shape(), 7);
+        svc.register(layer.name, p, w);
+        let algo = svc.layer(layer.name).unwrap().algo;
+        println!("  registered {:10} -> {}", layer.name, algo.name());
+    }
+    // push 4 requests per layer (fills one batch each)
+    let mut id = 0u64;
+    let mut done = 0usize;
+    for layer in &layers {
+        let p = layer.problem();
+        for _ in 0..4 {
+            let x = Tensor4::random([1, p.c_in, p.h, p.w], 100 + id);
+            let rs = svc.submit(ConvRequest::new(id, layer.name, x)).unwrap();
+            done += rs.len();
+            id += 1;
+        }
+    }
+    done += svc.flush().len();
+    let snap = svc.metrics.snapshot();
+    println!(
+        "\n  served {done}/{id} requests in {} batches (mean batch {:.1})",
+        snap.batches, snap.mean_batch
+    );
+    println!(
+        "  latency: p50 {:.1} ms, p95 {:.1} ms, max {:.1} ms",
+        snap.p50_ms, snap.p95_ms, snap.max_ms
+    );
+    assert_eq!(done as u64, id, "every request answered");
+
+    // correctness spot check through the full service path
+    let spot = &layers[7]; // vgg5.1-scaled
+    let p = spot.problem();
+    let x = Tensor4::random([1, p.c_in, p.h, p.w], 999);
+    let w = svc.layer(spot.name).unwrap().weights.clone();
+    let rs = {
+        let mut out = svc.submit(ConvRequest::new(id, spot.name, x.clone())).unwrap();
+        out.extend(svc.flush());
+        out
+    };
+    let want = conv::run(ConvAlgorithm::Direct, &x, &w);
+    let diff = rs[0].output.max_abs_diff(&want) / want.max_abs();
+    println!("  service output vs direct oracle: rel diff {diff:.2e} ✓");
+    assert!(diff < 1e-3);
+
+    // ---------------- Phase 3: the paper's headline ----------------
+    println!("\n== Phase 3: AlexNet conv-total comparison (paper headline)");
+    let (wino_ms, fft_ms) = alexnet_totals(&cfg);
+    println!(
+        "  host-scaled AlexNet conv total: winograd {wino_ms:.1} ms, regular-fft {fft_ms:.1} ms ({:.2}x)",
+        wino_ms / fft_ms
+    );
+    println!(
+        "  paper (20-core Xeon Gold, full scale): {:.2} ms -> {:.2} ms ({:.2}x)",
+        paper_data::ALEXNET_TOTAL_MS_WINOGRAD,
+        paper_data::ALEXNET_TOTAL_MS_REGULAR_FFT,
+        paper_data::ALEXNET_TOTAL_MS_WINOGRAD / paper_data::ALEXNET_TOTAL_MS_REGULAR_FFT
+    );
+    println!("\ne2e driver complete ✓");
+    Ok(())
+}

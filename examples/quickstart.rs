@@ -1,0 +1,45 @@
+//! Quickstart: convolve one layer with every algorithm and check they
+//! agree.  `cargo run --release --example quickstart`
+
+use fftconv::conv::{self, ConvAlgorithm, ConvProblem, Tensor4};
+use std::time::Instant;
+
+fn main() {
+    // a small VGG-ish layer: 32 -> 32 channels, 34x34 input, 3x3 kernels
+    let problem = ConvProblem {
+        batch: 2,
+        c_in: 32,
+        c_out: 32,
+        h: 34,
+        w: 34,
+        r: 3,
+    };
+    let x = Tensor4::random(problem.input_shape(), 1);
+    let w = Tensor4::random(problem.weight_shape(), 2);
+
+    println!("problem: {problem:?}");
+    println!("direct FLOPs: {:.2} GFLOP\n", problem.direct_flops() as f64 / 1e9);
+
+    let reference = conv::run(ConvAlgorithm::Direct, &x, &w);
+    for algo in [
+        ConvAlgorithm::Direct,
+        ConvAlgorithm::Im2col,
+        ConvAlgorithm::Winograd { m: 4 },     // F(4^2,3^2): the vendor sweet spot
+        ConvAlgorithm::RegularFft { m: 6 },   // 𝔉(6^2,3^2): t = 8
+        ConvAlgorithm::RegularFft { m: 14 },  // 𝔉(14^2,3^2): t = 16
+        ConvAlgorithm::GaussFft { m: 6 },
+    ] {
+        let t0 = Instant::now();
+        let out = conv::run(algo, &x, &w);
+        let dt = t0.elapsed();
+        let err = out.max_abs_diff(&reference) / reference.max_abs();
+        println!(
+            "{:22} {:8.2} ms   rel.err {:.2e}",
+            algo.name(),
+            dt.as_secs_f64() * 1e3,
+            err
+        );
+        assert!(err < 1e-3, "{} disagrees with direct", algo.name());
+    }
+    println!("\nall algorithms agree ✓");
+}

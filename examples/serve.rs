@@ -1,0 +1,55 @@
+//! Serving demo: a steady stream of mixed-layer convolution requests
+//! through the batching coordinator, with latency metrics — the
+//! "coordinator as a service" view of the L3 layer.
+//!
+//! `cargo run --release --example serve`
+
+use fftconv::conv::{ConvProblem, Tensor4};
+use fftconv::coordinator::{ConvRequest, ConvService};
+use fftconv::model::machine::probe_host;
+use fftconv::util::Rng;
+use std::time::Duration;
+
+fn main() {
+    let host = probe_host();
+    let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut svc = ConvService::new(host, workers, 8, Duration::from_millis(2));
+
+    // three registered layers of different shapes
+    let specs = [
+        ("small", ConvProblem { batch: 8, c_in: 16, c_out: 16, h: 18, w: 18, r: 3 }),
+        ("wide", ConvProblem { batch: 8, c_in: 64, c_out: 32, h: 14, w: 14, r: 3 }),
+        ("fivebyfive", ConvProblem { batch: 8, c_in: 16, c_out: 32, h: 15, w: 15, r: 5 }),
+    ];
+    for (name, p) in &specs {
+        svc.register(name, *p, Tensor4::random(p.weight_shape(), 11));
+        println!(
+            "registered '{name}' -> {}",
+            svc.layer(name).unwrap().algo.name()
+        );
+    }
+
+    // 120 requests in randomized layer order, ticking the deadline poller
+    let mut rng = Rng::new(2024);
+    let mut answered = 0usize;
+    let total = 120u64;
+    for id in 0..total {
+        let (name, p) = specs[rng.below(specs.len())];
+        let x = Tensor4::random([1, p.c_in, p.h, p.w], id);
+        answered += svc.submit(ConvRequest::new(id, name, x)).unwrap().len();
+        if id % 16 == 0 {
+            std::thread::sleep(Duration::from_millis(3));
+            answered += svc.tick().len();
+        }
+    }
+    answered += svc.flush().len();
+    assert_eq!(answered as u64, total);
+
+    let snap = svc.metrics.snapshot();
+    println!("\nserved {answered} requests");
+    println!("batches executed : {}", snap.batches);
+    println!("mean batch size  : {:.2}", snap.mean_batch);
+    println!("latency p50      : {:.2} ms", snap.p50_ms);
+    println!("latency p95      : {:.2} ms", snap.p95_ms);
+    println!("latency max      : {:.2} ms", snap.max_ms);
+}

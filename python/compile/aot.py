@@ -1,0 +1,168 @@
+"""AOT driver: lower the L2 conv-layer graphs to HLO text artifacts.
+
+Run once at build time (``make artifacts``); Python never executes on the
+request path.  Emits, per artifact, ``artifacts/<name>.hlo.txt`` plus a
+single ``artifacts/manifest.json`` the rust runtime reads to discover
+artifact shapes and entry points.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` 0.1.6 crate links) rejects; the
+text parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Artifact catalog.  Shapes are deliberately modest: the CPU PJRT plugin
+# executes interpret-mode Pallas HLO, so these prove the three-layer
+# composition and provide integration-test vectors; the native rust engine
+# carries the full-size paper workloads (see DESIGN.md §3).
+SMALL_LAYERS: List[Dict[str, Any]] = [
+    # name, method, m, (B, C, H, W), (K, C, r, r)
+    dict(name="direct_b2c8", method="direct", m=0, x=(2, 8, 16, 16), w=(4, 8, 3, 3)),
+    dict(name="wino_m4_b2c8", method="winograd", m=4, x=(2, 8, 16, 16), w=(4, 8, 3, 3)),
+    dict(name="fft_m6_b2c8", method="regular_fft", m=6, x=(2, 8, 16, 16), w=(4, 8, 3, 3)),
+    dict(name="gauss_m6_b2c8", method="gauss_fft", m=6, x=(2, 8, 16, 16), w=(4, 8, 3, 3)),
+    dict(name="wino_m2_r5", method="winograd", m=2, x=(1, 4, 14, 14), w=(4, 4, 5, 5)),
+    dict(name="fft_m11_r5", method="regular_fft", m=11, x=(1, 4, 15, 15), w=(4, 4, 5, 5)),
+]
+
+# The e2e ConvNet: three 3x3 conv layers + ReLU, one artifact per method.
+CONVNET = dict(x=(1, 8, 20, 20), channels=[8, 12, 8, 4], r=3, m=4)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange).
+
+    ``print_large_constants=True`` is load-bearing: the default elides
+    array constants as ``{...}``, which xla_extension 0.5.1's text parser
+    silently materializes as zeros — every transform matrix baked into
+    the graph (Winograd B^T/G/A^T, DFT matrices) would vanish.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_layer(entry: Dict[str, Any]) -> str:
+    method, m = entry["method"], entry["m"]
+    fn = lambda x, w: model.METHODS[method](x, w, m)
+    lowered = jax.jit(fn).lower(_spec(entry["x"]), _spec(entry["w"]))
+    return to_hlo_text(lowered)
+
+
+def convnet_weight_shapes(cfg=CONVNET):
+    ch = cfg["channels"]
+    r = cfg["r"]
+    return [(ch[i + 1], ch[i], r, r) for i in range(len(ch) - 1)]
+
+
+def lower_convnet(method: str, cfg=CONVNET) -> str:
+    m = cfg["m"]
+    wspecs = [_spec(s) for s in convnet_weight_shapes(cfg)]
+
+    def fn(x, *weights):
+        return model.convnet_forward(x, list(weights), method, m)
+
+    lowered = jax.jit(fn).lower(_spec(cfg["x"]), *wspecs)
+    return to_hlo_text(lowered)
+
+
+def convnet_out_shape(method: str, cfg=CONVNET):
+    m = cfg["m"]
+    wspecs = [_spec(s) for s in convnet_weight_shapes(cfg)]
+
+    def fn(x, *weights):
+        return model.convnet_forward(x, list(weights), method, m)
+
+    return jax.eval_shape(fn, _spec(cfg["x"]), *wspecs).shape
+
+
+def layer_out_shape(entry):
+    fn = lambda x, w: model.METHODS[entry["method"]](x, w, entry["m"])
+    return jax.eval_shape(fn, _spec(entry["x"]), _spec(entry["w"])).shape
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="marker path; artifacts land in its directory")
+    ap.add_argument("--only", default=None, help="comma-separated artifact names")
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(os.path.abspath(args.out))
+    os.makedirs(out_dir, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+
+    manifest: Dict[str, Any] = {"artifacts": []}
+
+    for entry in SMALL_LAYERS:
+        if only and entry["name"] not in only:
+            continue
+        text = lower_layer(entry)
+        fname = f"{entry['name']}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            dict(
+                name=entry["name"],
+                kind="layer",
+                method=entry["method"],
+                m=entry["m"],
+                inputs=[list(entry["x"]), list(entry["w"])],
+                output=list(layer_out_shape(entry)),
+                file=fname,
+            )
+        )
+        print(f"lowered {entry['name']} -> {fname} ({len(text)} chars)")
+
+    for method in ("winograd", "regular_fft", "gauss_fft", "direct"):
+        name = f"convnet_{method}"
+        if only and name not in only:
+            continue
+        text = lower_convnet(method)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            dict(
+                name=name,
+                kind="convnet",
+                method=method,
+                m=CONVNET["m"],
+                inputs=[list(CONVNET["x"])] + [list(s) for s in convnet_weight_shapes()],
+                output=list(convnet_out_shape(method)),
+                file=fname,
+            )
+        )
+        print(f"lowered {name} -> {fname} ({len(text)} chars)")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    # the Makefile marker: write the first artifact's text there too
+    with open(args.out, "w") as f:
+        f.write("# see manifest.json; artifacts are per-graph .hlo.txt files\n")
+    print(f"manifest: {len(manifest['artifacts'])} artifacts -> {out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

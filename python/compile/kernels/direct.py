@@ -1,0 +1,51 @@
+"""Layer-1 Pallas kernel for direct convolution (the paper's baseline).
+
+Direct convolution is the MKL-DNN comparator in Figs. 1/6/7.  The kernel
+computes one (B-block, K) output plane per grid step by accumulating the
+r*r shifted input windows — the classic "shift-and-multiply" direct
+method, expressed with matmul-shaped contractions over channels so the
+MXU path stays hot on real hardware.
+
+Data contract: x (B, C, H, W), w (K, C, r, r) -> (B, K, H-r+1, W-r+1).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+@functools.partial(jax.jit, static_argnames=())
+def direct_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Valid cross-correlation as a Pallas kernel."""
+    b, c, h, wd = x.shape
+    k, _, r, _ = w.shape
+    oh, ow = h - r + 1, wd - r + 1
+
+    def kern(x_ref, w_ref, o_ref):
+        xv = x_ref[...]  # (1, C, H, W)
+        wv = w_ref[...]  # (K, C, r, r)
+        acc = jnp.zeros((1, k, oh, ow), xv.dtype)
+        for u in range(r):
+            for v in range(r):
+                win = xv[:, :, u : u + oh, v : v + ow]  # (1, C, oh, ow)
+                acc = acc + jnp.einsum(
+                    "bchw,kc->bkhw", win, wv[:, :, u, v],
+                    preferred_element_type=xv.dtype,
+                )
+        o_ref[...] = acc
+
+    return pl.pallas_call(
+        kern,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, c, h, wd), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((k, c, r, r), lambda i: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, k, oh, ow), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, k, oh, ow), x.dtype),
+        interpret=True,
+    )(x, w)

@@ -1,0 +1,269 @@
+"""Layer-1 Pallas kernels for the Regular-FFT and Gauss-FFT stages.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's FFTW
+codelets are butterfly programs tuned for AVX512 registers.  A butterfly
+network is a poor fit for the MXU, so the kernels here express the small
+(t <= 32) tile DFTs as *matrix products with precomputed DFT matrices* —
+for these sizes the t x t matmul runs on the systolic array at full
+utilization, which is the TPU-shaped realization of the same
+transform-stage schedule.  The conjugate-symmetric half-spectrum storage
+(t x th, th = floor(t/2)+1 along the leading axis) matches the paper's
+t * ceil((t+1)/2) accounting.
+
+Complex tensors are carried as separate real/imaginary planes (SoA), the
+same layout the native rust engine uses.
+
+Kernels:
+* :func:`rfft2`            — implicitly zero-padded forward transform
+* :func:`irfft2_valid`     — pruned inverse: only the last m x m outputs
+* :func:`tuple_cgemm`      — element-wise stage, complex GEMM (4 real mults)
+* :func:`tuple_gauss_gemm` — element-wise stage, Gauss 3-real-mult variant
+* :func:`gauss_augment`    — build the (Ur+Ui) / (Vi-Vr) / (Vr+Vi) planes
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+TILE_BLOCK = 16
+
+
+def _pad_to(n: int, b: int) -> int:
+    return -(-n // b) * b
+
+
+def half_len(t: int) -> int:
+    """Conjugate-symmetric spectrum length floor(t/2)+1 == ceil((t+1)/2)."""
+    return t // 2 + 1
+
+
+def _dft_mats(t: int, rows: int, cols: int, dtype=np.float32):
+    """cos/sin matrices of the forward DFT: W[j,k] = e^{-2 pi i j k / t}."""
+    j = np.arange(rows)[:, None]
+    k = np.arange(cols)[None, :]
+    ang = -2.0 * np.pi * j * k / t
+    return np.cos(ang).astype(dtype), np.sin(ang).astype(dtype)
+
+
+def _idft_col_mats(t: int, m: int, r: int, dtype=np.float32):
+    """Inverse-DFT matrices over the *full* complex axis (columns).
+
+    Rows select only the last m outputs (positions r-1 .. t-1): the pruned
+    inverse of the paper (§A.4, "only a subset of m x m elements").
+    """
+    n = (np.arange(m) + r - 1)[:, None]
+    k = np.arange(t)[None, :]
+    ang = 2.0 * np.pi * n * k / t
+    return (np.cos(ang) / t).astype(dtype), (np.sin(ang) / t).astype(dtype)
+
+
+def _irfft_row_mats(t: int, m: int, r: int, dtype=np.float32):
+    """Half-spectrum-to-real inverse matrices (rows), pruned to last m.
+
+    y[n] = sum_{k<th} w_k * (Yr[k] cos(2 pi k n/t) - Yi[k] sin(2 pi k n/t))/t
+    with w_k = 2 except w_0 = 1 and, for even t, w_{t/2} = 1.
+    """
+    th = half_len(t)
+    w = np.full(th, 2.0)
+    w[0] = 1.0
+    if t % 2 == 0:
+        w[-1] = 1.0
+    n = (np.arange(m) + r - 1)[:, None]
+    k = np.arange(th)[None, :]
+    ang = 2.0 * np.pi * n * k / t
+    cw = (w * np.cos(ang) / t).astype(dtype)
+    sw = (w * np.sin(ang) / t).astype(dtype)
+    return cw, sw
+
+
+@functools.partial(jax.jit, static_argnames=("t", "pad"))
+def rfft2(x: jax.Array, *, t: int, pad: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Implicitly zero-padded 2D forward DFT of real tiles.
+
+    x: (NT, s, s) with s == t (input tiles) or s == r < t (kernels, then
+    ``pad=True`` applies implicit zero-padding through sliced DFT
+    matrices — no zeros are materialized, matching genfft's padded
+    codelets).  Returns (Zr, Zi), each (NT, th, t).
+    """
+    s = x.shape[1]
+    assert pad or s == t
+    th = half_len(t)
+    ch, sh = _dft_mats(t, th, s)  # half-spectrum rows, s input cols
+    ct, st = _dft_mats(t, t, s)  # full complex axis
+
+    def kern(x_ref, ch_ref, sh_ref, ct_ref, st_ref, zr_ref, zi_ref):
+        v = x_ref[...]
+        chc, shc = ch_ref[...], sh_ref[...]
+        ctc, stc = ct_ref[...], st_ref[...]
+        # rows: Y = D_h @ x  (complex, x real)
+        yr = jnp.einsum("ij,njk->nik", chc, v)
+        yi = jnp.einsum("ij,njk->nik", shc, v)
+        # cols: Z = Y @ D_t^T
+        zr_ref[...] = jnp.einsum("nik,lk->nil", yr, ctc) - jnp.einsum(
+            "nik,lk->nil", yi, stc
+        )
+        zi_ref[...] = jnp.einsum("nik,lk->nil", yr, stc) + jnp.einsum(
+            "nik,lk->nil", yi, ctc
+        )
+
+    nt = x.shape[0]
+    ntp = _pad_to(max(nt, 1), TILE_BLOCK)
+    if ntp != nt:
+        x = jnp.pad(x, ((0, ntp - nt), (0, 0), (0, 0)))
+    whole = lambda a: pl.BlockSpec(a.shape, lambda i: (0, 0))
+    mats = tuple(jnp.asarray(M, x.dtype) for M in (ch, sh, ct, st))
+    zr, zi = pl.pallas_call(
+        kern,
+        grid=(ntp // TILE_BLOCK,),
+        in_specs=[pl.BlockSpec((TILE_BLOCK, s, s), lambda i: (i, 0, 0))]
+        + [whole(M) for M in mats],
+        out_specs=[
+            pl.BlockSpec((TILE_BLOCK, th, t), lambda i: (i, 0, 0)),
+            pl.BlockSpec((TILE_BLOCK, th, t), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((ntp, th, t), x.dtype),
+            jax.ShapeDtypeStruct((ntp, th, t), x.dtype),
+        ],
+        interpret=True,
+    )(x, *mats)
+    return zr[:nt], zi[:nt]
+
+
+@functools.partial(jax.jit, static_argnames=("t", "m", "r"))
+def irfft2_valid(zr: jax.Array, zi: jax.Array, *, t: int, m: int, r: int) -> jax.Array:
+    """Pruned inverse transform: (NT, th, t) complex -> (NT, m, m) real.
+
+    Inverts the column axis first (full complex iDFT, keeping only the
+    last m columns), then the half-spectrum row axis with real-output
+    weights — only the valid m x m window is ever computed.
+    """
+    th = half_len(t)
+    bc, bs = _idft_col_mats(t, m, r)  # (m, t)
+    cw, sw = _irfft_row_mats(t, m, r)  # (m, th)
+
+    def kern(zr_ref, zi_ref, bc_ref, bs_ref, cw_ref, sw_ref, o_ref):
+        vr, vi = zr_ref[...], zi_ref[...]
+        bcc, bsc = bc_ref[...], bs_ref[...]
+        cwc, swc = cw_ref[...], sw_ref[...]
+        # columns: Y = Z @ Bc^T (complex) — (n, th, m)
+        yr = jnp.einsum("nik,jk->nij", vr, bcc) - jnp.einsum("nik,jk->nij", vi, bsc)
+        yi = jnp.einsum("nik,jk->nij", vr, bsc) + jnp.einsum("nik,jk->nij", vi, bcc)
+        # rows: real output from half spectrum — (n, m, m)
+        o_ref[...] = jnp.einsum("li,nij->nlj", cwc, yr) - jnp.einsum(
+            "li,nij->nlj", swc, yi
+        )
+
+    nt = zr.shape[0]
+    ntp = _pad_to(max(nt, 1), TILE_BLOCK)
+    if ntp != nt:
+        zr = jnp.pad(zr, ((0, ntp - nt), (0, 0), (0, 0)))
+        zi = jnp.pad(zi, ((0, ntp - nt), (0, 0), (0, 0)))
+    whole = lambda a: pl.BlockSpec(a.shape, lambda i: (0, 0))
+    mats = tuple(jnp.asarray(M, zr.dtype) for M in (bc, bs, cw, sw))
+    out = pl.pallas_call(
+        kern,
+        grid=(ntp // TILE_BLOCK,),
+        in_specs=[
+            pl.BlockSpec((TILE_BLOCK, th, t), lambda i: (i, 0, 0)),
+            pl.BlockSpec((TILE_BLOCK, th, t), lambda i: (i, 0, 0)),
+        ]
+        + [whole(M) for M in mats],
+        out_specs=pl.BlockSpec((TILE_BLOCK, m, m), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((ntp, m, m), zr.dtype),
+        interpret=True,
+    )(zr, zi, *mats)
+    return out[:nt]
+
+
+# ---------------------------------------------------------------------------
+# Element-wise stage
+# ---------------------------------------------------------------------------
+
+def _gemm_block_n(n: int) -> int:
+    for cand in (128, 64, 32, 16, 8, 4, 2, 1):
+        if n % cand == 0:
+            return cand
+    return 1
+
+
+@jax.jit
+def tuple_cgemm(ur, ui, vr, vi):
+    """Complex batched GEMM (Regular-FFT element-wise stage).
+
+    (P, N, C) x (P, C, K) -> (P, N, K), 4 real multiplies per complex
+    multiply-add pair (§2.3): Zr = UrVr - UiVi, Zi = UrVi + UiVr.
+    """
+    p, n, _ = ur.shape
+    bn = _gemm_block_n(n)
+
+    def kern(ur_ref, ui_ref, vr_ref, vi_ref, zr_ref, zi_ref):
+        a, b = ur_ref[...], ui_ref[...]
+        c, d = vr_ref[...], vi_ref[...]
+        mm = lambda x, y: jnp.einsum("pnc,pck->pnk", x, y)
+        zr_ref[...] = mm(a, c) - mm(b, d)
+        zi_ref[...] = mm(a, d) + mm(b, c)
+
+    c_dim, k_dim = vr.shape[1], vr.shape[2]
+    uspec = pl.BlockSpec((1, bn, c_dim), lambda i, j: (i, j, 0))
+    vspec = pl.BlockSpec((1, c_dim, k_dim), lambda i, j: (i, 0, 0))
+    ospec = pl.BlockSpec((1, bn, k_dim), lambda i, j: (i, j, 0))
+    oshape = jax.ShapeDtypeStruct((p, n, k_dim), ur.dtype)
+    return pl.pallas_call(
+        kern,
+        grid=(p, n // bn),
+        in_specs=[uspec, uspec, vspec, vspec],
+        out_specs=[ospec, ospec],
+        out_shape=[oshape, oshape],
+        interpret=True,
+    )(ur, ui, vr, vi)
+
+
+@jax.jit
+def gauss_augment_u(ur, ui):
+    """Image-side Gauss plane: Us = Ur + Ui (computed during transform)."""
+    return ur + ui
+
+
+@jax.jit
+def gauss_augment_v(vr, vi):
+    """Kernel-side Gauss planes: (Vd, Vs) = (Vi - Vr, Vr + Vi)."""
+    return vi - vr, vr + vi
+
+
+@jax.jit
+def tuple_gauss_gemm(ur, ui, us, vr, vd, vs):
+    """Gauss-FFT element-wise stage: 3 real GEMMs per complex GEMM (§2.3).
+
+    tmp1 = (Ur+Ui) Vr;  tmp2 = Ur (Vi-Vr);  tmp3 = Ui (Vr+Vi)
+    Zr = tmp1 - tmp3;   Zi = tmp1 + tmp2
+    """
+    p, n, _ = ur.shape
+    bn = _gemm_block_n(n)
+
+    def kern(ur_ref, ui_ref, us_ref, vr_ref, vd_ref, vs_ref, zr_ref, zi_ref):
+        mm = lambda x, y: jnp.einsum("pnc,pck->pnk", x, y)
+        t1 = mm(us_ref[...], vr_ref[...])
+        t2 = mm(ur_ref[...], vd_ref[...])
+        t3 = mm(ui_ref[...], vs_ref[...])
+        zr_ref[...] = t1 - t3
+        zi_ref[...] = t1 + t2
+
+    c_dim, k_dim = vr.shape[1], vr.shape[2]
+    uspec = pl.BlockSpec((1, bn, c_dim), lambda i, j: (i, j, 0))
+    vspec = pl.BlockSpec((1, c_dim, k_dim), lambda i, j: (i, 0, 0))
+    ospec = pl.BlockSpec((1, bn, k_dim), lambda i, j: (i, j, 0))
+    oshape = jax.ShapeDtypeStruct((p, n, k_dim), ur.dtype)
+    return pl.pallas_call(
+        kern,
+        grid=(p, n // bn),
+        in_specs=[uspec, uspec, uspec, vspec, vspec, vspec],
+        out_specs=[ospec, ospec],
+        out_shape=[oshape, oshape],
+        interpret=True,
+    )(ur, ui, us, vr, vd, vs)

@@ -1,0 +1,124 @@
+"""Pure-jnp correctness oracles for the convolution layer.
+
+Everything in this file is straight-line ``jnp`` — no Pallas — and serves
+as the ground truth the Pallas kernels (and, transitively, the rust native
+engine and the AOT artifacts) are validated against.
+
+Layer semantics (matches the paper and every ConvNet framework):
+"valid" cross-correlation, NCHW activations, KCRS weights:
+
+    out[b, k, i, j] = sum_{c, u, v} x[b, c, i+u, j+v] * w[k, c, u, v]
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import wincnn
+
+__all__ = [
+    "direct_conv",
+    "winograd_conv_ref",
+    "fft_conv_ref",
+    "extract_tiles",
+    "assemble_tiles",
+    "num_tiles",
+]
+
+
+def direct_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Valid cross-correlation via lax.conv — the canonical oracle.
+
+    x: (B, C, H, W); w: (K, C, r, r) -> (B, K, H-r+1, W-r+1)
+    """
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def num_tiles(size: int, m: int, r: int) -> int:
+    """Tiles along one dimension: ceil((size - r + 1) / m)."""
+    return -(-(size - r + 1) // m)
+
+
+def extract_tiles(x: jax.Array, m: int, r: int) -> jax.Array:
+    """Overlap-add tiling: (B, C, H, W) -> (B, C, nh, nw, t, t).
+
+    Tiles of size t = m + r - 1 with stride m (overlap r - 1), padding the
+    image with zeros on the bottom/right when (H - r + 1) % m != 0 —
+    exactly the paper's OLA decomposition (§2.2).
+    """
+    B, C, H, W = x.shape
+    t = m + r - 1
+    nh, nw = num_tiles(H, m, r), num_tiles(W, m, r)
+    Hp, Wp = (nh - 1) * m + t, (nw - 1) * m + t
+    x = jnp.pad(x, ((0, 0), (0, 0), (0, Hp - H), (0, Wp - W)))
+    # Gather the t*t strided slices; each is (B, C, nh, nw).
+    rows = []
+    for u in range(t):
+        cols = []
+        for v in range(t):
+            sl = jax.lax.slice(
+                x,
+                (0, 0, u, v),
+                (B, C, u + (nh - 1) * m + 1, v + (nw - 1) * m + 1),
+                (1, 1, m, m),
+            )
+            cols.append(sl)
+        rows.append(jnp.stack(cols, axis=-1))  # (B, C, nh, nw, t)
+    return jnp.stack(rows, axis=-2)  # (B, C, nh, nw, t, t)
+
+
+def assemble_tiles(tiles: jax.Array, out_h: int, out_w: int) -> jax.Array:
+    """Inverse of the OLA output split: (B, K, nh, nw, m, m) -> (B, K, H', W').
+
+    Output tiles do not overlap; we reshape and crop the zero-pad remainder.
+    """
+    B, K, nh, nw, m, _ = tiles.shape
+    out = tiles.transpose(0, 1, 2, 4, 3, 5).reshape(B, K, nh * m, nw * m)
+    return out[:, :, :out_h, :out_w]
+
+
+def winograd_conv_ref(x: jax.Array, w: jax.Array, m: int) -> jax.Array:
+    """Winograd F(m^2, r^2) conv layer in pure jnp (oracle for the kernels)."""
+    B, C, H, W = x.shape
+    K, _, r, _ = w.shape
+    AT, G, BT = wincnn.winograd_matrices(m, r, dtype=np.float64)
+    AT, G, BT = (jnp.asarray(M, dtype=x.dtype) for M in (AT, G, BT))
+
+    tiles = extract_tiles(x, m, r)  # (B,C,nh,nw,t,t)
+    # Input transform: B^T d B
+    U = jnp.einsum("ij,bcnwjk,lk->bcnwil", BT, tiles, BT)
+    # Kernel transform: G g G^T
+    V = jnp.einsum("ij,kcjl,ml->kcim", G, w, G)
+    # Element-wise stage: contract over C at each of the t^2 positions.
+    Z = jnp.einsum("bcnwil,kcil->bknwil", U, V)
+    # Output transform: A^T z A
+    Y = jnp.einsum("ij,bknwjl,ml->bknwim", AT, Z, AT)
+    return assemble_tiles(Y, H - r + 1, W - r + 1)
+
+
+def fft_conv_ref(x: jax.Array, w: jax.Array, m: int) -> jax.Array:
+    """Regular-FFT conv layer in pure jnp via rfft2 (oracle for the kernels).
+
+    Valid correlation == circular convolution with the spatially-flipped,
+    zero-padded kernel; the last m x m elements of each t x t circular
+    output tile are the valid results (§2.1).
+    """
+    B, C, H, W = x.shape
+    K, _, r, _ = w.shape
+    t = m + r - 1
+
+    tiles = extract_tiles(x, m, r)  # (B,C,nh,nw,t,t)
+    wf = jnp.flip(w, axis=(-1, -2))
+    U = jnp.fft.rfft2(tiles, s=(t, t))  # (B,C,nh,nw,t,th)
+    V = jnp.fft.rfft2(wf, s=(t, t))  # (K,C,t,th)
+    Z = jnp.einsum("bcnwil,kcil->bknwil", U, V)
+    Y = jnp.fft.irfft2(Z, s=(t, t))[..., r - 1 :, r - 1 :]  # last m x m
+    return assemble_tiles(Y, H - r + 1, W - r + 1)

@@ -1,0 +1,141 @@
+"""Layer-1 Pallas kernels for the Winograd convolution stages.
+
+Four kernels, mirroring the paper's four computation phases (§3):
+
+* :func:`input_transform`   — ``B^T d B``   per tile
+* :func:`kernel_transform`  — ``G g G^T``   per kernel
+* :func:`tuple_gemm`        — the element-wise stage: for each of the t^2
+  transform positions, a ``(N x C) @ (C x K)`` real GEMM (Eqn. 12)
+* :func:`output_transform`  — ``A^T z A``   per pre-output tile
+
+All kernels are matmul-shaped on purpose: on a real TPU each lowers onto
+the MXU systolic array; ``BlockSpec`` expresses the HBM->VMEM tile
+schedule that the paper expressed with cache blocking.  Kernels are
+always instantiated with ``interpret=True`` here because the CPU PJRT
+plugin cannot execute Mosaic custom-calls (see DESIGN.md).
+
+Data contracts (tile-major, channel layout flattened by the L2 model):
+    input tiles   (NT, t, t)   float32      NT = B*C*nh*nw
+    kernels       (NK, r, r)   float32      NK = K*C
+    tuple operands U (P, N, C), V (P, C, K) with P = t*t
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .. import wincnn
+
+# Grid block over the tile axis: how many tiles one kernel instance
+# transforms.  16 matches the paper's cache-line interleave factor.
+TILE_BLOCK = 16
+
+
+def _pad_to(n: int, b: int) -> int:
+    return -(-n // b) * b
+
+
+def _sandwich_kernel(x_ref, m_ref, o_ref):
+    """o = M x M^T for a block of tiles (the 2D transform as two matmuls).
+
+    The transform matrix is a kernel *input* (Pallas disallows captured
+    constants); its BlockSpec pins the whole matrix VMEM-resident.
+    """
+    x = x_ref[...]
+    mat = m_ref[...]
+    o_ref[...] = jnp.einsum(
+        "ij,njk,lk->nil", mat, x, mat, preferred_element_type=x.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("m", "r"))
+def input_transform(tiles: jax.Array, *, m: int, r: int) -> jax.Array:
+    """``B^T d B`` for every tile: (NT, t, t) -> (NT, t, t)."""
+    t = m + r - 1
+    _, _, BT = wincnn.winograd_matrices(m, r)
+    return _tilewise(tiles, jnp.asarray(BT, tiles.dtype), t, t)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "r"))
+def kernel_transform(w: jax.Array, *, m: int, r: int) -> jax.Array:
+    """``G g G^T`` for every kernel: (NK, r, r) -> (NK, t, t)."""
+    t = m + r - 1
+    _, G, _ = wincnn.winograd_matrices(m, r)
+    return _tilewise(w, jnp.asarray(G, w.dtype), r, t)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "r"))
+def output_transform(z: jax.Array, *, m: int, r: int) -> jax.Array:
+    """``A^T z A`` for every pre-output tile: (NT, t, t) -> (NT, m, m)."""
+    t = m + r - 1
+    AT, _, _ = wincnn.winograd_matrices(m, r)
+    return _tilewise(z, jnp.asarray(AT, z.dtype), t, m)
+
+
+def _tilewise(x: jax.Array, mat: jax.Array, in_side: int, out_side: int) -> jax.Array:
+    """Apply o = M x M^T over (NT, in, in) -> (NT, out, out)."""
+    nt = x.shape[0]
+    ntp = _pad_to(max(nt, 1), TILE_BLOCK)
+    if ntp != nt:
+        x = jnp.pad(x, ((0, ntp - nt), (0, 0), (0, 0)))
+    out = pl.pallas_call(
+        _sandwich_kernel,
+        grid=(ntp // TILE_BLOCK,),
+        in_specs=[
+            pl.BlockSpec((TILE_BLOCK, in_side, in_side), lambda i: (i, 0, 0)),
+            pl.BlockSpec((out_side, in_side), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_BLOCK, out_side, out_side), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((ntp, out_side, out_side), x.dtype),
+        interpret=True,
+    )(x, mat)
+    return out[:nt]
+
+
+# ---------------------------------------------------------------------------
+# Element-wise stage (real GEMM per transform position)
+# ---------------------------------------------------------------------------
+
+def _gemm_block_n(n: int) -> int:
+    """Rows of U processed per kernel instance (VMEM tile height)."""
+    for cand in (128, 64, 32, 16, 8, 4, 2, 1):
+        if n % cand == 0:
+            return cand
+    return 1
+
+
+@jax.jit
+def tuple_gemm(u: jax.Array, v: jax.Array) -> jax.Array:
+    """Batched real GEMM: (P, N, C) @ (P, C, K) -> (P, N, K).
+
+    One grid step per (position, N-block); V's (C, K) block stays resident
+    (the paper keeps the kernel sub-matrix cache-resident, Eqn. 13 — here
+    that becomes a VMEM-resident BlockSpec).
+    """
+    p, n, _ = u.shape
+    bn = _gemm_block_n(n)
+
+    def kern(u_ref, v_ref, o_ref):
+        o_ref[...] = jnp.einsum(
+            "pnc,pck->pnk",
+            u_ref[...],
+            v_ref[...],
+            preferred_element_type=u_ref.dtype,
+        )
+
+    return pl.pallas_call(
+        kern,
+        grid=(p, n // bn),
+        in_specs=[
+            pl.BlockSpec((1, bn, u.shape[2]), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, v.shape[1], v.shape[2]), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bn, v.shape[2]), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, n, v.shape[2]), u.dtype),
+        interpret=True,
+    )(u, v)

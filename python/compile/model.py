@@ -1,0 +1,210 @@
+"""Layer-2 JAX convolution-layer graphs, composed from the L1 Pallas kernels.
+
+Each ``*_conv_layer`` function is the paper's four-phase pipeline (§3):
+
+    input transform -> kernel transform -> element-wise GEMMs -> inverse
+
+built entirely from the Pallas kernels in :mod:`compile.kernels`, plus the
+reshapes that realize the paper's data layout (tiles flattened to the
+``(P, BN, C)`` / ``(P, C, K)`` tall-skinny GEMM operands of Eqn. 12).
+
+These functions are what :mod:`compile.aot` lowers to HLO text; the rust
+runtime executes the artifacts without any Python.  Also defined here:
+the distinct conv layers of VGG-16 and AlexNet (Table/Fig. workloads).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import direct as kdirect
+from .kernels import fft as kfft
+from .kernels import ref
+from .kernels import winograd as kwino
+
+# ---------------------------------------------------------------------------
+# Layer definitions (the paper's benchmark workloads, §4)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvLayer:
+    """One distinct convolutional layer of a benchmark network."""
+
+    name: str
+    batch: int
+    c_in: int
+    c_out: int
+    image: int  # square spatial input size (after framework padding)
+    kernel: int  # square kernel size r
+
+    @property
+    def out_size(self) -> int:
+        return self.image - self.kernel + 1
+
+
+def vgg_layers(batch: int = 64) -> List[ConvLayer]:
+    """The distinct VGG-16 conv layers, paper naming (vgg1.2 ... vgg5.1).
+
+    Spatial sizes include VGG's pad=1 (so a 224 input convolves at 226).
+    vgg1.1 (C=3) is excluded by the paper's figures; vgg5.2 == vgg5.1.
+    """
+    mk = lambda nm, c, k, s: ConvLayer(nm, batch, c, k, s + 2, 3)
+    return [
+        mk("vgg1.2", 64, 64, 224),
+        mk("vgg2.1", 64, 128, 112),
+        mk("vgg2.2", 128, 128, 112),
+        mk("vgg3.1", 128, 256, 56),
+        mk("vgg3.2", 256, 256, 56),
+        mk("vgg4.1", 256, 512, 28),
+        mk("vgg4.2", 512, 512, 28),
+        mk("vgg5.1", 512, 512, 14),
+    ]
+
+
+def alexnet_layers(batch: int = 128) -> List[ConvLayer]:
+    """The distinct AlexNet conv layers 2-5 (layer 1 is strided, excluded)."""
+    return [
+        ConvLayer("alexnet2", batch, 64, 192, 27 + 4, 5),
+        ConvLayer("alexnet3", batch, 192, 384, 13 + 2, 3),
+        ConvLayer("alexnet4", batch, 384, 256, 13 + 2, 3),
+        ConvLayer("alexnet5", batch, 256, 256, 13 + 2, 3),
+    ]
+
+
+def all_layers(batch_vgg: int = 64, batch_alex: int = 128) -> List[ConvLayer]:
+    return vgg_layers(batch_vgg) + alexnet_layers(batch_alex)
+
+
+# ---------------------------------------------------------------------------
+# Shared tiling plumbing
+# ---------------------------------------------------------------------------
+
+
+def _to_tile_major(tiles: jax.Array) -> Tuple[jax.Array, Tuple[int, ...]]:
+    """(B, C, nh, nw, t, t) -> ((B*C*nh*nw, t, t), meta)."""
+    b, c, nh, nw, t, _ = tiles.shape
+    return tiles.reshape(b * c * nh * nw, t, t), (b, c, nh, nw)
+
+
+def _gemm_operand_u(ut: jax.Array, meta, p: int) -> jax.Array:
+    """Transformed tiles (B*C*nh*nw, s0, s1) -> U (P, B*nh*nw, C)."""
+    b, c, nh, nw = meta
+    s0, s1 = ut.shape[1], ut.shape[2]
+    u = ut.reshape(b, c, nh * nw, s0 * s1)
+    u = u.transpose(3, 0, 2, 1).reshape(p, b * nh * nw, c)
+    return u
+
+
+def _gemm_operand_v(vt: jax.Array, k: int, c: int, p: int) -> jax.Array:
+    """Transformed kernels (K*C, s0, s1) -> V (P, C, K)."""
+    v = vt.reshape(k, c, p)
+    return v.transpose(2, 1, 0)
+
+
+def _from_gemm_result(z: jax.Array, meta, k: int, s0: int, s1: int) -> jax.Array:
+    """Z (P, B*nh*nw, K) -> pre-output tiles (B*K*nh*nw, s0, s1)."""
+    b, _, nh, nw = meta
+    z = z.reshape(s0, s1, b, nh * nw, k)
+    z = z.transpose(2, 4, 3, 0, 1)  # (b, k, nh*nw, s0, s1)
+    return z.reshape(b * k * nh * nw, s0, s1)
+
+
+def _tiles_to_output(y: jax.Array, meta, k: int, m: int, oh: int, ow: int):
+    b, _, nh, nw = meta
+    return ref.assemble_tiles(y.reshape(b, k, nh, nw, m, m), oh, ow)
+
+
+# ---------------------------------------------------------------------------
+# The four conv-layer graphs
+# ---------------------------------------------------------------------------
+
+
+def direct_conv_layer(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Direct convolution (baseline) through the Pallas direct kernel."""
+    return kdirect.direct_conv(x, w)
+
+
+def winograd_conv_layer(x: jax.Array, w: jax.Array, m: int) -> jax.Array:
+    """Winograd F(m^2, r^2) layer over Pallas kernels."""
+    b, c, h, wd = x.shape
+    k, _, r, _ = w.shape
+    t = m + r - 1
+    p = t * t
+
+    tiles, meta = _to_tile_major(ref.extract_tiles(x, m, r))
+    ut = kwino.input_transform(tiles, m=m, r=r)  # (NT, t, t)
+    vt = kwino.kernel_transform(w.reshape(k * c, r, r), m=m, r=r)
+    u = _gemm_operand_u(ut, meta, p)
+    v = _gemm_operand_v(vt, k, c, p)
+    z = kwino.tuple_gemm(u, v)  # (P, BN, K)
+    zt = _from_gemm_result(z, meta, k, t, t)
+    y = kwino.output_transform(zt, m=m, r=r)  # (NT', m, m)
+    return _tiles_to_output(y, meta, k, m, h - r + 1, wd - r + 1)
+
+
+def _fft_front(x, w, m):
+    """Shared forward path of both FFT variants."""
+    b, c, h, wd = x.shape
+    k, _, r, _ = w.shape
+    t = m + r - 1
+    th = kfft.half_len(t)
+    p = th * t
+
+    tiles, meta = _to_tile_major(ref.extract_tiles(x, m, r))
+    ur_t, ui_t = kfft.rfft2(tiles, t=t)  # (NT, th, t) x2
+    wf = jnp.flip(w, axis=(-1, -2)).reshape(k * c, r, r)
+    vr_t, vi_t = kfft.rfft2(wf, t=t, pad=True)
+
+    u_r = _gemm_operand_u(ur_t, meta, p)
+    u_i = _gemm_operand_u(ui_t, meta, p)
+    v_r = _gemm_operand_v(vr_t.reshape(k * c, p), k, c, p)
+    v_i = _gemm_operand_v(vi_t.reshape(k * c, p), k, c, p)
+    return meta, (b, c, h, wd, k, r, t, th, p), (u_r, u_i, v_r, v_i)
+
+
+def _fft_back(zr, zi, meta, dims):
+    b, c, h, wd, k, r, t, th, p = dims
+    m = t - r + 1
+    zr_t = _from_gemm_result(zr, meta, k, th, t)
+    zi_t = _from_gemm_result(zi, meta, k, th, t)
+    y = kfft.irfft2_valid(zr_t, zi_t, t=t, m=m, r=r)
+    return _tiles_to_output(y, meta, k, m, h - r + 1, wd - r + 1)
+
+
+def regular_fft_conv_layer(x: jax.Array, w: jax.Array, m: int) -> jax.Array:
+    """Regular-FFT 𝔉(m^2, r^2) layer over Pallas kernels."""
+    meta, dims, (u_r, u_i, v_r, v_i) = _fft_front(x, w, m)
+    zr, zi = kfft.tuple_cgemm(u_r, u_i, v_r, v_i)
+    return _fft_back(zr, zi, meta, dims)
+
+
+def gauss_fft_conv_layer(x: jax.Array, w: jax.Array, m: int) -> jax.Array:
+    """Gauss-FFT 𝔊(m^2, r^2) layer: 3 real GEMMs in the element-wise stage."""
+    meta, dims, (u_r, u_i, v_r, v_i) = _fft_front(x, w, m)
+    u_s = kfft.gauss_augment_u(u_r, u_i)
+    v_d, v_s = kfft.gauss_augment_v(v_r, v_i)
+    zr, zi = kfft.tuple_gauss_gemm(u_r, u_i, u_s, v_r, v_d, v_s)
+    return _fft_back(zr, zi, meta, dims)
+
+
+METHODS: Dict[str, Callable] = {
+    "direct": lambda x, w, m: direct_conv_layer(x, w),
+    "winograd": winograd_conv_layer,
+    "regular_fft": regular_fft_conv_layer,
+    "gauss_fft": gauss_fft_conv_layer,
+}
+
+
+def convnet_forward(x: jax.Array, weights: List[jax.Array], method: str, m: int):
+    """A small ConvNet: chained conv layers + ReLU (the e2e PJRT artifact)."""
+    fn = METHODS[method]
+    for i, w in enumerate(weights):
+        x = fn(x, w, m)
+        if i + 1 < len(weights):
+            x = jax.nn.relu(x)
+    return x

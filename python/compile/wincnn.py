@@ -1,0 +1,255 @@
+"""Cook-Toom (Winograd) transform-matrix generator over exact rationals.
+
+This is the in-repo substitute for Lavin's ``wincnn`` (paper ref. [7]): it
+produces the A^T, B^T (referred to as ``AT``/``BT``) and G matrices of the
+minimal filtering algorithm F(m, r)
+
+    y = A^T [ (G g) . (B^T d) ]
+
+for arbitrary output size ``m`` and filter size ``r`` using exact
+``fractions.Fraction`` arithmetic, so the float matrices handed to the
+Pallas kernels are correctly rounded.
+
+Construction (Vincent et al. 2017; Blahut, "Fast Algorithms for Signal
+Processing"): choose n = m + r - 2 distinct interpolation points
+p_0..p_{n-1} plus the "point at infinity".  With the Vandermonde-ish
+matrices below, valid *correlation* (the ConvNet convolution, no filter
+flip) of a length-(m+r-1) signal d with a length-r filter g is computed
+exactly.  The point schedule matches wincnn's: 0, 1, -1, 2, -2, 1/2, -1/2,
+3, -3, 1/3, ... which empirically minimizes the magnitude of matrix
+entries and therefore the floating-point error.
+"""
+
+from __future__ import annotations
+
+from fractions import Fraction
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "interpolation_points",
+    "cook_toom_matrices",
+    "winograd_matrices",
+    "transform_flops",
+]
+
+
+def interpolation_points(n: int) -> List[Fraction]:
+    """First ``n`` points of the wincnn schedule 0, 1, -1, 2, -2, 1/2, ...
+
+    Points must be distinct; the schedule interleaves integers and their
+    reciprocals with alternating signs, which keeps the Vandermonde system
+    well-conditioned for the small n (<= ~10) used by Winograd convolution.
+    """
+    pts: List[Fraction] = [Fraction(0)]
+    k = 1
+    while len(pts) < n:
+        group = [Fraction(k), Fraction(-k)]
+        if k > 1:
+            group += [Fraction(1, k), Fraction(-1, k)]
+        for p in group:
+            if len(pts) < n and p not in pts:
+                pts.append(p)
+        k += 1
+    return pts[:n]
+
+
+def _poly_mul(a: Sequence[Fraction], b: Sequence[Fraction]) -> List[Fraction]:
+    out = [Fraction(0)] * (len(a) + len(b) - 1)
+    for i, ai in enumerate(a):
+        for j, bj in enumerate(b):
+            out[i + j] += ai * bj
+    return out
+
+
+def _lagrange_basis(points: Sequence[Fraction]) -> Tuple[List[List[Fraction]], List[Fraction]]:
+    """Return (numerator polys N_i, denominators d_i) of the Lagrange basis.
+
+    L_i(x) = N_i(x) / d_i with N_i(x) = prod_{j != i} (x - p_j) and
+    d_i = prod_{j != i} (p_i - p_j).
+    """
+    n = len(points)
+    numers: List[List[Fraction]] = []
+    denoms: List[Fraction] = []
+    for i in range(n):
+        poly = [Fraction(1)]
+        denom = Fraction(1)
+        for j in range(n):
+            if j == i:
+                continue
+            poly = _poly_mul(poly, [-points[j], Fraction(1)])
+            denom *= points[i] - points[j]
+        numers.append(poly)
+        denoms.append(denom)
+    return numers, denoms
+
+
+def cook_toom_matrices(m: int, r: int):
+    """Exact A^T (m x t), G (t x r), B^T (t x t) for F(m, r), t = m + r - 1.
+
+    Returned as nested lists of ``Fraction``.  Satisfies, for all d, g:
+
+        A^T [ (G g) . (B^T d) ] == valid_correlation(d, g)
+    """
+    if m < 1 or r < 1:
+        raise ValueError("m and r must be >= 1")
+    t = m + r - 1
+    n = t - 1  # finite interpolation points; last row handles x -> inf
+    pts = interpolation_points(n)
+
+    # G: evaluate the filter polynomial g(x) = sum g_k x^k at each point.
+    #    Row i (finite point p_i): [1, p_i, p_i^2, ..., p_i^{r-1}]
+    #    Last row (infinity):      [0, ..., 0, 1]  (leading coefficient)
+    G = [[pts[i] ** k for k in range(r)] for i in range(n)]
+    G.append([Fraction(0)] * (r - 1) + [Fraction(1)])
+
+    # B^T: evaluate the *data* polynomial, but composed with the Lagrange
+    # scaling so that the element-wise product corresponds to polynomial
+    # multiplication followed by interpolation.  Using the standard
+    # construction: B^T row i evaluates d(x) at p_i times the inverse
+    # denominator structure.  We fold all denominators into B^T so that G
+    # and A^T keep small entries (wincnn's convention folds them into B^T
+    # via the scaled Lagrange numerators).
+    #
+    # Let M(x) = prod_j (x - p_j) (degree n).  The full product
+    # s(x) = d(x) g(x) has degree t + r - 2 >= n; write
+    #   s(x) = q(x) M(x) + rem(x).
+    # Interpolation recovers rem from the n point-values; the
+    # leading-coefficient (infinity) term supplies q's contribution.
+    # The valid-correlation outputs are linear functionals of s's
+    # coefficients, assembled by A^T.
+    #
+    # Concretely (Blahut / Vincent et al.):
+    #   BT[i]  = coefficients of N_i(x) / d_i         (degree <= n)  -> but
+    # we instead use the transpose-free standard form used by wincnn:
+    #   AT[k][i] = p_i^k * (for finite i), AT[k][n] = [x^{m-1}] handling.
+    # To keep the code auditable we *derive* B^T numerically-exactly by
+    # solving the defining identity instead of hand-deriving each matrix:
+    # see _solve_bt below.
+    AT = [[pts[i] ** k for i in range(n)] + [Fraction(0)] for k in range(m)]
+    AT[m - 1][n] = Fraction(1)
+
+    BT = _solve_bt(m, r, pts, AT, G)
+    return AT, G, BT
+
+
+def _solve_bt(m: int, r: int, pts: Sequence[Fraction], AT, G) -> List[List[Fraction]]:
+    """Solve for B^T from the defining identity of F(m, r).
+
+    For F(m,r) with t = m+r-1, the identity
+        A^T diag(B^T d) G g == valid_correlation(d, g)
+    must hold for all d in Q^t, g in Q^r.  Fixing the canonical bases
+    d = e_a, g = e_b gives, for every output row k:
+        sum_i AT[k][i] * BT[i][a] * G[i][b] == [a == k + b]
+    Because the finite rows of A^T and G are Vandermonde evaluations at
+    distinct points, the system determines B^T uniquely; we solve the
+    t x t linear system per column a of B^T.
+
+    The unknowns for column a are x_i = BT[i][a], i = 0..t-1.  Equations
+    are indexed by (k, b) pairs; there are m*r >= t of them, consistent by
+    construction.  We pick t independent ones and verify the rest.
+    """
+    t = m + r - 1
+    rows: List[Tuple[List[Fraction], int]] = []  # (coeff per i, rhs index a == k+b)
+    for k in range(m):
+        for b in range(r):
+            coeff = [AT[k][i] * G[i][b] for i in range(t)]
+            rows.append((coeff, k + b))
+
+    # For each column a, solve sum_i coeff[i] x_i = [rhs == a].
+    BT_cols: List[List[Fraction]] = []
+    for a in range(t):
+        mat = [list(c) for c, _ in rows]
+        rhs = [Fraction(1) if s == a else Fraction(0) for _, s in rows]
+        x = _solve_overdetermined(mat, rhs, t)
+        BT_cols.append(x)
+    # BT_cols[a][i] = BT[i][a]
+    return [[BT_cols[a][i] for a in range(t)] for i in range(t)]
+
+
+def _solve_overdetermined(mat: List[List[Fraction]], rhs: List[Fraction], n: int) -> List[Fraction]:
+    """Gaussian elimination over Q; mat is (rows x n), consistent by design."""
+    m_rows = len(mat)
+    aug = [mat[i] + [rhs[i]] for i in range(m_rows)]
+    row = 0
+    pivots = []
+    for col in range(n):
+        piv = next((r_ for r_ in range(row, m_rows) if aug[r_][col] != 0), None)
+        if piv is None:
+            raise ValueError("singular system; bad interpolation points")
+        aug[row], aug[piv] = aug[piv], aug[row]
+        pv = aug[row][col]
+        aug[row] = [v / pv for v in aug[row]]
+        for r_ in range(m_rows):
+            if r_ != row and aug[r_][col] != 0:
+                f = aug[r_][col]
+                aug[r_] = [a - f * b for a, b in zip(aug[r_], aug[row])]
+        pivots.append(col)
+        row += 1
+        if row == n:
+            break
+    # verify consistency of remaining rows
+    for r_ in range(m_rows):
+        lhs = aug[r_][:n]
+        if all(v == 0 for v in lhs) and aug[r_][n] != 0:
+            raise ValueError("inconsistent system; construction bug")
+    return [aug[i][n] for i in range(n)]
+
+
+def winograd_matrices(m: int, r: int, dtype=np.float64):
+    """Float A^T (m x t), G (t x r), B^T (t x t) for F(m, r)."""
+    AT, G, BT = cook_toom_matrices(m, r)
+    to_np = lambda M: np.array([[float(v) for v in row] for row in M], dtype=dtype)
+    return to_np(AT), to_np(G), to_np(BT)
+
+
+def _count_matrix_ops(M: List[List[Fraction]]) -> Tuple[int, int]:
+    """(muls, adds) for a matrix-vector product with constant matrix M.
+
+    Models a scalar transform codelet after trivial strength reduction:
+    entries equal to 0 cost nothing; +-1 entries cost no multiply; each
+    row costs (nonzeros - 1) additions.  This mirrors how wincnn-generated
+    codelets are counted in the paper (before CSE; our rust generator adds
+    a CSE pass, see rust/src/winograd/program.rs).
+    """
+    muls = 0
+    adds = 0
+    for row in M:
+        nz = [v for v in row if v != 0]
+        muls += sum(1 for v in nz if abs(v) != 1)
+        if nz:
+            adds += len(nz) - 1
+    return muls, adds
+
+
+def transform_flops(m: int, r: int) -> dict:
+    """FLOPs for 2D input/kernel/output transforms of one tile, F(m^2, r^2).
+
+    A 2D transform X -> M X M^T applies the 1D transform to t columns and
+    then to the result's rows.  Returns a dict with keys 'input', 'kernel',
+    'output'.
+    """
+    AT, G, BT = cook_toom_matrices(m, r)
+    t = m + r - 1
+
+    def two_d(M, n_in_cols, n_out_rows, in_len):
+        muls, adds = _count_matrix_ops(M)
+        # first pass: apply to each of n_in_cols columns (length in_len)
+        # second pass: apply to each of n_out_rows rows of the intermediate
+        return (muls + adds) * (n_in_cols + n_out_rows)
+
+    return {
+        "input": two_d(BT, t, t, t),
+        "kernel": two_d(G, r, t, r),
+        "output": two_d(AT, t, m, t),
+    }
+
+
+if __name__ == "__main__":  # pragma: no cover - manual inspection
+    AT, G, BT = winograd_matrices(2, 3)
+    print("A^T =\n", AT)
+    print("G =\n", G)
+    print("B^T =\n", BT)
+    for m in range(2, 7):
+        print(m, 3, transform_flops(m, 3))

@@ -1,0 +1,55 @@
+"""Numerical-accuracy reproduction of the paper's §4 footnote 2.
+
+Claims under test:
+* Winograd error grows (exponentially) with tile size; at 6x6 it is
+  comparable to direct convolution, at 8x8 it degrades by ~2-3 orders.
+* FFT error stays flat (paper: <= 2.88e-7 regardless of tile size).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def relative_error(method: str, m: int, r: int = 3, seed: int = 0) -> float:
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((1, 8, 18, 18)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((8, 8, r, r)), jnp.float32)
+    got = model.METHODS[method](x, w, m)
+    want = ref.direct_conv(
+        jnp.asarray(x, jnp.float64), jnp.asarray(w, jnp.float64)
+    )
+    num = float(jnp.abs(jnp.asarray(got, jnp.float64) - want).max())
+    den = float(jnp.abs(want).max())
+    return num / den
+
+
+class TestWinogradErrorGrowth:
+    def test_error_grows_with_tile_size(self):
+        errs = [relative_error("winograd", m) for m in (2, 4, 6, 8)]
+        # monotone-ish growth: each jump of 2 in m should not shrink error
+        assert errs[1] > errs[0] * 0.5
+        assert errs[3] > errs[0] * 10, errs  # 8x8 clearly worse than 2x2
+
+    def test_small_tiles_accurate(self):
+        # F(4^2, 3^2) (6x6 transform) is the vendor-standard accurate config
+        assert relative_error("winograd", 4) < 1e-4
+
+    def test_large_tiles_inaccurate(self):
+        # F(8^2, 3^2) (10x10 transform) shows the instability the paper
+        # cites as the reason vendors cap Winograd at 6x6 transforms.
+        assert relative_error("winograd", 8) > relative_error("winograd", 2)
+
+
+class TestFFTErrorFlat:
+    @pytest.mark.parametrize("method", ["regular_fft", "gauss_fft"])
+    def test_error_flat_across_tiles(self, method):
+        errs = [relative_error(method, m) for m in (2, 4, 8, 12)]
+        assert max(errs) < 5e-6, errs  # flat and tiny, per the paper
+        assert max(errs) / (min(errs) + 1e-12) < 50  # no exponential growth
+
+    def test_fft_beats_winograd_at_large_tiles(self):
+        assert relative_error("regular_fft", 8) < relative_error("winograd", 8)

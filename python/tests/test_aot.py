@@ -1,0 +1,66 @@
+"""AOT path tests: HLO text emission, manifest schema, artifact liveness.
+
+These tests re-lower one small graph (cheap) and sanity-check the emitted
+interchange format; full execution of the artifacts is covered on the rust
+side (rust/tests/pjrt_artifacts.rs).
+"""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+class TestHloEmission:
+    def test_small_layer_lowers_to_hlo_text(self):
+        entry = dict(name="t", method="winograd", m=2, x=(1, 2, 8, 8), w=(2, 2, 3, 3))
+        text = aot.lower_layer(entry)
+        assert "ENTRY" in text and "HloModule" in text
+        # interpret-mode pallas must not leave custom-calls the CPU
+        # plugin can't execute
+        assert "mosaic" not in text.lower()
+
+    def test_layer_out_shape(self):
+        entry = dict(name="t", method="direct", m=0, x=(1, 2, 8, 8), w=(2, 2, 3, 3))
+        assert aot.layer_out_shape(entry) == (1, 2, 6, 6)
+
+    def test_convnet_weight_shapes(self):
+        shapes = aot.convnet_weight_shapes()
+        ch = aot.CONVNET["channels"]
+        assert len(shapes) == len(ch) - 1
+        assert all(s[0] == ch[i + 1] and s[1] == ch[i] for i, s in enumerate(shapes))
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART_DIR, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+class TestManifest:
+    def manifest(self):
+        with open(os.path.join(ART_DIR, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_schema(self):
+        man = self.manifest()
+        assert man["artifacts"], "empty manifest"
+        for a in man["artifacts"]:
+            assert set(a) >= {"name", "kind", "method", "m", "inputs", "output", "file"}
+            assert a["kind"] in ("layer", "convnet")
+
+    def test_files_exist_and_parse(self):
+        man = self.manifest()
+        for a in man["artifacts"]:
+            p = os.path.join(ART_DIR, a["file"])
+            assert os.path.exists(p), a["file"]
+            head = open(p).read(200)
+            assert "HloModule" in head
+
+    def test_all_methods_covered(self):
+        methods = {a["method"] for a in self.manifest()["artifacts"]}
+        assert methods >= {"direct", "winograd", "regular_fft", "gauss_fft"}

@@ -1,0 +1,186 @@
+"""Pallas kernels vs the pure-jnp oracle: the core L1 correctness signal.
+
+Each stage kernel is validated in isolation against its einsum/fft
+counterpart, and the composed layer graphs are validated against
+``lax.conv`` over a hypothesis-driven shape sweep.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model, wincnn
+from compile.kernels import direct as kdirect
+from compile.kernels import fft as kfft
+from compile.kernels import ref
+from compile.kernels import winograd as kwino
+
+
+def rand(shape, seed=0, dtype=jnp.float32):
+    return jnp.asarray(np.random.default_rng(seed).standard_normal(shape), dtype)
+
+
+class TestTiling:
+    @pytest.mark.parametrize("h,w,m,r", [(12, 12, 4, 3), (13, 11, 4, 3),
+                                         (14, 14, 2, 5), (9, 16, 6, 3)])
+    def test_extract_assemble_roundtrip_on_identity_kernel(self, h, w, m, r):
+        # Convolving with the delta kernel must reproduce the input crop.
+        x = rand((2, 3, h, w), seed=1)
+        delta = np.zeros((3, 3, r, r), np.float32)
+        for c in range(3):
+            delta[c, c, 0, 0] = 1.0
+        y = ref.winograd_conv_ref(x, jnp.asarray(delta), m)
+        np.testing.assert_allclose(
+            np.asarray(y), np.asarray(x[:, :, : h - r + 1, : w - r + 1]), atol=1e-4
+        )
+
+    def test_num_tiles(self):
+        assert ref.num_tiles(12, 4, 3) == 3  # (12-2)/4 -> ceil(2.5) = 3
+        assert ref.num_tiles(226, 6, 3) == 38
+
+
+class TestWinogradKernels:
+    @pytest.mark.parametrize("m,r", [(2, 3), (4, 3), (6, 3), (3, 5)])
+    def test_input_transform_matches_einsum(self, m, r):
+        t = m + r - 1
+        x = rand((7, t, t), seed=2)
+        _, _, BT = wincnn.winograd_matrices(m, r)
+        BTj = jnp.asarray(BT, jnp.float32)
+        want = jnp.einsum("ij,njk,lk->nil", BTj, x, BTj)
+        got = kwino.input_transform(x, m=m, r=r)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=5e-4, rtol=1e-4)
+
+    @pytest.mark.parametrize("m,r", [(2, 3), (4, 3), (3, 5)])
+    def test_kernel_transform_matches_einsum(self, m, r):
+        x = rand((5, r, r), seed=3)
+        _, G, _ = wincnn.winograd_matrices(m, r)
+        Gj = jnp.asarray(G, jnp.float32)
+        want = jnp.einsum("ij,njk,lk->nil", Gj, x, Gj)
+        got = kwino.kernel_transform(x, m=m, r=r)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=5e-4, rtol=1e-4)
+
+    @pytest.mark.parametrize("m,r", [(2, 3), (4, 3), (3, 5)])
+    def test_output_transform_matches_einsum(self, m, r):
+        t = m + r - 1
+        x = rand((9, t, t), seed=4)
+        AT, _, _ = wincnn.winograd_matrices(m, r)
+        ATj = jnp.asarray(AT, jnp.float32)
+        want = jnp.einsum("ij,njk,lk->nil", ATj, x, ATj)
+        got = kwino.output_transform(x, m=m, r=r)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=5e-4, rtol=1e-4)
+
+    def test_tuple_gemm_matches_matmul(self):
+        u, v = rand((6, 8, 5), seed=5), rand((6, 5, 4), seed=6)
+        got = kwino.tuple_gemm(u, v)
+        want = jnp.einsum("pnc,pck->pnk", u, v)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=5e-4, rtol=1e-4)
+
+    def test_tuple_gemm_pads_odd_n(self):
+        u, v = rand((3, 7, 5), seed=7), rand((3, 5, 2), seed=8)
+        got = kwino.tuple_gemm(u, v)
+        want = jnp.einsum("pnc,pck->pnk", u, v)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=5e-4, rtol=1e-4)
+
+
+class TestFFTKernels:
+    @pytest.mark.parametrize("t", [4, 5, 6, 8, 9, 11, 16])
+    def test_rfft2_matches_jnp(self, t):
+        x = rand((5, t, t), seed=9)
+        zr, zi = kfft.rfft2(x, t=t)
+        want = jnp.fft.fft2(x)[:, : kfft.half_len(t), :]
+        np.testing.assert_allclose(np.asarray(zr), np.asarray(want.real),
+                                   atol=1e-3, rtol=1e-3)
+        np.testing.assert_allclose(np.asarray(zi), np.asarray(want.imag),
+                                   atol=1e-3, rtol=1e-3)
+
+    @pytest.mark.parametrize("t,r", [(6, 3), (8, 3), (7, 5)])
+    def test_rfft2_implicit_zero_padding(self, t, r):
+        w = rand((4, r, r), seed=10)
+        zr, zi = kfft.rfft2(w, t=t, pad=True)
+        wp = jnp.pad(w, ((0, 0), (0, t - r), (0, t - r)))
+        want = jnp.fft.fft2(wp)[:, : kfft.half_len(t), :]
+        np.testing.assert_allclose(np.asarray(zr), np.asarray(want.real),
+                                   atol=1e-3, rtol=1e-3)
+        np.testing.assert_allclose(np.asarray(zi), np.asarray(want.imag),
+                                   atol=1e-3, rtol=1e-3)
+
+    @pytest.mark.parametrize("t,r", [(6, 3), (9, 4), (8, 3)])
+    def test_irfft2_valid_prunes_correctly(self, t, r):
+        m = t - r + 1
+        x = rand((3, t, t), seed=11)
+        z = jnp.fft.fft2(x)[:, : kfft.half_len(t), :]
+        y = kfft.irfft2_valid(jnp.real(z), jnp.imag(z), t=t, m=m, r=r)
+        np.testing.assert_allclose(
+            np.asarray(y), np.asarray(x)[:, r - 1 :, r - 1 :], atol=1e-4
+        )
+
+    def test_tuple_cgemm_matches_complex_matmul(self):
+        ur, ui = rand((4, 6, 5), seed=12), rand((4, 6, 5), seed=13)
+        vr, vi = rand((4, 5, 3), seed=14), rand((4, 5, 3), seed=15)
+        zr, zi = kfft.tuple_cgemm(ur, ui, vr, vi)
+        want = jnp.einsum("pnc,pck->pnk", ur + 1j * ui, vr + 1j * vi)
+        np.testing.assert_allclose(np.asarray(zr), np.asarray(want.real), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(zi), np.asarray(want.imag), atol=1e-4)
+
+    def test_gauss_gemm_equals_cgemm(self):
+        ur, ui = rand((4, 6, 5), seed=16), rand((4, 6, 5), seed=17)
+        vr, vi = rand((4, 5, 3), seed=18), rand((4, 5, 3), seed=19)
+        us = kfft.gauss_augment_u(ur, ui)
+        vd, vs = kfft.gauss_augment_v(vr, vi)
+        zr_g, zi_g = kfft.tuple_gauss_gemm(ur, ui, us, vr, vd, vs)
+        zr_c, zi_c = kfft.tuple_cgemm(ur, ui, vr, vi)
+        np.testing.assert_allclose(np.asarray(zr_g), np.asarray(zr_c), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(zi_g), np.asarray(zi_c), atol=1e-4)
+
+
+class TestDirectKernel:
+    @pytest.mark.parametrize("r", [1, 3, 5])
+    def test_direct_matches_lax(self, r):
+        x, w = rand((2, 3, 10, 10), seed=20), rand((4, 3, r, r), seed=21)
+        got = kdirect.direct_conv(x, w)
+        want = ref.direct_conv(x, w)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+class TestComposedLayers:
+    """Full layer graphs vs lax.conv — the headline correctness check."""
+
+    @pytest.mark.parametrize("method", ["winograd", "regular_fft", "gauss_fft"])
+    @pytest.mark.parametrize("m,r", [(2, 3), (4, 3), (6, 3), (2, 5), (4, 5)])
+    def test_layer_matches_direct(self, method, m, r):
+        x, w = rand((2, 3, 14, 14), seed=22), rand((4, 3, r, r), seed=23)
+        got = model.METHODS[method](x, w, m)
+        want = ref.direct_conv(x, w)
+        tol = 5e-4 if method == "winograd" and m >= 6 else 1e-4
+        assert float(jnp.abs(got - want).max()) < tol
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        method=st.sampled_from(["winograd", "regular_fft", "gauss_fft"]),
+        b=st.integers(1, 3),
+        c=st.integers(1, 6),
+        k=st.integers(1, 6),
+        hw=st.integers(8, 18),
+        m=st.integers(2, 6),
+        seed=st.integers(0, 2**31),
+    )
+    def test_layer_shape_sweep(self, method, b, c, k, hw, m, seed):
+        r = 3
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal((b, c, hw, hw)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((k, c, r, r)), jnp.float32)
+        got = model.METHODS[method](x, w, m)
+        want = ref.direct_conv(x, w)
+        assert got.shape == want.shape
+        scale = float(jnp.abs(want).max()) + 1e-6
+        assert float(jnp.abs(got - want).max()) / scale < 1e-3
+
+    def test_non_square_images(self):
+        x, w = rand((1, 2, 12, 17), seed=24), rand((3, 2, 3, 3), seed=25)
+        for method in ("winograd", "regular_fft", "gauss_fft"):
+            got = model.METHODS[method](x, w, 4)
+            want = ref.direct_conv(x, w)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       atol=5e-4, rtol=1e-3)

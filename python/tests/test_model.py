@@ -1,0 +1,91 @@
+"""Tests for the L2 layer graphs, net catalogs, and the e2e ConvNet."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def rand(shape, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).standard_normal(shape), jnp.float32)
+
+
+class TestLayerCatalog:
+    def test_vgg_layer_count_and_names(self):
+        layers = model.vgg_layers()
+        assert [l.name for l in layers] == [
+            "vgg1.2", "vgg2.1", "vgg2.2", "vgg3.1",
+            "vgg3.2", "vgg4.1", "vgg4.2", "vgg5.1",
+        ]
+        assert all(l.kernel == 3 for l in layers)
+
+    def test_alexnet_layers(self):
+        layers = model.alexnet_layers()
+        assert [l.name for l in layers] == [
+            "alexnet2", "alexnet3", "alexnet4", "alexnet5"
+        ]
+        assert layers[0].kernel == 5  # the 5x5 layer LIBXSMM/MKL-DNN can't run
+
+    def test_out_size(self):
+        l = model.vgg_layers()[0]
+        assert l.out_size == 224  # padded 226 - 3 + 1
+
+    def test_total_12_distinct_layers(self):
+        assert len(model.all_layers()) == 12  # paper: "12 layers" benchmark
+
+
+class TestConvnetForward:
+    @pytest.mark.parametrize("method", ["winograd", "regular_fft", "gauss_fft"])
+    def test_convnet_matches_direct_chain(self, method):
+        cfg = dict(x=(1, 4, 16, 16), channels=[4, 6, 4], r=3, m=4)
+        x = rand(cfg["x"], seed=1)
+        weights = [
+            rand((cfg["channels"][i + 1], cfg["channels"][i], 3, 3), seed=2 + i)
+            for i in range(len(cfg["channels"]) - 1)
+        ]
+        got = model.convnet_forward(x, weights, method, cfg["m"])
+        want = x
+        for i, w in enumerate(weights):
+            want = ref.direct_conv(want, w)
+            if i + 1 < len(weights):
+                want = jax.nn.relu(want)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-3, rtol=1e-3)
+
+    def test_convnet_output_shape(self):
+        x = rand((1, 4, 16, 16))
+        weights = [rand((6, 4, 3, 3), seed=5), rand((4, 6, 3, 3), seed=6)]
+        y = model.convnet_forward(x, weights, "winograd", 4)
+        assert y.shape == (1, 4, 12, 12)
+
+
+class TestGemmOperandPlumbing:
+    """The tile-major <-> GEMM-operand reshapes must be exact inverses."""
+
+    def test_u_operand_roundtrip(self):
+        b, c, nh, nw, t = 2, 3, 2, 2, 4
+        tiles = rand((b * c * nh * nw, t, t), seed=7)
+        u = model._gemm_operand_u(tiles, (b, c, nh, nw), t * t)
+        assert u.shape == (t * t, b * nh * nw, c)
+        # element check: U[p, b*nh*nw_idx, c] == tiles[(b,c,n) flat, p]
+        un = np.asarray(u)
+        tn = np.asarray(tiles).reshape(b, c, nh * nw, t * t)
+        for p in (0, 5, t * t - 1):
+            for bi in range(b):
+                for n in range(nh * nw):
+                    for ci in range(c):
+                        assert un[p, bi * nh * nw + n, ci] == pytest.approx(
+                            tn[bi, ci, n, p]
+                        )
+
+    def test_z_result_roundtrip(self):
+        b, k, nh, nw, s0, s1 = 2, 3, 2, 2, 4, 3
+        z = rand((s0 * s1, b * nh * nw, k), seed=8)
+        zt = model._from_gemm_result(z, (b, 0, nh, nw), k, s0, s1)
+        assert zt.shape == (b * k * nh * nw, s0, s1)
+        zn = np.asarray(z).reshape(s0, s1, b, nh * nw, k)
+        ztn = np.asarray(zt).reshape(b, k, nh * nw, s0, s1)
+        assert ztn[1, 2, 3, 2, 1] == pytest.approx(zn[2, 1, 1, 3, 2])

@@ -1,0 +1,95 @@
+"""Tests for the Cook-Toom / Winograd matrix generator (wincnn substitute)."""
+
+import numpy as np
+import pytest
+from fractions import Fraction
+
+from hypothesis import given, settings, strategies as st
+
+from compile import wincnn
+
+
+class TestInterpolationPoints:
+    def test_first_points_match_wincnn_schedule(self):
+        pts = wincnn.interpolation_points(6)
+        assert pts == [
+            Fraction(0),
+            Fraction(1),
+            Fraction(-1),
+            Fraction(2),
+            Fraction(-2),
+            Fraction(1, 2),
+        ]
+
+    def test_points_distinct(self):
+        pts = wincnn.interpolation_points(12)
+        assert len(set(pts)) == 12
+
+    @given(st.integers(min_value=1, max_value=14))
+    def test_count(self, n):
+        assert len(wincnn.interpolation_points(n)) == n
+
+
+class TestCookToomExact:
+    def test_f23_known_shape(self):
+        AT, G, BT = wincnn.cook_toom_matrices(2, 3)
+        assert len(AT) == 2 and len(AT[0]) == 4
+        assert len(G) == 4 and len(G[0]) == 3
+        assert len(BT) == 4 and len(BT[0]) == 4
+
+    def test_f23_correlation_identity_exact(self):
+        AT, G, BT = wincnn.cook_toom_matrices(2, 3)
+        d = [Fraction(3), Fraction(-1), Fraction(4), Fraction(2)]
+        g = [Fraction(1), Fraction(5), Fraction(-2)]
+        Gg = [sum(G[i][j] * g[j] for j in range(3)) for i in range(4)]
+        Bd = [sum(BT[i][j] * d[j] for j in range(4)) for i in range(4)]
+        prod = [a * b for a, b in zip(Gg, Bd)]
+        y = [sum(AT[k][i] * prod[i] for i in range(4)) for k in range(2)]
+        ref = [sum(d[k + j] * g[j] for j in range(3)) for k in range(2)]
+        assert y == ref  # exact rational equality
+
+    @pytest.mark.parametrize("m,r", [(2, 3), (3, 3), (4, 3), (5, 3), (6, 3),
+                                     (2, 5), (3, 5), (4, 4), (6, 2), (7, 3)])
+    def test_identity_float(self, m, r):
+        AT, G, BT = wincnn.winograd_matrices(m, r)
+        rng = np.random.default_rng(42)
+        d = rng.standard_normal(m + r - 1)
+        g = rng.standard_normal(r)
+        y = AT @ ((G @ g) * (BT @ d))
+        ref = np.array([np.dot(d[i : i + r], g) for i in range(m)])
+        np.testing.assert_allclose(y, ref, atol=1e-8)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        m=st.integers(min_value=1, max_value=8),
+        r=st.integers(min_value=1, max_value=6),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_identity_property(self, m, r, seed):
+        AT, G, BT = wincnn.winograd_matrices(m, r)
+        rng = np.random.default_rng(seed)
+        d = rng.standard_normal(m + r - 1)
+        g = rng.standard_normal(r)
+        y = AT @ ((G @ g) * (BT @ d))
+        ref = np.array([np.dot(d[i : i + r], g) for i in range(m)])
+        np.testing.assert_allclose(y, ref, atol=1e-6)
+
+    def test_bad_args_raise(self):
+        with pytest.raises(ValueError):
+            wincnn.cook_toom_matrices(0, 3)
+
+
+class TestFlopCounts:
+    def test_counts_positive_and_growing(self):
+        prev = 0
+        for m in range(2, 8):
+            c = wincnn.transform_flops(m, 3)
+            assert c["input"] > 0 and c["kernel"] > 0 and c["output"] > 0
+            assert c["input"] > prev  # larger tiles cost more
+            prev = c["input"]
+
+    def test_kernel_cheaper_than_input(self):
+        # G is t x r (skinnier than B^T, t x t) so kernel transforms cost less
+        for m in (2, 4, 6):
+            c = wincnn.transform_flops(m, 3)
+            assert c["kernel"] < c["input"]

@@ -1,0 +1,31 @@
+//! Fig. 1 — per-layer running time of all five implementations on the
+//! host (the paper's Xeon Gold figure, at host scale), plus the paper's
+//! AlexNet headline comparison (58.79 ms Winograd vs 31.96 ms
+//! Regular-FFT at paper scale; we report the host-scaled equivalent).
+//!
+//! Scale knobs: FFTCONV_BENCH_BATCH / FFTCONV_BENCH_MAXX /
+//! FFTCONV_BENCH_BUDGET (see harness::measure).
+
+use fftconv::harness::figures::{alexnet_totals, fig1};
+use fftconv::harness::BenchConfig;
+use fftconv::model::paper_data;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    println!(
+        "# Fig. 1 bench: batch={} max_x={} budget={}ms",
+        cfg.batch, cfg.max_x, cfg.budget_ms
+    );
+    let table = fig1(&cfg);
+    table.emit("fig1_layer_times");
+
+    let (wino_ms, fft_ms) = alexnet_totals(&cfg);
+    println!(
+        "\nAlexNet conv total: winograd {wino_ms:.2} ms vs regular-fft {fft_ms:.2} ms \
+         (speedup {:.2}x; paper at full scale: {:.2} -> {:.2} ms, {:.2}x)",
+        wino_ms / fft_ms,
+        paper_data::ALEXNET_TOTAL_MS_WINOGRAD,
+        paper_data::ALEXNET_TOTAL_MS_REGULAR_FFT,
+        paper_data::ALEXNET_TOTAL_MS_WINOGRAD / paper_data::ALEXNET_TOTAL_MS_REGULAR_FFT,
+    );
+}

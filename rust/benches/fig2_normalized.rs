@@ -1,0 +1,28 @@
+//! Fig. 2 — normalized running times of the three methods across the
+//! Table-1 systems (Roofline-modeled; the paper's cross-system figure).
+
+use fftconv::harness::figures::fig2;
+use fftconv::harness::BenchConfig;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let table = fig2(&cfg);
+    table.emit("fig2_normalized");
+
+    // summary: fraction of (system, layer) cells each method wins
+    let mut wins = [0usize; 3];
+    for row in &table.rows {
+        let vals: Vec<f64> = row[2..5].iter().map(|v| v.parse().unwrap()).collect();
+        let min = vals.iter().cloned().fold(f64::MAX, f64::min);
+        for (i, v) in vals.iter().enumerate() {
+            if (v - min).abs() < 1e-12 {
+                wins[i] += 1;
+            }
+        }
+    }
+    let n = table.rows.len();
+    println!(
+        "\nwins: winograd {}/{n}, regular_fft {}/{n}, gauss_fft {}/{n}",
+        wins[0], wins[1], wins[2]
+    );
+}

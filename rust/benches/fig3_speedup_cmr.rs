@@ -1,0 +1,26 @@
+//! Fig. 3 — modeled speedup of Regular-FFT (and Gauss-FFT) over Winograd
+//! as a function of CMR for three cache sizes, with the measured host
+//! anchor and the §5.2 fit-quality metrics (paper: rRMSE 0.079 / 0.1).
+
+use fftconv::harness::figures::{fig3, fit_quality};
+use fftconv::harness::BenchConfig;
+use fftconv::model::paper_data;
+use fftconv::model::stages::Method;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    for (a, name) in [
+        (Method::RegularFft, "fig3_regular_vs_winograd"),
+        (Method::GaussFft, "fig3_gauss_vs_winograd"),
+    ] {
+        let (table, plot) = fig3(&cfg, a, Method::Winograd);
+        table.emit(name);
+        println!("{plot}");
+    }
+    let (rrmse, fitness, n) = fit_quality(&cfg, Method::RegularFft, Method::Winograd);
+    println!(
+        "model fit (host, {n} layers): rRMSE {rrmse:.3}, fitness {fitness:.1}% \
+         (paper on its 10-system fleet: rRMSE {:.3}, fitness 92.68%)",
+        paper_data::PAPER_RRMSE_REGULAR_VS_WINOGRAD
+    );
+}

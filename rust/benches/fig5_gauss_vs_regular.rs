@@ -1,0 +1,19 @@
+//! Fig. 5 — Regular-FFT vs Gauss-FFT: model sweep over CMR plus measured
+//! host anchor and fit quality (the paper's Appendix C figure).
+
+use fftconv::harness::figures::{fig3, fit_quality};
+use fftconv::harness::BenchConfig;
+use fftconv::model::stages::Method;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let (table, plot) = fig3(&cfg, Method::RegularFft, Method::GaussFft);
+    table.emit("fig5_regular_vs_gauss");
+    println!("{plot}");
+    let (rrmse, fitness, n) = fit_quality(&cfg, Method::RegularFft, Method::GaussFft);
+    println!("model fit (host, {n} layers): rRMSE {rrmse:.3}, fitness {fitness:.1}%");
+    println!(
+        "expected shape: Gauss-FFT wins at low CMR (fewer elementwise FLOPs), \
+         Regular-FFT at high CMR / small cache (higher elementwise AI)"
+    );
+}

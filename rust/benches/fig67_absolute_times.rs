@@ -1,0 +1,11 @@
+//! Figs. 6/7 — absolute per-layer running times of the tuned engines vs
+//! the comparator baselines (vendor-library stand-ins, DESIGN.md §3).
+
+use fftconv::harness::figures::fig67;
+use fftconv::harness::BenchConfig;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let table = fig67(&cfg);
+    table.emit("fig67_absolute_times");
+}

@@ -1,0 +1,149 @@
+//! Micro-benchmarks of the engine hot paths (the §Perf working set):
+//! blocked GEMM, FFT plans by size class (incl. Rader primes), Winograd
+//! tile transforms, tiling gather/scatter, and coordinator overhead.
+
+use fftconv::conv::gemm::{cgemm_acc, gemm_acc};
+use fftconv::conv::{Tensor4, TileGrid};
+use fftconv::coordinator::StaticScheduler;
+use fftconv::fft::{C32, Plan, TileFft};
+use fftconv::util::bench::{bench, Table};
+use fftconv::util::Rng;
+use fftconv::winograd::matrices::winograd_matrices_f32;
+use fftconv::winograd::program::apply_2d_f32;
+
+fn main() {
+    let mut t = Table::new("micro hot paths", &["op", "params", "median µs", "GF/s"]);
+    let mut rng = Rng::new(7);
+
+    // GEMM sizes: the element-wise stage shapes (tall-skinny)
+    for (m, k, n) in [(64usize, 64usize, 64usize), (256, 64, 64), (1024, 64, 64), (256, 256, 256)] {
+        let a = rng.vec_f32(m * k);
+        let b = rng.vec_f32(k * n);
+        let mut c = vec![0.0f32; m * n];
+        let r = bench("gemm", 200, || {
+            gemm_acc(&mut c, &a, &b, m, k, n);
+            std::hint::black_box(&c);
+        });
+        let gf = 2.0 * (m * k * n) as f64 / r.median.as_secs_f64() / 1e9;
+        t.row(vec![
+            "gemm".into(),
+            format!("{m}x{k}x{n}"),
+            format!("{:.1}", r.median.as_secs_f64() * 1e6),
+            format!("{gf:.2}"),
+        ]);
+    }
+    {
+        let (m, k, n) = (256usize, 64usize, 64usize);
+        let (ur, ui) = (rng.vec_f32(m * k), rng.vec_f32(m * k));
+        let (vr, vi) = (rng.vec_f32(k * n), rng.vec_f32(k * n));
+        let mut zr = vec![0.0f32; m * n];
+        let mut zi = vec![0.0f32; m * n];
+        let r = bench("cgemm", 200, || {
+            cgemm_acc(&mut zr, &mut zi, &ur, &ui, &vr, &vi, m, k, n);
+            std::hint::black_box(&zr);
+        });
+        let gf = 8.0 * (m * k * n) as f64 / r.median.as_secs_f64() / 1e9;
+        t.row(vec![
+            "cgemm".into(),
+            format!("{m}x{k}x{n}"),
+            format!("{:.1}", r.median.as_secs_f64() * 1e6),
+            format!("{gf:.2}"),
+        ]);
+    }
+
+    // FFT plans: powers of two vs smooth vs prime (Rader)
+    for n in [8usize, 15, 16, 17, 24, 31, 32] {
+        let plan = Plan::new(n);
+        let mut data: Vec<C32> = (0..n).map(|i| C32::new(i as f32, -(i as f32))).collect();
+        let mut out = vec![C32::ZERO; n];
+        let r = bench("fft", 50, || {
+            let mut d = data.clone();
+            plan.forward(&mut d, &mut out);
+            std::hint::black_box(&out);
+        });
+        data[0] = out[0]; // keep data alive
+        t.row(vec![
+            "fft-c2c".into(),
+            format!("n={n}{}", if [17usize, 31].contains(&n) { " (Rader)" } else { "" }),
+            format!("{:.2}", r.median.as_secs_f64() * 1e6),
+            "-".into(),
+        ]);
+    }
+
+    // tile transforms
+    for (m, r_) in [(4usize, 3usize), (12, 3), (27, 5)] {
+        let mut tf = TileFft::new(m, r_);
+        let tt = tf.t;
+        let x = Rng::new(9).vec_f32(tt * tt);
+        let mut zre = vec![0.0f32; tt * tf.th];
+        let mut zim = vec![0.0f32; tt * tf.th];
+        let r = bench("tile-fft", 50, || {
+            tf.forward(&x, tt, &mut zre, &mut zim);
+            std::hint::black_box(&zre);
+        });
+        t.row(vec![
+            "fft-tile-fwd".into(),
+            format!("t={tt}"),
+            format!("{:.2}", r.median.as_secs_f64() * 1e6),
+            "-".into(),
+        ]);
+    }
+    {
+        let (at, _, _) = winograd_matrices_f32(4, 3);
+        let x = Rng::new(10).vec_f32(36);
+        let mut out = vec![0.0f32; 16];
+        let r = bench("wino-out", 50, || {
+            apply_2d_f32(&at, 4, 6, &x, &mut out);
+            std::hint::black_box(&out);
+        });
+        t.row(vec![
+            "wino-transform".into(),
+            "F(4,3) out".into(),
+            format!("{:.3}", r.median.as_secs_f64() * 1e6),
+            "-".into(),
+        ]);
+    }
+
+    // tiling gather/scatter
+    {
+        let g = TileGrid::new(58, 58, 4, 3);
+        let plane = Rng::new(11).vec_f32(58 * 58);
+        let mut tile = vec![0.0f32; g.t * g.t];
+        let r = bench("gather", 50, || {
+            for ti in 0..g.nh {
+                for tj in 0..g.nw {
+                    g.gather(&plane, ti, tj, &mut tile);
+                    std::hint::black_box(&tile);
+                }
+            }
+        });
+        t.row(vec![
+            "tile-gather".into(),
+            "58x58 m=4".into(),
+            format!("{:.1}", r.median.as_secs_f64() * 1e6),
+            "-".into(),
+        ]);
+    }
+
+    // coordinator overhead: batch of 8 tiny convs through the scheduler
+    {
+        let s = StaticScheduler::new(2);
+        let x = Tensor4::random([8, 4, 12, 12], 12);
+        let w = Tensor4::random([4, 4, 3, 3], 13);
+        let r = bench("sched", 100, || {
+            std::hint::black_box(s.run_batch(
+                fftconv::conv::ConvAlgorithm::Winograd { m: 4 },
+                &x,
+                &w,
+            ));
+        });
+        t.row(vec![
+            "scheduler-batch8".into(),
+            "4ch 12x12".into(),
+            format!("{:.1}", r.median.as_secs_f64() * 1e6),
+            "-".into(),
+        ]);
+    }
+
+    t.emit("micro_hotpaths");
+}

@@ -1,0 +1,137 @@
+//! Batched Winograd tile transforms as small GEMMs (same codelet strategy
+//! as `fft::batch_dft`, real-valued): apply `M X M^T` to a batch of tiles
+//! with two GEMM passes and a tile transpose.  Results are stored
+//! *transposed* — consistent across input/kernel transforms, and the
+//! output transform un-transposes (`(M X M^T)^T` composed twice).
+
+use super::gemm::gemm_acc;
+
+/// One transform matrix M (a x b) applied as a sandwich over tile batches.
+#[derive(Clone, Debug)]
+pub struct BatchSandwich {
+    /// output side length
+    pub a: usize,
+    /// input side length
+    pub b: usize,
+    /// M^T, row-major (b, a)
+    mt: Vec<f32>,
+    y: Vec<f32>,
+    tr: Vec<f32>,
+}
+
+impl BatchSandwich {
+    /// `mat`: M row-major (a, b).
+    pub fn new(mat: &[f32], a: usize, b: usize) -> BatchSandwich {
+        assert_eq!(mat.len(), a * b);
+        let mut mt = vec![0.0f32; b * a];
+        for i in 0..a {
+            for j in 0..b {
+                mt[j * a + i] = mat[i * b + j];
+            }
+        }
+        BatchSandwich {
+            a,
+            b,
+            mt,
+            y: Vec::new(),
+            tr: Vec::new(),
+        }
+    }
+
+    /// Transform `nb` tiles: x (nb, b, b) -> out (nb, a, a), where
+    /// out tile = (M X M^T)^T.
+    pub fn apply(&mut self, x: &[f32], nb: usize, out: &mut [f32]) {
+        let (a, b) = (self.a, self.b);
+        debug_assert_eq!(x.len(), nb * b * b);
+        debug_assert_eq!(out.len(), nb * a * a);
+        let need = nb * a * b;
+        if self.y.len() < need {
+            self.y.resize(need, 0.0);
+            self.tr.resize(need, 0.0);
+        }
+        let mut y = std::mem::take(&mut self.y);
+        let mut tr = std::mem::take(&mut self.tr);
+
+        // pass 1: Y = X @ M^T  — (nb*b, b) x (b, a)
+        y[..nb * b * a].fill(0.0);
+        gemm_acc(&mut y[..nb * b * a], x, &self.mt, nb * b, b, a);
+        // transpose tiles (b, a) -> (a, b)
+        for t_ in 0..nb {
+            for i in 0..b {
+                for j in 0..a {
+                    tr[(t_ * a + j) * b + i] = y[(t_ * b + i) * a + j];
+                }
+            }
+        }
+        // pass 2: out = Y' @ M^T — (nb*a, b) x (b, a)
+        out.fill(0.0);
+        gemm_acc(out, &tr[..nb * a * b], &self.mt, nb * a, b, a);
+
+        self.y = y;
+        self.tr = tr;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use crate::winograd::matrices::winograd_matrices_f32;
+    use crate::winograd::program::apply_2d_f32;
+
+    #[test]
+    fn batch_matches_apply2d_transposed() {
+        let (at, g, bt) = winograd_matrices_f32(4, 3);
+        let t = 6;
+        let mut rng = Rng::new(1);
+        // input transform: BT (t x t)
+        let mut bs = BatchSandwich::new(&bt, t, t);
+        let nb = 5;
+        let x = rng.vec_f32(nb * t * t);
+        let mut got = vec![0.0f32; nb * t * t];
+        bs.apply(&x, nb, &mut got);
+        for n in 0..nb {
+            let mut want = vec![0.0f32; t * t];
+            apply_2d_f32(&bt, t, t, &x[n * t * t..(n + 1) * t * t], &mut want);
+            for i in 0..t {
+                for j in 0..t {
+                    assert!(
+                        (got[n * t * t + j * t + i] - want[i * t + j]).abs() < 1e-4,
+                        "tile {n} ({i},{j})"
+                    );
+                }
+            }
+        }
+        // kernel transform: G (t x r)
+        let mut gs = BatchSandwich::new(&g, t, 3);
+        let w = rng.vec_f32(2 * 9);
+        let mut got = vec![0.0f32; 2 * t * t];
+        gs.apply(&w, 2, &mut got);
+        let mut want = vec![0.0f32; t * t];
+        apply_2d_f32(&g, t, 3, &w[..9], &mut want);
+        assert!((got[1 * t + 0] - want[0 * t + 1]).abs() < 1e-5);
+        // output transform of transposed input un-transposes
+        let mut os = BatchSandwich::new(&at, 4, t);
+        let z = rng.vec_f32(t * t);
+        let mut zt = vec![0.0f32; t * t];
+        for i in 0..t {
+            for j in 0..t {
+                zt[j * t + i] = z[i * t + j];
+            }
+        }
+        let mut got_o = vec![0.0f32; 16];
+        os.apply(&zt, 1, &mut got_o); // (AT z^T AT^T)^T = AT z AT^T... check
+        let mut want_o = vec![0.0f32; 16];
+        apply_2d_f32(&at, 4, t, &z, &mut want_o);
+        for i in 0..4 {
+            for j in 0..4 {
+                assert!(
+                    (got_o[i * 4 + j] - want_o[i * 4 + j]).abs() < 1e-4,
+                    "({i},{j}): {} vs {}",
+                    got_o[i * 4 + j],
+                    want_o[i * 4 + j]
+                );
+            }
+        }
+    }
+}

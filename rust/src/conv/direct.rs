@@ -1,0 +1,144 @@
+//! Direct convolution baselines.
+//!
+//! * [`naive`] — textbook 7-loop direct convolution; the correctness
+//!   oracle every other algorithm is validated against.
+//! * [`im2col`] — direct convolution lowered to one big GEMM (the
+//!   "optimized direct" comparator standing in for MKL-DNN's direct
+//!   implementation in Figs. 1/6/7; DESIGN.md §3).
+
+use super::gemm::gemm_acc;
+use super::tensor::Tensor4;
+
+/// out[b,k,i,j] = sum_{c,u,v} x[b,c,i+u,j+v] * w[k,c,u,v]
+pub fn naive(x: &Tensor4, w: &Tensor4) -> Tensor4 {
+    let [b, c, h, wd] = x.shape;
+    let [k, c2, r, r2] = w.shape;
+    assert_eq!(c, c2, "channel mismatch");
+    assert_eq!(r, r2, "non-square kernel");
+    let (oh, ow) = (h - r + 1, wd - r + 1);
+    let mut out = Tensor4::zeros([b, k, oh, ow]);
+    for bi in 0..b {
+        for ki in 0..k {
+            let oplane = out.plane_mut(bi, ki);
+            for ci in 0..c {
+                let xoff = ((bi * c + ci) * h) * wd;
+                let xplane = &x.data[xoff..xoff + h * wd];
+                for u in 0..r {
+                    for v in 0..r {
+                        let wv = w.at(ki, ci, u, v);
+                        if wv == 0.0 {
+                            continue;
+                        }
+                        for i in 0..oh {
+                            let xrow = &xplane[(i + u) * wd + v..(i + u) * wd + v + ow];
+                            let orow = &mut oplane[i * ow..(i + 1) * ow];
+                            for (o, &xv) in orow.iter_mut().zip(xrow) {
+                                *o += wv * xv;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Direct convolution as im2col + GEMM: patches (BHW x Cr^2) @ (Cr^2 x K).
+pub fn im2col(x: &Tensor4, w: &Tensor4) -> Tensor4 {
+    let [b, c, h, wd] = x.shape;
+    let [k, c2, r, _] = w.shape;
+    assert_eq!(c, c2);
+    let (oh, ow) = (h - r + 1, wd - r + 1);
+    let patch = c * r * r;
+
+    // column matrix: one row per output position
+    let rows = b * oh * ow;
+    let mut cols = vec![0.0f32; rows * patch];
+    for bi in 0..b {
+        for i in 0..oh {
+            for j in 0..ow {
+                let row = ((bi * oh + i) * ow + j) * patch;
+                for ci in 0..c {
+                    for u in 0..r {
+                        let src = x.idx(bi, ci, i + u, j);
+                        let dst = row + (ci * r + u) * r;
+                        cols[dst..dst + r].copy_from_slice(&x.data[src..src + r]);
+                    }
+                }
+            }
+        }
+    }
+    // weights reshaped to (patch x K)
+    let mut wm = vec![0.0f32; patch * k];
+    for ki in 0..k {
+        for ci in 0..c {
+            for u in 0..r {
+                for v in 0..r {
+                    wm[((ci * r + u) * r + v) * k + ki] = w.at(ki, ci, u, v);
+                }
+            }
+        }
+    }
+    let mut om = vec![0.0f32; rows * k];
+    gemm_acc(&mut om, &cols, &wm, rows, patch, k);
+    // (B, OH, OW, K) -> (B, K, OH, OW)
+    let mut out = Tensor4::zeros([b, k, oh, ow]);
+    for bi in 0..b {
+        for i in 0..oh {
+            for j in 0..ow {
+                let row = ((bi * oh + i) * ow + j) * k;
+                for ki in 0..k {
+                    *out.at_mut(bi, ki, i, j) = om[row + ki];
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn naive_identity_kernel() {
+        let x = Tensor4::random([1, 2, 5, 5], 1);
+        // delta kernel per channel pair: w[k,c,0,0] = [k==c]
+        let mut w = Tensor4::zeros([2, 2, 1, 1]);
+        *w.at_mut(0, 0, 0, 0) = 1.0;
+        *w.at_mut(1, 1, 0, 0) = 1.0;
+        let y = naive(&x, &w);
+        assert_eq!(y.shape, [1, 2, 5, 5]);
+        assert!(y.max_abs_diff(&x) < 1e-6);
+    }
+
+    #[test]
+    fn naive_known_values() {
+        // 1x1x3x3 input of ones, 1x1x2x2 kernel of ones -> all 4s
+        let x = Tensor4::from_vec([1, 1, 3, 3], vec![1.0; 9]);
+        let w = Tensor4::from_vec([1, 1, 2, 2], vec![1.0; 4]);
+        let y = naive(&x, &w);
+        assert_eq!(y.shape, [1, 1, 2, 2]);
+        assert!(y.data.iter().all(|&v| (v - 4.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn im2col_matches_naive() {
+        for (b, c, k, h, w_, r) in [(1, 1, 1, 5, 5, 3), (2, 3, 4, 8, 7, 3), (1, 4, 2, 6, 6, 5)] {
+            let x = Tensor4::random([b, c, h, w_], 42);
+            let w = Tensor4::random([k, c, r, r], 43);
+            let a = naive(&x, &w);
+            let bb = im2col(&x, &w);
+            assert!(a.max_abs_diff(&bb) < 1e-3, "({b},{c},{k},{h},{w_},{r})");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "channel mismatch")]
+    fn rejects_channel_mismatch() {
+        let x = Tensor4::zeros([1, 2, 5, 5]);
+        let w = Tensor4::zeros([1, 3, 3, 3]);
+        naive(&x, &w);
+    }
+}

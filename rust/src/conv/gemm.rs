@@ -1,0 +1,299 @@
+//! Blocked GEMM kernels — the JIT-codelet substitute (DESIGN.md §3).
+//!
+//! The element-wise stage of all three methods reduces to tall-skinny
+//! matrix products `(BN x C) @ (C x K)` per transform element (Eqn. 12).
+//! Three flavors match the paper's §2.3 accounting:
+//!
+//! * real GEMM            — Winograd (and each Gauss-FFT product)
+//! * complex GEMM         — Regular-FFT (4 real mul per complex mul)
+//! * Gauss complex GEMM   — 3 real GEMMs + recombination
+//!
+//! Layout: row-major everywhere; `a` is M x K, `b` is K x N, `c` is M x N.
+//! The micro-kernel keeps a row of C in registers and walks B rows
+//! (i-k-j order), which LLVM autovectorizes; cache blocking over K keeps
+//! the B panel resident, mirroring Eqn. 13's "sub-matrix of V in cache".
+
+/// C += A * B (real).
+pub fn gemm_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    gemm_scaled(c, a, b, m, k, n, 1.0)
+}
+
+/// C -= A * B (real).
+pub fn gemm_sub(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    gemm_scaled(c, a, b, m, k, n, -1.0)
+}
+
+/// Rows per register block (accumulators live in stack arrays the
+/// compiler keeps in vector registers).
+const MR: usize = 4;
+/// Columns per register block (2 AVX2 lanes x 4 rows = 8 accumulators).
+const NR: usize = 16;
+
+/// C += alpha * A * B.
+///
+/// Register-blocked micro-kernel: MR x NR accumulator tile held in stack
+/// arrays across the whole K loop (one store per C element per call,
+/// instead of one per (k, element)); the B panel streams row-wise and
+/// stays L1/L2-resident for all MR rows.  See EXPERIMENTS.md §Perf for
+/// the measured effect (~16 -> >40 GF/s on the dev host).
+pub fn gemm_scaled(
+    c: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    alpha: f32,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+
+    let mut j0 = 0;
+    while j0 < n {
+        let nb = NR.min(n - j0);
+        let mut i0 = 0;
+        while i0 < m {
+            let mb = MR.min(m - i0);
+            if nb == NR && mb == MR {
+                kernel_4x16(c, a, b, i0, j0, k, n, alpha);
+            } else {
+                // remainder tile: scalar-ish fallback
+                for i in i0..i0 + mb {
+                    for kk in 0..k {
+                        let av = a[i * k + kk] * alpha;
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let brow = &b[kk * n + j0..kk * n + j0 + nb];
+                        let crow = &mut c[i * n + j0..i * n + j0 + nb];
+                        for (cv, &bv) in crow.iter_mut().zip(brow) {
+                            *cv += av * bv;
+                        }
+                    }
+                }
+            }
+            i0 += mb;
+        }
+        j0 += nb;
+    }
+}
+
+/// The MR x NR = 4 x 16 register tile.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn kernel_4x16(
+    c: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    i0: usize,
+    j0: usize,
+    k: usize,
+    n: usize,
+    alpha: f32,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for kk in 0..k {
+        let brow = &b[kk * n + j0..kk * n + j0 + NR];
+        // unrolled over the MR rows; each row is a broadcast-fma over NR
+        for (r, accr) in acc.iter_mut().enumerate() {
+            let av = a[(i0 + r) * k + kk];
+            for (x, &bv) in accr.iter_mut().zip(brow) {
+                *x += av * bv;
+            }
+        }
+    }
+    for (r, accr) in acc.iter().enumerate() {
+        let crow = &mut c[(i0 + r) * n + j0..(i0 + r) * n + j0 + NR];
+        for (cv, &x) in crow.iter_mut().zip(accr) {
+            *cv += alpha * x;
+        }
+    }
+}
+
+/// Complex GEMM on SoA planes: (Zr + iZi) += (Ur + iUi)(Vr + iVi),
+/// the Regular-FFT element-wise stage (4 real GEMMs).
+#[allow(clippy::too_many_arguments)]
+pub fn cgemm_acc(
+    zr: &mut [f32],
+    zi: &mut [f32],
+    ur: &[f32],
+    ui: &[f32],
+    vr: &[f32],
+    vi: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    gemm_acc(zr, ur, vr, m, k, n);
+    gemm_sub(zr, ui, vi, m, k, n);
+    gemm_acc(zi, ur, vi, m, k, n);
+    gemm_acc(zi, ui, vr, m, k, n);
+}
+
+/// Gauss-FFT element-wise stage (§2.3): with precomputed
+/// Us = Ur + Ui, Vd = Vi - Vr, Vs = Vr + Vi,
+///   t1 = Us Vr;  t2 = Ur Vd;  t3 = Ui Vs;
+///   Zr += t1 - t3;  Zi += t1 + t2
+/// — 3 real GEMMs instead of 4.
+#[allow(clippy::too_many_arguments)]
+pub fn gauss_gemm_acc(
+    zr: &mut [f32],
+    zi: &mut [f32],
+    ur: &[f32],
+    ui: &[f32],
+    us: &[f32],
+    vr: &[f32],
+    vd: &[f32],
+    vs: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    scratch: &mut GaussScratch,
+) {
+    scratch.ensure(m * n);
+    let t1 = &mut scratch.t1[..m * n];
+    t1.fill(0.0);
+    gemm_acc(t1, us, vr, m, k, n);
+    // Zr += t1; Zi += t1
+    for i in 0..m * n {
+        zr[i] += t1[i];
+        zi[i] += t1[i];
+    }
+    gemm_acc(zi, ur, vd, m, k, n); // Zi += t2
+    gemm_sub(zr, ui, vs, m, k, n); // Zr -= t3
+}
+
+/// Reusable scratch for the Gauss recombination.
+#[derive(Default, Clone)]
+pub struct GaussScratch {
+    t1: Vec<f32>,
+}
+
+impl GaussScratch {
+    fn ensure(&mut self, n: usize) {
+        if self.t1.len() < n {
+            self.t1.resize(n, 0.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn gemm_ref(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0.0f64; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                for j in 0..n {
+                    c[i * n + j] += a[i * k + kk] as f64 * b[kk * n + j] as f64;
+                }
+            }
+        }
+        c.into_iter().map(|v| v as f32).collect()
+    }
+
+    #[test]
+    fn gemm_matches_reference() {
+        for (m, k, n) in [(1, 1, 1), (3, 4, 5), (16, 16, 16), (7, 300, 9), (33, 65, 17)] {
+            let mut rng = Rng::new((m * k * n) as u64);
+            let a = rng.vec_f32(m * k);
+            let b = rng.vec_f32(k * n);
+            let mut c = vec![0.0f32; m * n];
+            gemm_acc(&mut c, &a, &b, m, k, n);
+            let want = gemm_ref(&a, &b, m, k, n);
+            for (g, w) in c.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-3, "({m},{k},{n})");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_accumulates() {
+        let a = vec![1.0f32];
+        let b = vec![2.0f32];
+        let mut c = vec![10.0f32];
+        gemm_acc(&mut c, &a, &b, 1, 1, 1);
+        assert_eq!(c[0], 12.0);
+        gemm_sub(&mut c, &a, &b, 1, 1, 1);
+        assert_eq!(c[0], 10.0);
+    }
+
+    #[test]
+    fn cgemm_matches_complex_reference() {
+        let (m, k, n) = (4, 6, 3);
+        let mut rng = Rng::new(77);
+        let (ur, ui) = (rng.vec_f32(m * k), rng.vec_f32(m * k));
+        let (vr, vi) = (rng.vec_f32(k * n), rng.vec_f32(k * n));
+        let mut zr = vec![0.0f32; m * n];
+        let mut zi = vec![0.0f32; m * n];
+        cgemm_acc(&mut zr, &mut zi, &ur, &ui, &vr, &vi, m, k, n);
+        for i in 0..m {
+            for j in 0..n {
+                let mut wr = 0.0f64;
+                let mut wi = 0.0f64;
+                for kk in 0..k {
+                    let (ar, ai) = (ur[i * k + kk] as f64, ui[i * k + kk] as f64);
+                    let (br, bi) = (vr[kk * n + j] as f64, vi[kk * n + j] as f64);
+                    wr += ar * br - ai * bi;
+                    wi += ar * bi + ai * br;
+                }
+                assert!((zr[i * n + j] as f64 - wr).abs() < 1e-3);
+                assert!((zi[i * n + j] as f64 - wi).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn gauss_equals_cgemm() {
+        let (m, k, n) = (5, 4, 6);
+        let mut rng = Rng::new(78);
+        let (ur, ui) = (rng.vec_f32(m * k), rng.vec_f32(m * k));
+        let (vr, vi) = (rng.vec_f32(k * n), rng.vec_f32(k * n));
+        let us: Vec<f32> = ur.iter().zip(&ui).map(|(a, b)| a + b).collect();
+        let vd: Vec<f32> = vi.iter().zip(&vr).map(|(a, b)| a - b).collect();
+        let vs: Vec<f32> = vr.iter().zip(&vi).map(|(a, b)| a + b).collect();
+        let mut zr_c = vec![0.0f32; m * n];
+        let mut zi_c = vec![0.0f32; m * n];
+        cgemm_acc(&mut zr_c, &mut zi_c, &ur, &ui, &vr, &vi, m, k, n);
+        let mut zr_g = vec![0.0f32; m * n];
+        let mut zi_g = vec![0.0f32; m * n];
+        let mut scratch = GaussScratch::default();
+        gauss_gemm_acc(
+            &mut zr_g, &mut zi_g, &ur, &ui, &us, &vr, &vd, &vs, m, k, n, &mut scratch,
+        );
+        for i in 0..m * n {
+            assert!((zr_c[i] - zr_g[i]).abs() < 1e-3);
+            assert!((zi_c[i] - zi_g[i]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn gauss_accumulates_like_cgemm() {
+        // two successive accumulations must land on the same totals
+        let (m, k, n) = (2, 3, 2);
+        let mut rng = Rng::new(79);
+        let mut zr_c = vec![1.0f32; m * n];
+        let mut zi_c = vec![-1.0f32; m * n];
+        let mut zr_g = zr_c.clone();
+        let mut zi_g = zi_c.clone();
+        let mut scratch = GaussScratch::default();
+        for round in 0..2 {
+            let (ur, ui) = (rng.vec_f32(m * k), rng.vec_f32(m * k));
+            let (vr, vi) = (rng.vec_f32(k * n), rng.vec_f32(k * n));
+            let us: Vec<f32> = ur.iter().zip(&ui).map(|(a, b)| a + b).collect();
+            let vd: Vec<f32> = vi.iter().zip(&vr).map(|(a, b)| a - b).collect();
+            let vs: Vec<f32> = vr.iter().zip(&vi).map(|(a, b)| a + b).collect();
+            cgemm_acc(&mut zr_c, &mut zi_c, &ur, &ui, &vr, &vi, m, k, n);
+            gauss_gemm_acc(
+                &mut zr_g, &mut zi_g, &ur, &ui, &us, &vr, &vd, &vs, m, k, n, &mut scratch,
+            );
+            for i in 0..m * n {
+                assert!((zr_c[i] - zr_g[i]).abs() < 1e-3, "round {round}");
+                assert!((zi_c[i] - zi_g[i]).abs() < 1e-3, "round {round}");
+            }
+        }
+    }
+}

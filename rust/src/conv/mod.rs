@@ -1,0 +1,160 @@
+//! The native convolution engine: every algorithm the paper benchmarks,
+//! over the in-repo substrates (Winograd matrices, FFT plans, blocked
+//! GEMMs), sharing one tiling/transform/GEMM/inverse pipeline.
+
+pub mod batch_wino;
+pub mod direct;
+pub mod fft_conv;
+pub mod gemm;
+pub mod tensor;
+pub mod tiles;
+pub mod winograd;
+
+pub use fft_conv::FftVariant;
+pub use tensor::Tensor4;
+pub use tiles::TileGrid;
+
+/// A convolution layer problem: x (B,C,H,W) * w (K,C,r,r), valid, unit
+/// stride (the layers the paper benchmarks; strided layers like AlexNet-1
+/// are excluded there too).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvProblem {
+    pub batch: usize,
+    pub c_in: usize,
+    pub c_out: usize,
+    pub h: usize,
+    pub w: usize,
+    pub r: usize,
+}
+
+impl ConvProblem {
+    pub fn out_h(&self) -> usize {
+        self.h - self.r + 1
+    }
+
+    pub fn out_w(&self) -> usize {
+        self.w - self.r + 1
+    }
+
+    pub fn input_shape(&self) -> [usize; 4] {
+        [self.batch, self.c_in, self.h, self.w]
+    }
+
+    pub fn weight_shape(&self) -> [usize; 4] {
+        [self.c_out, self.c_in, self.r, self.r]
+    }
+
+    pub fn output_shape(&self) -> [usize; 4] {
+        [self.batch, self.c_out, self.out_h(), self.out_w()]
+    }
+
+    /// FLOPs of the direct algorithm (2 ops per MAC) — the paper's
+    /// baseline work measure.
+    pub fn direct_flops(&self) -> usize {
+        2 * self.batch * self.c_out * self.c_in * self.out_h() * self.out_w() * self.r * self.r
+    }
+}
+
+/// The algorithms under study (Fig. 1's five bars, minus the vendor
+/// libraries we substitute per DESIGN.md §3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConvAlgorithm {
+    /// Textbook direct convolution (correctness oracle).
+    Direct,
+    /// Direct convolution via im2col + GEMM (optimized-direct comparator).
+    Im2col,
+    /// Winograd F(m^2, r^2).
+    Winograd { m: usize },
+    /// Regular-FFT 𝔉(m^2, r^2).
+    RegularFft { m: usize },
+    /// Gauss-FFT 𝔊(m^2, r^2).
+    GaussFft { m: usize },
+}
+
+impl ConvAlgorithm {
+    pub fn name(&self) -> String {
+        match self {
+            ConvAlgorithm::Direct => "direct".into(),
+            ConvAlgorithm::Im2col => "im2col".into(),
+            ConvAlgorithm::Winograd { m } => format!("winograd(m={m})"),
+            ConvAlgorithm::RegularFft { m } => format!("regular_fft(m={m})"),
+            ConvAlgorithm::GaussFft { m } => format!("gauss_fft(m={m})"),
+        }
+    }
+
+    /// Tile size parameter, if the algorithm is tiled.
+    pub fn tile_m(&self) -> Option<usize> {
+        match self {
+            ConvAlgorithm::Winograd { m }
+            | ConvAlgorithm::RegularFft { m }
+            | ConvAlgorithm::GaussFft { m } => Some(*m),
+            _ => None,
+        }
+    }
+}
+
+/// Execute `algo` on the problem's tensors.
+pub fn run(algo: ConvAlgorithm, x: &Tensor4, w: &Tensor4) -> Tensor4 {
+    match algo {
+        ConvAlgorithm::Direct => direct::naive(x, w),
+        ConvAlgorithm::Im2col => direct::im2col(x, w),
+        ConvAlgorithm::Winograd { m } => winograd::run(x, w, m),
+        ConvAlgorithm::RegularFft { m } => fft_conv::run_regular(x, w, m),
+        ConvAlgorithm::GaussFft { m } => fft_conv::run_gauss(x, w, m),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn problem_shapes() {
+        let p = ConvProblem {
+            batch: 2,
+            c_in: 3,
+            c_out: 4,
+            h: 14,
+            w: 12,
+            r: 3,
+        };
+        assert_eq!(p.output_shape(), [2, 4, 12, 10]);
+        assert_eq!(p.direct_flops(), 2 * 2 * 4 * 3 * 12 * 10 * 9);
+    }
+
+    #[test]
+    fn dispatch_all_algorithms_agree() {
+        let p = ConvProblem {
+            batch: 1,
+            c_in: 3,
+            c_out: 2,
+            h: 12,
+            w: 12,
+            r: 3,
+        };
+        let x = Tensor4::random(p.input_shape(), 1);
+        let w = Tensor4::random(p.weight_shape(), 2);
+        let want = run(ConvAlgorithm::Direct, &x, &w);
+        for algo in [
+            ConvAlgorithm::Im2col,
+            ConvAlgorithm::Winograd { m: 4 },
+            ConvAlgorithm::RegularFft { m: 6 },
+            ConvAlgorithm::GaussFft { m: 6 },
+        ] {
+            let got = run(algo, &x, &w);
+            assert_eq!(got.shape, want.shape);
+            assert!(
+                got.max_abs_diff(&want) < 2e-3 * want.max_abs().max(1.0),
+                "{}",
+                algo.name()
+            );
+        }
+    }
+
+    #[test]
+    fn names_stable() {
+        assert_eq!(ConvAlgorithm::Winograd { m: 4 }.name(), "winograd(m=4)");
+        assert_eq!(ConvAlgorithm::RegularFft { m: 9 }.tile_m(), Some(9));
+        assert_eq!(ConvAlgorithm::Direct.tile_m(), None);
+    }
+}

@@ -1,0 +1,109 @@
+//! A minimal dense 4D tensor (NCHW / KCRS), the engine's data container.
+
+use crate::util::Rng;
+
+/// Row-major 4D f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor4 {
+    pub shape: [usize; 4],
+    pub data: Vec<f32>,
+}
+
+impl Tensor4 {
+    pub fn zeros(shape: [usize; 4]) -> Tensor4 {
+        Tensor4 {
+            shape,
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn random(shape: [usize; 4], seed: u64) -> Tensor4 {
+        let mut rng = Rng::new(seed);
+        Tensor4 {
+            shape,
+            data: rng.vec_f32(shape.iter().product()),
+        }
+    }
+
+    pub fn from_vec(shape: [usize; 4], data: Vec<f32>) -> Tensor4 {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        Tensor4 { shape, data }
+    }
+
+    #[inline]
+    pub fn idx(&self, a: usize, b: usize, c: usize, d: usize) -> usize {
+        debug_assert!(a < self.shape[0] && b < self.shape[1] && c < self.shape[2] && d < self.shape[3]);
+        ((a * self.shape[1] + b) * self.shape[2] + c) * self.shape[3] + d
+    }
+
+    #[inline]
+    pub fn at(&self, a: usize, b: usize, c: usize, d: usize) -> f32 {
+        self.data[self.idx(a, b, c, d)]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, a: usize, b: usize, c: usize, d: usize) -> &mut f32 {
+        let i = self.idx(a, b, c, d);
+        &mut self.data[i]
+    }
+
+    /// Contiguous (c, d) plane at (a, b).
+    pub fn plane(&self, a: usize, b: usize) -> &[f32] {
+        let start = self.idx(a, b, 0, 0);
+        &self.data[start..start + self.shape[2] * self.shape[3]]
+    }
+
+    pub fn plane_mut(&mut self, a: usize, b: usize) -> &mut [f32] {
+        let start = self.idx(a, b, 0, 0);
+        let len = self.shape[2] * self.shape[3];
+        &mut self.data[start..start + len]
+    }
+
+    /// Largest absolute difference to another tensor of identical shape.
+    pub fn max_abs_diff(&self, other: &Tensor4) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().map(|v| v.abs()).fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_row_major() {
+        let mut t = Tensor4::zeros([2, 3, 4, 5]);
+        *t.at_mut(1, 2, 3, 4) = 7.0;
+        assert_eq!(t.data[((1 * 3 + 2) * 4 + 3) * 5 + 4], 7.0);
+        assert_eq!(t.at(1, 2, 3, 4), 7.0);
+    }
+
+    #[test]
+    fn plane_is_contiguous_hw() {
+        let mut t = Tensor4::zeros([1, 2, 2, 2]);
+        *t.at_mut(0, 1, 0, 0) = 1.0;
+        *t.at_mut(0, 1, 1, 1) = 2.0;
+        assert_eq!(t.plane(0, 1), &[1.0, 0.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn diff_metrics() {
+        let a = Tensor4::from_vec([1, 1, 1, 2], vec![1.0, -3.0]);
+        let b = Tensor4::from_vec([1, 1, 1, 2], vec![1.5, -3.0]);
+        assert_eq!(a.max_abs_diff(&b), 0.5);
+        assert_eq!(a.max_abs(), 3.0);
+    }
+
+    #[test]
+    fn random_is_deterministic() {
+        assert_eq!(Tensor4::random([1, 2, 3, 4], 5), Tensor4::random([1, 2, 3, 4], 5));
+    }
+}

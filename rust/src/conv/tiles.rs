@@ -1,0 +1,199 @@
+//! Overlap-add tiling (§2.2): gather t x t input tiles with stride m and
+//! overlap r-1 (implicit zero-padding at the bottom/right edges), and
+//! scatter the m x m output tiles back.
+
+/// Tiling geometry for one (image, m, r) configuration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileGrid {
+    pub m: usize,
+    pub r: usize,
+    pub t: usize,
+    /// input spatial size
+    pub h: usize,
+    pub w: usize,
+    /// output spatial size (valid conv)
+    pub oh: usize,
+    pub ow: usize,
+    /// tiles along each axis
+    pub nh: usize,
+    pub nw: usize,
+}
+
+impl TileGrid {
+    pub fn new(h: usize, w: usize, m: usize, r: usize) -> TileGrid {
+        assert!(h >= r && w >= r, "image smaller than kernel");
+        let t = m + r - 1;
+        let oh = h - r + 1;
+        let ow = w - r + 1;
+        let nh = oh.div_ceil(m);
+        let nw = ow.div_ceil(m);
+        TileGrid {
+            m,
+            r,
+            t,
+            h,
+            w,
+            oh,
+            ow,
+            nh,
+            nw,
+        }
+    }
+
+    /// Tiles per image.
+    pub fn tiles(&self) -> usize {
+        self.nh * self.nw
+    }
+
+    /// Gather tile (ti, tj) of `plane` (h x w) into `out` (t x t),
+    /// zero-padding outside the image.
+    pub fn gather(&self, plane: &[f32], ti: usize, tj: usize, out: &mut [f32]) {
+        debug_assert_eq!(plane.len(), self.h * self.w);
+        debug_assert_eq!(out.len(), self.t * self.t);
+        let (i0, j0) = (ti * self.m, tj * self.m);
+        for u in 0..self.t {
+            let src_i = i0 + u;
+            let dst = &mut out[u * self.t..(u + 1) * self.t];
+            if src_i >= self.h {
+                dst.fill(0.0);
+                continue;
+            }
+            let row = &plane[src_i * self.w..(src_i + 1) * self.w];
+            let avail = self.w.saturating_sub(j0).min(self.t);
+            dst[..avail].copy_from_slice(&row[j0..j0 + avail]);
+            dst[avail..].fill(0.0);
+        }
+    }
+
+    /// Scatter an m x m output tile (ti, tj) into `plane` (oh x ow),
+    /// dropping the zero-pad remainder.
+    pub fn scatter(&self, tile: &[f32], ti: usize, tj: usize, plane: &mut [f32]) {
+        debug_assert_eq!(tile.len(), self.m * self.m);
+        debug_assert_eq!(plane.len(), self.oh * self.ow);
+        let (i0, j0) = (ti * self.m, tj * self.m);
+        for u in 0..self.m {
+            let dst_i = i0 + u;
+            if dst_i >= self.oh {
+                break;
+            }
+            let count = self.ow.saturating_sub(j0).min(self.m);
+            let dst = &mut plane[dst_i * self.ow + j0..dst_i * self.ow + j0 + count];
+            dst.copy_from_slice(&tile[u * self.m..u * self.m + count]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn geometry_exact_division() {
+        let g = TileGrid::new(14, 14, 4, 3); // oh = 12, 3 tiles of 4
+        assert_eq!((g.t, g.oh, g.nh), (6, 12, 3));
+    }
+
+    #[test]
+    fn geometry_with_remainder() {
+        let g = TileGrid::new(13, 13, 4, 3); // oh = 11 -> 3 tiles (4+4+3)
+        assert_eq!((g.nh, g.nw), (3, 3));
+    }
+
+    #[test]
+    fn gather_interior_tile() {
+        let g = TileGrid::new(8, 8, 2, 3); // t = 4
+        let plane: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        let mut tile = vec![0.0; 16];
+        g.gather(&plane, 1, 1, &mut tile);
+        // tile origin at (2, 2)
+        assert_eq!(tile[0], plane[2 * 8 + 2]);
+        assert_eq!(tile[15], plane[5 * 8 + 5]);
+    }
+
+    #[test]
+    fn gather_edge_tile_zero_pads() {
+        let g = TileGrid::new(7, 7, 4, 3); // oh=5, nh=2, second tile needs rows 4..10
+        let plane = vec![1.0f32; 49];
+        let mut tile = vec![9.0; 36];
+        g.gather(&plane, 1, 1, &mut tile);
+        // rows 0..3 have data cols 0..3, rest zero
+        assert_eq!(tile[0], 1.0);
+        assert_eq!(tile[5], 0.0); // col 4+5=9 >= 7 -> padded? row0 col5: j0=4,col idx 5 -> 9 > w
+        assert_eq!(tile[30], 0.0); // row 6 -> i=10 >= 7
+    }
+
+    #[test]
+    fn scatter_roundtrip_covers_output() {
+        let g = TileGrid::new(13, 11, 4, 3);
+        let mut rng = Rng::new(3);
+        // build per-tile data whose value encodes output coordinates
+        let mut plane = vec![-1.0f32; g.oh * g.ow];
+        for ti in 0..g.nh {
+            for tj in 0..g.nw {
+                let mut tile = vec![0.0f32; g.m * g.m];
+                for u in 0..g.m {
+                    for v in 0..g.m {
+                        let (i, j) = (ti * g.m + u, tj * g.m + v);
+                        tile[u * g.m + v] = if i < g.oh && j < g.ow {
+                            (i * g.ow + j) as f32
+                        } else {
+                            rng.next_f32_signed() // garbage that must be dropped
+                        };
+                    }
+                }
+                g.scatter(&tile, ti, tj, &mut plane);
+            }
+        }
+        for (i, v) in plane.iter().enumerate() {
+            assert_eq!(*v, i as f32);
+        }
+    }
+
+    #[test]
+    fn gather_then_direct_equals_whole_image() {
+        // correlating each gathered tile reproduces the tile of the output
+        let (h, w, m, r) = (10, 9, 3, 3);
+        let g = TileGrid::new(h, w, m, r);
+        let mut rng = Rng::new(8);
+        let plane = rng.vec_f32(h * w);
+        let kern = rng.vec_f32(r * r);
+        // full direct
+        let mut want = vec![0.0f32; g.oh * g.ow];
+        for i in 0..g.oh {
+            for j in 0..g.ow {
+                let mut s = 0.0;
+                for u in 0..r {
+                    for v in 0..r {
+                        s += plane[(i + u) * w + j + v] * kern[u * r + v];
+                    }
+                }
+                want[i * g.ow + j] = s;
+            }
+        }
+        // tile-wise direct
+        let mut got = vec![0.0f32; g.oh * g.ow];
+        let mut tile = vec![0.0f32; g.t * g.t];
+        let mut otile = vec![0.0f32; g.m * g.m];
+        for ti in 0..g.nh {
+            for tj in 0..g.nw {
+                g.gather(&plane, ti, tj, &mut tile);
+                for u in 0..m {
+                    for v in 0..m {
+                        let mut s = 0.0;
+                        for a in 0..r {
+                            for b in 0..r {
+                                s += tile[(u + a) * g.t + v + b] * kern[a * r + b];
+                            }
+                        }
+                        otile[u * m + v] = s;
+                    }
+                }
+                g.scatter(&otile, ti, tj, &mut got);
+            }
+        }
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,170 @@
+//! Dynamic batcher: group same-signature requests so the element-wise
+//! GEMMs see the tall `BN x C` operands the paper's analysis assumes
+//! (larger BN raises the stage's efficiency on every method).
+//!
+//! Policy: flush a signature group when it reaches `max_batch`, or when
+//! the oldest member has waited `max_wait` (latency bound), or on
+//! explicit `drain()`.
+
+use super::request::ConvRequest;
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+/// A group of requests sharing (layer, input shape), plus arrival times.
+#[derive(Debug)]
+pub struct Batch {
+    pub layer: String,
+    pub requests: Vec<(ConvRequest, Instant)>,
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+}
+
+/// Accumulates requests into batches.
+pub struct Batcher {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pending: HashMap<(String, [usize; 4]), Vec<(ConvRequest, Instant)>>,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, max_wait: Duration) -> Batcher {
+        assert!(max_batch >= 1);
+        Batcher {
+            max_batch,
+            max_wait,
+            pending: HashMap::new(),
+        }
+    }
+
+    /// Add a request; returns a full batch if this arrival filled one.
+    pub fn push(&mut self, req: ConvRequest) -> Option<Batch> {
+        let key = req.signature();
+        let now = Instant::now();
+        let group = self.pending.entry(key.clone()).or_default();
+        group.push((req, now));
+        if group.len() >= self.max_batch {
+            let requests = self.pending.remove(&key).unwrap();
+            Some(Batch {
+                layer: key.0,
+                requests,
+            })
+        } else {
+            None
+        }
+    }
+
+    /// Collect groups whose oldest member exceeded `max_wait`.
+    pub fn poll_expired(&mut self) -> Vec<Batch> {
+        let now = Instant::now();
+        let expired: Vec<(String, [usize; 4])> = self
+            .pending
+            .iter()
+            .filter(|(_, reqs)| {
+                reqs.first()
+                    .is_some_and(|(_, t)| now.duration_since(*t) >= self.max_wait)
+            })
+            .map(|(k, _)| k.clone())
+            .collect();
+        expired
+            .into_iter()
+            .map(|key| {
+                let requests = self.pending.remove(&key).unwrap();
+                Batch {
+                    layer: key.0,
+                    requests,
+                }
+            })
+            .collect()
+    }
+
+    /// Flush everything (shutdown / synchronous mode).
+    pub fn drain(&mut self) -> Vec<Batch> {
+        let keys: Vec<_> = self.pending.keys().cloned().collect();
+        keys.into_iter()
+            .map(|key| {
+                let requests = self.pending.remove(&key).unwrap();
+                Batch {
+                    layer: key.0,
+                    requests,
+                }
+            })
+            .collect()
+    }
+
+    pub fn pending_count(&self) -> usize {
+        self.pending.values().map(|v| v.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::Tensor4;
+
+    fn req(id: u64, layer: &str) -> ConvRequest {
+        ConvRequest::new(id, layer, Tensor4::zeros([1, 2, 8, 8]))
+    }
+
+    #[test]
+    fn flushes_at_max_batch() {
+        let mut b = Batcher::new(3, Duration::from_secs(60));
+        assert!(b.push(req(1, "l")).is_none());
+        assert!(b.push(req(2, "l")).is_none());
+        let batch = b.push(req(3, "l")).expect("third request fills batch");
+        assert_eq!(batch.len(), 3);
+        assert_eq!(b.pending_count(), 0);
+    }
+
+    #[test]
+    fn different_layers_batch_separately() {
+        let mut b = Batcher::new(2, Duration::from_secs(60));
+        assert!(b.push(req(1, "a")).is_none());
+        assert!(b.push(req(2, "b")).is_none());
+        assert_eq!(b.pending_count(), 2);
+        let batch = b.push(req(3, "a")).unwrap();
+        assert_eq!(batch.layer, "a");
+        assert_eq!(batch.len(), 2);
+    }
+
+    #[test]
+    fn poll_expired_respects_deadline() {
+        let mut b = Batcher::new(100, Duration::from_millis(5));
+        b.push(req(1, "l"));
+        assert!(b.poll_expired().is_empty());
+        std::thread::sleep(Duration::from_millis(10));
+        let batches = b.poll_expired();
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].len(), 1);
+    }
+
+    #[test]
+    fn drain_flushes_all_groups() {
+        let mut b = Batcher::new(100, Duration::from_secs(60));
+        b.push(req(1, "a"));
+        b.push(req(2, "b"));
+        b.push(req(3, "b"));
+        let mut batches = b.drain();
+        batches.sort_by(|x, y| x.layer.cmp(&y.layer));
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[1].len(), 2);
+        assert_eq!(b.pending_count(), 0);
+    }
+
+    #[test]
+    fn preserves_arrival_order_within_batch() {
+        let mut b = Batcher::new(3, Duration::from_secs(60));
+        b.push(req(7, "l"));
+        b.push(req(8, "l"));
+        let batch = b.push(req(9, "l")).unwrap();
+        let ids: Vec<u64> = batch.requests.iter().map(|(r, _)| r.id).collect();
+        assert_eq!(ids, [7, 8, 9]);
+    }
+}

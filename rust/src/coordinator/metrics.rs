@@ -1,0 +1,132 @@
+//! Service metrics: counters and latency quantiles over a sliding window.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// Thread-safe service metrics.
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+struct Inner {
+    requests: u64,
+    batches: u64,
+    batched_images: u64,
+    latencies: VecDeque<f64>,
+    window: usize,
+}
+
+/// A point-in-time snapshot.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Snapshot {
+    pub requests: u64,
+    pub batches: u64,
+    /// mean images per executed batch
+    pub mean_batch: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub max_ms: f64,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics::new(4096)
+    }
+}
+
+impl Metrics {
+    pub fn new(window: usize) -> Metrics {
+        Metrics {
+            inner: Mutex::new(Inner {
+                requests: 0,
+                batches: 0,
+                batched_images: 0,
+                latencies: VecDeque::with_capacity(window),
+                window: window.max(1),
+            }),
+        }
+    }
+
+    /// Record one executed batch and its members' latencies (seconds).
+    pub fn record_batch(&self, batch_size: usize, latencies: &[f64]) {
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        g.batched_images += batch_size as u64;
+        g.requests += latencies.len() as u64;
+        for &l in latencies {
+            if g.latencies.len() == g.window {
+                g.latencies.pop_front();
+            }
+            g.latencies.push_back(l);
+        }
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let g = self.inner.lock().unwrap();
+        let mut ls: Vec<f64> = g.latencies.iter().copied().collect();
+        ls.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |p: f64| -> f64 {
+            if ls.is_empty() {
+                0.0
+            } else {
+                ls[((ls.len() - 1) as f64 * p).round() as usize] * 1e3
+            }
+        };
+        Snapshot {
+            requests: g.requests,
+            batches: g.batches,
+            mean_batch: if g.batches == 0 {
+                0.0
+            } else {
+                g.batched_images as f64 / g.batches as f64
+            },
+            p50_ms: q(0.50),
+            p95_ms: q(0.95),
+            max_ms: ls.last().copied().unwrap_or(0.0) * 1e3,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_snapshot_is_zero() {
+        let m = Metrics::default();
+        let s = m.snapshot();
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.p50_ms, 0.0);
+    }
+
+    #[test]
+    fn quantiles_ordered() {
+        let m = Metrics::default();
+        let lat: Vec<f64> = (1..=100).map(|i| i as f64 / 1000.0).collect();
+        m.record_batch(100, &lat);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 100);
+        assert!(s.p50_ms <= s.p95_ms && s.p95_ms <= s.max_ms);
+        assert!((s.p50_ms - 50.0).abs() < 2.0);
+        assert!((s.max_ms - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn window_bounds_memory() {
+        let m = Metrics::new(10);
+        for _ in 0..100 {
+            m.record_batch(1, &[0.001]);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.requests, 100); // counter keeps counting
+        assert!((s.p50_ms - 1.0).abs() < 1e-9); // window holds last 10
+    }
+
+    #[test]
+    fn mean_batch_size() {
+        let m = Metrics::default();
+        m.record_batch(4, &[0.1; 4]);
+        m.record_batch(2, &[0.1; 2]);
+        assert!((m.snapshot().mean_batch - 3.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,26 @@
+//! Layer-3 coordinator: conv-request routing, batching, model-driven
+//! algorithm selection, and the paper's static fork-join scheduling (§3),
+//! over the native engine and/or the PJRT runtime.
+//!
+//! Dataflow:
+//!
+//! ```text
+//! ConvRequest --> Batcher --(same-shape batches)--> ConvService
+//!                                 |                     |
+//!                                 v                     v
+//!                        StaticScheduler  --->  conv engine shards
+//!                                 |                     |
+//!                                 +---- Metrics <-------+
+//! ```
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod scheduler;
+pub mod service;
+
+pub use batcher::Batcher;
+pub use metrics::Metrics;
+pub use request::{ConvRequest, ConvResponse};
+pub use scheduler::StaticScheduler;
+pub use service::ConvService;

@@ -1,0 +1,90 @@
+//! Request/response types for the convolution service.
+
+use crate::conv::{ConvProblem, Tensor4};
+
+/// A single-image convolution request against a registered layer.
+#[derive(Clone, Debug)]
+pub struct ConvRequest {
+    pub id: u64,
+    /// registered layer name (selects weights + algorithm)
+    pub layer: String,
+    /// (1, C, H, W) activation
+    pub input: Tensor4,
+}
+
+impl ConvRequest {
+    pub fn new(id: u64, layer: &str, input: Tensor4) -> ConvRequest {
+        assert_eq!(input.shape[0], 1, "requests carry single images");
+        ConvRequest {
+            id,
+            layer: layer.to_string(),
+            input,
+        }
+    }
+
+    /// The problem signature used for batching compatibility.
+    pub fn signature(&self) -> (String, [usize; 4]) {
+        (self.layer.clone(), self.input.shape)
+    }
+}
+
+/// The service's answer to one request.
+#[derive(Clone, Debug)]
+pub struct ConvResponse {
+    pub id: u64,
+    pub output: Tensor4,
+    /// end-to-end seconds (enqueue to completion)
+    pub latency: f64,
+    /// how many requests shared the executed batch
+    pub batch_size: usize,
+}
+
+/// Check that a request matches a registered problem.
+pub fn validate(req: &ConvRequest, problem: &ConvProblem) -> Result<(), String> {
+    let want = [1, problem.c_in, problem.h, problem.w];
+    if req.input.shape != want {
+        return Err(format!(
+            "request {} for layer '{}': input shape {:?} != expected {:?}",
+            req.id, req.layer, req.input.shape, want
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn signature_distinguishes_layers_and_shapes() {
+        let a = ConvRequest::new(1, "l1", Tensor4::zeros([1, 2, 8, 8]));
+        let b = ConvRequest::new(2, "l1", Tensor4::zeros([1, 2, 8, 8]));
+        let c = ConvRequest::new(3, "l2", Tensor4::zeros([1, 2, 8, 8]));
+        let d = ConvRequest::new(4, "l1", Tensor4::zeros([1, 2, 9, 8]));
+        assert_eq!(a.signature(), b.signature());
+        assert_ne!(a.signature(), c.signature());
+        assert_ne!(a.signature(), d.signature());
+    }
+
+    #[test]
+    #[should_panic(expected = "single images")]
+    fn rejects_batched_input() {
+        ConvRequest::new(1, "l", Tensor4::zeros([2, 2, 8, 8]));
+    }
+
+    #[test]
+    fn validate_checks_shape() {
+        let p = ConvProblem {
+            batch: 8,
+            c_in: 2,
+            c_out: 4,
+            h: 8,
+            w: 8,
+            r: 3,
+        };
+        let ok = ConvRequest::new(1, "l", Tensor4::zeros([1, 2, 8, 8]));
+        let bad = ConvRequest::new(2, "l", Tensor4::zeros([1, 3, 8, 8]));
+        assert!(validate(&ok, &p).is_ok());
+        assert!(validate(&bad, &p).is_err());
+    }
+}

@@ -1,0 +1,130 @@
+//! Static scheduling (paper §3, after Zlateski & Seung [38]): each stage
+//! is executed as a single fork-join in which every core receives a
+//! statically precomputed, equal-FLOP share of the work.
+//!
+//! The shardable unit here is the batch image: every image of a batch
+//! costs identical FLOPs for a fixed layer, so the equal-FLOP partition
+//! is the balanced contiguous range split of `even_ranges`.  (Intra-image
+//! sharding over tile rows uses `weighted_ranges` when batches are
+//! smaller than the worker count.)
+
+use crate::conv::{run, ConvAlgorithm, Tensor4};
+use crate::util::threadpool::{even_ranges, weighted_ranges, ThreadPool};
+use std::sync::Mutex;
+
+/// A static fork-join scheduler over a worker pool.
+pub struct StaticScheduler {
+    pool: ThreadPool,
+}
+
+impl StaticScheduler {
+    pub fn new(workers: usize) -> StaticScheduler {
+        StaticScheduler {
+            pool: ThreadPool::new(workers),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.pool.workers()
+    }
+
+    /// Run `algo` over a stacked batch (B, C, H, W), statically sharding
+    /// the batch dimension across workers; returns the stacked output.
+    pub fn run_batch(&self, algo: ConvAlgorithm, x: &Tensor4, w: &Tensor4) -> Tensor4 {
+        let [b, c, h, wd] = x.shape;
+        let shards = even_ranges(b, self.workers());
+        // Pre-size the output from a zero-cost shape computation.
+        let r = w.shape[2];
+        let (oh, ow) = (h - r + 1, wd - r + 1);
+        let out = Mutex::new(Tensor4::zeros([b, w.shape[0], oh, ow]));
+
+        self.pool.run_static(|wi| {
+            let range = shards[wi].clone();
+            if range.is_empty() {
+                return;
+            }
+            // slice the sub-batch (contiguous in NCHW)
+            let per = c * h * wd;
+            let sub = Tensor4::from_vec(
+                [range.len(), c, h, wd],
+                x.data[range.start * per..range.end * per].to_vec(),
+            );
+            let sub_out = run(algo, &sub, w);
+            let oper = w.shape[0] * oh * ow;
+            let mut guard = out.lock().unwrap();
+            guard.data[range.start * oper..range.end * oper].copy_from_slice(&sub_out.data);
+        });
+        out.into_inner().unwrap()
+    }
+
+    /// Equal-FLOP shard weights for a tile grid with remainder tiles:
+    /// full tiles cost m^2 output pixels, edge tiles cost their remainder
+    /// (the scheduler's input when sharding intra-image).
+    pub fn tile_row_weights(oh: usize, m: usize) -> Vec<f64> {
+        let nh = oh.div_ceil(m);
+        (0..nh)
+            .map(|i| {
+                let rows = m.min(oh - i * m);
+                rows as f64
+            })
+            .collect()
+    }
+
+    /// Shard tile rows by weight across workers.
+    pub fn shard_tile_rows(&self, oh: usize, m: usize) -> Vec<std::ops::Range<usize>> {
+        weighted_ranges(&Self::tile_row_weights(oh, m), self.workers())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::direct;
+
+    #[test]
+    fn sharded_batch_equals_sequential() {
+        let x = Tensor4::random([5, 3, 10, 10], 31);
+        let w = Tensor4::random([4, 3, 3, 3], 32);
+        let want = direct::naive(&x, &w);
+        for workers in [1usize, 2, 3, 8] {
+            let s = StaticScheduler::new(workers);
+            for algo in [
+                ConvAlgorithm::Direct,
+                ConvAlgorithm::Winograd { m: 4 },
+                ConvAlgorithm::RegularFft { m: 4 },
+            ] {
+                let got = s.run_batch(algo, &x, &w);
+                assert!(
+                    got.max_abs_diff(&want) < 2e-3 * want.max_abs().max(1.0),
+                    "workers={workers} algo={}",
+                    algo.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn more_workers_than_batch() {
+        let x = Tensor4::random([2, 2, 8, 8], 33);
+        let w = Tensor4::random([2, 2, 3, 3], 34);
+        let s = StaticScheduler::new(6);
+        let got = s.run_batch(ConvAlgorithm::Winograd { m: 2 }, &x, &w);
+        let want = direct::naive(&x, &w);
+        assert!(got.max_abs_diff(&want) < 1e-3 * want.max_abs().max(1.0));
+    }
+
+    #[test]
+    fn tile_row_weights_account_for_remainder() {
+        let w = StaticScheduler::tile_row_weights(11, 4); // rows 4,4,3
+        assert_eq!(w, vec![4.0, 4.0, 3.0]);
+    }
+
+    #[test]
+    fn shard_tile_rows_covers_all() {
+        let s = StaticScheduler::new(3);
+        let shards = s.shard_tile_rows(26, 4); // 7 tile rows
+        let covered: usize = shards.iter().map(|r| r.len()).sum();
+        assert_eq!(covered, 7);
+        assert_eq!(shards.len(), 3);
+    }
+}

@@ -1,0 +1,264 @@
+//! The convolution service: registered layers (weights + chosen
+//! algorithm), request intake with batching, static-scheduled execution,
+//! and metrics — the L3 composition of everything below it.
+
+use super::batcher::{Batch, Batcher};
+use super::metrics::Metrics;
+use super::request::{validate, ConvRequest, ConvResponse};
+use super::scheduler::StaticScheduler;
+use crate::conv::{ConvAlgorithm, ConvProblem, Tensor4};
+use crate::model::machine::Machine;
+use crate::model::select::select;
+use crate::model::stages::{LayerShape, Method};
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+/// A registered layer: problem, weights, and the algorithm in force.
+pub struct LayerEntry {
+    pub problem: ConvProblem,
+    pub weights: Tensor4,
+    pub algo: ConvAlgorithm,
+}
+
+/// The service.  Synchronous API: `submit` enqueues, `flush`/`tick`
+/// execute ready batches and return responses.
+pub struct ConvService {
+    layers: HashMap<String, LayerEntry>,
+    batcher: Batcher,
+    scheduler: StaticScheduler,
+    pub metrics: Metrics,
+    machine: Machine,
+}
+
+impl ConvService {
+    pub fn new(machine: Machine, workers: usize, max_batch: usize, max_wait: Duration) -> Self {
+        ConvService {
+            layers: HashMap::new(),
+            batcher: Batcher::new(max_batch, max_wait),
+            scheduler: StaticScheduler::new(workers),
+            metrics: Metrics::default(),
+            machine,
+        }
+    }
+
+    /// Register a layer with an explicit algorithm choice.
+    pub fn register_with_algo(
+        &mut self,
+        name: &str,
+        problem: ConvProblem,
+        weights: Tensor4,
+        algo: ConvAlgorithm,
+    ) {
+        assert_eq!(weights.shape, problem.weight_shape(), "weight shape");
+        self.layers.insert(
+            name.to_string(),
+            LayerEntry {
+                problem,
+                weights,
+                algo,
+            },
+        );
+    }
+
+    /// Register a layer, letting the Roofline model pick (method, tile).
+    pub fn register(&mut self, name: &str, problem: ConvProblem, weights: Tensor4) {
+        let shape = LayerShape {
+            b: problem.batch.max(1),
+            c: problem.c_in,
+            k: problem.c_out,
+            x: problem.h.max(problem.w),
+            r: problem.r,
+        };
+        let choice = select(&shape, &self.machine);
+        let algo = match choice.method {
+            Method::Winograd => ConvAlgorithm::Winograd { m: choice.m },
+            Method::RegularFft => ConvAlgorithm::RegularFft { m: choice.m },
+            Method::GaussFft => ConvAlgorithm::GaussFft { m: choice.m },
+        };
+        self.register_with_algo(name, problem, weights, algo);
+    }
+
+    pub fn layer(&self, name: &str) -> Option<&LayerEntry> {
+        self.layers.get(name)
+    }
+
+    /// Enqueue a request; executes immediately if it fills a batch.
+    pub fn submit(&mut self, req: ConvRequest) -> Result<Vec<ConvResponse>, String> {
+        let entry = self
+            .layers
+            .get(&req.layer)
+            .ok_or_else(|| format!("unknown layer '{}'", req.layer))?;
+        validate(&req, &entry.problem)?;
+        match self.batcher.push(req) {
+            Some(batch) => Ok(self.execute_batch(batch)),
+            None => Ok(Vec::new()),
+        }
+    }
+
+    /// Execute any batches whose latency deadline expired.
+    pub fn tick(&mut self) -> Vec<ConvResponse> {
+        let batches = self.batcher.poll_expired();
+        batches
+            .into_iter()
+            .flat_map(|b| self.execute_batch(b))
+            .collect()
+    }
+
+    /// Execute everything still pending.
+    pub fn flush(&mut self) -> Vec<ConvResponse> {
+        let batches = self.batcher.drain();
+        batches
+            .into_iter()
+            .flat_map(|b| self.execute_batch(b))
+            .collect()
+    }
+
+    fn execute_batch(&mut self, batch: Batch) -> Vec<ConvResponse> {
+        let entry = self.layers.get(&batch.layer).expect("validated at submit");
+        let n = batch.len();
+        let [_, c, h, w] = batch.requests[0].0.input.shape;
+        // stack inputs into one (N, C, H, W) tensor
+        let mut stacked = Tensor4::zeros([n, c, h, w]);
+        let per = c * h * w;
+        for (i, (req, _)) in batch.requests.iter().enumerate() {
+            stacked.data[i * per..(i + 1) * per].copy_from_slice(&req.input.data);
+        }
+        let out = self
+            .scheduler
+            .run_batch(entry.algo, &stacked, &entry.weights);
+        let done = Instant::now();
+        let [_, k, oh, ow] = out.shape;
+        let oper = k * oh * ow;
+        let mut latencies = Vec::with_capacity(n);
+        let responses: Vec<ConvResponse> = batch
+            .requests
+            .iter()
+            .enumerate()
+            .map(|(i, (req, t0))| {
+                let latency = done.duration_since(*t0).as_secs_f64();
+                latencies.push(latency);
+                ConvResponse {
+                    id: req.id,
+                    output: Tensor4::from_vec(
+                        [1, k, oh, ow],
+                        out.data[i * oper..(i + 1) * oper].to_vec(),
+                    ),
+                    latency,
+                    batch_size: n,
+                }
+            })
+            .collect();
+        self.metrics.record_batch(n, &latencies);
+        responses
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::direct;
+    use crate::model::machine::xeon_gold;
+
+    fn service(max_batch: usize) -> ConvService {
+        ConvService::new(xeon_gold(), 2, max_batch, Duration::from_millis(1))
+    }
+
+    fn problem() -> ConvProblem {
+        ConvProblem {
+            batch: 4,
+            c_in: 3,
+            c_out: 4,
+            h: 12,
+            w: 12,
+            r: 3,
+        }
+    }
+
+    #[test]
+    fn end_to_end_batched_correctness() {
+        let mut svc = service(3);
+        let w = Tensor4::random(problem().weight_shape(), 50);
+        svc.register("conv1", problem(), w.clone());
+
+        let inputs: Vec<Tensor4> = (0..3)
+            .map(|i| Tensor4::random([1, 3, 12, 12], 60 + i))
+            .collect();
+        let mut responses = Vec::new();
+        for (i, x) in inputs.iter().enumerate() {
+            responses.extend(
+                svc.submit(ConvRequest::new(i as u64, "conv1", x.clone()))
+                    .unwrap(),
+            );
+        }
+        assert_eq!(responses.len(), 3, "batch of 3 flushes on third submit");
+        for (i, resp) in responses.iter().enumerate() {
+            assert_eq!(resp.batch_size, 3);
+            let want = direct::naive(&inputs[resp.id as usize], &w);
+            assert!(
+                resp.output.max_abs_diff(&want) < 2e-3 * want.max_abs().max(1.0),
+                "request {i}"
+            );
+        }
+        let snap = svc.metrics.snapshot();
+        assert_eq!(snap.requests, 3);
+        assert_eq!(snap.batches, 1);
+    }
+
+    #[test]
+    fn flush_executes_partial_batches() {
+        let mut svc = service(100);
+        svc.register(
+            "conv1",
+            problem(),
+            Tensor4::random(problem().weight_shape(), 51),
+        );
+        svc.submit(ConvRequest::new(1, "conv1", Tensor4::random([1, 3, 12, 12], 70)))
+            .unwrap();
+        let rs = svc.flush();
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].batch_size, 1);
+    }
+
+    #[test]
+    fn tick_honors_deadline() {
+        let mut svc = service(100);
+        svc.register(
+            "conv1",
+            problem(),
+            Tensor4::random(problem().weight_shape(), 52),
+        );
+        svc.submit(ConvRequest::new(1, "conv1", Tensor4::random([1, 3, 12, 12], 71)))
+            .unwrap();
+        std::thread::sleep(Duration::from_millis(3));
+        let rs = svc.tick();
+        assert_eq!(rs.len(), 1);
+    }
+
+    #[test]
+    fn rejects_unknown_layer_and_bad_shape() {
+        let mut svc = service(4);
+        svc.register(
+            "conv1",
+            problem(),
+            Tensor4::random(problem().weight_shape(), 53),
+        );
+        assert!(svc
+            .submit(ConvRequest::new(1, "nope", Tensor4::zeros([1, 3, 12, 12])))
+            .is_err());
+        assert!(svc
+            .submit(ConvRequest::new(2, "conv1", Tensor4::zeros([1, 2, 12, 12])))
+            .is_err());
+    }
+
+    #[test]
+    fn register_picks_model_choice() {
+        let mut svc = service(4);
+        svc.register(
+            "conv1",
+            problem(),
+            Tensor4::random(problem().weight_shape(), 54),
+        );
+        let algo = svc.layer("conv1").unwrap().algo;
+        assert!(algo.tile_m().is_some(), "model should pick a tiled method");
+    }
+}

@@ -1,0 +1,344 @@
+//! Batched tile transforms as small GEMMs — the engine's transform
+//! codelets.
+//!
+//! The recursive FFT plans (`plan.rs`) are the *cost model* (genfft
+//! substitute, feeding Tables 5-8); at the tile sizes the paper sweeps
+//! (t <= 37) a DFT-by-matrix-multiply over a *batch* of tiles runs far
+//! faster on wide-SIMD CPUs than pointer-chasing butterflies — the same
+//! reasoning that maps the transforms onto the MXU in the Pallas kernels
+//! (DESIGN.md §Hardware-Adaptation).  Storage matches the Python L1
+//! kernels: half spectrum along axis 0, i.e. (th, t) per tile.
+//!
+//! Math (mirrors python/compile/kernels/fft.py, validated there and
+//! cross-validated against `TileFft` here):
+//!
+//! forward (real s x s tile, implicit zero-pad to t x t):
+//!   rows:  Y = D_h x      (half spectrum, th x s kept as s x th^T)
+//!   cols:  Z = Y D_t^T    (full complex axis)
+//! inverse (pruned to the last m x m):
+//!   cols:  Y = Z B_c^T    (B_c: m x t inverse rows, positions r-1..t-1)
+//!   rows:  y = Re(W_c Y) via half-spectrum weights w_k
+
+use super::rfft::half_len;
+use crate::conv::gemm::{gemm_acc, gemm_sub};
+
+/// Precomputed DFT matrices + scratch for one (m, r) configuration.
+#[derive(Clone, Debug)]
+pub struct BatchDft {
+    pub t: usize,
+    pub th: usize,
+    pub m: usize,
+    pub r: usize,
+    /// forward row pass: (t, th) = D_h^T, split cos/sin (input rows j, spectral k)
+    cht: Vec<f32>,
+    sht: Vec<f32>,
+    /// forward col pass: (t, t) = D_t^T
+    ctt: Vec<f32>,
+    stt: Vec<f32>,
+    /// inverse col pass: (t, m) = B_c^T
+    bct: Vec<f32>,
+    bst: Vec<f32>,
+    /// inverse row pass: (th, m) = W_c^T (half-spectrum weights folded in)
+    cwt: Vec<f32>,
+    swt: Vec<f32>,
+    // scratch (grown on demand)
+    yr: Vec<f32>,
+    yi: Vec<f32>,
+    tr: Vec<f32>,
+    ti: Vec<f32>,
+}
+
+impl BatchDft {
+    pub fn new(m: usize, r: usize) -> BatchDft {
+        let t = m + r - 1;
+        let th = half_len(t);
+        let tau = 2.0 * std::f64::consts::PI;
+
+        // D_h^T[j][k] = e^{-2 pi i j k / t}, j in 0..t (input), k in 0..th
+        let mut cht = vec![0.0f32; t * th];
+        let mut sht = vec![0.0f32; t * th];
+        for j in 0..t {
+            for k in 0..th {
+                let ang = -tau * (j * k) as f64 / t as f64;
+                cht[j * th + k] = ang.cos() as f32;
+                sht[j * th + k] = ang.sin() as f32;
+            }
+        }
+        // D_t^T[j][k] = e^{-2 pi i j k / t}, full t x t
+        let mut ctt = vec![0.0f32; t * t];
+        let mut stt = vec![0.0f32; t * t];
+        for j in 0..t {
+            for k in 0..t {
+                let ang = -tau * (j * k) as f64 / t as f64;
+                ctt[j * t + k] = ang.cos() as f32;
+                stt[j * t + k] = ang.sin() as f32;
+            }
+        }
+        // B_c^T[k][i] = e^{+2 pi i k (r-1+i) / t} / t   (k in 0..t, i in 0..m)
+        let mut bct = vec![0.0f32; t * m];
+        let mut bst = vec![0.0f32; t * m];
+        for k in 0..t {
+            for i in 0..m {
+                let n = (r - 1 + i) as f64;
+                let ang = tau * k as f64 * n / t as f64;
+                bct[k * m + i] = (ang.cos() / t as f64) as f32;
+                bst[k * m + i] = (ang.sin() / t as f64) as f32;
+            }
+        }
+        // W_c^T[k][i] = w_k cos/sin(2 pi k (r-1+i) / t) / t, k in 0..th
+        let mut cwt = vec![0.0f32; th * m];
+        let mut swt = vec![0.0f32; th * m];
+        for k in 0..th {
+            let w = if k == 0 || (t % 2 == 0 && k == th - 1) {
+                1.0
+            } else {
+                2.0
+            };
+            for i in 0..m {
+                let n = (r - 1 + i) as f64;
+                let ang = tau * k as f64 * n / t as f64;
+                cwt[k * m + i] = (w * ang.cos() / t as f64) as f32;
+                swt[k * m + i] = (w * ang.sin() / t as f64) as f32;
+            }
+        }
+        BatchDft {
+            t,
+            th,
+            m,
+            r,
+            cht,
+            sht,
+            ctt,
+            stt,
+            bct,
+            bst,
+            cwt,
+            swt,
+            yr: Vec::new(),
+            yi: Vec::new(),
+            tr: Vec::new(),
+            ti: Vec::new(),
+        }
+    }
+
+    fn scratch(&mut self, n: usize) {
+        for buf in [&mut self.yr, &mut self.yi, &mut self.tr, &mut self.ti] {
+            if buf.len() < n {
+                buf.resize(n, 0.0);
+            }
+        }
+    }
+
+    /// Forward transform of `nb` real s x s tiles (s == t for images,
+    /// s == r for implicitly zero-padded kernels).
+    ///
+    /// `x`: (nb, s, s) row-major; outputs: (nb, th, t) planes.
+    pub fn forward(&mut self, x: &[f32], nb: usize, s: usize, out_re: &mut [f32], out_im: &mut [f32]) {
+        let (t, th) = (self.t, self.th);
+        debug_assert_eq!(x.len(), nb * s * s);
+        debug_assert_eq!(out_re.len(), nb * th * t);
+        debug_assert!(s <= t);
+        self.scratch(nb * s.max(th) * th.max(t));
+        let mut yr_buf = std::mem::take(&mut self.yr);
+        let mut yi_buf = std::mem::take(&mut self.yi);
+        let mut tr_buf = std::mem::take(&mut self.tr);
+        let mut ti_buf = std::mem::take(&mut self.ti);
+
+        // rows: Y = x @ D_h^T  — only the first s spectral-input rows of
+        // cht matter (rows s..t would multiply zeros)
+        // A: (nb*s, s); B: cht rows 0..s -> (s, th)
+        let yr = &mut yr_buf[..nb * s * th];
+        let yi = &mut yi_buf[..nb * s * th];
+        yr.fill(0.0);
+        yi.fill(0.0);
+        gemm_acc(yr, x, &self.cht[..s * th], nb * s, s, th);
+        gemm_acc(yi, x, &self.sht[..s * th], nb * s, s, th);
+
+        // transpose each tile (s, th) -> (th, s)
+        let tr = &mut tr_buf[..nb * th * s];
+        let ti = &mut ti_buf[..nb * th * s];
+        for b in 0..nb {
+            for i in 0..s {
+                for k in 0..th {
+                    tr[(b * th + k) * s + i] = yr[(b * s + i) * th + k];
+                    ti[(b * th + k) * s + i] = yi[(b * s + i) * th + k];
+                }
+            }
+        }
+
+        // cols: Z = Y @ D_t^T over the original axis-0 (length s nonzero)
+        // A: (nb*th, s); B: ctt rows 0..s -> (s, t)
+        out_re.fill(0.0);
+        out_im.fill(0.0);
+        let ct = &self.ctt[..s * t];
+        let st = &self.stt[..s * t];
+        gemm_acc(out_re, tr, ct, nb * th, s, t);
+        gemm_sub(out_re, ti, st, nb * th, s, t);
+        gemm_acc(out_im, tr, st, nb * th, s, t);
+        gemm_acc(out_im, ti, ct, nb * th, s, t);
+
+        self.yr = yr_buf;
+        self.yi = yi_buf;
+        self.tr = tr_buf;
+        self.ti = ti_buf;
+    }
+
+    /// Pruned inverse of `nb` half-spectrum tiles: (nb, th, t) -> (nb, m, m).
+    pub fn inverse_valid(&mut self, z_re: &[f32], z_im: &[f32], nb: usize, out: &mut [f32]) {
+        let (t, th, m) = (self.t, self.th, self.m);
+        debug_assert_eq!(z_re.len(), nb * th * t);
+        debug_assert_eq!(out.len(), nb * m * m);
+        self.scratch(nb * th.max(m) * m.max(th));
+        let mut yr_buf = std::mem::take(&mut self.yr);
+        let mut yi_buf = std::mem::take(&mut self.yi);
+        let mut tr_buf = std::mem::take(&mut self.tr);
+        let mut ti_buf = std::mem::take(&mut self.ti);
+
+        // cols (axis 1, full complex, pruned): Y = Z @ B_c^T
+        // A: (nb*th, t); B: (t, m)
+        let yr = &mut yr_buf[..nb * th * m];
+        let yi = &mut yi_buf[..nb * th * m];
+        yr.fill(0.0);
+        yi.fill(0.0);
+        gemm_acc(yr, z_re, &self.bct, nb * th, t, m);
+        gemm_sub(yr, z_im, &self.bst, nb * th, t, m);
+        gemm_acc(yi, z_re, &self.bst, nb * th, t, m);
+        gemm_acc(yi, z_im, &self.bct, nb * th, t, m);
+
+        // transpose each tile (th, m) -> (m, th)
+        let tr = &mut tr_buf[..nb * m * th];
+        let ti = &mut ti_buf[..nb * m * th];
+        for b in 0..nb {
+            for k in 0..th {
+                for i in 0..m {
+                    tr[(b * m + i) * th + k] = yr[(b * th + k) * m + i];
+                    ti[(b * m + i) * th + k] = yi[(b * th + k) * m + i];
+                }
+            }
+        }
+
+        // rows (half spectrum -> real, pruned): out = Yr @ W_c - Yi @ W_s
+        // A: (nb*m, th); B: (th, m)
+        out.fill(0.0);
+        gemm_acc(out, tr, &self.cwt, nb * m, th, m);
+        gemm_sub(out, ti, &self.swt, nb * m, th, m);
+
+        self.yr = yr_buf;
+        self.yi = yi_buf;
+        self.tr = tr_buf;
+        self.ti = ti_buf;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::fft2d::TileFft;
+    use crate::util::Rng;
+
+    /// BatchDft must agree with the plan-based TileFft (modulo the
+    /// transposed storage convention: BatchDft (th, t), TileFft (t, th)).
+    #[test]
+    fn forward_agrees_with_tile_fft() {
+        for (m, r) in [(2usize, 3usize), (4, 3), (6, 3), (9, 3), (4, 5), (11, 5)] {
+            let mut bd = BatchDft::new(m, r);
+            let mut tf = TileFft::new(m, r);
+            let (t, th) = (bd.t, bd.th);
+            let nb = 3;
+            let mut rng = Rng::new((m * 10 + r) as u64);
+            let x = rng.vec_f32(nb * t * t);
+            let mut bre = vec![0.0f32; nb * th * t];
+            let mut bim = vec![0.0f32; nb * th * t];
+            bd.forward(&x, nb, t, &mut bre, &mut bim);
+            for b in 0..nb {
+                let mut zre = vec![0.0f32; t * th];
+                let mut zim = vec![0.0f32; t * th];
+                tf.forward(&x[b * t * t..(b + 1) * t * t], t, &mut zre, &mut zim);
+                for i in 0..t {
+                    for k in 0..th {
+                        let g_re = bre[(b * th + k) * t + i];
+                        let g_im = bim[(b * th + k) * t + i];
+                        // TileFft stores (t, th) with half along axis1;
+                        // BatchDft stores (th, t) with half along axis0.
+                        // Both compute the same 2D DFT (symmetric in axes).
+                        let w_re = zre[i * th + k];
+                        let w_im = zim[i * th + k];
+                        assert!(
+                            (g_re - w_re).abs() < 1e-2 && (g_im - w_im).abs() < 1e-2,
+                            "F({m},{r}) b={b} i={i} k={k}: ({g_re},{g_im}) vs ({w_re},{w_im})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_padding_matches_full() {
+        let (m, r) = (6usize, 3usize);
+        let mut bd = BatchDft::new(m, r);
+        let (t, th) = (bd.t, bd.th);
+        let mut rng = Rng::new(3);
+        let k = rng.vec_f32(2 * r * r);
+        let mut padded = vec![0.0f32; 2 * t * t];
+        for b in 0..2 {
+            for u in 0..r {
+                padded[b * t * t + u * t..b * t * t + u * t + r]
+                    .copy_from_slice(&k[b * r * r + u * r..b * r * r + (u + 1) * r]);
+            }
+        }
+        let (mut are, mut aim) = (vec![0.0; 2 * th * t], vec![0.0; 2 * th * t]);
+        let (mut bre, mut bim) = (vec![0.0; 2 * th * t], vec![0.0; 2 * th * t]);
+        bd.forward(&k, 2, r, &mut are, &mut aim);
+        bd.forward(&padded, 2, t, &mut bre, &mut bim);
+        for i in 0..2 * th * t {
+            assert!((are[i] - bre[i]).abs() < 1e-3);
+            assert!((aim[i] - bim[i]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn roundtrip_convolution_theorem() {
+        for (m, r) in [(4usize, 3usize), (9, 3), (11, 5), (27, 5)] {
+            let mut bd = BatchDft::new(m, r);
+            let (t, th) = (bd.t, bd.th);
+            let mut rng = Rng::new((m + r) as u64);
+            let x = rng.vec_f32(t * t);
+            let k = rng.vec_f32(r * r);
+            let mut kf = vec![0.0f32; r * r];
+            for u in 0..r {
+                for v in 0..r {
+                    kf[u * r + v] = k[(r - 1 - u) * r + (r - 1 - v)];
+                }
+            }
+            let (mut xre, mut xim) = (vec![0.0; th * t], vec![0.0; th * t]);
+            let (mut kre, mut kim) = (vec![0.0; th * t], vec![0.0; th * t]);
+            bd.forward(&x, 1, t, &mut xre, &mut xim);
+            bd.forward(&kf, 1, r, &mut kre, &mut kim);
+            let mut zre = vec![0.0f32; th * t];
+            let mut zim = vec![0.0f32; th * t];
+            for i in 0..th * t {
+                zre[i] = xre[i] * kre[i] - xim[i] * kim[i];
+                zim[i] = xre[i] * kim[i] + xim[i] * kre[i];
+            }
+            let mut got = vec![0.0f32; m * m];
+            bd.inverse_valid(&zre, &zim, 1, &mut got);
+            // direct valid correlation reference
+            for i in 0..m {
+                for j in 0..m {
+                    let mut s = 0.0f64;
+                    for u in 0..r {
+                        for v in 0..r {
+                            s += x[(i + u) * t + j + v] as f64 * k[u * r + v] as f64;
+                        }
+                    }
+                    let g = got[i * m + j] as f64;
+                    assert!(
+                        (g - s).abs() < 2e-3 * (1.0 + s.abs()),
+                        "F({m},{r}) ({i},{j}): {g} vs {s}"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,142 @@
+//! Minimal complex arithmetic (num-complex is not vendored offline).
+
+use std::ops::{Add, AddAssign, Mul, Neg, Sub};
+
+/// Single-precision complex number.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct C32 {
+    pub re: f32,
+    pub im: f32,
+}
+
+impl C32 {
+    pub const ZERO: C32 = C32 { re: 0.0, im: 0.0 };
+    pub const ONE: C32 = C32 { re: 1.0, im: 0.0 };
+
+    #[inline]
+    pub fn new(re: f32, im: f32) -> C32 {
+        C32 { re, im }
+    }
+
+    #[inline]
+    pub fn real(re: f32) -> C32 {
+        C32 { re, im: 0.0 }
+    }
+
+    /// e^{i theta}
+    pub fn cis(theta: f64) -> C32 {
+        C32 {
+            re: theta.cos() as f32,
+            im: theta.sin() as f32,
+        }
+    }
+
+    /// The n-th root of unity to the k-th power with sign: e^{sign*2πi*k/n},
+    /// computed in f64 for accuracy.
+    pub fn root(n: usize, k: isize) -> C32 {
+        let ang = -2.0 * std::f64::consts::PI * (k as f64) / (n as f64);
+        C32::cis(ang)
+    }
+
+    #[inline]
+    pub fn conj(self) -> C32 {
+        C32 {
+            re: self.re,
+            im: -self.im,
+        }
+    }
+
+    #[inline]
+    pub fn scale(self, s: f32) -> C32 {
+        C32 {
+            re: self.re * s,
+            im: self.im * s,
+        }
+    }
+
+    pub fn norm(self) -> f32 {
+        (self.re * self.re + self.im * self.im).sqrt()
+    }
+
+    /// Multiply by i (free: swap + negate).
+    #[inline]
+    pub fn mul_i(self) -> C32 {
+        C32 {
+            re: -self.im,
+            im: self.re,
+        }
+    }
+}
+
+impl Add for C32 {
+    type Output = C32;
+    #[inline]
+    fn add(self, o: C32) -> C32 {
+        C32::new(self.re + o.re, self.im + o.im)
+    }
+}
+
+impl AddAssign for C32 {
+    #[inline]
+    fn add_assign(&mut self, o: C32) {
+        self.re += o.re;
+        self.im += o.im;
+    }
+}
+
+impl Sub for C32 {
+    type Output = C32;
+    #[inline]
+    fn sub(self, o: C32) -> C32 {
+        C32::new(self.re - o.re, self.im - o.im)
+    }
+}
+
+impl Mul for C32 {
+    type Output = C32;
+    #[inline]
+    fn mul(self, o: C32) -> C32 {
+        C32::new(
+            self.re * o.re - self.im * o.im,
+            self.re * o.im + self.im * o.re,
+        )
+    }
+}
+
+impl Neg for C32 {
+    type Output = C32;
+    #[inline]
+    fn neg(self) -> C32 {
+        C32::new(-self.re, -self.im)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic() {
+        let a = C32::new(1.0, 2.0);
+        let b = C32::new(3.0, -1.0);
+        assert_eq!(a + b, C32::new(4.0, 1.0));
+        assert_eq!(a - b, C32::new(-2.0, 3.0));
+        assert_eq!(a * b, C32::new(5.0, 5.0)); // (1+2i)(3-i) = 5+5i
+        assert_eq!(-a, C32::new(-1.0, -2.0));
+        assert_eq!(a.conj(), C32::new(1.0, -2.0));
+        assert_eq!(a.mul_i(), C32::new(-2.0, 1.0));
+    }
+
+    #[test]
+    fn roots_of_unity() {
+        let w = C32::root(4, 1); // e^{-i pi/2} = -i
+        assert!((w.re - 0.0).abs() < 1e-6 && (w.im + 1.0).abs() < 1e-6);
+        let w8 = C32::root(8, 8); // full turn
+        assert!((w8.re - 1.0).abs() < 1e-6 && w8.im.abs() < 1e-6);
+    }
+
+    #[test]
+    fn norm_known() {
+        assert!((C32::new(3.0, 4.0).norm() - 5.0).abs() < 1e-6);
+    }
+}

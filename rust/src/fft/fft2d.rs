@@ -1,0 +1,256 @@
+//! 2D tile transforms for the FFT convolution engine.
+//!
+//! Storage convention: a transformed t x t real tile is kept as the
+//! (t, th) half spectrum — rfft along the row (last) axis, full complex
+//! FFT along the column axis — exactly t * ceil((t+1)/2) complex numbers,
+//! the paper's conjugate-symmetric accounting (§A.1).  Separate re/im
+//! planes (SoA) so the element-wise stage runs real GEMMs on contiguous
+//! memory.
+//!
+//! The inverse is *pruned*: only the last m x m spatial outputs (the
+//! "valid" window of the circular convolution) are produced.
+
+use super::complex::C32;
+use super::plan::Plan;
+use super::rfft::{expand_half, half_len};
+
+/// Plans + scratch for transforming tiles of one (t, m, r) configuration.
+///
+/// Scratch buffers make the per-tile hot path allocation-free; a TileFft
+/// is therefore `!Sync` by usage — clone one per worker thread (cheap:
+/// plans are shared via `Box`/recomputed, buffers are small).
+#[derive(Clone, Debug)]
+pub struct TileFft {
+    pub t: usize,
+    pub m: usize,
+    pub r: usize,
+    pub th: usize,
+    plan: Plan,
+    // scratch
+    row_c: Vec<C32>,
+    row_out: Vec<C32>,
+    col_c: Vec<C32>,
+    col_out: Vec<C32>,
+    /// intermediate full-row spectra: t rows x th cols
+    mid: Vec<C32>,
+    /// allocation-free plan execution scratch
+    scratch: Vec<C32>,
+}
+
+impl TileFft {
+    pub fn new(m: usize, r: usize) -> TileFft {
+        let t = m + r - 1;
+        let th = half_len(t);
+        TileFft {
+            t,
+            m,
+            r,
+            th,
+            plan: Plan::new(t),
+            row_c: vec![C32::ZERO; t],
+            row_out: vec![C32::ZERO; t],
+            col_c: vec![C32::ZERO; t],
+            col_out: vec![C32::ZERO; t],
+            mid: vec![C32::ZERO; (m + r - 1) * half_len(m + r - 1)],
+            scratch: Plan::new(t).make_scratch(),
+        }
+    }
+
+    /// Forward transform of a real s x s tile (s == t for image tiles,
+    /// s == r for kernels — implicit zero-padding).  Output: re/im planes,
+    /// each t*th, row-major (t rows, th cols).
+    pub fn forward(&mut self, x: &[f32], s: usize, out_re: &mut [f32], out_im: &mut [f32]) {
+        let (t, th) = (self.t, self.th);
+        debug_assert_eq!(x.len(), s * s);
+        debug_assert!(s <= t);
+        debug_assert_eq!(out_re.len(), t * th);
+        debug_assert_eq!(out_im.len(), t * th);
+
+        // row pass: rfft of each nonzero row (rows s..t are all-zero)
+        for i in 0..s {
+            for j in 0..t {
+                self.row_c[j] = if j < s {
+                    C32::real(x[i * s + j])
+                } else {
+                    C32::ZERO
+                };
+            }
+            self.plan.forward_scratch(&mut self.row_c, &mut self.row_out, &mut self.scratch);
+            self.mid[i * th..(i + 1) * th].copy_from_slice(&self.row_out[..th]);
+        }
+        for i in s..t {
+            self.mid[i * th..(i + 1) * th].fill(C32::ZERO);
+        }
+
+        // column pass: full complex FFT down each of the th columns
+        for j in 0..th {
+            for i in 0..t {
+                self.col_c[i] = self.mid[i * th + j];
+            }
+            self.plan.forward_scratch(&mut self.col_c, &mut self.col_out, &mut self.scratch);
+            for i in 0..t {
+                out_re[i * th + j] = self.col_out[i].re;
+                out_im[i * th + j] = self.col_out[i].im;
+            }
+        }
+    }
+
+    /// Pruned inverse: (t, th) half-spectrum planes -> last m x m real
+    /// outputs (positions r-1 .. t-1 in both dimensions), normalized.
+    pub fn inverse_valid(&mut self, z_re: &[f32], z_im: &[f32], out: &mut [f32]) {
+        let (t, th, m, r) = (self.t, self.th, self.m, self.r);
+        debug_assert_eq!(z_re.len(), t * th);
+        debug_assert_eq!(out.len(), m * m);
+        let norm = 1.0 / (t * t) as f32;
+
+        // column pass: inverse FFT down each half-spectrum column
+        for j in 0..th {
+            for i in 0..t {
+                self.col_c[i] = C32::new(z_re[i * th + j], z_im[i * th + j]);
+            }
+            self.plan.inverse_scratch(&mut self.col_c, &mut self.col_out, &mut self.scratch);
+            // keep all rows for now (row pass prunes); store to mid
+            for i in 0..t {
+                self.mid[i * th + j] = self.col_out[i];
+            }
+        }
+
+        // row pass: for each kept row, expand Hermitian half -> full,
+        // inverse FFT, keep the last m (real parts)
+        for (oi, i) in (r - 1..t).enumerate() {
+            let half = &self.mid[i * th..(i + 1) * th];
+            expand_half(t, half, &mut self.row_c);
+            // plan.inverse clobbers input; row_c is a scratch copy already
+            self.plan.inverse_scratch(&mut self.row_c, &mut self.row_out, &mut self.scratch);
+            for (oj, j) in (r - 1..t).enumerate() {
+                out[oi * m + oj] = self.row_out[j].re * norm;
+            }
+        }
+    }
+}
+
+/// Element-wise complex multiply-accumulate over half-spectrum planes:
+/// acc += u * v (SoA), the scalar core the cgemm generalizes.
+pub fn cmul_acc(
+    acc_re: &mut [f32],
+    acc_im: &mut [f32],
+    u_re: &[f32],
+    u_im: &[f32],
+    v_re: &[f32],
+    v_im: &[f32],
+) {
+    for i in 0..acc_re.len() {
+        acc_re[i] += u_re[i] * v_re[i] - u_im[i] * v_im[i];
+        acc_im[i] += u_re[i] * v_im[i] + u_im[i] * v_re[i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Direct valid correlation of a t x t tile with an r x r kernel.
+    fn correlate2d(x: &[f32], t: usize, k: &[f32], r: usize) -> Vec<f32> {
+        let m = t - r + 1;
+        let mut out = vec![0.0f32; m * m];
+        for i in 0..m {
+            for j in 0..m {
+                let mut s = 0.0f64;
+                for u in 0..r {
+                    for v in 0..r {
+                        s += x[(i + u) * t + j + v] as f64 * k[u * r + v] as f64;
+                    }
+                }
+                out[i * m + j] = s as f32;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn forward_matches_dft_definition() {
+        let (m, r) = (3, 3);
+        let mut tf = TileFft::new(m, r);
+        let t = tf.t;
+        let mut rng = Rng::new(5);
+        let x = rng.vec_f32(t * t);
+        let mut zre = vec![0.0; t * tf.th];
+        let mut zim = vec![0.0; t * tf.th];
+        tf.forward(&x, t, &mut zre, &mut zim);
+        // reference: direct 2D DFT
+        for ki in 0..t {
+            for kj in 0..tf.th {
+                let mut s = (0.0f64, 0.0f64);
+                for i in 0..t {
+                    for j in 0..t {
+                        let ang = -2.0 * std::f64::consts::PI
+                            * ((ki * i) as f64 + (kj * j) as f64)
+                            / t as f64;
+                        s.0 += x[i * t + j] as f64 * ang.cos();
+                        s.1 += x[i * t + j] as f64 * ang.sin();
+                    }
+                }
+                assert!((zre[ki * tf.th + kj] as f64 - s.0).abs() < 1e-3);
+                assert!((zim[ki * tf.th + kj] as f64 - s.1).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn convolution_theorem_valid_correlation() {
+        // the end-to-end property the conv engine relies on: flip kernel,
+        // pointwise-multiply spectra, pruned inverse == valid correlation
+        for (m, r) in [(2, 3), (4, 3), (6, 3), (4, 5), (9, 3), (11, 5), (27, 5)] {
+            let mut tf = TileFft::new(m, r);
+            let t = tf.t;
+            let th = tf.th;
+            let mut rng = Rng::new((m * 100 + r) as u64);
+            let x = rng.vec_f32(t * t);
+            let k = rng.vec_f32(r * r);
+            let mut kf = vec![0.0f32; r * r];
+            for u in 0..r {
+                for v in 0..r {
+                    kf[u * r + v] = k[(r - 1 - u) * r + (r - 1 - v)];
+                }
+            }
+            let (mut xre, mut xim) = (vec![0.0; t * th], vec![0.0; t * th]);
+            let (mut kre, mut kim) = (vec![0.0; t * th], vec![0.0; t * th]);
+            tf.forward(&x, t, &mut xre, &mut xim);
+            tf.forward(&kf, r, &mut kre, &mut kim);
+            let (mut zre, mut zim) = (vec![0.0; t * th], vec![0.0; t * th]);
+            cmul_acc(&mut zre, &mut zim, &xre, &xim, &kre, &kim);
+            let mut got = vec![0.0f32; m * m];
+            tf.inverse_valid(&zre, &zim, &mut got);
+            let want = correlate2d(&x, t, &k, r);
+            for (g, w) in got.iter().zip(&want) {
+                assert!(
+                    (g - w).abs() < 2e-3 * (1.0 + w.abs()),
+                    "F({m},{r}): {g} vs {w}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_padding_matches_explicit() {
+        let (m, r) = (4, 3);
+        let mut tf = TileFft::new(m, r);
+        let t = tf.t;
+        let th = tf.th;
+        let mut rng = Rng::new(11);
+        let k = rng.vec_f32(r * r);
+        let mut padded = vec![0.0f32; t * t];
+        for u in 0..r {
+            padded[u * t..u * t + r].copy_from_slice(&k[u * r..(u + 1) * r]);
+        }
+        let (mut a_re, mut a_im) = (vec![0.0; t * th], vec![0.0; t * th]);
+        let (mut b_re, mut b_im) = (vec![0.0; t * th], vec![0.0; t * th]);
+        tf.forward(&k, r, &mut a_re, &mut a_im);
+        tf.forward(&padded, t, &mut b_re, &mut b_im);
+        for i in 0..t * th {
+            assert!((a_re[i] - b_re[i]).abs() < 1e-4);
+            assert!((a_im[i] - b_im[i]).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! FFT substrate: arbitrary-size complex FFTs (mixed-radix Cooley–Tukey
+//! with hand-coded radix-2/3/4/5 kernels and Rader's algorithm for large
+//! primes), real<->complex wrappers, 2D tile transforms with
+//! conjugate-symmetric storage and pruned inverses, and an exact FLOP
+//! accounting model — the in-repo substitute for FFTW's `genfft`
+//! (DESIGN.md §3), supporting every tile size the paper sweeps
+//! (including primes such as 31).
+
+pub mod batch_dft;
+pub mod complex;
+pub mod count;
+pub mod fft2d;
+pub mod plan;
+pub mod rfft;
+
+pub use batch_dft::BatchDft;
+pub use complex::C32;
+pub use count::{fft_flops, transform_cost, TransformCost};
+pub use fft2d::TileFft;
+pub use plan::Plan;

@@ -1,0 +1,451 @@
+//! Arbitrary-size complex FFT plans.
+//!
+//! Decomposition strategy (mirrors what genfft/FFTW do at these sizes):
+//! * n in {1, 2, 3, 4, 5} — hand-coded butterflies;
+//! * composite n — mixed-radix decimation-in-time with the smallest
+//!   radix drawn from {4, 2, 3, 5} that divides n (radix 4 preferred:
+//!   fewer twiddles than two radix-2 levels);
+//! * prime n > 5 — Rader's algorithm: the size-p DFT becomes a cyclic
+//!   convolution of length p-1 evaluated with (recursive) FFTs.
+//!
+//! Plans precompute all twiddles/permutations; execution allocates only
+//! from caller-provided or plan-owned scratch.
+
+use super::complex::C32;
+
+/// How a size-n transform is computed (used by execution *and* counting).
+#[derive(Clone, Debug)]
+pub enum Node {
+    /// Direct hand-coded butterfly, n <= 5.
+    Small(usize),
+    /// Cooley–Tukey: n = radix * m; recurse on m, combine with radix-DFTs.
+    CooleyTukey {
+        radix: usize,
+        m: usize,
+        /// twiddles[s * radix + j] = w_n^{s j}, s in 0..m, j in 0..radix
+        twiddles: Vec<C32>,
+        sub: Box<Plan>,
+    },
+    /// Rader prime-size: FFT_p via cyclic convolution of length p-1.
+    Rader {
+        p: usize,
+        /// q -> g^q mod p (reading permutation of x[1..])
+        perm_in: Vec<usize>,
+        /// q -> g^{-q} mod p (writing permutation of X[1..])
+        perm_out: Vec<usize>,
+        /// forward FFT of the root sequence b_q = w_p^{g^{-q}}, length p-1
+        b_fft: Vec<C32>,
+        conv: Box<Plan>,
+    },
+}
+
+/// An FFT plan for one transform size.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub n: usize,
+    pub node: Node,
+}
+
+impl Plan {
+    pub fn new(n: usize) -> Plan {
+        assert!(n >= 1);
+        let node = if n <= 5 {
+            Node::Small(n)
+        } else if let Some(radix) = [4usize, 2, 3, 5].iter().copied().find(|r| n % r == 0) {
+            let m = n / radix;
+            let mut twiddles = Vec::with_capacity(m * radix);
+            for s in 0..m {
+                for j in 0..radix {
+                    twiddles.push(C32::root(n, (s * j) as isize));
+                }
+            }
+            Node::CooleyTukey {
+                radix,
+                m,
+                twiddles,
+                sub: Box::new(Plan::new(m)),
+            }
+        } else {
+            // prime > 5: Rader
+            let p = n;
+            let g = primitive_root(p);
+            let g_inv = mod_pow(g, p - 2, p); // g^{-1} mod p
+            let mut perm_in = Vec::with_capacity(p - 1);
+            let mut perm_out = Vec::with_capacity(p - 1);
+            let mut acc_in = 1usize;
+            let mut acc_out = 1usize;
+            for _ in 0..p - 1 {
+                perm_in.push(acc_in);
+                perm_out.push(acc_out);
+                acc_in = acc_in * g % p;
+                acc_out = acc_out * g_inv % p;
+            }
+            let conv = Plan::new(p - 1);
+            // b_q = w_p^{g^{-q}}; precompute its forward FFT
+            let mut b: Vec<C32> = perm_out
+                .iter()
+                .map(|&idx| C32::root(p, idx as isize))
+                .collect();
+            let mut b_fft = vec![C32::ZERO; p - 1];
+            conv.forward(&mut b, &mut b_fft);
+            Node::Rader {
+                p,
+                perm_in,
+                perm_out,
+                b_fft,
+                conv: Box::new(conv),
+            }
+        };
+        Plan { n, node }
+    }
+
+    /// Scratch (in `C32` units) the plan needs for one allocation-free
+    /// execution.  The hot path (`forward_scratch`) requires exactly this.
+    pub fn scratch_need(&self) -> usize {
+        match &self.node {
+            Node::Small(_) => 0,
+            Node::CooleyTukey { sub, .. } => self.n + sub.scratch_need(),
+            Node::Rader { p, conv, .. } => 2 * (p - 1) + conv.scratch_need(),
+        }
+    }
+
+    /// Allocate a scratch buffer sized for this plan.
+    pub fn make_scratch(&self) -> Vec<C32> {
+        vec![C32::ZERO; self.scratch_need()]
+    }
+
+    /// Forward DFT: X[k] = sum_j x[j] w_n^{jk}.  `data` is clobbered
+    /// (used as scratch); the result lands in `out`.
+    ///
+    /// Convenience wrapper that allocates; hot paths should hold a
+    /// scratch buffer and call [`Plan::forward_scratch`].
+    pub fn forward(&self, data: &mut [C32], out: &mut [C32]) {
+        let mut scratch = self.make_scratch();
+        self.forward_scratch(data, out, &mut scratch);
+    }
+
+    /// Allocation-free forward DFT (scratch from [`Plan::make_scratch`]).
+    pub fn forward_scratch(&self, data: &mut [C32], out: &mut [C32], scratch: &mut [C32]) {
+        assert_eq!(data.len(), self.n);
+        assert_eq!(out.len(), self.n);
+        self.fft_strided(data, 0, 1, out, scratch);
+    }
+
+    /// Inverse DFT (unnormalized): x[j] = sum_k X[k] w_n^{-jk}.
+    /// Uses the conjugation identity to reuse the forward machinery.
+    pub fn inverse(&self, data: &mut [C32], out: &mut [C32]) {
+        let mut scratch = self.make_scratch();
+        self.inverse_scratch(data, out, &mut scratch);
+    }
+
+    /// Allocation-free inverse DFT.
+    pub fn inverse_scratch(&self, data: &mut [C32], out: &mut [C32], scratch: &mut [C32]) {
+        for v in data.iter_mut() {
+            *v = v.conj();
+        }
+        self.forward_scratch(data, out, scratch);
+        for v in out.iter_mut() {
+            *v = v.conj();
+        }
+    }
+
+    /// Recursive DIT on the decimated view data[offset + stride * i].
+    /// `scratch` must hold at least `self.scratch_need()` elements.
+    fn fft_strided(
+        &self,
+        data: &[C32],
+        offset: usize,
+        stride: usize,
+        out: &mut [C32],
+        scratch: &mut [C32],
+    ) {
+        match &self.node {
+            Node::Small(n) => small_dft(*n, data, offset, stride, out),
+            Node::CooleyTukey {
+                radix,
+                m,
+                twiddles,
+                sub,
+            } => {
+                let (radix, m) = (*radix, *m);
+                // recurse on the radix decimated subsequences
+                let (subout, rest) = scratch.split_at_mut(self.n);
+                for j in 0..radix {
+                    sub.fft_strided(
+                        data,
+                        offset + j * stride,
+                        stride * radix,
+                        &mut subout[j * m..(j + 1) * m],
+                        rest,
+                    );
+                }
+                // combine: X[s + t m] = sum_j w_n^{js} w_radix^{jt} Y_j[s]
+                let mut v = [C32::ZERO; 8]; // radix <= 5
+                for s in 0..m {
+                    for j in 0..radix {
+                        v[j] = subout[j * m + s] * twiddles[s * radix + j];
+                    }
+                    small_dft_inplace(radix, &mut v);
+                    for t in 0..radix {
+                        out[s + t * m] = v[t];
+                    }
+                }
+            }
+            Node::Rader {
+                p,
+                perm_in,
+                perm_out,
+                b_fft,
+                conv,
+            } => {
+                let p = *p;
+                let q = p - 1;
+                let x0 = data[offset];
+                let (bufs, rest) = scratch.split_at_mut(2 * q);
+                let (a, a_fft) = bufs.split_at_mut(q);
+                // a_q = x[g^q]
+                let mut sum_rest = C32::ZERO;
+                for (slot, &idx) in a.iter_mut().zip(perm_in) {
+                    *slot = data[offset + idx * stride];
+                    sum_rest += *slot;
+                }
+                // forward FFT of a, multiply with precomputed b_fft, inverse
+                conv.fft_strided(a, 0, 1, a_fft, rest);
+                for (av, bv) in a_fft.iter_mut().zip(b_fft) {
+                    *av = *av * *bv;
+                }
+                // inverse via conjugation, reusing `a` as the output
+                for v in a_fft.iter_mut() {
+                    *v = v.conj();
+                }
+                conv.fft_strided(a_fft, 0, 1, a, rest);
+                let scale = 1.0 / q as f32;
+                // X[0] = x0 + sum of the rest; X[g^{-q}] = x0 + conj(c_q)/(p-1)
+                out[0] = x0 + sum_rest;
+                for (cq, &oidx) in a.iter().zip(perm_out) {
+                    out[oidx] = x0 + cq.conj().scale(scale);
+                }
+            }
+        }
+    }
+}
+
+/// Direct DFT for n <= 5, reading a strided view.
+fn small_dft(n: usize, data: &[C32], offset: usize, stride: usize, out: &mut [C32]) {
+    let mut v = [C32::ZERO; 8];
+    for (i, slot) in v.iter_mut().enumerate().take(n) {
+        *slot = data[offset + i * stride];
+    }
+    small_dft_inplace(n, &mut v);
+    out[..n].copy_from_slice(&v[..n]);
+}
+
+/// Hand-coded butterflies for n in 1..=5 on a local buffer.
+fn small_dft_inplace(n: usize, v: &mut [C32; 8]) {
+    match n {
+        1 => {}
+        2 => {
+            let (a, b) = (v[0], v[1]);
+            v[0] = a + b;
+            v[1] = a - b;
+        }
+        3 => {
+            // w = e^{-2 pi i/3}; real constants
+            const C: f32 = -0.5; // cos(2pi/3)
+            const S: f32 = -0.866_025_4; // -sin(2pi/3)
+            let (a, b, c) = (v[0], v[1], v[2]);
+            let t = b + c;
+            let d = (b - c).mul_i().scale(S);
+            let m = a + t.scale(C);
+            v[0] = a + t;
+            v[1] = m + d;
+            v[2] = m - d;
+        }
+        4 => {
+            let (a, b, c, d) = (v[0], v[1], v[2], v[3]);
+            let t0 = a + c;
+            let t1 = a - c;
+            let t2 = b + d;
+            let t3 = (b - d).mul_i(); // *i
+            v[0] = t0 + t2;
+            v[1] = t1 - t3; // w_4^1 = -i
+            v[2] = t0 - t2;
+            v[3] = t1 + t3;
+        }
+        5 => {
+            // 5-point DFT via the real-factored (Winograd-style) schedule:
+            // 16 real muls + 28 real adds (see count::small_flops).
+            const CA: f32 = 0.309_017; // cos(2pi/5)
+            const CB: f32 = -0.809_017; // cos(4pi/5)
+            const SA: f32 = -0.951_056_5; // -sin(2pi/5)
+            const SB: f32 = -0.587_785_25; // -sin(4pi/5)
+            let (x0, x1, x2, x3, x4) = (v[0], v[1], v[2], v[3], v[4]);
+            let t1 = x1 + x4;
+            let t2 = x1 - x4;
+            let t3 = x2 + x3;
+            let t4 = x2 - x3;
+            v[0] = x0 + t1 + t3;
+            let p = x0 + t1.scale(CA) + t3.scale(CB);
+            let q = x0 + t1.scale(CB) + t3.scale(CA);
+            let rr = (t2.scale(SA) + t4.scale(SB)).mul_i();
+            let ss = (t2.scale(SB) - t4.scale(SA)).mul_i();
+            v[1] = p + rr;
+            v[4] = p - rr;
+            v[2] = q + ss;
+            v[3] = q - ss;
+        }
+        _ => unreachable!("small_dft n must be <= 5"),
+    }
+}
+
+/// Smallest primitive root of prime p (trial search; p is tiny here).
+pub fn primitive_root(p: usize) -> usize {
+    // factorize p-1
+    let mut factors = Vec::new();
+    let mut m = p - 1;
+    let mut d = 2;
+    while d * d <= m {
+        if m % d == 0 {
+            factors.push(d);
+            while m % d == 0 {
+                m /= d;
+            }
+        }
+        d += 1;
+    }
+    if m > 1 {
+        factors.push(m);
+    }
+    'g: for g in 2..p {
+        for &f in &factors {
+            if mod_pow(g, (p - 1) / f, p) == 1 {
+                continue 'g;
+            }
+        }
+        return g;
+    }
+    panic!("no primitive root found for {p} (not prime?)");
+}
+
+pub fn mod_pow(mut b: usize, mut e: usize, m: usize) -> usize {
+    let mut acc = 1usize;
+    b %= m;
+    while e > 0 {
+        if e & 1 == 1 {
+            acc = acc * b % m;
+        }
+        b = b * b % m;
+        e >>= 1;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// O(n^2) reference DFT in f64.
+    fn dft_ref(x: &[C32]) -> Vec<C32> {
+        let n = x.len();
+        (0..n)
+            .map(|k| {
+                let mut s = (0.0f64, 0.0f64);
+                for (j, v) in x.iter().enumerate() {
+                    let ang = -2.0 * std::f64::consts::PI * (j * k) as f64 / n as f64;
+                    let (c, si) = (ang.cos(), ang.sin());
+                    s.0 += v.re as f64 * c - v.im as f64 * si;
+                    s.1 += v.re as f64 * si + v.im as f64 * c;
+                }
+                C32::new(s.0 as f32, s.1 as f32)
+            })
+            .collect()
+    }
+
+    fn check_size(n: usize) {
+        let mut rng = Rng::new(n as u64);
+        let x: Vec<C32> = (0..n)
+            .map(|_| C32::new(rng.next_f32_signed(), rng.next_f32_signed()))
+            .collect();
+        let want = dft_ref(&x);
+        let plan = Plan::new(n);
+        let mut data = x.clone();
+        let mut out = vec![C32::ZERO; n];
+        plan.forward(&mut data, &mut out);
+        let scale = (n as f32).sqrt();
+        for (g, w) in out.iter().zip(&want) {
+            assert!(
+                (*g - *w).norm() < 1e-4 * scale,
+                "n={n}: {g:?} vs {w:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn small_sizes_match_reference() {
+        for n in 1..=5 {
+            check_size(n);
+        }
+    }
+
+    #[test]
+    fn composite_sizes_match_reference() {
+        for n in [6, 8, 9, 10, 12, 15, 16, 18, 20, 24, 25, 27, 32, 36] {
+            check_size(n);
+        }
+    }
+
+    #[test]
+    fn prime_sizes_match_reference() {
+        for n in [7, 11, 13, 17, 19, 23, 29, 31, 37] {
+            check_size(n);
+        }
+    }
+
+    #[test]
+    fn mixed_prime_composites() {
+        for n in [14, 21, 22, 26, 28, 33, 34, 35] {
+            check_size(n);
+        }
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        for n in [8, 12, 13, 31] {
+            let mut rng = Rng::new(n as u64 + 99);
+            let x: Vec<C32> = (0..n)
+                .map(|_| C32::new(rng.next_f32_signed(), rng.next_f32_signed()))
+                .collect();
+            let plan = Plan::new(n);
+            let mut d = x.clone();
+            let mut f = vec![C32::ZERO; n];
+            plan.forward(&mut d, &mut f);
+            let mut b = vec![C32::ZERO; n];
+            plan.inverse(&mut f, &mut b);
+            for (g, w) in b.iter().zip(&x) {
+                let g = g.scale(1.0 / n as f32);
+                assert!((g - *w).norm() < 1e-4, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn primitive_roots_known() {
+        assert_eq!(primitive_root(7), 3);
+        assert_eq!(primitive_root(11), 2);
+        assert_eq!(primitive_root(31), 3);
+    }
+
+    #[test]
+    fn impulse_gives_flat_spectrum() {
+        let n = 12;
+        let plan = Plan::new(n);
+        let mut x = vec![C32::ZERO; n];
+        x[0] = C32::ONE;
+        let mut out = vec![C32::ZERO; n];
+        plan.forward(&mut x, &mut out);
+        for v in out {
+            assert!((v.re - 1.0).abs() < 1e-5 && v.im.abs() < 1e-5);
+        }
+    }
+}

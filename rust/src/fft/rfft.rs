@@ -1,0 +1,112 @@
+//! Real <-> complex 1D transform wrappers with conjugate-symmetric
+//! half-spectrum storage (th = floor(t/2) + 1 coefficients).
+
+use super::complex::C32;
+use super::plan::Plan;
+
+/// Half-spectrum length for a size-n real transform.
+pub fn half_len(n: usize) -> usize {
+    n / 2 + 1
+}
+
+/// Forward real-to-complex DFT: `x` (len n, real) -> first `half_len(n)`
+/// spectrum coefficients.  Scratch-free API; allocates two n-buffers.
+pub fn rfft(plan: &Plan, x: &[f32], out: &mut [C32]) {
+    let n = plan.n;
+    debug_assert_eq!(x.len(), n);
+    debug_assert_eq!(out.len(), half_len(n));
+    let mut data: Vec<C32> = x.iter().map(|&v| C32::real(v)).collect();
+    let mut full = vec![C32::ZERO; n];
+    plan.forward(&mut data, &mut full);
+    out.copy_from_slice(&full[..half_len(n)]);
+}
+
+/// Expand a half spectrum back to the full length using Hermitian
+/// symmetry: Z[n-k] = conj(Z[k]).
+pub fn expand_half(n: usize, half: &[C32], full: &mut [C32]) {
+    let th = half_len(n);
+    debug_assert_eq!(half.len(), th);
+    debug_assert_eq!(full.len(), n);
+    full[..th].copy_from_slice(half);
+    for k in th..n {
+        full[k] = half[n - k].conj();
+    }
+}
+
+/// Inverse complex-to-real DFT from a half spectrum (normalized by 1/n).
+pub fn irfft(plan: &Plan, half: &[C32], out: &mut [f32]) {
+    let n = plan.n;
+    debug_assert_eq!(out.len(), n);
+    let mut full = vec![C32::ZERO; n];
+    expand_half(n, half, &mut full);
+    let mut time = vec![C32::ZERO; n];
+    plan.inverse(&mut full, &mut time);
+    let s = 1.0 / n as f32;
+    for (o, v) in out.iter_mut().zip(&time) {
+        *o = v.re * s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn rfft_matches_full_dft_half() {
+        for n in [4usize, 5, 8, 9, 12, 13, 31] {
+            let mut rng = Rng::new(n as u64);
+            let x: Vec<f32> = rng.vec_f32(n);
+            let plan = Plan::new(n);
+            let mut half = vec![C32::ZERO; half_len(n)];
+            rfft(&plan, &x, &mut half);
+            // full reference
+            let mut data: Vec<C32> = x.iter().map(|&v| C32::real(v)).collect();
+            let mut full = vec![C32::ZERO; n];
+            plan.forward(&mut data, &mut full);
+            for k in 0..half_len(n) {
+                assert!((half[k] - full[k]).norm() < 1e-4);
+            }
+            // Hermitian symmetry of the real transform
+            for k in 1..n {
+                assert!((full[k] - full[n - k].conj()).norm() < 1e-3, "n={n} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_rfft_irfft() {
+        for n in [6usize, 7, 10, 16, 21, 31] {
+            let mut rng = Rng::new(n as u64 + 7);
+            let x: Vec<f32> = rng.vec_f32(n);
+            let plan = Plan::new(n);
+            let mut half = vec![C32::ZERO; half_len(n)];
+            rfft(&plan, &x, &mut half);
+            let mut back = vec![0.0f32; n];
+            irfft(&plan, &half, &mut back);
+            for (a, b) in x.iter().zip(&back) {
+                assert!((a - b).abs() < 1e-4, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn expand_half_even_and_odd() {
+        for n in [6usize, 7] {
+            let th = half_len(n);
+            let half: Vec<C32> = (0..th)
+                .map(|k| C32::new(k as f32, if k == 0 { 0.0 } else { 1.0 }))
+                .collect();
+            let mut full = vec![C32::ZERO; n];
+            expand_half(n, &half, &mut full);
+            // prefix is copied verbatim ...
+            for (k, h) in half.iter().enumerate() {
+                assert_eq!(full[k], *h);
+            }
+            // ... and the tail is the Hermitian mirror
+            for k in th..n {
+                assert_eq!(full[k], half[n - k].conj());
+            }
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! Engine measurement utilities for the benches.
+//!
+//! The paper's workloads (VGG B=64 at 226^2, AlexNet B=128) are sized for
+//! 20-64-core Xeons; this host gets scaled variants (cap batch and
+//! spatial size, keep channel structure) controlled by env knobs:
+//!
+//! * `FFTCONV_BENCH_BATCH`  — images per layer (default 1)
+//! * `FFTCONV_BENCH_MAXX`   — spatial cap (default 58; 226 = paper-full)
+//! * `FFTCONV_BENCH_BUDGET` — ms of measurement budget per config (default 300)
+
+use crate::conv::{run, ConvAlgorithm, Tensor4};
+use crate::nets::NetLayer;
+use crate::util::bench::{bench, BenchResult};
+
+/// Bench-scaling knobs (resolved from the environment).
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub batch: usize,
+    pub max_x: usize,
+    pub budget_ms: u64,
+}
+
+impl BenchConfig {
+    pub fn from_env() -> BenchConfig {
+        let get = |k: &str, d: usize| {
+            std::env::var(k)
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(d)
+        };
+        BenchConfig {
+            batch: get("FFTCONV_BENCH_BATCH", 1),
+            max_x: get("FFTCONV_BENCH_MAXX", 58),
+            budget_ms: get("FFTCONV_BENCH_BUDGET", 300) as u64,
+        }
+    }
+}
+
+/// The paper's 12 layers, scaled for this host.
+pub fn host_workloads(cfg: &BenchConfig) -> Vec<NetLayer> {
+    crate::nets::host_layers(cfg.batch, cfg.max_x)
+}
+
+/// Measure one algorithm on one layer (median wall clock).
+pub fn measure_algo(algo: ConvAlgorithm, layer: &NetLayer, budget_ms: u64) -> BenchResult {
+    let p = layer.problem();
+    let x = Tensor4::random(p.input_shape(), 0x5EED);
+    let w = Tensor4::random(p.weight_shape(), 0xF00D);
+    bench(&format!("{}/{}", layer.name, algo.name()), budget_ms, || {
+        std::hint::black_box(run(algo, &x, &w));
+    })
+}
+
+/// Effective GFLOP/s an algorithm achieved on a layer, in direct-conv
+/// FLOPs (the paper's common work unit for cross-method comparison).
+pub fn effective_gflops(layer: &NetLayer, res: &BenchResult) -> f64 {
+    layer.problem().direct_flops() as f64 / res.median.as_secs_f64() / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn env_defaults() {
+        let cfg = BenchConfig {
+            batch: 1,
+            max_x: 58,
+            budget_ms: 50,
+        };
+        let layers = host_workloads(&cfg);
+        assert_eq!(layers.len(), 12);
+        assert!(layers.iter().all(|l| l.shape.x <= 58 && l.shape.b == 1));
+    }
+
+    #[test]
+    fn measure_runs() {
+        let cfg = BenchConfig {
+            batch: 1,
+            max_x: 16,
+            budget_ms: 10,
+        };
+        let layers = host_workloads(&cfg);
+        let r = measure_algo(ConvAlgorithm::Winograd { m: 2 }, &layers[7], 10);
+        assert!(r.median.as_nanos() > 0);
+        assert!(effective_gflops(&layers[7], &r) > 0.0);
+    }
+}

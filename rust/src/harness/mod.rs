@@ -1,0 +1,9 @@
+//! Benchmark harness: everything the figure/table benches share —
+//! host-scaled workloads, engine measurement, model sweeps, and the
+//! paper-shape checks (who wins, by how much, where crossovers fall).
+
+pub mod figures;
+pub mod measure;
+pub mod tables;
+
+pub use measure::{host_workloads, measure_algo, BenchConfig};

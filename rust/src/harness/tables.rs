@@ -1,0 +1,183 @@
+//! Generators for the paper's lookup tables (1-8), from the in-repo
+//! substrates.
+
+use crate::fft::count as fcount;
+use crate::model::machine::TABLE1;
+use crate::model::stages::{layer_model, LayerShape, Method, STAGE_NAMES};
+use crate::util::bench::Table;
+use crate::winograd::program as wprog;
+
+/// Table 1 — the machine catalog.
+pub fn table1() -> Table {
+    let mut t = Table::new(
+        "Table 1 — benchmark systems",
+        &["CPU", "cores", "GFLOPS", "AVX", "cache", "MB GB/s", "CMR"],
+    );
+    for m in TABLE1.iter() {
+        t.row(vec![
+            m.name.to_string(),
+            m.cores.to_string(),
+            format!("{:.0}", m.gflops),
+            m.avx.to_string(),
+            format!("{}K", m.cache / 1024),
+            format!("{:.1}", m.mb),
+            format!("{:.2}", m.cmr()),
+        ]);
+    }
+    t
+}
+
+/// Table 2 — per-stage FPO/DM/AI for one layer instantiation.
+pub fn table2(l: &LayerShape, m: usize, cache: usize) -> Table {
+    let mut t = Table::new(
+        &format!(
+            "Table 2 — stage model for B={} C={} C'={} x={} r={} m={m}",
+            l.b, l.c, l.k, l.x, l.r
+        ),
+        &["method", "stage", "GFLOP", "DM MB", "AI"],
+    );
+    for method in Method::ALL {
+        let lm = layer_model(method, l, m, cache);
+        for (i, s) in lm.stages.iter().enumerate() {
+            t.row(vec![
+                method.name().to_string(),
+                STAGE_NAMES[i].to_string(),
+                format!("{:.3}", s.fpo / 1e9),
+                format!("{:.2}", s.dm / 1e6),
+                format!("{:.2}", s.ai()),
+            ]);
+        }
+    }
+    t
+}
+
+/// Tables 3/4 — Winograd transform FLOPs and AIs per tile/kernel.
+pub fn table3_4(rs: &[usize], max_m: usize) -> Table {
+    let mut t = Table::new(
+        "Tables 3/4 — Winograd transform FLOPs (and AI) per tile, F(m^2, r^2)",
+        &["m", "r", "t", "In", "Ker", "Out", "AI In", "AI Ker", "AI Out"],
+    );
+    for &r in rs {
+        for m in 2..=max_m {
+            if m + r - 1 > 6 {
+                continue; // vendor cap: transforms <= 6x6
+            }
+            let c = wprog::transform_cost(m, r);
+            let tt = m + r - 1;
+            // AI per Table 2's per-tile fractions (4 bytes/f32)
+            let ai_in = c.input.flops() as f64 / (4 * tt * tt + 4 * tt * tt) as f64;
+            let ai_ker = c.kernel.flops() as f64 / (4 * r * r + 4 * tt * tt) as f64;
+            let ai_out = c.output.flops() as f64 / (4 * tt * tt + 4 * m * m) as f64;
+            t.row(vec![
+                m.to_string(),
+                r.to_string(),
+                tt.to_string(),
+                c.input.flops().to_string(),
+                c.kernel.flops().to_string(),
+                c.output.flops().to_string(),
+                format!("{ai_in:.2}"),
+                format!("{ai_ker:.2}"),
+                format!("{ai_out:.2}"),
+            ]);
+        }
+    }
+    t
+}
+
+/// Tables 5/6 (Regular-FFT) or 7/8 (Gauss-FFT) — transform FLOPs + AIs.
+pub fn table5_8(rs: &[usize], max_m: usize, gauss: bool) -> Table {
+    let title = if gauss {
+        "Tables 7/8 — Gauss-FFT transform FLOPs (and AI) per tile, G(m^2, r^2)"
+    } else {
+        "Tables 5/6 — Regular-FFT transform FLOPs (and AI) per tile, F(m^2, r^2)"
+    };
+    let mut t = Table::new(
+        title,
+        &["m", "r", "t", "In", "Ker", "Out", "AI In", "AI Ker", "AI Out"],
+    );
+    let planes = if gauss { 3.0 } else { 2.0 };
+    for &r in rs {
+        for m in 2..=max_m {
+            let c = if gauss {
+                fcount::gauss_transform_cost(m, r)
+            } else {
+                fcount::transform_cost(m, r)
+            };
+            let (tt, th) = (c.t, c.th);
+            let tile_bytes = 4.0 * planes * (tt * th) as f64;
+            let ai_in = c.input.flops() as f64 / (4.0 * (tt * tt) as f64 + tile_bytes);
+            let ai_ker = c.kernel.flops() as f64 / (4.0 * (r * r) as f64 + tile_bytes);
+            let ai_out = c.output.flops() as f64 / (tile_bytes + 4.0 * (m * m) as f64);
+            t.row(vec![
+                m.to_string(),
+                r.to_string(),
+                tt.to_string(),
+                c.input.flops().to_string(),
+                c.kernel.flops().to_string(),
+                c.output.flops().to_string(),
+                format!("{ai_in:.2}"),
+                format!("{ai_ker:.2}"),
+                format!("{ai_out:.2}"),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_ten_rows() {
+        assert_eq!(table1().rows.len(), 10);
+    }
+
+    #[test]
+    fn table2_twelve_rows() {
+        let l = LayerShape {
+            b: 1,
+            c: 16,
+            k: 16,
+            x: 34,
+            r: 3,
+        };
+        assert_eq!(table2(&l, 4, 1024 * 1024).rows.len(), 12);
+    }
+
+    #[test]
+    fn winograd_table_respects_cap() {
+        let t = table3_4(&[3, 5], 8);
+        for row in &t.rows {
+            let m: usize = row[0].parse().unwrap();
+            let r: usize = row[1].parse().unwrap();
+            assert!(m + r - 1 <= 6);
+        }
+    }
+
+    #[test]
+    fn fft_tables_cover_large_and_prime_tiles() {
+        let t = table5_8(&[3], 31, false);
+        let ms: Vec<usize> = t.rows.iter().map(|r| r[0].parse().unwrap()).collect();
+        assert!(ms.contains(&29)); // t = 31, prime (Rader)
+        assert_eq!(ms.len(), 30);
+    }
+
+    #[test]
+    fn transform_ai_below_paper_bounds() {
+        // paper §5.3: max transform AI ~5.55 (FFT), ~2.38 (Winograd)
+        let t = table3_4(&[2, 3, 4, 5], 5);
+        for row in &t.rows {
+            let ai: f64 = row[6].parse().unwrap();
+            assert!(ai < 4.0, "winograd AI {ai} implausibly high");
+        }
+        let t = table5_8(&[2, 3, 4, 5], 31, false);
+        for row in &t.rows {
+            let ai: f64 = row[6].parse().unwrap();
+            // our Rader-based counts run ~2-3x genfft's for prime t, so
+            // the bound is ~3x the paper's 5.55 max; still far below the
+            // CMR range (11-41), preserving the memory-bound conclusion
+            assert!(ai < 20.0, "fft AI {ai} implausibly high");
+        }
+    }
+}

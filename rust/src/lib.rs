@@ -1,0 +1,36 @@
+//! # fftconv — FFT vs Winograd convolutions on modern CPUs
+//!
+//! A full reproduction of *"FFT Convolutions are Faster than Winograd on
+//! Modern CPUs, Here is Why"* (Zlateski, Jia, Li, Durand — 2018) as a
+//! three-layer rust + JAX + Pallas stack:
+//!
+//! * **Layer 1 (build-time Python)** — Pallas kernels for the Winograd /
+//!   Regular-FFT / Gauss-FFT tile transforms and element-wise stages,
+//!   checked against a pure-`jnp` oracle (`python/compile/kernels/`).
+//! * **Layer 2 (build-time Python)** — JAX convolution-layer graphs lowered
+//!   once to HLO text artifacts (`python/compile/{model,aot}.py`).
+//! * **Layer 3 (this crate)** — the runtime: a PJRT-based executor for the
+//!   AOT artifacts, a native-rust convolution engine implementing all three
+//!   algorithms (plus direct convolution and naive baselines), the paper's
+//!   Roofline analytical model, a model-driven algorithm autotuner, and a
+//!   static-scheduling coordinator that serves convolution requests.
+//!
+//! The crate also contains every substrate the paper depends on, built from
+//! scratch: a Cook–Toom/Winograd transform-matrix generator over exact
+//! rationals (the `wincnn` substitute), a mixed-radix FFT framework with
+//! Bluestein fallback and exact FLOP accounting (the `genfft` substitute),
+//! blocked real/complex GEMMs (the JIT-GEMM substitute), and the benchmark
+//! harness that regenerates every table and figure of the paper.
+
+pub mod conv;
+pub mod coordinator;
+pub mod fft;
+pub mod harness;
+pub mod model;
+pub mod nets;
+pub mod runtime;
+pub mod util;
+pub mod winograd;
+
+pub use conv::{ConvAlgorithm, ConvProblem};
+pub use model::machine::Machine;

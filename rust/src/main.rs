@@ -1,0 +1,176 @@
+//! fftconv CLI — the leader entrypoint.
+//!
+//! Subcommands (hand-rolled parser; clap is not vendored offline):
+//!   probe                      measure this host's GFLOP/s + GB/s + CMR
+//!   machines                   print the paper's Table 1 catalog
+//!   tables                     regenerate transform-cost tables (3-8)
+//!   predict  [--layer NAME]    Roofline predictions per layer/machine
+//!   accuracy                   the §4 fn.2 numerical-error experiment
+//!   artifacts [--dir PATH]     list + smoke-run the AOT artifacts
+//!   run --layer NAME [...]     run one layer on the native engine
+
+use fftconv::conv::{self, ConvAlgorithm, Tensor4};
+use fftconv::harness::tables;
+use fftconv::model::machine::{probe_host, TABLE1};
+use fftconv::model::roofline::best_tile;
+use fftconv::model::select::select;
+use fftconv::model::stages::Method;
+use fftconv::nets;
+use fftconv::runtime::{artifacts_available, Runtime};
+use std::path::PathBuf;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "probe" => probe(),
+        "machines" => tables::table1().emit("table1_machines"),
+        "tables" => {
+            tables::table3_4(&[2, 3, 4, 5], 5).emit("table3_4");
+            tables::table5_8(&[2, 3, 4, 5, 6, 7], 31, false).emit("table5_6");
+            tables::table5_8(&[2, 3, 4, 5, 6, 7], 31, true).emit("table7_8");
+        }
+        "predict" => predict(flag(&args, "--layer")),
+        "accuracy" => accuracy(),
+        "artifacts" => artifacts(flag(&args, "--dir").unwrap_or_else(|| "artifacts".into())),
+        "run" => run_layer(&args),
+        _ => {
+            eprintln!(
+                "usage: fftconv <probe|machines|tables|predict|accuracy|artifacts|run> [flags]\n{}",
+                "  see module docs in rust/src/main.rs"
+            );
+        }
+    }
+}
+
+fn flag(args: &[String], name: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+fn probe() {
+    let host = probe_host();
+    println!("host: {}", host.name);
+    println!("cores: {}", host.cores);
+    println!("single-core sustained: {:.2} GFLOP/s", host.gflops);
+    println!("stream bandwidth:      {:.2} GB/s", host.mb);
+    println!("CMR: {:.2} FLOP/byte (paper systems span 11 - 41)", host.cmr());
+}
+
+fn predict(layer_filter: Option<String>) {
+    let host = probe_host();
+    let mut t = fftconv::util::bench::Table::new(
+        "Roofline predictions (per method, best tile)",
+        &["layer", "machine", "winograd ms", "regular_fft ms", "gauss_fft ms", "choice"],
+    );
+    for l in nets::paper_layers() {
+        if let Some(f) = &layer_filter {
+            if l.name != f {
+                continue;
+            }
+        }
+        for mach in TABLE1.iter().take(1).chain([&host]) {
+            let times: Vec<f64> = Method::ALL
+                .iter()
+                .map(|&m| best_tile(m, &l.shape, mach).total * 1e3)
+                .collect();
+            let c = select(&l.shape, mach);
+            t.row(vec![
+                l.name.into(),
+                mach.name.chars().take(20).collect(),
+                format!("{:.2}", times[0]),
+                format!("{:.2}", times[1]),
+                format!("{:.2}", times[2]),
+                format!("{}(m={})", c.method.name(), c.m),
+            ]);
+        }
+    }
+    t.emit("predict");
+}
+
+fn accuracy() {
+    let x = Tensor4::random([1, 8, 26, 26], 1);
+    let w = Tensor4::random([8, 8, 3, 3], 2);
+    let want = conv::run(ConvAlgorithm::Direct, &x, &w);
+    let mut t = fftconv::util::bench::Table::new(
+        "numerical error vs direct (the paper's §4 footnote 2)",
+        &["method", "m", "t", "max rel err"],
+    );
+    for m in [2usize, 4, 6, 8, 10] {
+        for (name, algo) in [
+            ("winograd", ConvAlgorithm::Winograd { m }),
+            ("regular_fft", ConvAlgorithm::RegularFft { m }),
+        ] {
+            let got = conv::run(algo, &x, &w);
+            let err = got.max_abs_diff(&want) / want.max_abs();
+            t.row(vec![
+                name.into(),
+                m.to_string(),
+                (m + 2).to_string(),
+                format!("{err:.2e}"),
+            ]);
+        }
+    }
+    t.emit("accuracy");
+}
+
+fn artifacts(dir: String) {
+    let dir = PathBuf::from(dir);
+    if !artifacts_available(&dir) {
+        eprintln!("no manifest in {} — run `make artifacts`", dir.display());
+        std::process::exit(1);
+    }
+    let rt = Runtime::open(&dir).expect("open runtime");
+    println!("{} artifacts:", rt.artifacts().len());
+    for a in rt.artifacts() {
+        println!(
+            "  {:24} kind={:8} method={:12} m={} in={:?} out={:?}",
+            a.name, a.kind, a.method, a.m, a.inputs, a.output
+        );
+    }
+    // smoke-run the first layer artifact
+    if let Some(a) = rt.artifacts().iter().find(|a| a.kind == "layer") {
+        let xs = &a.inputs[0];
+        let ws = &a.inputs[1];
+        let x = Tensor4::random([xs[0], xs[1], xs[2], xs[3]], 3);
+        let w = Tensor4::random([ws[0], ws[1], ws[2], ws[3]], 4);
+        let out = rt.execute(&a.name, &[&x, &w]).expect("execute");
+        println!("smoke-ran '{}' -> {:?} ✓", a.name, out.shape);
+    }
+}
+
+fn run_layer(args: &[String]) {
+    let name = flag(args, "--layer").unwrap_or_else(|| "vgg5.1".into());
+    let batch: usize = flag(args, "--batch").and_then(|v| v.parse().ok()).unwrap_or(1);
+    let max_x: usize = flag(args, "--maxx").and_then(|v| v.parse().ok()).unwrap_or(58);
+    let layer = nets::paper_layers()
+        .into_iter()
+        .find(|l| l.name == name)
+        .unwrap_or_else(|| {
+            eprintln!("unknown layer '{name}'");
+            std::process::exit(1)
+        })
+        .scaled(batch, max_x);
+    let host = probe_host();
+    let choice = select(&layer.shape, &host);
+    let algo = match choice.method {
+        Method::Winograd => ConvAlgorithm::Winograd { m: choice.m },
+        Method::RegularFft => ConvAlgorithm::RegularFft { m: choice.m },
+        Method::GaussFft => ConvAlgorithm::GaussFft { m: choice.m },
+    };
+    let p = layer.problem();
+    let x = Tensor4::random(p.input_shape(), 5);
+    let w = Tensor4::random(p.weight_shape(), 6);
+    let t0 = std::time::Instant::now();
+    let out = conv::run(algo, &x, &w);
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "{name} (B={batch}, x={}): {} -> {:?} in {:.2} ms ({:.2} eff GF/s)",
+        layer.shape.x,
+        algo.name(),
+        out.shape,
+        dt * 1e3,
+        p.direct_flops() as f64 / dt / 1e9
+    );
+}

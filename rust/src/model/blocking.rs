@@ -1,0 +1,139 @@
+//! Cache-blocking optimizer for the element-wise stage (paper Eqn. 13).
+//!
+//! The element-wise GEMMs keep a (c x c') sub-matrix of V cache-resident;
+//! choosing (c, c') sets the stage's data movement and therefore its
+//! arithmetic intensity.  Minimize
+//!
+//! ```text
+//! (c + alpha c') / (c c')
+//! ```
+//!
+//! subject to  c | C,  c' | C',  4 beta c c' <= cache/2,
+//! where alpha = 1 if c == C (no partial-sum re-reads) else 2, and
+//! beta = 1 for real-valued V (Winograd, Gauss-FFT) or 2 for complex V
+//! (Regular-FFT).
+
+/// The optimizer's result.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Blocking {
+    pub c: usize,
+    pub cp: usize,
+    pub alpha: f64,
+    /// the minimized (c + alpha c')/(c c') — bytes moved per 2 FLOPs unit
+    pub objective: f64,
+}
+
+fn divisors(n: usize) -> Vec<usize> {
+    let mut d: Vec<usize> = (1..=n).filter(|i| n % i == 0).collect();
+    d.sort_unstable();
+    d
+}
+
+/// Solve Eqn. 13 for a layer with C input and C' output channels on a
+/// system with `cache` bytes of per-core cache; `beta` = 1 (real) or 2
+/// (complex).
+pub fn optimize(c_total: usize, cp_total: usize, cache: usize, beta: usize) -> Blocking {
+    let budget = cache / 2; // half the cache for V's sub-matrix
+    let mut best: Option<Blocking> = None;
+    for &c in &divisors(c_total) {
+        for &cp in &divisors(cp_total) {
+            if 4 * beta * c * cp > budget {
+                continue;
+            }
+            let alpha = if c == c_total { 1.0 } else { 2.0 };
+            let objective = (c as f64 + alpha * cp as f64) / (c * cp) as f64;
+            if best.as_ref().map_or(true, |b| objective < b.objective) {
+                best = Some(Blocking {
+                    c,
+                    cp,
+                    alpha,
+                    objective,
+                });
+            }
+        }
+    }
+    // tiny caches may not fit even 1x1 blocks at beta=2; degrade gracefully
+    best.unwrap_or(Blocking {
+        c: 1,
+        cp: 1,
+        alpha: if c_total == 1 { 1.0 } else { 2.0 },
+        objective: if c_total == 1 { 2.0 } else { 3.0 },
+    })
+}
+
+/// Arithmetic intensity of the element-wise stage (paper Table 2, AI row):
+/// real GEMM (Winograd / Gauss-FFT): cc'/(2(c + alpha c'));
+/// complex GEMM (Regular-FFT): cc'/(c + alpha c').
+pub fn elementwise_ai(c_total: usize, cp_total: usize, cache: usize, complex_gemm: bool) -> f64 {
+    let beta = if complex_gemm { 2 } else { 1 };
+    let b = optimize(c_total, cp_total, cache, beta);
+    let denom = b.c as f64 + b.alpha * b.cp as f64;
+    if complex_gemm {
+        (b.c * b.cp) as f64 / denom
+    } else {
+        (b.c * b.cp) as f64 / (2.0 * denom)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn whole_matrix_fits_small_layer() {
+        // 32x32 real blocks need 4*32*32 = 4KB <= cache/2 -> c = C
+        let b = optimize(32, 32, 64 * 1024, 1);
+        assert_eq!((b.c, b.cp), (32, 32));
+        assert_eq!(b.alpha, 1.0);
+    }
+
+    #[test]
+    fn constrained_by_cache() {
+        // 512x512 real: 4*512*512 = 1MB > 512KB/2; must sub-block
+        let b = optimize(512, 512, 512 * 1024, 1);
+        assert!(4 * b.c * b.cp <= 512 * 1024 / 2);
+        assert!(b.c < 512 || b.cp < 512);
+    }
+
+    #[test]
+    fn complex_blocks_are_smaller() {
+        let real = optimize(256, 256, 256 * 1024, 1);
+        let cplx = optimize(256, 256, 256 * 1024, 2);
+        assert!(cplx.c * cplx.cp <= real.c * real.cp);
+    }
+
+    #[test]
+    fn ai_grows_with_cache_fig4() {
+        // the monotonicity behind Fig. 4
+        let mut prev = 0.0;
+        for cache in [128, 256, 512, 1024, 2048] {
+            let ai = elementwise_ai(256, 256, cache * 1024, false);
+            assert!(ai >= prev, "cache {cache}K: {ai} < {prev}");
+            prev = ai;
+        }
+    }
+
+    #[test]
+    fn complex_ai_higher_than_real_fig4() {
+        // the paper's key Fig. 4 observation: at equal cache, complex
+        // GEMM attains higher AI
+        for cache in [256, 512, 1024] {
+            let real = elementwise_ai(512, 512, cache * 1024, false);
+            let cplx = elementwise_ai(512, 512, cache * 1024, true);
+            assert!(cplx > real, "cache {cache}K: {cplx} vs {real}");
+        }
+    }
+
+    #[test]
+    fn ai_grows_with_channels() {
+        let small = elementwise_ai(32, 32, 1024 * 1024, false);
+        let large = elementwise_ai(512, 512, 1024 * 1024, false);
+        assert!(large > small);
+    }
+
+    #[test]
+    fn degenerate_cache_survives() {
+        let b = optimize(64, 64, 4, 2); // nothing fits
+        assert_eq!((b.c, b.cp), (1, 1));
+    }
+}

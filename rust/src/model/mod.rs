@@ -1,0 +1,18 @@
+//! The paper's Roofline performance model (§5 and Appendix A):
+//! per-stage FLOP / data-movement / arithmetic-intensity accounting
+//! (Table 2), the cache-blocking optimizer (Eqn. 13), running-time and
+//! speedup estimators (Eqns. 7-10), the benchmarked machine catalog
+//! (Table 1) plus host probes, and the model-driven tile/algorithm
+//! selector that reproduces the paper's "optimal FFT tiles are often
+//! non-powers-of-two" observation.
+
+pub mod blocking;
+pub mod machine;
+pub mod paper_data;
+pub mod roofline;
+pub mod select;
+pub mod stages;
+
+pub use machine::Machine;
+pub use roofline::{layer_time, speedup, TimeBreakdown};
+pub use stages::{LayerShape, Method};

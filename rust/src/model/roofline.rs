@@ -1,0 +1,236 @@
+//! Roofline running-time and speedup estimators (paper Eqns. 7-10).
+//!
+//! Each stage is either compute-bound (time = FPO / PeakFLOPS) or
+//! memory-bound (time = DM / MB), per Eqn. 8; stage times accumulate
+//! (Eqn. 9); relative performance of two methods is the ratio of totals
+//! (Eqn. 10) and — as the paper emphasizes — depends only on the
+//! machine's CMR and cache size, not its absolute speed.
+
+use super::machine::Machine;
+use super::stages::{layer_model, LayerShape, Method};
+
+/// Per-stage and total predicted seconds.
+#[derive(Clone, Copy, Debug)]
+pub struct TimeBreakdown {
+    pub stages: [f64; 4],
+    pub total: f64,
+    /// which stages were memory-bound under this machine's roofline
+    pub memory_bound: [bool; 4],
+    pub m: usize,
+}
+
+/// Eqns. 8-9 for one (method, layer, m) on `machine`.
+pub fn layer_time(method: Method, l: &LayerShape, m: usize, machine: &Machine) -> TimeBreakdown {
+    let lm = layer_model(method, l, m, machine.cache);
+    let peak = machine.gflops * 1e9;
+    let mb = machine.mb * 1e9;
+    let mut stages = [0.0f64; 4];
+    let mut bound = [false; 4];
+    for (i, s) in lm.stages.iter().enumerate() {
+        let t_compute = s.fpo / peak;
+        let t_memory = s.dm / mb;
+        stages[i] = t_compute.max(t_memory);
+        bound[i] = t_memory > t_compute;
+    }
+    TimeBreakdown {
+        stages,
+        total: stages.iter().sum(),
+        memory_bound: bound,
+        m,
+    }
+}
+
+/// Winograd transform-size cap: vendors (and the paper) limit transforms
+/// to 6x6 because of numerical instability (§4), i.e. m + r - 1 <= 6.
+pub fn winograd_max_m(r: usize) -> usize {
+    (6usize.saturating_sub(r) + 1).max(1)
+}
+
+/// Largest FFT tile swept by the model (paper sweeps to t = 32).
+pub const FFT_MAX_M: usize = 32;
+
+/// Best tile size for (method, layer) on `machine`: argmin over admissible
+/// m of the Eqn. 9 total (paper §5.1: "tile sizes are chosen to minimize
+/// the total running time").
+pub fn best_tile(method: Method, l: &LayerShape, machine: &Machine) -> TimeBreakdown {
+    let max_m = match method {
+        Method::Winograd => winograd_max_m(l.r),
+        _ => FFT_MAX_M.min(l.x - l.r + 1),
+    };
+    let mut best: Option<TimeBreakdown> = None;
+    for m in 1..=max_m.max(1) {
+        let tb = layer_time(method, l, m, machine);
+        if best.as_ref().map_or(true, |b| tb.total < b.total) {
+            best = Some(tb);
+        }
+    }
+    best.unwrap()
+}
+
+/// Eqn. 10: Speedup(A, B) = time_B / time_A (> 1 means A faster), with
+/// per-method optimal tiles.
+pub fn speedup(a: Method, b: Method, l: &LayerShape, machine: &Machine) -> f64 {
+    let ta = best_tile(a, l, machine).total;
+    let tb = best_tile(b, l, machine).total;
+    tb / ta
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::machine::{xeon_gold, Machine, TABLE1};
+
+    fn vgg12() -> LayerShape {
+        LayerShape {
+            b: 64,
+            c: 64,
+            k: 64,
+            x: 226,
+            r: 3,
+        }
+    }
+
+    fn vgg42() -> LayerShape {
+        LayerShape {
+            b: 64,
+            c: 512,
+            k: 512,
+            x: 30,
+            r: 3,
+        }
+    }
+
+    #[test]
+    fn winograd_cap_matches_vendors() {
+        assert_eq!(winograd_max_m(3), 4); // F(4^2,3^2): 6x6 transform
+        assert_eq!(winograd_max_m(5), 2); // F(2^2,5^2): 6x6 transform
+    }
+
+    #[test]
+    fn times_positive_and_finite() {
+        let m = xeon_gold();
+        for method in Method::ALL {
+            let tb = best_tile(method, &vgg12(), &m);
+            assert!(tb.total > 0.0 && tb.total.is_finite());
+        }
+    }
+
+    #[test]
+    fn transform_stages_memory_bound_on_modern_cpus() {
+        // §5.3: transform AI << CMR on all Table-1 systems
+        let m = xeon_gold();
+        let tb = layer_time(Method::RegularFft, &vgg12(), 8, &m);
+        assert!(tb.memory_bound[0], "input transform should be DM-bound");
+        assert!(tb.memory_bound[3], "output transform should be DM-bound");
+    }
+
+    fn geomean_speedup(machine: &Machine) -> f64 {
+        let layers = crate::nets::paper_layers();
+        let s: f64 = layers
+            .iter()
+            .map(|l| {
+                speedup(Method::RegularFft, Method::Winograd, &l.shape, machine).ln()
+            })
+            .sum();
+        (s / layers.len() as f64).exp()
+    }
+
+    #[test]
+    fn fft_speedup_grows_with_cmr() {
+        // the paper's headline trend (Fig. 3): the Regular-FFT vs Winograd
+        // speedup, averaged over the benchmark layers, increases with the
+        // system's compute-to-memory ratio
+        let lo = Machine::new("lo", 10, 1100.0, 512, 1024 * 1024, 100.0); // CMR 11
+        let hi = Machine::new("hi", 10, 4100.0, 512, 1024 * 1024, 100.0); // CMR 41
+        let s_lo = geomean_speedup(&lo);
+        let s_hi = geomean_speedup(&hi);
+        assert!(
+            s_hi > s_lo,
+            "speedup should grow with CMR: {s_lo:.3} -> {s_hi:.3}"
+        );
+    }
+
+    #[test]
+    fn fft_wins_on_average_across_table1() {
+        // the paper's conclusion: FFT-based convolution wins "more often
+        // than not" across the 12 benchmark layers and 10 systems, and on
+        // (geometric) average is faster
+        let layers = crate::nets::paper_layers();
+        let mut wins = 0usize;
+        let mut total = 0usize;
+        for mach in TABLE1.iter() {
+            for l in &layers {
+                total += 1;
+                if speedup(Method::RegularFft, Method::Winograd, &l.shape, mach) > 1.0 {
+                    wins += 1;
+                }
+            }
+        }
+        assert!(
+            wins * 2 > total,
+            "Regular-FFT should win more often than not ({wins}/{total})"
+        );
+        for mach in TABLE1.iter() {
+            assert!(
+                geomean_speedup(mach) > 1.0,
+                "{}: geomean <= 1",
+                mach.name
+            );
+        }
+    }
+
+    #[test]
+    fn winograd_wins_big_channel_layers_on_big_cache() {
+        // the flip side the paper stresses (§5.3 "depends on the layer
+        // and the system"): on Xeon Gold (1MB L2, CMR 24), the
+        // 512-channel late-VGG layers favor Winograd
+        let s = speedup(Method::RegularFft, Method::Winograd, &vgg42(), &xeon_gold());
+        assert!(s < 1.0, "vgg4.2 should favor Winograd on Xeon Gold: {s:.3}");
+        // ... while the early small-channel layers favor FFT
+        let s12 = speedup(Method::RegularFft, Method::Winograd, &vgg12(), &xeon_gold());
+        assert!(s12 > 1.0, "vgg1.2 should favor Regular-FFT: {s12:.3}");
+    }
+
+    #[test]
+    fn alexnet2_5x5_kernels_strongly_favor_fft() {
+        // r=5 caps Winograd at F(2^2,5^2) (18 elementwise FLOPs/pixel)
+        // while FFT runs t=31 tiles — the paper's biggest margin
+        let l = LayerShape {
+            b: 128,
+            c: 64,
+            k: 192,
+            x: 31,
+            r: 5,
+        };
+        let s = speedup(Method::RegularFft, Method::Winograd, &l, &xeon_gold());
+        assert!(s > 1.5, "alexnet2 speedup {s:.3}");
+    }
+
+    #[test]
+    fn optimal_fft_tiles_not_power_of_two() {
+        // §4 "FFT transform sizes": on at least some layer/machine combos
+        // the best FFT tile is not a power of two
+        let m = xeon_gold();
+        let mut non_pow2 = false;
+        for l in [vgg12(), vgg42()] {
+            let tb = best_tile(Method::RegularFft, &l, &m);
+            let t = tb.m + l.r - 1;
+            if !t.is_power_of_two() {
+                non_pow2 = true;
+            }
+        }
+        assert!(non_pow2, "expected some non-power-of-two optimal tile");
+    }
+
+    #[test]
+    fn speedup_depends_only_on_cmr_and_cache() {
+        // Eqn. 10's scale invariance: doubling both GFLOPS and MB leaves
+        // the predicted speedup unchanged
+        let l = vgg42();
+        let a = Machine::new("a", 10, 1500.0, 512, 1024 * 1024, 75.0);
+        let b = Machine::new("b", 20, 3000.0, 512, 1024 * 1024, 150.0);
+        let sa = speedup(Method::RegularFft, Method::Winograd, &l, &a);
+        let sb = speedup(Method::RegularFft, Method::Winograd, &l, &b);
+        assert!((sa - sb).abs() < 1e-9);
+    }
+}

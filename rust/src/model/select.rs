@@ -1,0 +1,157 @@
+//! Model-driven algorithm + tile selection (the autotuner).
+//!
+//! Given a layer and a machine, pick the (method, m) minimizing the
+//! Eqn. 9 predicted time.  Optionally refine with on-host measurement
+//! ("measure mode"): run the shortlisted candidates through the native
+//! engine and keep the empirically fastest — the paper's protocol for
+//! choosing per-layer configurations (§5.1).
+
+use super::machine::Machine;
+use super::roofline::{best_tile, layer_time, winograd_max_m, FFT_MAX_M};
+use super::stages::{LayerShape, Method};
+use crate::conv::{run, ConvAlgorithm, Tensor4};
+use std::time::Instant;
+
+/// A scored configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Choice {
+    pub method: Method,
+    pub m: usize,
+    /// model-predicted seconds
+    pub predicted: f64,
+    /// measured seconds (None in model-only mode)
+    pub measured: Option<f64>,
+}
+
+/// Model-only selection across all three methods.
+pub fn select(l: &LayerShape, machine: &Machine) -> Choice {
+    let mut best: Option<Choice> = None;
+    for method in Method::ALL {
+        let tb = best_tile(method, l, machine);
+        let cand = Choice {
+            method,
+            m: tb.m,
+            predicted: tb.total,
+            measured: None,
+        };
+        if best.as_ref().map_or(true, |b| cand.predicted < b.predicted) {
+            best = Some(cand);
+        }
+    }
+    best.unwrap()
+}
+
+/// Per-method best tiles (for reporting the paper's tile-size table).
+pub fn best_tiles_per_method(l: &LayerShape, machine: &Machine) -> Vec<Choice> {
+    Method::ALL
+        .iter()
+        .map(|&method| {
+            let tb = best_tile(method, l, machine);
+            Choice {
+                method,
+                m: tb.m,
+                predicted: tb.total,
+                measured: None,
+            }
+        })
+        .collect()
+}
+
+/// Shortlist the `top` candidate (method, m) pairs by predicted time.
+pub fn shortlist(l: &LayerShape, machine: &Machine, top: usize) -> Vec<Choice> {
+    let mut all = Vec::new();
+    for method in Method::ALL {
+        let max_m = match method {
+            Method::Winograd => winograd_max_m(l.r),
+            _ => FFT_MAX_M.min(l.x - l.r + 1),
+        };
+        for m in 1..=max_m {
+            let tb = layer_time(method, l, m, machine);
+            all.push(Choice {
+                method,
+                m,
+                predicted: tb.total,
+                measured: None,
+            });
+        }
+    }
+    all.sort_by(|a, b| a.predicted.partial_cmp(&b.predicted).unwrap());
+    all.truncate(top);
+    all
+}
+
+/// Measure-mode refinement: run the shortlist on the native engine with a
+/// scaled-down batch and keep the fastest (ties broken by the model).
+pub fn select_measured(l: &LayerShape, machine: &Machine, top: usize, batch: usize) -> Choice {
+    let mut cands = shortlist(l, machine, top);
+    let x = Tensor4::random([batch, l.c, l.x, l.x], 0xBEEF);
+    let w = Tensor4::random([l.k, l.c, l.r, l.r], 0xFEED);
+    for cand in cands.iter_mut() {
+        let algo = match cand.method {
+            Method::Winograd => ConvAlgorithm::Winograd { m: cand.m },
+            Method::RegularFft => ConvAlgorithm::RegularFft { m: cand.m },
+            Method::GaussFft => ConvAlgorithm::GaussFft { m: cand.m },
+        };
+        let t0 = Instant::now();
+        let out = run(algo, &x, &w);
+        cand.measured = Some(t0.elapsed().as_secs_f64());
+        std::hint::black_box(&out);
+    }
+    cands
+        .into_iter()
+        .min_by(|a, b| {
+            a.measured
+                .unwrap()
+                .partial_cmp(&b.measured.unwrap())
+                .unwrap()
+        })
+        .unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::machine::xeon_gold;
+
+    fn small_layer() -> LayerShape {
+        LayerShape {
+            b: 1,
+            c: 16,
+            k: 16,
+            x: 34,
+            r: 3,
+        }
+    }
+
+    #[test]
+    fn select_returns_admissible_tile() {
+        let c = select(&small_layer(), &xeon_gold());
+        assert!(c.m >= 1);
+        if c.method == Method::Winograd {
+            assert!(c.m + 3 - 1 <= 6);
+        }
+        assert!(c.predicted > 0.0);
+    }
+
+    #[test]
+    fn shortlist_is_sorted_and_bounded() {
+        let s = shortlist(&small_layer(), &xeon_gold(), 5);
+        assert_eq!(s.len(), 5);
+        for w in s.windows(2) {
+            assert!(w[0].predicted <= w[1].predicted);
+        }
+    }
+
+    #[test]
+    fn per_method_best_covers_all_methods() {
+        let v = best_tiles_per_method(&small_layer(), &xeon_gold());
+        assert_eq!(v.len(), 3);
+        assert_eq!(v[0].method, Method::Winograd);
+    }
+
+    #[test]
+    fn measured_mode_runs_and_picks_one() {
+        let c = select_measured(&small_layer(), &xeon_gold(), 3, 1);
+        assert!(c.measured.unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,133 @@
+//! The paper's benchmark workloads: every distinct convolutional layer of
+//! VGG-16 and AlexNet (§4), with the paper's naming, plus scaled variants
+//! for single-host measurement.
+
+use crate::conv::ConvProblem;
+use crate::model::stages::LayerShape;
+
+/// A named benchmark layer.
+#[derive(Clone, Copy, Debug)]
+pub struct NetLayer {
+    pub name: &'static str,
+    pub shape: LayerShape,
+}
+
+impl NetLayer {
+    pub const fn new(name: &'static str, b: usize, c: usize, k: usize, x: usize, r: usize) -> Self {
+        NetLayer {
+            name,
+            shape: LayerShape { b, c, k, x, r },
+        }
+    }
+
+    /// As an engine problem (square images).
+    pub fn problem(&self) -> ConvProblem {
+        ConvProblem {
+            batch: self.shape.b,
+            c_in: self.shape.c,
+            c_out: self.shape.k,
+            h: self.shape.x,
+            w: self.shape.x,
+            r: self.shape.r,
+        }
+    }
+
+    /// Scale batch (and optionally spatial size) for host-sized runs.
+    pub fn scaled(&self, batch: usize, max_x: usize) -> NetLayer {
+        let mut l = *self;
+        l.shape.b = batch;
+        if l.shape.x > max_x {
+            l.shape.x = max_x;
+        }
+        l
+    }
+}
+
+/// VGG-16's distinct conv layers (paper Fig. 1 naming; spatial sizes
+/// include VGG's pad=1, i.e. a 224 feature map convolves at 226).
+/// vgg1.1 (C=3) is excluded, as in the paper; vgg5.2 == vgg5.1.
+pub fn vgg(batch: usize) -> Vec<NetLayer> {
+    vec![
+        NetLayer::new("vgg1.2", batch, 64, 64, 226, 3),
+        NetLayer::new("vgg2.1", batch, 64, 128, 114, 3),
+        NetLayer::new("vgg2.2", batch, 128, 128, 114, 3),
+        NetLayer::new("vgg3.1", batch, 128, 256, 58, 3),
+        NetLayer::new("vgg3.2", batch, 256, 256, 58, 3),
+        NetLayer::new("vgg4.1", batch, 256, 512, 30, 3),
+        NetLayer::new("vgg4.2", batch, 512, 512, 30, 3),
+        NetLayer::new("vgg5.1", batch, 512, 512, 16, 3),
+    ]
+}
+
+/// AlexNet's distinct unit-stride conv layers 2-5 (layer 1 is strided and
+/// excluded by the paper).  Layer 2 has the 5x5 kernels the vendor
+/// Winograd libraries cannot handle.
+pub fn alexnet(batch: usize) -> Vec<NetLayer> {
+    vec![
+        NetLayer::new("alexnet2", batch, 64, 192, 31, 5),
+        NetLayer::new("alexnet3", batch, 192, 384, 15, 3),
+        NetLayer::new("alexnet4", batch, 384, 256, 15, 3),
+        NetLayer::new("alexnet5", batch, 256, 256, 15, 3),
+    ]
+}
+
+/// The paper's full 12-layer benchmark set (VGG B=64, AlexNet B=128).
+pub fn paper_layers() -> Vec<NetLayer> {
+    let mut v = vgg(64);
+    v.extend(alexnet(128));
+    v
+}
+
+/// Host-sized variants: small batch, spatial size capped, preserving
+/// channel structure (what the empirical anchors run on; DESIGN.md §3).
+pub fn host_layers(batch: usize, max_x: usize) -> Vec<NetLayer> {
+    paper_layers()
+        .into_iter()
+        .map(|l| l.scaled(batch, max_x))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn twelve_distinct_layers() {
+        assert_eq!(paper_layers().len(), 12);
+    }
+
+    #[test]
+    fn names_match_paper() {
+        let names: Vec<&str> = paper_layers().iter().map(|l| l.name).collect();
+        assert_eq!(
+            names,
+            [
+                "vgg1.2", "vgg2.1", "vgg2.2", "vgg3.1", "vgg3.2", "vgg4.1", "vgg4.2",
+                "vgg5.1", "alexnet2", "alexnet3", "alexnet4", "alexnet5"
+            ]
+        );
+    }
+
+    #[test]
+    fn alexnet2_is_5x5() {
+        let l = &alexnet(128)[0];
+        assert_eq!(l.shape.r, 5);
+    }
+
+    #[test]
+    fn problem_roundtrip() {
+        let l = &vgg(64)[0];
+        let p = l.problem();
+        assert_eq!(p.out_h(), 224);
+        assert_eq!(p.c_in, 64);
+    }
+
+    #[test]
+    fn scaling_caps_spatial() {
+        let l = vgg(64)[0].scaled(1, 66);
+        assert_eq!(l.shape.b, 1);
+        assert_eq!(l.shape.x, 66);
+        // channels preserved
+        assert_eq!(l.shape.c, 64);
+    }
+}

@@ -1,0 +1,227 @@
+//! PJRT runtime: load the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them from rust — the request-path
+//! half of the three-layer architecture (Python never runs here).
+//!
+//! Interchange is HLO *text*: jax >= 0.5 emits `HloModuleProto`s with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+use crate::conv::Tensor4;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// One artifact's manifest entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    /// "layer" (x, w) or "convnet" (x, w1..wn)
+    pub kind: String,
+    pub method: String,
+    pub m: usize,
+    pub inputs: Vec<Vec<usize>>,
+    pub output: Vec<usize>,
+    pub file: String,
+}
+
+/// PJRT client + artifact registry + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    artifacts: Vec<ArtifactMeta>,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+/// Default artifacts directory (relative to the repo root / CWD).
+pub fn default_artifact_dir() -> PathBuf {
+    PathBuf::from("artifacts")
+}
+
+/// True if `make artifacts` has produced a manifest (tests skip otherwise).
+pub fn artifacts_available(dir: &Path) -> bool {
+    dir.join("manifest.json").exists()
+}
+
+impl Runtime {
+    /// Open the artifact directory and parse its manifest.
+    pub fn open(dir: &Path) -> Result<Runtime> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let mut artifacts = Vec::new();
+        for a in json
+            .get("artifacts")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing artifacts[]"))?
+        {
+            let shape_list = |key: &str| -> Vec<Vec<usize>> {
+                a.get(key)
+                    .and_then(|v| v.as_arr())
+                    .map(|arr| {
+                        arr.iter()
+                            .map(|s| {
+                                s.as_arr()
+                                    .unwrap_or(&[])
+                                    .iter()
+                                    .filter_map(|d| d.as_usize())
+                                    .collect()
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default()
+            };
+            artifacts.push(ArtifactMeta {
+                name: a
+                    .get("name")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("artifact missing name"))?
+                    .to_string(),
+                kind: a
+                    .get("kind")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("layer")
+                    .to_string(),
+                method: a
+                    .get("method")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("?")
+                    .to_string(),
+                m: a.get("m").and_then(|v| v.as_usize()).unwrap_or(0),
+                inputs: shape_list("inputs"),
+                output: a
+                    .get("output")
+                    .and_then(|v| v.as_arr())
+                    .map(|arr| arr.iter().filter_map(|d| d.as_usize()).collect())
+                    .unwrap_or_default(),
+                file: a
+                    .get("file")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("artifact missing file"))?
+                    .to_string(),
+            });
+        }
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            dir: dir.to_path_buf(),
+            artifacts,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn artifacts(&self) -> &[ArtifactMeta] {
+        &self.artifacts
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Compile (or fetch the cached) executable for an artifact.
+    pub fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let meta = self
+            .find(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?
+            .clone();
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(self.client.compile(&comp)?);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact on f32 tensors, validating shapes against the
+    /// manifest; returns the (single, tuple-unwrapped) output tensor.
+    pub fn execute(&self, name: &str, inputs: &[&Tensor4]) -> Result<Tensor4> {
+        let meta = self
+            .find(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?
+            .clone();
+        if inputs.len() != meta.inputs.len() {
+            bail!(
+                "artifact '{name}' wants {} inputs, got {}",
+                meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (x, want)) in inputs.iter().zip(&meta.inputs).enumerate() {
+            let got: Vec<usize> = x.shape.to_vec();
+            if &got != want {
+                bail!("artifact '{name}' input {i}: shape {got:?} != manifest {want:?}");
+            }
+        }
+        let exe = self.executable(name)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|x| {
+                let dims: Vec<i64> = x.shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(&x.data).reshape(&dims)
+            })
+            .collect::<std::result::Result<_, _>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True
+        let out = result.to_tuple1()?;
+        let data = out.to_vec::<f32>()?;
+        let shape: [usize; 4] = match meta.output.len() {
+            4 => [
+                meta.output[0],
+                meta.output[1],
+                meta.output[2],
+                meta.output[3],
+            ],
+            n => bail!("unsupported output rank {n}"),
+        };
+        if data.len() != shape.iter().product::<usize>() {
+            bail!(
+                "artifact '{name}': output length {} != manifest shape {:?}",
+                data.len(),
+                shape
+            );
+        }
+        Ok(Tensor4::from_vec(shape, data))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // PJRT integration tests live in rust/tests/pjrt_artifacts.rs (they
+    // need `make artifacts`); here we cover manifest parsing only.
+
+    #[test]
+    fn manifest_parsing_from_synthetic_json() {
+        let dir = std::env::temp_dir().join("fftconv_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"artifacts": [{"name": "a", "kind": "layer", "method": "winograd",
+                 "m": 4, "inputs": [[1,2,8,8],[2,2,3,3]], "output": [1,2,6,6],
+                 "file": "a.hlo.txt"}]}"#,
+        )
+        .unwrap();
+        let rt = Runtime::open(&dir).unwrap();
+        assert_eq!(rt.artifacts().len(), 1);
+        let a = rt.find("a").unwrap();
+        assert_eq!(a.inputs, vec![vec![1, 2, 8, 8], vec![2, 2, 3, 3]]);
+        assert_eq!(a.output, vec![1, 2, 6, 6]);
+        assert!(rt.find("nope").is_none());
+    }
+
+    #[test]
+    fn artifacts_available_detects_manifest() {
+        assert!(!artifacts_available(Path::new("/nonexistent/dir")));
+    }
+}

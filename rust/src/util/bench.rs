@@ -1,0 +1,240 @@
+//! Micro-benchmark harness (criterion substitute, DESIGN.md §3).
+//!
+//! Adaptive warmup + median-of-N timing, plus report emitters shared by all
+//! `rust/benches/*` binaries: aligned markdown tables, CSV files under
+//! `bench_out/`, and ASCII line plots for the figure benches.
+
+use std::time::{Duration, Instant};
+
+/// Timing summary for one benchmarked operation.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub median: Duration,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub iters: usize,
+}
+
+impl BenchResult {
+    pub fn median_ms(&self) -> f64 {
+        self.median.as_secs_f64() * 1e3
+    }
+}
+
+/// Benchmark `f`, autoscaling iteration count to ~`budget_ms` total.
+///
+/// Returns median-of-iters wall clock. `f` should return something cheap
+/// to move (use `std::hint::black_box` inside for dead-code safety).
+pub fn bench<F: FnMut()>(name: &str, budget_ms: u64, mut f: F) -> BenchResult {
+    // one mandatory warmup (page-in, lazy init, branch predictors)
+    f();
+    // estimate single-shot cost
+    let t0 = Instant::now();
+    f();
+    let single = t0.elapsed().max(Duration::from_nanos(100));
+
+    let budget = Duration::from_millis(budget_ms.max(1));
+    let iters = (budget.as_nanos() / single.as_nanos()).clamp(3, 101) as usize;
+
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    samples.sort();
+    let median = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+    BenchResult {
+        name: name.to_string(),
+        median,
+        mean,
+        min: samples[0],
+        max: *samples.last().unwrap(),
+        iters,
+    }
+}
+
+/// A rows-and-columns report table with aligned markdown output.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "ragged table row");
+        self.rows.push(cells);
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            s
+        };
+        let mut out = format!("\n### {}\n\n", self.title);
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = self
+            .headers
+            .iter()
+            .map(|h| esc(h))
+            .collect::<Vec<_>>()
+            .join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write CSV under `bench_out/<stem>.csv` and print markdown to stdout.
+    pub fn emit(&self, stem: &str) {
+        println!("{}", self.to_markdown());
+        let dir = std::path::Path::new("bench_out");
+        if std::fs::create_dir_all(dir).is_ok() {
+            let path = dir.join(format!("{stem}.csv"));
+            if let Err(e) = std::fs::write(&path, self.to_csv()) {
+                eprintln!("warn: could not write {}: {e}", path.display());
+            } else {
+                println!("[csv] {}", path.display());
+            }
+        }
+    }
+}
+
+/// ASCII scatter/line plot: series of (x, y) with labels — used by the
+/// figure benches to sketch the paper's plots in the terminal.
+pub fn ascii_plot(title: &str, series: &[(&str, Vec<(f64, f64)>)], width: usize, height: usize) -> String {
+    let mut pts: Vec<(f64, f64)> = Vec::new();
+    for (_, s) in series {
+        pts.extend_from_slice(s);
+    }
+    if pts.is_empty() {
+        return format!("{title}: (no data)\n");
+    }
+    let (mut x0, mut x1) = (f64::MAX, f64::MIN);
+    let (mut y0, mut y1) = (f64::MAX, f64::MIN);
+    for &(x, y) in &pts {
+        x0 = x0.min(x);
+        x1 = x1.max(x);
+        y0 = y0.min(y);
+        y1 = y1.max(y);
+    }
+    if (x1 - x0).abs() < 1e-12 {
+        x1 = x0 + 1.0;
+    }
+    if (y1 - y0).abs() < 1e-12 {
+        y1 = y0 + 1.0;
+    }
+    let mut grid = vec![vec![b' '; width]; height];
+    let marks = [b'*', b'o', b'+', b'x', b'#', b'@'];
+    for (si, (_, s)) in series.iter().enumerate() {
+        for &(x, y) in s {
+            let cx = (((x - x0) / (x1 - x0)) * (width - 1) as f64).round() as usize;
+            let cy = (((y - y0) / (y1 - y0)) * (height - 1) as f64).round() as usize;
+            grid[height - 1 - cy][cx] = marks[si % marks.len()];
+        }
+    }
+    let mut out = format!("{title}\n  y: {y0:.3} .. {y1:.3}\n");
+    for row in grid {
+        out.push_str("  |");
+        out.push_str(std::str::from_utf8(&row).unwrap());
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "  +{}\n   x: {x0:.2} .. {x1:.2}   ",
+        "-".repeat(width)
+    ));
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("[{}]={} ", marks[si % marks.len()] as char, name));
+    }
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        let r = bench("noop-ish", 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.iters >= 3);
+        assert!(r.min <= r.median && r.median <= r.max);
+    }
+
+    #[test]
+    fn table_markdown_and_csv() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["1".into(), "x,y".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("### T") && md.contains("| 1 |"));
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn plot_renders_all_series() {
+        let p = ascii_plot(
+            "demo",
+            &[
+                ("up", vec![(0.0, 0.0), (1.0, 1.0)]),
+                ("down", vec![(0.0, 1.0), (1.0, 0.0)]),
+            ],
+            20,
+            8,
+        );
+        assert!(p.contains('*') && p.contains('o'));
+    }
+}

@@ -1,0 +1,17 @@
+//! Shared infrastructure: deterministic RNG, a micro-benchmark harness, a
+//! minimal JSON reader/writer, a static fork-join thread pool, statistics,
+//! and an in-repo property-testing helper.
+//!
+//! The offline crate registry only carries the `xla` closure, so the usual
+//! suspects (serde, criterion, rayon, proptest) are re-implemented here at
+//! the scale this repo needs — see DESIGN.md §3 (substitutions).
+
+pub mod bench;
+pub mod json;
+pub mod quickcheck;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+
+pub use bench::{bench, BenchResult};
+pub use rng::Rng;

@@ -1,0 +1,122 @@
+//! In-repo property-testing helper (proptest substitute, DESIGN.md §3).
+//!
+//! A property is a closure from a seeded [`crate::util::Rng`] to
+//! `Result<(), String>`.  The runner executes it over many seeds and, on
+//! failure, reports the failing seed so the case can be replayed as a
+//! plain unit test.  Generators for the common shapes live here too.
+
+use super::rng::Rng;
+
+/// Run `prop` for `cases` seeds. Panics (with the seed) on first failure.
+pub fn check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case as u64).wrapping_mul(0x9E37_79B9);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert two slices are element-wise close (absolute + relative).
+pub fn assert_close(a: &[f32], b: &[f32], atol: f64, rtol: f64) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    let mut worst = 0.0f64;
+    let mut worst_i = 0usize;
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let diff = (x as f64 - y as f64).abs();
+        let bound = atol + rtol * (y as f64).abs();
+        if diff > bound && diff > worst {
+            worst = diff;
+            worst_i = i;
+        }
+    }
+    if worst > 0.0 {
+        return Err(format!(
+            "max violation {worst:.3e} at index {worst_i}: {} vs {}",
+            a[worst_i], b[worst_i]
+        ));
+    }
+    Ok(())
+}
+
+/// Random small convolution-problem dimensions for property tests.
+#[derive(Clone, Copy, Debug)]
+pub struct ConvDims {
+    pub batch: usize,
+    pub c_in: usize,
+    pub c_out: usize,
+    pub h: usize,
+    pub w: usize,
+    pub r: usize,
+    pub m: usize,
+}
+
+pub fn gen_conv_dims(rng: &mut Rng) -> ConvDims {
+    let r = [1, 2, 3, 4, 5][rng.below(5)];
+    let m = rng.range(1, 8);
+    let min_hw = r; // valid conv needs h >= r
+    ConvDims {
+        batch: rng.range(1, 3),
+        c_in: rng.range(1, 6),
+        c_out: rng.range(1, 6),
+        h: rng.range(min_hw.max(4), 18),
+        w: rng.range(min_hw.max(4), 18),
+        r,
+        m,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("trivial", 50, |rng| {
+            let v = rng.next_f64();
+            if (0.0..1.0).contains(&v) {
+                Ok(())
+            } else {
+                Err(format!("out of range: {v}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'failing'")]
+    fn check_reports_failures() {
+        check("failing", 10, |rng| {
+            if rng.next_f64() < 2.0 {
+                Err("always".to_string())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn assert_close_accepts_equal() {
+        assert_close(&[1.0, 2.0], &[1.0, 2.0], 1e-6, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn assert_close_rejects_far() {
+        assert!(assert_close(&[1.0], &[2.0], 1e-3, 1e-3).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1.0, 1.0).is_err());
+    }
+
+    #[test]
+    fn conv_dims_valid() {
+        let mut rng = Rng::new(9);
+        for _ in 0..200 {
+            let d = gen_conv_dims(&mut rng);
+            assert!(d.h >= d.r && d.w >= d.r && d.m >= 1);
+        }
+    }
+}

@@ -1,0 +1,107 @@
+//! Small statistics helpers, including the paper's model-fit metrics
+//! (relative RMSE and "fitness", §5.2).
+
+/// Arithmetic mean; 0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Median (of a copy); 0 for empty input.
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    (mean(&xs.iter().map(|x| (x - m) * (x - m)).collect::<Vec<_>>())).sqrt()
+}
+
+/// Relative root-mean-square error between predictions and measurements:
+/// rRMSE = sqrt(mean(((pred - meas) / meas)^2)) — the paper reports 0.079
+/// for Regular-FFT vs Winograd and 0.1 for Gauss-FFT vs Winograd.
+pub fn rrmse(pred: &[f64], meas: &[f64]) -> f64 {
+    assert_eq!(pred.len(), meas.len());
+    assert!(!pred.is_empty());
+    let se: f64 = pred
+        .iter()
+        .zip(meas)
+        .map(|(p, m)| {
+            let rel = (p - m) / m;
+            rel * rel
+        })
+        .sum::<f64>()
+        / pred.len() as f64;
+    se.sqrt()
+}
+
+/// The paper's fitness metric (§5.2 footnote): 100 / (1 + rRMSE), in %.
+pub fn fitness(pred: &[f64], meas: &[f64]) -> f64 {
+    100.0 / (1.0 + rrmse(pred, meas))
+}
+
+/// Geometric mean; panics on non-positive input.
+pub fn geomean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    let s: f64 = xs
+        .iter()
+        .map(|&x| {
+            assert!(x > 0.0, "geomean needs positive values");
+            x.ln()
+        })
+        .sum();
+    (s / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_median() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn stddev_known() {
+        assert!((stddev(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rrmse_zero_for_perfect_fit() {
+        let xs = [1.0, 2.0, 3.0];
+        assert_eq!(rrmse(&xs, &xs), 0.0);
+        assert_eq!(fitness(&xs, &xs), 100.0);
+    }
+
+    #[test]
+    fn rrmse_matches_hand_computation() {
+        // pred 10% high everywhere -> rRMSE = 0.1, fitness ~ 90.9%
+        let meas = [1.0, 2.0, 4.0];
+        let pred = [1.1, 2.2, 4.4];
+        assert!((rrmse(&pred, &meas) - 0.1).abs() < 1e-12);
+        assert!((fitness(&pred, &meas) - 100.0 / 1.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn geomean_known() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,234 @@
+//! Static fork-join thread pool — the paper's parallelization substrate.
+//!
+//! The paper (§3, "Parallelization Through Static Scheduling", after
+//! Zlateski & Seung 2017) assigns each core a statically computed, equal
+//! share of work and executes each stage as a single fork-join.  This pool
+//! reproduces that execution model on std threads: workers are spawned
+//! once, and `run_static` hands worker `i` its precomputed shard `i`.
+//! There is no work stealing by design — the *scheduler* (coordinator
+//! layer) is responsible for equalizing the shards, as in the paper.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Stop,
+}
+
+/// A fixed-size fork-join pool.
+pub struct ThreadPool {
+    senders: Vec<mpsc::Sender<Msg>>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn `n` workers (n >= 1).
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let mut senders = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for i in 0..n {
+            let (tx, rx) = mpsc::channel::<Msg>();
+            senders.push(tx);
+            handles.push(
+                thread::Builder::new()
+                    .name(format!("fftconv-worker-{i}"))
+                    .spawn(move || {
+                        while let Ok(Msg::Run(job)) = rx.recv() {
+                            job();
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        ThreadPool { senders, handles }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Fork-join: run `shard(i)` on worker `i` for every worker, then wait.
+    ///
+    /// `shard` must be `Sync` because all workers borrow it concurrently.
+    pub fn run_static<F>(&self, shard: F)
+    where
+        F: Fn(usize) + Send + Sync,
+    {
+        thread::scope(|scope| {
+            // The pool threads cannot borrow non-'static data, so static
+            // fork-join over borrowed shards uses a scoped spawn per call.
+            // Workers above serve the 'static Job path (`submit`).
+            let shard = &shard;
+            let mut joins = Vec::with_capacity(self.workers());
+            for i in 0..self.workers() {
+                joins.push(scope.spawn(move || shard(i)));
+            }
+            for j in joins {
+                j.join().expect("worker panicked");
+            }
+        });
+    }
+
+    /// Submit one fire-and-forget job to the least-loaded worker
+    /// (round-robin); used by the coordinator's async paths.
+    pub fn submit(&self, job: Job) {
+        static NEXT: AtomicUsize = AtomicUsize::new(0);
+        let i = NEXT.fetch_add(1, Ordering::Relaxed) % self.senders.len();
+        let _ = self.senders[i].send(Msg::Run(job));
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for tx in &self.senders {
+            let _ = tx.send(Msg::Stop);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Split `n` work items into `shards` contiguous ranges whose sizes differ
+/// by at most one — the paper's "each core is assigned roughly the same
+/// amount of computation" for uniform-cost items.
+pub fn even_ranges(n: usize, shards: usize) -> Vec<std::ops::Range<usize>> {
+    let shards = shards.max(1);
+    let base = n / shards;
+    let extra = n % shards;
+    let mut out = Vec::with_capacity(shards);
+    let mut start = 0;
+    for i in 0..shards {
+        let len = base + usize::from(i < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Split weighted items into `shards` contiguous ranges with approximately
+/// equal total weight (greedy prefix partition).  Used when tile rows have
+/// unequal cost (e.g. remainder tiles).
+pub fn weighted_ranges(weights: &[f64], shards: usize) -> Vec<std::ops::Range<usize>> {
+    let shards = shards.max(1);
+    let total: f64 = weights.iter().sum();
+    let target = total / shards as f64;
+    let mut out = Vec::with_capacity(shards);
+    let mut start = 0usize;
+    let mut acc = 0.0;
+    for i in 0..weights.len() {
+        acc += weights[i];
+        let remaining_shards = shards - out.len();
+        let remaining_items = weights.len() - (i + 1);
+        // close the shard when we reach the target, but never leave more
+        // shards than items
+        if (acc >= target && remaining_shards > 1) || remaining_items + 1 == remaining_shards {
+            out.push(start..i + 1);
+            start = i + 1;
+            acc = 0.0;
+            if out.len() == shards - 1 {
+                break;
+            }
+        }
+    }
+    out.push(start..weights.len());
+    while out.len() < shards {
+        out.push(weights.len()..weights.len());
+    }
+    out
+}
+
+/// Process-wide default pool sized to available parallelism.
+pub fn default_pool() -> Arc<ThreadPool> {
+    static POOL: Mutex<Option<Arc<ThreadPool>>> = Mutex::new(None);
+    let mut g = POOL.lock().unwrap();
+    g.get_or_insert_with(|| {
+        let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Arc::new(ThreadPool::new(n))
+    })
+    .clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn run_static_visits_every_worker() {
+        let pool = ThreadPool::new(4);
+        let hits = AtomicU64::new(0);
+        pool.run_static(|i| {
+            hits.fetch_add(1 << (8 * i), Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 0x01010101);
+    }
+
+    #[test]
+    fn run_static_joins_before_return() {
+        let pool = ThreadPool::new(3);
+        let sum = AtomicU64::new(0);
+        pool.run_static(|_| {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            sum.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn even_ranges_cover_exactly() {
+        for n in [0usize, 1, 7, 16, 100] {
+            for s in [1usize, 2, 3, 8] {
+                let rs = even_ranges(n, s);
+                assert_eq!(rs.len(), s);
+                let covered: usize = rs.iter().map(|r| r.len()).sum();
+                assert_eq!(covered, n);
+                let max = rs.iter().map(|r| r.len()).max().unwrap();
+                let min = rs.iter().map(|r| r.len()).min().unwrap();
+                assert!(max - min <= 1, "uneven: {rs:?}");
+                // contiguity
+                let mut next = 0;
+                for r in &rs {
+                    assert_eq!(r.start, next);
+                    next = r.end;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_ranges_balance() {
+        let w = vec![1.0, 1.0, 1.0, 1.0, 4.0, 4.0];
+        let rs = weighted_ranges(&w, 3);
+        assert_eq!(rs.len(), 3);
+        let sums: Vec<f64> = rs.iter().map(|r| w[r.clone()].iter().sum()).collect();
+        let total: f64 = sums.iter().sum();
+        assert!((total - 12.0).abs() < 1e-9);
+        // no shard takes more than ~half the work
+        assert!(sums.iter().all(|&s| s <= 8.0), "{sums:?}");
+    }
+
+    #[test]
+    fn weighted_ranges_more_shards_than_items() {
+        let rs = weighted_ranges(&[1.0, 1.0], 4);
+        assert_eq!(rs.len(), 4);
+        let covered: usize = rs.iter().map(|r| r.len()).sum();
+        assert_eq!(covered, 2);
+    }
+
+    #[test]
+    fn submit_runs_job() {
+        let pool = ThreadPool::new(2);
+        let (tx, rx) = mpsc::channel();
+        pool.submit(Box::new(move || {
+            tx.send(42u32).unwrap();
+        }));
+        assert_eq!(rx.recv_timeout(std::time::Duration::from_secs(5)), Ok(42));
+    }
+}

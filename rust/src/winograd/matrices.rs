@@ -1,0 +1,255 @@
+//! Cook–Toom construction of the F(m, r) matrices over exact rationals.
+//!
+//! Mirrors `python/compile/wincnn.py` (the two generators are cross-checked
+//! in tests): A^T and G are Vandermonde evaluations at the wincnn point
+//! schedule 0, 1, -1, 2, -2, 1/2, ... plus the point at infinity; B^T is
+//! recovered by solving the defining identity
+//!
+//! ```text
+//! A^T [ (G g) . (B^T d) ] == valid_correlation(d, g)
+//! ```
+//!
+//! over the canonical bases, which pins it uniquely and keeps the
+//! construction auditable (no hand-derived matrix can silently drift).
+
+use super::rational::Q;
+
+/// The three transform matrices of F(m, r), exact.
+#[derive(Clone, Debug)]
+pub struct WinogradMatrices {
+    pub m: usize,
+    pub r: usize,
+    /// A^T: m x t — output (inverse) transform.
+    pub at: Vec<Vec<Q>>,
+    /// G: t x r — kernel transform.
+    pub g: Vec<Vec<Q>>,
+    /// B^T: t x t — input transform.
+    pub bt: Vec<Vec<Q>>,
+}
+
+impl WinogradMatrices {
+    pub fn t(&self) -> usize {
+        self.m + self.r - 1
+    }
+}
+
+/// wincnn's interpolation-point schedule: 0, 1, -1, 2, -2, 1/2, -1/2, 3, ...
+pub fn interpolation_points(n: usize) -> Vec<Q> {
+    let mut pts = vec![Q::ZERO];
+    let mut k: i128 = 1;
+    while pts.len() < n {
+        let mut group = vec![Q::int(k), Q::int(-k)];
+        if k > 1 {
+            group.push(Q::new(1, k));
+            group.push(Q::new(-1, k));
+        }
+        for p in group {
+            if pts.len() < n && !pts.contains(&p) {
+                pts.push(p);
+            }
+        }
+        k += 1;
+    }
+    pts.truncate(n);
+    pts
+}
+
+/// Exact A^T (m x t), G (t x r), B^T (t x t) for F(m, r).
+pub fn winograd_matrices_q(m: usize, r: usize) -> WinogradMatrices {
+    assert!(m >= 1 && r >= 1, "m and r must be >= 1");
+    let t = m + r - 1;
+    let n = t - 1; // finite points; the last row handles x -> infinity
+    let pts = interpolation_points(n);
+
+    // G row i evaluates the filter polynomial at p_i; last row = leading coeff.
+    let mut g = Vec::with_capacity(t);
+    for p in &pts {
+        g.push((0..r).map(|k| p.pow(k as u32)).collect::<Vec<_>>());
+    }
+    let mut inf_row = vec![Q::ZERO; r];
+    inf_row[r - 1] = Q::ONE;
+    g.push(inf_row);
+
+    // A^T row k evaluates x^k at the points; infinity contributes to row m-1.
+    let mut at = Vec::with_capacity(m);
+    for k in 0..m {
+        let mut row: Vec<Q> = pts.iter().map(|p| p.pow(k as u32)).collect();
+        row.push(if k == m - 1 { Q::ONE } else { Q::ZERO });
+        at.push(row);
+    }
+
+    let bt = solve_bt(m, r, &at, &g);
+    WinogradMatrices { m, r, at, g, bt }
+}
+
+/// f32 copies of the matrices, row-major flat (for the engine hot path).
+pub fn winograd_matrices_f32(m: usize, r: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let w = winograd_matrices_q(m, r);
+    let flat = |mat: &[Vec<Q>]| {
+        mat.iter()
+            .flat_map(|row| row.iter().map(|q| q.to_f32()))
+            .collect::<Vec<f32>>()
+    };
+    (flat(&w.at), flat(&w.g), flat(&w.bt))
+}
+
+/// Solve for B^T from the defining identity (see module docs).
+///
+/// For every output row k and filter tap b:
+///     sum_i AT[k][i] * BT[i][a] * G[i][b] == [a == k + b]
+/// which is, per column a of B^T, an overdetermined-but-consistent linear
+/// system in the t unknowns BT[.][a].
+fn solve_bt(m: usize, r: usize, at: &[Vec<Q>], g: &[Vec<Q>]) -> Vec<Vec<Q>> {
+    let t = m + r - 1;
+    let mut rows: Vec<(Vec<Q>, usize)> = Vec::with_capacity(m * r);
+    for k in 0..m {
+        for b in 0..r {
+            let coeff: Vec<Q> = (0..t).map(|i| at[k][i] * g[i][b]).collect();
+            rows.push((coeff, k + b));
+        }
+    }
+    let mut bt_cols: Vec<Vec<Q>> = Vec::with_capacity(t);
+    for a in 0..t {
+        let mat: Vec<Vec<Q>> = rows.iter().map(|(c, _)| c.clone()).collect();
+        let rhs: Vec<Q> = rows
+            .iter()
+            .map(|&(_, s)| if s == a { Q::ONE } else { Q::ZERO })
+            .collect();
+        bt_cols.push(solve_consistent(mat, rhs, t));
+    }
+    (0..t)
+        .map(|i| (0..t).map(|a| bt_cols[a][i]).collect())
+        .collect()
+}
+
+/// Gauss–Jordan over Q for a consistent (possibly overdetermined) system.
+fn solve_consistent(mat: Vec<Vec<Q>>, rhs: Vec<Q>, n: usize) -> Vec<Q> {
+    let m_rows = mat.len();
+    let mut aug: Vec<Vec<Q>> = mat
+        .into_iter()
+        .zip(rhs)
+        .map(|(mut row, b)| {
+            row.push(b);
+            row
+        })
+        .collect();
+    let mut row = 0;
+    for col in 0..n {
+        let piv = (row..m_rows).find(|&r_| !aug[r_][col].is_zero());
+        let piv = piv.expect("singular system: bad interpolation points");
+        aug.swap(row, piv);
+        let pv = aug[row][col];
+        for v in aug[row].iter_mut() {
+            *v = *v / pv;
+        }
+        for r_ in 0..m_rows {
+            if r_ != row && !aug[r_][col].is_zero() {
+                let f = aug[r_][col];
+                for c in 0..=n {
+                    let sub = f * aug[row][c];
+                    aug[r_][c] = aug[r_][c] - sub;
+                }
+            }
+        }
+        row += 1;
+        if row == n {
+            break;
+        }
+    }
+    // consistency of the remaining equations
+    for r_ in 0..m_rows {
+        if aug[r_][..n].iter().all(|v| v.is_zero()) && !aug[r_][n].is_zero() {
+            panic!("inconsistent Cook-Toom system: construction bug");
+        }
+    }
+    (0..n).map(|i| aug[i][n]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn correlate(d: &[f64], g: &[f64]) -> Vec<f64> {
+        let m = d.len() - g.len() + 1;
+        (0..m)
+            .map(|i| (0..g.len()).map(|j| d[i + j] * g[j]).sum())
+            .collect()
+    }
+
+    fn check_identity(m: usize, r: usize) {
+        let w = winograd_matrices_q(m, r);
+        let t = w.t();
+        let mut rng = Rng::new((m * 31 + r) as u64);
+        let d: Vec<f64> = (0..t).map(|_| rng.next_f64() * 2.0 - 1.0).collect();
+        let g: Vec<f64> = (0..r).map(|_| rng.next_f64() * 2.0 - 1.0).collect();
+        let gg: Vec<f64> = w
+            .g
+            .iter()
+            .map(|row| row.iter().zip(&g).map(|(q, x)| q.to_f64() * x).sum())
+            .collect();
+        let bd: Vec<f64> = w
+            .bt
+            .iter()
+            .map(|row| row.iter().zip(&d).map(|(q, x)| q.to_f64() * x).sum())
+            .collect();
+        let prod: Vec<f64> = gg.iter().zip(&bd).map(|(a, b)| a * b).collect();
+        let y: Vec<f64> = w
+            .at
+            .iter()
+            .map(|row| row.iter().zip(&prod).map(|(q, x)| q.to_f64() * x).sum())
+            .collect();
+        let want = correlate(&d, &g);
+        for (a, b) in y.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-8, "F({m},{r}): {y:?} vs {want:?}");
+        }
+    }
+
+    #[test]
+    fn f23_matches_structure() {
+        let w = winograd_matrices_q(2, 3);
+        assert_eq!(w.at.len(), 2);
+        assert_eq!(w.at[0].len(), 4);
+        assert_eq!(w.g.len(), 4);
+        assert_eq!(w.bt.len(), 4);
+    }
+
+    #[test]
+    fn identity_small_sizes() {
+        for (m, r) in [(2, 3), (3, 3), (4, 3), (5, 3), (6, 3), (7, 3)] {
+            check_identity(m, r);
+        }
+    }
+
+    #[test]
+    fn identity_other_kernels() {
+        for (m, r) in [(2, 2), (4, 2), (2, 5), (3, 5), (4, 4), (2, 7), (3, 6)] {
+            check_identity(m, r);
+        }
+    }
+
+    #[test]
+    fn identity_degenerate() {
+        check_identity(1, 3); // no Winograd saving, still must be correct
+        check_identity(4, 1); // pointwise filter
+    }
+
+    #[test]
+    fn points_distinct() {
+        let pts = interpolation_points(11);
+        for i in 0..pts.len() {
+            for j in 0..i {
+                assert_ne!(pts[i], pts[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn f32_flat_layout() {
+        let (at, g, bt) = winograd_matrices_f32(2, 3);
+        assert_eq!(at.len(), 2 * 4);
+        assert_eq!(g.len(), 4 * 3);
+        assert_eq!(bt.len(), 4 * 4);
+        assert_eq!(g[0], 1.0); // G[0][0] = 1 (evaluation at x = 0)
+    }
+}

@@ -1,0 +1,15 @@
+//! Winograd (Cook–Toom) convolution substrate.
+//!
+//! The `wincnn` substitute (paper ref. [7]): exact-rational construction of
+//! the A^T, B^T, G matrices of F(m, r), a transform-codelet builder with
+//! common-subexpression elimination for realistic FLOP accounting
+//! (Tables 3/4 of the paper), and fast f32 tile-transform evaluation used
+//! by the native convolution engine.
+
+pub mod matrices;
+pub mod program;
+pub mod rational;
+
+pub use matrices::{winograd_matrices_f32, winograd_matrices_q, WinogradMatrices};
+pub use program::{transform_cost, TransformCost};
+pub use rational::Q;

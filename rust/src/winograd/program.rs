@@ -1,0 +1,308 @@
+//! Transform-codelet cost model and generic evaluation.
+//!
+//! The paper's Table 3 counts the FLOPs of *real, optimized* Winograd
+//! transform codelets (wincnn output plus the simple optimizer of Jia et
+//! al. [18]).  This module reproduces that pipeline:
+//!
+//! 1. strength reduction — multiplications by 0 / ±1 are free;
+//! 2. an even/odd pairing optimizer: rows evaluated at symmetric points
+//!    ±p share their even and odd parts, so two rows of cost c can be
+//!    rewritten as one even + one odd sub-sum plus two additions (this is
+//!    the dominant saving wincnn finds for Cook–Toom matrices);
+//! 3. 2D composition: a tile transform `M X M^T` applies the 1D codelet
+//!    to every column, then to every row of the intermediate.
+//!
+//! The resulting counts land close to the paper's (see
+//! `model::paper_data` cross-checks) without claiming bit-exact parity —
+//! the paper itself argues transform stages are memory-bound, so model
+//! predictions are insensitive to small FLOP deltas (§5.3).
+
+use super::matrices::winograd_matrices_q;
+use super::rational::Q;
+
+/// Scalar operation counts for one codelet invocation.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OpCount {
+    pub muls: usize,
+    pub adds: usize,
+}
+
+impl OpCount {
+    pub fn flops(&self) -> usize {
+        self.muls + self.adds
+    }
+}
+
+impl std::ops::Add for OpCount {
+    type Output = OpCount;
+    fn add(self, o: OpCount) -> OpCount {
+        OpCount {
+            muls: self.muls + o.muls,
+            adds: self.adds + o.adds,
+        }
+    }
+}
+
+impl std::ops::Mul<usize> for OpCount {
+    type Output = OpCount;
+    fn mul(self, k: usize) -> OpCount {
+        OpCount {
+            muls: self.muls * k,
+            adds: self.adds * k,
+        }
+    }
+}
+
+/// Cost of the three 2D transforms of F(m^2, r^2), per tile/kernel.
+#[derive(Clone, Copy, Debug)]
+pub struct TransformCost {
+    pub input: OpCount,
+    pub kernel: OpCount,
+    pub output: OpCount,
+}
+
+/// Cost of a matrix-vector product y = M x after strength reduction only.
+fn cost_mv_plain(m: &[Vec<Q>]) -> OpCount {
+    let mut c = OpCount::default();
+    for row in m {
+        let nz: Vec<&Q> = row.iter().filter(|q| !q.is_zero()).collect();
+        c.muls += nz.iter().filter(|q| !q.is_unit()).count();
+        c.adds += nz.len().saturating_sub(1);
+    }
+    c
+}
+
+/// Cost after the greedy even/odd pairing optimizer.
+///
+/// Repeatedly finds the row pair (i, j) whose even part e = (r_i + r_j)/2
+/// and odd part o = (r_i - r_j)/2 minimize total cost when r_i, r_j are
+/// replaced by {compute e, compute o, two adds}, and applies it while it
+/// saves operations.  Sub-rows are themselves eligible, which captures the
+/// nested sharing wincnn's optimizer finds on Cook–Toom matrices.
+fn cost_mv_optimized(m: &[Vec<Q>]) -> OpCount {
+    // rows as cost units; each entry: (row coefficients, multiplicity)
+    let mut rows: Vec<Vec<Q>> = m.to_vec();
+    let mut extra_adds = 0usize;
+
+    let row_cost = |row: &Vec<Q>| -> usize {
+        let nz: Vec<&Q> = row.iter().filter(|q| !q.is_zero()).collect();
+        let muls = nz.iter().filter(|q| !q.is_unit()).count();
+        let adds = nz.len().saturating_sub(1);
+        muls + adds
+    };
+
+    loop {
+        let mut best: Option<(usize, usize, Vec<Q>, Vec<Q>, isize)> = None;
+        for i in 0..rows.len() {
+            for j in (i + 1)..rows.len() {
+                let half = Q::new(1, 2);
+                let e: Vec<Q> = rows[i]
+                    .iter()
+                    .zip(&rows[j])
+                    .map(|(&a, &b)| (a + b) * half)
+                    .collect();
+                let o: Vec<Q> = rows[i]
+                    .iter()
+                    .zip(&rows[j])
+                    .map(|(&a, &b)| (a - b) * half)
+                    .collect();
+                if e.iter().all(|q| q.is_zero()) || o.iter().all(|q| q.is_zero()) {
+                    continue; // rows identical/negated; plain cost handles it
+                }
+                let old = (row_cost(&rows[i]) + row_cost(&rows[j])) as isize;
+                let new = (row_cost(&e) + row_cost(&o) + 2) as isize;
+                let saving = old - new;
+                if saving > 0 && best.as_ref().map_or(true, |b| saving > b.4) {
+                    best = Some((i, j, e, o, saving));
+                }
+            }
+        }
+        match best {
+            Some((i, j, e, o, _)) => {
+                // replace rows i, j by the shared sub-rows + 2 recombination adds
+                rows[i] = e;
+                rows[j] = o;
+                extra_adds += 2;
+            }
+            None => break,
+        }
+    }
+
+    let mut c = OpCount::default();
+    for row in &rows {
+        let nz: Vec<&Q> = row.iter().filter(|q| !q.is_zero()).collect();
+        c.muls += nz.iter().filter(|q| !q.is_unit()).count();
+        c.adds += nz.len().saturating_sub(1);
+    }
+    c.adds += extra_adds;
+    // never worse than the plain schedule
+    let plain = cost_mv_plain(m);
+    if plain.flops() < c.flops() {
+        plain
+    } else {
+        c
+    }
+}
+
+/// 2D composition: applying M (a x b) as `M X M^T` to a b x b tile costs
+/// b column applications + a row applications of the 1D codelet.
+fn cost_2d(m: &[Vec<Q>]) -> OpCount {
+    let a = m.len();
+    let b = m[0].len();
+    cost_mv_optimized(m) * (a + b)
+}
+
+/// FLOP counts for the 2D transforms of F(m^2, r^2) — our Table 3.
+pub fn transform_cost(m: usize, r: usize) -> TransformCost {
+    let w = winograd_matrices_q(m, r);
+    TransformCost {
+        input: cost_2d(&w.bt),
+        kernel: cost_2d(&w.g),
+        output: cost_2d(&w.at),
+    }
+}
+
+/// Generic f32 evaluation of `M X M^T` (row-major flat), for tests and the
+/// engine's non-specialized fallback path.
+pub fn apply_2d_f32(mat: &[f32], a: usize, b: usize, x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(mat.len(), a * b);
+    debug_assert_eq!(x.len(), b * b);
+    debug_assert_eq!(out.len(), a * a);
+    // first pass: T = M X  (a x b).  Winograd matrices are capped at
+    // t <= 6 (transform-size limit), so the intermediate fits a stack
+    // buffer on the hot path; the heap fallback covers exotic sizes.
+    const STACK: usize = 64;
+    let mut stack_buf = [0.0f32; STACK];
+    let mut heap_buf;
+    let tmp: &mut [f32] = if a * b <= STACK {
+        stack_buf[..a * b].fill(0.0);
+        &mut stack_buf[..a * b]
+    } else {
+        heap_buf = vec![0.0f32; a * b];
+        &mut heap_buf
+    };
+    for i in 0..a {
+        for k in 0..b {
+            let mik = mat[i * b + k];
+            if mik == 0.0 {
+                continue;
+            }
+            for j in 0..b {
+                tmp[i * b + j] += mik * x[k * b + j];
+            }
+        }
+    }
+    // second pass: out = T M^T (a x a)
+    for v in out.iter_mut() {
+        *v = 0.0;
+    }
+    for i in 0..a {
+        for k in 0..b {
+            let tik = tmp[i * b + k];
+            if tik == 0.0 {
+                continue;
+            }
+            for j in 0..a {
+                out[i * a + j] += tik * mat[j * b + k];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::winograd::matrices::winograd_matrices_f32;
+
+    #[test]
+    fn plain_cost_counts_strength_reduction() {
+        // [[1, 0], [2, 1]] -> row0: 0 muls 0 adds; row1: 1 mul 1 add
+        let m = vec![
+            vec![Q::ONE, Q::ZERO],
+            vec![Q::int(2), Q::ONE],
+        ];
+        assert_eq!(cost_mv_plain(&m), OpCount { muls: 1, adds: 1 });
+    }
+
+    #[test]
+    fn optimizer_never_hurts() {
+        for (m, r) in [(2, 3), (4, 3), (6, 3), (3, 5), (2, 5)] {
+            let w = winograd_matrices_q(m, r);
+            for mat in [&w.at, &w.g, &w.bt] {
+                assert!(cost_mv_optimized(mat).flops() <= cost_mv_plain(mat).flops());
+            }
+        }
+    }
+
+    #[test]
+    fn optimizer_finds_even_odd_sharing() {
+        // F(6,3)'s B^T has heavy ±point symmetry: expect a real saving.
+        let w = winograd_matrices_q(6, 3);
+        let plain = cost_mv_plain(&w.bt).flops();
+        let opt = cost_mv_optimized(&w.bt).flops();
+        assert!(opt < plain, "no saving: {opt} vs {plain}");
+    }
+
+    #[test]
+    fn transform_cost_grows_with_m() {
+        // Optimized codelet costs are not strictly monotone step-to-step
+        // (CSE opportunities vary with the point set), but must grow
+        // overall and stay positive.
+        let costs: Vec<usize> = (2..=7).map(|m| transform_cost(m, 3).input.flops()).collect();
+        assert!(costs.iter().all(|&c| c > 0));
+        assert!(costs[5] > 4 * costs[0], "{costs:?}");
+        for m in 2..=7 {
+            let c = transform_cost(m, 3);
+            assert!(c.kernel.flops() > 0 && c.output.flops() > 0);
+        }
+    }
+
+    #[test]
+    fn same_shape_as_paper_table3() {
+        // Paper Table 3 shape properties (exact values depend on the CSE
+        // power of the generator; the paper's own analysis is insensitive
+        // to them because transforms are DM-bound, §5.3):
+        // costs grow super-linearly in m, and the kernel transform is
+        // cheaper than the input transform (G is t x r vs B^T t x t).
+        let c2 = transform_cost(2, 3);
+        let c4 = transform_cost(4, 3);
+        let c6 = transform_cost(6, 3);
+        assert!(c4.input.flops() > 2 * c2.input.flops());
+        assert!(c6.input.flops() > c4.input.flops());
+        for c in [c2, c4, c6] {
+            assert!(c.kernel.flops() < c.input.flops());
+        }
+        // and the *relative* growth from F(2) to F(6) matches the paper's
+        // order (paper: 32 -> 742 for r=3, a ~23x jump; ours uses the same
+        // matrices so the jump must be at least ~8x)
+        assert!(c6.input.flops() >= 8 * c2.input.flops());
+    }
+
+    #[test]
+    fn apply_2d_matches_naive() {
+        let (at, _, _) = winograd_matrices_f32(3, 3);
+        let a = 3;
+        let b = 5;
+        let x: Vec<f32> = (0..b * b).map(|i| (i as f32).sin()).collect();
+        let mut out = vec![0.0f32; a * a];
+        apply_2d_f32(&at, a, b, &x, &mut out);
+        // naive reference
+        let mut want = vec![0.0f64; a * a];
+        for i in 0..a {
+            for j in 0..a {
+                let mut s = 0.0f64;
+                for k in 0..b {
+                    for l in 0..b {
+                        s += at[i * b + k] as f64
+                            * x[k * b + l] as f64
+                            * at[j * b + l] as f64;
+                    }
+                }
+                want[i * a + j] = s;
+            }
+        }
+        for (g, w) in out.iter().zip(&want) {
+            assert!((*g as f64 - w).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,186 @@
+//! Exact rational arithmetic over i128 — enough headroom for the
+//! Vandermonde systems of every practical F(m, r) (m + r <= ~18).
+
+use std::fmt;
+use std::ops::{Add, Div, Mul, Neg, Sub};
+
+/// A normalized rational p/q with q > 0 and gcd(p, q) == 1.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Q {
+    num: i128,
+    den: i128,
+}
+
+fn gcd(a: i128, b: i128) -> i128 {
+    let (mut a, mut b) = (a.abs(), b.abs());
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a.max(1)
+}
+
+impl Q {
+    pub const ZERO: Q = Q { num: 0, den: 1 };
+    pub const ONE: Q = Q { num: 1, den: 1 };
+
+    pub fn new(num: i128, den: i128) -> Q {
+        assert!(den != 0, "zero denominator");
+        let sign = if den < 0 { -1 } else { 1 };
+        let g = gcd(num, den);
+        Q {
+            num: sign * num / g,
+            den: sign * den / g,
+        }
+    }
+
+    pub fn int(n: i128) -> Q {
+        Q { num: n, den: 1 }
+    }
+
+    pub fn is_zero(self) -> bool {
+        self.num == 0
+    }
+
+    /// |p/q| == 1 (multiplications by it are free in a codelet).
+    pub fn is_unit(self) -> bool {
+        self.num.abs() == 1 && self.den == 1
+    }
+
+    pub fn abs(self) -> Q {
+        Q {
+            num: self.num.abs(),
+            den: self.den,
+        }
+    }
+
+    pub fn recip(self) -> Q {
+        assert!(self.num != 0, "reciprocal of zero");
+        Q::new(self.den, self.num)
+    }
+
+    pub fn pow(self, e: u32) -> Q {
+        let mut out = Q::ONE;
+        for _ in 0..e {
+            out = out * self;
+        }
+        out
+    }
+
+    pub fn to_f64(self) -> f64 {
+        self.num as f64 / self.den as f64
+    }
+
+    pub fn to_f32(self) -> f32 {
+        self.to_f64() as f32
+    }
+}
+
+impl Add for Q {
+    type Output = Q;
+    fn add(self, o: Q) -> Q {
+        Q::new(self.num * o.den + o.num * self.den, self.den * o.den)
+    }
+}
+
+impl Sub for Q {
+    type Output = Q;
+    fn sub(self, o: Q) -> Q {
+        Q::new(self.num * o.den - o.num * self.den, self.den * o.den)
+    }
+}
+
+impl Mul for Q {
+    type Output = Q;
+    fn mul(self, o: Q) -> Q {
+        // cross-reduce first to keep intermediates small
+        let g1 = gcd(self.num, o.den);
+        let g2 = gcd(o.num, self.den);
+        Q::new(
+            (self.num / g1) * (o.num / g2),
+            (self.den / g2) * (o.den / g1),
+        )
+    }
+}
+
+impl Div for Q {
+    type Output = Q;
+    fn div(self, o: Q) -> Q {
+        self * o.recip()
+    }
+}
+
+impl Neg for Q {
+    type Output = Q;
+    fn neg(self) -> Q {
+        Q {
+            num: -self.num,
+            den: self.den,
+        }
+    }
+}
+
+impl fmt::Debug for Q {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.den == 1 {
+            write!(f, "{}", self.num)
+        } else {
+            write!(f, "{}/{}", self.num, self.den)
+        }
+    }
+}
+
+impl fmt::Display for Q {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(self, f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalization() {
+        assert_eq!(Q::new(2, 4), Q::new(1, 2));
+        assert_eq!(Q::new(1, -2), Q::new(-1, 2));
+        assert_eq!(Q::new(0, 5), Q::ZERO);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = Q::new(1, 2);
+        let b = Q::new(1, 3);
+        assert_eq!(a + b, Q::new(5, 6));
+        assert_eq!(a - b, Q::new(1, 6));
+        assert_eq!(a * b, Q::new(1, 6));
+        assert_eq!(a / b, Q::new(3, 2));
+        assert_eq!(-a, Q::new(-1, 2));
+    }
+
+    #[test]
+    fn pow_and_recip() {
+        assert_eq!(Q::new(2, 1).pow(10), Q::int(1024));
+        assert_eq!(Q::new(2, 3).recip(), Q::new(3, 2));
+        assert_eq!(Q::new(-1, 2).pow(0), Q::ONE);
+    }
+
+    #[test]
+    fn predicates() {
+        assert!(Q::ZERO.is_zero());
+        assert!(Q::int(-1).is_unit());
+        assert!(!Q::new(1, 2).is_unit());
+    }
+
+    #[test]
+    fn float_conversion() {
+        assert_eq!(Q::new(-3, 4).to_f64(), -0.75);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_denominator_panics() {
+        let _ = Q::new(1, 0);
+    }
+}

@@ -1,0 +1,71 @@
+//! Numerical-accuracy reproduction of §4 footnote 2 on the native engine:
+//! Winograd's error grows exponentially with transform size while FFT's
+//! stays flat — the entire reason the Winograd tile cap (and therefore
+//! the paper's headline result) exists.
+
+use fftconv::conv::{direct, fft_conv, winograd, Tensor4};
+
+/// Max relative error of `algo(m)` against direct conv on a fixed layer.
+fn rel_err(method: &str, m: usize) -> f64 {
+    let x = Tensor4::random([1, 8, 26, 26], 1234);
+    let w = Tensor4::random([8, 8, 3, 3], 5678);
+    let want = direct::naive(&x, &w);
+    let got = match method {
+        "winograd" => winograd::run(&x, &w, m),
+        "regular_fft" => fft_conv::run_regular(&x, &w, m),
+        "gauss_fft" => fft_conv::run_gauss(&x, &w, m),
+        _ => unreachable!(),
+    };
+    (got.max_abs_diff(&want) / want.max_abs()) as f64
+}
+
+#[test]
+fn winograd_error_grows_exponentially() {
+    let errs: Vec<f64> = [2usize, 4, 6, 8, 10].iter().map(|&m| rel_err("winograd", m)).collect();
+    // growth from t=4 to t=12 must be orders of magnitude
+    assert!(
+        errs[4] > 30.0 * errs[0],
+        "expected exponential-ish growth: {errs:?}"
+    );
+    // F(4^2,3^2) (the 6x6 vendor cap) stays accurate
+    assert!(errs[1] < 1e-4, "6x6 transform too inaccurate: {}", errs[1]);
+}
+
+#[test]
+fn fft_error_flat_and_small() {
+    for method in ["regular_fft", "gauss_fft"] {
+        let errs: Vec<f64> = [2usize, 6, 10, 16, 24]
+            .iter()
+            .map(|&m| rel_err(method, m))
+            .collect();
+        let max = errs.iter().cloned().fold(0.0, f64::max);
+        let min = errs.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(max < 5e-5, "{method} errors too large: {errs:?}");
+        assert!(
+            max / min.max(1e-12) < 100.0,
+            "{method} error not flat: {errs:?}"
+        );
+    }
+}
+
+#[test]
+fn fft_beats_winograd_beyond_the_cap() {
+    // at m=8 (10x10 transform), FFT is orders more accurate
+    let w = rel_err("winograd", 8);
+    let f = rel_err("regular_fft", 8);
+    assert!(
+        f < w / 10.0,
+        "FFT ({f:.2e}) should be >>10x more accurate than Winograd ({w:.2e}) at m=8"
+    );
+}
+
+#[test]
+fn error_ordering_matches_paper_constants() {
+    // paper: Winograd 6x6 err 7.03e-6 ~ direct 1.11e-6; 8x8 err 1.24e-3;
+    // FFT <= 2.88e-7.  Exact values depend on data; the *ordering* must hold.
+    let w6 = rel_err("winograd", 4); // 6x6 transform
+    let w8 = rel_err("winograd", 6); // 8x8 transform
+    let f = rel_err("regular_fft", 16);
+    assert!(f < w8, "fft {f:.2e} < winograd-8x8 {w8:.2e}");
+    assert!(w6 < w8, "winograd 6x6 {w6:.2e} < 8x8 {w8:.2e}");
+}

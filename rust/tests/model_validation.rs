@@ -1,0 +1,91 @@
+//! Model-vs-measurement validation (the paper's §5.2): the Roofline
+//! model's *relative* predictions must correlate with what the native
+//! engine actually measures on this host for scaled-down layers.
+//!
+//! The paper reports rRMSE 0.079/0.1 on its 10-machine fleet; a single
+//! unknown host with 1-2 cores cannot reproduce that precision, so these
+//! tests assert directional agreement (ordering and correlation), which
+//! is what the model is for (algorithm selection).
+
+use fftconv::conv::{self, ConvAlgorithm, Tensor4};
+use fftconv::model::machine::probe_host;
+use fftconv::model::roofline::best_tile;
+use fftconv::model::stages::{LayerShape, Method};
+use std::time::Instant;
+
+fn measure(algo: ConvAlgorithm, l: &LayerShape) -> f64 {
+    let x = Tensor4::random([l.b, l.c, l.x, l.x], 1);
+    let w = Tensor4::random([l.k, l.c, l.r, l.r], 2);
+    // warmup
+    let _ = conv::run(algo, &x, &w);
+    let mut best = f64::MAX;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        let out = conv::run(algo, &x, &w);
+        std::hint::black_box(&out);
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+#[test]
+fn model_ranks_tile_sizes_sanely() {
+    // the model's chosen tile should not be far slower than the best of
+    // a small measured sweep (within 2.5x on this noisy host)
+    let host = probe_host();
+    let l = LayerShape {
+        b: 1,
+        c: 32,
+        k: 32,
+        x: 64,
+        r: 3,
+    };
+    let model_choice = best_tile(Method::RegularFft, &l, &host);
+    let measured_model = measure(ConvAlgorithm::RegularFft { m: model_choice.m }, &l);
+    let mut best_measured = f64::MAX;
+    for m in [2usize, 4, 6, 8, 12, 14, 16, 20, 26, 30] {
+        best_measured = best_measured.min(measure(ConvAlgorithm::RegularFft { m }, &l));
+    }
+    assert!(
+        measured_model < 2.5 * best_measured,
+        "model tile m={} measured {measured_model:.4}s vs sweep best {best_measured:.4}s",
+        model_choice.m
+    );
+}
+
+#[test]
+fn fft_beats_winograd_on_5x5_kernels_measured() {
+    // the paper's most robust empirical claim (AlexNet-2), at host scale.
+    // Winograd is capped at m=2 for r=5 (6x6 transform); FFT sweeps its
+    // practical tile range.  (Prime tile sizes carry a Rader constant-
+    // factor cost in this engine — see EXPERIMENTS.md §Perf — so the
+    // engine's best FFT tile is composite here, unlike the paper's 31.)
+    let l = LayerShape {
+        b: 4,
+        c: 64,
+        k: 96,
+        x: 31,
+        r: 5,
+    };
+    let t_wino = measure(ConvAlgorithm::Winograd { m: 2 }, &l);
+    let t_fft = [6usize, 9, 11]
+        .iter()
+        .map(|&m| measure(ConvAlgorithm::RegularFft { m }, &l))
+        .fold(f64::MAX, f64::min);
+    assert!(
+        t_fft < t_wino,
+        "measured: fft {t_fft:.4}s should beat winograd {t_wino:.4}s on r=5"
+    );
+    // and the model agrees on the direction
+    let host = probe_host();
+    let wino = best_tile(Method::Winograd, &l, &host);
+    let fft = best_tile(Method::RegularFft, &l, &host);
+    assert!(fft.total < wino.total, "model should agree on r=5");
+}
+
+#[test]
+fn probed_machine_is_consistent() {
+    let host = probe_host();
+    assert!(host.cmr() > 0.1 && host.cmr() < 1000.0, "cmr {}", host.cmr());
+    assert!(host.cores >= 1);
+}

@@ -1,0 +1,112 @@
+//! Integration: the AOT HLO artifacts (Python L1/L2) executed through the
+//! rust PJRT runtime must agree with the native rust engine — the proof
+//! that all three layers compose.
+//!
+//! Requires `make artifacts`; tests skip (pass trivially with a note)
+//! when the manifest is absent so `cargo test` works from a fresh clone.
+
+use fftconv::conv::{self, ConvAlgorithm, Tensor4};
+use fftconv::runtime::{artifacts_available, default_artifact_dir, Runtime};
+
+fn runtime() -> Option<Runtime> {
+    let dir = default_artifact_dir();
+    if !artifacts_available(&dir) {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::open(&dir).expect("manifest parses"))
+}
+
+#[test]
+fn manifest_lists_all_methods() {
+    let Some(rt) = runtime() else { return };
+    let methods: std::collections::BTreeSet<&str> =
+        rt.artifacts().iter().map(|a| a.method.as_str()).collect();
+    for m in ["direct", "winograd", "regular_fft", "gauss_fft"] {
+        assert!(methods.contains(m), "missing method {m}");
+    }
+}
+
+#[test]
+fn layer_artifacts_match_native_engine() {
+    let Some(rt) = runtime() else { return };
+    let layer_arts: Vec<_> = rt
+        .artifacts()
+        .iter()
+        .filter(|a| a.kind == "layer")
+        .cloned()
+        .collect();
+    assert!(!layer_arts.is_empty());
+    for art in layer_arts {
+        let xs = &art.inputs[0];
+        let ws = &art.inputs[1];
+        let x = Tensor4::random([xs[0], xs[1], xs[2], xs[3]], 0xA11CE);
+        let w = Tensor4::random([ws[0], ws[1], ws[2], ws[3]], 0xB0B);
+        let got = rt.execute(&art.name, &[&x, &w]).expect("executes");
+        let want = conv::run(ConvAlgorithm::Direct, &x, &w);
+        assert_eq!(got.shape, want.shape, "{}", art.name);
+        let tol = 2e-3 * want.max_abs().max(1.0);
+        assert!(
+            got.max_abs_diff(&want) < tol,
+            "{}: diff {} > tol {tol}",
+            art.name,
+            got.max_abs_diff(&want)
+        );
+    }
+}
+
+#[test]
+fn convnet_artifacts_agree_across_methods() {
+    let Some(rt) = runtime() else { return };
+    let nets: Vec<_> = rt
+        .artifacts()
+        .iter()
+        .filter(|a| a.kind == "convnet")
+        .cloned()
+        .collect();
+    assert!(nets.len() >= 2, "need at least two convnet artifacts");
+    // same inputs through every method's convnet must agree
+    let base = &nets[0];
+    let tensors: Vec<Tensor4> = base
+        .inputs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| Tensor4::random([s[0], s[1], s[2], s[3]], 0xC0DE + i as u64))
+        .collect();
+    let refs: Vec<&Tensor4> = tensors.iter().collect();
+    let first = rt.execute(&base.name, &refs).expect("base convnet");
+    for art in &nets[1..] {
+        assert_eq!(art.inputs, base.inputs, "convnet shapes differ");
+        let got = rt.execute(&art.name, &refs).expect("convnet executes");
+        let tol = 5e-3 * first.max_abs().max(1.0);
+        assert!(
+            got.max_abs_diff(&first) < tol,
+            "{} vs {}: diff {}",
+            art.name,
+            base.name,
+            got.max_abs_diff(&first)
+        );
+    }
+}
+
+#[test]
+fn execute_rejects_wrong_shapes() {
+    let Some(rt) = runtime() else { return };
+    let art = rt.artifacts()[0].clone();
+    let bad = Tensor4::zeros([1, 1, 1, 1]);
+    let inputs: Vec<&Tensor4> = art.inputs.iter().map(|_| &bad).collect();
+    assert!(rt.execute(&art.name, &inputs).is_err());
+}
+
+#[test]
+fn executable_cache_reuses_compilation() {
+    let Some(rt) = runtime() else { return };
+    let name = &rt.artifacts()[0].name.clone();
+    let t0 = std::time::Instant::now();
+    let _e1 = rt.executable(name).unwrap();
+    let cold = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    let _e2 = rt.executable(name).unwrap();
+    let warm = t1.elapsed();
+    assert!(warm < cold, "cache should be faster: {warm:?} vs {cold:?}");
+}
