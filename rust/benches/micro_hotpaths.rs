@@ -1,18 +1,25 @@
 //! Micro-benchmarks of the engine hot paths (the §Perf working set):
 //! blocked GEMM, FFT plans by size class (incl. Rader primes), Winograd
-//! tile transforms, tiling gather/scatter, and coordinator overhead.
+//! tile transforms, tiling gather/scatter, coordinator overhead, and the
+//! stage-parallel engine on a VGG-shaped layer — emitted both as the
+//! usual table/CSV and as `BENCH_hotpaths.json` so successive PRs have a
+//! machine-readable perf trajectory.
 
 use fftconv::conv::gemm::{cgemm_acc, gemm_acc};
-use fftconv::conv::{Tensor4, TileGrid};
+use fftconv::conv::{ConvAlgorithm, LayerPlan, Tensor4, TileGrid};
 use fftconv::coordinator::StaticScheduler;
 use fftconv::fft::{C32, Plan, TileFft};
 use fftconv::util::bench::{bench, Table};
+use fftconv::util::json::Json;
+use fftconv::util::threadpool::ThreadPool;
 use fftconv::util::Rng;
 use fftconv::winograd::matrices::winograd_matrices_f32;
 use fftconv::winograd::program::apply_2d_f32;
+use std::collections::BTreeMap;
 
 fn main() {
     let mut t = Table::new("micro hot paths", &["op", "params", "median µs", "GF/s"]);
+    let mut json = BTreeMap::new();
     let mut rng = Rng::new(7);
 
     // GEMM sizes: the element-wise stage shapes (tall-skinny)
@@ -127,15 +134,11 @@ fn main() {
 
     // coordinator overhead: batch of 8 tiny convs through the scheduler
     {
-        let s = StaticScheduler::new(2);
+        let mut s = StaticScheduler::new(2);
         let x = Tensor4::random([8, 4, 12, 12], 12);
         let w = Tensor4::random([4, 4, 3, 3], 13);
         let r = bench("sched", 100, || {
-            std::hint::black_box(s.run_batch(
-                fftconv::conv::ConvAlgorithm::Winograd { m: 4 },
-                &x,
-                &w,
-            ));
+            std::hint::black_box(s.run_batch(ConvAlgorithm::Winograd { m: 4 }, &x, &w));
         });
         t.row(vec![
             "scheduler-batch8".into(),
@@ -143,7 +146,89 @@ fn main() {
             format!("{:.1}", r.median.as_secs_f64() * 1e6),
             "-".into(),
         ]);
+        json.insert(
+            "scheduler_batch8_us".to_string(),
+            Json::Num(r.median.as_secs_f64() * 1e6),
+        );
+    }
+
+    // ---- stage-parallel engine on a VGG-shaped layer ----
+    // (the ISSUE acceptance workload: C=K=64, H=W=56, B=8, r=3)
+    {
+        let (b, ch, hw, m) = (8usize, 64usize, 56usize, 6usize);
+        let x = Tensor4::random([b, ch, hw, hw], 20);
+        let w = Tensor4::random([ch, ch, 3, 3], 21);
+        let algo = ConvAlgorithm::RegularFft { m };
+        let flops = 2.0 * (b * ch * ch * (hw - 2) * (hw - 2) * 9) as f64;
+        let workers = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+
+        // seed behavior: single-threaded, kernel re-transformed every call
+        let single = bench("vgg-fft-single", 400, || {
+            std::hint::black_box(fftconv::conv::fft_conv::run_regular(&x, &w, m));
+        });
+        // the stage-parallel engine behind the scheduler's plan cache
+        let mut s = StaticScheduler::new(workers);
+        let par = bench("vgg-fft-parallel", 400, || {
+            std::hint::black_box(s.run_batch(algo, &x, &w));
+        });
+        // plan amortization: build+run vs run on a persistent plan
+        let pool = ThreadPool::new(workers);
+        let cold = bench("vgg-plan-cold", 400, || {
+            let mut plan = LayerPlan::new(algo, &w, hw, hw, workers);
+            std::hint::black_box(plan.run(&x, Some(&pool)));
+        });
+        let mut plan = LayerPlan::new(algo, &w, hw, hw, workers);
+        let warm = bench("vgg-plan-warm", 400, || {
+            std::hint::black_box(plan.run(&x, Some(&pool)));
+        });
+
+        let speedup = single.median.as_secs_f64() / par.median.as_secs_f64();
+        let amort = cold.median.as_secs_f64() / warm.median.as_secs_f64();
+        for (name, r) in [
+            ("vgg-fft-single", &single),
+            ("vgg-fft-parallel", &par),
+            ("vgg-plan-cold", &cold),
+            ("vgg-plan-warm", &warm),
+        ] {
+            t.row(vec![
+                name.into(),
+                format!("B{b} {ch}ch {hw}x{hw} m={m}"),
+                format!("{:.0}", r.median.as_secs_f64() * 1e6),
+                format!("{:.2}", flops / r.median.as_secs_f64() / 1e9),
+            ]);
+        }
+        t.row(vec![
+            "vgg-speedup".into(),
+            format!("workers={workers}"),
+            format!("{speedup:.2}x"),
+            "-".into(),
+        ]);
+        json.insert("vgg_workers".to_string(), Json::Num(workers as f64));
+        json.insert(
+            "vgg_single_thread_ms".to_string(),
+            Json::Num(single.median_ms()),
+        );
+        json.insert("vgg_parallel_ms".to_string(), Json::Num(par.median_ms()));
+        json.insert("vgg_parallel_speedup".to_string(), Json::Num(speedup));
+        json.insert("vgg_plan_cold_ms".to_string(), Json::Num(cold.median_ms()));
+        json.insert("vgg_plan_warm_ms".to_string(), Json::Num(warm.median_ms()));
+        json.insert(
+            "vgg_plan_amortization".to_string(),
+            Json::Num(amort),
+        );
+        json.insert(
+            "vgg_parallel_gflops".to_string(),
+            Json::Num(flops / par.median.as_secs_f64() / 1e9),
+        );
     }
 
     t.emit("micro_hotpaths");
+
+    let path = "BENCH_hotpaths.json";
+    match std::fs::write(path, Json::Obj(json).to_string_pretty()) {
+        Ok(()) => println!("[json] {path}"),
+        Err(e) => eprintln!("warn: could not write {path}: {e}"),
+    }
 }

@@ -44,32 +44,46 @@ pub fn naive(x: &Tensor4, w: &Tensor4) -> Tensor4 {
     out
 }
 
-/// Direct convolution as im2col + GEMM: patches (BHW x Cr^2) @ (Cr^2 x K).
-pub fn im2col(x: &Tensor4, w: &Tensor4) -> Tensor4 {
-    let [b, c, h, wd] = x.shape;
-    let [k, c2, r, _] = w.shape;
-    assert_eq!(c, c2);
-    let (oh, ow) = (h - r + 1, wd - r + 1);
-    let patch = c * r * r;
-
-    // column matrix: one row per output position
-    let rows = b * oh * ow;
-    let mut cols = vec![0.0f32; rows * patch];
-    for bi in 0..b {
-        for i in 0..oh {
-            for j in 0..ow {
-                let row = ((bi * oh + i) * ow + j) * patch;
-                for ci in 0..c {
-                    for u in 0..r {
-                        let src = x.idx(bi, ci, i + u, j);
-                        let dst = row + (ci * r + u) * r;
-                        cols[dst..dst + r].copy_from_slice(&x.data[src..src + r]);
+/// Direct convolution of output rows `rows` of plane (bi, ki) into `dst`
+/// (`rows.len() * ow` pixels) — the shardable unit the zero-copy scheduler
+/// hands to each worker as a disjoint `&mut` output slice.
+pub fn conv_rows(
+    x: &Tensor4,
+    w: &Tensor4,
+    bi: usize,
+    ki: usize,
+    rows: std::ops::Range<usize>,
+    dst: &mut [f32],
+) {
+    let [_, c, _, wd] = x.shape;
+    let [_, _, r, _] = w.shape;
+    let ow = wd - r + 1;
+    debug_assert_eq!(dst.len(), rows.len() * ow);
+    dst.fill(0.0);
+    for ci in 0..c {
+        let xplane = x.plane(bi, ci);
+        for u in 0..r {
+            for v in 0..r {
+                let wv = w.at(ki, ci, u, v);
+                if wv == 0.0 {
+                    continue;
+                }
+                for (oi, i) in rows.clone().enumerate() {
+                    let xrow = &xplane[(i + u) * wd + v..(i + u) * wd + v + ow];
+                    let orow = &mut dst[oi * ow..(oi + 1) * ow];
+                    for (o, &xv) in orow.iter_mut().zip(xrow) {
+                        *o += wv * xv;
                     }
                 }
             }
         }
     }
-    // weights reshaped to (patch x K)
+}
+
+/// Weights reshaped to the (C*r*r x K) matrix the im2col GEMM consumes.
+pub fn weights_matrix(w: &Tensor4) -> Vec<f32> {
+    let [k, c, r, _] = w.shape;
+    let patch = c * r * r;
     let mut wm = vec![0.0f32; patch * k];
     for ki in 0..k {
         for ci in 0..c {
@@ -80,19 +94,56 @@ pub fn im2col(x: &Tensor4, w: &Tensor4) -> Tensor4 {
             }
         }
     }
-    let mut om = vec![0.0f32; rows * k];
-    gemm_acc(&mut om, &cols, &wm, rows, patch, k);
-    // (B, OH, OW, K) -> (B, K, OH, OW)
-    let mut out = Tensor4::zeros([b, k, oh, ow]);
-    for bi in 0..b {
-        for i in 0..oh {
-            for j in 0..ow {
-                let row = ((bi * oh + i) * ow + j) * k;
-                for ki in 0..k {
-                    *out.at_mut(bi, ki, i, j) = om[row + ki];
+    wm
+}
+
+/// im2col + GEMM for one image: patches (OH*OW x Cr^2) @ wm (Cr^2 x K),
+/// written into `dst` as a (K, OH, OW) plane block.  Per-image so the
+/// scheduler can shard a batch without copying sub-batches.
+pub fn im2col_image(x: &Tensor4, wm: &[f32], k: usize, r: usize, bi: usize, dst: &mut [f32]) {
+    let [_, c, h, wd] = x.shape;
+    let (oh, ow) = (h - r + 1, wd - r + 1);
+    let patch = c * r * r;
+    debug_assert_eq!(wm.len(), patch * k);
+    debug_assert_eq!(dst.len(), k * oh * ow);
+    let rows = oh * ow;
+    let mut cols = vec![0.0f32; rows * patch];
+    for i in 0..oh {
+        for j in 0..ow {
+            let row = (i * ow + j) * patch;
+            for ci in 0..c {
+                for u in 0..r {
+                    let src = x.idx(bi, ci, i + u, j);
+                    let d = row + (ci * r + u) * r;
+                    cols[d..d + r].copy_from_slice(&x.data[src..src + r]);
                 }
             }
         }
+    }
+    let mut om = vec![0.0f32; rows * k];
+    gemm_acc(&mut om, &cols, wm, rows, patch, k);
+    // (OH, OW, K) -> (K, OH, OW)
+    for i in 0..oh {
+        for j in 0..ow {
+            let row = (i * ow + j) * k;
+            for (ki, &v) in om[row..row + k].iter().enumerate() {
+                dst[ki * oh * ow + i * ow + j] = v;
+            }
+        }
+    }
+}
+
+/// Direct convolution as im2col + GEMM: patches (BHW x Cr^2) @ (Cr^2 x K).
+pub fn im2col(x: &Tensor4, w: &Tensor4) -> Tensor4 {
+    let [b, c, h, wd] = x.shape;
+    let [k, c2, r, _] = w.shape;
+    assert_eq!(c, c2);
+    let (oh, ow) = (h - r + 1, wd - r + 1);
+    let wm = weights_matrix(w);
+    let mut out = Tensor4::zeros([b, k, oh, ow]);
+    let per = k * oh * ow;
+    for bi in 0..b {
+        im2col_image(x, &wm, k, r, bi, &mut out.data[bi * per..(bi + 1) * per]);
     }
     out
 }
@@ -131,6 +182,27 @@ mod tests {
             let a = naive(&x, &w);
             let bb = im2col(&x, &w);
             assert!(a.max_abs_diff(&bb) < 1e-3, "({b},{c},{k},{h},{w_},{r})");
+        }
+    }
+
+    #[test]
+    fn conv_rows_matches_naive() {
+        let x = Tensor4::random([2, 3, 9, 8], 44);
+        let w = Tensor4::random([2, 3, 3, 3], 45);
+        let want = naive(&x, &w);
+        let [b, k, oh, ow] = want.shape;
+        for bi in 0..b {
+            for ki in 0..k {
+                // whole plane in two row chunks
+                let mid = oh / 2;
+                let mut top = vec![0.0f32; mid * ow];
+                let mut bot = vec![0.0f32; (oh - mid) * ow];
+                conv_rows(&x, &w, bi, ki, 0..mid, &mut top);
+                conv_rows(&x, &w, bi, ki, mid..oh, &mut bot);
+                let plane = want.plane(bi, ki);
+                assert_eq!(&plane[..mid * ow], &top[..]);
+                assert_eq!(&plane[mid * ow..], &bot[..]);
+            }
         }
     }
 

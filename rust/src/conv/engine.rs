@@ -1,0 +1,795 @@
+//! The stage-parallel convolution engine — one execution pipeline behind
+//! all three transformed-convolution methods (Winograd, Regular-FFT,
+//! Gauss-FFT).
+//!
+//! A [`LayerPlan`] is built **once** per (layer shape, algorithm): it
+//! caches the transformed kernel tensor `V[P][K][C]` and owns grow-only
+//! scratch arenas plus per-worker codelet state, so serving repeated
+//! requests never re-transforms weights and never allocates on the hot
+//! path (arena capacity is reached after the first batch).
+//!
+//! Each of the three stages is executed as one static fork-join over the
+//! shared [`ThreadPool`] (paper §3, after Zlateski & Seung), with
+//! equal-FLOP partitions:
+//!
+//! * **input transform** — sharded over the global tile index
+//!   `(b, c, tile)`; every tile costs the same FLOPs, so `even_ranges`
+//!   is the equal-FLOP split.  Tile granularity means batches smaller
+//!   than the worker count still use every core (intra-image sharding).
+//! * **element-wise stage** — sharded over the `P` transform elements;
+//!   each element's `(K x C) @ (C x BN)` GEMM is independent, so shards
+//!   write disjoint contiguous `&mut` panels of `Z` with no
+//!   synchronization.
+//! * **inverse transform** — sharded over global *tile rows*
+//!   `(b, k, tile_row)`; a contiguous run of tile rows maps to a
+//!   contiguous pixel range of the output tensor, so each worker gets a
+//!   disjoint `&mut` output slice proven safe by the borrow checker.
+//!
+//! The input-transform stage writes `U[P][C][BN]` planes whose per-worker
+//! regions are disjoint but *strided* (each worker owns a `(b, c)`-tile
+//! run across all P planes), which no safe split can express — that one
+//! stage writes through a [`SharedSlice`] whose disjointness argument is
+//! documented at the call site.
+
+use super::batch_wino::BatchSandwich;
+use super::fft_conv::FftVariant;
+use super::gemm::{cgemm_acc, gauss_gemm_acc, gemm_acc, GaussScratch};
+use super::tensor::Tensor4;
+use super::tiles::TileGrid;
+use super::ConvAlgorithm;
+use crate::fft::batch_dft::BatchDft;
+use crate::util::threadpool::{even_ranges, ThreadPool};
+use crate::winograd::matrices::winograd_matrices_f32;
+use std::marker::PhantomData;
+use std::ops::Range;
+
+/// Tiles transformed per batched-codelet invocation (amortizes the
+/// transform-matrix panels across the register-blocked GEMM).
+const NB: usize = 32;
+
+/// FNV-1a over the weight tensor's bit pattern — the cheap identity check
+/// plan caches use to decide whether a cached kernel transform is stale.
+pub fn weights_fingerprint(w: &Tensor4) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &s in &w.shape {
+        h ^= s as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    for &v in &w.data {
+        h ^= v.to_bits() as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Shared mutable view over an `f32` buffer for stage shards whose
+/// disjoint write sets are strided (not expressible as sub-slices).
+///
+/// Safety contract: every index is written by at most one worker of the
+/// fork-join, and the buffer is not read until the join.  Each `set` call
+/// site documents why its index set is disjoint across workers.
+struct SharedSlice<'a> {
+    ptr: *mut f32,
+    len: usize,
+    _life: PhantomData<&'a mut [f32]>,
+}
+
+unsafe impl Send for SharedSlice<'_> {}
+unsafe impl Sync for SharedSlice<'_> {}
+
+impl<'a> SharedSlice<'a> {
+    fn new(s: &'a mut [f32]) -> SharedSlice<'a> {
+        SharedSlice {
+            ptr: s.as_mut_ptr(),
+            len: s.len(),
+            _life: PhantomData,
+        }
+    }
+
+    /// Write one element.
+    ///
+    /// # Safety
+    /// No other worker may read or write index `i` during this fork-join.
+    #[inline]
+    unsafe fn set(&self, i: usize, v: f32) {
+        debug_assert!(i < self.len);
+        *self.ptr.add(i) = v;
+    }
+}
+
+/// Run `f(i, part)` for every part — on the pool's static fork-join when a
+/// pool is given, inline on the caller's thread otherwise (the serial path
+/// used by the one-shot wrappers).
+fn execute<T, F>(pool: Option<&ThreadPool>, parts: Vec<T>, f: F)
+where
+    T: Send,
+    F: Fn(usize, T) + Send + Sync,
+{
+    match pool {
+        Some(p) => p.run_parts(parts, f),
+        None => {
+            for (i, part) in parts.into_iter().enumerate() {
+                f(i, part);
+            }
+        }
+    }
+}
+
+/// Split `buf` into per-range sub-slices of `unit` elements per item.
+/// Ranges must be contiguous and tile `buf` exactly (as `even_ranges`
+/// produces).  Shared with the scheduler's Direct/Im2col partitions.
+pub(crate) fn split_units<'a>(
+    buf: &'a mut [f32],
+    ranges: &[Range<usize>],
+    unit: usize,
+) -> Vec<&'a mut [f32]> {
+    let mut out = Vec::with_capacity(ranges.len());
+    let mut rest = buf;
+    for r in ranges {
+        let take = (r.end - r.start) * unit;
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut(take);
+        out.push(head);
+        rest = tail;
+    }
+    debug_assert!(rest.is_empty());
+    out
+}
+
+/// The per-worker transform codelets (each worker owns its own scratch).
+enum Codelets {
+    Winograd {
+        input: BatchSandwich,
+        output: BatchSandwich,
+    },
+    Fft(BatchDft),
+}
+
+/// Per-worker state: codelets plus gather/transform/scatter buffers, all
+/// allocated at plan build and reused across every batch.
+struct WorkerState {
+    codelets: Codelets,
+    /// gathered input tiles, NB x t x t
+    xb: Vec<f32>,
+    /// transform staging (re), NB x P — also the inverse-gather buffer
+    tre: Vec<f32>,
+    /// transform staging (im), NB x P (FFT only; empty for Winograd)
+    tim: Vec<f32>,
+    /// inverse output tiles, NB x m x m
+    ob: Vec<f32>,
+    gauss: GaussScratch,
+}
+
+impl WorkerState {
+    fn new(codelets: Codelets, t: usize, p: usize, m: usize, is_fft: bool) -> WorkerState {
+        WorkerState {
+            codelets,
+            xb: vec![0.0; NB * t * t],
+            tre: vec![0.0; NB * p],
+            tim: if is_fft { vec![0.0; NB * p] } else { Vec::new() },
+            ob: vec![0.0; NB * m * m],
+            gauss: GaussScratch::default(),
+        }
+    }
+}
+
+/// A reusable, stage-parallel execution plan for one convolution layer.
+pub struct LayerPlan {
+    pub algo: ConvAlgorithm,
+    /// input channels
+    pub c: usize,
+    /// output channels
+    pub k: usize,
+    /// input spatial size
+    pub h: usize,
+    pub w: usize,
+    /// kernel size
+    pub r: usize,
+    /// output tile size
+    pub m: usize,
+    /// transform tile size t = m + r - 1
+    pub t: usize,
+    /// fingerprint of the weights the cached kernel transform belongs to
+    pub weights_fp: u64,
+    /// transform elements: t*t (Winograd) or th*t (FFT half spectrum)
+    p: usize,
+    variant: Option<FftVariant>,
+    grid: TileGrid,
+    // transformed kernel V[P][K][C], built once at plan construction
+    vr: Vec<f32>,
+    vi: Vec<f32>,
+    vd: Vec<f32>,
+    vs: Vec<f32>,
+    // grow-only hot-path arenas (U[P][C][BN], Z[P][K][BN] planes)
+    ur: Vec<f32>,
+    ui: Vec<f32>,
+    us: Vec<f32>,
+    zr: Vec<f32>,
+    zi: Vec<f32>,
+    workers: Vec<WorkerState>,
+}
+
+impl LayerPlan {
+    /// Build a plan: constructs per-worker codelets and transforms the
+    /// kernel once.  `h`/`w` are the input spatial dims the plan serves
+    /// (the batch size may vary call to call).
+    pub fn new(
+        algo: ConvAlgorithm,
+        weights: &Tensor4,
+        h: usize,
+        w: usize,
+        nworkers: usize,
+    ) -> LayerPlan {
+        let m = algo.tile_m().expect("LayerPlan requires a tiled algorithm");
+        let [k, c, r, r2] = weights.shape;
+        assert_eq!(r, r2, "non-square kernel");
+        let variant = match algo {
+            ConvAlgorithm::Winograd { .. } => None,
+            ConvAlgorithm::RegularFft { .. } => Some(FftVariant::Regular),
+            ConvAlgorithm::GaussFft { .. } => Some(FftVariant::Gauss),
+            _ => unreachable!("tile_m() returned Some for a non-tiled algorithm"),
+        };
+        let grid = TileGrid::new(h, w, m, r);
+        let t = m + r - 1;
+        let nworkers = nworkers.max(1);
+        let gauss = variant == Some(FftVariant::Gauss);
+
+        let (p, workers, vr, vi, vd, vs) = match variant {
+            None => {
+                let (at, g, bt) = winograd_matrices_f32(m, r);
+                let p = t * t;
+                let mut workers = Vec::with_capacity(nworkers);
+                for _ in 0..nworkers {
+                    workers.push(WorkerState::new(
+                        Codelets::Winograd {
+                            input: BatchSandwich::new(&bt, t, t),
+                            output: BatchSandwich::new(&at, m, t),
+                        },
+                        t,
+                        p,
+                        m,
+                        false,
+                    ));
+                }
+                let mut kernel_tf = BatchSandwich::new(&g, t, r);
+                let vr = wino_kernel_transform(weights, &mut kernel_tf, p);
+                (p, workers, vr, Vec::new(), Vec::new(), Vec::new())
+            }
+            Some(_) => {
+                let tf = BatchDft::new(m, r);
+                let p = tf.th * tf.t;
+                let mut workers = Vec::with_capacity(nworkers);
+                for _ in 0..nworkers {
+                    workers.push(WorkerState::new(Codelets::Fft(tf.clone()), t, p, m, true));
+                }
+                let mut kernel_tf = tf;
+                let (vr, vi, vd, vs) = fft_kernel_transform(weights, &mut kernel_tf, p, gauss);
+                (p, workers, vr, vi, vd, vs)
+            }
+        };
+
+        LayerPlan {
+            algo,
+            c,
+            k,
+            h,
+            w,
+            r,
+            m,
+            t,
+            weights_fp: weights_fingerprint(weights),
+            p,
+            variant,
+            grid,
+            vr,
+            vi,
+            vd,
+            vs,
+            ur: Vec::new(),
+            ui: Vec::new(),
+            us: Vec::new(),
+            zr: Vec::new(),
+            zi: Vec::new(),
+            workers,
+        }
+    }
+
+    /// Shape of the output for a batch of `b` images.
+    pub fn output_shape(&self, b: usize) -> [usize; 4] {
+        [b, self.k, self.grid.oh, self.grid.ow]
+    }
+
+    /// Does this plan serve (algo, input shape, these weights)?
+    pub fn matches(&self, algo: ConvAlgorithm, x: &Tensor4, weights_fp: u64) -> bool {
+        self.algo == algo
+            && x.shape[1] == self.c
+            && x.shape[2] == self.h
+            && x.shape[3] == self.w
+            && self.weights_fp == weights_fp
+    }
+
+    /// Arena identity stamp (pointers + lengths): unchanged across two
+    /// same-shape runs ⇔ the hot path did not allocate.
+    pub fn arena_stamp(&self) -> (usize, usize, usize, usize) {
+        (
+            self.ur.as_ptr() as usize,
+            self.zr.as_ptr() as usize,
+            self.ur.len(),
+            self.zr.len(),
+        )
+    }
+
+    /// Convenience wrapper over [`LayerPlan::run_into`].
+    pub fn run(&mut self, x: &Tensor4, pool: Option<&ThreadPool>) -> Tensor4 {
+        let mut out = Tensor4::zeros(self.output_shape(x.shape[0]));
+        self.run_into(x, &mut out, pool);
+        out
+    }
+
+    /// Execute the three-stage pipeline over `x`, writing into `out`.
+    ///
+    /// With `Some(pool)`, every stage forks across the pool's workers with
+    /// statically precomputed equal-FLOP shards; with `None` the stages run
+    /// serially on the caller's thread (identical numerics either way —
+    /// shard boundaries never change any per-tile or per-GEMM arithmetic).
+    pub fn run_into(&mut self, x: &Tensor4, out: &mut Tensor4, pool: Option<&ThreadPool>) {
+        let [b, c, h, w] = x.shape;
+        assert_eq!(c, self.c, "channel mismatch");
+        assert_eq!((h, w), (self.h, self.w), "input spatial shape mismatch");
+        assert_eq!(out.shape, self.output_shape(b), "output shape mismatch");
+        let grid = self.grid;
+        let (k, m, t, p) = (self.k, self.m, self.t, self.p);
+        let n = grid.tiles();
+        let bn = b * n;
+        let is_fft = self.variant.is_some();
+        let gauss = self.variant == Some(FftVariant::Gauss);
+        let nw = self.workers.len();
+
+        // grow-only arenas: no allocation once the high-water batch is seen
+        let need_u = p * c * bn;
+        let need_z = p * k * bn;
+        if self.ur.len() < need_u {
+            self.ur.resize(need_u, 0.0);
+        }
+        if self.zr.len() < need_z {
+            self.zr.resize(need_z, 0.0);
+        }
+        if is_fft {
+            if self.ui.len() < need_u {
+                self.ui.resize(need_u, 0.0);
+            }
+            if self.zi.len() < need_z {
+                self.zi.resize(need_z, 0.0);
+            }
+        }
+        if gauss && self.us.len() < need_u {
+            self.us.resize(need_u, 0.0);
+        }
+
+        // ---- stage 1: input transform, sharded over (b, c, tile) ----
+        {
+            let shards = even_ranges(b * c * n, nw);
+            let u_re = SharedSlice::new(&mut self.ur[..need_u]);
+            let u_im = if is_fft {
+                Some(SharedSlice::new(&mut self.ui[..need_u]))
+            } else {
+                None
+            };
+            let u_s = if gauss {
+                Some(SharedSlice::new(&mut self.us[..need_u]))
+            } else {
+                None
+            };
+            let parts: Vec<(Range<usize>, &mut WorkerState)> =
+                shards.into_iter().zip(self.workers.iter_mut()).collect();
+            execute(pool, parts, |_wi, (range, ws)| {
+                let mut g = range.start;
+                while g < range.end {
+                    let bc = g / n;
+                    let ni0 = g % n;
+                    let (bi, ci) = (bc / c, bc % c);
+                    let cnt = NB.min(n - ni0).min(range.end - g);
+                    let plane = x.plane(bi, ci);
+                    for s in 0..cnt {
+                        let ni = ni0 + s;
+                        let (ti, tj) = (ni / grid.nw, ni % grid.nw);
+                        grid.gather(plane, ti, tj, &mut ws.xb[s * t * t..(s + 1) * t * t]);
+                    }
+                    match &mut ws.codelets {
+                        Codelets::Winograd { input, .. } => {
+                            input.apply(&ws.xb[..cnt * t * t], cnt, &mut ws.tre[..cnt * p]);
+                        }
+                        Codelets::Fft(tf) => {
+                            tf.forward(
+                                &ws.xb[..cnt * t * t],
+                                cnt,
+                                t,
+                                &mut ws.tre[..cnt * p],
+                                &mut ws.tim[..cnt * p],
+                            );
+                        }
+                    }
+                    // Disjointness: workers own disjoint (bi, ci, ni)
+                    // ranges, and U index (pp*c + ci)*bn + bi*n + ni is
+                    // injective in (ci, bi, ni) for every pp.
+                    let base = bi * n + ni0;
+                    for pp in 0..p {
+                        let off = (pp * c + ci) * bn + base;
+                        for s in 0..cnt {
+                            let re = ws.tre[s * p + pp];
+                            unsafe { u_re.set(off + s, re) };
+                            if let Some(u_im) = &u_im {
+                                let im = ws.tim[s * p + pp];
+                                unsafe { u_im.set(off + s, im) };
+                                if let Some(u_s) = &u_s {
+                                    unsafe { u_s.set(off + s, re + im) };
+                                }
+                            }
+                        }
+                    }
+                    g += cnt;
+                }
+            });
+        }
+
+        // ---- stage 2: element-wise GEMMs, sharded over the P elements ----
+        {
+            let shards = even_ranges(p, nw);
+            let zr_parts = split_units(&mut self.zr[..need_z], &shards, k * bn);
+            let zi_parts: Vec<&mut [f32]> = if is_fft {
+                split_units(&mut self.zi[..need_z], &shards, k * bn)
+            } else {
+                // Winograd has no imaginary plane: hand out empty slices
+                (0..nw).map(|_| Default::default()).collect()
+            };
+            let ur = &self.ur[..need_u];
+            let ui = &self.ui[..if is_fft { need_u } else { 0 }];
+            let us = &self.us[..if gauss { need_u } else { 0 }];
+            let (vr, vi, vd, vs) = (&self.vr, &self.vi, &self.vd, &self.vs);
+            let mut parts = Vec::with_capacity(nw);
+            for (((range, zr_s), zi_s), ws) in shards
+                .iter()
+                .cloned()
+                .zip(zr_parts)
+                .zip(zi_parts)
+                .zip(self.workers.iter_mut())
+            {
+                parts.push((range, zr_s, zi_s, ws));
+            }
+            execute(pool, parts, |_wi, (range, zr_s, zi_s, ws)| {
+                for (idx, pp) in range.enumerate() {
+                    let z0 = idx * k * bn;
+                    let zr_p = &mut zr_s[z0..z0 + k * bn];
+                    zr_p.fill(0.0);
+                    let ur_p = &ur[pp * c * bn..(pp + 1) * c * bn];
+                    let vr_p = &vr[pp * k * c..(pp + 1) * k * c];
+                    if !is_fft {
+                        // Z_p (K x BN) = V_p (K x C) @ U_p (C x BN)
+                        gemm_acc(zr_p, vr_p, ur_p, k, c, bn);
+                        continue;
+                    }
+                    let zi_p = &mut zi_s[z0..z0 + k * bn];
+                    zi_p.fill(0.0);
+                    let ui_p = &ui[pp * c * bn..(pp + 1) * c * bn];
+                    let vi_p = &vi[pp * k * c..(pp + 1) * k * c];
+                    if gauss {
+                        // transposed Gauss: t1 = Vr@Us, t2 = Vd@Ur, t3 = Vs@Ui
+                        // (gauss_gemm_acc computes t1 = arg_us@arg_vr etc., so
+                        // the kernel-side planes go in the "u" slots and vice
+                        // versa — identical to the pre-engine layer code)
+                        gauss_gemm_acc(
+                            zr_p,
+                            zi_p,
+                            &vd[pp * k * c..(pp + 1) * k * c], // arg ur -> t2 lhs
+                            &vs[pp * k * c..(pp + 1) * k * c], // arg ui -> t3 lhs
+                            vr_p,                              // arg us -> t1 lhs
+                            &us[pp * c * bn..(pp + 1) * c * bn], // arg vr -> t1 rhs
+                            ur_p,                              // arg vd -> t2 rhs
+                            ui_p,                              // arg vs -> t3 rhs
+                            k,
+                            c,
+                            bn,
+                            &mut ws.gauss,
+                        );
+                    } else {
+                        cgemm_acc(zr_p, zi_p, vr_p, vi_p, ur_p, ui_p, k, c, bn);
+                    }
+                }
+            });
+        }
+
+        // ---- stage 3: pruned inverse + scatter, sharded over (b, k, tile row) ----
+        {
+            let nh = grid.nh;
+            let plane_len = grid.oh * grid.ow;
+            let shards = even_ranges(b * k * nh, nw);
+            // a contiguous run of global tile rows is a contiguous pixel
+            // range of out.data, so the split below is a safe partition
+            let addr = |gr: usize| -> usize {
+                let (q, row) = (gr / nh, gr % nh);
+                q * plane_len + (row * m).min(grid.oh) * grid.ow
+            };
+            let mut parts = Vec::with_capacity(nw);
+            {
+                let mut rest: &mut [f32] = &mut out.data[..];
+                let mut pos = 0usize;
+                for (range, ws) in shards.iter().cloned().zip(self.workers.iter_mut()) {
+                    let end = addr(range.end);
+                    let (head, tail) = std::mem::take(&mut rest).split_at_mut(end - pos);
+                    parts.push((range, head, ws));
+                    pos = end;
+                    rest = tail;
+                }
+            }
+            let zr = &self.zr[..need_z];
+            let zi = &self.zi[..if is_fft { need_z } else { 0 }];
+            execute(pool, parts, |_wi, (range, out_s, ws)| {
+                let mut local = 0usize; // pixel offset into out_s
+                let mut gr = range.start;
+                while gr < range.end {
+                    let (q, row0) = (gr / nh, gr % nh);
+                    let rows = (nh - row0).min(range.end - gr);
+                    let row1 = row0 + rows;
+                    let (bi, ki) = (q / k, q % k);
+                    let seg_px = ((row1 * m).min(grid.oh) - row0 * m) * grid.ow;
+                    let seg = &mut out_s[local..local + seg_px];
+                    let (ni_start, ni_end) = (row0 * grid.nw, row1 * grid.nw);
+                    let mut done = ni_start;
+                    while done < ni_end {
+                        let cnt = NB.min(ni_end - done);
+                        for pp in 0..p {
+                            let off = (pp * k + ki) * bn + bi * n + done;
+                            for (s, &v) in zr[off..off + cnt].iter().enumerate() {
+                                ws.tre[s * p + pp] = v;
+                            }
+                            if is_fft {
+                                for (s, &v) in zi[off..off + cnt].iter().enumerate() {
+                                    ws.tim[s * p + pp] = v;
+                                }
+                            }
+                        }
+                        match &mut ws.codelets {
+                            Codelets::Winograd { output, .. } => {
+                                output.apply(&ws.tre[..cnt * p], cnt, &mut ws.ob[..cnt * m * m]);
+                            }
+                            Codelets::Fft(tf) => {
+                                tf.inverse_valid(
+                                    &ws.tre[..cnt * p],
+                                    &ws.tim[..cnt * p],
+                                    cnt,
+                                    &mut ws.ob[..cnt * m * m],
+                                );
+                            }
+                        }
+                        for s in 0..cnt {
+                            let ni = done + s;
+                            let (ti, tj) = (ni / grid.nw, ni % grid.nw);
+                            grid.scatter_rows(
+                                &ws.ob[s * m * m..(s + 1) * m * m],
+                                ti,
+                                tj,
+                                row0 * m,
+                                seg,
+                            );
+                        }
+                        done += cnt;
+                    }
+                    local += seg_px;
+                    gr += rows;
+                }
+            });
+        }
+    }
+}
+
+/// Run one tiled convolution through a cached plan slot, rebuilding the
+/// plan only when (algo, shape, weights) changed — the shared body of the
+/// `WinogradLayer` / `FftConvLayer` wrappers.
+pub fn run_cached(
+    algo: ConvAlgorithm,
+    x: &Tensor4,
+    w: &Tensor4,
+    cache: &mut Option<LayerPlan>,
+    pool: Option<&ThreadPool>,
+) -> Tensor4 {
+    let fp = weights_fingerprint(w);
+    let stale = match cache {
+        Some(plan) => !plan.matches(algo, x, fp),
+        None => true,
+    };
+    if stale {
+        let nworkers = pool.map_or(1, |p| p.workers());
+        *cache = Some(LayerPlan::new(algo, w, x.shape[2], x.shape[3], nworkers));
+    }
+    cache
+        .as_mut()
+        .expect("plan populated above")
+        .run(x, pool)
+}
+
+/// Winograd kernel transform (no spatial flip — the Cook–Toom matrices
+/// bake correlation in): V[P][K][C] from w (K, C, r, r).
+fn wino_kernel_transform(w: &Tensor4, kernel_tf: &mut BatchSandwich, p: usize) -> Vec<f32> {
+    let [k, c, r, _] = w.shape;
+    let mut v = vec![0.0f32; p * k * c];
+    let mut wb = vec![0.0f32; NB * r * r];
+    let mut tb = vec![0.0f32; NB * p];
+    for ki in 0..k {
+        let mut ci0 = 0usize;
+        let mut cnt = 0usize;
+        for ci in 0..c {
+            wb[cnt * r * r..(cnt + 1) * r * r].copy_from_slice(w.plane(ki, ci));
+            cnt += 1;
+            if cnt == NB || ci + 1 == c {
+                kernel_tf.apply(&wb[..cnt * r * r], cnt, &mut tb[..cnt * p]);
+                for s in 0..cnt {
+                    for pp in 0..p {
+                        v[(pp * k + ki) * c + ci0 + s] = tb[s * p + pp];
+                    }
+                }
+                ci0 += cnt;
+                cnt = 0;
+            }
+        }
+    }
+    v
+}
+
+/// FFT kernel transform (spatially flipped, implicit zero-pad):
+/// V[P][K][C] re/im planes, plus the Gauss Vd/Vs precombinations.
+fn fft_kernel_transform(
+    w: &Tensor4,
+    tf: &mut BatchDft,
+    p: usize,
+    gauss: bool,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let [k, c, r, _] = w.shape;
+    let mut vr = vec![0.0f32; p * k * c];
+    let mut vi = vec![0.0f32; p * k * c];
+    let (mut vd, mut vs) = if gauss {
+        (vec![0.0f32; p * k * c], vec![0.0f32; p * k * c])
+    } else {
+        (Vec::new(), Vec::new())
+    };
+    let mut kb = vec![0.0f32; NB * r * r];
+    let mut zre = vec![0.0f32; NB * p];
+    let mut zim = vec![0.0f32; NB * p];
+    for ki in 0..k {
+        let mut ci0 = 0usize;
+        let mut cnt = 0usize;
+        for ci in 0..c {
+            let wtile = w.plane(ki, ci);
+            let dst = &mut kb[cnt * r * r..(cnt + 1) * r * r];
+            for u in 0..r {
+                for v in 0..r {
+                    dst[u * r + v] = wtile[(r - 1 - u) * r + (r - 1 - v)];
+                }
+            }
+            cnt += 1;
+            if cnt == NB || ci + 1 == c {
+                tf.forward(&kb[..cnt * r * r], cnt, r, &mut zre[..cnt * p], &mut zim[..cnt * p]);
+                for pp in 0..p {
+                    let off = (pp * k + ki) * c + ci0;
+                    for s in 0..cnt {
+                        let re = zre[s * p + pp];
+                        let im = zim[s * p + pp];
+                        vr[off + s] = re;
+                        vi[off + s] = im;
+                        if gauss {
+                            vd[off + s] = im - re;
+                            vs[off + s] = re + im;
+                        }
+                    }
+                }
+                ci0 += cnt;
+                cnt = 0;
+            }
+        }
+    }
+    (vr, vi, vd, vs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::direct;
+
+    fn tol(want: &Tensor4) -> f32 {
+        2e-3 * want.max_abs().max(1.0)
+    }
+
+    #[test]
+    fn plan_matches_direct_all_methods() {
+        let x = Tensor4::random([2, 3, 13, 12], 810);
+        let w = Tensor4::random([4, 3, 3, 3], 811);
+        let want = direct::naive(&x, &w);
+        for algo in [
+            ConvAlgorithm::Winograd { m: 4 },
+            ConvAlgorithm::RegularFft { m: 4 },
+            ConvAlgorithm::GaussFft { m: 4 },
+        ] {
+            let mut plan = LayerPlan::new(algo, &w, 13, 12, 1);
+            let got = plan.run(&x, None);
+            assert!(
+                got.max_abs_diff(&want) < tol(&want),
+                "{}: {}",
+                algo.name(),
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn parallel_equals_serial_bitwise() {
+        let x = Tensor4::random([3, 4, 17, 15], 820);
+        let w = Tensor4::random([5, 4, 3, 3], 821);
+        let pool = ThreadPool::new(4);
+        for algo in [
+            ConvAlgorithm::Winograd { m: 4 },
+            ConvAlgorithm::RegularFft { m: 6 },
+            ConvAlgorithm::GaussFft { m: 6 },
+        ] {
+            let mut serial = LayerPlan::new(algo, &w, 17, 15, 1);
+            let mut par = LayerPlan::new(algo, &w, 17, 15, 4);
+            let a = serial.run(&x, None);
+            let b = par.run(&x, Some(&pool));
+            assert_eq!(a.shape, b.shape);
+            // shard boundaries never change per-tile arithmetic
+            assert!(a.max_abs_diff(&b) < 1e-6, "{}", algo.name());
+        }
+    }
+
+    #[test]
+    fn plan_reused_across_batch_sizes() {
+        let w = Tensor4::random([2, 2, 3, 3], 830);
+        let mut plan = LayerPlan::new(ConvAlgorithm::RegularFft { m: 4 }, &w, 10, 10, 1);
+        for (b, seed) in [(1usize, 840u64), (4, 841), (2, 842)] {
+            let x = Tensor4::random([b, 2, 10, 10], seed);
+            let want = direct::naive(&x, &w);
+            let got = plan.run(&x, None);
+            assert!(got.max_abs_diff(&want) < tol(&want), "b={b}");
+        }
+    }
+
+    #[test]
+    fn hot_path_allocation_free_after_first_batch() {
+        let w = Tensor4::random([3, 2, 3, 3], 850);
+        let pool = ThreadPool::new(2);
+        let mut plan = LayerPlan::new(ConvAlgorithm::GaussFft { m: 4 }, &w, 12, 12, 2);
+        let x1 = Tensor4::random([2, 2, 12, 12], 851);
+        let x2 = Tensor4::random([2, 2, 12, 12], 852);
+        let o1 = plan.run(&x1, Some(&pool));
+        let stamp = plan.arena_stamp();
+        let o2 = plan.run(&x2, Some(&pool));
+        assert_eq!(stamp, plan.arena_stamp(), "arenas reallocated on hot path");
+        for (x, o) in [(&x1, &o1), (&x2, &o2)] {
+            let want = direct::naive(x, &w);
+            assert!(o.max_abs_diff(&want) < tol(&want));
+        }
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_weights() {
+        let a = Tensor4::random([2, 2, 3, 3], 860);
+        let mut b = a.clone();
+        b.data[7] += 1e-3;
+        assert_ne!(weights_fingerprint(&a), weights_fingerprint(&b));
+        assert_eq!(weights_fingerprint(&a), weights_fingerprint(&a.clone()));
+    }
+
+    #[test]
+    fn run_cached_rebuilds_only_when_stale() {
+        let x = Tensor4::random([1, 2, 9, 9], 870);
+        let w1 = Tensor4::random([2, 2, 3, 3], 871);
+        let w2 = Tensor4::random([2, 2, 3, 3], 872);
+        let mut cache = None;
+        let algo = ConvAlgorithm::Winograd { m: 3 };
+        let got1 = run_cached(algo, &x, &w1, &mut cache, None);
+        let fp1 = cache.as_ref().unwrap().weights_fp;
+        let _ = run_cached(algo, &x, &w1, &mut cache, None);
+        assert_eq!(fp1, cache.as_ref().unwrap().weights_fp, "no rebuild");
+        let got2 = run_cached(algo, &x, &w2, &mut cache, None);
+        assert_ne!(fp1, cache.as_ref().unwrap().weights_fp, "rebuilt");
+        assert!(got1.max_abs_diff(&direct::naive(&x, &w1)) < 1e-3);
+        assert!(got2.max_abs_diff(&direct::naive(&x, &w2)) < 1e-3);
+    }
+}

@@ -1,20 +1,16 @@
 //! Regular-FFT 𝔉(m^2, r^2) and Gauss-FFT 𝔊(m^2, r^2) convolution layers.
 //!
-//! Identical pipeline to the Winograd layer, but transforms are 2D real
-//! FFTs with conjugate-symmetric (t x th) storage, and the element-wise
-//! stage runs complex GEMMs — 4 real GEMMs per element for Regular-FFT,
-//! 3 for Gauss-FFT (§2.3).  Valid correlation is obtained by convolving
-//! with the spatially-flipped kernel and keeping the last m x m window of
-//! each circular output tile (§2.1).
+//! Identical pipeline to the Winograd layer — and since this refactor the
+//! *same* pipeline: the shared stage-parallel engine (`conv::engine`) —
+//! but transforms are 2D real FFTs with conjugate-symmetric (t x th)
+//! storage, and the element-wise stage runs complex GEMMs — 4 real GEMMs
+//! per element for Regular-FFT, 3 for Gauss-FFT (§2.3).  Valid correlation
+//! is obtained by convolving with the spatially-flipped kernel and keeping
+//! the last m x m window of each circular output tile (§2.1).
 
-use super::gemm::{cgemm_acc, gauss_gemm_acc, GaussScratch};
+use super::engine::{run_cached, LayerPlan};
 use super::tensor::Tensor4;
-use super::tiles::TileGrid;
-use crate::fft::batch_dft::BatchDft;
-
-/// Tiles transformed per batched-GEMM codelet invocation (amortizes the
-/// DFT-matrix panels across the register-blocked GEMM).
-const NB: usize = 32;
+use crate::conv::ConvAlgorithm;
 
 /// Which complex-multiplication strategy the element-wise stage uses.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -25,190 +21,33 @@ pub enum FftVariant {
     Gauss,
 }
 
+/// An FFT convolution layer: a thin wrapper that owns one cached
+/// [`LayerPlan`], so repeated `run` calls with the same shape and weights
+/// transform the kernel once and reuse all scratch arenas.
 pub struct FftConvLayer {
     pub m: usize,
     pub r: usize,
     pub variant: FftVariant,
+    plan: Option<LayerPlan>,
 }
 
 impl FftConvLayer {
     pub fn new(m: usize, r: usize, variant: FftVariant) -> FftConvLayer {
-        FftConvLayer { m, r, variant }
+        FftConvLayer {
+            m,
+            r,
+            variant,
+            plan: None,
+        }
     }
 
-    pub fn run(&self, x: &Tensor4, w: &Tensor4) -> Tensor4 {
-        let [b, c, h, wd] = x.shape;
-        let [k, c2, r, _] = w.shape;
-        assert_eq!(c, c2, "channel mismatch");
-        assert_eq!(r, self.r, "kernel size mismatch");
-        let grid = TileGrid::new(h, wd, self.m, self.r);
-        let mut tf = BatchDft::new(self.m, self.r);
-        let (t, th, m) = (tf.t, tf.th, self.m);
-        let n = grid.tiles();
-        let bn = b * n;
-        let p = t * th; // transform elements (complex)
-        let gauss = self.variant == FftVariant::Gauss;
-
-        // --- input transform: U planes [P][C][BN] (contiguous ni runs)
-        let mut ur = vec![0.0f32; p * c * bn];
-        let mut ui = vec![0.0f32; p * c * bn];
-        let mut us = if gauss { vec![0.0f32; p * c * bn] } else { Vec::new() };
-        let mut xb = vec![0.0f32; NB * t * t];
-        let mut zre = vec![0.0f32; NB * p];
-        let mut zim = vec![0.0f32; NB * p];
-        for bi in 0..b {
-            for ci in 0..c {
-                let plane = x.plane(bi, ci);
-                let mut ni0 = 0usize;
-                let mut cnt = 0usize;
-                for ti in 0..grid.nh {
-                    for tj in 0..grid.nw {
-                        grid.gather(plane, ti, tj, &mut xb[cnt * t * t..(cnt + 1) * t * t]);
-                        cnt += 1;
-                        let last = ti + 1 == grid.nh && tj + 1 == grid.nw;
-                        if cnt == NB || last {
-                            tf.forward(&xb[..cnt * t * t], cnt, t, &mut zre[..cnt * p], &mut zim[..cnt * p]);
-                            let base_ni = bi * n + ni0;
-                            for pp in 0..p {
-                                let off = (pp * c + ci) * bn + base_ni;
-                                for s in 0..cnt {
-                                    let re = zre[s * p + pp];
-                                    let im = zim[s * p + pp];
-                                    ur[off + s] = re;
-                                    ui[off + s] = im;
-                                    if gauss {
-                                        us[off + s] = re + im;
-                                    }
-                                }
-                            }
-                            ni0 += cnt;
-                            cnt = 0;
-                        }
-                    }
-                }
-            }
-        }
-
-        // --- kernel transform (flipped, implicit zero-pad): V[P][K][C]
-        let mut vr = vec![0.0f32; p * k * c];
-        let mut vi = vec![0.0f32; p * k * c];
-        let (mut vd, mut vs) = if gauss {
-            (vec![0.0f32; p * k * c], vec![0.0f32; p * k * c])
-        } else {
-            (Vec::new(), Vec::new())
+    pub fn run(&mut self, x: &Tensor4, w: &Tensor4) -> Tensor4 {
+        assert_eq!(w.shape[2], self.r, "kernel size mismatch");
+        let algo = match self.variant {
+            FftVariant::Regular => ConvAlgorithm::RegularFft { m: self.m },
+            FftVariant::Gauss => ConvAlgorithm::GaussFft { m: self.m },
         };
-        let mut kb = vec![0.0f32; NB * r * r];
-        for ki in 0..k {
-            let mut ci0 = 0usize;
-            let mut cnt = 0usize;
-            for ci in 0..c {
-                let wtile = w.plane(ki, ci);
-                let dst = &mut kb[cnt * r * r..(cnt + 1) * r * r];
-                for u in 0..r {
-                    for v in 0..r {
-                        dst[u * r + v] = wtile[(r - 1 - u) * r + (r - 1 - v)];
-                    }
-                }
-                cnt += 1;
-                if cnt == NB || ci + 1 == c {
-                    tf.forward(&kb[..cnt * r * r], cnt, r, &mut zre[..cnt * p], &mut zim[..cnt * p]);
-                    for pp in 0..p {
-                        let off = (pp * k + ki) * c + ci0;
-                        for s in 0..cnt {
-                            let re = zre[s * p + pp];
-                            let im = zim[s * p + pp];
-                            vr[off + s] = re;
-                            vi[off + s] = im;
-                            if gauss {
-                                vd[off + s] = im - re;
-                                vs[off + s] = re + im;
-                            }
-                        }
-                    }
-                    ci0 += cnt;
-                    cnt = 0;
-                }
-            }
-        }
-
-        // --- element-wise stage: Z_p (K x BN) = V_p (K x C) @ U_p (C x BN)
-        // (transposed orientation keeps every operand row-major contiguous)
-        let mut zr = vec![0.0f32; p * k * bn];
-        let mut zi = vec![0.0f32; p * k * bn];
-        let mut scratch = GaussScratch::default();
-        for pp in 0..p {
-            let (zr_p, zi_p) = (
-                &mut zr[pp * k * bn..(pp + 1) * k * bn],
-                &mut zi[pp * k * bn..(pp + 1) * k * bn],
-            );
-            let (ur_p, ui_p) = (
-                &ur[pp * c * bn..(pp + 1) * c * bn],
-                &ui[pp * c * bn..(pp + 1) * c * bn],
-            );
-            let (vr_p, vi_p) = (
-                &vr[pp * k * c..(pp + 1) * k * c],
-                &vi[pp * k * c..(pp + 1) * k * c],
-            );
-            if gauss {
-                // transposed Gauss: t1 = Vr@Us, t2 = Vd@Ur, t3 = Vs@Ui
-                // (gauss_gemm_acc computes t1 = arg_us@arg_vr etc., so the
-                // kernel-side planes go in the "u" slots and vice versa)
-                gauss_gemm_acc(
-                    zr_p,
-                    zi_p,
-                    &vd[pp * k * c..(pp + 1) * k * c], // arg ur -> t2 lhs
-                    &vs[pp * k * c..(pp + 1) * k * c], // arg ui -> t3 lhs
-                    vr_p,                              // arg us -> t1 lhs
-                    &us[pp * c * bn..(pp + 1) * c * bn], // arg vr -> t1 rhs
-                    ur_p,                              // arg vd -> t2 rhs
-                    ui_p,                              // arg vs -> t3 rhs
-                    k,
-                    c,
-                    bn,
-                    &mut scratch,
-                );
-            } else {
-                cgemm_acc(zr_p, zi_p, vr_p, vi_p, ur_p, ui_p, k, c, bn);
-            }
-        }
-        drop(ur);
-        drop(ui);
-        drop(us);
-        drop(vr);
-        drop(vi);
-        drop(vd);
-        drop(vs);
-
-        // --- pruned inverse (batched, contiguous Z runs) + scatter
-        let mut out = Tensor4::zeros([b, k, grid.oh, grid.ow]);
-        let mut otiles = vec![0.0f32; NB * m * m];
-        for bi in 0..b {
-            for ki in 0..k {
-                let mut done = 0usize;
-                while done < n {
-                    let cnt = NB.min(n - done);
-                    let ni0 = bi * n + done;
-                    for pp in 0..p {
-                        let src = &zr[(pp * k + ki) * bn + ni0..(pp * k + ki) * bn + ni0 + cnt];
-                        for (s, &v) in src.iter().enumerate() {
-                            zre[s * p + pp] = v;
-                        }
-                        let src = &zi[(pp * k + ki) * bn + ni0..(pp * k + ki) * bn + ni0 + cnt];
-                        for (s, &v) in src.iter().enumerate() {
-                            zim[s * p + pp] = v;
-                        }
-                    }
-                    tf.inverse_valid(&zre[..cnt * p], &zim[..cnt * p], cnt, &mut otiles[..cnt * m * m]);
-                    for s in 0..cnt {
-                        let ni = done + s;
-                        let (ti, tj) = (ni / grid.nw, ni % grid.nw);
-                        grid.scatter(&otiles[s * m * m..(s + 1) * m * m], ti, tj, out.plane_mut(bi, ki));
-                    }
-                    done += cnt;
-                }
-            }
-        }
-        out
+        run_cached(algo, x, w, &mut self.plan, None)
     }
 }
 
@@ -288,5 +127,17 @@ mod tests {
         let errs: Vec<f32> = [2usize, 6, 10, 14].iter().map(|&m| err(m)).collect();
         let max = errs.iter().cloned().fold(0.0f32, f32::max);
         assert!(max < 5e-5, "FFT error not flat/small: {errs:?}");
+    }
+
+    #[test]
+    fn layer_reuses_plan_across_calls() {
+        let mut layer = FftConvLayer::new(4, 3, FftVariant::Regular);
+        let w = Tensor4::random([2, 2, 3, 3], 27);
+        let x1 = Tensor4::random([1, 2, 10, 10], 28);
+        let x2 = Tensor4::random([2, 2, 10, 10], 29);
+        let a = layer.run(&x1, &w);
+        let b = layer.run(&x2, &w); // different batch size, same plan
+        assert!(a.max_abs_diff(&direct::naive(&x1, &w)) < 1e-3);
+        assert!(b.max_abs_diff(&direct::naive(&x2, &w)) < 1e-3);
     }
 }

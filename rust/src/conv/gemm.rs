@@ -58,20 +58,7 @@ pub fn gemm_scaled(
             if nb == NR && mb == MR {
                 kernel_4x16(c, a, b, i0, j0, k, n, alpha);
             } else {
-                // remainder tile: scalar-ish fallback
-                for i in i0..i0 + mb {
-                    for kk in 0..k {
-                        let av = a[i * k + kk] * alpha;
-                        if av == 0.0 {
-                            continue;
-                        }
-                        let brow = &b[kk * n + j0..kk * n + j0 + nb];
-                        let crow = &mut c[i * n + j0..i * n + j0 + nb];
-                        for (cv, &bv) in crow.iter_mut().zip(brow) {
-                            *cv += av * bv;
-                        }
-                    }
-                }
+                kernel_edge(c, a, b, i0, j0, mb, nb, k, n, alpha);
             }
             i0 += mb;
         }
@@ -105,6 +92,44 @@ fn kernel_4x16(
     }
     for (r, accr) in acc.iter().enumerate() {
         let crow = &mut c[(i0 + r) * n + j0..(i0 + r) * n + j0 + NR];
+        for (cv, &x) in crow.iter_mut().zip(accr) {
+            *cv += alpha * x;
+        }
+    }
+}
+
+/// Register-blocked edge kernel for partial tiles (m % MR / n % NR
+/// residues): same accumulator-tile strategy as [`kernel_4x16`] — a full
+/// MR x NR stack array held across the whole K loop, with only the first
+/// `mb` rows / `nb` columns live — instead of the former scalar-ish
+/// fallback that re-loaded and re-stored C once per k step.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn kernel_edge(
+    c: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    i0: usize,
+    j0: usize,
+    mb: usize,
+    nb: usize,
+    k: usize,
+    n: usize,
+    alpha: f32,
+) {
+    debug_assert!(mb <= MR && nb <= NR);
+    let mut acc = [[0.0f32; NR]; MR];
+    for kk in 0..k {
+        let brow = &b[kk * n + j0..kk * n + j0 + nb];
+        for (r, accr) in acc.iter_mut().take(mb).enumerate() {
+            let av = a[(i0 + r) * k + kk];
+            for (x, &bv) in accr.iter_mut().zip(brow) {
+                *x += av * bv;
+            }
+        }
+    }
+    for (r, accr) in acc.iter().take(mb).enumerate() {
+        let crow = &mut c[(i0 + r) * n + j0..(i0 + r) * n + j0 + nb];
         for (cv, &x) in crow.iter_mut().zip(accr) {
             *cv += alpha * x;
         }
@@ -206,6 +231,35 @@ mod tests {
             let want = gemm_ref(&a, &b, m, k, n);
             for (g, w) in c.iter().zip(&want) {
                 assert!((g - w).abs() < 1e-3, "({m},{k},{n})");
+            }
+        }
+    }
+
+    #[test]
+    fn edge_kernel_all_residues() {
+        // sweep every m % MR and n % NR residue (plus sub-tile m < MR,
+        // n < NR) so the register-blocked edge kernel is fully covered
+        let k = 19; // odd K to exercise the whole accumulator loop
+        for m in 1..=2 * MR + 1 {
+            for n in 1..=2 * NR + 1 {
+                let mut rng = Rng::new((m * 1000 + n) as u64);
+                let a = rng.vec_f32(m * k);
+                let b = rng.vec_f32(k * n);
+                // non-trivial initial C so accumulation (not overwrite) is tested
+                let init = rng.vec_f32(m * n);
+                let mut c = init.clone();
+                gemm_scaled(&mut c, &a, &b, m, k, n, 0.5);
+                let want = gemm_ref(&a, &b, m, k, n);
+                for i in 0..m * n {
+                    let w = init[i] + 0.5 * want[i];
+                    assert!(
+                        (c[i] - w).abs() < 1e-3,
+                        "m={m} n={n} (residues {}, {}): {} vs {w}",
+                        m % MR,
+                        n % NR,
+                        c[i]
+                    );
+                }
             }
         }
     }

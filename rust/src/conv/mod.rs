@@ -4,12 +4,14 @@
 
 pub mod batch_wino;
 pub mod direct;
+pub mod engine;
 pub mod fft_conv;
 pub mod gemm;
 pub mod tensor;
 pub mod tiles;
 pub mod winograd;
 
+pub use engine::LayerPlan;
 pub use fft_conv::FftVariant;
 pub use tensor::Tensor4;
 pub use tiles::TileGrid;
@@ -56,8 +58,9 @@ impl ConvProblem {
 }
 
 /// The algorithms under study (Fig. 1's five bars, minus the vendor
-/// libraries we substitute per DESIGN.md §3).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// libraries we substitute per DESIGN.md §3).  `Hash` so the scheduler's
+/// persistent plan cache can key on the algorithm.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum ConvAlgorithm {
     /// Textbook direct convolution (correctness oracle).
     Direct,

@@ -68,17 +68,31 @@ impl TileGrid {
     /// Scatter an m x m output tile (ti, tj) into `plane` (oh x ow),
     /// dropping the zero-pad remainder.
     pub fn scatter(&self, tile: &[f32], ti: usize, tj: usize, plane: &mut [f32]) {
-        debug_assert_eq!(tile.len(), self.m * self.m);
         debug_assert_eq!(plane.len(), self.oh * self.ow);
+        self.scatter_rows(tile, ti, tj, 0, plane);
+    }
+
+    /// Scatter into a row window of the output plane: `dst` covers output
+    /// rows `row0 .. row0 + dst.len()/ow`.  This is what lets the inverse
+    /// stage hand each worker a disjoint `&mut` sub-slice of the output
+    /// tensor (tile-row sharding) instead of the whole plane.
+    pub fn scatter_rows(&self, tile: &[f32], ti: usize, tj: usize, row0: usize, dst: &mut [f32]) {
+        debug_assert_eq!(tile.len(), self.m * self.m);
+        debug_assert_eq!(dst.len() % self.ow, 0);
+        let rows = dst.len() / self.ow;
         let (i0, j0) = (ti * self.m, tj * self.m);
         for u in 0..self.m {
             let dst_i = i0 + u;
-            if dst_i >= self.oh {
+            if dst_i >= self.oh || dst_i >= row0 + rows {
                 break;
             }
+            if dst_i < row0 {
+                continue;
+            }
+            let local = dst_i - row0;
             let count = self.ow.saturating_sub(j0).min(self.m);
-            let dst = &mut plane[dst_i * self.ow + j0..dst_i * self.ow + j0 + count];
-            dst.copy_from_slice(&tile[u * self.m..u * self.m + count]);
+            let out = &mut dst[local * self.ow + j0..local * self.ow + j0 + count];
+            out.copy_from_slice(&tile[u * self.m..u * self.m + count]);
         }
     }
 }
@@ -148,6 +162,31 @@ mod tests {
         for (i, v) in plane.iter().enumerate() {
             assert_eq!(*v, i as f32);
         }
+    }
+
+    #[test]
+    fn scatter_rows_matches_full_scatter() {
+        let g = TileGrid::new(13, 11, 4, 3); // oh=11, ow=9, nh=3
+        let mut rng = Rng::new(17);
+        let tiles: Vec<Vec<f32>> = (0..g.nh * g.nw).map(|_| rng.vec_f32(g.m * g.m)).collect();
+        // reference: whole-plane scatter
+        let mut want = vec![0.0f32; g.oh * g.ow];
+        for ti in 0..g.nh {
+            for tj in 0..g.nw {
+                g.scatter(&tiles[ti * g.nw + tj], ti, tj, &mut want);
+            }
+        }
+        // row-windowed: one window per tile row, clipped at oh
+        let mut got = vec![0.0f32; g.oh * g.ow];
+        for ti in 0..g.nh {
+            let row0 = ti * g.m;
+            let row1 = (row0 + g.m).min(g.oh);
+            let window = &mut got[row0 * g.ow..row1 * g.ow];
+            for tj in 0..g.nw {
+                g.scatter_rows(&tiles[ti * g.nw + tj], ti, tj, row0, window);
+            }
+        }
+        assert_eq!(got, want);
     }
 
     #[test]

@@ -1,168 +1,43 @@
-//! Winograd F(m^2, r^2) convolution layer — the paper's four phases over
-//! the native substrates: OLA tiling, B^T d B / G g G^T transforms, one
-//! real GEMM per transform element (Eqn. 12), A^T z A inverse.
+//! Winograd F(m^2, r^2) convolution layer — the paper's four phases
+//! (OLA tiling, B^T d B / G g G^T transforms, one real GEMM per transform
+//! element (Eqn. 12), A^T z A inverse), executed by the shared
+//! stage-parallel engine (`conv::engine`).
 //!
-//! GEMM operand layout (paper §A.3): for each transform element p,
-//!   U_p: (BN x C) row-major,  V_p: (C x K) row-major,  Z_p: (BN x K).
-//! U is laid out [P][BN][C] so each GEMM reads a contiguous panel.
+//! GEMM operand layout (paper §A.3): transforms write *contiguous* runs
+//! into U[P][C][BN] / V[P][K][C]; the element-wise stage computes
+//! Z_p (K x BN) = V_p (K x C) @ U_p (C x BN); the inverse reads contiguous
+//! runs of Z[P][K][BN].  Tile contents are stored transposed by the
+//! batched codelets — consistent on both GEMM operands, and un-transposed
+//! by the output codelet (see `batch_wino`).
 
-use super::batch_wino::BatchSandwich;
-use super::gemm::gemm_acc;
+use super::engine::{run_cached, LayerPlan};
 use super::tensor::Tensor4;
-use super::tiles::TileGrid;
-use crate::winograd::matrices::winograd_matrices_f32;
+use crate::conv::ConvAlgorithm;
 
-/// Tiles per batched transform-codelet invocation (see batch_wino).
-const NB: usize = 32;
-
-/// Transform state for one F(m^2, r^2) configuration.
-///
-/// GEMM operand layouts follow the paper's interleaving (§3): transforms
-/// write *contiguous* runs into U[P][C][BN] / V[P][K][C]; the element-wise
-/// stage computes Z_p (K x BN) = V_p (K x C) @ U_p (C x BN); the inverse
-/// reads contiguous runs of Z[P][K][BN].  Tile contents are stored
-/// transposed by the batched codelets — consistent on both GEMM operands,
-/// and un-transposed by the output codelet (see batch_wino).
+/// A Winograd convolution layer: a thin wrapper that owns one cached
+/// [`LayerPlan`], so repeated `run` calls with the same shape and weights
+/// transform the kernel once and reuse all scratch arenas.
 pub struct WinogradLayer {
     pub m: usize,
     pub r: usize,
     pub t: usize,
-    input_tf: BatchSandwich,
-    kernel_tf: BatchSandwich,
-    output_tf: BatchSandwich,
+    plan: Option<LayerPlan>,
 }
 
 impl WinogradLayer {
     pub fn new(m: usize, r: usize) -> WinogradLayer {
-        let (at, g, bt) = winograd_matrices_f32(m, r);
-        let t = m + r - 1;
         WinogradLayer {
             m,
             r,
-            t,
-            input_tf: BatchSandwich::new(&bt, t, t),
-            kernel_tf: BatchSandwich::new(&g, t, r),
-            output_tf: BatchSandwich::new(&at, m, t),
+            t: m + r - 1,
+            plan: None,
         }
     }
 
     /// Full layer: x (B,C,H,W) * w (K,C,r,r) -> (B,K,H-r+1,W-r+1).
     pub fn run(&mut self, x: &Tensor4, w: &Tensor4) -> Tensor4 {
-        let [b, c, h, wd] = x.shape;
-        let [k, c2, r, _] = w.shape;
-        assert_eq!(c, c2, "channel mismatch");
-        assert_eq!(r, self.r, "kernel size mismatch");
-        let grid = TileGrid::new(h, wd, self.m, self.r);
-        let (t, m) = (self.t, self.m);
-        let n = grid.tiles();
-        let bn = b * n;
-        let p = t * t;
-
-        // --- input transform: U[P][C][BN] (contiguous ni runs per write)
-        let mut u = vec![0.0f32; p * c * bn];
-        let mut xb = vec![0.0f32; NB * t * t];
-        let mut tb = vec![0.0f32; NB * t * t];
-        for bi in 0..b {
-            for ci in 0..c {
-                let plane = x.plane(bi, ci);
-                let mut ni0 = 0usize; // first tile index in batch (within image)
-                let mut cnt = 0usize;
-                for ti in 0..grid.nh {
-                    for tj in 0..grid.nw {
-                        grid.gather(plane, ti, tj, &mut xb[cnt * t * t..(cnt + 1) * t * t]);
-                        cnt += 1;
-                        if cnt == NB {
-                            self.input_tf.apply(&xb[..cnt * t * t], cnt, &mut tb[..cnt * p]);
-                            scatter_u(&tb, cnt, p, &mut u, ci, bn, bi * n + ni0);
-                            ni0 += cnt;
-                            cnt = 0;
-                        }
-                    }
-                }
-                if cnt > 0 {
-                    self.input_tf.apply(&xb[..cnt * t * t], cnt, &mut tb[..cnt * p]);
-                    scatter_u(&tb, cnt, p, &mut u, ci, bn, bi * n + ni0);
-                }
-            }
-        }
-
-        // --- kernel transform: V[P][K][C] (contiguous ci runs per write)
-        let mut vmat = vec![0.0f32; p * k * c];
-        let mut wb = vec![0.0f32; NB * r * r];
-        for ki in 0..k {
-            let mut ci0 = 0usize;
-            let mut cnt = 0usize;
-            for ci in 0..c {
-                wb[cnt * r * r..(cnt + 1) * r * r].copy_from_slice(w.plane(ki, ci));
-                cnt += 1;
-                if cnt == NB || ci + 1 == c {
-                    self.kernel_tf.apply(&wb[..cnt * r * r], cnt, &mut tb[..cnt * p]);
-                    for (s, _) in (ci0..ci0 + cnt).enumerate() {
-                        for pp in 0..p {
-                            vmat[(pp * k + ki) * c + ci0 + s] = tb[s * p + pp];
-                        }
-                    }
-                    ci0 += cnt;
-                    cnt = 0;
-                }
-            }
-        }
-
-        // --- element-wise stage: Z_p (K x BN) = V_p (K x C) @ U_p (C x BN)
-        let mut z = vec![0.0f32; p * k * bn];
-        for pp in 0..p {
-            gemm_acc(
-                &mut z[pp * k * bn..(pp + 1) * k * bn],
-                &vmat[pp * k * c..(pp + 1) * k * c],
-                &u[pp * c * bn..(pp + 1) * c * bn],
-                k,
-                c,
-                bn,
-            );
-        }
-        drop(u);
-        drop(vmat);
-
-        // --- output transform: gather contiguous Z runs, A^T z A, scatter
-        let mut out = Tensor4::zeros([b, k, grid.oh, grid.ow]);
-        let mut zb = vec![0.0f32; NB * p];
-        let mut ob = vec![0.0f32; NB * m * m];
-        for bi in 0..b {
-            for ki in 0..k {
-                let tiles_per_img = n;
-                let mut done = 0usize;
-                while done < tiles_per_img {
-                    let cnt = NB.min(tiles_per_img - done);
-                    let ni0 = bi * n + done;
-                    for pp in 0..p {
-                        let src = &z[(pp * k + ki) * bn + ni0..(pp * k + ki) * bn + ni0 + cnt];
-                        for (s, &v) in src.iter().enumerate() {
-                            zb[s * p + pp] = v;
-                        }
-                    }
-                    self.output_tf.apply(&zb[..cnt * p], cnt, &mut ob[..cnt * m * m]);
-                    for s in 0..cnt {
-                        let ni = done + s;
-                        let (ti, tj) = (ni / grid.nw, ni % grid.nw);
-                        grid.scatter(&ob[s * m * m..(s + 1) * m * m], ti, tj, out.plane_mut(bi, ki));
-                    }
-                    done += cnt;
-                }
-            }
-        }
-        out
-    }
-}
-
-/// Write a batch of transformed tiles into U[P][C][BN]: for each position
-/// pp the batch's tiles occupy the contiguous run U[(pp*c+ci)*bn + ni0..].
-fn scatter_u(tb: &[f32], cnt: usize, p: usize, u: &mut [f32], ci: usize, bn: usize, ni0: usize) {
-    let c = u.len() / (p * bn);
-    for pp in 0..p {
-        let dst = &mut u[(pp * c + ci) * bn + ni0..(pp * c + ci) * bn + ni0 + cnt];
-        for (s, d) in dst.iter_mut().enumerate() {
-            *d = tb[s * p + pp];
-        }
+        assert_eq!(w.shape[2], self.r, "kernel size mismatch");
+        run_cached(ConvAlgorithm::Winograd { m: self.m }, x, w, &mut self.plan, None)
     }
 }
 
@@ -170,8 +45,6 @@ fn scatter_u(tb: &[f32], cnt: usize, p: usize, u: &mut [f32], ci: usize, bn: usi
 pub fn run(x: &Tensor4, w: &Tensor4, m: usize) -> Tensor4 {
     WinogradLayer::new(m, w.shape[2]).run(x, w)
 }
-
-// NB: run() takes &mut self now (codelet scratch); the wrapper hides it.
 
 #[cfg(test)]
 mod tests {
@@ -222,5 +95,17 @@ mod tests {
         let err = |m: usize| run(&x, &w, m).max_abs_diff(&want) / want.max_abs();
         let (e2, e8) = (err(2), err(8));
         assert!(e8 > e2, "expected error growth: {e2} vs {e8}");
+    }
+
+    #[test]
+    fn layer_reuses_plan_across_calls() {
+        let mut layer = WinogradLayer::new(4, 3);
+        let w = Tensor4::random([2, 2, 3, 3], 13);
+        let x1 = Tensor4::random([1, 2, 10, 10], 14);
+        let x2 = Tensor4::random([1, 2, 10, 10], 15);
+        let a = layer.run(&x1, &w);
+        let b = layer.run(&x2, &w);
+        assert!(a.max_abs_diff(&direct::naive(&x1, &w)) < 1e-3);
+        assert!(b.max_abs_diff(&direct::naive(&x2, &w)) < 1e-3);
     }
 }

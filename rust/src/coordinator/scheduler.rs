@@ -2,25 +2,115 @@
 //! is executed as a single fork-join in which every core receives a
 //! statically precomputed, equal-FLOP share of the work.
 //!
-//! The shardable unit here is the batch image: every image of a batch
-//! costs identical FLOPs for a fixed layer, so the equal-FLOP partition
-//! is the balanced contiguous range split of `even_ranges`.  (Intra-image
-//! sharding over tile rows uses `weighted_ranges` when batches are
-//! smaller than the worker count.)
+//! ## Zero-copy design
+//!
+//! `run_batch` never copies sub-batches and holds no locks.  Workers read
+//! the input tensor through shared borrows and write through **disjoint
+//! `&mut` output slices** carved out of the one output tensor before the
+//! fork (where a `Mutex<Tensor4>` plus per-worker `to_vec()` sub-batch
+//! copies used to live).  The shardable units are fine-grained enough
+//! that batches smaller than the worker count still use every core:
+//!
+//! * tiled algorithms (Winograd / Regular-FFT / Gauss-FFT) run on the
+//!   stage-parallel [`LayerPlan`] engine, sharded over global tile and
+//!   tile-row indices `(image, channel, tile)` — intra-image sharding is
+//!   the same code path, not a fallback;
+//! * `Direct` shards over global output rows `(image, k, row)`;
+//! * `Im2col` shards over images (its GEMM is already batched per image).
+//!
+//! ## Persistent layer plans
+//!
+//! Plans are cached per (algorithm, input shape, weight fingerprint):
+//! the kernel transform `V[P][K][C]` is computed once per layer, and the
+//! engine's scratch arenas are reused across every subsequent batch, so
+//! steady-state serving is allocation-free on the hot path.
 
-use crate::conv::{run, ConvAlgorithm, Tensor4};
+use crate::conv::direct;
+use crate::conv::engine::{weights_fingerprint, LayerPlan};
+use crate::conv::{ConvAlgorithm, Tensor4};
 use crate::util::threadpool::{even_ranges, weighted_ranges, ThreadPool};
-use std::sync::Mutex;
+use std::collections::HashMap;
+use std::ops::Range;
 
-/// A static fork-join scheduler over a worker pool.
+/// Most plans kept before eviction — bounds memory under weight churn
+/// while letting every distinct serving layer keep its plan resident.
+const MAX_PLANS: usize = 64;
+
+/// Cache key for a persistent layer plan.  The weight fingerprint is part
+/// of the key so two same-shape layers with different weights each keep
+/// their plan (no thrash); staleness under weight *updates* is handled by
+/// the eviction in [`plan_entry`], which prefers dropping a same-shape
+/// plan with an outdated fingerprint.
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct PlanKey {
+    algo: ConvAlgorithm,
+    c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    r: usize,
+    weights_fp: u64,
+}
+
+/// Get-or-build the cached plan for (algo, input shape, weights).
+///
+/// The FNV fingerprint scan is O(|weights|) per batch — orders of
+/// magnitude below the convolution itself — and is what lets callers
+/// swap weights without a stale-plan hazard.
+fn plan_entry<'a>(
+    plans: &'a mut HashMap<PlanKey, LayerPlan>,
+    workers: usize,
+    algo: ConvAlgorithm,
+    c: usize,
+    h: usize,
+    w_sp: usize,
+    weights: &Tensor4,
+) -> &'a mut LayerPlan {
+    let key = PlanKey {
+        algo,
+        c,
+        h,
+        w: w_sp,
+        k: weights.shape[0],
+        r: weights.shape[2],
+        weights_fp: weights_fingerprint(weights),
+    };
+    if !plans.contains_key(&key) && plans.len() >= MAX_PLANS {
+        // prefer evicting this layer's outdated-weights plan; otherwise
+        // drop an arbitrary entry to stay bounded
+        let evict = plans
+            .keys()
+            .find(|k2| {
+                k2.algo == key.algo
+                    && k2.c == key.c
+                    && k2.h == key.h
+                    && k2.w == key.w
+                    && k2.k == key.k
+                    && k2.r == key.r
+            })
+            .or_else(|| plans.keys().next())
+            .cloned();
+        if let Some(e) = evict {
+            plans.remove(&e);
+        }
+    }
+    plans
+        .entry(key)
+        .or_insert_with(|| LayerPlan::new(algo, weights, h, w_sp, workers))
+}
+
+/// A static fork-join scheduler over a worker pool, with a persistent
+/// plan cache for the tiled algorithms.
 pub struct StaticScheduler {
     pool: ThreadPool,
+    plans: HashMap<PlanKey, LayerPlan>,
 }
 
 impl StaticScheduler {
     pub fn new(workers: usize) -> StaticScheduler {
         StaticScheduler {
             pool: ThreadPool::new(workers),
+            plans: HashMap::new(),
         }
     }
 
@@ -28,38 +118,104 @@ impl StaticScheduler {
         self.pool.workers()
     }
 
+    /// Number of cached layer plans (observability / tests).
+    pub fn cached_plans(&self) -> usize {
+        self.plans.len()
+    }
+
+    /// Pre-build (and cache) the plan for a layer so the first request
+    /// doesn't pay the kernel transform — called by `ConvService::register`.
+    pub fn warm(&mut self, algo: ConvAlgorithm, weights: &Tensor4, h: usize, w: usize) {
+        if algo.tile_m().is_none() {
+            return;
+        }
+        let workers = self.pool.workers();
+        let _ = plan_entry(
+            &mut self.plans,
+            workers,
+            algo,
+            weights.shape[1],
+            h,
+            w,
+            weights,
+        );
+    }
+
     /// Run `algo` over a stacked batch (B, C, H, W), statically sharding
-    /// the batch dimension across workers; returns the stacked output.
-    pub fn run_batch(&self, algo: ConvAlgorithm, x: &Tensor4, w: &Tensor4) -> Tensor4 {
+    /// across workers; returns the stacked output.
+    ///
+    /// Zero-copy: workers write disjoint `&mut` slices of the one output
+    /// tensor — no sub-batch copies, no `Mutex`.
+    pub fn run_batch(&mut self, algo: ConvAlgorithm, x: &Tensor4, w: &Tensor4) -> Tensor4 {
         let [b, c, h, wd] = x.shape;
-        let shards = even_ranges(b, self.workers());
-        // Pre-size the output from a zero-cost shape computation.
+        assert_eq!(c, w.shape[1], "channel mismatch");
         let r = w.shape[2];
         let (oh, ow) = (h - r + 1, wd - r + 1);
-        let out = Mutex::new(Tensor4::zeros([b, w.shape[0], oh, ow]));
-
-        self.pool.run_static(|wi| {
-            let range = shards[wi].clone();
-            if range.is_empty() {
-                return;
+        let mut out = Tensor4::zeros([b, w.shape[0], oh, ow]);
+        match algo {
+            ConvAlgorithm::Direct => self.run_direct(x, w, &mut out),
+            ConvAlgorithm::Im2col => self.run_im2col(x, w, &mut out),
+            _ => {
+                let workers = self.pool.workers();
+                let plan = plan_entry(&mut self.plans, workers, algo, c, h, wd, w);
+                plan.run_into(x, &mut out, Some(&self.pool));
             }
-            // slice the sub-batch (contiguous in NCHW)
-            let per = c * h * wd;
-            let sub = Tensor4::from_vec(
-                [range.len(), c, h, wd],
-                x.data[range.start * per..range.end * per].to_vec(),
-            );
-            let sub_out = run(algo, &sub, w);
-            let oper = w.shape[0] * oh * ow;
-            let mut guard = out.lock().unwrap();
-            guard.data[range.start * oper..range.end * oper].copy_from_slice(&sub_out.data);
+        }
+        out
+    }
+
+    /// Direct convolution sharded over global output rows (image, k, row):
+    /// a contiguous row range is a contiguous `&mut` slice of `out.data`.
+    fn run_direct(&self, x: &Tensor4, w: &Tensor4, out: &mut Tensor4) {
+        let [_, k, oh, ow] = out.shape;
+        let shards = even_ranges(out.shape[0] * k * oh, self.pool.workers());
+        let parts = split_row_parts(&mut out.data, &shards, ow);
+        self.pool.run_parts(parts, |_wi, (range, dst)| {
+            let mut local = 0usize;
+            let mut g = range.start;
+            while g < range.end {
+                let (q, row0) = (g / oh, g % oh);
+                let rows = (oh - row0).min(range.end - g);
+                let (bi, ki) = (q / k, q % k);
+                direct::conv_rows(
+                    x,
+                    w,
+                    bi,
+                    ki,
+                    row0..row0 + rows,
+                    &mut dst[local..local + rows * ow],
+                );
+                local += rows * ow;
+                g += rows;
+            }
         });
-        out.into_inner().unwrap()
+    }
+
+    /// im2col sharded over images; each worker writes its images' (K, OH,
+    /// OW) blocks in place.
+    fn run_im2col(&self, x: &Tensor4, w: &Tensor4, out: &mut Tensor4) {
+        let [b, k, oh, ow] = out.shape;
+        let r = w.shape[2];
+        let wm = direct::weights_matrix(w);
+        let per = k * oh * ow;
+        let shards = even_ranges(b, self.pool.workers());
+        let parts = split_row_parts(&mut out.data, &shards, per);
+        let wm = &wm;
+        self.pool.run_parts(parts, |_wi, (range, dst)| {
+            for (li, bi) in range.enumerate() {
+                direct::im2col_image(x, wm, k, r, bi, &mut dst[li * per..(li + 1) * per]);
+            }
+        });
     }
 
     /// Equal-FLOP shard weights for a tile grid with remainder tiles:
-    /// full tiles cost m^2 output pixels, edge tiles cost their remainder
-    /// (the scheduler's input when sharding intra-image).
+    /// full tiles cost m^2 output pixels, edge tiles cost their remainder.
+    ///
+    /// Used for *output-pixel-cost* sharding (direct conv).  The engine's
+    /// transform stages deliberately shard by tile count instead: every
+    /// tile — remainder or not — pays the same transform FLOPs (gathers
+    /// zero-pad), so `even_ranges` over tiles already is the equal-FLOP
+    /// split there.
     pub fn tile_row_weights(oh: usize, m: usize) -> Vec<f64> {
         let nh = oh.div_ceil(m);
         (0..nh)
@@ -71,9 +227,23 @@ impl StaticScheduler {
     }
 
     /// Shard tile rows by weight across workers.
-    pub fn shard_tile_rows(&self, oh: usize, m: usize) -> Vec<std::ops::Range<usize>> {
+    pub fn shard_tile_rows(&self, oh: usize, m: usize) -> Vec<Range<usize>> {
         weighted_ranges(&Self::tile_row_weights(oh, m), self.workers())
     }
+}
+
+/// Pair each shard range with its disjoint `&mut` slice of `data`
+/// (`unit` elements per shard item) — the pre-fork output partition.
+fn split_row_parts<'a>(
+    data: &'a mut [f32],
+    shards: &[Range<usize>],
+    unit: usize,
+) -> Vec<(Range<usize>, &'a mut [f32])> {
+    shards
+        .iter()
+        .cloned()
+        .zip(crate::conv::engine::split_units(data, shards, unit))
+        .collect()
 }
 
 #[cfg(test)]
@@ -87,9 +257,10 @@ mod tests {
         let w = Tensor4::random([4, 3, 3, 3], 32);
         let want = direct::naive(&x, &w);
         for workers in [1usize, 2, 3, 8] {
-            let s = StaticScheduler::new(workers);
+            let mut s = StaticScheduler::new(workers);
             for algo in [
                 ConvAlgorithm::Direct,
+                ConvAlgorithm::Im2col,
                 ConvAlgorithm::Winograd { m: 4 },
                 ConvAlgorithm::RegularFft { m: 4 },
             ] {
@@ -107,10 +278,82 @@ mod tests {
     fn more_workers_than_batch() {
         let x = Tensor4::random([2, 2, 8, 8], 33);
         let w = Tensor4::random([2, 2, 3, 3], 34);
-        let s = StaticScheduler::new(6);
+        let mut s = StaticScheduler::new(6);
         let got = s.run_batch(ConvAlgorithm::Winograd { m: 2 }, &x, &w);
         let want = direct::naive(&x, &w);
         assert!(got.max_abs_diff(&want) < 1e-3 * want.max_abs().max(1.0));
+    }
+
+    #[test]
+    fn plan_cache_persists_across_batches() {
+        let x = Tensor4::random([3, 2, 9, 9], 35);
+        let w = Tensor4::random([2, 2, 3, 3], 36);
+        let mut s = StaticScheduler::new(2);
+        assert_eq!(s.cached_plans(), 0);
+        let _ = s.run_batch(ConvAlgorithm::RegularFft { m: 4 }, &x, &w);
+        assert_eq!(s.cached_plans(), 1);
+        let _ = s.run_batch(ConvAlgorithm::RegularFft { m: 4 }, &x, &w);
+        assert_eq!(s.cached_plans(), 1, "same layer reuses its plan");
+        let _ = s.run_batch(ConvAlgorithm::Winograd { m: 4 }, &x, &w);
+        assert_eq!(s.cached_plans(), 2, "new algorithm gets a new plan");
+    }
+
+    #[test]
+    fn same_shape_layers_keep_separate_plans() {
+        // two layers with identical shape but different weights must not
+        // thrash one cache slot (each keeps its kernel transform)
+        let x = Tensor4::random([2, 2, 9, 9], 39);
+        let w1 = Tensor4::random([2, 2, 3, 3], 40);
+        let w2 = Tensor4::random([2, 2, 3, 3], 41);
+        let mut s = StaticScheduler::new(2);
+        let a = s.run_batch(ConvAlgorithm::RegularFft { m: 4 }, &x, &w1);
+        let b = s.run_batch(ConvAlgorithm::RegularFft { m: 4 }, &x, &w2);
+        assert_eq!(s.cached_plans(), 2, "one plan per weight identity");
+        let _ = s.run_batch(ConvAlgorithm::RegularFft { m: 4 }, &x, &w1);
+        assert_eq!(s.cached_plans(), 2, "alternating layers reuse plans");
+        let (wa, wb) = (direct::naive(&x, &w1), direct::naive(&x, &w2));
+        assert!(a.max_abs_diff(&wa) < 2e-3 * wa.max_abs().max(1.0));
+        assert!(b.max_abs_diff(&wb) < 2e-3 * wb.max_abs().max(1.0));
+    }
+
+    #[test]
+    fn plan_cache_bounded_under_weight_churn() {
+        let x = Tensor4::random([1, 1, 5, 5], 42);
+        let mut s = StaticScheduler::new(1);
+        for seed in 0..(MAX_PLANS as u64 + 8) {
+            let w = Tensor4::random([1, 1, 3, 3], 4300 + seed);
+            let _ = s.run_batch(ConvAlgorithm::Winograd { m: 2 }, &x, &w);
+        }
+        assert!(
+            s.cached_plans() <= MAX_PLANS,
+            "cache leaked: {} plans",
+            s.cached_plans()
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "channel mismatch")]
+    fn rejects_channel_mismatch() {
+        let x = Tensor4::zeros([1, 4, 8, 8]);
+        let w = Tensor4::zeros([2, 3, 3, 3]);
+        let mut s = StaticScheduler::new(2);
+        let _ = s.run_batch(ConvAlgorithm::Direct, &x, &w);
+    }
+
+    #[test]
+    fn warm_prebuilds_plan() {
+        let w = Tensor4::random([2, 2, 3, 3], 37);
+        let mut s = StaticScheduler::new(2);
+        s.warm(ConvAlgorithm::GaussFft { m: 4 }, &w, 9, 9);
+        assert_eq!(s.cached_plans(), 1);
+        // direct is not tiled: no plan
+        s.warm(ConvAlgorithm::Direct, &w, 9, 9);
+        assert_eq!(s.cached_plans(), 1);
+        let x = Tensor4::random([2, 2, 9, 9], 38);
+        let got = s.run_batch(ConvAlgorithm::GaussFft { m: 4 }, &x, &w);
+        assert_eq!(s.cached_plans(), 1, "run reuses the warmed plan");
+        let want = direct::naive(&x, &w);
+        assert!(got.max_abs_diff(&want) < 2e-3 * want.max_abs().max(1.0));
     }
 
     #[test]

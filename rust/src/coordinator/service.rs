@@ -42,6 +42,13 @@ impl ConvService {
     }
 
     /// Register a layer with an explicit algorithm choice.
+    ///
+    /// Registration pre-builds the layer's persistent [`LayerPlan`]
+    /// (kernel transform + per-worker codelets) in the scheduler's plan
+    /// cache, so the very first request already runs the allocation-free
+    /// hot path.
+    ///
+    /// [`LayerPlan`]: crate::conv::LayerPlan
     pub fn register_with_algo(
         &mut self,
         name: &str,
@@ -50,6 +57,7 @@ impl ConvService {
         algo: ConvAlgorithm,
     ) {
         assert_eq!(weights.shape, problem.weight_shape(), "weight shape");
+        self.scheduler.warm(algo, &weights, problem.h, problem.w);
         self.layers.insert(
             name.to_string(),
             LayerEntry {

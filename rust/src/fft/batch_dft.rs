@@ -21,14 +21,13 @@
 
 use super::rfft::half_len;
 use crate::conv::gemm::{gemm_acc, gemm_sub};
+use std::sync::Arc;
 
-/// Precomputed DFT matrices + scratch for one (m, r) configuration.
-#[derive(Clone, Debug)]
-pub struct BatchDft {
-    pub t: usize,
-    pub th: usize,
-    pub m: usize,
-    pub r: usize,
+/// The precomputed DFT matrix set for one (m, r) configuration, shared
+/// (via `Arc`) between the per-worker clones of a stage-parallel engine —
+/// cloning a [`BatchDft`] duplicates only the scratch buffers.
+#[derive(Debug)]
+struct DftMats {
     /// forward row pass: (t, th) = D_h^T, split cos/sin (input rows j, spectral k)
     cht: Vec<f32>,
     sht: Vec<f32>,
@@ -41,6 +40,16 @@ pub struct BatchDft {
     /// inverse row pass: (th, m) = W_c^T (half-spectrum weights folded in)
     cwt: Vec<f32>,
     swt: Vec<f32>,
+}
+
+/// Precomputed DFT matrices + scratch for one (m, r) configuration.
+#[derive(Clone, Debug)]
+pub struct BatchDft {
+    pub t: usize,
+    pub th: usize,
+    pub m: usize,
+    pub r: usize,
+    mats: Arc<DftMats>,
     // scratch (grown on demand)
     yr: Vec<f32>,
     yi: Vec<f32>,
@@ -106,14 +115,16 @@ impl BatchDft {
             th,
             m,
             r,
-            cht,
-            sht,
-            ctt,
-            stt,
-            bct,
-            bst,
-            cwt,
-            swt,
+            mats: Arc::new(DftMats {
+                cht,
+                sht,
+                ctt,
+                stt,
+                bct,
+                bst,
+                cwt,
+                swt,
+            }),
             yr: Vec::new(),
             yi: Vec::new(),
             tr: Vec::new(),
@@ -151,8 +162,8 @@ impl BatchDft {
         let yi = &mut yi_buf[..nb * s * th];
         yr.fill(0.0);
         yi.fill(0.0);
-        gemm_acc(yr, x, &self.cht[..s * th], nb * s, s, th);
-        gemm_acc(yi, x, &self.sht[..s * th], nb * s, s, th);
+        gemm_acc(yr, x, &self.mats.cht[..s * th], nb * s, s, th);
+        gemm_acc(yi, x, &self.mats.sht[..s * th], nb * s, s, th);
 
         // transpose each tile (s, th) -> (th, s)
         let tr = &mut tr_buf[..nb * th * s];
@@ -170,8 +181,8 @@ impl BatchDft {
         // A: (nb*th, s); B: ctt rows 0..s -> (s, t)
         out_re.fill(0.0);
         out_im.fill(0.0);
-        let ct = &self.ctt[..s * t];
-        let st = &self.stt[..s * t];
+        let ct = &self.mats.ctt[..s * t];
+        let st = &self.mats.stt[..s * t];
         gemm_acc(out_re, tr, ct, nb * th, s, t);
         gemm_sub(out_re, ti, st, nb * th, s, t);
         gemm_acc(out_im, tr, st, nb * th, s, t);
@@ -200,10 +211,10 @@ impl BatchDft {
         let yi = &mut yi_buf[..nb * th * m];
         yr.fill(0.0);
         yi.fill(0.0);
-        gemm_acc(yr, z_re, &self.bct, nb * th, t, m);
-        gemm_sub(yr, z_im, &self.bst, nb * th, t, m);
-        gemm_acc(yi, z_re, &self.bst, nb * th, t, m);
-        gemm_acc(yi, z_im, &self.bct, nb * th, t, m);
+        gemm_acc(yr, z_re, &self.mats.bct, nb * th, t, m);
+        gemm_sub(yr, z_im, &self.mats.bst, nb * th, t, m);
+        gemm_acc(yi, z_re, &self.mats.bst, nb * th, t, m);
+        gemm_acc(yi, z_im, &self.mats.bct, nb * th, t, m);
 
         // transpose each tile (th, m) -> (m, th)
         let tr = &mut tr_buf[..nb * m * th];
@@ -220,8 +231,8 @@ impl BatchDft {
         // rows (half spectrum -> real, pruned): out = Yr @ W_c - Yi @ W_s
         // A: (nb*m, th); B: (th, m)
         out.fill(0.0);
-        gemm_acc(out, tr, &self.cwt, nb * m, th, m);
-        gemm_sub(out, ti, &self.swt, nb * m, th, m);
+        gemm_acc(out, tr, &self.mats.cwt, nb * m, th, m);
+        gemm_sub(out, ti, &self.mats.swt, nb * m, th, m);
 
         self.yr = yr_buf;
         self.yi = yi_buf;

@@ -41,18 +41,20 @@ impl TileFft {
     pub fn new(m: usize, r: usize) -> TileFft {
         let t = m + r - 1;
         let th = half_len(t);
+        let plan = Plan::new(t);
+        let scratch = plan.make_scratch();
         TileFft {
             t,
             m,
             r,
             th,
-            plan: Plan::new(t),
+            plan,
             row_c: vec![C32::ZERO; t],
             row_out: vec![C32::ZERO; t],
             col_c: vec![C32::ZERO; t],
             col_out: vec![C32::ZERO; t],
-            mid: vec![C32::ZERO; (m + r - 1) * half_len(m + r - 1)],
-            scratch: Plan::new(t).make_scratch(),
+            mid: vec![C32::ZERO; t * th],
+            scratch,
         }
     }
 

@@ -9,6 +9,8 @@
 //!   artifacts [--dir PATH]     list + smoke-run the AOT artifacts
 //!   run --layer NAME [...]     run one layer on the native engine
 
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+
 use fftconv::conv::{self, ConvAlgorithm, Tensor4};
 use fftconv::harness::tables;
 use fftconv::model::machine::{probe_host, TABLE1};

@@ -75,6 +75,33 @@ impl ThreadPool {
         });
     }
 
+    /// Fork-join over *owned* per-shard work items: `f(i, item)` runs
+    /// concurrently for every item, then all join.
+    ///
+    /// Like [`ThreadPool::run_static`], each call forks scoped threads
+    /// (the persistent workers only serve `submit`'s `'static` jobs —
+    /// borrowed shards cannot cross their channel).  What this primitive
+    /// adds is zero-copy sharding: callers pre-split output buffers into
+    /// disjoint `&mut` slices, move each into its work item, and need no
+    /// synchronization — disjointness is proven to the borrow checker
+    /// before the fork.
+    pub fn run_parts<T, F>(&self, parts: Vec<T>, f: F)
+    where
+        T: Send,
+        F: Fn(usize, T) + Send + Sync,
+    {
+        thread::scope(|scope| {
+            let f = &f;
+            let mut joins = Vec::with_capacity(parts.len());
+            for (i, part) in parts.into_iter().enumerate() {
+                joins.push(scope.spawn(move || f(i, part)));
+            }
+            for j in joins {
+                j.join().expect("worker panicked");
+            }
+        });
+    }
+
     /// Submit one fire-and-forget job to the least-loaded worker
     /// (round-robin); used by the coordinator's async paths.
     pub fn submit(&self, job: Job) {
@@ -220,6 +247,27 @@ mod tests {
         assert_eq!(rs.len(), 4);
         let covered: usize = rs.iter().map(|r| r.len()).sum();
         assert_eq!(covered, 2);
+    }
+
+    #[test]
+    fn run_parts_moves_disjoint_slices() {
+        let pool = ThreadPool::new(3);
+        let mut data = vec![0.0f32; 9];
+        {
+            let mut rest: &mut [f32] = &mut data;
+            let mut parts = Vec::new();
+            for _ in 0..3 {
+                let (head, tail) = std::mem::take(&mut rest).split_at_mut(3);
+                parts.push(head);
+                rest = tail;
+            }
+            pool.run_parts(parts, |i, slice| {
+                for v in slice.iter_mut() {
+                    *v = i as f32 + 1.0;
+                }
+            });
+        }
+        assert_eq!(data, vec![1.0, 1.0, 1.0, 2.0, 2.0, 2.0, 3.0, 3.0, 3.0]);
     }
 
     #[test]

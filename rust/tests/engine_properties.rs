@@ -164,8 +164,8 @@ fn prop_scheduler_worker_count_invariant() {
         let d = gen_conv_dims(rng);
         let x = Tensor4::random([d.batch, d.c_in, d.h, d.w], rng.next_u64());
         let w = Tensor4::random([d.c_out, d.c_in, d.r, d.r], rng.next_u64());
-        let s1 = fftconv::coordinator::StaticScheduler::new(1);
-        let s4 = fftconv::coordinator::StaticScheduler::new(4);
+        let mut s1 = fftconv::coordinator::StaticScheduler::new(1);
+        let mut s4 = fftconv::coordinator::StaticScheduler::new(4);
         let algo = ConvAlgorithm::RegularFft { m: d.m };
         let a = s1.run_batch(algo, &x, &w);
         let b = s4.run_batch(algo, &x, &w);

@@ -1,0 +1,101 @@
+//! Thread-count invariance of the stage-parallel engine: for every
+//! algorithm, the scheduler must produce identical output (well within
+//! 1e-4) for workers ∈ {1, 2, 4}, including the `B < workers` regime
+//! where the engine shards *within* images (tiles / tile rows / output
+//! rows), plus the plan-persistence acceptance check: two consecutive
+//! batches through one `LayerPlan` reuse its arenas (no hot-path
+//! allocation) and its once-transformed kernel.
+
+use fftconv::conv::{direct, ConvAlgorithm, LayerPlan, Tensor4};
+use fftconv::coordinator::StaticScheduler;
+use fftconv::util::threadpool::ThreadPool;
+
+const ALGOS: [ConvAlgorithm; 4] = [
+    ConvAlgorithm::Direct,
+    ConvAlgorithm::Winograd { m: 4 },
+    ConvAlgorithm::RegularFft { m: 4 },
+    ConvAlgorithm::GaussFft { m: 4 },
+];
+
+fn check_invariance(x: &Tensor4, w: &Tensor4, label: &str) {
+    let want = direct::naive(x, w);
+    let scale = want.max_abs().max(1.0);
+    for algo in ALGOS {
+        let mut outs = Vec::new();
+        for workers in [1usize, 2, 4] {
+            let mut s = StaticScheduler::new(workers);
+            let got = s.run_batch(algo, x, w);
+            assert!(
+                got.max_abs_diff(&want) < 2e-3 * scale,
+                "{label}: {} diverges from direct at workers={workers}",
+                algo.name()
+            );
+            outs.push(got);
+        }
+        for (i, o) in outs.iter().enumerate().skip(1) {
+            assert!(
+                o.max_abs_diff(&outs[0]) < 1e-4,
+                "{label}: {} not invariant between workers=1 and case {i}",
+                algo.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn invariant_across_worker_counts() {
+    // B = 5 >= workers: batch-level parallelism available
+    let x = Tensor4::random([5, 3, 20, 18], 910);
+    let w = Tensor4::random([4, 3, 3, 3], 911);
+    check_invariance(&x, &w, "B=5");
+}
+
+#[test]
+fn invariant_with_batch_smaller_than_workers() {
+    // B = 1 < workers: only intra-image (tile / row) sharding can engage
+    let x = Tensor4::random([1, 3, 17, 15], 920);
+    let w = Tensor4::random([2, 3, 3, 3], 921);
+    check_invariance(&x, &w, "B=1");
+}
+
+#[test]
+fn invariant_with_remainder_tiles() {
+    // output 11x9 with m=4: partial tiles on both axes, B=2 < workers=4
+    let x = Tensor4::random([2, 2, 13, 11], 930);
+    let w = Tensor4::random([3, 2, 3, 3], 931);
+    check_invariance(&x, &w, "remainder");
+}
+
+#[test]
+fn one_plan_serves_consecutive_batches_without_realloc() {
+    let w = Tensor4::random([4, 3, 3, 3], 940);
+    let pool = ThreadPool::new(4);
+    for algo in [
+        ConvAlgorithm::Winograd { m: 4 },
+        ConvAlgorithm::RegularFft { m: 4 },
+        ConvAlgorithm::GaussFft { m: 4 },
+    ] {
+        let mut plan = LayerPlan::new(algo, &w, 14, 14, 4);
+        let x1 = Tensor4::random([3, 3, 14, 14], 941);
+        let x2 = Tensor4::random([3, 3, 14, 14], 942);
+        let o1 = plan.run(&x1, Some(&pool));
+        let stamp = plan.arena_stamp();
+        let fp = plan.weights_fp;
+        let o2 = plan.run(&x2, Some(&pool));
+        assert_eq!(
+            stamp,
+            plan.arena_stamp(),
+            "{}: arenas reallocated between consecutive batches",
+            algo.name()
+        );
+        assert_eq!(fp, plan.weights_fp, "kernel transform must be paid once");
+        for (x, o) in [(&x1, &o1), (&x2, &o2)] {
+            let want = direct::naive(x, &w);
+            assert!(
+                o.max_abs_diff(&want) < 2e-3 * want.max_abs().max(1.0),
+                "{}",
+                algo.name()
+            );
+        }
+    }
+}

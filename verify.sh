@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# Tier-1 verify + lint + perf snapshot.
+#
+#   ./verify.sh          build + tests + clippy + hot-path bench (JSON)
+#   ./verify.sh --quick  build + tests only
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+cargo build --release
+cargo test -q
+
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy -- -D warnings
+else
+    echo "clippy not installed; skipping lint"
+fi
+
+if [[ "${1:-}" != "--quick" ]]; then
+    # regenerates rust/BENCH_hotpaths.json (the perf trajectory record:
+    # VGG-layer single-thread vs stage-parallel, plan cold vs warm)
+    cargo bench --bench micro_hotpaths
+fi
