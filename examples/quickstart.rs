@@ -1,7 +1,16 @@
 //! Quickstart: convolve one layer with every algorithm and check they
 //! agree.  `cargo run --release --example quickstart`
+//!
+//! Also demonstrates the execution-mode knobs: every tiled plan runs
+//! either **staged** (three fork-join stages over global U/Z arenas) or
+//! **fused** (one fork-join of cache-resident tile panels, L3 fusion).
+//! `ExecPolicy::Auto` lets the engine fuse whenever a panel fits the
+//! cache budget; the scheduler resolves Auto through the roofline model
+//! (`model::select::choose_exec`) instead.
 
-use fftconv::conv::{self, ConvAlgorithm, ConvProblem, Tensor4};
+use fftconv::conv::{
+    self, ConvAlgorithm, ConvProblem, ExecPolicy, LayerPlan, PlanOptions, Tensor4,
+};
 use std::time::Instant;
 
 fn main() {
@@ -42,4 +51,36 @@ fn main() {
         assert!(err < 1e-3, "{} disagrees with direct", algo.name());
     }
     println!("\nall algorithms agree ✓");
+
+    // --- execution-mode override knobs -----------------------------------
+    // Staged vs fused is normally picked by the roofline selector; pin it
+    // explicitly (and set the per-worker cache budget that sizes the fused
+    // tile panel) via PlanOptions:
+    println!("\nexec-mode override (RegularFft m=6):");
+    for exec in [ExecPolicy::Staged, ExecPolicy::Fused, ExecPolicy::Auto] {
+        let opts = PlanOptions {
+            exec,
+            fused_budget: 1 << 20, // bytes of per-worker cache for panels
+        };
+        let mut plan = LayerPlan::with_options(
+            ConvAlgorithm::RegularFft { m: 6 },
+            &w,
+            problem.h,
+            problem.w,
+            1,
+            opts,
+        );
+        let t0 = Instant::now();
+        let out = plan.run(&x, None);
+        let err = out.max_abs_diff(&reference) / reference.max_abs();
+        println!(
+            "  {:?} -> resolved {:8} ({} tiles/panel) {:8.2} ms   rel.err {:.2e}",
+            exec,
+            plan.exec_mode().name(),
+            plan.panel_tiles(),
+            t0.elapsed().as_secs_f64() * 1e3,
+            err
+        );
+        assert!(err < 1e-3);
+    }
 }

@@ -6,9 +6,12 @@
 //! machine-readable perf trajectory.
 
 use fftconv::conv::gemm::{cgemm_acc, gemm_acc};
-use fftconv::conv::{ConvAlgorithm, LayerPlan, Tensor4, TileGrid};
+use fftconv::conv::{ConvAlgorithm, ExecPolicy, LayerPlan, PlanOptions, Tensor4, TileGrid};
 use fftconv::coordinator::StaticScheduler;
 use fftconv::fft::{C32, Plan, TileFft};
+use fftconv::model::machine::xeon_gold;
+use fftconv::model::select::choose_exec;
+use fftconv::model::stages::{LayerShape, Method};
 use fftconv::util::bench::{bench, Table};
 use fftconv::util::json::Json;
 use fftconv::util::threadpool::ThreadPool;
@@ -222,6 +225,110 @@ fn main() {
             "vgg_parallel_gflops".to_string(),
             Json::Num(flops / par.median.as_secs_f64() / 1e9),
         );
+    }
+
+    // ---- fused vs staged pipelines + roofline traffic predictions ----
+    // One VGG-shaped and one AlexNet-shaped layer (the ISSUE acceptance
+    // pair).  For each: measured staged and fused times on this host,
+    // plus the model's predicted DRAM bytes for both execution shapes and
+    // the mode the roofline selector picks (on the catalog Xeon Gold, so
+    // the recorded prediction is machine-independent across PRs).
+    {
+        let workers = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let pool = ThreadPool::new(workers);
+        let machine = xeon_gold();
+        // (tag, b, c, k, hw, r, m, method)
+        let cases = [
+            ("vgg", 8usize, 64usize, 64usize, 56usize, 3usize, 6usize, Method::RegularFft),
+            ("alexnet", 8, 64, 192, 31, 5, 4, Method::RegularFft),
+        ];
+        for (tag, b, c, k, hw, r, m, method) in cases {
+            let x = Tensor4::random([b, c, hw, hw], 30);
+            let w = Tensor4::random([k, c, r, r], 31);
+            let algo = ConvAlgorithm::RegularFft { m };
+            let mut staged = LayerPlan::with_options(
+                algo,
+                &w,
+                hw,
+                hw,
+                workers,
+                PlanOptions {
+                    exec: ExecPolicy::Staged,
+                    ..PlanOptions::default()
+                },
+            );
+            let mut fused = LayerPlan::with_options(
+                algo,
+                &w,
+                hw,
+                hw,
+                workers,
+                PlanOptions {
+                    exec: ExecPolicy::Fused,
+                    ..PlanOptions::default()
+                },
+            );
+            let rs = bench("staged", 100, || {
+                std::hint::black_box(staged.run(&x, Some(&pool)));
+            });
+            let rf = bench("fused", 100, || {
+                std::hint::black_box(fused.run(&x, Some(&pool)));
+            });
+            let l = LayerShape { b, c, k, x: hw, r };
+            let choice = choose_exec(method, &l, m, &machine);
+            let speedup = rs.median.as_secs_f64() / rf.median.as_secs_f64();
+            for (name, rr) in [("staged", &rs), ("fused", &rf)] {
+                t.row(vec![
+                    format!("{tag}-{name}"),
+                    format!("B{b} {c}->{k}ch {hw}x{hw} m={m}"),
+                    format!("{:.0}", rr.median.as_secs_f64() * 1e6),
+                    "-".into(),
+                ]);
+            }
+            t.row(vec![
+                format!("{tag}-fused-speedup"),
+                format!(
+                    "model: {} ({:.0}MB vs {:.0}MB)",
+                    match choice.policy {
+                        ExecPolicy::Fused => "fused",
+                        _ => "staged",
+                    },
+                    choice.fused_dm / 1e6,
+                    choice.staged_dm / 1e6
+                ),
+                format!("{speedup:.2}x"),
+                "-".into(),
+            ]);
+            json.insert(format!("{tag}_staged_ms"), Json::Num(rs.median_ms()));
+            json.insert(format!("{tag}_fused_ms"), Json::Num(rf.median_ms()));
+            json.insert(format!("{tag}_fused_speedup"), Json::Num(speedup));
+            json.insert(
+                format!("{tag}_pred_staged_bytes"),
+                Json::Num(choice.staged_dm),
+            );
+            // -1 encodes "fusion infeasible" (infinity is not JSON)
+            json.insert(
+                format!("{tag}_pred_fused_bytes"),
+                Json::Num(if choice.fused_dm.is_finite() {
+                    choice.fused_dm
+                } else {
+                    -1.0
+                }),
+            );
+            json.insert(format!("{tag}_panel_tiles"), Json::Num(choice.pb as f64));
+            json.insert(
+                format!("{tag}_exec_selected"),
+                Json::Str(
+                    match choice.policy {
+                        ExecPolicy::Fused => "fused",
+                        _ => "staged",
+                    }
+                    .to_string(),
+                ),
+            );
+        }
     }
 
     t.emit("micro_hotpaths");

@@ -17,6 +17,8 @@ pub struct BatchSandwich {
     mt: Vec<f32>,
     y: Vec<f32>,
     tr: Vec<f32>,
+    /// staging for the panel-layout variant
+    pbuf: Vec<f32>,
 }
 
 impl BatchSandwich {
@@ -35,6 +37,7 @@ impl BatchSandwich {
             mt,
             y: Vec::new(),
             tr: Vec::new(),
+            pbuf: Vec::new(),
         }
     }
 
@@ -70,6 +73,36 @@ impl BatchSandwich {
         self.y = y;
         self.tr = tr;
     }
+
+    /// Transform `nb` tiles directly into a worker-local *panel* layout:
+    /// element `pp` of tile `s` lands at `out[base + pp * stride + s]` —
+    /// the `[element][tile]` order the fused pipeline's per-element GEMMs
+    /// consume.  The tile-major intermediate and the transpose both stay
+    /// in this codelet's scratch (cache-resident), which is the point of
+    /// L3 fusion: the transposed scatter that the staged engine performs
+    /// on a DRAM-sized arena happens here on an L2-sized panel.
+    pub fn apply_panel(
+        &mut self,
+        x: &[f32],
+        nb: usize,
+        out: &mut [f32],
+        base: usize,
+        stride: usize,
+    ) {
+        let p = self.a * self.a;
+        if self.pbuf.len() < nb * p {
+            self.pbuf.resize(nb * p, 0.0);
+        }
+        let mut tmp = std::mem::take(&mut self.pbuf);
+        self.apply(x, nb, &mut tmp[..nb * p]);
+        for pp in 0..p {
+            let dst = &mut out[base + pp * stride..base + pp * stride + nb];
+            for (s, d) in dst.iter_mut().enumerate() {
+                *d = tmp[s * p + pp];
+            }
+        }
+        self.pbuf = tmp;
+    }
 }
 
 #[cfg(test)]
@@ -78,6 +111,27 @@ mod tests {
     use crate::util::Rng;
     use crate::winograd::matrices::winograd_matrices_f32;
     use crate::winograd::program::apply_2d_f32;
+
+    #[test]
+    fn apply_panel_is_transposed_apply() {
+        let (_, _, bt) = winograd_matrices_f32(4, 3);
+        let t = 6;
+        let p = t * t;
+        let mut bs = BatchSandwich::new(&bt, t, t);
+        let nb = 3;
+        let x = Rng::new(5).vec_f32(nb * t * t);
+        let mut want = vec![0.0f32; nb * p];
+        bs.apply(&x, nb, &mut want);
+        // panel destination shaped [p][stride] with a channel offset
+        let (base, stride) = (nb, 2 * nb);
+        let mut panel = vec![0.0f32; p * stride];
+        bs.apply_panel(&x, nb, &mut panel, base, stride);
+        for pp in 0..p {
+            for s in 0..nb {
+                assert_eq!(panel[base + pp * stride + s], want[s * p + pp]);
+            }
+        }
+    }
 
     #[test]
     fn batch_matches_apply2d_transposed() {

@@ -30,10 +30,32 @@
 //! run across all P planes), which no safe split can express — that one
 //! stage writes through a [`SharedSlice`] whose disjointness argument is
 //! documented at the call site.
+//!
+//! ## Fused execution mode (L3 fusion)
+//!
+//! The staged pipeline above is bandwidth-bound on modern CPUs precisely
+//! because the full `U[P][C][BN]` / `Z[P][K][BN]` arenas spill out of
+//! cache between the three fork-join barriers (the paper's roofline
+//! analysis; L3 Fusion, Gelashvili/Shavit/Zlateski).  [`ExecMode::Fused`]
+//! removes that traffic: **one** fork-join per batch in which each worker
+//! carries a *panel* of `pb` tiles end-to-end — gather + input transform
+//! into a worker-local `u[P][C][pb]`, all `P` element-wise GEMMs into a
+//! worker-local `z[P][K][pb]`, inverse transform, scatter — with the
+//! panel scratch sized (at plan build) to fit the per-worker cache
+//! budget.  The transformed kernel `V[P][K][C]` is the only large operand
+//! the fused loop streams; `U`/`Z` never exist at DRAM scale.
+//!
+//! Mode selection: [`PlanOptions::exec`] is `Auto` (fuse whenever a
+//! useful panel fits the budget), or an explicit `Staged`/`Fused`
+//! override; the scheduler resolves `Auto` through the roofline model's
+//! fused-vs-staged DRAM-traffic estimate (`model::select::choose_exec`).
 
 use super::batch_wino::BatchSandwich;
 use super::fft_conv::FftVariant;
-use super::gemm::{cgemm_acc, gauss_gemm_acc, gemm_acc, GaussScratch};
+use super::gemm::{
+    cgemm_acc, cgemm_panel_acc, gauss_gemm_acc, gauss_panel_acc, gemm_acc, gemm_panel,
+    GaussScratch,
+};
 use super::tensor::Tensor4;
 use super::tiles::TileGrid;
 use super::ConvAlgorithm;
@@ -46,6 +68,94 @@ use std::ops::Range;
 /// Tiles transformed per batched-codelet invocation (amortizes the
 /// transform-matrix panels across the register-blocked GEMM).
 const NB: usize = 32;
+
+/// Smallest fused panel worth running: below this the per-element GEMMs
+/// degenerate to register-block edge cases and fusion stops paying.
+/// Shared with the roofline model's fused feasibility cutoff
+/// (`model::roofline::fused_layer_time`).
+pub const MIN_PB: usize = 8;
+
+/// Largest fused panel: beyond ~4 register blocks of tiles the panel
+/// stops helping (V streaming amortization flattens) and only evicts
+/// other working-set lines.  Shared with the roofline model.
+pub const MAX_PB: usize = 64;
+
+/// Default per-worker fused-scratch budget (bytes) when no machine model
+/// is consulted: 1 MB, a typical modern-CPU L2 (and the model catalog's
+/// most common core-exclusive cache size).
+pub const DEFAULT_FUSED_BUDGET: usize = 1 << 20;
+
+/// How a plan is allowed to execute (the configuration knob).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum ExecPolicy {
+    /// Fuse whenever a >= MIN_PB tile panel fits the cache budget
+    /// (callers with a machine model make a roofline decision instead and
+    /// pass `Staged`/`Fused` explicitly).
+    #[default]
+    Auto,
+    /// Always run the three-stage arena pipeline.
+    Staged,
+    /// Always run the fused panel pipeline.
+    Fused,
+}
+
+/// The execution mode a plan actually resolved to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    Staged,
+    Fused,
+}
+
+impl ExecMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecMode::Staged => "staged",
+            ExecMode::Fused => "fused",
+        }
+    }
+}
+
+/// Plan-construction options.
+#[derive(Clone, Copy, Debug)]
+pub struct PlanOptions {
+    pub exec: ExecPolicy,
+    /// per-worker cache budget (bytes) that sizes the fused tile panel
+    pub fused_budget: usize,
+}
+
+impl Default for PlanOptions {
+    fn default() -> PlanOptions {
+        PlanOptions {
+            exec: ExecPolicy::Auto,
+            fused_budget: DEFAULT_FUSED_BUDGET,
+        }
+    }
+}
+
+/// Tiles per fused panel that keep one worker's fused scratch
+/// (`u[P][C][pb]` + `z[P][K][pb]`, all planes) within `budget` bytes.
+/// Returns 0 when even a single tile exceeds the budget — the fused
+/// pipeline is then cache-infeasible for this layer (the big-channel
+/// regime where the paper's blocked staged pipeline is the right shape).
+pub fn fused_panel_tiles(
+    p: usize,
+    c: usize,
+    k: usize,
+    is_fft: bool,
+    gauss: bool,
+    budget: usize,
+) -> usize {
+    let u_planes = if gauss {
+        3 // re, im, re+im
+    } else if is_fft {
+        2
+    } else {
+        1
+    };
+    let z_planes = if is_fft { 2 } else { 1 };
+    let bytes_per_tile = 4 * p * (c * u_planes + k * z_planes);
+    budget / bytes_per_tile.max(1)
+}
 
 /// FNV-1a over the weight tensor's bit pattern — the cheap identity check
 /// plan caches use to decide whether a cached kernel transform is stale.
@@ -94,6 +204,17 @@ impl<'a> SharedSlice<'a> {
     unsafe fn set(&self, i: usize, v: f32) {
         debug_assert!(i < self.len);
         *self.ptr.add(i) = v;
+    }
+
+    /// Write a contiguous run starting at index `i`.
+    ///
+    /// # Safety
+    /// No other worker may read or write `i..i + src.len()` during this
+    /// fork-join.
+    #[inline]
+    unsafe fn write_run(&self, i: usize, src: &[f32]) {
+        debug_assert!(i + src.len() <= self.len);
+        std::ptr::copy_nonoverlapping(src.as_ptr(), self.ptr.add(i), src.len());
     }
 }
 
@@ -145,30 +266,87 @@ enum Codelets {
 }
 
 /// Per-worker state: codelets plus gather/transform/scatter buffers, all
-/// allocated at plan build and reused across every batch.
+/// allocated at plan build and reused across every batch.  The `f*`
+/// vectors are the fused pipeline's cache-resident panel arenas
+/// (`u[P][C][pb]` / `z[P][K][pb]`), grown on the first fused batch and
+/// stable thereafter.
 struct WorkerState {
     codelets: Codelets,
-    /// gathered input tiles, NB x t x t
+    /// gathered input tiles, cap x t x t (cap = max(NB, pb))
     xb: Vec<f32>,
-    /// transform staging (re), NB x P — also the inverse-gather buffer
+    /// transform staging (re), cap x P — also the inverse-gather buffer
     tre: Vec<f32>,
-    /// transform staging (im), NB x P (FFT only; empty for Winograd)
+    /// transform staging (im), cap x P (FFT only; empty for Winograd)
     tim: Vec<f32>,
-    /// inverse output tiles, NB x m x m
+    /// inverse output tiles, cap x m x m
     ob: Vec<f32>,
     gauss: GaussScratch,
+    /// fused panel U planes: [P][C][pb] re / im / re+im
+    fur: Vec<f32>,
+    fui: Vec<f32>,
+    fus: Vec<f32>,
+    /// fused panel Z planes: [P][K][pb] re / im
+    fzr: Vec<f32>,
+    fzi: Vec<f32>,
 }
 
 impl WorkerState {
-    fn new(codelets: Codelets, t: usize, p: usize, m: usize, is_fft: bool) -> WorkerState {
+    fn new(codelets: Codelets, t: usize, p: usize, m: usize, is_fft: bool, cap: usize) -> WorkerState {
         WorkerState {
             codelets,
-            xb: vec![0.0; NB * t * t],
-            tre: vec![0.0; NB * p],
-            tim: if is_fft { vec![0.0; NB * p] } else { Vec::new() },
-            ob: vec![0.0; NB * m * m],
+            xb: vec![0.0; cap * t * t],
+            tre: vec![0.0; cap * p],
+            tim: if is_fft { vec![0.0; cap * p] } else { Vec::new() },
+            ob: vec![0.0; cap * m * m],
             gauss: GaussScratch::default(),
+            fur: Vec::new(),
+            fui: Vec::new(),
+            fus: Vec::new(),
+            fzr: Vec::new(),
+            fzi: Vec::new(),
         }
+    }
+
+    /// Grow the fused panel arenas to the plan's fixed panel footprint
+    /// (no-op after the first fused batch, or after a `trim`-then-rerun).
+    fn ensure_fused(&mut self, need_u: usize, need_z: usize, is_fft: bool, gauss: bool) {
+        if self.fur.len() < need_u {
+            self.fur.resize(need_u, 0.0);
+        }
+        if self.fzr.len() < need_z {
+            self.fzr.resize(need_z, 0.0);
+        }
+        if is_fft {
+            if self.fui.len() < need_u {
+                self.fui.resize(need_u, 0.0);
+            }
+            if self.fzi.len() < need_z {
+                self.fzi.resize(need_z, 0.0);
+            }
+        }
+        if gauss && self.fus.len() < need_u {
+            self.fus.resize(need_u, 0.0);
+        }
+    }
+
+    /// Bytes of droppable scratch (fused panels + Gauss recombination).
+    fn arena_bytes(&self) -> usize {
+        let f32s = self.fur.len()
+            + self.fui.len()
+            + self.fus.len()
+            + self.fzr.len()
+            + self.fzi.len();
+        f32s * 4 + self.gauss.bytes()
+    }
+
+    /// Free the droppable scratch (regrown on the next batch).
+    fn trim(&mut self) {
+        self.fur = Vec::new();
+        self.fui = Vec::new();
+        self.fus = Vec::new();
+        self.fzr = Vec::new();
+        self.fzi = Vec::new();
+        self.gauss.clear();
     }
 }
 
@@ -193,6 +371,10 @@ pub struct LayerPlan {
     /// transform elements: t*t (Winograd) or th*t (FFT half spectrum)
     p: usize,
     variant: Option<FftVariant>,
+    /// resolved execution mode (see [`PlanOptions::exec`])
+    mode: ExecMode,
+    /// tiles per fused panel (0 in staged mode)
+    pb: usize,
     grid: TileGrid,
     // transformed kernel V[P][K][C], built once at plan construction
     vr: Vec<f32>,
@@ -219,6 +401,19 @@ impl LayerPlan {
         w: usize,
         nworkers: usize,
     ) -> LayerPlan {
+        Self::with_options(algo, weights, h, w, nworkers, PlanOptions::default())
+    }
+
+    /// [`LayerPlan::new`] with explicit execution options (mode override
+    /// and fused cache budget).
+    pub fn with_options(
+        algo: ConvAlgorithm,
+        weights: &Tensor4,
+        h: usize,
+        w: usize,
+        nworkers: usize,
+        opts: PlanOptions,
+    ) -> LayerPlan {
         let m = algo.tile_m().expect("LayerPlan requires a tiled algorithm");
         let [k, c, r, r2] = weights.shape;
         assert_eq!(r, r2, "non-square kernel");
@@ -232,11 +427,29 @@ impl LayerPlan {
         let t = m + r - 1;
         let nworkers = nworkers.max(1);
         let gauss = variant == Some(FftVariant::Gauss);
+        let is_fft = variant.is_some();
 
-        let (p, workers, vr, vi, vd, vs) = match variant {
+        let p = match variant {
+            None => t * t,
+            Some(_) => (t / 2 + 1) * t,
+        };
+        let fit = fused_panel_tiles(p, c, k, is_fft, gauss, opts.fused_budget);
+        let (mode, pb) = match opts.exec {
+            ExecPolicy::Staged => (ExecMode::Staged, 0),
+            ExecPolicy::Fused => (ExecMode::Fused, fit.clamp(MIN_PB, MAX_PB)),
+            ExecPolicy::Auto => {
+                if fit >= MIN_PB {
+                    (ExecMode::Fused, fit.min(MAX_PB))
+                } else {
+                    (ExecMode::Staged, 0)
+                }
+            }
+        };
+        let cap = NB.max(pb);
+
+        let (workers, vr, vi, vd, vs) = match variant {
             None => {
                 let (at, g, bt) = winograd_matrices_f32(m, r);
-                let p = t * t;
                 let mut workers = Vec::with_capacity(nworkers);
                 for _ in 0..nworkers {
                     workers.push(WorkerState::new(
@@ -248,22 +461,23 @@ impl LayerPlan {
                         p,
                         m,
                         false,
+                        cap,
                     ));
                 }
                 let mut kernel_tf = BatchSandwich::new(&g, t, r);
                 let vr = wino_kernel_transform(weights, &mut kernel_tf, p);
-                (p, workers, vr, Vec::new(), Vec::new(), Vec::new())
+                (workers, vr, Vec::new(), Vec::new(), Vec::new())
             }
             Some(_) => {
                 let tf = BatchDft::new(m, r);
-                let p = tf.th * tf.t;
+                debug_assert_eq!(p, tf.th * tf.t);
                 let mut workers = Vec::with_capacity(nworkers);
                 for _ in 0..nworkers {
-                    workers.push(WorkerState::new(Codelets::Fft(tf.clone()), t, p, m, true));
+                    workers.push(WorkerState::new(Codelets::Fft(tf.clone()), t, p, m, true, cap));
                 }
                 let mut kernel_tf = tf;
                 let (vr, vi, vd, vs) = fft_kernel_transform(weights, &mut kernel_tf, p, gauss);
-                (p, workers, vr, vi, vd, vs)
+                (workers, vr, vi, vd, vs)
             }
         };
 
@@ -279,6 +493,8 @@ impl LayerPlan {
             weights_fp: weights_fingerprint(weights),
             p,
             variant,
+            mode,
+            pb,
             grid,
             vr,
             vi,
@@ -307,15 +523,68 @@ impl LayerPlan {
             && self.weights_fp == weights_fp
     }
 
-    /// Arena identity stamp (pointers + lengths): unchanged across two
+    /// Arena identity stamp (pointers + lengths of every hot-path arena,
+    /// including each worker's fused panels): unchanged across two
     /// same-shape runs ⇔ the hot path did not allocate.
-    pub fn arena_stamp(&self) -> (usize, usize, usize, usize) {
-        (
-            self.ur.as_ptr() as usize,
-            self.zr.as_ptr() as usize,
-            self.ur.len(),
-            self.zr.len(),
-        )
+    pub fn arena_stamp(&self) -> Vec<(usize, usize)> {
+        let mut v = Vec::new();
+        for buf in [&self.ur, &self.ui, &self.us, &self.zr, &self.zi] {
+            v.push((buf.as_ptr() as usize, buf.len()));
+        }
+        for ws in &self.workers {
+            for buf in [&ws.fur, &ws.fui, &ws.fus, &ws.fzr, &ws.fzi] {
+                v.push((buf.as_ptr() as usize, buf.len()));
+            }
+        }
+        v
+    }
+
+    /// The execution mode this plan resolved to.
+    pub fn exec_mode(&self) -> ExecMode {
+        self.mode
+    }
+
+    /// Tiles per fused panel (0 when staged).
+    pub fn panel_tiles(&self) -> usize {
+        self.pb
+    }
+
+    /// Bytes held by droppable scratch: the staged `U`/`Z` arenas plus
+    /// every worker's fused panels — exactly what [`LayerPlan::trim`]
+    /// frees.
+    pub fn arena_bytes(&self) -> usize {
+        let f32s =
+            self.ur.len() + self.ui.len() + self.us.len() + self.zr.len() + self.zi.len();
+        f32s * 4 + self.workers.iter().map(|w| w.arena_bytes()).sum::<usize>()
+    }
+
+    /// Total resident bytes: droppable arenas plus the kernel transform
+    /// and the fixed per-worker codelet buffers (what a byte-aware plan
+    /// cache charges this plan for).
+    pub fn resident_bytes(&self) -> usize {
+        let kernel =
+            (self.vr.len() + self.vi.len() + self.vd.len() + self.vs.len()) * 4;
+        let fixed: usize = self
+            .workers
+            .iter()
+            .map(|w| (w.xb.len() + w.tre.len() + w.tim.len() + w.ob.len()) * 4)
+            .sum();
+        kernel + fixed + self.arena_bytes()
+    }
+
+    /// Free the batch-scale scratch (staged `U`/`Z` arenas, fused panels,
+    /// Gauss recombination buffers) while keeping the kernel transform and
+    /// codelets — an idle plan shrinks to its `V[P][K][C]` planes and
+    /// regrows scratch transparently on its next batch.
+    pub fn trim(&mut self) {
+        self.ur = Vec::new();
+        self.ui = Vec::new();
+        self.us = Vec::new();
+        self.zr = Vec::new();
+        self.zi = Vec::new();
+        for ws in &mut self.workers {
+            ws.trim();
+        }
     }
 
     /// Convenience wrapper over [`LayerPlan::run_into`].
@@ -325,17 +594,30 @@ impl LayerPlan {
         out
     }
 
-    /// Execute the three-stage pipeline over `x`, writing into `out`.
+    /// Execute the plan over `x`, writing into `out` — either the
+    /// three-stage arena pipeline or the fused panel pipeline, per the
+    /// mode resolved at plan build.
     ///
-    /// With `Some(pool)`, every stage forks across the pool's workers with
-    /// statically precomputed equal-FLOP shards; with `None` the stages run
+    /// With `Some(pool)`, work forks across the pool's workers with
+    /// statically precomputed equal-FLOP shards; with `None` it runs
     /// serially on the caller's thread (identical numerics either way —
-    /// shard boundaries never change any per-tile or per-GEMM arithmetic).
+    /// shard and panel boundaries never change any per-tile or per-GEMM
+    /// arithmetic).
     pub fn run_into(&mut self, x: &Tensor4, out: &mut Tensor4, pool: Option<&ThreadPool>) {
         let [b, c, h, w] = x.shape;
         assert_eq!(c, self.c, "channel mismatch");
         assert_eq!((h, w), (self.h, self.w), "input spatial shape mismatch");
         assert_eq!(out.shape, self.output_shape(b), "output shape mismatch");
+        match self.mode {
+            ExecMode::Staged => self.run_staged(x, out, pool),
+            ExecMode::Fused => self.run_fused(x, out, pool),
+        }
+    }
+
+    /// The staged pipeline: three fork-join stages over the global
+    /// `U[P][C][BN]` / `Z[P][K][BN]` arenas.
+    fn run_staged(&mut self, x: &Tensor4, out: &mut Tensor4, pool: Option<&ThreadPool>) {
+        let [b, c, _, _] = x.shape;
         let grid = self.grid;
         let (k, m, t, p) = (self.k, self.m, self.t, self.p);
         let n = grid.tiles();
@@ -579,6 +861,164 @@ impl LayerPlan {
             });
         }
     }
+
+    /// The fused panel pipeline: **one** fork-join per batch, sharded over
+    /// the global `(image, tile)` index.  Each worker walks its tile range
+    /// in panels of `pb` tiles and carries every panel end-to-end — gather
+    /// + input transform into its local `u[P][C][pb]`, all `P` per-element
+    /// GEMMs into its local `z[P][K][pb]`, inverse transform + scatter —
+    /// so the transform intermediates never leave its cache budget.  Only
+    /// the input image, the transformed kernel `V`, and the output cross
+    /// DRAM.
+    fn run_fused(&mut self, x: &Tensor4, out: &mut Tensor4, pool: Option<&ThreadPool>) {
+        let [b, c, _, _] = x.shape;
+        let grid = self.grid;
+        let (k, m, t, p, pb) = (self.k, self.m, self.t, self.p, self.pb);
+        let n = grid.tiles();
+        let is_fft = self.variant.is_some();
+        let gauss = self.variant == Some(FftVariant::Gauss);
+        let nw = self.workers.len();
+        let plane_len = grid.oh * grid.ow;
+
+        let shards = even_ranges(b * n, nw);
+        // Disjointness: output tiles partition each (image, k) plane, and
+        // every global (image, tile) index belongs to exactly one worker's
+        // range, so no output element is written by two workers.  The
+        // write set per tile is strided across all K planes, which no safe
+        // split can express — same argument as the staged U writes.
+        let out_sh = SharedSlice::new(&mut out.data[..]);
+        let (vr, vi, vd, vs) = (&self.vr, &self.vi, &self.vd, &self.vs);
+        let parts: Vec<(Range<usize>, &mut WorkerState)> =
+            shards.into_iter().zip(self.workers.iter_mut()).collect();
+        execute(pool, parts, |_wi, (range, ws)| {
+            ws.ensure_fused(p * c * pb, p * k * pb, is_fft, gauss);
+            let mut g = range.start;
+            while g < range.end {
+                let bi = g / n;
+                let ni0 = g % n;
+                // panels never straddle an image boundary (the gather
+                // source plane is per-image)
+                let cnt = pb.min(n - ni0).min(range.end - g);
+
+                // -- fused stage A: gather + input transform into u --
+                for ci in 0..c {
+                    let plane = x.plane(bi, ci);
+                    for s in 0..cnt {
+                        let ni = ni0 + s;
+                        grid.gather(
+                            plane,
+                            ni / grid.nw,
+                            ni % grid.nw,
+                            &mut ws.xb[s * t * t..(s + 1) * t * t],
+                        );
+                    }
+                    match &mut ws.codelets {
+                        Codelets::Winograd { input, .. } => {
+                            input.apply_panel(
+                                &ws.xb[..cnt * t * t],
+                                cnt,
+                                &mut ws.fur,
+                                ci * cnt,
+                                c * cnt,
+                            );
+                        }
+                        Codelets::Fft(tf) => {
+                            tf.forward_panel(
+                                &ws.xb[..cnt * t * t],
+                                cnt,
+                                t,
+                                &mut ws.fur,
+                                &mut ws.fui,
+                                ci * cnt,
+                                c * cnt,
+                            );
+                        }
+                    }
+                }
+                if gauss {
+                    for i in 0..p * c * cnt {
+                        ws.fus[i] = ws.fur[i] + ws.fui[i];
+                    }
+                }
+
+                // -- fused stage B: all P element-wise GEMMs on the panel --
+                for pp in 0..p {
+                    let u0 = pp * c * cnt;
+                    let z0 = pp * k * cnt;
+                    let zr_p = &mut ws.fzr[z0..z0 + k * cnt];
+                    zr_p.fill(0.0);
+                    let ur_p = &ws.fur[u0..u0 + c * cnt];
+                    let vr_p = &vr[pp * k * c..(pp + 1) * k * c];
+                    if !is_fft {
+                        // Z_p (K x cnt) = V_p (K x C) @ U_p (C x cnt)
+                        gemm_panel(zr_p, vr_p, ur_p, k, c, cnt, 1.0);
+                        continue;
+                    }
+                    let zi_p = &mut ws.fzi[z0..z0 + k * cnt];
+                    zi_p.fill(0.0);
+                    let ui_p = &ws.fui[u0..u0 + c * cnt];
+                    let vi_p = &vi[pp * k * c..(pp + 1) * k * c];
+                    if gauss {
+                        gauss_panel_acc(
+                            zr_p,
+                            zi_p,
+                            vr_p,
+                            &vd[pp * k * c..(pp + 1) * k * c],
+                            &vs[pp * k * c..(pp + 1) * k * c],
+                            ur_p,
+                            ui_p,
+                            &ws.fus[u0..u0 + c * cnt],
+                            k,
+                            c,
+                            cnt,
+                            &mut ws.gauss,
+                        );
+                    } else {
+                        cgemm_panel_acc(zr_p, zi_p, vr_p, vi_p, ur_p, ui_p, k, c, cnt);
+                    }
+                }
+
+                // -- fused stage C: inverse transform + scatter --
+                for ki in 0..k {
+                    for pp in 0..p {
+                        let off = (pp * k + ki) * cnt;
+                        for s in 0..cnt {
+                            ws.tre[s * p + pp] = ws.fzr[off + s];
+                        }
+                        if is_fft {
+                            for s in 0..cnt {
+                                ws.tim[s * p + pp] = ws.fzi[off + s];
+                            }
+                        }
+                    }
+                    match &mut ws.codelets {
+                        Codelets::Winograd { output, .. } => {
+                            output.apply(&ws.tre[..cnt * p], cnt, &mut ws.ob[..cnt * m * m]);
+                        }
+                        Codelets::Fft(tf) => {
+                            tf.inverse_valid(
+                                &ws.tre[..cnt * p],
+                                &ws.tim[..cnt * p],
+                                cnt,
+                                &mut ws.ob[..cnt * m * m],
+                            );
+                        }
+                    }
+                    let plane0 = (bi * k + ki) * plane_len;
+                    for s in 0..cnt {
+                        let ni = ni0 + s;
+                        let tile = &ws.ob[s * m * m..(s + 1) * m * m];
+                        grid.scatter_spans(ni / grid.nw, ni % grid.nw, |dst, src, len| {
+                            // SAFETY: see the disjointness note above
+                            unsafe { out_sh.write_run(plane0 + dst, &tile[src..src + len]) };
+                        });
+                    }
+                }
+
+                g += cnt;
+            }
+        });
+    }
 }
 
 /// Run one tiled convolution through a cached plan slot, rebuilding the
@@ -765,6 +1205,97 @@ mod tests {
             let want = direct::naive(x, &w);
             assert!(o.max_abs_diff(&want) < tol(&want));
         }
+    }
+
+    #[test]
+    fn explicit_fused_and_staged_match_direct() {
+        let x = Tensor4::random([2, 3, 13, 12], 880);
+        let w = Tensor4::random([4, 3, 3, 3], 881);
+        let want = direct::naive(&x, &w);
+        let pool = ThreadPool::new(3);
+        for algo in [
+            ConvAlgorithm::Winograd { m: 4 },
+            ConvAlgorithm::RegularFft { m: 4 },
+            ConvAlgorithm::GaussFft { m: 4 },
+        ] {
+            for exec in [ExecPolicy::Staged, ExecPolicy::Fused] {
+                let opts = PlanOptions {
+                    exec,
+                    ..PlanOptions::default()
+                };
+                let mut plan = LayerPlan::with_options(algo, &w, 13, 12, 3, opts);
+                let want_mode = match exec {
+                    ExecPolicy::Fused => ExecMode::Fused,
+                    _ => ExecMode::Staged,
+                };
+                assert_eq!(plan.exec_mode(), want_mode);
+                let got = plan.run(&x, Some(&pool));
+                assert!(
+                    got.max_abs_diff(&want) < tol(&want),
+                    "{} {:?}",
+                    algo.name(),
+                    exec
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn auto_falls_back_to_staged_when_panel_does_not_fit() {
+        let w = Tensor4::random([4, 3, 3, 3], 882);
+        // a budget too small for even MIN_PB tiles forces the staged mode
+        let opts = PlanOptions {
+            exec: ExecPolicy::Auto,
+            fused_budget: 64,
+        };
+        let plan = LayerPlan::with_options(ConvAlgorithm::Winograd { m: 4 }, &w, 13, 12, 2, opts);
+        assert_eq!(plan.exec_mode(), ExecMode::Staged);
+        // while the default budget fuses this small layer
+        let plan = LayerPlan::new(ConvAlgorithm::Winograd { m: 4 }, &w, 13, 12, 2);
+        assert_eq!(plan.exec_mode(), ExecMode::Fused);
+        assert!(plan.panel_tiles() >= 8);
+    }
+
+    #[test]
+    fn trim_frees_arenas_and_rerun_is_correct() {
+        let x = Tensor4::random([2, 2, 12, 12], 883);
+        let w = Tensor4::random([3, 2, 3, 3], 884);
+        let want = direct::naive(&x, &w);
+        for exec in [ExecPolicy::Staged, ExecPolicy::Fused] {
+            let opts = PlanOptions {
+                exec,
+                ..PlanOptions::default()
+            };
+            let mut plan =
+                LayerPlan::with_options(ConvAlgorithm::GaussFft { m: 4 }, &w, 12, 12, 2, opts);
+            let a = plan.run(&x, None);
+            assert!(plan.arena_bytes() > 0, "{exec:?}: scratch grew");
+            let resident_before = plan.resident_bytes();
+            plan.trim();
+            assert_eq!(plan.arena_bytes(), 0, "{exec:?}: trim freed scratch");
+            assert!(plan.resident_bytes() < resident_before);
+            let b = plan.run(&x, None);
+            assert!(a.max_abs_diff(&want) < tol(&want));
+            assert_eq!(
+                a.max_abs_diff(&b),
+                0.0,
+                "{exec:?}: trim changed the arithmetic"
+            );
+        }
+    }
+
+    #[test]
+    fn fused_panel_tiles_scales_with_budget_and_planes() {
+        // winograd m=4: p=36, one U and one Z plane
+        let per_tile = 4 * 36 * (3 + 4);
+        assert_eq!(fused_panel_tiles(36, 3, 4, false, false, 10 * per_tile), 10);
+        // complex planes double the footprint
+        assert!(
+            fused_panel_tiles(36, 3, 4, true, false, 10 * per_tile) < 10
+        );
+        // big channels: fewer than MIN_PB tiles fit a 1MB budget, so Auto
+        // falls back to the staged pipeline for this regime
+        assert_eq!(fused_panel_tiles(40, 512, 512, true, false, 1 << 20), 3);
     }
 
     #[test]

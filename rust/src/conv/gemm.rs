@@ -48,6 +48,31 @@ pub fn gemm_scaled(
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
+    gemm_strided(c, a, b, m, k, n, k, n, n, alpha);
+}
+
+/// C += alpha * A * B with explicit leading dimensions (row strides): `a`
+/// is M x K with stride `lda`, `b` is K x N with stride `ldb`, `c` is
+/// M x N with stride `ldc`.  This is what lets the fused pipeline walk a
+/// *sub-block* of the reduction dimension of `V[K][C]` (lda = full C)
+/// while streaming a narrow tile panel — the same register micro-kernels,
+/// no packing copies.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_strided(
+    c: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    lda: usize,
+    ldb: usize,
+    ldc: usize,
+    alpha: f32,
+) {
+    debug_assert!(m == 0 || k == 0 || a.len() > (m - 1) * lda + k - 1);
+    debug_assert!(k == 0 || n == 0 || b.len() > (k - 1) * ldb + n - 1);
+    debug_assert!(m == 0 || n == 0 || c.len() > (m - 1) * ldc + n - 1);
 
     let mut j0 = 0;
     while j0 < n {
@@ -56,9 +81,9 @@ pub fn gemm_scaled(
         while i0 < m {
             let mb = MR.min(m - i0);
             if nb == NR && mb == MR {
-                kernel_4x16(c, a, b, i0, j0, k, n, alpha);
+                kernel_4x16(c, a, b, i0, j0, k, lda, ldb, ldc, alpha);
             } else {
-                kernel_edge(c, a, b, i0, j0, mb, nb, k, n, alpha);
+                kernel_edge(c, a, b, i0, j0, mb, nb, k, lda, ldb, ldc, alpha);
             }
             i0 += mb;
         }
@@ -76,22 +101,24 @@ fn kernel_4x16(
     i0: usize,
     j0: usize,
     k: usize,
-    n: usize,
+    lda: usize,
+    ldb: usize,
+    ldc: usize,
     alpha: f32,
 ) {
     let mut acc = [[0.0f32; NR]; MR];
     for kk in 0..k {
-        let brow = &b[kk * n + j0..kk * n + j0 + NR];
+        let brow = &b[kk * ldb + j0..kk * ldb + j0 + NR];
         // unrolled over the MR rows; each row is a broadcast-fma over NR
         for (r, accr) in acc.iter_mut().enumerate() {
-            let av = a[(i0 + r) * k + kk];
+            let av = a[(i0 + r) * lda + kk];
             for (x, &bv) in accr.iter_mut().zip(brow) {
                 *x += av * bv;
             }
         }
     }
     for (r, accr) in acc.iter().enumerate() {
-        let crow = &mut c[(i0 + r) * n + j0..(i0 + r) * n + j0 + NR];
+        let crow = &mut c[(i0 + r) * ldc + j0..(i0 + r) * ldc + j0 + NR];
         for (cv, &x) in crow.iter_mut().zip(accr) {
             *cv += alpha * x;
         }
@@ -114,22 +141,24 @@ fn kernel_edge(
     mb: usize,
     nb: usize,
     k: usize,
-    n: usize,
+    lda: usize,
+    ldb: usize,
+    ldc: usize,
     alpha: f32,
 ) {
     debug_assert!(mb <= MR && nb <= NR);
     let mut acc = [[0.0f32; NR]; MR];
     for kk in 0..k {
-        let brow = &b[kk * n + j0..kk * n + j0 + nb];
+        let brow = &b[kk * ldb + j0..kk * ldb + j0 + nb];
         for (r, accr) in acc.iter_mut().take(mb).enumerate() {
-            let av = a[(i0 + r) * k + kk];
+            let av = a[(i0 + r) * lda + kk];
             for (x, &bv) in accr.iter_mut().zip(brow) {
                 *x += av * bv;
             }
         }
     }
     for (r, accr) in acc.iter().take(mb).enumerate() {
-        let crow = &mut c[(i0 + r) * n + j0..(i0 + r) * n + j0 + nb];
+        let crow = &mut c[(i0 + r) * ldc + j0..(i0 + r) * ldc + j0 + nb];
         for (cv, &x) in crow.iter_mut().zip(accr) {
             *cv += alpha * x;
         }
@@ -189,6 +218,79 @@ pub fn gauss_gemm_acc(
     gemm_sub(zr, ui, vs, m, k, n); // Zr -= t3
 }
 
+/// Reduction block of the panel GEMMs: the `KC x n` slice of the tile
+/// panel streamed per block stays L1-resident across all K output rows.
+pub const PANEL_KC: usize = 256;
+
+/// Panel GEMM of the fused pipeline: `Z (K x n) += alpha * V (K x C) @
+/// U (C x n)`, with the C (reduction) dimension walked in [`PANEL_KC`]
+/// blocks that *accumulate* into Z.  `n` is the tile-panel width (a
+/// handful of cache-resident tiles), so unlike the staged element-wise
+/// stage the right-hand side never round-trips through memory.
+pub fn gemm_panel(z: &mut [f32], v: &[f32], u: &[f32], k: usize, c: usize, n: usize, alpha: f32) {
+    debug_assert_eq!(v.len(), k * c);
+    debug_assert_eq!(u.len(), c * n);
+    debug_assert_eq!(z.len(), k * n);
+    let mut c0 = 0;
+    while c0 < c {
+        let kc = PANEL_KC.min(c - c0);
+        gemm_strided(z, &v[c0..], &u[c0 * n..], k, kc, n, c, n, n, alpha);
+        c0 += kc;
+    }
+}
+
+/// Complex panel GEMM (Regular-FFT fused element-wise stage):
+/// `(Zr + iZi) += (Vr + iVi)(Ur + iUi)` — same 4-real-GEMM sequence as
+/// [`cgemm_acc`], each reduction-blocked by [`gemm_panel`].
+#[allow(clippy::too_many_arguments)]
+pub fn cgemm_panel_acc(
+    zr: &mut [f32],
+    zi: &mut [f32],
+    vr: &[f32],
+    vi: &[f32],
+    ur: &[f32],
+    ui: &[f32],
+    k: usize,
+    c: usize,
+    n: usize,
+) {
+    gemm_panel(zr, vr, ur, k, c, n, 1.0);
+    gemm_panel(zr, vi, ui, k, c, n, -1.0);
+    gemm_panel(zi, vr, ui, k, c, n, 1.0);
+    gemm_panel(zi, vi, ur, k, c, n, 1.0);
+}
+
+/// Gauss panel GEMM (3 real panel GEMMs + recombination), mirroring
+/// [`gauss_gemm_acc`]'s operation order exactly:
+///   t1 = Vr Us;  t2 = Vd Ur;  t3 = Vs Ui;
+///   Zr += t1 - t3;  Zi += t1 + t2.
+#[allow(clippy::too_many_arguments)]
+pub fn gauss_panel_acc(
+    zr: &mut [f32],
+    zi: &mut [f32],
+    vr: &[f32],
+    vd: &[f32],
+    vs: &[f32],
+    ur: &[f32],
+    ui: &[f32],
+    us: &[f32],
+    k: usize,
+    c: usize,
+    n: usize,
+    scratch: &mut GaussScratch,
+) {
+    scratch.ensure(k * n);
+    let t1 = &mut scratch.t1[..k * n];
+    t1.fill(0.0);
+    gemm_panel(t1, vr, us, k, c, n, 1.0);
+    for i in 0..k * n {
+        zr[i] += t1[i];
+        zi[i] += t1[i];
+    }
+    gemm_panel(zi, vd, ur, k, c, n, 1.0); // Zi += t2
+    gemm_panel(zr, vs, ui, k, c, n, -1.0); // Zr -= t3
+}
+
 /// Reusable scratch for the Gauss recombination.
 #[derive(Default, Clone)]
 pub struct GaussScratch {
@@ -200,6 +302,16 @@ impl GaussScratch {
         if self.t1.len() < n {
             self.t1.resize(n, 0.0);
         }
+    }
+
+    /// Resident bytes (for the plan cache's byte accounting).
+    pub fn bytes(&self) -> usize {
+        self.t1.len() * std::mem::size_of::<f32>()
+    }
+
+    /// Free the scratch (regrown on the next use).
+    pub fn clear(&mut self) {
+        self.t1 = Vec::new();
     }
 }
 
@@ -321,6 +433,72 @@ mod tests {
         for i in 0..m * n {
             assert!((zr_c[i] - zr_g[i]).abs() < 1e-3);
             assert!((zi_c[i] - zi_g[i]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn panel_gemm_matches_plain_including_kc_blocking() {
+        // c spans below, at, and above PANEL_KC so the reduction-blocked
+        // accumulation path is exercised
+        for (k, c, n) in [(4usize, 7usize, 5usize), (5, PANEL_KC, 16), (3, PANEL_KC + 37, 24)] {
+            let mut rng = Rng::new((k * c + n) as u64);
+            let v = rng.vec_f32(k * c);
+            let u = rng.vec_f32(c * n);
+            let init = rng.vec_f32(k * n);
+            let mut want = init.clone();
+            gemm_acc(&mut want, &v, &u, k, c, n);
+            let mut got = init.clone();
+            gemm_panel(&mut got, &v, &u, k, c, n, 1.0);
+            for i in 0..k * n {
+                assert!((got[i] - want[i]).abs() < 2e-3, "({k},{c},{n}) i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn cgemm_panel_matches_cgemm() {
+        let (k, c, n) = (5usize, PANEL_KC + 9, 12);
+        let mut rng = Rng::new(81);
+        let (vr, vi) = (rng.vec_f32(k * c), rng.vec_f32(k * c));
+        let (ur, ui) = (rng.vec_f32(c * n), rng.vec_f32(c * n));
+        let mut zr_w = vec![0.5f32; k * n];
+        let mut zi_w = vec![-0.5f32; k * n];
+        let mut zr_g = zr_w.clone();
+        let mut zi_g = zi_w.clone();
+        cgemm_acc(&mut zr_w, &mut zi_w, &vr, &vi, &ur, &ui, k, c, n);
+        cgemm_panel_acc(&mut zr_g, &mut zi_g, &vr, &vi, &ur, &ui, k, c, n);
+        for i in 0..k * n {
+            assert!((zr_w[i] - zr_g[i]).abs() < 5e-3);
+            assert!((zi_w[i] - zi_g[i]).abs() < 5e-3);
+        }
+    }
+
+    #[test]
+    fn gauss_panel_matches_gauss() {
+        let (k, c, n) = (4usize, 6usize, 9usize);
+        let mut rng = Rng::new(82);
+        let (vr, vi) = (rng.vec_f32(k * c), rng.vec_f32(k * c));
+        let (ur, ui) = (rng.vec_f32(c * n), rng.vec_f32(c * n));
+        let vd: Vec<f32> = vi.iter().zip(&vr).map(|(a, b)| a - b).collect();
+        let vs: Vec<f32> = vr.iter().zip(&vi).map(|(a, b)| a + b).collect();
+        let us: Vec<f32> = ur.iter().zip(&ui).map(|(a, b)| a + b).collect();
+        let mut zr_w = vec![0.0f32; k * n];
+        let mut zi_w = vec![0.0f32; k * n];
+        let mut s1 = GaussScratch::default();
+        // reference: the staged kernel with kernel-side planes in the
+        // "u" argument slots (the engine's staged calling convention)
+        gauss_gemm_acc(
+            &mut zr_w, &mut zi_w, &vd, &vs, &vr, &us, &ur, &ui, k, c, n, &mut s1,
+        );
+        let mut zr_g = vec![0.0f32; k * n];
+        let mut zi_g = vec![0.0f32; k * n];
+        let mut s2 = GaussScratch::default();
+        gauss_panel_acc(
+            &mut zr_g, &mut zi_g, &vr, &vd, &vs, &ur, &ui, &us, k, c, n, &mut s2,
+        );
+        for i in 0..k * n {
+            assert!((zr_w[i] - zr_g[i]).abs() < 1e-3);
+            assert!((zi_w[i] - zi_g[i]).abs() < 1e-3);
         }
     }
 

@@ -11,7 +11,7 @@ pub mod tensor;
 pub mod tiles;
 pub mod winograd;
 
-pub use engine::LayerPlan;
+pub use engine::{ExecMode, ExecPolicy, LayerPlan, PlanOptions};
 pub use fft_conv::FftVariant;
 pub use tensor::Tensor4;
 pub use tiles::TileGrid;

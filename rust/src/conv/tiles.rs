@@ -72,6 +72,24 @@ impl TileGrid {
         self.scatter_rows(tile, ti, tj, 0, plane);
     }
 
+    /// Visit the valid output spans of tile (ti, tj): `f(plane_off,
+    /// tile_off, len)` once per in-bounds row, where `plane_off` indexes
+    /// the oh x ow output plane and `tile_off` the m x m tile.  This is
+    /// the address generator behind [`TileGrid::scatter`], exposed so the
+    /// fused pipeline can route the same spans through a shared-output
+    /// writer (raw disjoint writes) instead of a `&mut` plane.
+    pub fn scatter_spans(&self, ti: usize, tj: usize, mut f: impl FnMut(usize, usize, usize)) {
+        let (i0, j0) = (ti * self.m, tj * self.m);
+        let count = self.ow.saturating_sub(j0).min(self.m);
+        for u in 0..self.m {
+            let dst_i = i0 + u;
+            if dst_i >= self.oh {
+                break;
+            }
+            f(dst_i * self.ow + j0, u * self.m, count);
+        }
+    }
+
     /// Scatter into a row window of the output plane: `dst` covers output
     /// rows `row0 .. row0 + dst.len()/ow`.  This is what lets the inverse
     /// stage hand each worker a disjoint `&mut` sub-slice of the output
@@ -162,6 +180,24 @@ mod tests {
         for (i, v) in plane.iter().enumerate() {
             assert_eq!(*v, i as f32);
         }
+    }
+
+    #[test]
+    fn scatter_spans_equals_scatter() {
+        let g = TileGrid::new(13, 11, 4, 3); // remainder tiles on both axes
+        let mut rng = Rng::new(23);
+        let mut want = vec![0.0f32; g.oh * g.ow];
+        let mut got = vec![0.0f32; g.oh * g.ow];
+        for ti in 0..g.nh {
+            for tj in 0..g.nw {
+                let tile = rng.vec_f32(g.m * g.m);
+                g.scatter(&tile, ti, tj, &mut want);
+                g.scatter_spans(ti, tj, |dst, src, len| {
+                    got[dst..dst + len].copy_from_slice(&tile[src..src + len]);
+                });
+            }
+        }
+        assert_eq!(got, want);
     }
 
     #[test]

@@ -26,8 +26,11 @@
 //! steady-state serving is allocation-free on the hot path.
 
 use crate::conv::direct;
-use crate::conv::engine::{weights_fingerprint, LayerPlan};
+use crate::conv::engine::{weights_fingerprint, LayerPlan, PlanOptions};
 use crate::conv::{ConvAlgorithm, Tensor4};
+use crate::model::machine::{xeon_gold, Machine};
+use crate::model::select::choose_exec;
+use crate::model::stages::{LayerShape, Method};
 use crate::util::threadpool::{even_ranges, weighted_ranges, ThreadPool};
 use std::collections::HashMap;
 use std::ops::Range;
@@ -35,6 +38,11 @@ use std::ops::Range;
 /// Most plans kept before eviction — bounds memory under weight churn
 /// while letting every distinct serving layer keep its plan resident.
 const MAX_PLANS: usize = 64;
+
+/// Default plan-cache byte budget: generous for a many-layer service, but
+/// a hard ceiling — byte-aware LRU trims idle plans' arenas first and
+/// evicts whole plans only when kernel transforms alone blow the budget.
+const DEFAULT_PLAN_BUDGET: usize = 256 << 20;
 
 /// Cache key for a persistent layer plan.  The weight fingerprint is part
 /// of the key so two same-shape layers with different weights each keep
@@ -52,19 +60,63 @@ struct PlanKey {
     weights_fp: u64,
 }
 
+/// One cached plan plus its LRU stamp.
+struct PlanEntry {
+    plan: LayerPlan,
+    last_used: u64,
+}
+
+/// The roofline execution choice for a tiled algorithm on `machine` —
+/// resolved once per plan build, using the batch size of the triggering
+/// call as the layer's nominal batch.
+#[allow(clippy::too_many_arguments)]
+fn resolve_options(
+    algo: ConvAlgorithm,
+    c: usize,
+    k: usize,
+    h: usize,
+    w_sp: usize,
+    r: usize,
+    b: usize,
+    machine: &Machine,
+) -> PlanOptions {
+    let method = match algo {
+        ConvAlgorithm::Winograd { .. } => Method::Winograd,
+        ConvAlgorithm::RegularFft { .. } => Method::RegularFft,
+        ConvAlgorithm::GaussFft { .. } => Method::GaussFft,
+        _ => return PlanOptions::default(),
+    };
+    let m = algo.tile_m().expect("tiled algorithm");
+    let l = LayerShape {
+        b: b.max(1),
+        c,
+        k,
+        x: h.max(w_sp),
+        r,
+    };
+    PlanOptions {
+        exec: choose_exec(method, &l, m, machine).policy,
+        fused_budget: machine.cache,
+    }
+}
+
 /// Get-or-build the cached plan for (algo, input shape, weights).
 ///
 /// The FNV fingerprint scan is O(|weights|) per batch — orders of
 /// magnitude below the convolution itself — and is what lets callers
 /// swap weights without a stale-plan hazard.
+#[allow(clippy::too_many_arguments)]
 fn plan_entry<'a>(
-    plans: &'a mut HashMap<PlanKey, LayerPlan>,
+    plans: &'a mut HashMap<PlanKey, PlanEntry>,
     workers: usize,
     algo: ConvAlgorithm,
     c: usize,
     h: usize,
     w_sp: usize,
     weights: &Tensor4,
+    b: usize,
+    machine: &Machine,
+    tick: u64,
 ) -> &'a mut LayerPlan {
     let key = PlanKey {
         algo,
@@ -77,7 +129,7 @@ fn plan_entry<'a>(
     };
     if !plans.contains_key(&key) && plans.len() >= MAX_PLANS {
         // prefer evicting this layer's outdated-weights plan; otherwise
-        // drop an arbitrary entry to stay bounded
+        // drop the least-recently-used entry to stay count-bounded
         let evict = plans
             .keys()
             .find(|k2| {
@@ -88,22 +140,48 @@ fn plan_entry<'a>(
                     && k2.k == key.k
                     && k2.r == key.r
             })
-            .or_else(|| plans.keys().next())
-            .cloned();
+            .cloned()
+            .or_else(|| {
+                plans
+                    .iter()
+                    .min_by_key(|(_, e)| e.last_used)
+                    .map(|(k2, _)| k2.clone())
+            });
         if let Some(e) = evict {
             plans.remove(&e);
         }
     }
-    plans
-        .entry(key)
-        .or_insert_with(|| LayerPlan::new(algo, weights, h, w_sp, workers))
+    let entry = plans.entry(key).or_insert_with(|| {
+        let opts = resolve_options(
+            algo,
+            c,
+            weights.shape[0],
+            h,
+            w_sp,
+            weights.shape[2],
+            b,
+            machine,
+        );
+        PlanEntry {
+            plan: LayerPlan::with_options(algo, weights, h, w_sp, workers, opts),
+            last_used: tick,
+        }
+    });
+    entry.last_used = tick;
+    &mut entry.plan
 }
 
 /// A static fork-join scheduler over a worker pool, with a persistent
-/// plan cache for the tiled algorithms.
+/// byte-budgeted LRU plan cache for the tiled algorithms.
 pub struct StaticScheduler {
     pool: ThreadPool,
-    plans: HashMap<PlanKey, LayerPlan>,
+    plans: HashMap<PlanKey, PlanEntry>,
+    /// monotonic access counter driving the LRU order
+    tick: u64,
+    /// resident-byte ceiling across all cached plans
+    plan_budget: usize,
+    /// machine model driving fused-vs-staged plan resolution
+    machine: Machine,
 }
 
 impl StaticScheduler {
@@ -111,6 +189,11 @@ impl StaticScheduler {
         StaticScheduler {
             pool: ThreadPool::new(workers),
             plans: HashMap::new(),
+            tick: 0,
+            plan_budget: DEFAULT_PLAN_BUDGET,
+            // nominal modern-CPU model (1MB core-exclusive cache, CMR 24)
+            // until the owner provides the real machine via `set_machine`
+            machine: xeon_gold(),
         }
     }
 
@@ -123,13 +206,49 @@ impl StaticScheduler {
         self.plans.len()
     }
 
+    /// Total resident bytes across all cached plans.
+    pub fn plan_bytes(&self) -> usize {
+        self.plans.values().map(|e| e.plan.resident_bytes()).sum()
+    }
+
+    /// Set the plan-cache byte ceiling (applies from the next batch).
+    pub fn set_plan_budget(&mut self, bytes: usize) {
+        self.plan_budget = bytes;
+    }
+
+    /// Provide the machine model that drives fused-vs-staged resolution
+    /// and fused panel sizing for plans built *after* this call.
+    pub fn set_machine(&mut self, machine: Machine) {
+        self.machine = machine;
+    }
+
+    /// Exec mode of the cached plan serving (algo, shape, weights), if any
+    /// (observability / tests).
+    pub fn plan_exec_mode(&self, algo: ConvAlgorithm, x: &Tensor4, w: &Tensor4) -> Option<crate::conv::ExecMode> {
+        let fp = weights_fingerprint(w);
+        self.plans
+            .values()
+            .find(|e| e.plan.matches(algo, x, fp))
+            .map(|e| e.plan.exec_mode())
+    }
+
     /// Pre-build (and cache) the plan for a layer so the first request
     /// doesn't pay the kernel transform — called by `ConvService::register`.
-    pub fn warm(&mut self, algo: ConvAlgorithm, weights: &Tensor4, h: usize, w: usize) {
+    /// `batch_hint` is the nominal batch size the roofline exec choice is
+    /// made for.
+    pub fn warm(
+        &mut self,
+        algo: ConvAlgorithm,
+        weights: &Tensor4,
+        h: usize,
+        w: usize,
+        batch_hint: usize,
+    ) {
         if algo.tile_m().is_none() {
             return;
         }
         let workers = self.pool.workers();
+        self.tick += 1;
         let _ = plan_entry(
             &mut self.plans,
             workers,
@@ -138,7 +257,11 @@ impl StaticScheduler {
             h,
             w,
             weights,
+            batch_hint,
+            &self.machine,
+            self.tick,
         );
+        self.enforce_budget();
     }
 
     /// Run `algo` over a stacked batch (B, C, H, W), statically sharding
@@ -157,11 +280,60 @@ impl StaticScheduler {
             ConvAlgorithm::Im2col => self.run_im2col(x, w, &mut out),
             _ => {
                 let workers = self.pool.workers();
-                let plan = plan_entry(&mut self.plans, workers, algo, c, h, wd, w);
+                self.tick += 1;
+                let plan = plan_entry(
+                    &mut self.plans,
+                    workers,
+                    algo,
+                    c,
+                    h,
+                    wd,
+                    w,
+                    b,
+                    &self.machine,
+                    self.tick,
+                );
                 plan.run_into(x, &mut out, Some(&self.pool));
+                self.enforce_budget();
             }
         }
         out
+    }
+
+    /// Byte-aware LRU enforcement: while the cache exceeds its byte
+    /// budget, first `trim()` least-recently-used plans (freeing their
+    /// U/Z arenas and fused panels while keeping the kernel transform),
+    /// then — if kernel transforms alone still exceed the budget — evict
+    /// whole LRU plans, always keeping the most recent one.
+    fn enforce_budget(&mut self) {
+        loop {
+            let total: usize = self.plans.values().map(|e| e.plan.resident_bytes()).sum();
+            if total <= self.plan_budget {
+                return;
+            }
+            // LRU plan that still has droppable arenas
+            if let Some(key) = self
+                .plans
+                .iter()
+                .filter(|(_, e)| e.plan.arena_bytes() > 0)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+            {
+                self.plans.get_mut(&key).expect("key from iter").plan.trim();
+                continue;
+            }
+            if self.plans.len() <= 1 {
+                // never evict the plan serving the current traffic
+                return;
+            }
+            let lru = self
+                .plans
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+                .expect("non-empty");
+            self.plans.remove(&lru);
+        }
     }
 
     /// Direct convolution sharded over global output rows (image, k, row):
@@ -332,6 +504,67 @@ mod tests {
     }
 
     #[test]
+    fn byte_budget_trims_idle_plans_before_evicting() {
+        let x = Tensor4::random([2, 3, 16, 16], 45);
+        let w1 = Tensor4::random([4, 3, 3, 3], 46);
+        let w2 = Tensor4::random([4, 3, 3, 3], 47);
+        let mut s = StaticScheduler::new(2);
+        let a1 = s.run_batch(ConvAlgorithm::RegularFft { m: 4 }, &x, &w1);
+        let a2 = s.run_batch(ConvAlgorithm::RegularFft { m: 4 }, &x, &w2);
+        assert_eq!(s.cached_plans(), 2);
+        let full = s.plan_bytes();
+        // budget below the working set but above the kernel transforms:
+        // LRU arenas must be trimmed, both plans stay cached
+        s.set_plan_budget(full / 2);
+        let b2 = s.run_batch(ConvAlgorithm::RegularFft { m: 4 }, &x, &w2);
+        assert_eq!(s.cached_plans(), 2, "trim must precede eviction");
+        assert!(s.plan_bytes() < full, "budget enforcement freed bytes");
+        // trimmed plans still serve correctly
+        let b1 = s.run_batch(ConvAlgorithm::RegularFft { m: 4 }, &x, &w1);
+        assert_eq!(a1.max_abs_diff(&b1), 0.0);
+        assert_eq!(a2.max_abs_diff(&b2), 0.0);
+    }
+
+    #[test]
+    fn tiny_byte_budget_evicts_lru_plans() {
+        let x = Tensor4::random([1, 2, 10, 10], 48);
+        let mut s = StaticScheduler::new(1);
+        s.set_plan_budget(1); // nothing fits: every batch ends with 1 plan
+        for seed in 0..4u64 {
+            let w = Tensor4::random([2, 2, 3, 3], 490 + seed);
+            let want = direct::naive(&x, &w);
+            let got = s.run_batch(ConvAlgorithm::Winograd { m: 2 }, &x, &w);
+            assert!(got.max_abs_diff(&want) < 2e-3 * want.max_abs().max(1.0));
+            assert_eq!(s.cached_plans(), 1, "LRU eviction keeps the live plan");
+        }
+    }
+
+    #[test]
+    fn roofline_resolves_exec_mode_per_layer() {
+        // small-channel layer on the default (xeon-gold) machine model:
+        // the roofline picks the fused pipeline
+        let x = Tensor4::random([2, 8, 20, 20], 55);
+        let w = Tensor4::random([8, 8, 3, 3], 56);
+        let mut s = StaticScheduler::new(2);
+        let algo = ConvAlgorithm::RegularFft { m: 6 };
+        let got = s.run_batch(algo, &x, &w);
+        assert_eq!(
+            s.plan_exec_mode(algo, &x, &w),
+            Some(crate::conv::ExecMode::Fused)
+        );
+        let want = direct::naive(&x, &w);
+        assert!(got.max_abs_diff(&want) < 2e-3 * want.max_abs().max(1.0));
+        // a machine with a tiny cache flips the same layer to staged
+        let mut s2 = StaticScheduler::new(2);
+        s2.set_machine(Machine::new("tiny-cache", 2, 100.0, 256, 4096, 10.0));
+        let _ = s2.run_batch(algo, &x, &w);
+        assert_eq!(
+            s2.plan_exec_mode(algo, &x, &w),
+            Some(crate::conv::ExecMode::Staged)
+        );
+    }
+
+    #[test]
     #[should_panic(expected = "channel mismatch")]
     fn rejects_channel_mismatch() {
         let x = Tensor4::zeros([1, 4, 8, 8]);
@@ -344,10 +577,10 @@ mod tests {
     fn warm_prebuilds_plan() {
         let w = Tensor4::random([2, 2, 3, 3], 37);
         let mut s = StaticScheduler::new(2);
-        s.warm(ConvAlgorithm::GaussFft { m: 4 }, &w, 9, 9);
+        s.warm(ConvAlgorithm::GaussFft { m: 4 }, &w, 9, 9, 2);
         assert_eq!(s.cached_plans(), 1);
         // direct is not tiled: no plan
-        s.warm(ConvAlgorithm::Direct, &w, 9, 9);
+        s.warm(ConvAlgorithm::Direct, &w, 9, 9, 2);
         assert_eq!(s.cached_plans(), 1);
         let x = Tensor4::random([2, 2, 9, 9], 38);
         let got = s.run_batch(ConvAlgorithm::GaussFft { m: 4 }, &x, &w);

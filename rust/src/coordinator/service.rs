@@ -32,10 +32,14 @@ pub struct ConvService {
 
 impl ConvService {
     pub fn new(machine: Machine, workers: usize, max_batch: usize, max_wait: Duration) -> Self {
+        // the service's machine model also drives the scheduler's
+        // fused-vs-staged plan resolution and plan-cache sizing
+        let mut scheduler = StaticScheduler::new(workers);
+        scheduler.set_machine(machine.clone());
         ConvService {
             layers: HashMap::new(),
             batcher: Batcher::new(max_batch, max_wait),
-            scheduler: StaticScheduler::new(workers),
+            scheduler,
             metrics: Metrics::default(),
             machine,
         }
@@ -57,7 +61,8 @@ impl ConvService {
         algo: ConvAlgorithm,
     ) {
         assert_eq!(weights.shape, problem.weight_shape(), "weight shape");
-        self.scheduler.warm(algo, &weights, problem.h, problem.w);
+        self.scheduler
+            .warm(algo, &weights, problem.h, problem.w, problem.batch);
         self.layers.insert(
             name.to_string(),
             LayerEntry {

@@ -55,6 +55,10 @@ pub struct BatchDft {
     yi: Vec<f32>,
     tr: Vec<f32>,
     ti: Vec<f32>,
+    // staging for the panel-layout forward (separate from yr..ti, which
+    // `forward` owns for the duration of the call)
+    pr: Vec<f32>,
+    pi: Vec<f32>,
 }
 
 impl BatchDft {
@@ -129,6 +133,8 @@ impl BatchDft {
             yi: Vec::new(),
             tr: Vec::new(),
             ti: Vec::new(),
+            pr: Vec::new(),
+            pi: Vec::new(),
         }
     }
 
@@ -192,6 +198,45 @@ impl BatchDft {
         self.yi = yi_buf;
         self.tr = tr_buf;
         self.ti = ti_buf;
+    }
+
+    /// Forward transform of `nb` tiles directly into a worker-local
+    /// *panel* layout: spectral element `pp` of tile `s` lands at
+    /// `out_re[base + pp * stride + s]` (and likewise `out_im`) — the
+    /// `[element][tile]` order the fused pipeline's per-element GEMMs
+    /// consume.  The tile-major intermediate and the transpose stay in
+    /// this codelet's scratch (cache-resident); the staged engine performs
+    /// the same transpose as strided single-element stores into the
+    /// DRAM-sized `U` arena.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_panel(
+        &mut self,
+        x: &[f32],
+        nb: usize,
+        s: usize,
+        out_re: &mut [f32],
+        out_im: &mut [f32],
+        base: usize,
+        stride: usize,
+    ) {
+        let p = self.th * self.t;
+        if self.pr.len() < nb * p {
+            self.pr.resize(nb * p, 0.0);
+            self.pi.resize(nb * p, 0.0);
+        }
+        let mut pr = std::mem::take(&mut self.pr);
+        let mut pi = std::mem::take(&mut self.pi);
+        self.forward(x, nb, s, &mut pr[..nb * p], &mut pi[..nb * p]);
+        for pp in 0..p {
+            let dr = &mut out_re[base + pp * stride..base + pp * stride + nb];
+            let di = &mut out_im[base + pp * stride..base + pp * stride + nb];
+            for sidx in 0..nb {
+                dr[sidx] = pr[sidx * p + pp];
+                di[sidx] = pi[sidx * p + pp];
+            }
+        }
+        self.pr = pr;
+        self.pi = pi;
     }
 
     /// Pruned inverse of `nb` half-spectrum tiles: (nb, th, t) -> (nb, m, m).
@@ -280,6 +325,29 @@ mod tests {
                         );
                     }
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn forward_panel_is_transposed_forward() {
+        let (m, r) = (4usize, 3usize);
+        let mut bd = BatchDft::new(m, r);
+        let (t, th) = (bd.t, bd.th);
+        let p = th * t;
+        let nb = 3;
+        let x = Rng::new(12).vec_f32(nb * t * t);
+        let mut wre = vec![0.0f32; nb * p];
+        let mut wim = vec![0.0f32; nb * p];
+        bd.forward(&x, nb, t, &mut wre, &mut wim);
+        let (base, stride) = (nb, 2 * nb);
+        let mut pre = vec![0.0f32; p * stride];
+        let mut pim = vec![0.0f32; p * stride];
+        bd.forward_panel(&x, nb, t, &mut pre, &mut pim, base, stride);
+        for pp in 0..p {
+            for s in 0..nb {
+                assert_eq!(pre[base + pp * stride + s], wre[s * p + pp]);
+                assert_eq!(pim[base + pp * stride + s], wim[s * p + pp]);
             }
         }
     }

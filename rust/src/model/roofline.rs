@@ -8,6 +8,7 @@
 
 use super::machine::Machine;
 use super::stages::{layer_model, LayerShape, Method};
+use crate::conv::engine::{fused_panel_tiles, MAX_PB, MIN_PB};
 
 /// Per-stage and total predicted seconds.
 #[derive(Clone, Copy, Debug)]
@@ -38,6 +39,92 @@ pub fn layer_time(method: Method, l: &LayerShape, m: usize, machine: &Machine) -
         memory_bound: bound,
         m,
     }
+}
+
+/// Roofline estimate of the engine's **fused** panel pipeline (L3
+/// fusion): one pass in which each worker carries `pb`-tile panels
+/// end-to-end out of cache-resident scratch, so the `U`/`Z` transform
+/// arenas never cross DRAM.  Remaining traffic: the input read, the
+/// output write, and the transformed kernel `V[P][K][C]` — resident when
+/// it fits the core-exclusive cache, re-streamed once per panel when not.
+#[derive(Clone, Copy, Debug)]
+pub struct FusedBreakdown {
+    /// false when even a minimal panel exceeds the cache budget (the
+    /// big-channel regime: fusion is not available, run staged)
+    pub feasible: bool,
+    /// tiles per fused panel under the machine's cache budget
+    pub pb: usize,
+    /// predicted DRAM bytes of the fused execution
+    pub dm: f64,
+    /// execution FLOPs (input + element-wise + output stages; the kernel
+    /// transform is amortized by the plan cache on both paths)
+    pub fpo: f64,
+    /// Eqn. 8 applied to the fused pass as ONE stage:
+    /// max(FPO/peak, DM/MB) — fusion overlaps what staging serializes
+    pub time: f64,
+}
+
+/// Fused-pipeline prediction for (method, layer, m) on `machine`.
+pub fn fused_layer_time(method: Method, l: &LayerShape, m: usize, machine: &Machine) -> FusedBreakdown {
+    let lm = layer_model(method, l, m, machine.cache);
+    let fpo = lm.stages[0].fpo + lm.stages[2].fpo + lm.stages[3].fpo;
+    let t = m + l.r - 1;
+    let th = t / 2 + 1;
+    let (is_fft, gauss) = (method != Method::Winograd, method == Method::GaussFft);
+    let p = if is_fft { th * t } else { t * t };
+    let fit = fused_panel_tiles(p, l.c, l.k, is_fft, gauss, machine.cache);
+    if fit < MIN_PB {
+        return FusedBreakdown {
+            feasible: false,
+            pb: 0,
+            dm: f64::INFINITY,
+            fpo,
+            time: f64::INFINITY,
+        };
+    }
+    let pb = fit.min(MAX_PB);
+    // V footprint per transform element set (same accounting as Table 2's
+    // transformed-tile bytes: 1 real plane, 2 complex, 3 for Gauss)
+    let tile_bytes = match method {
+        Method::Winograd => 4.0 * (t * t) as f64,
+        Method::RegularFft => 8.0 * (t * th) as f64,
+        Method::GaussFft => 12.0 * (t * th) as f64,
+    };
+    let v_bytes = tile_bytes * (l.c * l.k) as f64;
+    let n_tiles = (l.b * l.tiles(m)) as f64;
+    let panels = (n_tiles / pb as f64).ceil();
+    let v_traffic = if v_bytes <= machine.cache as f64 {
+        // V stays resident per worker: each core faults it in once
+        v_bytes * (machine.cores as f64).min(panels)
+    } else {
+        v_bytes * panels
+    };
+    let x2 = (l.x * l.x) as f64;
+    let m2 = (m * m) as f64;
+    let dm = 4.0 * (l.b * l.c) as f64 * x2          // input read
+        + 4.0 * (l.b * l.k) as f64 * m2 * l.tiles(m) as f64 // output write
+        + v_traffic;
+    let peak = machine.gflops * 1e9;
+    let mb = machine.mb * 1e9;
+    FusedBreakdown {
+        feasible: true,
+        pb,
+        dm,
+        fpo,
+        time: (fpo / peak).max(dm / mb),
+    }
+}
+
+/// The staged pipeline's execution traffic and time — stages input,
+/// element-wise, output of Eqns. 8-9 (the kernel transform is amortized
+/// by the plan cache, so it is excluded from both sides of the
+/// fused-vs-staged comparison).
+pub fn staged_exec_time(method: Method, l: &LayerShape, m: usize, machine: &Machine) -> (f64, f64) {
+    let lm = layer_model(method, l, m, machine.cache);
+    let tb = layer_time(method, l, m, machine);
+    let dm = lm.stages[0].dm + lm.stages[2].dm + lm.stages[3].dm;
+    let time = tb.stages[0] + tb.stages[2] + tb.stages[3];
+    (dm, time)
 }
 
 /// Winograd transform-size cap: vendors (and the paper) limit transforms
@@ -98,6 +185,46 @@ mod tests {
             x: 30,
             r: 3,
         }
+    }
+
+    #[test]
+    fn fused_traffic_below_staged_on_vgg_early_layer() {
+        // the L3-fusion prediction: on a small-channel layer the fused
+        // pipeline moves far fewer DRAM bytes than the staged arenas
+        let m = xeon_gold();
+        for method in Method::ALL {
+            // Winograd stays at its vendor-capped tile, FFT runs t = 8
+            let tile = if method == Method::Winograd { 4 } else { 6 };
+            let f = fused_layer_time(method, &vgg12(), tile, &m);
+            let (staged_dm, staged_time) = staged_exec_time(method, &vgg12(), tile, &m);
+            assert!(f.feasible, "{method:?}: vgg1.2 panel must fit 1MB");
+            assert!(
+                f.dm < staged_dm,
+                "{method:?}: fused dm {:.3e} !< staged {:.3e}",
+                f.dm,
+                staged_dm
+            );
+            assert!(f.time < staged_time, "{method:?}: fused should be faster");
+        }
+    }
+
+    #[test]
+    fn fused_infeasible_for_big_channel_layers() {
+        // 512x512 channels: one tile of fused scratch alone exceeds the
+        // 1MB core-exclusive cache — the model must refuse to fuse
+        let m = xeon_gold();
+        let f = fused_layer_time(Method::RegularFft, &vgg42(), 6, &m);
+        assert!(!f.feasible);
+        assert!(f.time.is_infinite());
+    }
+
+    #[test]
+    fn fused_time_never_beats_pure_compute_bound() {
+        // sanity: the fused estimate is still floored by FPO/peak
+        let m = xeon_gold();
+        let f = fused_layer_time(Method::RegularFft, &vgg12(), 6, &m);
+        assert!(f.time >= f.fpo / (m.gflops * 1e9) - 1e-12);
+        assert!(f.dm > 0.0 && f.fpo > 0.0);
     }
 
     #[test]

@@ -7,9 +7,11 @@
 //! choosing per-layer configurations (§5.1).
 
 use super::machine::Machine;
-use super::roofline::{best_tile, layer_time, winograd_max_m, FFT_MAX_M};
+use super::roofline::{
+    best_tile, fused_layer_time, layer_time, staged_exec_time, winograd_max_m, FFT_MAX_M,
+};
 use super::stages::{LayerShape, Method};
-use crate::conv::{run, ConvAlgorithm, Tensor4};
+use crate::conv::{run, ConvAlgorithm, ExecPolicy, Tensor4};
 use std::time::Instant;
 
 /// A scored configuration.
@@ -21,6 +23,44 @@ pub struct Choice {
     pub predicted: f64,
     /// measured seconds (None in model-only mode)
     pub measured: Option<f64>,
+}
+
+/// Fused-vs-staged decision for one (method, layer, m) — the roofline
+/// mechanism behind the engine's [`ExecPolicy`]: predict the DRAM bytes
+/// and Eqn. 8 time of both execution shapes and pick the faster.
+#[derive(Clone, Copy, Debug)]
+pub struct ExecChoice {
+    pub policy: ExecPolicy,
+    /// predicted DRAM bytes of the staged pipeline (kernel stage excluded)
+    pub staged_dm: f64,
+    /// predicted DRAM bytes of the fused pipeline (infinite if infeasible)
+    pub fused_dm: f64,
+    pub staged_time: f64,
+    pub fused_time: f64,
+    /// tiles per fused panel under the machine's cache budget
+    pub pb: usize,
+}
+
+/// Decide how a (method, layer, m) plan should execute on `machine`:
+/// [`ExecPolicy::Fused`] when the fused panel pipeline fits the
+/// core-exclusive cache *and* its one-stage roofline time beats the sum
+/// of the staged stage times, else [`ExecPolicy::Staged`].
+pub fn choose_exec(method: Method, l: &LayerShape, m: usize, machine: &Machine) -> ExecChoice {
+    let f = fused_layer_time(method, l, m, machine);
+    let (staged_dm, staged_time) = staged_exec_time(method, l, m, machine);
+    let policy = if f.feasible && f.time < staged_time {
+        ExecPolicy::Fused
+    } else {
+        ExecPolicy::Staged
+    };
+    ExecChoice {
+        policy,
+        staged_dm,
+        fused_dm: f.dm,
+        staged_time,
+        fused_time: f.time,
+        pb: f.pb,
+    }
 }
 
 /// Model-only selection across all three methods.
@@ -121,6 +161,34 @@ mod tests {
             x: 34,
             r: 3,
         }
+    }
+
+    #[test]
+    fn choose_exec_fuses_small_channels_stages_big_ones() {
+        let m = xeon_gold();
+        // VGG-shaped early layer: fused predicted to move fewer bytes
+        let vgg = LayerShape {
+            b: 8,
+            c: 64,
+            k: 64,
+            x: 58,
+            r: 3,
+        };
+        let c = choose_exec(Method::RegularFft, &vgg, 6, &m);
+        assert_eq!(c.policy, ExecPolicy::Fused);
+        assert!(c.fused_dm < c.staged_dm);
+        assert!(c.pb >= 8);
+        // 512-channel late layer: panel cannot fit, must stage
+        let late = LayerShape {
+            b: 8,
+            c: 512,
+            k: 512,
+            x: 30,
+            r: 3,
+        };
+        let c = choose_exec(Method::RegularFft, &late, 6, &m);
+        assert_eq!(c.policy, ExecPolicy::Staged);
+        assert!(c.fused_dm.is_infinite());
     }
 
     #[test]

@@ -8,16 +8,54 @@
 //! There is no work stealing by design — the *scheduler* (coordinator
 //! layer) is responsible for equalizing the shards, as in the paper.
 
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+type PanicPayload = Box<dyn std::any::Any + Send>;
 
 enum Msg {
     Run(Job),
     Stop,
+}
+
+/// Completion barrier for one fork-join wave: the caller blocks in `wait`
+/// until every dispatched shard has called `finish`, and the first panic
+/// payload (if any) is carried back to be re-raised on the caller.
+struct Completion {
+    state: Mutex<(usize, Option<PanicPayload>)>,
+    cv: Condvar,
+}
+
+impl Completion {
+    fn new(n: usize) -> Completion {
+        Completion {
+            state: Mutex::new((n, None)),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn finish(&self, panic: Option<PanicPayload>) {
+        let mut g = self.state.lock().unwrap();
+        g.0 -= 1;
+        if g.1.is_none() {
+            g.1 = panic;
+        }
+        if g.0 == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) -> Option<PanicPayload> {
+        let mut g = self.state.lock().unwrap();
+        while g.0 > 0 {
+            g = self.cv.wait(g).unwrap();
+        }
+        g.1.take()
+    }
 }
 
 /// A fixed-size fork-join pool.
@@ -60,46 +98,74 @@ impl ThreadPool {
     where
         F: Fn(usize) + Send + Sync,
     {
-        thread::scope(|scope| {
-            // The pool threads cannot borrow non-'static data, so static
-            // fork-join over borrowed shards uses a scoped spawn per call.
-            // Workers above serve the 'static Job path (`submit`).
-            let shard = &shard;
-            let mut joins = Vec::with_capacity(self.workers());
-            for i in 0..self.workers() {
-                joins.push(scope.spawn(move || shard(i)));
-            }
-            for j in joins {
-                j.join().expect("worker panicked");
-            }
-        });
+        let parts: Vec<usize> = (0..self.workers()).collect();
+        self.run_parts(parts, |_, i| shard(i));
     }
 
     /// Fork-join over *owned* per-shard work items: `f(i, item)` runs
     /// concurrently for every item, then all join.
     ///
-    /// Like [`ThreadPool::run_static`], each call forks scoped threads
-    /// (the persistent workers only serve `submit`'s `'static` jobs —
-    /// borrowed shards cannot cross their channel).  What this primitive
-    /// adds is zero-copy sharding: callers pre-split output buffers into
-    /// disjoint `&mut` slices, move each into its work item, and need no
-    /// synchronization — disjointness is proven to the borrow checker
-    /// before the fork.
+    /// Shards are dispatched to the **persistent workers** through their
+    /// job channels and the caller blocks on a completion barrier — one
+    /// wave costs two channel sends per shard instead of a thread spawn
+    /// (the old implementation forked scoped threads per stage, ~3 spawn
+    /// waves per batch on the staged engine).  The caller itself executes
+    /// shard 0, so `parts.len()` shards run on `parts.len()` threads.
+    ///
+    /// Zero-copy sharding is unchanged: callers pre-split output buffers
+    /// into disjoint `&mut` slices, move each into its work item, and need
+    /// no synchronization — disjointness is proven to the borrow checker
+    /// before the fork.  Panics in any shard are re-raised on the caller
+    /// after the join (workers survive: shards run under `catch_unwind`).
     pub fn run_parts<T, F>(&self, parts: Vec<T>, f: F)
     where
         T: Send,
         F: Fn(usize, T) + Send + Sync,
     {
-        thread::scope(|scope| {
-            let f = &f;
-            let mut joins = Vec::with_capacity(parts.len());
-            for (i, part) in parts.into_iter().enumerate() {
-                joins.push(scope.spawn(move || f(i, part)));
+        let n = parts.len();
+        if n == 0 {
+            return;
+        }
+        let mut iter = parts.into_iter();
+        let first = iter.next().expect("n >= 1");
+        if n == 1 {
+            f(0, first);
+            return;
+        }
+        let done = Completion::new(n - 1);
+        let mut panic: Option<PanicPayload>;
+        {
+            let (f, done_ref) = (&f, &done);
+            for (off, part) in iter.enumerate() {
+                let i = off + 1;
+                let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    let r = catch_unwind(AssertUnwindSafe(|| f(i, part)));
+                    done_ref.finish(r.err());
+                });
+                // SAFETY: lifetime erasure to cross the worker channel.
+                // `done.wait()` below does not return until every job has
+                // run `finish`, so the borrows of `f`, `done` and the
+                // shard data strictly outlive the jobs.
+                let job: Job = unsafe {
+                    std::mem::transmute::<Box<dyn FnOnce() + Send + '_>, Job>(job)
+                };
+                if let Err(e) = self.senders[off % self.senders.len()].send(Msg::Run(job)) {
+                    // worker unavailable (cannot happen while the pool is
+                    // alive): run the shard inline so the barrier closes
+                    if let Msg::Run(j) = e.0 {
+                        j();
+                    }
+                }
             }
-            for j in joins {
-                j.join().expect("worker panicked");
+            // the caller is a full participant, not an idle joiner
+            panic = catch_unwind(AssertUnwindSafe(|| f(0, first))).err();
+            if let Some(p) = done.wait() {
+                panic = panic.or(Some(p));
             }
-        });
+        }
+        if let Some(p) = panic {
+            resume_unwind(p);
+        }
     }
 
     /// Submit one fire-and-forget job to the least-loaded worker
@@ -268,6 +334,35 @@ mod tests {
             });
         }
         assert_eq!(data, vec![1.0, 1.0, 1.0, 2.0, 2.0, 2.0, 3.0, 3.0, 3.0]);
+    }
+
+    #[test]
+    fn shard_panic_propagates_and_pool_survives() {
+        let pool = ThreadPool::new(2);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run_parts(vec![0usize, 1, 2], |i, _| {
+                if i == 2 {
+                    panic!("shard failed");
+                }
+            });
+        }));
+        assert!(r.is_err(), "panic must reach the caller");
+        // the persistent workers caught the unwind and still serve waves
+        let sum = AtomicU64::new(0);
+        pool.run_parts(vec![1u64, 2, 3], |_, v| {
+            sum.fetch_add(v, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 6);
+    }
+
+    #[test]
+    fn run_parts_with_more_parts_than_workers() {
+        let pool = ThreadPool::new(2);
+        let sum = AtomicU64::new(0);
+        pool.run_parts((0..7u64).collect(), |_, v| {
+            sum.fetch_add(v, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 21);
     }
 
     #[test]

@@ -1,0 +1,187 @@
+//! Fused-vs-staged equivalence properties: for every tiled algorithm and
+//! a grid of layer shapes — including batches smaller than the worker
+//! count and odd tile remainders — the fused panel pipeline must produce
+//! the staged pipeline's output within 1e-4 relative tolerance (the two
+//! paths perform the same per-tile arithmetic, so the only drift allowed
+//! is reduction-blocking reassociation on very deep channel counts).
+//! Plus the plan-cache memory policy: `trim()`-then-rerun correctness and
+//! byte-budget enforcement end to end.
+
+use fftconv::conv::{
+    direct, ConvAlgorithm, ExecMode, ExecPolicy, LayerPlan, PlanOptions, Tensor4,
+};
+use fftconv::coordinator::StaticScheduler;
+use fftconv::util::threadpool::ThreadPool;
+
+const ALGOS: [ConvAlgorithm; 5] = [
+    ConvAlgorithm::Winograd { m: 2 },
+    ConvAlgorithm::Winograd { m: 4 },
+    ConvAlgorithm::RegularFft { m: 4 },
+    ConvAlgorithm::RegularFft { m: 7 },
+    ConvAlgorithm::GaussFft { m: 4 },
+];
+
+fn plan_with(
+    algo: ConvAlgorithm,
+    w: &Tensor4,
+    h: usize,
+    wd: usize,
+    workers: usize,
+    exec: ExecPolicy,
+) -> LayerPlan {
+    LayerPlan::with_options(
+        algo,
+        w,
+        h,
+        wd,
+        workers,
+        PlanOptions {
+            exec,
+            ..PlanOptions::default()
+        },
+    )
+}
+
+#[test]
+fn fused_equals_staged_across_shapes_and_workers() {
+    // (b, c, k, h, w, seed): covers b < workers, odd spatial sizes with
+    // remainder tiles on both axes, single-channel, and k != c
+    let shapes: [(usize, usize, usize, usize, usize, u64); 5] = [
+        (1, 3, 4, 13, 12, 100), // b=1 < workers: intra-image panels only
+        (3, 4, 5, 17, 15, 101), // odd remainders on both axes
+        (2, 1, 2, 9, 11, 102),  // single input channel
+        (5, 2, 3, 10, 10, 103), // b > workers
+        (2, 5, 2, 12, 19, 104), // wide image, k < c
+    ];
+    let pool = ThreadPool::new(4);
+    for algo in ALGOS {
+        for &(b, c, k, h, wd, seed) in &shapes {
+            let x = Tensor4::random([b, c, h, wd], seed);
+            let w = Tensor4::random([k, c, 3, 3], seed + 1000);
+            let mut staged = plan_with(algo, &w, h, wd, 4, ExecPolicy::Staged);
+            let mut fused = plan_with(algo, &w, h, wd, 4, ExecPolicy::Fused);
+            assert_eq!(staged.exec_mode(), ExecMode::Staged);
+            assert_eq!(fused.exec_mode(), ExecMode::Fused);
+            let want = staged.run(&x, Some(&pool));
+            let got = fused.run(&x, Some(&pool));
+            let scale = want.max_abs().max(1.0);
+            assert!(
+                got.max_abs_diff(&want) < 1e-4 * scale,
+                "{} b={b} c={c} k={k} {h}x{wd}: fused diverges by {}",
+                algo.name(),
+                got.max_abs_diff(&want)
+            );
+            // and both must remain honest convolutions
+            let reference = direct::naive(&x, &w);
+            assert!(want.max_abs_diff(&reference) < 2e-3 * reference.max_abs().max(1.0));
+        }
+    }
+}
+
+#[test]
+fn fused_serial_equals_fused_parallel() {
+    let x = Tensor4::random([2, 3, 16, 14], 110);
+    let w = Tensor4::random([4, 3, 3, 3], 111);
+    let pool = ThreadPool::new(4);
+    for algo in ALGOS {
+        let mut serial = plan_with(algo, &w, 16, 14, 1, ExecPolicy::Fused);
+        let mut par = plan_with(algo, &w, 16, 14, 4, ExecPolicy::Fused);
+        let a = serial.run(&x, None);
+        let b = par.run(&x, Some(&pool));
+        // panel boundaries shift with the shard split but never change
+        // any per-tile arithmetic
+        assert!(
+            a.max_abs_diff(&b) < 1e-6,
+            "{}: fused not thread-count invariant",
+            algo.name()
+        );
+    }
+}
+
+#[test]
+fn fused_plan_reuse_is_allocation_free_and_batch_flexible() {
+    let w = Tensor4::random([3, 2, 3, 3], 120);
+    let pool = ThreadPool::new(2);
+    let mut plan = plan_with(
+        ConvAlgorithm::RegularFft { m: 4 },
+        &w,
+        12,
+        12,
+        2,
+        ExecPolicy::Fused,
+    );
+    // first batch grows the fused panels; later batches (any size) reuse
+    let x1 = Tensor4::random([2, 2, 12, 12], 121);
+    let o1 = plan.run(&x1, Some(&pool));
+    let stamp = plan.arena_stamp();
+    for (b, seed) in [(4usize, 122u64), (1, 123), (2, 124)] {
+        let x = Tensor4::random([b, 2, 12, 12], seed);
+        let o = plan.run(&x, Some(&pool));
+        let want = direct::naive(&x, &w);
+        assert!(o.max_abs_diff(&want) < 2e-3 * want.max_abs().max(1.0), "b={b}");
+    }
+    assert_eq!(stamp, plan.arena_stamp(), "fused scratch reallocated");
+    let want1 = direct::naive(&x1, &w);
+    assert!(o1.max_abs_diff(&want1) < 2e-3 * want1.max_abs().max(1.0));
+}
+
+#[test]
+fn trim_then_rerun_matches_for_all_algorithms_and_modes() {
+    let x = Tensor4::random([2, 3, 14, 13], 130);
+    let w = Tensor4::random([4, 3, 3, 3], 131);
+    let pool = ThreadPool::new(3);
+    for algo in [
+        ConvAlgorithm::Winograd { m: 4 },
+        ConvAlgorithm::RegularFft { m: 4 },
+        ConvAlgorithm::GaussFft { m: 4 },
+    ] {
+        for exec in [ExecPolicy::Staged, ExecPolicy::Fused] {
+            let mut plan = plan_with(algo, &w, 14, 13, 3, exec);
+            let fp = plan.weights_fp;
+            let before = plan.run(&x, Some(&pool));
+            assert!(plan.arena_bytes() > 0);
+            plan.trim();
+            assert_eq!(plan.arena_bytes(), 0, "{}: trim leaks", algo.name());
+            let after = plan.run(&x, Some(&pool));
+            assert_eq!(
+                before.max_abs_diff(&after),
+                0.0,
+                "{} {exec:?}: trim changed results",
+                algo.name()
+            );
+            assert_eq!(fp, plan.weights_fp, "trim must keep the kernel transform");
+        }
+    }
+}
+
+#[test]
+fn scheduler_budget_end_to_end_under_many_layers() {
+    // several distinct layers through one scheduler with a budget that
+    // cannot hold all their arenas: every answer stays correct while the
+    // cache trims/evicts to the ceiling
+    let mut s = StaticScheduler::new(2);
+    let layers: Vec<(Tensor4, Tensor4)> = (0..4)
+        .map(|i| {
+            (
+                Tensor4::random([2, 3, 12 + i, 12 + i], 140 + i as u64),
+                Tensor4::random([3, 3, 3, 3], 150 + i as u64),
+            )
+        })
+        .collect();
+    // fill the cache, then shrink the budget to force policy action
+    for (x, w) in &layers {
+        let _ = s.run_batch(ConvAlgorithm::RegularFft { m: 4 }, x, w);
+    }
+    let full = s.plan_bytes();
+    assert!(full > 0);
+    s.set_plan_budget(full / 3);
+    for (x, w) in layers.iter().rev() {
+        let got = s.run_batch(ConvAlgorithm::RegularFft { m: 4 }, x, w);
+        let want = direct::naive(x, w);
+        assert!(got.max_abs_diff(&want) < 2e-3 * want.max_abs().max(1.0));
+    }
+    assert!(
+        s.plan_bytes() < full,
+        "budget enforcement must shrink residency"
+    );
+}
