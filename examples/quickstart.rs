@@ -5,12 +5,15 @@
 //! either **staged** (three fork-join stages over global U/Z arenas) or
 //! **fused** (one fork-join of cache-resident tile panels, L3 fusion).
 //! `ExecPolicy::Auto` lets the engine fuse whenever a panel fits the
-//! cache budget; the scheduler resolves Auto through the roofline model
-//! (`model::select::choose_exec`) instead.
+//! cache budget; the scheduler seeds that choice from the roofline model
+//! (`model::select::choose_exec`) and — under `TuningPolicy::Measured`
+//! or `Hybrid` — re-resolves it **per batch-size bucket** from real
+//! timings (docs/ARCHITECTURE.md §4).
 
 use fftconv::conv::{
     self, ConvAlgorithm, ConvProblem, ExecPolicy, LayerPlan, PlanOptions, Tensor4,
 };
+use fftconv::coordinator::{StaticScheduler, TuningPolicy};
 use std::time::Instant;
 
 fn main() {
@@ -83,4 +86,45 @@ fn main() {
         );
         assert!(err < 1e-3);
     }
+
+    // --- measured autotuning: per-batch staged/fused re-resolution -------
+    // The scheduler does NOT trust the roofline once and forever: each
+    // batch size bucket (1, 2, 4, ... — powers of two) of the same layer
+    // plan gets its own staged-vs-fused verdict.
+    //
+    //   TuningPolicy::Analytic  -- trust the model seed, never measure.
+    //   TuningPolicy::Measured  -- unsettled batches run BOTH pipelines
+    //       back to back, keeping the faster once both samples are warm
+    //       (cold runs that grow scratch never count).  Worth it for
+    //       long-lived serving layers: a couple of double batches per
+    //       bucket buy the empirically fastest path forever after.  Not
+    //       worth it for short-lived layers or strict per-batch latency
+    //       SLOs (the measuring batches do the layer twice).
+    //   TuningPolicy::Hybrid    -- runs the model's pick until it has a
+    //       warm sample, then the alternative, then the winner sticks:
+    //       no batch is ever run twice, settling a few batches later.
+    println!("\nper-batch exec re-resolution (TuningPolicy::Hybrid):");
+    let mut sched = StaticScheduler::new(2);
+    sched.set_tuning_policy(TuningPolicy::Hybrid);
+    let algo = ConvAlgorithm::RegularFft { m: 6 };
+    // the same plan serves batch 1 (latency traffic) and batch 8
+    // (throughput traffic); each bucket tunes independently
+    for b in [1usize, 1, 1, 1, 8, 8, 8, 8] {
+        let xb = Tensor4::random([b, problem.c_in, problem.h, problem.w], 7 + b as u64);
+        let t0 = Instant::now();
+        let _ = sched.run_batch(algo, &xb, &w);
+        let snap = sched.tuning_for(algo, &xb, &w).expect("tuned");
+        println!(
+            "  batch {b} (bucket {}): analytic {:7} resolved {:7} settled {:5}  {:6.2} ms",
+            snap.bucket,
+            snap.analytic.name(),
+            snap.resolved.name(),
+            snap.settled,
+            t0.elapsed().as_secs_f64() * 1e3,
+        );
+    }
+    println!(
+        "model overruled on {} bucket(s) by measurement",
+        sched.tuning_disagreements()
+    );
 }

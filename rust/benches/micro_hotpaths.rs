@@ -1,16 +1,18 @@
 //! Micro-benchmarks of the engine hot paths (the §Perf working set):
 //! blocked GEMM, FFT plans by size class (incl. Rader primes), Winograd
-//! tile transforms, tiling gather/scatter, coordinator overhead, and the
-//! stage-parallel engine on a VGG-shaped layer — emitted both as the
-//! usual table/CSV and as `BENCH_hotpaths.json` so successive PRs have a
-//! machine-readable perf trajectory.
+//! tile transforms, tiling gather/scatter, coordinator overhead, the
+//! stage-parallel engine on a VGG-shaped layer, and the measured-exec
+//! autotuning verdicts (analytic vs empirical staged/fused pick) —
+//! emitted both as the usual table/CSV and as `BENCH_hotpaths.json` so
+//! successive PRs have a machine-readable perf trajectory (schema:
+//! docs/ARCHITECTURE.md §BENCH).
 
 use fftconv::conv::gemm::{cgemm_acc, gemm_acc};
 use fftconv::conv::{ConvAlgorithm, ExecPolicy, LayerPlan, PlanOptions, Tensor4, TileGrid};
 use fftconv::coordinator::StaticScheduler;
 use fftconv::fft::{C32, Plan, TileFft};
 use fftconv::model::machine::xeon_gold;
-use fftconv::model::select::choose_exec;
+use fftconv::model::select::{choose_exec, measure_exec};
 use fftconv::model::stages::{LayerShape, Method};
 use fftconv::util::bench::{bench, Table};
 use fftconv::util::json::Json;
@@ -329,6 +331,63 @@ fn main() {
                 ),
             );
         }
+    }
+
+    // ---- measured exec autotuning: analytic seed vs empirical verdict ----
+    // The `tuning` block of the BENCH schema (docs/ARCHITECTURE.md): for
+    // the same VGG- and AlexNet-shaped layers, the roofline pick on the
+    // catalog Xeon Gold next to what this host actually measured — the
+    // scheduler's tuning table makes the same comparison per batch bucket
+    // at serving time, and the disagreement count records how often the
+    // measurement had to overrule the model.
+    {
+        let workers = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let pool = ThreadPool::new(workers);
+        let machine = xeon_gold();
+        // (tag, b, c, k, hw, r, m, method) — the acceptance layer pair
+        let cases = [
+            ("vgg", 8usize, 64usize, 64usize, 56usize, 3usize, 6usize, Method::RegularFft),
+            ("alexnet", 8, 64, 192, 31, 5, 4, Method::RegularFft),
+        ];
+        let mut tuning = BTreeMap::new();
+        let mut disagreements = 0usize;
+        for (tag, b, c, k, hw, r, m, method) in cases {
+            let l = LayerShape { b, c, k, x: hw, r };
+            let v = measure_exec(method, &l, m, &machine, b, Some(&pool));
+            let analytic = match v.analytic.policy {
+                ExecPolicy::Fused => "fused",
+                _ => "staged",
+            };
+            let measured = v.measured.name();
+            if !v.agrees() {
+                disagreements += 1;
+            }
+            t.row(vec![
+                format!("{tag}-tuning"),
+                format!("analytic {analytic} / measured {measured}"),
+                format!("{:.0}", v.staged_secs * 1e6),
+                v.fused_secs
+                    .map_or("fused n/a".to_string(), |f| format!("{:.0}µs fused", f * 1e6)),
+            ]);
+            let mut obj = BTreeMap::new();
+            obj.insert("analytic".to_string(), Json::Str(analytic.to_string()));
+            obj.insert("measured".to_string(), Json::Str(measured.to_string()));
+            obj.insert("staged_ms".to_string(), Json::Num(v.staged_secs * 1e3));
+            // -1 encodes "fusion infeasible, not timed"
+            obj.insert(
+                "fused_ms".to_string(),
+                Json::Num(v.fused_secs.map_or(-1.0, |f| f * 1e3)),
+            );
+            obj.insert("agree".to_string(), Json::Bool(v.agrees()));
+            tuning.insert(tag.to_string(), Json::Obj(obj));
+        }
+        tuning.insert(
+            "disagreements".to_string(),
+            Json::Num(disagreements as f64),
+        );
+        json.insert("tuning".to_string(), Json::Obj(tuning));
     }
 
     t.emit("micro_hotpaths");

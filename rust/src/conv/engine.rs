@@ -49,6 +49,20 @@
 //! useful panel fits the budget), or an explicit `Staged`/`Fused`
 //! override; the scheduler resolves `Auto` through the roofline model's
 //! fused-vs-staged DRAM-traffic estimate (`model::select::choose_exec`).
+//!
+//! ## Both variants, one plan
+//!
+//! A plan is *not* pinned to the mode it resolved at build time: the
+//! staged arenas and the fused panels are independent pieces of scratch
+//! hanging off the same cached kernel transform `V[P][K][C]`, so one
+//! `LayerPlan` can serve **either** pipeline on any given batch via
+//! [`LayerPlan::run_with_mode`] (the scheduler's per-batch tuning table
+//! does exactly that).  [`PlanOptions::exec`] only sets the *default*
+//! mode used by [`LayerPlan::run_into`]; fused capability is retained
+//! whenever a panel fits the cache budget ([`LayerPlan::can_fuse`]).
+//! Each variant's scratch grows on the first batch that uses it and can
+//! be reclaimed independently ([`LayerPlan::trim_staged`] /
+//! [`LayerPlan::trim_fused`]) without touching the kernel transform.
 
 use super::batch_wino::BatchSandwich;
 use super::fft_conv::FftVariant;
@@ -329,14 +343,15 @@ impl WorkerState {
         }
     }
 
-    /// Bytes of droppable scratch (fused panels + Gauss recombination).
-    fn arena_bytes(&self) -> usize {
+    /// Bytes of droppable fused-panel scratch (the shared Gauss buffers
+    /// are accounted separately at the plan level).
+    fn fused_bytes(&self) -> usize {
         let f32s = self.fur.len()
             + self.fui.len()
             + self.fus.len()
             + self.fzr.len()
             + self.fzi.len();
-        f32s * 4 + self.gauss.bytes()
+        f32s * 4
     }
 
     /// Free the droppable scratch (regrown on the next batch).
@@ -434,14 +449,26 @@ impl LayerPlan {
             Some(_) => (t / 2 + 1) * t,
         };
         let fit = fused_panel_tiles(p, c, k, is_fft, gauss, opts.fused_budget);
-        let (mode, pb) = match opts.exec {
-            ExecPolicy::Staged => (ExecMode::Staged, 0),
-            ExecPolicy::Fused => (ExecMode::Fused, fit.clamp(MIN_PB, MAX_PB)),
+        // fused *capability* (pb > 0) is kept whenever a useful panel fits
+        // the budget, regardless of the default mode below — the per-batch
+        // tuning table may run the non-default variant on the same plan.
+        // An explicit `Fused` pin forces at least MIN_PB tiles even when
+        // the budget says otherwise (the caller asked for it).
+        let pb = if fit >= MIN_PB {
+            fit.min(MAX_PB)
+        } else if opts.exec == ExecPolicy::Fused {
+            fit.clamp(MIN_PB, MAX_PB)
+        } else {
+            0
+        };
+        let mode = match opts.exec {
+            ExecPolicy::Staged => ExecMode::Staged,
+            ExecPolicy::Fused => ExecMode::Fused,
             ExecPolicy::Auto => {
                 if fit >= MIN_PB {
-                    (ExecMode::Fused, fit.min(MAX_PB))
+                    ExecMode::Fused
                 } else {
-                    (ExecMode::Staged, 0)
+                    ExecMode::Staged
                 }
             }
         };
@@ -539,23 +566,64 @@ impl LayerPlan {
         v
     }
 
-    /// The execution mode this plan resolved to.
+    /// The *default* execution mode — what a plain [`LayerPlan::run_into`]
+    /// runs.  Resolved from [`PlanOptions::exec`] at build time; callers
+    /// holding fresher information (the scheduler's tuning table) override
+    /// it per batch with [`LayerPlan::run_with_mode`] or durably with
+    /// [`LayerPlan::set_exec_mode`].
     pub fn exec_mode(&self) -> ExecMode {
         self.mode
     }
 
-    /// Tiles per fused panel (0 when staged).
+    /// Re-pin the default execution mode.  Panics if `Fused` is requested
+    /// on a plan whose panel never fit the cache budget (`can_fuse()` is
+    /// false).
+    pub fn set_exec_mode(&mut self, mode: ExecMode) {
+        assert!(
+            mode != ExecMode::Fused || self.can_fuse(),
+            "fused exec requested but no panel fits the cache budget"
+        );
+        self.mode = mode;
+    }
+
+    /// Whether the fused panel pipeline is available on this plan (a
+    /// `>= 1` tile panel fit the cache budget at build time).
+    pub fn can_fuse(&self) -> bool {
+        self.pb > 0
+    }
+
+    /// Tiles per fused panel (0 when fusion is unavailable).
     pub fn panel_tiles(&self) -> usize {
         self.pb
     }
 
-    /// Bytes held by droppable scratch: the staged `U`/`Z` arenas plus
-    /// every worker's fused panels — exactly what [`LayerPlan::trim`]
-    /// frees.
-    pub fn arena_bytes(&self) -> usize {
+    /// Bytes held by the staged variant's droppable scratch (the global
+    /// `U`/`Z` arenas) — what [`LayerPlan::trim_staged`] frees, minus the
+    /// shared Gauss buffers.
+    pub fn staged_arena_bytes(&self) -> usize {
         let f32s =
             self.ur.len() + self.ui.len() + self.us.len() + self.zr.len() + self.zi.len();
-        f32s * 4 + self.workers.iter().map(|w| w.arena_bytes()).sum::<usize>()
+        f32s * 4
+    }
+
+    /// Bytes held by the fused variant's droppable scratch (every worker's
+    /// cache-resident panels) — what [`LayerPlan::trim_fused`] frees,
+    /// minus the shared Gauss buffers.
+    pub fn fused_arena_bytes(&self) -> usize {
+        self.workers.iter().map(|w| w.fused_bytes()).sum::<usize>()
+    }
+
+    /// Bytes of per-worker Gauss recombination scratch — grown by either
+    /// pipeline of a Gauss-FFT plan, freed by either trim (it regrows
+    /// transparently, like all droppable scratch).
+    fn gauss_bytes(&self) -> usize {
+        self.workers.iter().map(|w| w.gauss.bytes()).sum::<usize>()
+    }
+
+    /// Bytes held by droppable scratch across both exec variants — exactly
+    /// what [`LayerPlan::trim`] frees.
+    pub fn arena_bytes(&self) -> usize {
+        self.staged_arena_bytes() + self.fused_arena_bytes() + self.gauss_bytes()
     }
 
     /// Total resident bytes: droppable arenas plus the kernel transform
@@ -572,19 +640,39 @@ impl LayerPlan {
         kernel + fixed + self.arena_bytes()
     }
 
-    /// Free the batch-scale scratch (staged `U`/`Z` arenas, fused panels,
-    /// Gauss recombination buffers) while keeping the kernel transform and
-    /// codelets — an idle plan shrinks to its `V[P][K][C]` planes and
-    /// regrows scratch transparently on its next batch.
-    pub fn trim(&mut self) {
+    /// Free only the staged variant's scratch (the global `U`/`Z` arenas,
+    /// plus the shared Gauss buffers).  The fused panels — and, always,
+    /// the kernel transform — survive, so a plan serving mostly-fused
+    /// traffic can shed its staged high-water mark without a fused warm-up
+    /// on the next batch.
+    pub fn trim_staged(&mut self) {
         self.ur = Vec::new();
         self.ui = Vec::new();
         self.us = Vec::new();
         self.zr = Vec::new();
         self.zi = Vec::new();
         for ws in &mut self.workers {
+            ws.gauss.clear();
+        }
+    }
+
+    /// Free only the fused variant's scratch (every worker's panels, plus
+    /// the shared Gauss buffers), keeping the staged arenas and the kernel
+    /// transform.
+    pub fn trim_fused(&mut self) {
+        for ws in &mut self.workers {
             ws.trim();
         }
+    }
+
+    /// Free the batch-scale scratch of *both* variants (staged `U`/`Z`
+    /// arenas, fused panels, Gauss recombination buffers) while keeping
+    /// the kernel transform and codelets — an idle plan shrinks to its
+    /// `V[P][K][C]` planes and regrows scratch transparently on its next
+    /// batch.
+    pub fn trim(&mut self) {
+        self.trim_staged();
+        self.trim_fused();
     }
 
     /// Convenience wrapper over [`LayerPlan::run_into`].
@@ -596,7 +684,8 @@ impl LayerPlan {
 
     /// Execute the plan over `x`, writing into `out` — either the
     /// three-stage arena pipeline or the fused panel pipeline, per the
-    /// mode resolved at plan build.
+    /// plan's *default* mode (see [`LayerPlan::run_with_mode`] for a
+    /// per-batch override).
     ///
     /// With `Some(pool)`, work forks across the pool's workers with
     /// statically precomputed equal-FLOP shards; with `None` it runs
@@ -604,13 +693,35 @@ impl LayerPlan {
     /// shard and panel boundaries never change any per-tile or per-GEMM
     /// arithmetic).
     pub fn run_into(&mut self, x: &Tensor4, out: &mut Tensor4, pool: Option<&ThreadPool>) {
+        self.run_with_mode(x, out, pool, self.mode);
+    }
+
+    /// Execute the plan with an explicit execution mode for *this batch
+    /// only* — the entry point of the scheduler's per-batch staged/fused
+    /// re-resolution.  Both variants share the cached kernel transform;
+    /// each grows (and keeps) its own scratch on the first batch that
+    /// uses it.  Panics if `Fused` is requested but no panel fits
+    /// ([`LayerPlan::can_fuse`] is false).
+    pub fn run_with_mode(
+        &mut self,
+        x: &Tensor4,
+        out: &mut Tensor4,
+        pool: Option<&ThreadPool>,
+        mode: ExecMode,
+    ) {
         let [b, c, h, w] = x.shape;
         assert_eq!(c, self.c, "channel mismatch");
         assert_eq!((h, w), (self.h, self.w), "input spatial shape mismatch");
         assert_eq!(out.shape, self.output_shape(b), "output shape mismatch");
-        match self.mode {
+        match mode {
             ExecMode::Staged => self.run_staged(x, out, pool),
-            ExecMode::Fused => self.run_fused(x, out, pool),
+            ExecMode::Fused => {
+                assert!(
+                    self.can_fuse(),
+                    "fused exec requested but no panel fits the cache budget"
+                );
+                self.run_fused(x, out, pool);
+            }
         }
     }
 
@@ -1282,6 +1393,80 @@ mod tests {
                 "{exec:?}: trim changed the arithmetic"
             );
         }
+    }
+
+    #[test]
+    fn one_plan_serves_both_modes_and_trims_independently() {
+        let x = Tensor4::random([2, 3, 13, 12], 890);
+        let w = Tensor4::random([4, 3, 3, 3], 891);
+        let want = direct::naive(&x, &w);
+        let pool = ThreadPool::new(2);
+        for algo in [
+            ConvAlgorithm::Winograd { m: 4 },
+            ConvAlgorithm::RegularFft { m: 4 },
+            ConvAlgorithm::GaussFft { m: 4 },
+        ] {
+            let mut plan = LayerPlan::new(algo, &w, 13, 12, 2);
+            assert!(plan.can_fuse(), "{}: small layer must fuse", algo.name());
+            let mut a = Tensor4::zeros(plan.output_shape(2));
+            let mut b = Tensor4::zeros(plan.output_shape(2));
+            plan.run_with_mode(&x, &mut a, Some(&pool), ExecMode::Staged);
+            plan.run_with_mode(&x, &mut b, Some(&pool), ExecMode::Fused);
+            assert!(a.max_abs_diff(&want) < tol(&want), "{}", algo.name());
+            assert!(b.max_abs_diff(&want) < tol(&want), "{}", algo.name());
+            // both variants' scratch coexist on the one plan
+            assert!(plan.staged_arena_bytes() > 0, "{}", algo.name());
+            assert!(plan.fused_arena_bytes() > 0, "{}", algo.name());
+            // trims are independent: dropping one variant's scratch leaves
+            // the other's untouched (Gauss shared buffers aside)
+            let fused_bytes = plan.fused_arena_bytes();
+            plan.trim_staged();
+            assert_eq!(plan.staged_arena_bytes(), 0);
+            assert_eq!(plan.fused_arena_bytes(), fused_bytes);
+            plan.trim_fused();
+            assert_eq!(plan.arena_bytes(), 0);
+            // the kernel transform survived both trims: rerun is bitwise
+            let mut c2 = Tensor4::zeros(plan.output_shape(2));
+            plan.run_with_mode(&x, &mut c2, Some(&pool), ExecMode::Fused);
+            assert_eq!(b.max_abs_diff(&c2), 0.0, "{}", algo.name());
+        }
+    }
+
+    #[test]
+    fn set_exec_mode_repins_default() {
+        let x = Tensor4::random([1, 3, 13, 12], 892);
+        let w = Tensor4::random([4, 3, 3, 3], 893);
+        let opts = PlanOptions {
+            exec: ExecPolicy::Staged,
+            ..PlanOptions::default()
+        };
+        let mut plan =
+            LayerPlan::with_options(ConvAlgorithm::RegularFft { m: 4 }, &w, 13, 12, 1, opts);
+        assert_eq!(plan.exec_mode(), ExecMode::Staged);
+        assert!(plan.can_fuse(), "staged-pinned plan keeps fused capability");
+        plan.set_exec_mode(ExecMode::Fused);
+        assert_eq!(plan.exec_mode(), ExecMode::Fused);
+        let got = plan.run(&x, None); // default path now runs fused
+        assert!(plan.fused_arena_bytes() > 0);
+        assert_eq!(plan.staged_arena_bytes(), 0);
+        let want = direct::naive(&x, &w);
+        assert!(got.max_abs_diff(&want) < tol(&want));
+    }
+
+    #[test]
+    #[should_panic(expected = "no panel fits")]
+    fn fused_mode_rejected_when_infeasible() {
+        let x = Tensor4::random([1, 3, 13, 12], 894);
+        let w = Tensor4::random([4, 3, 3, 3], 895);
+        let opts = PlanOptions {
+            exec: ExecPolicy::Auto,
+            fused_budget: 64,
+        };
+        let mut plan =
+            LayerPlan::with_options(ConvAlgorithm::Winograd { m: 4 }, &w, 13, 12, 1, opts);
+        assert!(!plan.can_fuse());
+        let mut out = Tensor4::zeros(plan.output_shape(1));
+        plan.run_with_mode(&x, &mut out, None, ExecMode::Fused);
     }
 
     #[test]

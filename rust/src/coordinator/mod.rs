@@ -22,5 +22,5 @@ pub mod service;
 pub use batcher::Batcher;
 pub use metrics::Metrics;
 pub use request::{ConvRequest, ConvResponse};
-pub use scheduler::StaticScheduler;
+pub use scheduler::{batch_bucket, StaticScheduler, TuneSnapshot, TuningPolicy};
 pub use service::ConvService;

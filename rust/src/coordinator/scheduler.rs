@@ -23,17 +23,53 @@
 //! Plans are cached per (algorithm, input shape, weight fingerprint):
 //! the kernel transform `V[P][K][C]` is computed once per layer, and the
 //! engine's scratch arenas are reused across every subsequent batch, so
-//! steady-state serving is allocation-free on the hot path.
+//! steady-state serving is allocation-free on the hot path.  The weight
+//! fingerprint in the key means two same-shape layers with different
+//! weights each keep their plan; a weight *update* to one layer evicts
+//! only that layer's outdated plan.
+//!
+//! ## Per-batch execution-mode re-resolution (the tuning table)
+//!
+//! A plan is no longer married to the staged-vs-fused decision of its
+//! first caller.  Every `run_batch` resolves the execution mode through
+//! a memoized **tuning table** keyed on `(plan key, batch bucket)` —
+//! buckets are batch sizes rounded up to powers of two, so traffic at
+//! batch 1, 4 and 64 tunes three independent entries against the *same*
+//! plan (both variants share its cached kernel transform).  Each entry
+//! is **seeded** by the roofline prediction (`model::select::choose_exec`
+//! evaluated at the bucket's batch size) and — depending on the
+//! [`TuningPolicy`] — **refined** by empirical timings fed back from the
+//! real batches the scheduler serves:
+//!
+//! * [`TuningPolicy::Analytic`] — trust the seed; never measure.
+//! * [`TuningPolicy::Measured`] — each batch of an unsettled bucket runs
+//!   *both* pipelines back to back (the output is identical either way)
+//!   and the entry settles once both have a warm sample.
+//! * [`TuningPolicy::Hybrid`] — unsettled batches run the analytic pick
+//!   until it has a warm sample, then the alternative; the entry
+//!   settles on whichever measured faster.  No batch is ever run twice.
+//!
+//! Timings are normalized per image (a bucket spans up to 2x in actual
+//! batch size), and a run that grew the plan's scratch yields no sample
+//! — so one-time allocation/first-touch costs never decide a verdict,
+//! at the price of a warm-up batch or two per bucket before settling.
+//!
+//! Once an entry has both timings it is settled and serves its winner
+//! with zero measurement overhead.  [`StaticScheduler::record_exec_time`]
+//! lets an operator (or a test) feed external timings, and
+//! [`StaticScheduler::seed_exec_verdict`] consumes the nominal-batch
+//! verdict of `model::select::select_measured` at registration time.
 
 use crate::conv::direct;
 use crate::conv::engine::{weights_fingerprint, LayerPlan, PlanOptions};
-use crate::conv::{ConvAlgorithm, Tensor4};
+use crate::conv::{ConvAlgorithm, ExecMode, Tensor4};
 use crate::model::machine::{xeon_gold, Machine};
-use crate::model::select::choose_exec;
+use crate::model::select::{choose_exec, ExecChoice, ExecVerdict};
 use crate::model::stages::{LayerShape, Method};
 use crate::util::threadpool::{even_ranges, weighted_ranges, ThreadPool};
 use std::collections::HashMap;
 use std::ops::Range;
+use std::time::Instant;
 
 /// Most plans kept before eviction — bounds memory under weight churn
 /// while letting every distinct serving layer keep its plan resident.
@@ -66,59 +102,132 @@ struct PlanEntry {
     last_used: u64,
 }
 
-/// The roofline execution choice for a tiled algorithm on `machine` —
-/// resolved once per plan build, using the batch size of the triggering
-/// call as the layer's nominal batch.
-#[allow(clippy::too_many_arguments)]
-fn resolve_options(
-    algo: ConvAlgorithm,
-    c: usize,
-    k: usize,
-    h: usize,
-    w_sp: usize,
-    r: usize,
-    b: usize,
-    machine: &Machine,
-) -> PlanOptions {
-    let method = match algo {
-        ConvAlgorithm::Winograd { .. } => Method::Winograd,
-        ConvAlgorithm::RegularFft { .. } => Method::RegularFft,
-        ConvAlgorithm::GaussFft { .. } => Method::GaussFft,
-        _ => return PlanOptions::default(),
-    };
-    let m = algo.tile_m().expect("tiled algorithm");
-    let l = LayerShape {
-        b: b.max(1),
-        c,
-        k,
-        x: h.max(w_sp),
-        r,
-    };
-    PlanOptions {
-        exec: choose_exec(method, &l, m, machine).policy,
-        fused_budget: machine.cache,
+/// How the scheduler decides staged-vs-fused per `(plan, batch bucket)`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TuningPolicy {
+    /// Trust the roofline seed of every bucket; never measure.
+    #[default]
+    Analytic,
+    /// Run both pipelines back to back on each batch of an unsettled
+    /// bucket (double work per measuring batch) and settle on the
+    /// empirical winner as soon as both have warm samples — typically
+    /// the bucket's second batch (the first grows scratch).
+    Measured,
+    /// Run the analytic pick until it has a warm sample, then the
+    /// alternative, then settle on the faster — never runs a batch
+    /// twice, converging a couple of batches later than `Measured`.
+    Hybrid,
+}
+
+/// Bucket a batch size for the tuning table: the next power of two.
+/// Coarse enough that steady traffic lands on few entries, fine enough
+/// that batch-1 latency traffic and batch-64 throughput traffic tune
+/// independently.
+pub fn batch_bucket(b: usize) -> usize {
+    b.max(1).next_power_of_two()
+}
+
+/// Tuning-table key: one resolution per (plan identity, batch bucket).
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct TuneKey {
+    plan: PlanKey,
+    bucket: usize,
+}
+
+/// One tuning-table entry: the roofline seed plus whatever empirical
+/// timings have been fed back, and the currently resolved winner.
+///
+/// Timings are stored **per image** (batch seconds / batch size): a
+/// bucket spans actual batch sizes up to 2x apart, so raw batch times of
+/// the two pipelines would not compare like-for-like.
+struct TuneEntry {
+    /// the roofline prediction at this bucket's batch size
+    analytic: ExecMode,
+    staged_secs: Option<f64>,
+    fused_secs: Option<f64>,
+    /// the mode `run_batch` executes for this bucket right now
+    resolved: ExecMode,
+    /// true once the verdict is final (both timings seen, or fusion is
+    /// unavailable on the plan) — settled entries are never re-measured
+    settled: bool,
+}
+
+impl TuneEntry {
+    /// Seed from the analytic choice.  A plan that cannot fuse settles
+    /// immediately on `Staged` — there is no alternative to measure.
+    fn seed(choice: &ExecChoice, can_fuse: bool) -> TuneEntry {
+        let analytic = match choice.policy {
+            crate::conv::ExecPolicy::Fused if can_fuse => ExecMode::Fused,
+            _ => ExecMode::Staged,
+        };
+        TuneEntry {
+            analytic,
+            staged_secs: None,
+            fused_secs: None,
+            resolved: if can_fuse { analytic } else { ExecMode::Staged },
+            settled: !can_fuse,
+        }
+    }
+
+    fn time_of(&self, mode: ExecMode) -> Option<f64> {
+        match mode {
+            ExecMode::Staged => self.staged_secs,
+            ExecMode::Fused => self.fused_secs,
+        }
+    }
+
+    fn record(&mut self, mode: ExecMode, secs: f64) {
+        match mode {
+            ExecMode::Staged => self.staged_secs = Some(secs),
+            ExecMode::Fused => self.fused_secs = Some(secs),
+        }
+    }
+
+    /// Settle on the measured winner once both pipelines have a timing.
+    fn try_settle(&mut self) {
+        if let (Some(s), Some(f)) = (self.staged_secs, self.fused_secs) {
+            self.resolved = if f < s {
+                ExecMode::Fused
+            } else {
+                ExecMode::Staged
+            };
+            self.settled = true;
+        }
     }
 }
 
-/// Get-or-build the cached plan for (algo, input shape, weights).
+/// Read-only view of one tuning-table entry (observability / tests).
+#[derive(Clone, Copy, Debug)]
+pub struct TuneSnapshot {
+    pub bucket: usize,
+    /// the roofline seed
+    pub analytic: ExecMode,
+    /// the mode currently served for this bucket
+    pub resolved: ExecMode,
+    /// measured seconds **per image** (batch time / batch size, so
+    /// samples from different batch sizes within the bucket compare)
+    pub staged_secs: Option<f64>,
+    pub fused_secs: Option<f64>,
+    pub settled: bool,
+}
+
+/// The tiled `Method` behind a [`ConvAlgorithm`], if any.
+fn algo_method(algo: ConvAlgorithm) -> Option<Method> {
+    match algo {
+        ConvAlgorithm::Winograd { .. } => Some(Method::Winograd),
+        ConvAlgorithm::RegularFft { .. } => Some(Method::RegularFft),
+        ConvAlgorithm::GaussFft { .. } => Some(Method::GaussFft),
+        _ => None,
+    }
+}
+
+/// The plan-cache key for (algo, input shape, weights).
 ///
 /// The FNV fingerprint scan is O(|weights|) per batch — orders of
 /// magnitude below the convolution itself — and is what lets callers
 /// swap weights without a stale-plan hazard.
-#[allow(clippy::too_many_arguments)]
-fn plan_entry<'a>(
-    plans: &'a mut HashMap<PlanKey, PlanEntry>,
-    workers: usize,
-    algo: ConvAlgorithm,
-    c: usize,
-    h: usize,
-    w_sp: usize,
-    weights: &Tensor4,
-    b: usize,
-    machine: &Machine,
-    tick: u64,
-) -> &'a mut LayerPlan {
-    let key = PlanKey {
+fn make_key(algo: ConvAlgorithm, c: usize, h: usize, w_sp: usize, weights: &Tensor4) -> PlanKey {
+    PlanKey {
         algo,
         c,
         h,
@@ -126,7 +235,45 @@ fn plan_entry<'a>(
         k: weights.shape[0],
         r: weights.shape[2],
         weights_fp: weights_fingerprint(weights),
+    }
+}
+
+/// The layer shape a [`PlanKey`] serves, at batch size `b`.
+fn key_shape(key: &PlanKey, b: usize) -> LayerShape {
+    LayerShape {
+        b: b.max(1),
+        c: key.c,
+        k: key.k,
+        x: key.h.max(key.w),
+        r: key.r,
+    }
+}
+
+/// The roofline execution choice for a tiled algorithm on `machine` —
+/// this only seeds the plan's *default* mode; `run_batch` re-resolves
+/// per batch bucket through the tuning table.
+fn resolve_options(key: &PlanKey, b: usize, machine: &Machine) -> PlanOptions {
+    let method = match algo_method(key.algo) {
+        Some(m) => m,
+        None => return PlanOptions::default(),
     };
+    let m = key.algo.tile_m().expect("tiled algorithm");
+    PlanOptions {
+        exec: choose_exec(method, &key_shape(key, b), m, machine).policy,
+        fused_budget: machine.cache,
+    }
+}
+
+/// Get-or-build the cached plan for `key`.
+fn plan_entry<'a>(
+    plans: &'a mut HashMap<PlanKey, PlanEntry>,
+    workers: usize,
+    key: PlanKey,
+    weights: &Tensor4,
+    b: usize,
+    machine: &Machine,
+    tick: u64,
+) -> &'a mut LayerPlan {
     if !plans.contains_key(&key) && plans.len() >= MAX_PLANS {
         // prefer evicting this layer's outdated-weights plan; otherwise
         // drop the least-recently-used entry to stay count-bounded
@@ -151,19 +298,10 @@ fn plan_entry<'a>(
             plans.remove(&e);
         }
     }
-    let entry = plans.entry(key).or_insert_with(|| {
-        let opts = resolve_options(
-            algo,
-            c,
-            weights.shape[0],
-            h,
-            w_sp,
-            weights.shape[2],
-            b,
-            machine,
-        );
+    let entry = plans.entry(key).or_insert_with_key(|key| {
+        let opts = resolve_options(key, b, machine);
         PlanEntry {
-            plan: LayerPlan::with_options(algo, weights, h, w_sp, workers, opts),
+            plan: LayerPlan::with_options(key.algo, weights, key.h, key.w, workers, opts),
             last_used: tick,
         }
     });
@@ -171,11 +309,49 @@ fn plan_entry<'a>(
     &mut entry.plan
 }
 
+/// Get-or-seed the tuning entry for `(key, bucket)` — the seed is the
+/// roofline prediction evaluated at the bucket's batch size (a free
+/// function so callers can split-borrow the scheduler's fields).
+fn tune_entry<'a>(
+    tuning: &'a mut HashMap<TuneKey, TuneEntry>,
+    key: &PlanKey,
+    bucket: usize,
+    can_fuse: bool,
+    machine: &Machine,
+) -> &'a mut TuneEntry {
+    let method = algo_method(key.algo).expect("tiled algorithm");
+    let m = key.algo.tile_m().expect("tiled algorithm");
+    tuning
+        .entry(TuneKey {
+            plan: key.clone(),
+            bucket,
+        })
+        .or_insert_with(|| {
+            TuneEntry::seed(&choose_exec(method, &key_shape(key, bucket), m, machine), can_fuse)
+        })
+}
+
+/// Tuning-table size threshold: a plan sees roughly one entry per
+/// power-of-two batch size (~10 for batches up to 1024), so 16 per plan
+/// is headroom; past it, entries whose plan is gone (weight churn, LRU
+/// eviction) are dropped.  A table of all-live entries may legitimately
+/// exceed this — the prune is skipped until the table grows again, so a
+/// full-table scan is paid at most once per insertion beyond the
+/// threshold, never per batch.
+const MAX_TUNE_ENTRIES: usize = MAX_PLANS * 16;
+
 /// A static fork-join scheduler over a worker pool, with a persistent
 /// byte-budgeted LRU plan cache for the tiled algorithms.
 pub struct StaticScheduler {
     pool: ThreadPool,
     plans: HashMap<PlanKey, PlanEntry>,
+    /// the per-batch-bucket staged/fused resolution memo (see module docs)
+    tuning: HashMap<TuneKey, TuneEntry>,
+    /// how tuning entries are refined (analytic / measured / hybrid)
+    policy: TuningPolicy,
+    /// table size after the last dead-entry prune (skip re-scanning an
+    /// over-threshold table until it grows past this again)
+    tune_prune_len: usize,
     /// monotonic access counter driving the LRU order
     tick: u64,
     /// resident-byte ceiling across all cached plans
@@ -189,6 +365,9 @@ impl StaticScheduler {
         StaticScheduler {
             pool: ThreadPool::new(workers),
             plans: HashMap::new(),
+            tuning: HashMap::new(),
+            policy: TuningPolicy::default(),
+            tune_prune_len: 0,
             tick: 0,
             plan_budget: DEFAULT_PLAN_BUDGET,
             // nominal modern-CPU model (1MB core-exclusive cache, CMR 24)
@@ -217,9 +396,24 @@ impl StaticScheduler {
     }
 
     /// Provide the machine model that drives fused-vs-staged resolution
-    /// and fused panel sizing for plans built *after* this call.
+    /// and fused panel sizing for plans built *after* this call.  Also
+    /// clears the tuning table: its analytic seeds belonged to the old
+    /// machine.
     pub fn set_machine(&mut self, machine: Machine) {
         self.machine = machine;
+        self.tuning.clear();
+        self.tune_prune_len = 0;
+    }
+
+    /// Set how staged-vs-fused is resolved per batch bucket (see
+    /// [`TuningPolicy`]).  Takes effect on the next batch; already
+    /// settled entries keep their verdicts.
+    pub fn set_tuning_policy(&mut self, policy: TuningPolicy) {
+        self.policy = policy;
+    }
+
+    pub fn tuning_policy(&self) -> TuningPolicy {
+        self.policy
     }
 
     /// Exec mode of the cached plan serving (algo, shape, weights), if any
@@ -232,10 +426,114 @@ impl StaticScheduler {
             .map(|e| e.plan.exec_mode())
     }
 
+    /// The tuning-table entry that would serve `x`'s batch size for
+    /// (algo, shape, weights), if traffic (or a seed) created one.
+    pub fn tuning_for(&self, algo: ConvAlgorithm, x: &Tensor4, w: &Tensor4) -> Option<TuneSnapshot> {
+        let key = make_key(algo, x.shape[1], x.shape[2], x.shape[3], w);
+        let bucket = batch_bucket(x.shape[0]);
+        self.tuning
+            .get(&TuneKey { plan: key, bucket })
+            .map(|e| TuneSnapshot {
+                bucket,
+                analytic: e.analytic,
+                resolved: e.resolved,
+                staged_secs: e.staged_secs,
+                fused_secs: e.fused_secs,
+                settled: e.settled,
+            })
+    }
+
+    /// Number of settled tuning entries whose empirical winner disagrees
+    /// with the roofline seed — the "how wrong was the model" counter the
+    /// perf snapshot records.
+    pub fn tuning_disagreements(&self) -> usize {
+        self.tuning
+            .values()
+            .filter(|e| e.settled && e.resolved != e.analytic)
+            .count()
+    }
+
+    /// Total tuning-table entries (observability / tests).
+    pub fn tuning_entries(&self) -> usize {
+        self.tuning.len()
+    }
+
+    /// Feed an externally measured execution time for one (layer, batch
+    /// bucket, mode) — the operator/profiler override path, and how tests
+    /// inject deterministic timings.  `secs` is the whole-batch time for
+    /// `x`'s batch size (normalized to per-image internally).  Unlike the
+    /// feedback loop inside `run_batch`, this *always* records (even on
+    /// settled entries) and re-resolves, so a measured verdict can
+    /// overturn both the analytic seed and earlier measurements.
+    pub fn record_exec_time(
+        &mut self,
+        algo: ConvAlgorithm,
+        x: &Tensor4,
+        w: &Tensor4,
+        mode: ExecMode,
+        secs: f64,
+    ) {
+        if algo.tile_m().is_none() {
+            return;
+        }
+        let key = make_key(algo, x.shape[1], x.shape[2], x.shape[3], w);
+        let bucket = batch_bucket(x.shape[0]);
+        let can_fuse = self
+            .plans
+            .get(&key)
+            .map_or(true, |e| e.plan.can_fuse());
+        if mode == ExecMode::Fused && !can_fuse {
+            return; // a mode the plan cannot run is not actionable
+        }
+        let entry = tune_entry(&mut self.tuning, &key, bucket, can_fuse, &self.machine);
+        entry.record(mode, secs / x.shape[0].max(1) as f64);
+        entry.try_settle();
+        self.prune_tuning();
+    }
+
+    /// Consume the micro-batch staged-vs-fused verdict of
+    /// `model::select::select_measured` for a layer: the entry for
+    /// `batch_hint`'s bucket is created settled on the measured winner,
+    /// so the very first real batch at that bucket already runs it.
+    /// Other buckets still seed analytically and refine from live
+    /// traffic per the [`TuningPolicy`].
+    pub fn seed_exec_verdict(
+        &mut self,
+        algo: ConvAlgorithm,
+        weights: &Tensor4,
+        h: usize,
+        w: usize,
+        batch_hint: usize,
+        verdict: &ExecVerdict,
+    ) {
+        if algo.tile_m().is_none() {
+            return;
+        }
+        let key = make_key(algo, weights.shape[1], h, w, weights);
+        let bucket = batch_bucket(batch_hint);
+        let can_fuse = verdict.fused_secs.is_some();
+        // verdict times are whole-micro-batch seconds measured at
+        // `batch_hint` images — store per image like every other sample
+        let per = batch_hint.max(1) as f64;
+        let entry = tune_entry(&mut self.tuning, &key, bucket, can_fuse, &self.machine);
+        entry.record(ExecMode::Staged, verdict.staged_secs / per);
+        if let Some(f) = verdict.fused_secs {
+            entry.record(ExecMode::Fused, f / per);
+        }
+        entry.try_settle();
+        if !entry.settled {
+            // fusion was not runnable in the measurement: staged is final
+            entry.resolved = ExecMode::Staged;
+            entry.settled = true;
+        }
+        self.prune_tuning();
+    }
+
     /// Pre-build (and cache) the plan for a layer so the first request
     /// doesn't pay the kernel transform — called by `ConvService::register`.
     /// `batch_hint` is the nominal batch size the roofline exec choice is
-    /// made for.
+    /// made for; its bucket's tuning entry is seeded analytically here
+    /// (and refined by real traffic per the [`TuningPolicy`]).
     pub fn warm(
         &mut self,
         algo: ConvAlgorithm,
@@ -249,17 +547,23 @@ impl StaticScheduler {
         }
         let workers = self.pool.workers();
         self.tick += 1;
-        let _ = plan_entry(
+        let key = make_key(algo, weights.shape[1], h, w, weights);
+        let plan = plan_entry(
             &mut self.plans,
             workers,
-            algo,
-            weights.shape[1],
-            h,
-            w,
+            key.clone(),
             weights,
             batch_hint,
             &self.machine,
             self.tick,
+        );
+        let can_fuse = plan.can_fuse();
+        let _ = tune_entry(
+            &mut self.tuning,
+            &key,
+            batch_bucket(batch_hint),
+            can_fuse,
+            &self.machine,
         );
         self.enforce_budget();
     }
@@ -269,6 +573,11 @@ impl StaticScheduler {
     ///
     /// Zero-copy: workers write disjoint `&mut` slices of the one output
     /// tensor — no sub-batch copies, no `Mutex`.
+    ///
+    /// For tiled algorithms the execution mode (staged vs fused) is
+    /// re-resolved **per batch** through the `(plan, batch bucket)`
+    /// tuning table, so mixed batch-size traffic against one plan runs
+    /// each bucket's fast path rather than the first caller's choice.
     pub fn run_batch(&mut self, algo: ConvAlgorithm, x: &Tensor4, w: &Tensor4) -> Tensor4 {
         let [b, c, h, wd] = x.shape;
         assert_eq!(c, w.shape[1], "channel mismatch");
@@ -281,23 +590,104 @@ impl StaticScheduler {
             _ => {
                 let workers = self.pool.workers();
                 self.tick += 1;
+                let key = make_key(algo, c, h, wd, w);
                 let plan = plan_entry(
                     &mut self.plans,
                     workers,
-                    algo,
-                    c,
-                    h,
-                    wd,
+                    key.clone(),
                     w,
                     b,
                     &self.machine,
                     self.tick,
                 );
-                plan.run_into(x, &mut out, Some(&self.pool));
+                let can_fuse = plan.can_fuse();
+                let entry = tune_entry(
+                    &mut self.tuning,
+                    &key,
+                    batch_bucket(b),
+                    can_fuse,
+                    &self.machine,
+                );
+                let pool = &self.pool;
+                // Timed run with two fairness rules: the time is stored
+                // per image (entries compare samples across the up-to-2x
+                // batch-size spread within one bucket), and a run that
+                // grew the plan's scratch (arena resize + first-touch, a
+                // one-time cost) yields NO sample — cold runs never bias
+                // the verdict; the bucket's next batch provides a warm
+                // sample instead.
+                let timed = |plan: &mut LayerPlan, out: &mut Tensor4, mode: ExecMode| -> Option<f64> {
+                    let arenas_before = plan.arena_bytes();
+                    let t0 = Instant::now();
+                    plan.run_with_mode(x, out, Some(pool), mode);
+                    let dt = t0.elapsed().as_secs_f64();
+                    (plan.arena_bytes() == arenas_before).then_some(dt / b.max(1) as f64)
+                };
+                if !can_fuse && entry.resolved == ExecMode::Fused {
+                    // the verdict cannot be honored (entry seeded before
+                    // the plan existed, or the machine model changed
+                    // under a kept plan): correct the entry so what
+                    // observability reports is what actually runs
+                    entry.resolved = ExecMode::Staged;
+                    entry.settled = true;
+                }
+                if entry.settled || self.policy == TuningPolicy::Analytic {
+                    let mode = if can_fuse { entry.resolved } else { ExecMode::Staged };
+                    let _ = timed(plan, &mut out, mode);
+                } else if !can_fuse {
+                    // only one runnable pipeline: nothing to measure
+                    let _ = timed(plan, &mut out, ExecMode::Staged);
+                    entry.resolved = ExecMode::Staged;
+                    entry.settled = true;
+                } else {
+                    match self.policy {
+                        TuningPolicy::Measured => {
+                            // run both pipelines back to back (identical
+                            // output) until both have warm samples — the
+                            // bucket's first batch typically just warms
+                            // the scratch, its second settles the verdict
+                            if let Some(s) = timed(plan, &mut out, ExecMode::Staged) {
+                                entry.record(ExecMode::Staged, s);
+                            }
+                            if let Some(f) = timed(plan, &mut out, ExecMode::Fused) {
+                                entry.record(ExecMode::Fused, f);
+                            }
+                            entry.try_settle();
+                        }
+                        TuningPolicy::Hybrid => {
+                            // analytic pick until it has a warm sample,
+                            // then the alternative; settle once both do
+                            let mode = if entry.time_of(entry.analytic).is_none() {
+                                entry.analytic
+                            } else {
+                                match entry.analytic {
+                                    ExecMode::Staged => ExecMode::Fused,
+                                    ExecMode::Fused => ExecMode::Staged,
+                                }
+                            };
+                            if let Some(secs) = timed(plan, &mut out, mode) {
+                                entry.record(mode, secs);
+                                entry.try_settle();
+                            }
+                        }
+                        TuningPolicy::Analytic => unreachable!("handled above"),
+                    }
+                }
                 self.enforce_budget();
             }
         }
         out
+    }
+
+    /// Drop tuning entries whose plan is gone once the table crosses the
+    /// size threshold — and only when it has grown since the last prune,
+    /// so an all-live table never pays a rescan per batch.
+    fn prune_tuning(&mut self) {
+        if self.tuning.len() > MAX_TUNE_ENTRIES && self.tuning.len() > self.tune_prune_len {
+            let plans = &self.plans;
+            self.tuning.retain(|k, _| plans.contains_key(&k.plan));
+            self.tune_prune_len = self.tuning.len();
+        }
     }
 
     /// Byte-aware LRU enforcement: while the cache exceeds its byte
@@ -306,6 +696,7 @@ impl StaticScheduler {
     /// then — if kernel transforms alone still exceed the budget — evict
     /// whole LRU plans, always keeping the most recent one.
     fn enforce_budget(&mut self) {
+        self.prune_tuning();
         loop {
             let total: usize = self.plans.values().map(|e| e.plan.resident_bytes()).sum();
             if total <= self.plan_budget {
@@ -562,6 +953,110 @@ mod tests {
             s2.plan_exec_mode(algo, &x, &w),
             Some(crate::conv::ExecMode::Staged)
         );
+    }
+
+    fn small_fusable_layer() -> (Tensor4, Tensor4, ConvAlgorithm) {
+        // small-channel layer the xeon-gold roofline predicts Fused for
+        let x = Tensor4::random([2, 8, 20, 20], 57);
+        let w = Tensor4::random([8, 8, 3, 3], 58);
+        (x, w, ConvAlgorithm::RegularFft { m: 6 })
+    }
+
+    #[test]
+    fn batch_bucket_rounds_up_to_pow2() {
+        assert_eq!(batch_bucket(0), 1);
+        assert_eq!(batch_bucket(1), 1);
+        assert_eq!(batch_bucket(3), 4);
+        assert_eq!(batch_bucket(4), 4);
+        assert_eq!(batch_bucket(33), 64);
+    }
+
+    #[test]
+    fn analytic_policy_seeds_but_never_measures() {
+        let (x, w, algo) = small_fusable_layer();
+        let mut s = StaticScheduler::new(2);
+        let _ = s.run_batch(algo, &x, &w);
+        let snap = s.tuning_for(algo, &x, &w).expect("entry seeded");
+        assert_eq!(snap.bucket, 2);
+        assert_eq!(snap.analytic, ExecMode::Fused);
+        assert_eq!(snap.resolved, ExecMode::Fused);
+        assert!(snap.staged_secs.is_none() && snap.fused_secs.is_none());
+        assert!(!snap.settled);
+        assert_eq!(s.tuning_disagreements(), 0);
+    }
+
+    #[test]
+    fn measured_policy_settles_once_samples_are_warm() {
+        let (x, w, algo) = small_fusable_layer();
+        let mut s = StaticScheduler::new(2);
+        s.set_tuning_policy(TuningPolicy::Measured);
+        // batch 1 grows both variants' scratch (cold: no samples)...
+        let got = s.run_batch(algo, &x, &w);
+        let snap = s.tuning_for(algo, &x, &w).expect("entry");
+        assert!(!snap.settled, "cold runs must not decide the verdict");
+        assert!(snap.staged_secs.is_none() && snap.fused_secs.is_none());
+        // ...batch 2 is warm on both pipelines and settles the bucket
+        let got2 = s.run_batch(algo, &x, &w);
+        let snap = s.tuning_for(algo, &x, &w).expect("entry");
+        assert!(snap.settled, "warm double-run settles");
+        let (ss, fs) = (snap.staged_secs.unwrap(), snap.fused_secs.unwrap());
+        let faster = if fs < ss { ExecMode::Fused } else { ExecMode::Staged };
+        assert_eq!(snap.resolved, faster);
+        // the double-run batches are still correct convolutions, and the
+        // next batch runs single-mode off the memo
+        let want = direct::naive(&x, &w);
+        let again = s.run_batch(algo, &x, &w);
+        for out in [&got, &got2, &again] {
+            assert!(out.max_abs_diff(&want) < 2e-3 * want.max_abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn hybrid_policy_explores_alternative_then_settles() {
+        let (x, w, algo) = small_fusable_layer();
+        let mut s = StaticScheduler::new(2);
+        s.set_tuning_policy(TuningPolicy::Hybrid);
+        let want = direct::naive(&x, &w);
+        // analytic pick until warm-sampled, then the alternative, then
+        // settled: at most 2 cold + 2 warm batches for this fresh plan
+        let mut settled_at = None;
+        for i in 0..6 {
+            let out = s.run_batch(algo, &x, &w);
+            assert!(out.max_abs_diff(&want) < 2e-3 * want.max_abs().max(1.0));
+            let snap = s.tuning_for(algo, &x, &w).unwrap();
+            if snap.settled {
+                settled_at = Some(i);
+                break;
+            }
+        }
+        let snap = s.tuning_for(algo, &x, &w).unwrap();
+        assert!(settled_at.is_some(), "hybrid never settled");
+        assert!(settled_at.unwrap() >= 1, "cold batches cannot settle");
+        assert!(snap.staged_secs.is_some() && snap.fused_secs.is_some());
+        // once settled, serving continues on the winner
+        let out = s.run_batch(algo, &x, &w);
+        assert!(out.max_abs_diff(&want) < 2e-3 * want.max_abs().max(1.0));
+    }
+
+    #[test]
+    fn injected_timings_override_the_analytic_seed() {
+        let (x, w, algo) = small_fusable_layer();
+        let mut s = StaticScheduler::new(2);
+        s.set_tuning_policy(TuningPolicy::Hybrid);
+        let _ = s.run_batch(algo, &x, &w);
+        assert_eq!(s.tuning_for(algo, &x, &w).unwrap().analytic, ExecMode::Fused);
+        // external measurement says the model is wrong at this bucket
+        s.record_exec_time(algo, &x, &w, ExecMode::Staged, 1e-9);
+        s.record_exec_time(algo, &x, &w, ExecMode::Fused, 1.0);
+        let snap = s.tuning_for(algo, &x, &w).unwrap();
+        assert!(snap.settled);
+        assert_eq!(snap.resolved, ExecMode::Staged, "measurement overrides");
+        assert_eq!(s.tuning_disagreements(), 1);
+        // the next batch serves the overridden mode and stays correct
+        let got = s.run_batch(algo, &x, &w);
+        let want = direct::naive(&x, &w);
+        assert!(got.max_abs_diff(&want) < 2e-3 * want.max_abs().max(1.0));
+        assert_eq!(s.tuning_for(algo, &x, &w).unwrap().resolved, ExecMode::Staged);
     }
 
     #[test]

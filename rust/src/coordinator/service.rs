@@ -5,11 +5,12 @@
 use super::batcher::{Batch, Batcher};
 use super::metrics::Metrics;
 use super::request::{validate, ConvRequest, ConvResponse};
-use super::scheduler::StaticScheduler;
+use super::scheduler::{StaticScheduler, TuningPolicy};
 use crate::conv::{ConvAlgorithm, ConvProblem, Tensor4};
 use crate::model::machine::Machine;
-use crate::model::select::select;
-use crate::model::stages::{LayerShape, Method};
+use crate::model::select::{method_algo, select, select_measured};
+use crate::model::stages::LayerShape;
+use crate::util::threadpool::ThreadPool;
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
@@ -75,20 +76,66 @@ impl ConvService {
 
     /// Register a layer, letting the Roofline model pick (method, tile).
     pub fn register(&mut self, name: &str, problem: ConvProblem, weights: Tensor4) {
-        let shape = LayerShape {
+        let choice = select(&Self::problem_shape(&problem), &self.machine);
+        let algo = method_algo(choice.method, choice.m);
+        self.register_with_algo(name, problem, weights, algo);
+    }
+
+    /// Register a layer by *measurement*: run the roofline shortlist on
+    /// the native engine (`model::select::select_measured`), pick the
+    /// empirically fastest (method, m), and seed the scheduler's tuning
+    /// table with a measured staged-vs-fused verdict for the layer's
+    /// nominal batch bucket, so the first real batch there already runs
+    /// the empirical winner.
+    ///
+    /// Worth it for long-lived layers: registration pays a few extra
+    /// layer executions (the shortlist on a scaled-down micro-batch,
+    /// plus two execution-mode timings at the *nominal* batch size — the
+    /// staged-vs-fused winner flips with batch, so the verdict must be
+    /// measured at the size it will serve) to never serve a mispredicted
+    /// configuration.  Short-lived or latency-critical registrations
+    /// should prefer [`ConvService::register`] plus
+    /// [`TuningPolicy::Hybrid`], which spreads the measurement over the
+    /// first real batches instead.
+    pub fn register_measured(&mut self, name: &str, problem: ConvProblem, weights: Tensor4) {
+        let shape = Self::problem_shape(&problem);
+        // measure under the serving pool shape: fork-join overheads and
+        // per-worker cache pressure are part of what decides the winner
+        let pool = ThreadPool::new(self.scheduler.workers());
+        // the (method, m) ranking runs on a scaled-down micro-batch; the
+        // exec verdict is measured at shape.b (the nominal batch) inside
+        // select_measured, matching the bucket seeded below
+        let micro = problem.batch.clamp(1, 8);
+        let mc = select_measured(&shape, &self.machine, 3, micro, Some(&pool));
+        let algo = method_algo(mc.choice.method, mc.choice.m);
+        self.scheduler
+            .seed_exec_verdict(algo, &weights, problem.h, problem.w, problem.batch, &mc.exec);
+        self.register_with_algo(name, problem, weights, algo);
+    }
+
+    /// Set how the scheduler resolves staged-vs-fused per batch bucket.
+    pub fn set_tuning_policy(&mut self, policy: TuningPolicy) {
+        self.scheduler.set_tuning_policy(policy);
+    }
+
+    pub fn tuning_policy(&self) -> TuningPolicy {
+        self.scheduler.tuning_policy()
+    }
+
+    /// Scheduler observability passthrough: settled tuning entries whose
+    /// empirical winner disagrees with the roofline seed.
+    pub fn tuning_disagreements(&self) -> usize {
+        self.scheduler.tuning_disagreements()
+    }
+
+    fn problem_shape(problem: &ConvProblem) -> LayerShape {
+        LayerShape {
             b: problem.batch.max(1),
             c: problem.c_in,
             k: problem.c_out,
             x: problem.h.max(problem.w),
             r: problem.r,
-        };
-        let choice = select(&shape, &self.machine);
-        let algo = match choice.method {
-            Method::Winograd => ConvAlgorithm::Winograd { m: choice.m },
-            Method::RegularFft => ConvAlgorithm::RegularFft { m: choice.m },
-            Method::GaussFft => ConvAlgorithm::GaussFft { m: choice.m },
-        };
-        self.register_with_algo(name, problem, weights, algo);
+        }
     }
 
     pub fn layer(&self, name: &str) -> Option<&LayerEntry> {
@@ -261,6 +308,25 @@ mod tests {
         assert!(svc
             .submit(ConvRequest::new(2, "conv1", Tensor4::zeros([1, 2, 12, 12])))
             .is_err());
+    }
+
+    #[test]
+    fn register_measured_seeds_tuning_and_serves_correctly() {
+        let mut svc = service(2);
+        svc.set_tuning_policy(TuningPolicy::Hybrid);
+        assert_eq!(svc.tuning_policy(), TuningPolicy::Hybrid);
+        let w = Tensor4::random(problem().weight_shape(), 55);
+        svc.register_measured("conv1", problem(), w.clone());
+        let algo = svc.layer("conv1").unwrap().algo;
+        assert!(algo.tile_m().is_some(), "measured pick is a tiled method");
+        let x = Tensor4::random([1, 3, 12, 12], 72);
+        svc.submit(ConvRequest::new(9, "conv1", x.clone())).unwrap();
+        let rs = svc.flush();
+        assert_eq!(rs.len(), 1);
+        let want = direct::naive(&x, &w);
+        assert!(rs[0].output.max_abs_diff(&want) < 2e-3 * want.max_abs().max(1.0));
+        // the disagreement counter is servable regardless of the verdict
+        let _ = svc.tuning_disagreements();
     }
 
     #[test]

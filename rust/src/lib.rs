@@ -12,8 +12,16 @@
 //! * **Layer 3 (this crate)** — the runtime: a PJRT-based executor for the
 //!   AOT artifacts, a native-rust convolution engine implementing all three
 //!   algorithms (plus direct convolution and naive baselines), the paper's
-//!   Roofline analytical model, a model-driven algorithm autotuner, and a
-//!   static-scheduling coordinator that serves convolution requests.
+//!   Roofline analytical model, a model-driven **and measured** algorithm
+//!   autotuner (roofline-seeded, timing-refined; see
+//!   `model::select`), and a static-scheduling coordinator that serves
+//!   convolution requests, re-resolving each layer's staged-vs-fused
+//!   execution per batch-size bucket (`coordinator::scheduler`).
+//!
+//! A guided tour of the serving path — `ConvService` → `StaticScheduler`
+//! → `LayerPlan` → the staged/fused pipelines → `ThreadPool` — with the
+//! `U`/`V`/`Z` data-flow diagrams and the module-to-paper-section map
+//! lives in `docs/ARCHITECTURE.md` at the repository root.
 //!
 //! The crate also contains every substrate the paper depends on, built from
 //! scratch: a Cook–Toom/Winograd transform-matrix generator over exact

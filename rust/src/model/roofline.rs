@@ -5,6 +5,28 @@
 //! (Eqn. 9); relative performance of two methods is the ratio of totals
 //! (Eqn. 10) and — as the paper emphasizes — depends only on the
 //! machine's CMR and cache size, not its absolute speed.
+//!
+//! ## Who consumes these estimates
+//!
+//! * [`best_tile`] / [`layer_time`] feed `model::select::select` (the
+//!   method + tile chooser) and every figure/table of the harness.
+//! * [`fused_layer_time`] vs [`staged_exec_time`] is the *execution
+//!   shape* comparison behind `model::select::choose_exec`: the staged
+//!   pipeline pays Eqn. 9's stage sum (input, element-wise, output; the
+//!   kernel stage is plan-cached on both sides and excluded), the fused
+//!   pipeline pays Eqn. 8 once over the whole pass because L3 fusion
+//!   keeps the `U`/`Z` intermediates cache-resident.
+//! * These predictions are only the **seed** of the scheduler's
+//!   per-batch-bucket tuning table: under `TuningPolicy::Measured` /
+//!   `Hybrid` the scheduler replaces them with timings of the real
+//!   pipelines (`model::select::measure_exec`, or feedback from served
+//!   batches) — the model explains, the machine decides.
+//!
+//! Batch size matters: both `dm` terms scale with `b`, and the fused
+//! estimate's `V`-streaming amortization changes with the panel count,
+//! so the staged-vs-fused winner can flip between batch sizes of the
+//! *same* layer.  That is why the scheduler keys its table on
+//! `(plan, batch bucket)` rather than per plan.
 
 use super::machine::Machine;
 use super::stages::{layer_model, LayerShape, Method};

@@ -1,17 +1,45 @@
-//! Model-driven algorithm + tile selection (the autotuner).
+//! Model-driven algorithm + tile + execution-mode selection (the
+//! autotuner).
 //!
 //! Given a layer and a machine, pick the (method, m) minimizing the
 //! Eqn. 9 predicted time.  Optionally refine with on-host measurement
 //! ("measure mode"): run the shortlisted candidates through the native
 //! engine and keep the empirically fastest — the paper's protocol for
 //! choosing per-layer configurations (§5.1).
+//!
+//! ## The selection contract
+//!
+//! Three selectors live here, at increasing cost and trust:
+//!
+//! * [`select`] — pure roofline, picks (method, m).  Called by
+//!   `ConvService::register` when a layer arrives without an explicit
+//!   algorithm.
+//! * [`choose_exec`] — pure roofline, picks staged-vs-fused for a fixed
+//!   (method, m).  Called by `StaticScheduler` to **seed** every
+//!   `(plan, batch-bucket)` entry of its tuning table; under
+//!   `TuningPolicy::Analytic` the seed is final, under `Measured` /
+//!   `Hybrid` it is only the starting point and empirical timings
+//!   override it (see [`measure_exec`]).
+//! * [`select_measured`] — times the roofline shortlist on the native
+//!   engine and *also* times staged-vs-fused for the winner on a
+//!   representative micro-batch, returning a [`MeasuredChoice`] whose
+//!   [`ExecVerdict`] the scheduler can consume directly
+//!   (`StaticScheduler::seed_exec_verdict`).  Called by
+//!   `ConvService::register_measured`.
+//!
+//! Measurement always wins over prediction when both exist: the paper's
+//! own point is that FLOP counts (and any analytic model) only *explain*
+//! performance — the machine decides it.
 
 use super::machine::Machine;
 use super::roofline::{
     best_tile, fused_layer_time, layer_time, staged_exec_time, winograd_max_m, FFT_MAX_M,
 };
 use super::stages::{LayerShape, Method};
-use crate::conv::{run, ConvAlgorithm, ExecPolicy, Tensor4};
+use crate::conv::{
+    run, ConvAlgorithm, ExecMode, ExecPolicy, LayerPlan, PlanOptions, Tensor4,
+};
+use crate::util::threadpool::ThreadPool;
 use std::time::Instant;
 
 /// A scored configuration.
@@ -60,6 +88,111 @@ pub fn choose_exec(method: Method, l: &LayerShape, m: usize, machine: &Machine) 
         staged_time,
         fused_time: f.time,
         pb: f.pb,
+    }
+}
+
+/// The tiled [`ConvAlgorithm`] for a (method, m) pair.
+pub fn method_algo(method: Method, m: usize) -> ConvAlgorithm {
+    match method {
+        Method::Winograd => ConvAlgorithm::Winograd { m },
+        Method::RegularFft => ConvAlgorithm::RegularFft { m },
+        Method::GaussFft => ConvAlgorithm::GaussFft { m },
+    }
+}
+
+/// An *empirical* staged-vs-fused verdict for one (method, layer, m):
+/// the roofline prediction next to what a real micro-batch measured.
+#[derive(Clone, Copy, Debug)]
+pub struct ExecVerdict {
+    /// the analytic [`choose_exec`] prediction this verdict tests
+    pub analytic: ExecChoice,
+    /// measured seconds of the staged pipeline
+    pub staged_secs: f64,
+    /// measured seconds of the fused pipeline (None when no panel fits
+    /// the machine's cache budget — fusion was not runnable)
+    pub fused_secs: Option<f64>,
+    /// the empirically faster mode — what a measurement-trusting
+    /// scheduler should run
+    pub measured: ExecMode,
+}
+
+impl ExecVerdict {
+    /// Did the measurement agree with the roofline prediction?
+    pub fn agrees(&self) -> bool {
+        let predicted = match self.analytic.policy {
+            ExecPolicy::Fused => ExecMode::Fused,
+            _ => ExecMode::Staged,
+        };
+        predicted == self.measured
+    }
+}
+
+/// Time the staged and fused pipelines of one (method, layer, m) on a
+/// `batch`-image micro-batch of random data, and return the verdict
+/// against the [`choose_exec`] prediction.
+///
+/// One plan serves both timings, so the kernel transform is shared and
+/// excluded from both sides — the same accounting as the analytic
+/// comparison (the plan cache amortizes it in production).  Each mode
+/// gets one untimed warm-up run (scratch growth + first-touch) before
+/// the timed run, so the numbers reflect the steady serving state.
+/// `pool` parallelizes the runs; pass the serving pool shape for
+/// representative fork-join overheads, or `None` to time serially.
+pub fn measure_exec(
+    method: Method,
+    l: &LayerShape,
+    m: usize,
+    machine: &Machine,
+    batch: usize,
+    pool: Option<&ThreadPool>,
+) -> ExecVerdict {
+    // the prediction under test is evaluated at the batch size actually
+    // measured — the staged-vs-fused winner flips with batch, so an
+    // `agrees()` across different batch sizes would be meaningless
+    let lb = LayerShape {
+        b: batch.max(1),
+        ..*l
+    };
+    let analytic = choose_exec(method, &lb, m, machine);
+    let algo = method_algo(method, m);
+    let x = Tensor4::random([batch.max(1), l.c, l.x, l.x], 0xACE1);
+    let w = Tensor4::random([l.k, l.c, l.r, l.r], 0xACE2);
+    let workers = pool.map_or(1, |p| p.workers());
+    let mut plan = LayerPlan::with_options(
+        algo,
+        &w,
+        l.x,
+        l.x,
+        workers,
+        PlanOptions {
+            exec: ExecPolicy::Auto,
+            fused_budget: machine.cache,
+        },
+    );
+    let mut out = Tensor4::zeros(plan.output_shape(x.shape[0]));
+    let time_mode = |plan: &mut LayerPlan, mode: ExecMode, out: &mut Tensor4| -> f64 {
+        plan.run_with_mode(&x, out, pool, mode); // warm-up: grow scratch
+        let t0 = Instant::now();
+        plan.run_with_mode(&x, out, pool, mode);
+        let dt = t0.elapsed().as_secs_f64();
+        std::hint::black_box(&out.data);
+        dt
+    };
+    let staged_secs = time_mode(&mut plan, ExecMode::Staged, &mut out);
+    let fused_secs = if plan.can_fuse() {
+        Some(time_mode(&mut plan, ExecMode::Fused, &mut out))
+    } else {
+        None
+    };
+    let measured = match fused_secs {
+        Some(f) if f < staged_secs => ExecMode::Fused,
+        _ => ExecMode::Staged,
+    };
+    ExecVerdict {
+        analytic,
+        staged_secs,
+        fused_secs,
+        measured,
     }
 }
 
@@ -120,24 +253,43 @@ pub fn shortlist(l: &LayerShape, machine: &Machine, top: usize) -> Vec<Choice> {
     all
 }
 
+/// A measure-mode selection result: the empirically fastest (method, m)
+/// plus the staged-vs-fused [`ExecVerdict`] for that winner.
+#[derive(Clone, Copy, Debug)]
+pub struct MeasuredChoice {
+    pub choice: Choice,
+    pub exec: ExecVerdict,
+}
+
 /// Measure-mode refinement: run the shortlist on the native engine with a
-/// scaled-down batch and keep the fastest (ties broken by the model).
-pub fn select_measured(l: &LayerShape, machine: &Machine, top: usize, batch: usize) -> Choice {
+/// scaled-down `batch` and keep the fastest (ties broken by the model) —
+/// the (method, m) *ranking* tolerates a micro-batch — then time the
+/// winner's staged and fused pipelines at the layer's **nominal** batch
+/// size `l.b`, because the execution-mode winner flips with batch and
+/// the verdict must be measured at the size it will serve.  The
+/// scheduler consumes the verdict via
+/// `StaticScheduler::seed_exec_verdict`.  Pass the serving pool so the
+/// exec timings see representative fork-join overheads (`None` times
+/// serially — fine for the ranking, but a serial staged-vs-fused
+/// verdict can differ from the parallel one).
+pub fn select_measured(
+    l: &LayerShape,
+    machine: &Machine,
+    top: usize,
+    batch: usize,
+    pool: Option<&ThreadPool>,
+) -> MeasuredChoice {
     let mut cands = shortlist(l, machine, top);
     let x = Tensor4::random([batch, l.c, l.x, l.x], 0xBEEF);
     let w = Tensor4::random([l.k, l.c, l.r, l.r], 0xFEED);
     for cand in cands.iter_mut() {
-        let algo = match cand.method {
-            Method::Winograd => ConvAlgorithm::Winograd { m: cand.m },
-            Method::RegularFft => ConvAlgorithm::RegularFft { m: cand.m },
-            Method::GaussFft => ConvAlgorithm::GaussFft { m: cand.m },
-        };
+        let algo = method_algo(cand.method, cand.m);
         let t0 = Instant::now();
         let out = run(algo, &x, &w);
         cand.measured = Some(t0.elapsed().as_secs_f64());
         std::hint::black_box(&out);
     }
-    cands
+    let choice = cands
         .into_iter()
         .min_by(|a, b| {
             a.measured
@@ -145,7 +297,9 @@ pub fn select_measured(l: &LayerShape, machine: &Machine, top: usize, batch: usi
                 .partial_cmp(&b.measured.unwrap())
                 .unwrap()
         })
-        .unwrap()
+        .unwrap();
+    let exec = measure_exec(choice.method, l, choice.m, machine, l.b.max(1), pool);
+    MeasuredChoice { choice, exec }
 }
 
 #[cfg(test)]
@@ -219,7 +373,59 @@ mod tests {
 
     #[test]
     fn measured_mode_runs_and_picks_one() {
-        let c = select_measured(&small_layer(), &xeon_gold(), 3, 1);
-        assert!(c.measured.unwrap() > 0.0);
+        let mc = select_measured(&small_layer(), &xeon_gold(), 3, 1, None);
+        assert!(mc.choice.measured.unwrap() > 0.0);
+        // the exec verdict timed at least the staged pipeline, and its
+        // winner is consistent with the recorded timings
+        assert!(mc.exec.staged_secs > 0.0);
+        match mc.exec.fused_secs {
+            Some(f) => {
+                assert!(f > 0.0);
+                let faster = if f < mc.exec.staged_secs {
+                    ExecMode::Fused
+                } else {
+                    ExecMode::Staged
+                };
+                assert_eq!(mc.exec.measured, faster);
+            }
+            None => assert_eq!(mc.exec.measured, ExecMode::Staged),
+        }
+    }
+
+    #[test]
+    fn measure_exec_times_both_modes_when_feasible() {
+        // small-channel layer on xeon gold: a panel fits, so both
+        // pipelines must be timed and the verdict's agreement check is
+        // well-defined either way
+        let l = LayerShape {
+            b: 2,
+            c: 8,
+            k: 8,
+            x: 20,
+            r: 3,
+        };
+        let v = measure_exec(Method::RegularFft, &l, 6, &xeon_gold(), 2, None);
+        assert_eq!(v.analytic.policy, ExecPolicy::Fused);
+        assert!(v.fused_secs.is_some(), "panel fits: fused must be timed");
+        let _ = v.agrees();
+    }
+
+    #[test]
+    fn measure_exec_reports_infeasible_fusion() {
+        // deep input channels: no panel fits 1MB — staged wins by default
+        // and the verdict records that fusion was not runnable.  (b=1 and
+        // k=8 keep the kernel transform and timing runs test-cheap.)
+        let l = LayerShape {
+            b: 1,
+            c: 512,
+            k: 8,
+            x: 12,
+            r: 3,
+        };
+        let v = measure_exec(Method::RegularFft, &l, 6, &xeon_gold(), 1, None);
+        assert!(v.fused_secs.is_none());
+        assert_eq!(v.measured, ExecMode::Staged);
+        assert_eq!(v.analytic.policy, ExecPolicy::Staged);
+        assert!(v.agrees());
     }
 }

@@ -1,0 +1,172 @@
+//! The measured-autotuning contract, end to end: one `LayerPlan` serves
+//! every batch size, but the staged-vs-fused execution mode is
+//! re-resolved per batch *bucket* through the scheduler's tuning table —
+//! seeded by the roofline prediction, overridden by empirical timings.
+//! (ISSUE 3 acceptance: a plan first exercised at batch 1 and then
+//! served at batch 64 re-resolves its exec mode per bucket; a measured
+//! winner overrides a wrong analytic prediction; both-variant plans trim
+//! under `set_plan_budget` without losing the shared kernel transform.)
+
+use fftconv::conv::{direct, ConvAlgorithm, ExecMode, Tensor4};
+use fftconv::coordinator::{batch_bucket, StaticScheduler, TuningPolicy};
+use fftconv::model::machine::Machine;
+
+/// A small-channel layer every 1MB-cache machine model fuses happily.
+const ALGO: ConvAlgorithm = ConvAlgorithm::RegularFft { m: 6 };
+
+fn layer_weights(seed: u64) -> Tensor4 {
+    Tensor4::random([8, 8, 3, 3], seed)
+}
+
+fn batch(b: usize, seed: u64) -> Tensor4 {
+    Tensor4::random([b, 8, 20, 20], seed)
+}
+
+fn assert_close(got: &Tensor4, x: &Tensor4, w: &Tensor4, what: &str) {
+    let want = direct::naive(x, w);
+    assert!(
+        got.max_abs_diff(&want) < 2e-3 * want.max_abs().max(1.0),
+        "{what}: wrong convolution"
+    );
+}
+
+#[test]
+fn one_plan_resolves_independently_per_batch_bucket() {
+    let w = layer_weights(300);
+    let mut s = StaticScheduler::new(2);
+    s.set_tuning_policy(TuningPolicy::Hybrid);
+
+    // exercise the same layer at batch 1, 4 and 64: one plan, three
+    // independent tuning entries
+    let (x1, x4, x64) = (batch(1, 301), batch(4, 302), batch(64, 303));
+    for (x, tag) in [(&x1, "b=1"), (&x4, "b=4"), (&x64, "b=64")] {
+        let got = s.run_batch(ALGO, x, &w);
+        assert_close(&got, x, &w, tag);
+    }
+    assert_eq!(s.cached_plans(), 1, "one plan serves every batch size");
+    assert_eq!(s.tuning_entries(), 3, "one tuning entry per bucket");
+    for (x, bucket) in [(&x1, 1usize), (&x4, 4), (&x64, 64)] {
+        assert_eq!(s.tuning_for(ALGO, x, &w).unwrap().bucket, bucket);
+        assert_eq!(batch_bucket(x.shape[0]), bucket);
+    }
+
+    // feed opposite external verdicts into the edge buckets: latency
+    // traffic (b=1) measures staged faster, throughput traffic (b=64)
+    // measures fused faster — the middle bucket must be untouched
+    let before_b4 = s.tuning_for(ALGO, &x4, &w).unwrap();
+    s.record_exec_time(ALGO, &x1, &w, ExecMode::Staged, 1e-9);
+    s.record_exec_time(ALGO, &x1, &w, ExecMode::Fused, 1.0);
+    s.record_exec_time(ALGO, &x64, &w, ExecMode::Staged, 1.0);
+    s.record_exec_time(ALGO, &x64, &w, ExecMode::Fused, 1e-9);
+    assert_eq!(s.tuning_for(ALGO, &x1, &w).unwrap().resolved, ExecMode::Staged);
+    assert_eq!(s.tuning_for(ALGO, &x64, &w).unwrap().resolved, ExecMode::Fused);
+    let after_b4 = s.tuning_for(ALGO, &x4, &w).unwrap();
+    assert_eq!(before_b4.resolved, after_b4.resolved);
+    assert_eq!(before_b4.staged_secs, after_b4.staged_secs);
+    assert_eq!(before_b4.fused_secs, after_b4.fused_secs);
+
+    // the same plan now serves different exec modes by batch size alone
+    for (x, tag) in [(&x1, "b=1 staged"), (&x64, "b=64 fused")] {
+        let got = s.run_batch(ALGO, x, &w);
+        assert_close(&got, x, &w, tag);
+    }
+    assert_eq!(s.cached_plans(), 1, "re-resolution never forked the plan");
+}
+
+#[test]
+fn measured_winner_overrides_wrong_analytic_prediction() {
+    // a synthetic machine whose roofline confidently fuses this layer
+    let machine = Machine::new("synthetic-fuser", 4, 2000.0, 512, 1 << 20, 80.0);
+    let w = layer_weights(310);
+    let x = batch(2, 311);
+    let mut s = StaticScheduler::new(2);
+    s.set_machine(machine);
+    s.set_tuning_policy(TuningPolicy::Hybrid);
+    let got = s.run_batch(ALGO, &x, &w);
+    assert_close(&got, &x, &w, "seed batch");
+    let snap = s.tuning_for(ALGO, &x, &w).unwrap();
+    assert_eq!(snap.analytic, ExecMode::Fused, "the model predicts fused");
+
+    // ground truth (stand-in for a real profiler): staged is faster here
+    s.record_exec_time(ALGO, &x, &w, ExecMode::Staged, 1e-9);
+    s.record_exec_time(ALGO, &x, &w, ExecMode::Fused, 1.0);
+
+    let snap = s.tuning_for(ALGO, &x, &w).unwrap();
+    assert!(snap.settled);
+    assert_eq!(snap.resolved, ExecMode::Staged, "measurement beats model");
+    assert_eq!(snap.analytic, ExecMode::Fused, "the seed is kept for audit");
+    assert_eq!(s.tuning_disagreements(), 1);
+    let got = s.run_batch(ALGO, &x, &w);
+    assert_close(&got, &x, &w, "post-override batch");
+}
+
+#[test]
+fn measured_policy_times_both_pipelines_and_settles_warm() {
+    let w = layer_weights(320);
+    let x = batch(4, 321);
+    let mut s = StaticScheduler::new(2);
+    s.set_tuning_policy(TuningPolicy::Measured);
+    // batch 1 of the bucket grows scratch — cold runs record no sample
+    let got = s.run_batch(ALGO, &x, &w);
+    assert_close(&got, &x, &w, "cold double-run batch");
+    assert!(!s.tuning_for(ALGO, &x, &w).unwrap().settled);
+    // batch 2 is warm on both pipelines: verdict settles
+    let got = s.run_batch(ALGO, &x, &w);
+    assert_close(&got, &x, &w, "warm double-run batch");
+    let snap = s.tuning_for(ALGO, &x, &w).unwrap();
+    assert!(snap.settled, "measured settles once samples are warm");
+    let (ss, fs) = (snap.staged_secs.unwrap(), snap.fused_secs.unwrap());
+    assert!(ss > 0.0 && fs > 0.0);
+    let faster = if fs < ss { ExecMode::Fused } else { ExecMode::Staged };
+    assert_eq!(snap.resolved, faster, "verdict is the measured argmin");
+    // a second, smaller bucket reuses the already-grown scratch, so its
+    // very first batch is warm and settles immediately
+    let x1 = batch(1, 322);
+    let got = s.run_batch(ALGO, &x1, &w);
+    assert_close(&got, &x1, &w, "second bucket");
+    assert!(s.tuning_for(ALGO, &x1, &w).unwrap().settled);
+    assert_eq!(s.tuning_entries(), 2);
+}
+
+#[test]
+fn both_variant_plans_trim_under_budget_without_losing_kernel() {
+    // Measured policy grows *both* variants' scratch on each plan (the
+    // first bucket batch runs staged and fused back to back), so budget
+    // enforcement must trim staged arenas and fused panels while the
+    // kernel transform — shared by both variants — survives and keeps
+    // the plan servable without a rebuild.
+    let x = Tensor4::random([2, 3, 16, 16], 330);
+    let w1 = Tensor4::random([4, 3, 3, 3], 331);
+    let w2 = Tensor4::random([4, 3, 3, 3], 332);
+    let algo = ConvAlgorithm::RegularFft { m: 4 };
+    let mut s = StaticScheduler::new(2);
+    s.set_tuning_policy(TuningPolicy::Measured);
+    // two batches per layer: the first grows both variants' scratch,
+    // the second records warm samples and settles each verdict
+    let a1 = s.run_batch(algo, &x, &w1);
+    let a1b = s.run_batch(algo, &x, &w1);
+    let a2 = s.run_batch(algo, &x, &w2);
+    let a2b = s.run_batch(algo, &x, &w2);
+    assert_eq!(s.cached_plans(), 2);
+    let full = s.plan_bytes();
+
+    // a budget below the two full working sets but above the kernel
+    // transforms: LRU arenas (both variants) trim, no plan is evicted
+    s.set_plan_budget(full / 2);
+    let b2 = s.run_batch(algo, &x, &w2);
+    assert_eq!(s.cached_plans(), 2, "trim must precede eviction");
+    assert!(s.plan_bytes() < full, "enforcement freed droppable scratch");
+    // settled verdicts survive the trim (the tuning table is not scratch)
+    assert!(s.tuning_for(algo, &x, &w1).unwrap().settled);
+    assert!(s.tuning_for(algo, &x, &w2).unwrap().settled);
+
+    // the trimmed plan regrows its scratch transparently and still
+    // serves the settled mode correctly
+    let b1 = s.run_batch(algo, &x, &w1);
+    assert_close(&a1, &x, &w1, "pre-trim w1 (cold)");
+    assert_close(&a1b, &x, &w1, "pre-trim w1 (warm)");
+    assert_close(&a2, &x, &w2, "pre-trim w2 (cold)");
+    assert_close(&a2b, &x, &w2, "pre-trim w2 (warm)");
+    assert_close(&b1, &x, &w1, "post-trim w1");
+    assert_close(&b2, &x, &w2, "post-trim w2");
+}

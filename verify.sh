@@ -17,12 +17,17 @@ fi
 
 if [[ "${1:-}" != "--quick" ]]; then
     # regenerates rust/BENCH_hotpaths.json (the perf trajectory record:
-    # VGG-layer single-thread vs stage-parallel, plan cold vs warm, and
-    # fused vs staged pipelines with predicted DRAM traffic per mode)
+    # VGG-layer single-thread vs stage-parallel, plan cold vs warm, fused
+    # vs staged pipelines with predicted DRAM traffic per mode, and the
+    # measured-autotuning "tuning" block — analytic vs measured exec pick
+    # and disagreement count; schema in docs/ARCHITECTURE.md)
     cargo bench --bench micro_hotpaths
     if [[ -f BENCH_hotpaths.json ]]; then
         echo "---- fused vs staged summary (BENCH_hotpaths.json) ----"
         grep -E '"(vgg|alexnet)_(staged_ms|fused_ms|fused_speedup|pred_staged_bytes|pred_fused_bytes|panel_tiles|exec_selected)"' \
             BENCH_hotpaths.json || true
+        echo "---- tuning: analytic vs measured exec pick ----"
+        grep -E '"(analytic|measured|agree|disagreements|staged_ms|fused_ms)"' \
+            BENCH_hotpaths.json | tail -12 || true
     fi
 fi
