@@ -13,7 +13,7 @@
 use fftconv::conv::{
     self, ConvAlgorithm, ConvProblem, ExecPolicy, LayerPlan, PlanOptions, Tensor4,
 };
-use fftconv::coordinator::{StaticScheduler, TuningPolicy};
+use fftconv::coordinator::{DecayPolicy, StaticScheduler, TuningPolicy};
 use std::time::Instant;
 
 fn main() {
@@ -126,5 +126,27 @@ fn main() {
     println!(
         "model overruled on {} bucket(s) by measurement",
         sched.tuning_disagreements()
+    );
+
+    // --- drift-aware decay: verdicts are leases, not marriages -----------
+    // On a long-lived service the staged-vs-fused winner moves with
+    // machine state (thermal throttling, co-tenants, cache pressure), so
+    // settled verdicts can be set to expire:
+    //
+    //   DecayPolicy::Never            -- verdicts are final (default).
+    //   DecayPolicy::AfterBatches(n)  -- re-confirm after serving n batches.
+    //   DecayPolicy::OnDrift{rel_tol} -- warm samples of the winning mode
+    //       feed an EWMA; one deviating >rel_tol re-opens the verdict and
+    //       shadow-re-measures the losing mode (at most one re-measuring
+    //       bucket per batch wave, so serving latency stays flat).
+    sched.set_decay_policy(DecayPolicy::OnDrift { rel_tol: 0.5 });
+    for b in [8usize, 8, 8] {
+        let xb = Tensor4::random([b, problem.c_in, problem.h, problem.w], 40 + b as u64);
+        let _ = sched.run_batch(algo, &xb, &w);
+    }
+    println!(
+        "decay after 3 more batches: {:?} ({} bucket(s) re-confirming)",
+        sched.decay_stats(),
+        sched.stale_entries()
     );
 }

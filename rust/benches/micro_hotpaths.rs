@@ -8,8 +8,8 @@
 //! docs/ARCHITECTURE.md §BENCH).
 
 use fftconv::conv::gemm::{cgemm_acc, gemm_acc};
-use fftconv::conv::{ConvAlgorithm, ExecPolicy, LayerPlan, PlanOptions, Tensor4, TileGrid};
-use fftconv::coordinator::StaticScheduler;
+use fftconv::conv::{ConvAlgorithm, ExecMode, ExecPolicy, LayerPlan, PlanOptions, Tensor4, TileGrid};
+use fftconv::coordinator::{DecayPolicy, StaticScheduler};
 use fftconv::fft::{C32, Plan, TileFft};
 use fftconv::model::machine::xeon_gold;
 use fftconv::model::select::{choose_exec, measure_exec};
@@ -388,6 +388,64 @@ fn main() {
             Json::Num(disagreements as f64),
         );
         json.insert("tuning".to_string(), Json::Obj(tuning));
+    }
+
+    // ---- tuning decay: drift detection + shadow re-measurement ----
+    // The `decay` block of the BENCH schema (docs/ARCHITECTURE.md): a
+    // settled verdict is driven through the full decay state machine
+    // (settled → stale → re-measuring → settled) with injected timings
+    // standing in for a thermal-throttled host.  The counters are
+    // deterministic; only the shadow batch's own timing is host-measured.
+    {
+        let rel_tol = 0.25;
+        let mut s = StaticScheduler::new(2);
+        s.set_decay_policy(DecayPolicy::OnDrift { rel_tol });
+        let x = Tensor4::random([2, 8, 20, 20], 40);
+        let w = Tensor4::random([8, 8, 3, 3], 41);
+        let algo = ConvAlgorithm::RegularFft { m: 6 };
+        // settle the bucket on fused (1µs/img vs 1s/img ground truth)...
+        s.record_exec_time(algo, &x, &w, ExecMode::Staged, 2.0);
+        s.record_exec_time(algo, &x, &w, ExecMode::Fused, 2e-6);
+        // ...then inject a catastrophically drifted winner sample
+        s.record_exec_time(algo, &x, &w, ExecMode::Fused, 2.0);
+        // real batches shadow-re-measure the losing mode until the
+        // entry re-settles (first shadow run is cold and yields no
+        // sample, so this takes two batches)
+        let mut shadow_batches = 0usize;
+        while !s.tuning_for(algo, &x, &w).is_some_and(|t| t.settled) && shadow_batches < 8 {
+            std::hint::black_box(s.run_batch(algo, &x, &w));
+            shadow_batches += 1;
+        }
+        let d = s.decay_stats();
+        let snap = s.tuning_for(algo, &x, &w).expect("entry");
+        t.row(vec![
+            "tuning-decay".into(),
+            format!(
+                "on_drift({rel_tol}): {} drift / {} flip after {} batches",
+                d.drift_events, d.flips, shadow_batches
+            ),
+            "-".into(),
+            format!("resolved {}", snap.resolved.name()),
+        ]);
+        let mut obj = BTreeMap::new();
+        obj.insert("policy".to_string(), Json::Str("on_drift".to_string()));
+        obj.insert("rel_tol".to_string(), Json::Num(rel_tol));
+        obj.insert("drift_events".to_string(), Json::Num(d.drift_events as f64));
+        obj.insert("expiries".to_string(), Json::Num(d.expiries as f64));
+        obj.insert(
+            "remeasurements".to_string(),
+            Json::Num(d.remeasurements as f64),
+        );
+        obj.insert("flips".to_string(), Json::Num(d.flips as f64));
+        obj.insert(
+            "shadow_batches".to_string(),
+            Json::Num(shadow_batches as f64),
+        );
+        obj.insert(
+            "resolved_after".to_string(),
+            Json::Str(snap.resolved.name().to_string()),
+        );
+        json.insert("decay".to_string(), Json::Obj(obj));
     }
 
     t.emit("micro_hotpaths");

@@ -61,21 +61,24 @@ impl Batcher {
         }
     }
 
-    /// Collect groups whose oldest member exceeded `max_wait`.
+    /// Collect groups whose oldest member exceeded `max_wait`,
+    /// oldest-waiting group first — the group that has been starved
+    /// longest executes (and frees its callers) first, instead of
+    /// whatever order the hash map iterates in.
     pub fn poll_expired(&mut self) -> Vec<Batch> {
         let now = Instant::now();
-        let expired: Vec<(String, [usize; 4])> = self
+        let mut expired: Vec<((String, [usize; 4]), Instant)> = self
             .pending
             .iter()
-            .filter(|(_, reqs)| {
-                reqs.first()
-                    .is_some_and(|(_, t)| now.duration_since(*t) >= self.max_wait)
+            .filter_map(|(k, reqs)| {
+                let (_, t0) = reqs.first()?;
+                (now.duration_since(*t0) >= self.max_wait).then(|| (k.clone(), *t0))
             })
-            .map(|(k, _)| k.clone())
             .collect();
+        expired.sort_by_key(|(_, t0)| *t0);
         expired
             .into_iter()
-            .map(|key| {
+            .map(|(key, _)| {
                 let requests = self.pending.remove(&key).unwrap();
                 Batch {
                     layer: key.0,
@@ -85,16 +88,16 @@ impl Batcher {
             .collect()
     }
 
-    /// Flush everything (shutdown / synchronous mode).
+    /// Flush everything (shutdown / synchronous mode), oldest-waiting
+    /// group first.
     pub fn drain(&mut self) -> Vec<Batch> {
-        let keys: Vec<_> = self.pending.keys().cloned().collect();
-        keys.into_iter()
-            .map(|key| {
-                let requests = self.pending.remove(&key).unwrap();
-                Batch {
-                    layer: key.0,
-                    requests,
-                }
+        let mut groups: Vec<_> = self.pending.drain().collect();
+        groups.sort_by_key(|(_, reqs)| reqs.first().map(|(_, t0)| *t0));
+        groups
+            .into_iter()
+            .map(|(key, requests)| Batch {
+                layer: key.0,
+                requests,
             })
             .collect()
     }
@@ -166,5 +169,65 @@ mod tests {
         let batch = b.push(req(9, "l")).unwrap();
         let ids: Vec<u64> = batch.requests.iter().map(|(r, _)| r.id).collect();
         assert_eq!(ids, [7, 8, 9]);
+    }
+
+    #[test]
+    fn drain_flushes_oldest_group_first() {
+        let mut b = Batcher::new(100, Duration::from_secs(60));
+        // three groups arriving b, c, a — drain order must follow arrival
+        // (oldest head first), not the hash map's iteration order
+        b.push(req(1, "b"));
+        std::thread::sleep(Duration::from_millis(2));
+        b.push(req(2, "c"));
+        std::thread::sleep(Duration::from_millis(2));
+        b.push(req(3, "a"));
+        b.push(req(4, "b")); // a later arrival must not reorder group b
+        let layers: Vec<String> = b.drain().into_iter().map(|x| x.layer).collect();
+        assert_eq!(layers, ["b", "c", "a"]);
+        assert_eq!(b.pending_count(), 0);
+    }
+
+    #[test]
+    fn poll_expired_flushes_oldest_group_first() {
+        let mut b = Batcher::new(100, Duration::from_millis(5));
+        b.push(req(1, "late"));
+        std::thread::sleep(Duration::from_millis(2));
+        b.push(req(2, "later"));
+        std::thread::sleep(Duration::from_millis(10));
+        b.push(req(3, "fresh")); // under deadline: must stay pending
+        let batches = b.poll_expired();
+        let layers: Vec<&str> = batches.iter().map(|x| x.layer.as_str()).collect();
+        assert_eq!(layers, ["late", "later"]);
+        for batch in &batches {
+            assert_eq!(batch.len(), 1);
+        }
+        assert_eq!(b.pending_count(), 1, "fresh group still pending");
+    }
+
+    #[test]
+    fn no_request_lost_when_group_fills_at_its_deadline() {
+        // a group can fill (push returns it) in the same tick its
+        // deadline expires: the fill must win, and the subsequent poll
+        // must neither duplicate nor lose requests
+        let mut b = Batcher::new(2, Duration::from_millis(3));
+        assert!(b.push(req(1, "l")).is_none());
+        std::thread::sleep(Duration::from_millis(6)); // r1 is now overdue
+        let batch = b.push(req(2, "l")).expect("second request fills the batch");
+        let ids: Vec<u64> = batch.requests.iter().map(|(r, _)| r.id).collect();
+        assert_eq!(ids, [1, 2], "both requests flushed, oldest first");
+        assert!(b.poll_expired().is_empty(), "nothing left to expire");
+        assert_eq!(b.pending_count(), 0);
+    }
+
+    #[test]
+    fn expired_batch_preserves_arrival_order() {
+        let mut b = Batcher::new(100, Duration::from_millis(3));
+        b.push(req(5, "l"));
+        b.push(req(6, "l"));
+        std::thread::sleep(Duration::from_millis(8));
+        let batches = b.poll_expired();
+        assert_eq!(batches.len(), 1);
+        let ids: Vec<u64> = batches[0].requests.iter().map(|(r, _)| r.id).collect();
+        assert_eq!(ids, [5, 6]);
     }
 }

@@ -1,5 +1,7 @@
-//! Service metrics: counters and latency quantiles over a sliding window.
+//! Service metrics: counters, latency quantiles over a sliding window,
+//! and the scheduler's tuning-decay counters (drift / expiry / flips).
 
+use super::scheduler::DecayStats;
 use std::collections::VecDeque;
 use std::sync::Mutex;
 
@@ -14,6 +16,10 @@ struct Inner {
     batched_images: u64,
     latencies: VecDeque<f64>,
     window: usize,
+    /// non-finite latencies rejected at `record_batch`
+    dropped: u64,
+    /// last scheduler decay counters fed via `record_decay`
+    decay: DecayStats,
 }
 
 /// A point-in-time snapshot.
@@ -26,6 +32,18 @@ pub struct Snapshot {
     pub p50_ms: f64,
     pub p95_ms: f64,
     pub max_ms: f64,
+    /// non-finite latency samples dropped at `record_batch` (they would
+    /// poison the quantile sort; the request counters still count them)
+    pub dropped_samples: u64,
+    /// tuning verdicts re-opened by an out-of-tolerance winner sample
+    /// (`DecayPolicy::OnDrift`)
+    pub drift_events: u64,
+    /// tuning verdicts re-opened by age, `set_machine`, or plan eviction
+    pub expiries: u64,
+    /// completed shadow / forced re-measurements
+    pub remeasurements: u64,
+    /// re-measurements that changed the winning execution mode
+    pub decay_flips: u64,
 }
 
 impl Default for Metrics {
@@ -43,17 +61,25 @@ impl Metrics {
                 batched_images: 0,
                 latencies: VecDeque::with_capacity(window),
                 window: window.max(1),
+                dropped: 0,
+                decay: DecayStats::default(),
             }),
         }
     }
 
     /// Record one executed batch and its members' latencies (seconds).
+    /// Non-finite latencies (NaN / infinity from a poisoned clock or a
+    /// broken caller) are counted but kept out of the quantile window.
     pub fn record_batch(&self, batch_size: usize, latencies: &[f64]) {
         let mut g = self.inner.lock().unwrap();
         g.batches += 1;
         g.batched_images += batch_size as u64;
         g.requests += latencies.len() as u64;
         for &l in latencies {
+            if !l.is_finite() {
+                g.dropped += 1;
+                continue;
+            }
             if g.latencies.len() == g.window {
                 g.latencies.pop_front();
             }
@@ -61,15 +87,27 @@ impl Metrics {
         }
     }
 
+    /// Publish the scheduler's decay counters (monotonic; the latest
+    /// call wins) so `snapshot` can surface them next to the latency
+    /// quantiles.
+    pub fn record_decay(&self, stats: DecayStats) {
+        self.inner.lock().unwrap().decay = stats;
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let g = self.inner.lock().unwrap();
         let mut ls: Vec<f64> = g.latencies.iter().copied().collect();
-        ls.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total order: the window never holds non-finite values, but the
+        // sort must not be able to panic regardless
+        ls.sort_by(|a, b| a.total_cmp(b));
         let q = |p: f64| -> f64 {
             if ls.is_empty() {
                 0.0
             } else {
-                ls[((ls.len() - 1) as f64 * p).round() as usize] * 1e3
+                // nearest-rank: the ⌈p·n⌉-th smallest sample (1-indexed);
+                // a rounded index biases p95 low on small windows
+                let rank = (p * ls.len() as f64).ceil() as usize;
+                ls[rank.clamp(1, ls.len()) - 1] * 1e3
             }
         };
         Snapshot {
@@ -83,6 +121,11 @@ impl Metrics {
             p50_ms: q(0.50),
             p95_ms: q(0.95),
             max_ms: ls.last().copied().unwrap_or(0.0) * 1e3,
+            dropped_samples: g.dropped,
+            drift_events: g.decay.drift_events,
+            expiries: g.decay.expiries,
+            remeasurements: g.decay.remeasurements,
+            decay_flips: g.decay.flips,
         }
     }
 }
@@ -97,6 +140,8 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.requests, 0);
         assert_eq!(s.p50_ms, 0.0);
+        assert_eq!(s.dropped_samples, 0);
+        assert_eq!(s.drift_events, 0);
     }
 
     #[test]
@@ -128,5 +173,50 @@ mod tests {
         m.record_batch(4, &[0.1; 4]);
         m.record_batch(2, &[0.1; 2]);
         assert!((m.snapshot().mean_batch - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn non_finite_latencies_are_dropped_not_fatal() {
+        // sort_by(partial_cmp().unwrap()) used to panic on the first NaN
+        let m = Metrics::default();
+        m.record_batch(4, &[0.002, f64::NAN, f64::INFINITY, 0.004]);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 4, "requests still counted");
+        assert_eq!(s.dropped_samples, 2);
+        assert!((s.p50_ms - 2.0).abs() < 1e-9, "quantiles over finite only");
+        assert!((s.max_ms - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn p95_uses_nearest_rank_ceiling_on_small_windows() {
+        // 12 samples: nearest-rank p95 = ⌈0.95·12⌉ = 12th value; the old
+        // rounded index returned the 11th, biasing p95 low
+        let m = Metrics::default();
+        let lat: Vec<f64> = (1..=12).map(|i| i as f64 / 1000.0).collect();
+        m.record_batch(12, &lat);
+        let s = m.snapshot();
+        assert!((s.p95_ms - 12.0).abs() < 1e-9);
+        // one sample: every quantile is that sample
+        let m1 = Metrics::default();
+        m1.record_batch(1, &[0.007]);
+        let s1 = m1.snapshot();
+        assert!((s1.p50_ms - 7.0).abs() < 1e-9);
+        assert!((s1.p95_ms - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn decay_counters_pass_through() {
+        let m = Metrics::default();
+        m.record_decay(DecayStats {
+            drift_events: 3,
+            expiries: 2,
+            remeasurements: 4,
+            flips: 1,
+        });
+        let s = m.snapshot();
+        assert_eq!(s.drift_events, 3);
+        assert_eq!(s.expiries, 2);
+        assert_eq!(s.remeasurements, 4);
+        assert_eq!(s.decay_flips, 1);
     }
 }

@@ -22,5 +22,7 @@ pub mod service;
 pub use batcher::Batcher;
 pub use metrics::Metrics;
 pub use request::{ConvRequest, ConvResponse};
-pub use scheduler::{batch_bucket, StaticScheduler, TuneSnapshot, TuningPolicy};
+pub use scheduler::{
+    batch_bucket, DecayPolicy, DecayStats, StaticScheduler, TuneSnapshot, TuneState, TuningPolicy,
+};
 pub use service::ConvService;

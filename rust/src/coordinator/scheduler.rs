@@ -59,12 +59,44 @@
 //! lets an operator (or a test) feed external timings, and
 //! [`StaticScheduler::seed_exec_verdict`] consumes the nominal-batch
 //! verdict of `model::select::select_measured` at registration time.
+//!
+//! ## Drift-aware decay (verdicts are leases, not marriages)
+//!
+//! The staged-vs-fused winner is a function of machine *state* —
+//! bandwidth, cache occupancy, co-tenant pressure — not just FLOPs, so a
+//! verdict settled once is not right forever.  Timings are therefore
+//! EWMA-smoothed streams rather than single samples, and settled
+//! verdicts age and can expire under a [`DecayPolicy`]:
+//!
+//! * [`DecayPolicy::Never`] — verdicts are final (the pre-decay default).
+//! * [`DecayPolicy::AfterBatches`] — a verdict that has served `n`
+//!   batches expires and must re-confirm.
+//! * [`DecayPolicy::OnDrift`] — warm samples of the *winning* mode keep
+//!   feeding its EWMA; one deviating more than `rel_tol` from the mean
+//!   re-opens the verdict.
+//!
+//! A re-opened (stale) entry keeps serving its old winner while it waits
+//! for the scheduler's single **shadow slot**: at most one bucket per
+//! `run_batch` wave runs its doubted (losing) mode instead of the winner
+//! — the batch output is identical either way, so steady-state latency
+//! stays flat while the table heals one bucket at a time.  Re-settling
+//! compares fresh against fresh: the drift-tripping winner sample and
+//! the shadow's loser sample each *replace* (not blend into) their EWMA
+//! — pre-drift history on either side must not outvote reality — and a
+//! changed winner counts as a flip in [`DecayStats`].
+//! `set_machine` and plan-cache eviction transition affected entries to
+//! the same stale state — reseeding the analytic pick from the new
+//! roofline and keeping the timing history — instead of deleting them;
+//! those transitions doubt *both* streams, so their shadow phase
+//! refreshes the loser and then the winner before re-settling.
+//! The full state machine (settled → stale → re-measuring → settled) is
+//! documented in docs/ARCHITECTURE.md §4.
 
 use crate::conv::direct;
 use crate::conv::engine::{weights_fingerprint, LayerPlan, PlanOptions};
-use crate::conv::{ConvAlgorithm, ExecMode, Tensor4};
+use crate::conv::{ConvAlgorithm, ExecMode, ExecPolicy, Tensor4};
 use crate::model::machine::{xeon_gold, Machine};
-use crate::model::select::{choose_exec, ExecChoice, ExecVerdict};
+use crate::model::select::{choose_exec, measure_exec_with, ExecChoice, ExecVerdict};
 use crate::model::stages::{LayerShape, Method};
 use crate::util::threadpool::{even_ranges, weighted_ranges, ThreadPool};
 use std::collections::HashMap;
@@ -122,9 +154,13 @@ pub enum TuningPolicy {
 /// Bucket a batch size for the tuning table: the next power of two.
 /// Coarse enough that steady traffic lands on few entries, fine enough
 /// that batch-1 latency traffic and batch-64 throughput traffic tune
-/// independently.
+/// independently.  Sizes beyond the largest representable power of two
+/// clamp to it (`next_power_of_two` would panic in debug and wrap to 0
+/// in release for `b > 2^63`).
 pub fn batch_bucket(b: usize) -> usize {
-    b.max(1).next_power_of_two()
+    b.max(1)
+        .checked_next_power_of_two()
+        .unwrap_or(1usize << (usize::BITS - 1))
 }
 
 /// Tuning-table key: one resolution per (plan identity, batch bucket).
@@ -134,8 +170,96 @@ struct TuneKey {
     bucket: usize,
 }
 
-/// One tuning-table entry: the roofline seed plus whatever empirical
-/// timings have been fed back, and the currently resolved winner.
+/// EWMA smoothing factor for the per-mode timing streams: heavy enough
+/// that a persistent shift moves the mean within a few batches, light
+/// enough that a single noisy batch cannot swing it past a sensible
+/// `rel_tol` by itself.
+const EWMA_ALPHA: f64 = 0.3;
+
+/// An exponentially weighted moving average over timing samples.
+#[derive(Clone, Copy, Debug, Default)]
+struct Ewma {
+    mean: f64,
+    samples: u64,
+}
+
+impl Ewma {
+    fn record(&mut self, x: f64) {
+        self.mean = if self.samples == 0 {
+            x
+        } else {
+            EWMA_ALPHA * x + (1.0 - EWMA_ALPHA) * self.mean
+        };
+        self.samples += 1;
+    }
+
+    /// Replace the stream with a fresh measurement — used when a stale
+    /// verdict re-measures: pre-drift history must not outvote reality.
+    fn reseed(&mut self, x: f64) {
+        self.mean = x;
+        self.samples += 1;
+    }
+
+    fn value(&self) -> Option<f64> {
+        (self.samples > 0).then_some(self.mean)
+    }
+}
+
+/// The other pipeline — what a drifted winner is re-measured against.
+fn other_mode(mode: ExecMode) -> ExecMode {
+    match mode {
+        ExecMode::Staged => ExecMode::Fused,
+        ExecMode::Fused => ExecMode::Staged,
+    }
+}
+
+/// Lifecycle of a tuning verdict (docs/ARCHITECTURE.md §4):
+/// `Unsettled → Settled → Stale → Remeasuring → Settled → …`
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TuneState {
+    /// still collecting first samples per the [`TuningPolicy`]
+    Unsettled,
+    /// verdict in force; serves its winner with zero overhead
+    Settled,
+    /// verdict doubted (drift, expiry, `set_machine`, plan eviction);
+    /// keeps serving the old winner while waiting for the shadow slot
+    Stale,
+    /// holds the scheduler's single shadow slot: this bucket's next warm
+    /// batch runs the doubted (losing) mode once, then re-settles
+    Remeasuring,
+}
+
+/// When a settled staged-vs-fused verdict stops being trusted.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum DecayPolicy {
+    /// Verdicts are final once settled (the pre-decay behavior).
+    #[default]
+    Never,
+    /// A verdict expires after serving `n` batches and re-confirms
+    /// through one shadow re-measurement.
+    AfterBatches(u64),
+    /// Warm samples of the winning mode keep feeding its EWMA; a sample
+    /// deviating more than `rel_tol` (relative) from the mean re-opens
+    /// the verdict and schedules a shadow re-measurement of the loser.
+    OnDrift { rel_tol: f64 },
+}
+
+/// Monotonic counters for the decay subsystem (observability; surfaced
+/// through `Metrics::Snapshot` by `ConvService`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DecayStats {
+    /// settled verdicts re-opened by an out-of-tolerance winner sample
+    pub drift_events: u64,
+    /// settled verdicts re-opened by age, `set_machine`, or plan eviction
+    pub expiries: u64,
+    /// completed re-measurements (fresh loser sample, verdict re-settled)
+    pub remeasurements: u64,
+    /// re-measurements whose fresh verdict changed the winning mode
+    pub flips: u64,
+}
+
+/// One tuning-table entry: the roofline seed, the per-mode EWMA timing
+/// streams, the currently resolved winner, and its lifecycle state.
 ///
 /// Timings are stored **per image** (batch seconds / batch size): a
 /// bucket spans actual batch sizes up to 2x apart, so raw batch times of
@@ -143,13 +267,24 @@ struct TuneKey {
 struct TuneEntry {
     /// the roofline prediction at this bucket's batch size
     analytic: ExecMode,
-    staged_secs: Option<f64>,
-    fused_secs: Option<f64>,
+    staged: Ewma,
+    fused: Ewma,
     /// the mode `run_batch` executes for this bucket right now
     resolved: ExecMode,
-    /// true once the verdict is final (both timings seen, or fusion is
-    /// unavailable on the plan) — settled entries are never re-measured
-    settled: bool,
+    state: TuneState,
+    /// false once the serving plan proved unable to fuse: one-pipeline
+    /// entries settle immediately and never decay (nothing to flip to)
+    fusable: bool,
+    /// batches served while settled since the verdict (re-)settled
+    age: u64,
+    /// the mode owed a fresh sample while stale / re-measuring
+    pending: Option<ExecMode>,
+    /// true while stale/re-measuring when the *winner's* stream is also
+    /// doubted (`set_machine` / plan eviction invalidate both sides;
+    /// drift already reseeds the winner from the tripping sample, and an
+    /// age expiry's winner stream was fed live throughout the lease) —
+    /// the re-measurement then refreshes both modes before re-settling
+    winner_doubted: bool,
 }
 
 impl TuneEntry {
@@ -157,43 +292,134 @@ impl TuneEntry {
     /// immediately on `Staged` — there is no alternative to measure.
     fn seed(choice: &ExecChoice, can_fuse: bool) -> TuneEntry {
         let analytic = match choice.policy {
-            crate::conv::ExecPolicy::Fused if can_fuse => ExecMode::Fused,
+            ExecPolicy::Fused if can_fuse => ExecMode::Fused,
             _ => ExecMode::Staged,
         };
         TuneEntry {
             analytic,
-            staged_secs: None,
-            fused_secs: None,
+            staged: Ewma::default(),
+            fused: Ewma::default(),
             resolved: if can_fuse { analytic } else { ExecMode::Staged },
-            settled: !can_fuse,
+            state: if can_fuse {
+                TuneState::Unsettled
+            } else {
+                TuneState::Settled
+            },
+            fusable: can_fuse,
+            age: 0,
+            pending: None,
+            winner_doubted: false,
+        }
+    }
+
+    fn ewma(&self, mode: ExecMode) -> &Ewma {
+        match mode {
+            ExecMode::Staged => &self.staged,
+            ExecMode::Fused => &self.fused,
+        }
+    }
+
+    fn ewma_mut(&mut self, mode: ExecMode) -> &mut Ewma {
+        match mode {
+            ExecMode::Staged => &mut self.staged,
+            ExecMode::Fused => &mut self.fused,
         }
     }
 
     fn time_of(&self, mode: ExecMode) -> Option<f64> {
-        match mode {
-            ExecMode::Staged => self.staged_secs,
-            ExecMode::Fused => self.fused_secs,
-        }
+        self.ewma(mode).value()
     }
 
     fn record(&mut self, mode: ExecMode, secs: f64) {
-        match mode {
-            ExecMode::Staged => self.staged_secs = Some(secs),
-            ExecMode::Fused => self.fused_secs = Some(secs),
-        }
+        self.ewma_mut(mode).record(secs);
     }
 
     /// Settle on the measured winner once both pipelines have a timing.
+    /// Also how a re-measuring entry re-settles (clearing the pending
+    /// mode).  The age — the `AfterBatches` lease — restarts only on a
+    /// genuine (re-)settle transition or a changed winner: a routine
+    /// sample recorded on an already-settled entry must not keep
+    /// postponing expiry.
     fn try_settle(&mut self) {
-        if let (Some(s), Some(f)) = (self.staged_secs, self.fused_secs) {
-            self.resolved = if f < s {
+        if let (Some(s), Some(f)) = (self.staged.value(), self.fused.value()) {
+            let winner = if f < s {
                 ExecMode::Fused
             } else {
                 ExecMode::Staged
             };
-            self.settled = true;
+            if self.state != TuneState::Settled || self.resolved != winner {
+                self.age = 0;
+            }
+            self.resolved = winner;
+            self.state = TuneState::Settled;
+            self.pending = None;
         }
     }
+
+    /// Settled → Stale: keep serving the current winner, owe the losing
+    /// mode a fresh sample (and, when `doubt_winner`, the winner too —
+    /// its stream predates the change that triggered the staleness).
+    /// No-op on one-pipeline or not-yet-settled entries; returns whether
+    /// the transition happened.
+    fn mark_stale(&mut self, doubt_winner: bool) -> bool {
+        if self.state == TuneState::Settled && self.fusable {
+            self.state = TuneState::Stale;
+            self.pending = Some(other_mode(self.resolved));
+            self.age = 0;
+            self.winner_doubted = doubt_winner;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Is `secs` out of tolerance against `mode`'s EWMA?
+    fn drifted(&self, mode: ExecMode, secs: f64, rel_tol: f64) -> bool {
+        match self.ewma(mode).value() {
+            Some(mean) if mean > 0.0 => (secs - mean).abs() > rel_tol * mean,
+            _ => false,
+        }
+    }
+}
+
+/// Absorb one shadow sample: it *replaces* the doubted mode's EWMA.  If
+/// the winner's stream is also doubted (`set_machine` / plan eviction)
+/// and this was the loser's sample, the winner is queued for its own
+/// fresh sample instead of settling against stale history.  Returns
+/// true when the re-measurement completed (entry re-settled — a changed
+/// winner counts as a flip) so the caller can release the shadow slot.
+/// (Free function so `run_batch` can call it while holding split
+/// borrows of the scheduler's fields.)
+fn finish_remeasure(entry: &mut TuneEntry, mode: ExecMode, secs: f64, stats: &mut DecayStats) -> bool {
+    entry.ewma_mut(mode).reseed(secs);
+    if entry.winner_doubted && mode != entry.resolved {
+        entry.pending = Some(entry.resolved);
+        return false;
+    }
+    entry.winner_doubted = false;
+    let before = entry.resolved;
+    entry.try_settle();
+    stats.remeasurements += 1;
+    if entry.resolved != before {
+        stats.flips += 1;
+    }
+    true
+}
+
+/// Plan eviction doubts (but keeps) the plan's settled verdicts: a
+/// rebuilt plan re-pays first-touch costs, so each verdict re-confirms
+/// through the shadow path before being trusted again.  Returns how
+/// many entries went stale.
+fn stale_plan_entries(tuning: &mut HashMap<TuneKey, TuneEntry>, plan: &PlanKey) -> u64 {
+    let mut staled = 0;
+    for (k, e) in tuning.iter_mut() {
+        // the rebuild invalidates both streams' cold-cost assumptions:
+        // doubt the winner too
+        if &k.plan == plan && e.mark_stale(true) {
+            staled += 1;
+        }
+    }
+    staled
 }
 
 /// Read-only view of one tuning-table entry (observability / tests).
@@ -204,11 +430,17 @@ pub struct TuneSnapshot {
     pub analytic: ExecMode,
     /// the mode currently served for this bucket
     pub resolved: ExecMode,
-    /// measured seconds **per image** (batch time / batch size, so
-    /// samples from different batch sizes within the bucket compare)
+    /// EWMA seconds **per image** (batch time / batch size, so samples
+    /// from different batch sizes within the bucket compare)
     pub staged_secs: Option<f64>,
     pub fused_secs: Option<f64>,
+    /// `state == Settled` — stale / re-measuring entries report false
+    /// (their verdict is doubted even though it is still being served)
     pub settled: bool,
+    /// where the verdict sits in the decay lifecycle
+    pub state: TuneState,
+    /// batches served since the verdict (re-)settled
+    pub age: u64,
 }
 
 /// The tiled `Method` behind a [`ConvAlgorithm`], if any.
@@ -264,9 +496,14 @@ fn resolve_options(key: &PlanKey, b: usize, machine: &Machine) -> PlanOptions {
     }
 }
 
-/// Get-or-build the cached plan for `key`.
+/// Get-or-build the cached plan for `key`.  An eviction transitions the
+/// evicted plan's settled tuning verdicts to stale (counted in `stats`)
+/// rather than deleting them — see the module docs on decay.
+#[allow(clippy::too_many_arguments)]
 fn plan_entry<'a>(
     plans: &'a mut HashMap<PlanKey, PlanEntry>,
+    tuning: &mut HashMap<TuneKey, TuneEntry>,
+    stats: &mut DecayStats,
     workers: usize,
     key: PlanKey,
     weights: &Tensor4,
@@ -277,7 +514,7 @@ fn plan_entry<'a>(
     if !plans.contains_key(&key) && plans.len() >= MAX_PLANS {
         // prefer evicting this layer's outdated-weights plan; otherwise
         // drop the least-recently-used entry to stay count-bounded
-        let evict = plans
+        let same_shape = plans
             .keys()
             .find(|k2| {
                 k2.algo == key.algo
@@ -287,15 +524,23 @@ fn plan_entry<'a>(
                     && k2.k == key.k
                     && k2.r == key.r
             })
-            .cloned()
-            .or_else(|| {
-                plans
-                    .iter()
-                    .min_by_key(|(_, e)| e.last_used)
-                    .map(|(k2, _)| k2.clone())
-            });
-        if let Some(e) = evict {
+            .cloned();
+        if let Some(e) = same_shape {
+            // a weight *swap*: the old fingerprint can never recur, so
+            // its tuning entries are deleted outright — staling them
+            // would inflate the expiry/stale gauges with entries that
+            // can never heal
             plans.remove(&e);
+            tuning.retain(|k, _| k.plan != e);
+        } else if let Some(e) = plans
+            .iter()
+            .min_by_key(|(_, e)| e.last_used)
+            .map(|(k2, _)| k2.clone())
+        {
+            // capacity-pressure LRU eviction: the key may see traffic
+            // again, so its verdicts go stale and re-confirm on rebuild
+            plans.remove(&e);
+            stats.expiries += stale_plan_entries(tuning, &e);
         }
     }
     let entry = plans.entry(key).or_insert_with_key(|key| {
@@ -340,6 +585,12 @@ fn tune_entry<'a>(
 /// threshold, never per batch.
 const MAX_TUNE_ENTRIES: usize = MAX_PLANS * 16;
 
+/// Waves a bucket may hold the shadow re-measurement slot without
+/// completing (its traffic stopped mid-re-measurement).  After this the
+/// slot is stolen so other stale buckets can heal; the holder returns
+/// to the stale queue.
+const REMEASURE_STEAL_WAVES: u64 = 64;
+
 /// A static fork-join scheduler over a worker pool, with a persistent
 /// byte-budgeted LRU plan cache for the tiled algorithms.
 pub struct StaticScheduler {
@@ -349,6 +600,13 @@ pub struct StaticScheduler {
     tuning: HashMap<TuneKey, TuneEntry>,
     /// how tuning entries are refined (analytic / measured / hybrid)
     policy: TuningPolicy,
+    /// when settled verdicts stop being trusted (see module docs)
+    decay: DecayPolicy,
+    /// the single shadow re-measurement slot: the stale bucket currently
+    /// allowed to run its doubted mode, and the tick it claimed the slot
+    remeasuring: Option<(TuneKey, u64)>,
+    /// monotonic decay counters (drift / expiry / re-measure / flip)
+    decay_stats: DecayStats,
     /// table size after the last dead-entry prune (skip re-scanning an
     /// over-threshold table until it grows past this again)
     tune_prune_len: usize,
@@ -367,6 +625,9 @@ impl StaticScheduler {
             plans: HashMap::new(),
             tuning: HashMap::new(),
             policy: TuningPolicy::default(),
+            decay: DecayPolicy::default(),
+            remeasuring: None,
+            decay_stats: DecayStats::default(),
             tune_prune_len: 0,
             tick: 0,
             plan_budget: DEFAULT_PLAN_BUDGET,
@@ -396,13 +657,85 @@ impl StaticScheduler {
     }
 
     /// Provide the machine model that drives fused-vs-staged resolution
-    /// and fused panel sizing for plans built *after* this call.  Also
-    /// clears the tuning table: its analytic seeds belonged to the old
-    /// machine.
+    /// and fused panel sizing for plans built *after* this call.
+    ///
+    /// Verdicts measured under the old machine state are doubted, not
+    /// deleted: every tuning entry reseeds its analytic pick from the
+    /// new roofline, and settled fusable entries transition to stale —
+    /// they keep serving their winner (and their EWMA history, for the
+    /// re-settle comparison) but owe the losing mode a fresh confirming
+    /// sample through the shadow path.  This closes the stale-verdict
+    /// leak where entries settled under the old machine would keep their
+    /// winner unchallenged forever.
     pub fn set_machine(&mut self, machine: Machine) {
         self.machine = machine;
-        self.tuning.clear();
+        self.remeasuring = None;
+        let mut staled = 0u64;
+        for (key, entry) in self.tuning.iter_mut() {
+            let (method, m) = match (algo_method(key.plan.algo), key.plan.algo.tile_m()) {
+                (Some(method), Some(m)) => (method, m),
+                _ => continue,
+            };
+            let choice = choose_exec(method, &key_shape(&key.plan, key.bucket), m, &self.machine);
+            entry.analytic = match choice.policy {
+                ExecPolicy::Fused if entry.fusable => ExecMode::Fused,
+                _ => ExecMode::Staged,
+            };
+            match entry.state {
+                // no measurements bind an unsettled entry to the old
+                // machine: follow the new seed outright
+                TuneState::Unsettled => {
+                    entry.resolved = if entry.fusable {
+                        entry.analytic
+                    } else {
+                        ExecMode::Staged
+                    };
+                }
+                // already re-opened entries (including the in-flight
+                // shadow-slot holder, invalidated above) restart their
+                // re-measurement with BOTH streams doubted — whatever
+                // samples they had were taken under the old machine.
+                // Not re-counted as expiries: they were already open.
+                TuneState::Remeasuring | TuneState::Stale => {
+                    entry.state = TuneState::Stale;
+                    entry.pending = Some(other_mode(entry.resolved));
+                    entry.winner_doubted = true;
+                }
+                TuneState::Settled => {
+                    // both streams were measured under the old machine
+                    // state: doubt the winner as well as the loser
+                    if entry.mark_stale(true) {
+                        staled += 1;
+                    }
+                }
+            }
+        }
+        self.decay_stats.expiries += staled;
         self.tune_prune_len = 0;
+    }
+
+    /// Set when settled verdicts stop being trusted (see [`DecayPolicy`]).
+    /// Takes effect on the next batch; ages already accumulated count.
+    pub fn set_decay_policy(&mut self, policy: DecayPolicy) {
+        self.decay = policy;
+    }
+
+    pub fn decay_policy(&self) -> DecayPolicy {
+        self.decay
+    }
+
+    /// Monotonic decay counters (drift events, expiries, re-measurements,
+    /// flips) — the numbers `Metrics::Snapshot` surfaces.
+    pub fn decay_stats(&self) -> DecayStats {
+        self.decay_stats
+    }
+
+    /// Entries currently doubting their verdict (stale + re-measuring).
+    pub fn stale_entries(&self) -> usize {
+        self.tuning
+            .values()
+            .filter(|e| matches!(e.state, TuneState::Stale | TuneState::Remeasuring))
+            .count()
     }
 
     /// Set how staged-vs-fused is resolved per batch bucket (see
@@ -437,9 +770,11 @@ impl StaticScheduler {
                 bucket,
                 analytic: e.analytic,
                 resolved: e.resolved,
-                staged_secs: e.staged_secs,
-                fused_secs: e.fused_secs,
-                settled: e.settled,
+                staged_secs: e.staged.value(),
+                fused_secs: e.fused.value(),
+                settled: e.state == TuneState::Settled,
+                state: e.state,
+                age: e.age,
             })
     }
 
@@ -449,7 +784,7 @@ impl StaticScheduler {
     pub fn tuning_disagreements(&self) -> usize {
         self.tuning
             .values()
-            .filter(|e| e.settled && e.resolved != e.analytic)
+            .filter(|e| e.state == TuneState::Settled && e.resolved != e.analytic)
             .count()
     }
 
@@ -461,10 +796,14 @@ impl StaticScheduler {
     /// Feed an externally measured execution time for one (layer, batch
     /// bucket, mode) — the operator/profiler override path, and how tests
     /// inject deterministic timings.  `secs` is the whole-batch time for
-    /// `x`'s batch size (normalized to per-image internally).  Unlike the
-    /// feedback loop inside `run_batch`, this *always* records (even on
-    /// settled entries) and re-resolves, so a measured verdict can
-    /// overturn both the analytic seed and earlier measurements.
+    /// `x`'s batch size (normalized to per-image internally).
+    ///
+    /// Samples flow into the mode's EWMA stream and — unlike the feedback
+    /// loop inside `run_batch` — always re-resolve, so a measured verdict
+    /// can overturn both the analytic seed and earlier measurements.
+    /// Under [`DecayPolicy::OnDrift`], a winner sample out of tolerance
+    /// re-opens the settled verdict instead (a drift event); a sample for
+    /// the pending mode of a stale entry completes its re-measurement.
     pub fn record_exec_time(
         &mut self,
         algo: ConvAlgorithm,
@@ -481,13 +820,62 @@ impl StaticScheduler {
         let can_fuse = self
             .plans
             .get(&key)
-            .map_or(true, |e| e.plan.can_fuse());
+            .is_none_or(|e| e.plan.can_fuse());
         if mode == ExecMode::Fused && !can_fuse {
             return; // a mode the plan cannot run is not actionable
         }
+        let per = secs / x.shape[0].max(1) as f64;
+        let decay = self.decay;
+        let tkey = TuneKey {
+            plan: key.clone(),
+            bucket,
+        };
         let entry = tune_entry(&mut self.tuning, &key, bucket, can_fuse, &self.machine);
-        entry.record(mode, secs / x.shape[0].max(1) as f64);
-        entry.try_settle();
+        match entry.state {
+            TuneState::Settled => {
+                if let DecayPolicy::OnDrift { rel_tol } = decay {
+                    if entry.fusable
+                        && mode == entry.resolved
+                        && entry.drifted(mode, per, rel_tol)
+                    {
+                        // the drifted sample IS the new reality: reseed
+                        // the winner's stream so the upcoming re-settle
+                        // compares fresh-vs-fresh (a blended mean still
+                        // dominated by pre-drift history could re-confirm
+                        // a genuinely degraded winner)
+                        entry.ewma_mut(mode).reseed(per);
+                        if entry.mark_stale(false) {
+                            self.decay_stats.drift_events += 1;
+                        }
+                        self.prune_tuning();
+                        return;
+                    }
+                }
+                entry.record(mode, per);
+                entry.try_settle();
+            }
+            TuneState::Unsettled => {
+                entry.record(mode, per);
+                entry.try_settle();
+            }
+            TuneState::Stale | TuneState::Remeasuring => {
+                if entry.pending == Some(mode) {
+                    if finish_remeasure(entry, mode, per, &mut self.decay_stats)
+                        && matches!(&self.remeasuring, Some((k, _)) if *k == tkey)
+                    {
+                        self.remeasuring = None;
+                    }
+                } else if entry.winner_doubted && mode == entry.resolved {
+                    // a doubted winner's fresh sample replaces its stream
+                    entry.ewma_mut(mode).reseed(per);
+                    entry.winner_doubted = false;
+                } else {
+                    // winner samples keep the stream fresh but cannot
+                    // settle: the verdict owes the loser a fresh sample
+                    entry.record(mode, per);
+                }
+            }
+        }
         self.prune_tuning();
     }
 
@@ -515,16 +903,40 @@ impl StaticScheduler {
         // verdict times are whole-micro-batch seconds measured at
         // `batch_hint` images — store per image like every other sample
         let per = batch_hint.max(1) as f64;
+        let tkey = TuneKey {
+            plan: key.clone(),
+            bucket,
+        };
         let entry = tune_entry(&mut self.tuning, &key, bucket, can_fuse, &self.machine);
-        entry.record(ExecMode::Staged, verdict.staged_secs / per);
+        let was_doubted = matches!(entry.state, TuneState::Stale | TuneState::Remeasuring);
+        let before = entry.resolved;
+        // a full fresh dual verdict *replaces* both streams — blending
+        // would let pre-change history outvote the new measurement
+        entry.ewma_mut(ExecMode::Staged).reseed(verdict.staged_secs / per);
+        entry.winner_doubted = false;
         if let Some(f) = verdict.fused_secs {
-            entry.record(ExecMode::Fused, f / per);
-        }
-        entry.try_settle();
-        if !entry.settled {
-            // fusion was not runnable in the measurement: staged is final
+            entry.ewma_mut(ExecMode::Fused).reseed(f / per);
+            entry.try_settle();
+        } else {
+            // fusion was not runnable in this measurement: any older
+            // fused stream is unconsultable history (it must not settle
+            // a mode the plan can no longer run) — staged is final
+            entry.fused = Ewma::default();
+            entry.fusable = false;
             entry.resolved = ExecMode::Staged;
-            entry.settled = true;
+            entry.state = TuneState::Settled;
+            entry.pending = None;
+        }
+        entry.age = 0; // a fresh verdict renews the AfterBatches lease
+        if was_doubted {
+            self.decay_stats.remeasurements += 1;
+            if entry.resolved != before {
+                self.decay_stats.flips += 1;
+            }
+        }
+        // a full fresh verdict also heals a stale / re-measuring entry
+        if matches!(&self.remeasuring, Some((k, _)) if *k == tkey) {
+            self.remeasuring = None;
         }
         self.prune_tuning();
     }
@@ -550,6 +962,8 @@ impl StaticScheduler {
         let key = make_key(algo, weights.shape[1], h, w, weights);
         let plan = plan_entry(
             &mut self.plans,
+            &mut self.tuning,
+            &mut self.decay_stats,
             workers,
             key.clone(),
             weights,
@@ -566,6 +980,74 @@ impl StaticScheduler {
             &self.machine,
         );
         self.enforce_budget();
+    }
+
+    /// Force a synchronous dual re-measurement of one (layer, batch
+    /// bucket) on the *cached* plan — the operator path for healing a
+    /// stale verdict without waiting for the shadow slot, reusing the
+    /// dual-variant machinery of `model::select::measure_exec`
+    /// ([`measure_exec_with`] runs both pipelines on the plan's warm
+    /// scratch).  Fresh timings replace both EWMA streams and the entry
+    /// re-settles immediately; returns the updated snapshot (`None` for
+    /// non-tiled algorithms).
+    pub fn remeasure_now(
+        &mut self,
+        algo: ConvAlgorithm,
+        x: &Tensor4,
+        w: &Tensor4,
+    ) -> Option<TuneSnapshot> {
+        let method = algo_method(algo)?;
+        let m = algo.tile_m()?;
+        let [b, c, h, wd] = x.shape;
+        let workers = self.pool.workers();
+        self.tick += 1;
+        let key = make_key(algo, c, h, wd, w);
+        let bucket = batch_bucket(b);
+        let analytic = choose_exec(method, &key_shape(&key, bucket), m, &self.machine);
+        let plan = plan_entry(
+            &mut self.plans,
+            &mut self.tuning,
+            &mut self.decay_stats,
+            workers,
+            key.clone(),
+            w,
+            b,
+            &self.machine,
+            self.tick,
+        );
+        let verdict = measure_exec_with(plan, x, analytic, Some(&self.pool));
+        let can_fuse = plan.can_fuse();
+        let per = b.max(1) as f64;
+        let tkey = TuneKey {
+            plan: key.clone(),
+            bucket,
+        };
+        let entry = tune_entry(&mut self.tuning, &key, bucket, can_fuse, &self.machine);
+        let before = entry.resolved;
+        entry.ewma_mut(ExecMode::Staged).reseed(verdict.staged_secs / per);
+        entry.winner_doubted = false;
+        if let Some(f) = verdict.fused_secs {
+            entry.ewma_mut(ExecMode::Fused).reseed(f / per);
+            entry.try_settle();
+        } else {
+            // fusion was not runnable on the cached plan: wipe any older
+            // fused stream (it must not settle an unrunnable mode)
+            entry.fused = Ewma::default();
+            entry.fusable = false;
+            entry.resolved = ExecMode::Staged;
+            entry.state = TuneState::Settled;
+            entry.pending = None;
+        }
+        entry.age = 0; // fresh dual timings renew the AfterBatches lease
+        self.decay_stats.remeasurements += 1;
+        if entry.resolved != before {
+            self.decay_stats.flips += 1;
+        }
+        if matches!(&self.remeasuring, Some((k, _)) if *k == tkey) {
+            self.remeasuring = None;
+        }
+        self.enforce_budget();
+        self.tuning_for(algo, x, w)
     }
 
     /// Run `algo` over a stacked batch (B, C, H, W), statically sharding
@@ -591,8 +1073,28 @@ impl StaticScheduler {
                 let workers = self.pool.workers();
                 self.tick += 1;
                 let key = make_key(algo, c, h, wd, w);
+                let bucket = batch_bucket(b);
+                let tkey = TuneKey {
+                    plan: key.clone(),
+                    bucket,
+                };
+                // free a wedged shadow slot before serving: a bucket
+                // whose traffic stopped mid-re-measurement must not
+                // block every other stale bucket forever
+                if let Some((held, since)) = self.remeasuring.clone() {
+                    if held != tkey && self.tick.saturating_sub(since) > REMEASURE_STEAL_WAVES {
+                        if let Some(e) = self.tuning.get_mut(&held) {
+                            if e.state == TuneState::Remeasuring {
+                                e.state = TuneState::Stale;
+                            }
+                        }
+                        self.remeasuring = None;
+                    }
+                }
                 let plan = plan_entry(
                     &mut self.plans,
+                    &mut self.tuning,
+                    &mut self.decay_stats,
                     workers,
                     key.clone(),
                     w,
@@ -601,13 +1103,7 @@ impl StaticScheduler {
                     self.tick,
                 );
                 let can_fuse = plan.can_fuse();
-                let entry = tune_entry(
-                    &mut self.tuning,
-                    &key,
-                    batch_bucket(b),
-                    can_fuse,
-                    &self.machine,
-                );
+                let entry = tune_entry(&mut self.tuning, &key, bucket, can_fuse, &self.machine);
                 let pool = &self.pool;
                 // Timed run with two fairness rules: the time is stored
                 // per image (entries compare samples across the up-to-2x
@@ -623,23 +1119,106 @@ impl StaticScheduler {
                     let dt = t0.elapsed().as_secs_f64();
                     (plan.arena_bytes() == arenas_before).then_some(dt / b.max(1) as f64)
                 };
-                if !can_fuse && entry.resolved == ExecMode::Fused {
+                if !can_fuse && (entry.fusable || entry.resolved == ExecMode::Fused) {
                     // the verdict cannot be honored (entry seeded before
                     // the plan existed, or the machine model changed
                     // under a kept plan): correct the entry so what
-                    // observability reports is what actually runs
+                    // observability reports is what actually runs.  A
+                    // one-pipeline entry also leaves the decay lifecycle
+                    // — there is nothing to re-measure against.
                     entry.resolved = ExecMode::Staged;
-                    entry.settled = true;
+                    entry.state = TuneState::Settled;
+                    entry.fusable = false;
+                    entry.pending = None;
+                    entry.winner_doubted = false;
+                    if matches!(&self.remeasuring, Some((k, _)) if *k == tkey) {
+                        self.remeasuring = None;
+                    }
                 }
-                if entry.settled || self.policy == TuningPolicy::Analytic {
+                // verdict expiry: a settled verdict that has served its
+                // allotted batches is no longer trusted and re-confirms
+                // through the shadow path.  (The winner's stream is not
+                // doubted: it was fed warm samples throughout the lease.)
+                if let DecayPolicy::AfterBatches(n) = self.decay {
+                    if entry.state == TuneState::Settled
+                        && entry.age >= n
+                        && entry.mark_stale(false)
+                    {
+                        self.decay_stats.expiries += 1;
+                    }
+                }
+                // stale buckets queue for the single shadow slot — at
+                // most one re-measuring bucket per run_batch wave keeps
+                // steady-state latency flat while the table heals.  A
+                // slot left pointing at this bucket by an inconsistency
+                // (e.g. the entry was pruned and recreated) is reclaimed
+                // rather than deadlocking the bucket against itself.
+                if entry.state == TuneState::Stale
+                    && (self.remeasuring.is_none()
+                        || matches!(&self.remeasuring, Some((k, _)) if *k == tkey))
+                {
+                    entry.state = TuneState::Remeasuring;
+                    self.remeasuring = Some((tkey.clone(), self.tick));
+                }
+                if entry.state == TuneState::Remeasuring {
+                    // shadow re-measurement: run the doubted mode for
+                    // this whole batch — the output is identical either
+                    // way — and absorb a warm sample (a cold run retries
+                    // on the next batch).  With a doubted winner the
+                    // shadow phase takes two warm batches (loser, then
+                    // winner) before the fresh-vs-fresh re-settle.
+                    let mode = entry.pending.unwrap_or(entry.resolved);
+                    if let Some(secs) = timed(plan, &mut out, mode) {
+                        if finish_remeasure(entry, mode, secs, &mut self.decay_stats) {
+                            self.remeasuring = None;
+                        }
+                    }
+                } else if entry.state == TuneState::Settled
+                    || entry.state == TuneState::Stale
+                    || self.policy == TuningPolicy::Analytic
+                {
                     let mode = if can_fuse { entry.resolved } else { ExecMode::Staged };
-                    let _ = timed(plan, &mut out, mode);
-                } else if !can_fuse {
-                    // only one runnable pipeline: nothing to measure
-                    let _ = timed(plan, &mut out, ExecMode::Staged);
-                    entry.resolved = ExecMode::Staged;
-                    entry.settled = true;
+                    let sample = timed(plan, &mut out, mode);
+                    if entry.state == TuneState::Stale && entry.winner_doubted {
+                        // a stale bucket waiting for the shadow slot
+                        // still serves its winner: use the warm sample
+                        // to refresh the doubted stream early
+                        if let Some(secs) = sample {
+                            entry.ewma_mut(mode).reseed(secs);
+                            entry.winner_doubted = false;
+                        }
+                    }
+                    if entry.state == TuneState::Settled && entry.fusable {
+                        entry.age = entry.age.saturating_add(1);
+                        match (self.decay, sample) {
+                            // warm winner samples feed the EWMA so the
+                            // detector tracks slow drift; one out of
+                            // tolerance re-opens the verdict — and, as
+                            // the new reality's evidence, *replaces* the
+                            // winner's stream so the re-settle compares
+                            // fresh-vs-fresh on both sides
+                            (DecayPolicy::OnDrift { rel_tol }, Some(secs)) => {
+                                if entry.drifted(mode, secs, rel_tol) {
+                                    entry.ewma_mut(mode).reseed(secs);
+                                    if entry.mark_stale(false) {
+                                        self.decay_stats.drift_events += 1;
+                                    }
+                                } else {
+                                    entry.record(mode, secs);
+                                }
+                            }
+                            (DecayPolicy::AfterBatches(_), Some(secs)) => {
+                                entry.record(mode, secs);
+                            }
+                            // Never: verdicts are frozen, keep the
+                            // settled fast path sample-free
+                            _ => {}
+                        }
+                    }
                 } else {
+                    // unsettled + a fusable plan (every !can_fuse entry
+                    // was pinned to Settled/Staged by the correction
+                    // above or at seed time) — refine per the policy
                     match self.policy {
                         TuningPolicy::Measured => {
                             // run both pipelines back to back (identical
@@ -660,10 +1239,7 @@ impl StaticScheduler {
                             let mode = if entry.time_of(entry.analytic).is_none() {
                                 entry.analytic
                             } else {
-                                match entry.analytic {
-                                    ExecMode::Staged => ExecMode::Fused,
-                                    ExecMode::Fused => ExecMode::Staged,
-                                }
+                                other_mode(entry.analytic)
                             };
                             if let Some(secs) = timed(plan, &mut out, mode) {
                                 entry.record(mode, secs);
@@ -687,6 +1263,14 @@ impl StaticScheduler {
             let plans = &self.plans;
             self.tuning.retain(|k, _| plans.contains_key(&k.plan));
             self.tune_prune_len = self.tuning.len();
+            // if the prune took the shadow-slot holder with it, free the
+            // slot — otherwise no completion path ever clears it and
+            // stale buckets could queue behind a ghost forever
+            if let Some((held, _)) = &self.remeasuring {
+                if !self.tuning.contains_key(held) {
+                    self.remeasuring = None;
+                }
+            }
         }
     }
 
@@ -724,6 +1308,9 @@ impl StaticScheduler {
                 .map(|(k, _)| k.clone())
                 .expect("non-empty");
             self.plans.remove(&lru);
+            // the evicted plan's verdicts are doubted, not deleted: if
+            // the plan is rebuilt they re-confirm via the shadow path
+            self.decay_stats.expiries += stale_plan_entries(&mut self.tuning, &lru);
         }
     }
 
@@ -969,6 +1556,85 @@ mod tests {
         assert_eq!(batch_bucket(3), 4);
         assert_eq!(batch_bucket(4), 4);
         assert_eq!(batch_bucket(33), 64);
+    }
+
+    #[test]
+    fn batch_bucket_clamps_past_largest_power_of_two() {
+        // next_power_of_two() panics in debug (wraps to 0 in release)
+        // beyond 2^63; the bucket must clamp instead
+        let top = 1usize << (usize::BITS - 1);
+        assert_eq!(batch_bucket(top), top);
+        assert_eq!(batch_bucket(top + 1), top);
+        assert_eq!(batch_bucket(usize::MAX), top);
+    }
+
+    #[test]
+    fn decay_never_keeps_verdicts_settled_forever() {
+        let (x, w, algo) = small_fusable_layer();
+        let mut s = StaticScheduler::new(2);
+        // settle via injections under the default DecayPolicy::Never
+        s.record_exec_time(algo, &x, &w, ExecMode::Staged, 1.0);
+        s.record_exec_time(algo, &x, &w, ExecMode::Fused, 1e-6);
+        assert!(s.tuning_for(algo, &x, &w).unwrap().settled);
+        // a wildly different winner sample is just recorded — no drift
+        // machinery runs, the verdict stays settled (pre-decay behavior)
+        s.record_exec_time(algo, &x, &w, ExecMode::Fused, 2.0);
+        let snap = s.tuning_for(algo, &x, &w).unwrap();
+        assert!(snap.settled);
+        assert_eq!(s.decay_stats(), DecayStats::default());
+        assert_eq!(s.stale_entries(), 0);
+        for _ in 0..3 {
+            let _ = s.run_batch(algo, &x, &w);
+        }
+        assert_eq!(s.decay_stats(), DecayStats::default());
+    }
+
+    #[test]
+    fn routine_records_do_not_restart_the_afterbatches_lease() {
+        let (x, w, algo) = small_fusable_layer();
+        let mut s = StaticScheduler::new(2);
+        s.set_decay_policy(DecayPolicy::AfterBatches(10));
+        // staged 0.5 ms/img, fused 0.5 µs/img: fused settles as winner
+        s.record_exec_time(algo, &x, &w, ExecMode::Staged, 1e-3);
+        s.record_exec_time(algo, &x, &w, ExecMode::Fused, 1e-6);
+        let _ = s.run_batch(algo, &x, &w); // served once: age 1
+        assert_eq!(s.tuning_for(algo, &x, &w).unwrap().age, 1);
+        // a same-winner sample re-resolves but must NOT restart the
+        // lease — otherwise periodic profiler injections would postpone
+        // expiry forever
+        s.record_exec_time(algo, &x, &w, ExecMode::Fused, 1.1e-6);
+        assert_eq!(s.tuning_for(algo, &x, &w).unwrap().age, 1);
+        // a sample that flips the winner IS a fresh verdict: age restarts
+        s.record_exec_time(algo, &x, &w, ExecMode::Fused, 2.0);
+        let snap = s.tuning_for(algo, &x, &w).unwrap();
+        assert_eq!(snap.resolved, ExecMode::Staged);
+        assert_eq!(snap.age, 0);
+    }
+
+    #[test]
+    fn remeasure_now_resettles_from_fresh_timings() {
+        let (x, w, algo) = small_fusable_layer();
+        let mut s = StaticScheduler::new(2);
+        s.set_decay_policy(DecayPolicy::OnDrift { rel_tol: 0.25 });
+        s.record_exec_time(algo, &x, &w, ExecMode::Staged, 1.0);
+        s.record_exec_time(algo, &x, &w, ExecMode::Fused, 1e-6);
+        // drifted winner sample re-opens the verdict...
+        s.record_exec_time(algo, &x, &w, ExecMode::Fused, 1.0);
+        assert_eq!(s.decay_stats().drift_events, 1);
+        assert!(!s.tuning_for(algo, &x, &w).unwrap().settled);
+        // ...and the operator heals it synchronously: both pipelines are
+        // re-timed on the cached plan and the entry re-settles
+        let snap = s.remeasure_now(algo, &x, &w).expect("tiled");
+        assert!(snap.settled);
+        assert_eq!(snap.state, TuneState::Settled);
+        assert!(snap.staged_secs.unwrap() > 0.0);
+        assert!(snap.fused_secs.unwrap() > 0.0);
+        assert_eq!(s.decay_stats().remeasurements, 1);
+        assert_eq!(s.stale_entries(), 0);
+        // the healed verdict serves correctly
+        let got = s.run_batch(algo, &x, &w);
+        let want = direct::naive(&x, &w);
+        assert!(got.max_abs_diff(&want) < 2e-3 * want.max_abs().max(1.0));
     }
 
     #[test]

@@ -5,7 +5,7 @@
 use super::batcher::{Batch, Batcher};
 use super::metrics::Metrics;
 use super::request::{validate, ConvRequest, ConvResponse};
-use super::scheduler::{StaticScheduler, TuningPolicy};
+use super::scheduler::{DecayPolicy, DecayStats, StaticScheduler, TuningPolicy};
 use crate::conv::{ConvAlgorithm, ConvProblem, Tensor4};
 use crate::model::machine::Machine;
 use crate::model::select::{method_algo, select, select_measured};
@@ -128,6 +128,23 @@ impl ConvService {
         self.scheduler.tuning_disagreements()
     }
 
+    /// Set when settled staged-vs-fused verdicts stop being trusted
+    /// (see [`DecayPolicy`]): never, after serving N batches, or when a
+    /// warm winner sample drifts out of tolerance against its EWMA.
+    pub fn set_decay_policy(&mut self, policy: DecayPolicy) {
+        self.scheduler.set_decay_policy(policy);
+    }
+
+    pub fn decay_policy(&self) -> DecayPolicy {
+        self.scheduler.decay_policy()
+    }
+
+    /// Scheduler decay counters (drift events, expiries, re-measurements,
+    /// flips) — also surfaced in every `Metrics::Snapshot`.
+    pub fn decay_stats(&self) -> DecayStats {
+        self.scheduler.decay_stats()
+    }
+
     fn problem_shape(problem: &ConvProblem) -> LayerShape {
         LayerShape {
             b: problem.batch.max(1),
@@ -209,6 +226,9 @@ impl ConvService {
             })
             .collect();
         self.metrics.record_batch(n, &latencies);
+        // publish the scheduler's decay counters alongside the latency
+        // stats, so one snapshot answers "is the tuning table churning?"
+        self.metrics.record_decay(self.scheduler.decay_stats());
         responses
     }
 }
@@ -327,6 +347,27 @@ mod tests {
         assert!(rs[0].output.max_abs_diff(&want) < 2e-3 * want.max_abs().max(1.0));
         // the disagreement counter is servable regardless of the verdict
         let _ = svc.tuning_disagreements();
+    }
+
+    #[test]
+    fn decay_policy_wires_through_to_snapshot() {
+        let mut svc = service(2);
+        assert_eq!(svc.decay_policy(), DecayPolicy::Never);
+        svc.set_decay_policy(DecayPolicy::OnDrift { rel_tol: 0.5 });
+        assert_eq!(svc.decay_policy(), DecayPolicy::OnDrift { rel_tol: 0.5 });
+        let w = Tensor4::random(problem().weight_shape(), 56);
+        svc.register("conv1", problem(), w);
+        let x = Tensor4::random([1, 3, 12, 12], 73);
+        let mut rs = svc.submit(ConvRequest::new(1, "conv1", x.clone())).unwrap();
+        rs.extend(svc.submit(ConvRequest::new(2, "conv1", x)).unwrap());
+        rs.extend(svc.flush());
+        assert_eq!(rs.len(), 2);
+        // steady single-bucket traffic: counters exist and are quiet
+        let snap = svc.metrics.snapshot();
+        assert_eq!(snap.drift_events, 0);
+        assert_eq!(snap.expiries, 0);
+        assert_eq!(snap.decay_flips, 0);
+        assert_eq!(svc.decay_stats(), DecayStats::default());
     }
 
     #[test]

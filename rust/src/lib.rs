@@ -16,7 +16,9 @@
 //!   autotuner (roofline-seeded, timing-refined; see
 //!   `model::select`), and a static-scheduling coordinator that serves
 //!   convolution requests, re-resolving each layer's staged-vs-fused
-//!   execution per batch-size bucket (`coordinator::scheduler`).
+//!   execution per batch-size bucket with drift-aware verdict decay —
+//!   EWMA-tracked timings, expiring verdicts, bounded shadow
+//!   re-measurement (`coordinator::scheduler`).
 //!
 //! A guided tour of the serving path — `ConvService` → `StaticScheduler`
 //! → `LayerPlan` → the staged/fused pipelines → `ThreadPool` — with the

@@ -42,7 +42,7 @@ pub fn optimize(c_total: usize, cp_total: usize, cache: usize, beta: usize) -> B
             }
             let alpha = if c == c_total { 1.0 } else { 2.0 };
             let objective = (c as f64 + alpha * cp as f64) / (c * cp) as f64;
-            if best.as_ref().map_or(true, |b| objective < b.objective) {
+            if best.as_ref().is_none_or(|b| objective < b.objective) {
                 best = Some(Blocking {
                     c,
                     cp,

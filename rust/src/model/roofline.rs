@@ -169,7 +169,7 @@ pub fn best_tile(method: Method, l: &LayerShape, machine: &Machine) -> TimeBreak
     let mut best: Option<TimeBreakdown> = None;
     for m in 1..=max_m.max(1) {
         let tb = layer_time(method, l, m, machine);
-        if best.as_ref().map_or(true, |b| tb.total < b.total) {
+        if best.as_ref().is_none_or(|b| tb.total < b.total) {
             best = Some(tb);
         }
     }

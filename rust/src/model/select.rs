@@ -169,18 +169,36 @@ pub fn measure_exec(
             fused_budget: machine.cache,
         },
     );
+    measure_exec_with(&mut plan, &x, analytic, pool)
+}
+
+/// The dual-variant core of [`measure_exec`]: time the staged and fused
+/// pipelines of an **already-built** plan on `x` and return the verdict
+/// against the supplied analytic prediction.
+///
+/// Reused by the scheduler's drift-decay re-measurement
+/// (`StaticScheduler::remeasure_now`), which must time its *cached*
+/// plan — warm scratch, real weights — rather than a throwaway rebuild.
+/// Each mode still gets one untimed warm-up run, so a trimmed plan's
+/// scratch regrowth never lands in the timing.
+pub fn measure_exec_with(
+    plan: &mut LayerPlan,
+    x: &Tensor4,
+    analytic: ExecChoice,
+    pool: Option<&ThreadPool>,
+) -> ExecVerdict {
     let mut out = Tensor4::zeros(plan.output_shape(x.shape[0]));
     let time_mode = |plan: &mut LayerPlan, mode: ExecMode, out: &mut Tensor4| -> f64 {
-        plan.run_with_mode(&x, out, pool, mode); // warm-up: grow scratch
+        plan.run_with_mode(x, out, pool, mode); // warm-up: grow scratch
         let t0 = Instant::now();
-        plan.run_with_mode(&x, out, pool, mode);
+        plan.run_with_mode(x, out, pool, mode);
         let dt = t0.elapsed().as_secs_f64();
         std::hint::black_box(&out.data);
         dt
     };
-    let staged_secs = time_mode(&mut plan, ExecMode::Staged, &mut out);
+    let staged_secs = time_mode(plan, ExecMode::Staged, &mut out);
     let fused_secs = if plan.can_fuse() {
-        Some(time_mode(&mut plan, ExecMode::Fused, &mut out))
+        Some(time_mode(plan, ExecMode::Fused, &mut out))
     } else {
         None
     };
@@ -207,7 +225,7 @@ pub fn select(l: &LayerShape, machine: &Machine) -> Choice {
             predicted: tb.total,
             measured: None,
         };
-        if best.as_ref().map_or(true, |b| cand.predicted < b.predicted) {
+        if best.as_ref().is_none_or(|b| cand.predicted < b.predicted) {
             best = Some(cand);
         }
     }

@@ -112,7 +112,7 @@ fn cost_mv_optimized(m: &[Vec<Q>]) -> OpCount {
                 let old = (row_cost(&rows[i]) + row_cost(&rows[j])) as isize;
                 let new = (row_cost(&e) + row_cost(&o) + 2) as isize;
                 let saving = old - new;
-                if saving > 0 && best.as_ref().map_or(true, |b| saving > b.4) {
+                if saving > 0 && best.as_ref().is_none_or(|b| saving > b.4) {
                     best = Some((i, j, e, o, saving));
                 }
             }

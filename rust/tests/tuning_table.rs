@@ -8,7 +8,9 @@
 //! under `set_plan_budget` without losing the shared kernel transform.)
 
 use fftconv::conv::{direct, ConvAlgorithm, ExecMode, Tensor4};
-use fftconv::coordinator::{batch_bucket, StaticScheduler, TuningPolicy};
+use fftconv::coordinator::{
+    batch_bucket, DecayPolicy, StaticScheduler, TuneState, TuningPolicy,
+};
 use fftconv::model::machine::Machine;
 
 /// A small-channel layer every 1MB-cache machine model fuses happily.
@@ -169,4 +171,207 @@ fn both_variant_plans_trim_under_budget_without_losing_kernel() {
     assert_close(&a2b, &x, &w2, "pre-trim w2 (warm)");
     assert_close(&b1, &x, &w1, "post-trim w1");
     assert_close(&b2, &x, &w2, "post-trim w2");
+}
+
+// ---------------------------------------------------------------------
+// Drift-aware decay (ISSUE 4): settled verdicts are leases, not
+// marriages — they expire, go stale, shadow-re-measure, and can flip.
+// ---------------------------------------------------------------------
+
+#[test]
+fn drifted_verdict_is_remeasured_and_flips_within_bounded_batches() {
+    let w = layer_weights(340);
+    let x = batch(2, 341);
+    let mut s = StaticScheduler::new(2);
+    s.set_tuning_policy(TuningPolicy::Hybrid);
+    s.set_decay_policy(DecayPolicy::OnDrift { rel_tol: 0.25 });
+
+    // ground truth settles the bucket on fused (1µs/img vs 1s/img)
+    s.record_exec_time(ALGO, &x, &w, ExecMode::Staged, 2.0);
+    s.record_exec_time(ALGO, &x, &w, ExecMode::Fused, 2e-6);
+    let snap = s.tuning_for(ALGO, &x, &w).unwrap();
+    assert!(snap.settled);
+    assert_eq!(snap.resolved, ExecMode::Fused);
+
+    // a winner sample within tolerance refreshes the EWMA, no drift
+    s.record_exec_time(ALGO, &x, &w, ExecMode::Fused, 2.2e-6);
+    assert!(s.tuning_for(ALGO, &x, &w).unwrap().settled);
+    assert_eq!(s.decay_stats().drift_events, 0);
+
+    // fused degrades catastrophically (thermal-throttle / co-tenant
+    // stand-in): the drifted sample re-opens the verdict
+    s.record_exec_time(ALGO, &x, &w, ExecMode::Fused, 2.0);
+    assert_eq!(s.decay_stats().drift_events, 1);
+    let snap = s.tuning_for(ALGO, &x, &w).unwrap();
+    assert!(!snap.settled, "drift marks the entry unsettled");
+    assert_eq!(snap.state, TuneState::Stale);
+    assert_eq!(
+        snap.resolved,
+        ExecMode::Fused,
+        "the old winner keeps serving until the shadow sample lands"
+    );
+
+    // real batches shadow-re-measure the losing mode (staged); its
+    // fresh real sample (microseconds) beats the fused stream — reseeded
+    // to the drifted 1 s/img sample — so the verdict must flip within a
+    // few batches
+    let mut settled_at = None;
+    for i in 0..4 {
+        let got = s.run_batch(ALGO, &x, &w);
+        assert_close(&got, &x, &w, "re-measuring batch");
+        if s.tuning_for(ALGO, &x, &w).unwrap().settled {
+            settled_at = Some(i);
+            break;
+        }
+    }
+    assert!(settled_at.is_some(), "re-measurement must finish in 4 batches");
+    let snap = s.tuning_for(ALGO, &x, &w).unwrap();
+    assert_eq!(snap.resolved, ExecMode::Staged, "verdict flipped after drift");
+    assert_eq!(snap.state, TuneState::Settled);
+    let d = s.decay_stats();
+    assert_eq!(d.drift_events, 1);
+    assert_eq!(d.remeasurements, 1);
+    assert_eq!(d.flips, 1);
+    // the healed verdict serves normally again
+    let got = s.run_batch(ALGO, &x, &w);
+    assert_close(&got, &x, &w, "post-flip batch");
+    assert_eq!(s.decay_stats().remeasurements, 1, "no re-measure churn");
+}
+
+#[test]
+fn verdicts_expire_after_n_batches_and_reconfirm() {
+    let w = layer_weights(350);
+    let x = batch(2, 351);
+    let mut s = StaticScheduler::new(2);
+    s.set_decay_policy(DecayPolicy::AfterBatches(2));
+    s.record_exec_time(ALGO, &x, &w, ExecMode::Staged, 2.0);
+    s.record_exec_time(ALGO, &x, &w, ExecMode::Fused, 2e-6);
+    assert!(s.tuning_for(ALGO, &x, &w).unwrap().settled);
+
+    // two batches serve within the lease...
+    for i in 0..2 {
+        let got = s.run_batch(ALGO, &x, &w);
+        assert_close(&got, &x, &w, "leased batch");
+        let snap = s.tuning_for(ALGO, &x, &w).unwrap();
+        assert!(snap.settled, "lease still valid on batch {i}");
+        assert_eq!(snap.age, i + 1);
+    }
+    assert_eq!(s.decay_stats().expiries, 0);
+
+    // ...the third re-opens the verdict (expiry) and starts the shadow
+    // re-measurement; within a few more batches it re-settles with a
+    // fresh age
+    let mut resettled = false;
+    for _ in 0..6 {
+        let got = s.run_batch(ALGO, &x, &w);
+        assert_close(&got, &x, &w, "expiring batch");
+        let snap = s.tuning_for(ALGO, &x, &w).unwrap();
+        if s.decay_stats().expiries > 0 && snap.settled {
+            resettled = true;
+            break;
+        }
+    }
+    assert!(resettled, "expired verdict must re-confirm within 6 batches");
+    assert_eq!(s.decay_stats().expiries, 1);
+    assert_eq!(s.decay_stats().remeasurements, 1);
+    let snap = s.tuning_for(ALGO, &x, &w).unwrap();
+    assert!(snap.age <= 2, "re-settling restarts the verdict's age");
+}
+
+#[test]
+fn set_machine_marks_settled_verdicts_stale_not_cleared() {
+    let w = layer_weights(360);
+    let x = batch(2, 361);
+    let mut s = StaticScheduler::new(2);
+    s.set_tuning_policy(TuningPolicy::Hybrid);
+    // settled under the original machine: fused wins by ground truth
+    s.record_exec_time(ALGO, &x, &w, ExecMode::Staged, 2.0);
+    s.record_exec_time(ALGO, &x, &w, ExecMode::Fused, 2e-6);
+    assert!(s.tuning_for(ALGO, &x, &w).unwrap().settled);
+
+    // the operator reports a machine change (same cache so fusion stays
+    // runnable; different bandwidth): the verdict must survive as STALE
+    // — history kept, winner still serving, but no longer trusted
+    s.set_machine(Machine::new("retuned-host", 4, 2000.0, 512, 1 << 20, 80.0));
+    assert_eq!(s.tuning_entries(), 1, "set_machine no longer clears the table");
+    let snap = s.tuning_for(ALGO, &x, &w).unwrap();
+    assert!(!snap.settled, "old-machine verdicts are not blindly trusted");
+    assert_eq!(snap.state, TuneState::Stale);
+    assert_eq!(snap.resolved, ExecMode::Fused, "winner keeps serving meanwhile");
+    assert!(
+        snap.staged_secs.is_some() && snap.fused_secs.is_some(),
+        "timing history survives the transition"
+    );
+    assert_eq!(s.decay_stats().expiries, 1);
+
+    // real traffic heals the entry through the shadow path.  A machine
+    // change doubts BOTH streams (the injected history was measured
+    // under the old machine), so the re-measurement refreshes the loser
+    // and then the winner before re-settling fresh-vs-fresh — the final
+    // winner is whatever this host actually measures, so only the
+    // mechanism is asserted, not the mode.
+    let mut resettled = false;
+    for _ in 0..8 {
+        let got = s.run_batch(ALGO, &x, &w);
+        assert_close(&got, &x, &w, "post-set_machine batch");
+        if s.tuning_for(ALGO, &x, &w).unwrap().settled {
+            resettled = true;
+            break;
+        }
+    }
+    assert!(resettled, "stale verdict re-confirms from live traffic");
+    let snap = s.tuning_for(ALGO, &x, &w).unwrap();
+    assert_eq!(s.decay_stats().remeasurements, 1);
+    assert_eq!(s.stale_entries(), 0);
+    // both streams were replaced by real timings: the injected extremes
+    // (1.0 s/img and 1e-6 s/img) must be gone from the snapshot
+    let (ss, fs) = (snap.staged_secs.unwrap(), snap.fused_secs.unwrap());
+    assert!(ss < 0.5, "staged stream re-measured, not old history");
+    assert!(fs > 1e-6, "fused stream re-measured, not old history");
+}
+
+#[test]
+fn at_most_one_bucket_remeasures_per_wave() {
+    let w = layer_weights(370);
+    let (xa, xb) = (batch(1, 371), batch(4, 372));
+    let mut s = StaticScheduler::new(2);
+    s.set_decay_policy(DecayPolicy::OnDrift { rel_tol: 0.25 });
+    // settle two buckets of the same plan on fused, then drift both
+    for x in [&xa, &xb] {
+        s.record_exec_time(ALGO, x, &w, ExecMode::Staged, x.shape[0] as f64);
+        s.record_exec_time(ALGO, x, &w, ExecMode::Fused, 1e-6 * x.shape[0] as f64);
+        s.record_exec_time(ALGO, x, &w, ExecMode::Fused, x.shape[0] as f64);
+    }
+    assert_eq!(s.decay_stats().drift_events, 2);
+    assert_eq!(s.stale_entries(), 2);
+
+    // bucket A claims the single shadow slot on its first batch; while
+    // it is still re-measuring (the first shadow run is cold: scratch
+    // grows, no sample), bucket B must stay queued as Stale
+    let got = s.run_batch(ALGO, &xa, &w);
+    assert_close(&got, &xa, &w, "bucket A shadow batch");
+    if s.tuning_for(ALGO, &xa, &w).unwrap().state == TuneState::Remeasuring {
+        let got = s.run_batch(ALGO, &xb, &w);
+        assert_close(&got, &xb, &w, "bucket B waiting batch");
+        assert_eq!(
+            s.tuning_for(ALGO, &xb, &w).unwrap().state,
+            TuneState::Stale,
+            "only one bucket may hold the shadow slot"
+        );
+    }
+    // alternating traffic heals both buckets eventually.  (Freeze the
+    // policy first: real-timing noise on these micro-batches could trip
+    // fresh drift events mid-drain — stale entries still heal under
+    // Never, but no new verdicts re-open, so the counters below are
+    // deterministic.)
+    s.set_decay_policy(DecayPolicy::Never);
+    for _ in 0..8 {
+        let _ = s.run_batch(ALGO, &xa, &w);
+        let _ = s.run_batch(ALGO, &xb, &w);
+        if s.stale_entries() == 0 {
+            break;
+        }
+    }
+    assert_eq!(s.stale_entries(), 0, "both buckets healed");
+    assert_eq!(s.decay_stats().remeasurements, 2);
 }

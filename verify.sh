@@ -29,5 +29,8 @@ if [[ "${1:-}" != "--quick" ]]; then
         echo "---- tuning: analytic vs measured exec pick ----"
         grep -E '"(analytic|measured|agree|disagreements|staged_ms|fused_ms)"' \
             BENCH_hotpaths.json | tail -12 || true
+        echo "---- decay: drift events / expiries / flips ----"
+        grep -E '"(policy|rel_tol|drift_events|expiries|remeasurements|flips|shadow_batches|resolved_after)"' \
+            BENCH_hotpaths.json || true
     fi
 fi
