@@ -14,7 +14,7 @@
 //! `make artifacts && cargo run --release --example e2e_convnet`
 
 use fftconv::conv::{self, ConvAlgorithm, Tensor4};
-use fftconv::coordinator::{ConvRequest, ConvService};
+use fftconv::coordinator::{ConvRequest, ConvService, LayerId, Ticket};
 use fftconv::harness::figures::alexnet_totals;
 use fftconv::harness::BenchConfig;
 use fftconv::model::machine::probe_host;
@@ -76,51 +76,61 @@ fn main() -> anyhow::Result<()> {
     );
     let cfg = BenchConfig::from_env();
     let layers = nets::host_layers(1, cfg.max_x.min(34)); // request-sized images
-    let mut svc = ConvService::new(host, 2, 4, Duration::from_millis(5));
-    for layer in &layers {
-        let mut p = layer.problem();
-        p.batch = 4;
-        let w = Tensor4::random(p.weight_shape(), 7);
-        svc.register(layer.name, p, w);
-        let algo = svc.layer(layer.name).unwrap().algo;
-        println!("  registered {:10} -> {}", layer.name, algo.name());
-    }
-    // push 4 requests per layer (fills one batch each)
-    let mut id = 0u64;
-    let mut done = 0usize;
-    for layer in &layers {
+    let mut svc = ConvService::builder(host)
+        .workers(2)
+        .max_batch(4)
+        .max_wait(Duration::from_millis(5))
+        .build();
+    let handles: Vec<LayerId> = layers
+        .iter()
+        .map(|layer| {
+            let mut p = layer.problem();
+            p.batch = 4;
+            let w = Tensor4::random(p.weight_shape(), 7);
+            let id = svc.register(layer.name, p, w)?;
+            println!(
+                "  registered {:10} -> {}",
+                layer.name,
+                svc.layer(id).unwrap().algo.name()
+            );
+            Ok(id)
+        })
+        .collect::<Result<_, fftconv::ServiceError>>()?;
+    // push 4 requests per layer (fills one batch each), claiming each
+    // ticket's own response
+    let mut tickets: Vec<Ticket> = Vec::new();
+    for (li, (layer, id)) in layers.iter().zip(&handles).enumerate() {
         let p = layer.problem();
-        for _ in 0..4 {
-            let x = Tensor4::random([1, p.c_in, p.h, p.w], 100 + id);
-            let rs = svc.submit(ConvRequest::new(id, layer.name, x)).unwrap();
-            done += rs.len();
-            id += 1;
+        for j in 0..4u64 {
+            let x = Tensor4::random([1, p.c_in, p.h, p.w], 100 + 4 * li as u64 + j);
+            tickets.push(svc.submit(ConvRequest::new(*id, x)?)?);
         }
     }
-    done += svc.flush().len();
+    svc.flush();
+    let done = tickets.iter().filter(|t| svc.take(**t).is_some()).count();
     let snap = svc.metrics.snapshot();
     println!(
-        "\n  served {done}/{id} requests in {} batches (mean batch {:.1})",
-        snap.batches, snap.mean_batch
+        "\n  served {done}/{} requests in {} batches (mean batch {:.1})",
+        tickets.len(),
+        snap.batches,
+        snap.mean_batch
     );
     println!(
         "  latency: p50 {:.1} ms, p95 {:.1} ms, max {:.1} ms",
         snap.p50_ms, snap.p95_ms, snap.max_ms
     );
-    assert_eq!(done as u64, id, "every request answered");
+    assert_eq!(done, tickets.len(), "every ticket answered");
 
     // correctness spot check through the full service path
-    let spot = &layers[7]; // vgg5.1-scaled
-    let p = spot.problem();
+    let spot_id = handles[7]; // vgg5.1-scaled
+    let p = layers[7].problem();
     let x = Tensor4::random([1, p.c_in, p.h, p.w], 999);
-    let w = svc.layer(spot.name).unwrap().weights.clone();
-    let rs = {
-        let mut out = svc.submit(ConvRequest::new(id, spot.name, x.clone())).unwrap();
-        out.extend(svc.flush());
-        out
-    };
+    let w = svc.layer(spot_id).unwrap().weights.clone();
+    let t = svc.submit(ConvRequest::new(spot_id, x.clone())?)?;
+    svc.flush();
+    let resp = svc.take(t).expect("spot ticket answered");
     let want = conv::run(ConvAlgorithm::Direct, &x, &w);
-    let diff = rs[0].output.max_abs_diff(&want) / want.max_abs();
+    let diff = resp.output.max_abs_diff(&want) / want.max_abs();
     println!("  service output vs direct oracle: rel diff {diff:.2e} ✓");
     assert!(diff < 1e-3);
 
@@ -128,7 +138,8 @@ fn main() -> anyhow::Result<()> {
     println!("\n== Phase 3: AlexNet conv-total comparison (paper headline)");
     let (wino_ms, fft_ms) = alexnet_totals(&cfg);
     println!(
-        "  host-scaled AlexNet conv total: winograd {wino_ms:.1} ms, regular-fft {fft_ms:.1} ms ({:.2}x)",
+        "  host-scaled AlexNet conv total: winograd {wino_ms:.1} ms, \
+         regular-fft {fft_ms:.1} ms ({:.2}x)",
         wino_ms / fft_ms
     );
     println!(

@@ -13,7 +13,7 @@
 use fftconv::conv::{
     self, ConvAlgorithm, ConvProblem, ExecPolicy, LayerPlan, PlanOptions, Tensor4,
 };
-use fftconv::coordinator::{DecayPolicy, StaticScheduler, TuningPolicy};
+use fftconv::coordinator::{ConvRequest, ConvService, DecayPolicy, StaticScheduler, TuningPolicy};
 use std::time::Instant;
 
 fn main() {
@@ -139,6 +139,12 @@ fn main() {
     //       feed an EWMA; one deviating >rel_tol re-opens the verdict and
     //       shadow-re-measures the losing mode (at most one re-measuring
     //       bucket per batch wave, so serving latency stays flat).
+    //   DecayPolicy::OnDriftSigma{k} -- the variance-aware flavor: the
+    //       EWMA also tracks the stream's spread and only a sample more
+    //       than k standard deviations from the mean re-opens the
+    //       verdict — use on noisy co-tenanted hosts where a fixed
+    //       rel_tol would churn on every scheduling hiccup (k = 3 is
+    //       the usual control-chart setting).
     sched.set_decay_policy(DecayPolicy::OnDrift { rel_tol: 0.5 });
     for b in [8usize, 8, 8] {
         let xb = Tensor4::random([b, problem.c_in, problem.h, problem.w], 40 + b as u64);
@@ -149,4 +155,44 @@ fn main() {
         sched.decay_stats(),
         sched.stale_entries()
     );
+
+    // --- the v2 serving surface: handles, tickets, builder, errors -------
+    // ConvService is the layer above the scheduler: named registration
+    // (once) returns a copyable LayerId; submits carry the handle and
+    // return a Ticket; each caller claims exactly its own responses.
+    println!("\nserving API v2 (LayerId + Ticket):");
+    let mut svc = ConvService::builder(fftconv::model::machine::xeon_gold())
+        .workers(2)
+        .max_batch(2)
+        .max_wait(std::time::Duration::from_millis(2))
+        .tuning_policy(TuningPolicy::Hybrid)
+        .build();
+    let conv1 = svc
+        .register("conv1", problem, w.clone())
+        .expect("fresh name, matching weights");
+    assert_eq!(svc.resolve("conv1"), Some(conv1)); // name -> handle, once
+    let (xa, xb) = (
+        Tensor4::random([1, problem.c_in, problem.h, problem.w], 50),
+        Tensor4::random([1, problem.c_in, problem.h, problem.w], 51),
+    );
+    let ta = svc.submit(ConvRequest::new(conv1, xa).unwrap()).unwrap();
+    let tb = svc.submit(ConvRequest::new(conv1, xb).unwrap()).unwrap();
+    svc.flush();
+    let (ra, rb) = (svc.take(ta).unwrap(), svc.take(tb).unwrap());
+    println!(
+        "  ticket {} -> batch of {}, {:.2} ms; ticket {} -> batch of {}",
+        ta.id(),
+        ra.batch_size,
+        ra.latency * 1e3,
+        tb.id(),
+        rb.batch_size,
+    );
+    // weight updates are first-class: the plan re-warms, stale tuning
+    // entries for the old weights are deleted, the next batch serves
+    // the new weights
+    let w2 = Tensor4::random(problem.weight_shape(), 52);
+    svc.swap_weights(conv1, w2).expect("same weight shape");
+    // errors are typed values, not panics or strings
+    let err = ConvRequest::new(conv1, Tensor4::zeros([2, 1, 1, 1])).unwrap_err();
+    println!("  structured error demo: {err}");
 }

@@ -1,11 +1,13 @@
 //! Serving demo: a steady stream of mixed-layer convolution requests
 //! through the batching coordinator, with latency metrics — the
-//! "coordinator as a service" view of the L3 layer.
+//! "coordinator as a service" view of the L3 layer, on the v2 API:
+//! layers are addressed by `LayerId` handles, submits return `Ticket`s,
+//! and each caller claims exactly its own responses.
 //!
 //! `cargo run --release --example serve`
 
 use fftconv::conv::{ConvProblem, Tensor4};
-use fftconv::coordinator::{ConvRequest, ConvService};
+use fftconv::coordinator::{ConvRequest, ConvService, LayerId};
 use fftconv::model::machine::probe_host;
 use fftconv::util::Rng;
 use std::time::Duration;
@@ -13,7 +15,11 @@ use std::time::Duration;
 fn main() {
     let host = probe_host();
     let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    let mut svc = ConvService::new(host, workers, 8, Duration::from_millis(2));
+    let mut svc = ConvService::builder(host)
+        .workers(workers)
+        .max_batch(8)
+        .max_wait(Duration::from_millis(2))
+        .build();
 
     // three registered layers of different shapes
     let specs = [
@@ -21,29 +27,46 @@ fn main() {
         ("wide", ConvProblem { batch: 8, c_in: 64, c_out: 32, h: 14, w: 14, r: 3 }),
         ("fivebyfive", ConvProblem { batch: 8, c_in: 16, c_out: 32, h: 15, w: 15, r: 5 }),
     ];
-    for (name, p) in &specs {
-        svc.register(name, *p, Tensor4::random(p.weight_shape(), 11));
-        println!(
-            "registered '{name}' -> {}",
-            svc.layer(name).unwrap().algo.name()
-        );
-    }
+    let handles: Vec<LayerId> = specs
+        .iter()
+        .map(|(name, p)| {
+            let id = svc
+                .register(name, *p, Tensor4::random(p.weight_shape(), 11))
+                .expect("fresh name, matching weights");
+            println!(
+                "registered '{name}' -> {} (handle {})",
+                svc.layer(id).unwrap().algo.name(),
+                id.index()
+            );
+            id
+        })
+        .collect();
 
-    // 120 requests in randomized layer order, ticking the deadline poller
+    // 120 requests in randomized layer order, ticking the deadline
+    // poller; tickets accumulate and are claimed at the end
     let mut rng = Rng::new(2024);
-    let mut answered = 0usize;
-    let total = 120u64;
-    for id in 0..total {
-        let (name, p) = specs[rng.below(specs.len())];
-        let x = Tensor4::random([1, p.c_in, p.h, p.w], id);
-        answered += svc.submit(ConvRequest::new(id, name, x)).unwrap().len();
-        if id % 16 == 0 {
+    let total = 120usize;
+    let mut tickets = Vec::with_capacity(total);
+    for i in 0..total {
+        let which = rng.below(specs.len());
+        let p = specs[which].1;
+        let x = Tensor4::random([1, p.c_in, p.h, p.w], i as u64);
+        let req = ConvRequest::new(handles[which], x).expect("single image");
+        tickets.push(svc.submit(req).expect("registered layer"));
+        if i % 16 == 0 {
             std::thread::sleep(Duration::from_millis(3));
-            answered += svc.tick().len();
+            svc.tick();
         }
     }
-    answered += svc.flush().len();
-    assert_eq!(answered as u64, total);
+    svc.flush();
+
+    // every ticket resolves to exactly its own response
+    let mut answered = 0usize;
+    for t in &tickets {
+        answered += usize::from(svc.take(*t).is_some());
+    }
+    assert_eq!(answered, total);
+    assert_eq!(svc.unclaimed(), 0);
 
     let snap = svc.metrics.snapshot();
     println!("\nserved {answered} requests");

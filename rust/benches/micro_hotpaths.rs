@@ -8,8 +8,10 @@
 //! docs/ARCHITECTURE.md §BENCH).
 
 use fftconv::conv::gemm::{cgemm_acc, gemm_acc};
-use fftconv::conv::{ConvAlgorithm, ExecMode, ExecPolicy, LayerPlan, PlanOptions, Tensor4, TileGrid};
-use fftconv::coordinator::{DecayPolicy, StaticScheduler};
+use fftconv::conv::{
+    ConvAlgorithm, ConvProblem, ExecMode, ExecPolicy, LayerPlan, PlanOptions, Tensor4, TileGrid,
+};
+use fftconv::coordinator::{ConvRequest, ConvService, DecayPolicy, StaticScheduler};
 use fftconv::fft::{C32, Plan, TileFft};
 use fftconv::model::machine::xeon_gold;
 use fftconv::model::select::{choose_exec, measure_exec};
@@ -21,6 +23,7 @@ use fftconv::util::Rng;
 use fftconv::winograd::matrices::winograd_matrices_f32;
 use fftconv::winograd::program::apply_2d_f32;
 use std::collections::BTreeMap;
+use std::time::Duration;
 
 fn main() {
     let mut t = Table::new("micro hot paths", &["op", "params", "median µs", "GF/s"]);
@@ -153,6 +156,47 @@ fn main() {
         ]);
         json.insert(
             "scheduler_batch8_us".to_string(),
+            Json::Num(r.median.as_secs_f64() * 1e6),
+        );
+    }
+
+    // service submit path: intake cost of one request through the v2
+    // typed-handle API (LayerId-keyed batcher, ticket allocation — no
+    // string clone/hash, no weight re-fingerprint on this path).  Every
+    // 8th submit fills a batch and executes; the median sits on the
+    // pure-intake submits, which is the number this line tracks.
+    {
+        let mut svc = ConvService::builder(xeon_gold())
+            .workers(2)
+            .max_batch(8)
+            .max_wait(Duration::from_secs(3600))
+            .build();
+        let p = ConvProblem {
+            batch: 8,
+            c_in: 4,
+            c_out: 4,
+            h: 12,
+            w: 12,
+            r: 3,
+        };
+        let layer = svc
+            .register("bench", p, Tensor4::random(p.weight_shape(), 14))
+            .expect("register");
+        let x = Tensor4::random([1, 4, 12, 12], 15);
+        let r = bench("submit", 400, || {
+            let req = ConvRequest::new(layer, x.clone()).expect("single image");
+            std::hint::black_box(svc.submit(req).expect("known layer"));
+        });
+        svc.flush();
+        let _ = svc.drain_completed();
+        t.row(vec![
+            "service-submit".into(),
+            "LayerId intake, batch fill every 8".into(),
+            format!("{:.2}", r.median.as_secs_f64() * 1e6),
+            "-".into(),
+        ]);
+        json.insert(
+            "submit_path_us".to_string(),
             Json::Num(r.median.as_secs_f64() * 1e6),
         );
     }

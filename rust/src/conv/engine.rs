@@ -305,7 +305,7 @@ struct WorkerState {
 }
 
 impl WorkerState {
-    fn new(codelets: Codelets, t: usize, p: usize, m: usize, is_fft: bool, cap: usize) -> WorkerState {
+    fn new(codelets: Codelets, t: usize, p: usize, m: usize, is_fft: bool, cap: usize) -> Self {
         WorkerState {
             codelets,
             xb: vec![0.0; cap * t * t],

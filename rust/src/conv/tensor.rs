@@ -32,7 +32,9 @@ impl Tensor4 {
 
     #[inline]
     pub fn idx(&self, a: usize, b: usize, c: usize, d: usize) -> usize {
-        debug_assert!(a < self.shape[0] && b < self.shape[1] && c < self.shape[2] && d < self.shape[3]);
+        debug_assert!(
+            a < self.shape[0] && b < self.shape[1] && c < self.shape[2] && d < self.shape[3]
+        );
         ((a * self.shape[1] + b) * self.shape[2] + c) * self.shape[3] + d
     }
 

@@ -5,16 +5,31 @@
 //! Policy: flush a signature group when it reaches `max_batch`, or when
 //! the oldest member has waited `max_wait` (latency bound), or on
 //! explicit `drain()`.
+//!
+//! Since the v2 API, groups are keyed on `(LayerId, input shape)` — all
+//! `Copy` words — so a `push` neither clones a `String` nor re-hashes
+//! one, and `poll_expired`/`drain` compare keys by value.
 
-use super::request::ConvRequest;
+use super::request::{ConvRequest, LayerId, Ticket};
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
-/// A group of requests sharing (layer, input shape), plus arrival times.
+/// One enqueued request: the claim ticket `submit` handed out, the
+/// request itself, and its arrival time (latency accounting).
+#[derive(Debug)]
+pub struct Pending {
+    pub ticket: Ticket,
+    pub request: ConvRequest,
+    pub enqueued: Instant,
+}
+
+/// A group of requests sharing `(layer, input shape)`.
 #[derive(Debug)]
 pub struct Batch {
-    pub layer: String,
-    pub requests: Vec<(ConvRequest, Instant)>,
+    pub layer: LayerId,
+    /// the shared (1, C, H, W) input shape of every member
+    pub shape: [usize; 4],
+    pub requests: Vec<Pending>,
 }
 
 impl Batch {
@@ -31,29 +46,32 @@ impl Batch {
 pub struct Batcher {
     pub max_batch: usize,
     pub max_wait: Duration,
-    pending: HashMap<(String, [usize; 4]), Vec<(ConvRequest, Instant)>>,
+    pending: HashMap<(LayerId, [usize; 4]), Vec<Pending>>,
 }
 
 impl Batcher {
     pub fn new(max_batch: usize, max_wait: Duration) -> Batcher {
-        assert!(max_batch >= 1);
         Batcher {
-            max_batch,
+            max_batch: max_batch.max(1),
             max_wait,
             pending: HashMap::new(),
         }
     }
 
     /// Add a request; returns a full batch if this arrival filled one.
-    pub fn push(&mut self, req: ConvRequest) -> Option<Batch> {
-        let key = req.signature();
-        let now = Instant::now();
-        let group = self.pending.entry(key.clone()).or_default();
-        group.push((req, now));
+    pub fn push(&mut self, ticket: Ticket, request: ConvRequest) -> Option<Batch> {
+        let key = request.signature();
+        let group = self.pending.entry(key).or_default();
+        group.push(Pending {
+            ticket,
+            request,
+            enqueued: Instant::now(),
+        });
         if group.len() >= self.max_batch {
             let requests = self.pending.remove(&key).unwrap();
             Some(Batch {
                 layer: key.0,
+                shape: key.1,
                 requests,
             })
         } else {
@@ -67,12 +85,12 @@ impl Batcher {
     /// whatever order the hash map iterates in.
     pub fn poll_expired(&mut self) -> Vec<Batch> {
         let now = Instant::now();
-        let mut expired: Vec<((String, [usize; 4]), Instant)> = self
+        let mut expired: Vec<((LayerId, [usize; 4]), Instant)> = self
             .pending
             .iter()
             .filter_map(|(k, reqs)| {
-                let (_, t0) = reqs.first()?;
-                (now.duration_since(*t0) >= self.max_wait).then(|| (k.clone(), *t0))
+                let head = reqs.first()?;
+                (now.duration_since(head.enqueued) >= self.max_wait).then_some((*k, head.enqueued))
             })
             .collect();
         expired.sort_by_key(|(_, t0)| *t0);
@@ -82,6 +100,7 @@ impl Batcher {
                 let requests = self.pending.remove(&key).unwrap();
                 Batch {
                     layer: key.0,
+                    shape: key.1,
                     requests,
                 }
             })
@@ -92,14 +111,40 @@ impl Batcher {
     /// group first.
     pub fn drain(&mut self) -> Vec<Batch> {
         let mut groups: Vec<_> = self.pending.drain().collect();
-        groups.sort_by_key(|(_, reqs)| reqs.first().map(|(_, t0)| *t0));
+        groups.sort_by_key(|(_, reqs)| reqs.first().map(|p| p.enqueued));
         groups
             .into_iter()
             .map(|(key, requests)| Batch {
                 layer: key.0,
+                shape: key.1,
                 requests,
             })
             .collect()
+    }
+
+    /// Flush every pending group of one layer (all shapes), oldest
+    /// first — `unregister` uses this so no ticket dangles when its
+    /// layer goes away.
+    pub fn drain_layer(&mut self, layer: LayerId) -> Vec<Batch> {
+        let keys: Vec<(LayerId, [usize; 4])> = self
+            .pending
+            .keys()
+            .filter(|(l, _)| *l == layer)
+            .copied()
+            .collect();
+        let mut groups: Vec<Batch> = keys
+            .into_iter()
+            .map(|key| {
+                let requests = self.pending.remove(&key).unwrap();
+                Batch {
+                    layer: key.0,
+                    shape: key.1,
+                    requests,
+                }
+            })
+            .collect();
+        groups.sort_by_key(|b| b.requests.first().map(|p| p.enqueued));
+        groups
     }
 
     pub fn pending_count(&self) -> usize {
@@ -112,35 +157,44 @@ mod tests {
     use super::*;
     use crate::conv::Tensor4;
 
-    fn req(id: u64, layer: &str) -> ConvRequest {
-        ConvRequest::new(id, layer, Tensor4::zeros([1, 2, 8, 8]))
+    fn req(layer: LayerId) -> ConvRequest {
+        ConvRequest::new(layer, Tensor4::zeros([1, 2, 8, 8])).unwrap()
     }
+
+    fn push(b: &mut Batcher, id: u64, layer: LayerId) -> Option<Batch> {
+        b.push(Ticket { svc: 0, seq: id }, req(layer))
+    }
+
+    const L: LayerId = LayerId { svc: 0, slot: 0 };
+    const LA: LayerId = LayerId { svc: 0, slot: 1 };
+    const LB: LayerId = LayerId { svc: 0, slot: 2 };
 
     #[test]
     fn flushes_at_max_batch() {
         let mut b = Batcher::new(3, Duration::from_secs(60));
-        assert!(b.push(req(1, "l")).is_none());
-        assert!(b.push(req(2, "l")).is_none());
-        let batch = b.push(req(3, "l")).expect("third request fills batch");
+        assert!(push(&mut b, 1, L).is_none());
+        assert!(push(&mut b, 2, L).is_none());
+        let batch = push(&mut b, 3, L).expect("third request fills batch");
         assert_eq!(batch.len(), 3);
+        assert_eq!(batch.shape, [1, 2, 8, 8]);
         assert_eq!(b.pending_count(), 0);
     }
 
     #[test]
     fn different_layers_batch_separately() {
         let mut b = Batcher::new(2, Duration::from_secs(60));
-        assert!(b.push(req(1, "a")).is_none());
-        assert!(b.push(req(2, "b")).is_none());
+        assert!(push(&mut b, 1, LA).is_none());
+        assert!(push(&mut b, 2, LB).is_none());
         assert_eq!(b.pending_count(), 2);
-        let batch = b.push(req(3, "a")).unwrap();
-        assert_eq!(batch.layer, "a");
+        let batch = push(&mut b, 3, LA).unwrap();
+        assert_eq!(batch.layer, LA);
         assert_eq!(batch.len(), 2);
     }
 
     #[test]
     fn poll_expired_respects_deadline() {
         let mut b = Batcher::new(100, Duration::from_millis(5));
-        b.push(req(1, "l"));
+        push(&mut b, 1, L);
         assert!(b.poll_expired().is_empty());
         std::thread::sleep(Duration::from_millis(10));
         let batches = b.poll_expired();
@@ -151,11 +205,11 @@ mod tests {
     #[test]
     fn drain_flushes_all_groups() {
         let mut b = Batcher::new(100, Duration::from_secs(60));
-        b.push(req(1, "a"));
-        b.push(req(2, "b"));
-        b.push(req(3, "b"));
+        push(&mut b, 1, LA);
+        push(&mut b, 2, LB);
+        push(&mut b, 3, LB);
         let mut batches = b.drain();
-        batches.sort_by(|x, y| x.layer.cmp(&y.layer));
+        batches.sort_by_key(|x| x.layer);
         assert_eq!(batches.len(), 2);
         assert_eq!(batches[1].len(), 2);
         assert_eq!(b.pending_count(), 0);
@@ -164,10 +218,10 @@ mod tests {
     #[test]
     fn preserves_arrival_order_within_batch() {
         let mut b = Batcher::new(3, Duration::from_secs(60));
-        b.push(req(7, "l"));
-        b.push(req(8, "l"));
-        let batch = b.push(req(9, "l")).unwrap();
-        let ids: Vec<u64> = batch.requests.iter().map(|(r, _)| r.id).collect();
+        push(&mut b, 7, L);
+        push(&mut b, 8, L);
+        let batch = push(&mut b, 9, L).unwrap();
+        let ids: Vec<u64> = batch.requests.iter().map(|p| p.ticket.id()).collect();
         assert_eq!(ids, [7, 8, 9]);
     }
 
@@ -176,28 +230,38 @@ mod tests {
         let mut b = Batcher::new(100, Duration::from_secs(60));
         // three groups arriving b, c, a — drain order must follow arrival
         // (oldest head first), not the hash map's iteration order
-        b.push(req(1, "b"));
+        let (la, lb, lc) = (
+            LayerId { svc: 0, slot: 10 },
+            LayerId { svc: 0, slot: 11 },
+            LayerId { svc: 0, slot: 12 },
+        );
+        push(&mut b, 1, lb);
         std::thread::sleep(Duration::from_millis(2));
-        b.push(req(2, "c"));
+        push(&mut b, 2, lc);
         std::thread::sleep(Duration::from_millis(2));
-        b.push(req(3, "a"));
-        b.push(req(4, "b")); // a later arrival must not reorder group b
-        let layers: Vec<String> = b.drain().into_iter().map(|x| x.layer).collect();
-        assert_eq!(layers, ["b", "c", "a"]);
+        push(&mut b, 3, la);
+        push(&mut b, 4, lb); // a later arrival must not reorder group b
+        let layers: Vec<LayerId> = b.drain().into_iter().map(|x| x.layer).collect();
+        assert_eq!(layers, [lb, lc, la]);
         assert_eq!(b.pending_count(), 0);
     }
 
     #[test]
     fn poll_expired_flushes_oldest_group_first() {
         let mut b = Batcher::new(100, Duration::from_millis(5));
-        b.push(req(1, "late"));
+        let (late, later, fresh) = (
+            LayerId { svc: 0, slot: 20 },
+            LayerId { svc: 0, slot: 21 },
+            LayerId { svc: 0, slot: 22 },
+        );
+        push(&mut b, 1, late);
         std::thread::sleep(Duration::from_millis(2));
-        b.push(req(2, "later"));
+        push(&mut b, 2, later);
         std::thread::sleep(Duration::from_millis(10));
-        b.push(req(3, "fresh")); // under deadline: must stay pending
+        push(&mut b, 3, fresh); // under deadline: must stay pending
         let batches = b.poll_expired();
-        let layers: Vec<&str> = batches.iter().map(|x| x.layer.as_str()).collect();
-        assert_eq!(layers, ["late", "later"]);
+        let layers: Vec<LayerId> = batches.iter().map(|x| x.layer).collect();
+        assert_eq!(layers, [late, later]);
         for batch in &batches {
             assert_eq!(batch.len(), 1);
         }
@@ -210,10 +274,10 @@ mod tests {
         // deadline expires: the fill must win, and the subsequent poll
         // must neither duplicate nor lose requests
         let mut b = Batcher::new(2, Duration::from_millis(3));
-        assert!(b.push(req(1, "l")).is_none());
+        assert!(push(&mut b, 1, L).is_none());
         std::thread::sleep(Duration::from_millis(6)); // r1 is now overdue
-        let batch = b.push(req(2, "l")).expect("second request fills the batch");
-        let ids: Vec<u64> = batch.requests.iter().map(|(r, _)| r.id).collect();
+        let batch = push(&mut b, 2, L).expect("second request fills the batch");
+        let ids: Vec<u64> = batch.requests.iter().map(|p| p.ticket.id()).collect();
         assert_eq!(ids, [1, 2], "both requests flushed, oldest first");
         assert!(b.poll_expired().is_empty(), "nothing left to expire");
         assert_eq!(b.pending_count(), 0);
@@ -222,12 +286,25 @@ mod tests {
     #[test]
     fn expired_batch_preserves_arrival_order() {
         let mut b = Batcher::new(100, Duration::from_millis(3));
-        b.push(req(5, "l"));
-        b.push(req(6, "l"));
+        push(&mut b, 5, L);
+        push(&mut b, 6, L);
         std::thread::sleep(Duration::from_millis(8));
         let batches = b.poll_expired();
         assert_eq!(batches.len(), 1);
-        let ids: Vec<u64> = batches[0].requests.iter().map(|(r, _)| r.id).collect();
+        let ids: Vec<u64> = batches[0].requests.iter().map(|p| p.ticket.id()).collect();
         assert_eq!(ids, [5, 6]);
+    }
+
+    #[test]
+    fn drain_layer_takes_only_that_layer() {
+        let mut b = Batcher::new(100, Duration::from_secs(60));
+        push(&mut b, 1, LA);
+        push(&mut b, 2, LB);
+        push(&mut b, 3, LA);
+        let batches = b.drain_layer(LA);
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].layer, LA);
+        assert_eq!(batches[0].len(), 2);
+        assert_eq!(b.pending_count(), 1, "other layer untouched");
     }
 }

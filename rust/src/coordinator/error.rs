@@ -1,0 +1,106 @@
+//! Structured errors for the serving API.
+//!
+//! Every fallible entry point on [`ConvService`] / [`ConvRequest`]
+//! returns `Result<_, ServiceError>` — no `assert!` is reachable from
+//! bad user input, and callers can match on the failure instead of
+//! parsing a formatted `String`.
+//!
+//! [`ConvService`]: super::ConvService
+//! [`ConvRequest`]: super::ConvRequest
+
+use super::request::LayerId;
+use std::fmt;
+
+/// Why a serving-API call was rejected.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServiceError {
+    /// The [`LayerId`] does not name a live layer (never registered on
+    /// this service, or since unregistered — ids are not reused).
+    UnknownLayer { id: LayerId },
+    /// `register*` was called with a name the directory already maps;
+    /// re-registering a layer is expressed as `swap_weights` instead.
+    DuplicateLayer { name: String },
+    /// A request's input shape does not match the registered problem.
+    ShapeMismatch {
+        got: [usize; 4],
+        want: [usize; 4],
+    },
+    /// Weights passed to `register*` / `swap_weights` do not match the
+    /// problem's `(K, C, r, r)` weight shape.
+    WeightShape {
+        got: [usize; 4],
+        want: [usize; 4],
+    },
+    /// The `ConvProblem` itself is unusable: a zero channel/kernel
+    /// dimension, or a kernel larger than the input (`h < r` / `w < r`
+    /// leaves no valid output pixels) — rejected at registration so the
+    /// engine's `h - r + 1` arithmetic is never reached with it.
+    InvalidProblem {
+        c_in: usize,
+        c_out: usize,
+        h: usize,
+        w: usize,
+        r: usize,
+    },
+    /// A [`ConvRequest`] was built from a multi-image tensor; requests
+    /// carry exactly one image (the batcher does the batching).
+    ///
+    /// [`ConvRequest`]: super::ConvRequest
+    BatchedInput { got: usize },
+}
+
+impl fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServiceError::UnknownLayer { id } => {
+                write!(f, "unknown layer {id:?} (unregistered or never registered)")
+            }
+            ServiceError::DuplicateLayer { name } => {
+                write!(f, "layer '{name}' is already registered (use swap_weights to update it)")
+            }
+            ServiceError::ShapeMismatch { got, want } => {
+                write!(f, "input shape {got:?} does not match the registered layer's {want:?}")
+            }
+            ServiceError::WeightShape { got, want } => {
+                write!(f, "weight shape {got:?} does not match the problem's {want:?}")
+            }
+            ServiceError::InvalidProblem { c_in, c_out, h, w, r } => {
+                write!(
+                    f,
+                    "unusable problem (c_in {c_in}, c_out {c_out}, {h}x{w} input, \
+                     {r}x{r} kernel): dimensions must be nonzero and the kernel \
+                     must fit the input"
+                )
+            }
+            ServiceError::BatchedInput { got } => {
+                write!(f, "requests carry single images; got a batch of {got}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_actionable() {
+        let e = ServiceError::ShapeMismatch {
+            got: [1, 3, 8, 8],
+            want: [1, 2, 8, 8],
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("[1, 3, 8, 8]") && msg.contains("[1, 2, 8, 8]"));
+        let d = ServiceError::DuplicateLayer { name: "conv1".into() };
+        assert!(d.to_string().contains("conv1"));
+    }
+
+    #[test]
+    fn errors_are_matchable_values() {
+        let e = ServiceError::BatchedInput { got: 4 };
+        assert_eq!(e, ServiceError::BatchedInput { got: 4 });
+        assert_ne!(e, ServiceError::BatchedInput { got: 2 });
+    }
+}

@@ -20,6 +20,9 @@ struct Inner {
     dropped: u64,
     /// last scheduler decay counters fed via `record_decay`
     decay: DecayStats,
+    /// completion-store depth fed via `record_unclaimed` (a gauge:
+    /// responses executed but not yet claimed by their ticket)
+    unclaimed: u64,
 }
 
 /// A point-in-time snapshot.
@@ -44,6 +47,10 @@ pub struct Snapshot {
     pub remeasurements: u64,
     /// re-measurements that changed the winning execution mode
     pub decay_flips: u64,
+    /// responses sitting in the completion store awaiting their ticket
+    /// (a steadily growing value means a tenant is abandoning tickets —
+    /// `drain_completed` is the relief valve)
+    pub unclaimed: u64,
 }
 
 impl Default for Metrics {
@@ -63,6 +70,7 @@ impl Metrics {
                 window: window.max(1),
                 dropped: 0,
                 decay: DecayStats::default(),
+                unclaimed: 0,
             }),
         }
     }
@@ -92,6 +100,12 @@ impl Metrics {
     /// quantiles.
     pub fn record_decay(&self, stats: DecayStats) {
         self.inner.lock().unwrap().decay = stats;
+    }
+
+    /// Publish the completion-store depth (latest value wins) — the
+    /// service updates it whenever responses complete or are claimed.
+    pub fn record_unclaimed(&self, n: usize) {
+        self.inner.lock().unwrap().unclaimed = n as u64;
     }
 
     pub fn snapshot(&self) -> Snapshot {
@@ -126,6 +140,7 @@ impl Metrics {
             expiries: g.decay.expiries,
             remeasurements: g.decay.remeasurements,
             decay_flips: g.decay.flips,
+            unclaimed: g.unclaimed,
         }
     }
 }
@@ -202,6 +217,16 @@ mod tests {
         let s1 = m1.snapshot();
         assert!((s1.p50_ms - 7.0).abs() < 1e-9);
         assert!((s1.p95_ms - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unclaimed_gauge_tracks_latest_value() {
+        let m = Metrics::default();
+        assert_eq!(m.snapshot().unclaimed, 0);
+        m.record_unclaimed(5);
+        assert_eq!(m.snapshot().unclaimed, 5);
+        m.record_unclaimed(0);
+        assert_eq!(m.snapshot().unclaimed, 0, "a gauge, not a counter");
     }
 
     #[test]

@@ -2,27 +2,42 @@
 //! algorithm selection, and the paper's static fork-join scheduling (§3),
 //! over the native engine and/or the PJRT runtime.
 //!
-//! Dataflow:
+//! Dataflow (the v2 serving surface — typed handles in, tickets out):
 //!
 //! ```text
-//! ConvRequest --> Batcher --(same-shape batches)--> ConvService
-//!                                 |                     |
-//!                                 v                     v
-//!                        StaticScheduler  --->  conv engine shards
-//!                                 |                     |
-//!                                 +---- Metrics <-------+
+//! register(name, ..) -> LayerId          submit(ConvRequest) -> Ticket
+//!                         |                        |
+//!                         v                        v
+//!               +------------------+      +---------------+
+//!               |   ConvService    |----->|    Batcher    |  (LayerId,
+//!               +------------------+      +---------------+   shape)-keyed
+//!                  |           ^                  |
+//!                  |           | take(Ticket) /   v  same-shape batches
+//!                  |           | drain_completed
+//!                  v           |                  v
+//!        StaticScheduler   completion  <---  execute_batch
+//!         (PlanHandle ->     store            (run_planned)
+//!          conv engine)        ^                  |
+//!                  |           +---- responses ---+
+//!                  +---------- Metrics <----------+
 //! ```
+//!
+//! Every fallible call returns [`ServiceError`] — see the module docs of
+//! [`service`] for the v2 API tour and [`error`] for the taxonomy.
 
 pub mod batcher;
+pub mod error;
 pub mod metrics;
 pub mod request;
 pub mod scheduler;
 pub mod service;
 
-pub use batcher::Batcher;
+pub use batcher::{Batch, Batcher, Pending};
+pub use error::ServiceError;
 pub use metrics::Metrics;
-pub use request::{ConvRequest, ConvResponse};
+pub use request::{ConvRequest, ConvResponse, LayerId, Ticket};
 pub use scheduler::{
-    batch_bucket, DecayPolicy, DecayStats, StaticScheduler, TuneSnapshot, TuneState, TuningPolicy,
+    batch_bucket, DecayPolicy, DecayStats, PlanHandle, StaticScheduler, TuneSnapshot, TuneState,
+    TuningPolicy,
 };
-pub use service::ConvService;
+pub use service::{ConvService, ConvServiceBuilder, LayerEntry, ServiceConfig};

@@ -1,37 +1,95 @@
-//! Request/response types for the convolution service.
+//! Request/response types for the convolution service, v2: layers are
+//! addressed by a copyable [`LayerId`] handle (no `String` on the hot
+//! path) and completed work is claimed with a [`Ticket`].
 
+use super::error::ServiceError;
 use crate::conv::{ConvProblem, Tensor4};
+
+/// Typed handle for a registered layer — a small copyable id the
+/// service hands out from `register*` and resolves from a name via
+/// `ConvService::resolve`.  Copyable and hashable in O(1): request
+/// signatures, batch keys, and plan lookups carry this instead of a
+/// layer-name `String`, so the submit→execute path neither allocates
+/// nor hashes strings.
+///
+/// Ids are never reused: unregistering a layer retires its id, so a
+/// stale handle held by another tenant errors (`UnknownLayer`) instead
+/// of silently addressing whatever got registered next.  Like
+/// [`Ticket`], the handle carries the issuing service's nonce — a
+/// handle presented to a different `ConvService` errors instead of
+/// silently addressing whatever layer occupies the same slot there.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct LayerId {
+    /// nonce of the issuing service (process-unique)
+    pub(crate) svc: u64,
+    /// slot index in the issuing service's layer table
+    pub(crate) slot: u32,
+}
+
+impl LayerId {
+    /// The raw slot index (observability / logging — not an input to
+    /// any API; handles come from `register*` / `resolve`).
+    pub fn index(self) -> usize {
+        self.slot as usize
+    }
+}
+
+/// Claim check for one submitted request.  `ConvService::submit` returns
+/// it immediately; once the request's batch executes, the response waits
+/// in the service's completion store until *this* ticket claims it via
+/// `take` — interleaved callers can no longer receive each other's
+/// outputs.  Tickets are single-use: the first `take` consumes the
+/// response, a second returns `None`.  A ticket also carries the
+/// issuing service's nonce, so a ticket presented to the wrong
+/// `ConvService` is `None` too — it can never claim a stranger's
+/// response, even when two services happen to use the same sequence
+/// numbers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Ticket {
+    /// nonce of the issuing service (process-unique)
+    pub(crate) svc: u64,
+    /// the service-assigned request sequence number
+    pub(crate) seq: u64,
+}
+
+impl Ticket {
+    /// The service-assigned request id (logging / correlation).
+    pub fn id(self) -> u64 {
+        self.seq
+    }
+}
 
 /// A single-image convolution request against a registered layer.
 #[derive(Clone, Debug)]
 pub struct ConvRequest {
-    pub id: u64,
-    /// registered layer name (selects weights + algorithm)
-    pub layer: String,
+    /// registered layer handle (selects weights + algorithm)
+    pub layer: LayerId,
     /// (1, C, H, W) activation
     pub input: Tensor4,
 }
 
 impl ConvRequest {
-    pub fn new(id: u64, layer: &str, input: Tensor4) -> ConvRequest {
-        assert_eq!(input.shape[0], 1, "requests carry single images");
-        ConvRequest {
-            id,
-            layer: layer.to_string(),
-            input,
+    /// Build a request; rejects multi-image tensors (`BatchedInput`) —
+    /// batching is the service's job, one request is one image.
+    pub fn new(layer: LayerId, input: Tensor4) -> Result<ConvRequest, ServiceError> {
+        if input.shape[0] != 1 {
+            return Err(ServiceError::BatchedInput { got: input.shape[0] });
         }
+        Ok(ConvRequest { layer, input })
     }
 
-    /// The problem signature used for batching compatibility.
-    pub fn signature(&self) -> (String, [usize; 4]) {
-        (self.layer.clone(), self.input.shape)
+    /// The problem signature used for batching compatibility — all
+    /// `Copy` fields, so keying a hash map on it is allocation-free.
+    pub fn signature(&self) -> (LayerId, [usize; 4]) {
+        (self.layer, self.input.shape)
     }
 }
 
-/// The service's answer to one request.
+/// The service's answer to one request, claimed with its [`Ticket`].
 #[derive(Clone, Debug)]
 pub struct ConvResponse {
-    pub id: u64,
+    /// the ticket this response answers (equals the submit return)
+    pub ticket: Ticket,
     pub output: Tensor4,
     /// end-to-end seconds (enqueue to completion)
     pub latency: f64,
@@ -40,13 +98,13 @@ pub struct ConvResponse {
 }
 
 /// Check that a request matches a registered problem.
-pub fn validate(req: &ConvRequest, problem: &ConvProblem) -> Result<(), String> {
+pub fn validate(req: &ConvRequest, problem: &ConvProblem) -> Result<(), ServiceError> {
     let want = [1, problem.c_in, problem.h, problem.w];
     if req.input.shape != want {
-        return Err(format!(
-            "request {} for layer '{}': input shape {:?} != expected {:?}",
-            req.id, req.layer, req.input.shape, want
-        ));
+        return Err(ServiceError::ShapeMismatch {
+            got: req.input.shape,
+            want,
+        });
     }
     Ok(())
 }
@@ -57,19 +115,21 @@ mod tests {
 
     #[test]
     fn signature_distinguishes_layers_and_shapes() {
-        let a = ConvRequest::new(1, "l1", Tensor4::zeros([1, 2, 8, 8]));
-        let b = ConvRequest::new(2, "l1", Tensor4::zeros([1, 2, 8, 8]));
-        let c = ConvRequest::new(3, "l2", Tensor4::zeros([1, 2, 8, 8]));
-        let d = ConvRequest::new(4, "l1", Tensor4::zeros([1, 2, 9, 8]));
+        let (l1, l2) = (LayerId { svc: 0, slot: 0 }, LayerId { svc: 0, slot: 1 });
+        let a = ConvRequest::new(l1, Tensor4::zeros([1, 2, 8, 8])).unwrap();
+        let b = ConvRequest::new(l1, Tensor4::zeros([1, 2, 8, 8])).unwrap();
+        let c = ConvRequest::new(l2, Tensor4::zeros([1, 2, 8, 8])).unwrap();
+        let d = ConvRequest::new(l1, Tensor4::zeros([1, 2, 9, 8])).unwrap();
         assert_eq!(a.signature(), b.signature());
         assert_ne!(a.signature(), c.signature());
         assert_ne!(a.signature(), d.signature());
     }
 
     #[test]
-    #[should_panic(expected = "single images")]
-    fn rejects_batched_input() {
-        ConvRequest::new(1, "l", Tensor4::zeros([2, 2, 8, 8]));
+    fn rejects_batched_input_as_error() {
+        let lid = LayerId { svc: 0, slot: 0 };
+        let err = ConvRequest::new(lid, Tensor4::zeros([2, 2, 8, 8])).unwrap_err();
+        assert_eq!(err, ServiceError::BatchedInput { got: 2 });
     }
 
     #[test]
@@ -82,9 +142,30 @@ mod tests {
             w: 8,
             r: 3,
         };
-        let ok = ConvRequest::new(1, "l", Tensor4::zeros([1, 2, 8, 8]));
-        let bad = ConvRequest::new(2, "l", Tensor4::zeros([1, 3, 8, 8]));
+        let lid = LayerId { svc: 0, slot: 0 };
+        let ok = ConvRequest::new(lid, Tensor4::zeros([1, 2, 8, 8])).unwrap();
+        let bad = ConvRequest::new(lid, Tensor4::zeros([1, 3, 8, 8])).unwrap();
         assert!(validate(&ok, &p).is_ok());
-        assert!(validate(&bad, &p).is_err());
+        assert_eq!(
+            validate(&bad, &p).unwrap_err(),
+            ServiceError::ShapeMismatch {
+                got: [1, 3, 8, 8],
+                want: [1, 2, 8, 8],
+            }
+        );
+    }
+
+    #[test]
+    fn handles_are_tiny_and_copyable() {
+        // the whole point of the v2 redesign: keys are a couple of
+        // machine words (nonce + slot/sequence), all Copy
+        assert!(std::mem::size_of::<LayerId>() <= 16);
+        assert!(std::mem::size_of::<Ticket>() <= 16);
+        let t = Ticket { svc: 1, seq: 7 };
+        let u = t; // Copy, not move
+        assert_eq!(t.id(), u.id());
+        // same sequence number from a different service is a different
+        // ticket — the service nonce is part of the identity
+        assert_ne!(t, Ticket { svc: 2, seq: 7 });
     }
 }

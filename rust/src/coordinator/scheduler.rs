@@ -20,7 +20,14 @@
 //!
 //! ## Persistent layer plans
 //!
-//! Plans are cached per (algorithm, input shape, weight fingerprint):
+//! Plans are cached per (algorithm, input shape, weight fingerprint).
+//! Registered layers go one step further: [`StaticScheduler::warm`]
+//! returns a [`PlanHandle`] carrying the resolved plan key (fingerprint
+//! included), and [`StaticScheduler::run_planned`] serves batches
+//! through it without re-scanning the weights — the service hot path
+//! pays neither the per-batch FNV of `run_batch` nor any string work.
+//! Ad-hoc callers keep using `run_batch`, which re-derives the key
+//! (fingerprint scan included) every call.  Either way,
 //! the kernel transform `V[P][K][C]` is computed once per layer, and the
 //! engine's scratch arenas are reused across every subsequent batch, so
 //! steady-state serving is allocation-free on the hot path.  The weight
@@ -74,6 +81,10 @@
 //! * [`DecayPolicy::OnDrift`] — warm samples of the *winning* mode keep
 //!   feeding its EWMA; one deviating more than `rel_tol` from the mean
 //!   re-opens the verdict.
+//! * [`DecayPolicy::OnDriftSigma`] — the variance-aware flavor: the
+//!   EWMA also tracks the stream's spread, and only a sample more than
+//!   `k`·σ from the mean re-opens the verdict — a fixed `rel_tol` trips
+//!   on every hiccup of a noisy co-tenanted host, k·σ adapts to it.
 //!
 //! A re-opened (stale) entry keeps serving its old winner while it waits
 //! for the scheduler's single **shadow slot**: at most one bucket per
@@ -116,8 +127,9 @@ const DEFAULT_PLAN_BUDGET: usize = 256 << 20;
 /// of the key so two same-shape layers with different weights each keep
 /// their plan (no thrash); staleness under weight *updates* is handled by
 /// the eviction in [`plan_entry`], which prefers dropping a same-shape
-/// plan with an outdated fingerprint.
-#[derive(Clone, PartialEq, Eq, Hash)]
+/// plan with an outdated fingerprint.  All fields are machine words, so
+/// the key is `Copy` and hashing it never touches the heap.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
 struct PlanKey {
     algo: ConvAlgorithm,
     c: usize,
@@ -132,6 +144,31 @@ struct PlanKey {
 struct PlanEntry {
     plan: LayerPlan,
     last_used: u64,
+}
+
+/// A pre-resolved plan reference for a registered layer — what
+/// [`StaticScheduler::warm`] returns and [`StaticScheduler::run_planned`]
+/// consumes.  The handle carries the plan-cache key with the weight
+/// fingerprint already computed, so the service's submit→execute hot
+/// path neither re-scans the weights (the per-batch FNV in
+/// [`StaticScheduler::run_batch`]) nor hashes anything heap-allocated.
+/// Non-tiled algorithms (Direct / Im2col) have no plan; their handle
+/// just remembers the algorithm.
+///
+/// A handle stays valid across plan-cache evictions (the plan is
+/// transparently rebuilt from the weights on the next batch); it dies
+/// only when the owner explicitly [`StaticScheduler::discard`]s it —
+/// the weight-swap / unregister path.
+#[derive(Clone, Copy)]
+pub struct PlanHandle {
+    algo: ConvAlgorithm,
+    key: Option<PlanKey>,
+}
+
+impl PlanHandle {
+    pub fn algo(&self) -> ConvAlgorithm {
+        self.algo
+    }
 }
 
 /// How the scheduler decides staged-vs-fused per `(plan, batch bucket)`.
@@ -164,7 +201,7 @@ pub fn batch_bucket(b: usize) -> usize {
 }
 
 /// Tuning-table key: one resolution per (plan identity, batch bucket).
-#[derive(Clone, PartialEq, Eq, Hash)]
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
 struct TuneKey {
     plan: PlanKey,
     bucket: usize,
@@ -176,32 +213,70 @@ struct TuneKey {
 /// `rel_tol` by itself.
 const EWMA_ALPHA: f64 = 0.3;
 
-/// An exponentially weighted moving average over timing samples.
+/// Post-(re)seed samples the variance stream needs before its σ is
+/// trusted for [`DecayPolicy::OnDriftSigma`]: a just-reseeded stream has
+/// zero variance, so without a warm-up every subsequent sample would
+/// trip the detector on its own scatter.
+const SIGMA_WARM_SAMPLES: u64 = 4;
+
+/// Relative floor for the sigma tolerance: σ is never taken below this
+/// fraction of the mean, so a zero-variance (perfectly quiet) stream
+/// still trips on any genuine level shift instead of absorbing it into
+/// a co-moving mean+variance.  Well below real timing jitter (~1–10%),
+/// far above f64 rounding noise.
+const SIGMA_FLOOR_REL: f64 = 1e-4;
+
+/// An exponentially weighted moving average over timing samples, with a
+/// matching exponentially weighted variance stream (the k·σ drift
+/// tolerance of [`DecayPolicy::OnDriftSigma`] reads it).
 #[derive(Clone, Copy, Debug, Default)]
 struct Ewma {
     mean: f64,
+    /// exponentially weighted variance (same α as the mean, so the
+    /// noise estimate and the level estimate age at the same rate)
+    var: f64,
     samples: u64,
+    /// samples since the stream was last (re)seeded — σ is consulted
+    /// only once a fresh stream has re-learned its spread
+    fresh: u64,
 }
 
 impl Ewma {
     fn record(&mut self, x: f64) {
-        self.mean = if self.samples == 0 {
-            x
+        if self.samples == 0 {
+            self.mean = x;
+            self.var = 0.0;
         } else {
-            EWMA_ALPHA * x + (1.0 - EWMA_ALPHA) * self.mean
-        };
+            // EW mean + variance in one pass (West's update): the
+            // variance absorbs the pre-update deviation, so a level
+            // shift raises σ exactly when it starts moving the mean
+            let d = x - self.mean;
+            let incr = EWMA_ALPHA * d;
+            self.mean += incr;
+            self.var = (1.0 - EWMA_ALPHA) * (self.var + d * incr);
+        }
         self.samples += 1;
+        self.fresh += 1;
     }
 
     /// Replace the stream with a fresh measurement — used when a stale
     /// verdict re-measures: pre-drift history must not outvote reality.
+    /// The variance restarts too; σ re-learns from the new regime.
     fn reseed(&mut self, x: f64) {
         self.mean = x;
+        self.var = 0.0;
         self.samples += 1;
+        self.fresh = 1;
     }
 
     fn value(&self) -> Option<f64> {
         (self.samples > 0).then_some(self.mean)
+    }
+
+    /// The stream's EW standard deviation, once enough post-(re)seed
+    /// samples exist to trust it.
+    fn sigma(&self) -> Option<f64> {
+        (self.fresh >= SIGMA_WARM_SAMPLES).then(|| self.var.max(0.0).sqrt())
     }
 }
 
@@ -242,6 +317,15 @@ pub enum DecayPolicy {
     /// deviating more than `rel_tol` (relative) from the mean re-opens
     /// the verdict and schedules a shadow re-measurement of the loser.
     OnDrift { rel_tol: f64 },
+    /// Variance-aware drift: like [`DecayPolicy::OnDrift`], but the
+    /// tolerance scales with the stream's own measured noise — a warm
+    /// winner sample trips only when it lands more than `k` standard
+    /// deviations (the EWMA's exponentially weighted σ) from the mean.
+    /// On noisy co-tenanted hosts a fixed `rel_tol` fires on every
+    /// scheduling hiccup; k·σ adapts to the host's baseline jitter and
+    /// re-opens verdicts only on genuine level shifts.  `k = 3` is the
+    /// usual control-chart setting.
+    OnDriftSigma { k: f64 },
 }
 
 /// Monotonic counters for the decay subsystem (observability; surfaced
@@ -373,13 +457,41 @@ impl TuneEntry {
         }
     }
 
-    /// Is `secs` out of tolerance against `mode`'s EWMA?
-    fn drifted(&self, mode: ExecMode, secs: f64, rel_tol: f64) -> bool {
-        match self.ewma(mode).value() {
-            Some(mean) if mean > 0.0 => (secs - mean).abs() > rel_tol * mean,
+    /// Is `secs` a drift event for `mode` under `decay`?  `OnDrift`
+    /// compares against a fixed relative tolerance; `OnDriftSigma`
+    /// against k· the stream's own EW standard deviation, so a
+    /// noisy-but-stationary stream does not trip.  A freshly (re)seeded
+    /// stream has no trusted σ yet and cannot sigma-trip until it
+    /// re-warms ([`SIGMA_WARM_SAMPLES`]).  σ is floored at a sliver of
+    /// the mean ([`SIGMA_FLOOR_REL`]): a perfectly quiet stream (e.g.
+    /// identical injected timings) would otherwise have σ = 0 — and a
+    /// genuine level shift would be absorbed sample by sample as the
+    /// variance grew in step with the moving mean, leaving the quietest
+    /// streams permanently blind to the exact failure the detector
+    /// exists to catch.
+    fn drift_tripped(&self, mode: ExecMode, secs: f64, decay: DecayPolicy) -> bool {
+        let e = self.ewma(mode);
+        match (decay, e.value()) {
+            (DecayPolicy::OnDrift { rel_tol }, Some(mean)) if mean > 0.0 => {
+                (secs - mean).abs() > rel_tol * mean
+            }
+            (DecayPolicy::OnDriftSigma { k }, Some(mean)) if mean > 0.0 => {
+                e.sigma().is_some_and(|sigma| {
+                    (secs - mean).abs() > k * sigma.max(SIGMA_FLOOR_REL * mean)
+                })
+            }
             _ => false,
         }
     }
+}
+
+/// Does `decay` re-open settled verdicts on out-of-tolerance winner
+/// samples (either drift flavor)?
+fn is_drift_policy(decay: DecayPolicy) -> bool {
+    matches!(
+        decay,
+        DecayPolicy::OnDrift { .. } | DecayPolicy::OnDriftSigma { .. }
+    )
 }
 
 /// Absorb one shadow sample: it *replaces* the doubted mode's EWMA.  If
@@ -390,7 +502,12 @@ impl TuneEntry {
 /// winner counts as a flip) so the caller can release the shadow slot.
 /// (Free function so `run_batch` can call it while holding split
 /// borrows of the scheduler's fields.)
-fn finish_remeasure(entry: &mut TuneEntry, mode: ExecMode, secs: f64, stats: &mut DecayStats) -> bool {
+fn finish_remeasure(
+    entry: &mut TuneEntry,
+    mode: ExecMode,
+    secs: f64,
+    stats: &mut DecayStats,
+) -> bool {
     entry.ewma_mut(mode).reseed(secs);
     if entry.winner_doubted && mode != entry.resolved {
         entry.pending = Some(entry.resolved);
@@ -504,6 +621,7 @@ fn plan_entry<'a>(
     plans: &'a mut HashMap<PlanKey, PlanEntry>,
     tuning: &mut HashMap<TuneKey, TuneEntry>,
     stats: &mut DecayStats,
+    pins: &HashMap<PlanKey, u32>,
     workers: usize,
     key: PlanKey,
     weights: &Tensor4,
@@ -513,7 +631,12 @@ fn plan_entry<'a>(
 ) -> &'a mut LayerPlan {
     if !plans.contains_key(&key) && plans.len() >= MAX_PLANS {
         // prefer evicting this layer's outdated-weights plan; otherwise
-        // drop the least-recently-used entry to stay count-bounded
+        // drop the least-recently-used entry to stay count-bounded.
+        // Pinned keys (live registered layers) are never taken for a
+        // dead weight swap: their fingerprint WILL recur, so deleting
+        // their tuning entries outright would silently reset a live
+        // layer's verdicts — they fall through to the LRU path, which
+        // stales entries for re-confirmation instead.
         let same_shape = plans
             .keys()
             .find(|k2| {
@@ -523,8 +646,9 @@ fn plan_entry<'a>(
                     && k2.w == key.w
                     && k2.k == key.k
                     && k2.r == key.r
+                    && !pins.contains_key(k2)
             })
-            .cloned();
+            .copied();
         if let Some(e) = same_shape {
             // a weight *swap*: the old fingerprint can never recur, so
             // its tuning entries are deleted outright — staling them
@@ -535,7 +659,7 @@ fn plan_entry<'a>(
         } else if let Some(e) = plans
             .iter()
             .min_by_key(|(_, e)| e.last_used)
-            .map(|(k2, _)| k2.clone())
+            .map(|(k2, _)| *k2)
         {
             // capacity-pressure LRU eviction: the key may see traffic
             // again, so its verdicts go stale and re-confirm on rebuild
@@ -567,10 +691,7 @@ fn tune_entry<'a>(
     let method = algo_method(key.algo).expect("tiled algorithm");
     let m = key.algo.tile_m().expect("tiled algorithm");
     tuning
-        .entry(TuneKey {
-            plan: key.clone(),
-            bucket,
-        })
+        .entry(TuneKey { plan: *key, bucket })
         .or_insert_with(|| {
             TuneEntry::seed(&choose_exec(method, &key_shape(key, bucket), m, machine), can_fuse)
         })
@@ -602,6 +723,13 @@ pub struct StaticScheduler {
     policy: TuningPolicy,
     /// when settled verdicts stop being trusted (see module docs)
     decay: DecayPolicy,
+    /// pin refcounts per plan key: how many live [`PlanHandle`]s (one
+    /// per registered layer, via `warm`) reference the key.  Two layers
+    /// registered with identical weights share a key; `discard` only
+    /// deletes plan + tuning entries when the last pin drops, and the
+    /// same-shape fast eviction in [`plan_entry`] never takes a pinned
+    /// key for a dead weight swap.
+    pins: HashMap<PlanKey, u32>,
     /// the single shadow re-measurement slot: the stale bucket currently
     /// allowed to run its doubted mode, and the tick it claimed the slot
     remeasuring: Option<(TuneKey, u64)>,
@@ -626,6 +754,7 @@ impl StaticScheduler {
             tuning: HashMap::new(),
             policy: TuningPolicy::default(),
             decay: DecayPolicy::default(),
+            pins: HashMap::new(),
             remeasuring: None,
             decay_stats: DecayStats::default(),
             tune_prune_len: 0,
@@ -751,7 +880,12 @@ impl StaticScheduler {
 
     /// Exec mode of the cached plan serving (algo, shape, weights), if any
     /// (observability / tests).
-    pub fn plan_exec_mode(&self, algo: ConvAlgorithm, x: &Tensor4, w: &Tensor4) -> Option<crate::conv::ExecMode> {
+    pub fn plan_exec_mode(
+        &self,
+        algo: ConvAlgorithm,
+        x: &Tensor4,
+        w: &Tensor4,
+    ) -> Option<crate::conv::ExecMode> {
         let fp = weights_fingerprint(w);
         self.plans
             .values()
@@ -761,7 +895,12 @@ impl StaticScheduler {
 
     /// The tuning-table entry that would serve `x`'s batch size for
     /// (algo, shape, weights), if traffic (or a seed) created one.
-    pub fn tuning_for(&self, algo: ConvAlgorithm, x: &Tensor4, w: &Tensor4) -> Option<TuneSnapshot> {
+    pub fn tuning_for(
+        &self,
+        algo: ConvAlgorithm,
+        x: &Tensor4,
+        w: &Tensor4,
+    ) -> Option<TuneSnapshot> {
         let key = make_key(algo, x.shape[1], x.shape[2], x.shape[3], w);
         let bucket = batch_bucket(x.shape[0]);
         self.tuning
@@ -826,30 +965,26 @@ impl StaticScheduler {
         }
         let per = secs / x.shape[0].max(1) as f64;
         let decay = self.decay;
-        let tkey = TuneKey {
-            plan: key.clone(),
-            bucket,
-        };
+        let tkey = TuneKey { plan: key, bucket };
         let entry = tune_entry(&mut self.tuning, &key, bucket, can_fuse, &self.machine);
         match entry.state {
             TuneState::Settled => {
-                if let DecayPolicy::OnDrift { rel_tol } = decay {
-                    if entry.fusable
-                        && mode == entry.resolved
-                        && entry.drifted(mode, per, rel_tol)
-                    {
-                        // the drifted sample IS the new reality: reseed
-                        // the winner's stream so the upcoming re-settle
-                        // compares fresh-vs-fresh (a blended mean still
-                        // dominated by pre-drift history could re-confirm
-                        // a genuinely degraded winner)
-                        entry.ewma_mut(mode).reseed(per);
-                        if entry.mark_stale(false) {
-                            self.decay_stats.drift_events += 1;
-                        }
-                        self.prune_tuning();
-                        return;
+                if is_drift_policy(decay)
+                    && entry.fusable
+                    && mode == entry.resolved
+                    && entry.drift_tripped(mode, per, decay)
+                {
+                    // the drifted sample IS the new reality: reseed
+                    // the winner's stream so the upcoming re-settle
+                    // compares fresh-vs-fresh (a blended mean still
+                    // dominated by pre-drift history could re-confirm
+                    // a genuinely degraded winner)
+                    entry.ewma_mut(mode).reseed(per);
+                    if entry.mark_stale(false) {
+                        self.decay_stats.drift_events += 1;
                     }
+                    self.prune_tuning();
+                    return;
                 }
                 entry.record(mode, per);
                 entry.try_settle();
@@ -903,10 +1038,7 @@ impl StaticScheduler {
         // verdict times are whole-micro-batch seconds measured at
         // `batch_hint` images — store per image like every other sample
         let per = batch_hint.max(1) as f64;
-        let tkey = TuneKey {
-            plan: key.clone(),
-            bucket,
-        };
+        let tkey = TuneKey { plan: key, bucket };
         let entry = tune_entry(&mut self.tuning, &key, bucket, can_fuse, &self.machine);
         let was_doubted = matches!(entry.state, TuneState::Stale | TuneState::Remeasuring);
         let before = entry.resolved;
@@ -953,9 +1085,9 @@ impl StaticScheduler {
         h: usize,
         w: usize,
         batch_hint: usize,
-    ) {
+    ) -> PlanHandle {
         if algo.tile_m().is_none() {
-            return;
+            return PlanHandle { algo, key: None };
         }
         let workers = self.pool.workers();
         self.tick += 1;
@@ -964,8 +1096,9 @@ impl StaticScheduler {
             &mut self.plans,
             &mut self.tuning,
             &mut self.decay_stats,
+            &self.pins,
             workers,
-            key.clone(),
+            key,
             weights,
             batch_hint,
             &self.machine,
@@ -979,7 +1112,42 @@ impl StaticScheduler {
             can_fuse,
             &self.machine,
         );
+        *self.pins.entry(key).or_insert(0) += 1;
         self.enforce_budget();
+        PlanHandle {
+            algo,
+            key: Some(key),
+        }
+    }
+
+    /// Release a layer's [`PlanHandle`] — the weight-swap / unregister
+    /// path.  When the last pin on the key drops, the cached plan and
+    /// its tuning entries are deleted outright: unlike a capacity
+    /// eviction (which *stales* verdicts so a rebuilt plan re-confirms
+    /// them), a discarded fingerprint can never recur, and staling its
+    /// entries would only inflate the stale/expiry gauges with entries
+    /// that can never heal.  While other registered layers still share
+    /// the key (identical weights), everything is kept — their plan and
+    /// settled verdicts stay live.  The shadow slot is freed if one of
+    /// the deleted entries held it.
+    pub fn discard(&mut self, handle: PlanHandle) {
+        let Some(key) = handle.key else { return };
+        match self.pins.get_mut(&key) {
+            Some(n) if *n > 1 => {
+                *n -= 1;
+                return;
+            }
+            Some(_) => {
+                self.pins.remove(&key);
+            }
+            None => {}
+        }
+        self.plans.remove(&key);
+        self.tuning.retain(|k, _| k.plan != key);
+        if matches!(&self.remeasuring, Some((held, _)) if held.plan == key) {
+            self.remeasuring = None;
+        }
+        self.tune_prune_len = self.tune_prune_len.min(self.tuning.len());
     }
 
     /// Force a synchronous dual re-measurement of one (layer, batch
@@ -1008,8 +1176,9 @@ impl StaticScheduler {
             &mut self.plans,
             &mut self.tuning,
             &mut self.decay_stats,
+            &self.pins,
             workers,
-            key.clone(),
+            key,
             w,
             b,
             &self.machine,
@@ -1018,10 +1187,7 @@ impl StaticScheduler {
         let verdict = measure_exec_with(plan, x, analytic, Some(&self.pool));
         let can_fuse = plan.can_fuse();
         let per = b.max(1) as f64;
-        let tkey = TuneKey {
-            plan: key.clone(),
-            bucket,
-        };
+        let tkey = TuneKey { plan: key, bucket };
         let entry = tune_entry(&mut self.tuning, &key, bucket, can_fuse, &self.machine);
         let before = entry.resolved;
         entry.ewma_mut(ExecMode::Staged).reseed(verdict.staged_secs / per);
@@ -1070,189 +1236,222 @@ impl StaticScheduler {
             ConvAlgorithm::Direct => self.run_direct(x, w, &mut out),
             ConvAlgorithm::Im2col => self.run_im2col(x, w, &mut out),
             _ => {
-                let workers = self.pool.workers();
-                self.tick += 1;
                 let key = make_key(algo, c, h, wd, w);
-                let bucket = batch_bucket(b);
-                let tkey = TuneKey {
-                    plan: key.clone(),
-                    bucket,
-                };
-                // free a wedged shadow slot before serving: a bucket
-                // whose traffic stopped mid-re-measurement must not
-                // block every other stale bucket forever
-                if let Some((held, since)) = self.remeasuring.clone() {
-                    if held != tkey && self.tick.saturating_sub(since) > REMEASURE_STEAL_WAVES {
-                        if let Some(e) = self.tuning.get_mut(&held) {
-                            if e.state == TuneState::Remeasuring {
-                                e.state = TuneState::Stale;
-                            }
-                        }
-                        self.remeasuring = None;
-                    }
-                }
-                let plan = plan_entry(
-                    &mut self.plans,
-                    &mut self.tuning,
-                    &mut self.decay_stats,
-                    workers,
-                    key.clone(),
-                    w,
-                    b,
-                    &self.machine,
-                    self.tick,
-                );
-                let can_fuse = plan.can_fuse();
-                let entry = tune_entry(&mut self.tuning, &key, bucket, can_fuse, &self.machine);
-                let pool = &self.pool;
-                // Timed run with two fairness rules: the time is stored
-                // per image (entries compare samples across the up-to-2x
-                // batch-size spread within one bucket), and a run that
-                // grew the plan's scratch (arena resize + first-touch, a
-                // one-time cost) yields NO sample — cold runs never bias
-                // the verdict; the bucket's next batch provides a warm
-                // sample instead.
-                let timed = |plan: &mut LayerPlan, out: &mut Tensor4, mode: ExecMode| -> Option<f64> {
-                    let arenas_before = plan.arena_bytes();
-                    let t0 = Instant::now();
-                    plan.run_with_mode(x, out, Some(pool), mode);
-                    let dt = t0.elapsed().as_secs_f64();
-                    (plan.arena_bytes() == arenas_before).then_some(dt / b.max(1) as f64)
-                };
-                if !can_fuse && (entry.fusable || entry.resolved == ExecMode::Fused) {
-                    // the verdict cannot be honored (entry seeded before
-                    // the plan existed, or the machine model changed
-                    // under a kept plan): correct the entry so what
-                    // observability reports is what actually runs.  A
-                    // one-pipeline entry also leaves the decay lifecycle
-                    // — there is nothing to re-measure against.
-                    entry.resolved = ExecMode::Staged;
-                    entry.state = TuneState::Settled;
-                    entry.fusable = false;
-                    entry.pending = None;
-                    entry.winner_doubted = false;
-                    if matches!(&self.remeasuring, Some((k, _)) if *k == tkey) {
-                        self.remeasuring = None;
-                    }
-                }
-                // verdict expiry: a settled verdict that has served its
-                // allotted batches is no longer trusted and re-confirms
-                // through the shadow path.  (The winner's stream is not
-                // doubted: it was fed warm samples throughout the lease.)
-                if let DecayPolicy::AfterBatches(n) = self.decay {
-                    if entry.state == TuneState::Settled
-                        && entry.age >= n
-                        && entry.mark_stale(false)
-                    {
-                        self.decay_stats.expiries += 1;
-                    }
-                }
-                // stale buckets queue for the single shadow slot — at
-                // most one re-measuring bucket per run_batch wave keeps
-                // steady-state latency flat while the table heals.  A
-                // slot left pointing at this bucket by an inconsistency
-                // (e.g. the entry was pruned and recreated) is reclaimed
-                // rather than deadlocking the bucket against itself.
-                if entry.state == TuneState::Stale
-                    && (self.remeasuring.is_none()
-                        || matches!(&self.remeasuring, Some((k, _)) if *k == tkey))
-                {
-                    entry.state = TuneState::Remeasuring;
-                    self.remeasuring = Some((tkey.clone(), self.tick));
-                }
-                if entry.state == TuneState::Remeasuring {
-                    // shadow re-measurement: run the doubted mode for
-                    // this whole batch — the output is identical either
-                    // way — and absorb a warm sample (a cold run retries
-                    // on the next batch).  With a doubted winner the
-                    // shadow phase takes two warm batches (loser, then
-                    // winner) before the fresh-vs-fresh re-settle.
-                    let mode = entry.pending.unwrap_or(entry.resolved);
-                    if let Some(secs) = timed(plan, &mut out, mode) {
-                        if finish_remeasure(entry, mode, secs, &mut self.decay_stats) {
-                            self.remeasuring = None;
-                        }
-                    }
-                } else if entry.state == TuneState::Settled
-                    || entry.state == TuneState::Stale
-                    || self.policy == TuningPolicy::Analytic
-                {
-                    let mode = if can_fuse { entry.resolved } else { ExecMode::Staged };
-                    let sample = timed(plan, &mut out, mode);
-                    if entry.state == TuneState::Stale && entry.winner_doubted {
-                        // a stale bucket waiting for the shadow slot
-                        // still serves its winner: use the warm sample
-                        // to refresh the doubted stream early
-                        if let Some(secs) = sample {
-                            entry.ewma_mut(mode).reseed(secs);
-                            entry.winner_doubted = false;
-                        }
-                    }
-                    if entry.state == TuneState::Settled && entry.fusable {
-                        entry.age = entry.age.saturating_add(1);
-                        match (self.decay, sample) {
-                            // warm winner samples feed the EWMA so the
-                            // detector tracks slow drift; one out of
-                            // tolerance re-opens the verdict — and, as
-                            // the new reality's evidence, *replaces* the
-                            // winner's stream so the re-settle compares
-                            // fresh-vs-fresh on both sides
-                            (DecayPolicy::OnDrift { rel_tol }, Some(secs)) => {
-                                if entry.drifted(mode, secs, rel_tol) {
-                                    entry.ewma_mut(mode).reseed(secs);
-                                    if entry.mark_stale(false) {
-                                        self.decay_stats.drift_events += 1;
-                                    }
-                                } else {
-                                    entry.record(mode, secs);
-                                }
-                            }
-                            (DecayPolicy::AfterBatches(_), Some(secs)) => {
-                                entry.record(mode, secs);
-                            }
-                            // Never: verdicts are frozen, keep the
-                            // settled fast path sample-free
-                            _ => {}
-                        }
-                    }
-                } else {
-                    // unsettled + a fusable plan (every !can_fuse entry
-                    // was pinned to Settled/Staged by the correction
-                    // above or at seed time) — refine per the policy
-                    match self.policy {
-                        TuningPolicy::Measured => {
-                            // run both pipelines back to back (identical
-                            // output) until both have warm samples — the
-                            // bucket's first batch typically just warms
-                            // the scratch, its second settles the verdict
-                            if let Some(s) = timed(plan, &mut out, ExecMode::Staged) {
-                                entry.record(ExecMode::Staged, s);
-                            }
-                            if let Some(f) = timed(plan, &mut out, ExecMode::Fused) {
-                                entry.record(ExecMode::Fused, f);
-                            }
-                            entry.try_settle();
-                        }
-                        TuningPolicy::Hybrid => {
-                            // analytic pick until it has a warm sample,
-                            // then the alternative; settle once both do
-                            let mode = if entry.time_of(entry.analytic).is_none() {
-                                entry.analytic
-                            } else {
-                                other_mode(entry.analytic)
-                            };
-                            if let Some(secs) = timed(plan, &mut out, mode) {
-                                entry.record(mode, secs);
-                                entry.try_settle();
-                            }
-                        }
-                        TuningPolicy::Analytic => unreachable!("handled above"),
-                    }
-                }
-                self.enforce_budget();
+                self.run_tiled(key, x, w, &mut out);
             }
         }
         out
+    }
+
+    /// Like [`StaticScheduler::run_batch`], but through a pre-resolved
+    /// [`PlanHandle`] — the registered-layer hot path.  The handle
+    /// carries the plan key with the weight fingerprint already
+    /// computed, so serving a batch performs no weight re-scan (the
+    /// per-batch FNV of `run_batch`), no string work, and no hashing of
+    /// anything heap-allocated; `w` is only consulted if the plan must
+    /// be rebuilt after an eviction.  The caller is responsible for
+    /// passing the same weights the handle was warmed with.
+    pub fn run_planned(&mut self, handle: PlanHandle, x: &Tensor4, w: &Tensor4) -> Tensor4 {
+        let [b, c, h, wd] = x.shape;
+        assert_eq!(c, w.shape[1], "channel mismatch");
+        let r = w.shape[2];
+        let (oh, ow) = (h - r + 1, wd - r + 1);
+        let mut out = Tensor4::zeros([b, w.shape[0], oh, ow]);
+        match handle.key {
+            Some(key) => self.run_tiled(key, x, w, &mut out),
+            None => match handle.algo {
+                ConvAlgorithm::Im2col => self.run_im2col(x, w, &mut out),
+                _ => self.run_direct(x, w, &mut out),
+            },
+        }
+        out
+    }
+
+    /// The tiled-algorithm body shared by `run_batch` (key computed per
+    /// call) and `run_planned` (key carried by the [`PlanHandle`]).
+    fn run_tiled(&mut self, key: PlanKey, x: &Tensor4, w: &Tensor4, out: &mut Tensor4) {
+        let b = x.shape[0];
+        let workers = self.pool.workers();
+        self.tick += 1;
+        let bucket = batch_bucket(b);
+        let tkey = TuneKey { plan: key, bucket };
+        // free a wedged shadow slot before serving: a bucket
+        // whose traffic stopped mid-re-measurement must not
+        // block every other stale bucket forever
+        if let Some((held, since)) = self.remeasuring {
+            if held != tkey && self.tick.saturating_sub(since) > REMEASURE_STEAL_WAVES {
+                if let Some(e) = self.tuning.get_mut(&held) {
+                    if e.state == TuneState::Remeasuring {
+                        e.state = TuneState::Stale;
+                    }
+                }
+                self.remeasuring = None;
+            }
+        }
+        let plan = plan_entry(
+            &mut self.plans,
+            &mut self.tuning,
+            &mut self.decay_stats,
+            &self.pins,
+            workers,
+            key,
+            w,
+            b,
+            &self.machine,
+            self.tick,
+        );
+        let can_fuse = plan.can_fuse();
+        let entry = tune_entry(&mut self.tuning, &key, bucket, can_fuse, &self.machine);
+        let pool = &self.pool;
+        // Timed run with two fairness rules: the time is stored
+        // per image (entries compare samples across the up-to-2x
+        // batch-size spread within one bucket), and a run that
+        // grew the plan's scratch (arena resize + first-touch, a
+        // one-time cost) yields NO sample — cold runs never bias
+        // the verdict; the bucket's next batch provides a warm
+        // sample instead.
+        let timed = |plan: &mut LayerPlan, out: &mut Tensor4, mode: ExecMode| -> Option<f64> {
+            let arenas_before = plan.arena_bytes();
+            let t0 = Instant::now();
+            plan.run_with_mode(x, out, Some(pool), mode);
+            let dt = t0.elapsed().as_secs_f64();
+            (plan.arena_bytes() == arenas_before).then_some(dt / b.max(1) as f64)
+        };
+        if !can_fuse && (entry.fusable || entry.resolved == ExecMode::Fused) {
+            // the verdict cannot be honored (entry seeded before
+            // the plan existed, or the machine model changed
+            // under a kept plan): correct the entry so what
+            // observability reports is what actually runs.  A
+            // one-pipeline entry also leaves the decay lifecycle
+            // — there is nothing to re-measure against.
+            entry.resolved = ExecMode::Staged;
+            entry.state = TuneState::Settled;
+            entry.fusable = false;
+            entry.pending = None;
+            entry.winner_doubted = false;
+            if matches!(&self.remeasuring, Some((k, _)) if *k == tkey) {
+                self.remeasuring = None;
+            }
+        }
+        // verdict expiry: a settled verdict that has served its
+        // allotted batches is no longer trusted and re-confirms
+        // through the shadow path.  (The winner's stream is not
+        // doubted: it was fed warm samples throughout the lease.)
+        if let DecayPolicy::AfterBatches(n) = self.decay {
+            if entry.state == TuneState::Settled
+                && entry.age >= n
+                && entry.mark_stale(false)
+            {
+                self.decay_stats.expiries += 1;
+            }
+        }
+        // stale buckets queue for the single shadow slot — at
+        // most one re-measuring bucket per run_batch wave keeps
+        // steady-state latency flat while the table heals.  A
+        // slot left pointing at this bucket by an inconsistency
+        // (e.g. the entry was pruned and recreated) is reclaimed
+        // rather than deadlocking the bucket against itself.
+        if entry.state == TuneState::Stale
+            && (self.remeasuring.is_none()
+                || matches!(&self.remeasuring, Some((k, _)) if *k == tkey))
+        {
+            entry.state = TuneState::Remeasuring;
+            self.remeasuring = Some((tkey, self.tick));
+        }
+        if entry.state == TuneState::Remeasuring {
+            // shadow re-measurement: run the doubted mode for
+            // this whole batch — the output is identical either
+            // way — and absorb a warm sample (a cold run retries
+            // on the next batch).  With a doubted winner the
+            // shadow phase takes two warm batches (loser, then
+            // winner) before the fresh-vs-fresh re-settle.
+            let mode = entry.pending.unwrap_or(entry.resolved);
+            if let Some(secs) = timed(plan, &mut *out, mode) {
+                if finish_remeasure(entry, mode, secs, &mut self.decay_stats) {
+                    self.remeasuring = None;
+                }
+            }
+        } else if entry.state == TuneState::Settled
+            || entry.state == TuneState::Stale
+            || self.policy == TuningPolicy::Analytic
+        {
+            let mode = if can_fuse { entry.resolved } else { ExecMode::Staged };
+            let sample = timed(plan, &mut *out, mode);
+            if entry.state == TuneState::Stale && entry.winner_doubted {
+                // a stale bucket waiting for the shadow slot
+                // still serves its winner: use the warm sample
+                // to refresh the doubted stream early
+                if let Some(secs) = sample {
+                    entry.ewma_mut(mode).reseed(secs);
+                    entry.winner_doubted = false;
+                }
+            }
+            if entry.state == TuneState::Settled && entry.fusable {
+                entry.age = entry.age.saturating_add(1);
+                match (self.decay, sample) {
+                    // warm winner samples feed the EWMA so the
+                    // detector tracks slow drift; one out of
+                    // tolerance (fixed rel_tol, or k·σ of the
+                    // stream's own noise) re-opens the verdict —
+                    // and, as the new reality's evidence,
+                    // *replaces* the winner's stream so the
+                    // re-settle compares fresh-vs-fresh
+                    (
+                        DecayPolicy::OnDrift { .. } | DecayPolicy::OnDriftSigma { .. },
+                        Some(secs),
+                    ) => {
+                        if entry.drift_tripped(mode, secs, self.decay) {
+                            entry.ewma_mut(mode).reseed(secs);
+                            if entry.mark_stale(false) {
+                                self.decay_stats.drift_events += 1;
+                            }
+                        } else {
+                            entry.record(mode, secs);
+                        }
+                    }
+                    (DecayPolicy::AfterBatches(_), Some(secs)) => {
+                        entry.record(mode, secs);
+                    }
+                    // Never: verdicts are frozen, keep the
+                    // settled fast path sample-free
+                    _ => {}
+                }
+            }
+        } else {
+            // unsettled + a fusable plan (every !can_fuse entry
+            // was pinned to Settled/Staged by the correction
+            // above or at seed time) — refine per the policy
+            match self.policy {
+                TuningPolicy::Measured => {
+                    // run both pipelines back to back (identical
+                    // output) until both have warm samples — the
+                    // bucket's first batch typically just warms
+                    // the scratch, its second settles the verdict
+                    if let Some(s) = timed(plan, &mut *out, ExecMode::Staged) {
+                        entry.record(ExecMode::Staged, s);
+                    }
+                    if let Some(f) = timed(plan, &mut *out, ExecMode::Fused) {
+                        entry.record(ExecMode::Fused, f);
+                    }
+                    entry.try_settle();
+                }
+                TuningPolicy::Hybrid => {
+                    // analytic pick until it has a warm sample,
+                    // then the alternative; settle once both do
+                    let mode = if entry.time_of(entry.analytic).is_none() {
+                        entry.analytic
+                    } else {
+                        other_mode(entry.analytic)
+                    };
+                    if let Some(secs) = timed(plan, &mut *out, mode) {
+                        entry.record(mode, secs);
+                        entry.try_settle();
+                    }
+                }
+                TuningPolicy::Analytic => unreachable!("handled above"),
+            }
+        }
+        self.enforce_budget();
     }
 
     /// Drop tuning entries whose plan is gone once the table crosses the
@@ -1292,7 +1491,7 @@ impl StaticScheduler {
                 .iter()
                 .filter(|(_, e)| e.plan.arena_bytes() > 0)
                 .min_by_key(|(_, e)| e.last_used)
-                .map(|(k, _)| k.clone())
+                .map(|(k, _)| *k)
             {
                 self.plans.get_mut(&key).expect("key from iter").plan.trim();
                 continue;
@@ -1305,7 +1504,7 @@ impl StaticScheduler {
                 .plans
                 .iter()
                 .min_by_key(|(_, e)| e.last_used)
-                .map(|(k, _)| k.clone())
+                .map(|(k, _)| *k)
                 .expect("non-empty");
             self.plans.remove(&lru);
             // the evicted plan's verdicts are doubted, not deleted: if
@@ -1748,6 +1947,169 @@ mod tests {
         assert_eq!(s.cached_plans(), 1, "run reuses the warmed plan");
         let want = direct::naive(&x, &w);
         assert!(got.max_abs_diff(&want) < 2e-3 * want.max_abs().max(1.0));
+    }
+
+    #[test]
+    fn run_planned_matches_run_batch_and_reuses_the_warmed_plan() {
+        let x = Tensor4::random([3, 2, 9, 9], 60);
+        let w = Tensor4::random([2, 2, 3, 3], 61);
+        let want = direct::naive(&x, &w);
+        let mut s = StaticScheduler::new(2);
+        let h = s.warm(ConvAlgorithm::RegularFft { m: 4 }, &w, 9, 9, 3);
+        let got = s.run_planned(h, &x, &w);
+        assert_eq!(s.cached_plans(), 1, "handle reuses the warmed plan");
+        assert!(got.max_abs_diff(&want) < 2e-3 * want.max_abs().max(1.0));
+        // the handle path populates the same tuning table run_batch reads
+        assert!(s
+            .tuning_for(ConvAlgorithm::RegularFft { m: 4 }, &x, &w)
+            .is_some());
+        // non-tiled handles dispatch to the direct/im2col paths, no plan
+        for algo in [ConvAlgorithm::Direct, ConvAlgorithm::Im2col] {
+            let hd = s.warm(algo, &w, 9, 9, 3);
+            let gd = s.run_planned(hd, &x, &w);
+            assert!(gd.max_abs_diff(&want) < 1e-4 * want.max_abs().max(1.0));
+        }
+        assert_eq!(s.cached_plans(), 1, "non-tiled algorithms need no plan");
+    }
+
+    #[test]
+    fn discard_deletes_plan_and_dead_fingerprint_tuning_entries() {
+        let (x, w, algo) = small_fusable_layer();
+        let mut s = StaticScheduler::new(2);
+        let h = s.warm(algo, &w, 20, 20, 2);
+        let _ = s.run_planned(h, &x, &w);
+        s.record_exec_time(algo, &x, &w, ExecMode::Staged, 1.0);
+        s.record_exec_time(algo, &x, &w, ExecMode::Fused, 1e-6);
+        assert_eq!(s.cached_plans(), 1);
+        assert!(s.tuning_entries() >= 1);
+        s.discard(h);
+        assert_eq!(s.cached_plans(), 0, "discard drops the plan");
+        assert_eq!(
+            s.tuning_entries(),
+            0,
+            "a dead fingerprint leaves no tuning entries behind"
+        );
+        assert_eq!(s.stale_entries(), 0, "deleted outright, not staled");
+        // a fresh warm after the swap rebuilds and serves cleanly
+        let h2 = s.warm(algo, &w, 20, 20, 2);
+        let got = s.run_planned(h2, &x, &w);
+        let want = direct::naive(&x, &w);
+        assert!(got.max_abs_diff(&want) < 2e-3 * want.max_abs().max(1.0));
+    }
+
+    #[test]
+    fn shared_fingerprint_survives_one_layers_discard() {
+        // two registered layers with identical weights share a plan key:
+        // discarding one must not delete the other's plan or verdicts
+        let (x, w, algo) = small_fusable_layer();
+        let mut s = StaticScheduler::new(2);
+        let h1 = s.warm(algo, &w, 20, 20, 2);
+        let h2 = s.warm(algo, &w, 20, 20, 2);
+        s.record_exec_time(algo, &x, &w, ExecMode::Staged, 1.0);
+        s.record_exec_time(algo, &x, &w, ExecMode::Fused, 1e-6);
+        assert_eq!(s.cached_plans(), 1, "identical weights share one plan");
+        assert!(s.tuning_for(algo, &x, &w).unwrap().settled);
+        s.discard(h1);
+        assert_eq!(s.cached_plans(), 1, "the sharer keeps the plan");
+        assert!(
+            s.tuning_for(algo, &x, &w).unwrap().settled,
+            "the sharer keeps its settled verdict"
+        );
+        s.discard(h2);
+        assert_eq!(s.cached_plans(), 0, "last pin drops everything");
+        assert_eq!(s.tuning_entries(), 0);
+    }
+
+    #[test]
+    fn same_shape_eviction_never_deletes_a_pinned_layers_verdicts() {
+        // at MAX_PLANS capacity, the same-shape fast eviction must not
+        // mistake a pinned (registered) layer's plan for a dead weight
+        // swap: the pinned plan's verdicts survive ad-hoc churn
+        let x = Tensor4::random([1, 1, 5, 5], 70);
+        let wp = Tensor4::random([1, 1, 3, 3], 71);
+        let mut s = StaticScheduler::new(1);
+        let algo = ConvAlgorithm::Winograd { m: 2 };
+        let _pinned = s.warm(algo, &wp, 5, 5, 1);
+        s.record_exec_time(algo, &x, &wp, ExecMode::Staged, 1e-3);
+        let before = s.tuning_for(algo, &x, &wp).expect("pinned entry");
+        // same-shape ad-hoc churn far past MAX_PLANS: every eviction
+        // wave sees the pinned plan as a same-shape candidate
+        for seed in 0..(MAX_PLANS as u64 + 8) {
+            let w = Tensor4::random([1, 1, 3, 3], 7200 + seed);
+            let _ = s.run_batch(algo, &x, &w);
+        }
+        assert!(s.cached_plans() <= MAX_PLANS, "cache stays bounded");
+        let after = s
+            .tuning_for(algo, &x, &wp)
+            .expect("pinned layer's tuning entry survived the churn");
+        assert_eq!(after.staged_secs, before.staged_secs);
+    }
+
+    #[test]
+    fn sigma_drift_ignores_stationary_noise_but_trips_on_shift() {
+        let (x, w, algo) = small_fusable_layer();
+        let mut s = StaticScheduler::new(2);
+        s.set_decay_policy(DecayPolicy::OnDriftSigma { k: 3.0 });
+        // settle the bucket: staged 1 s/img, fused ~10 ms/img
+        s.record_exec_time(algo, &x, &w, ExecMode::Staged, 2.0);
+        s.record_exec_time(algo, &x, &w, ExecMode::Fused, 0.020);
+        assert!(s.tuning_for(algo, &x, &w).unwrap().settled);
+        // a noisy-but-stationary winner stream (up to ±12% around the
+        // mean): every one of these samples would trip a fixed
+        // OnDrift { rel_tol: 0.05 }, but none may trip the 3σ detector
+        // once it has learned the stream's spread
+        for secs in [
+            0.022, 0.018, 0.021, 0.019, 0.0205, 0.0185, 0.0225, 0.0175, 0.0215,
+        ] {
+            s.record_exec_time(algo, &x, &w, ExecMode::Fused, secs);
+        }
+        assert_eq!(
+            s.decay_stats().drift_events,
+            0,
+            "stationary noise must not re-open the verdict"
+        );
+        let snap = s.tuning_for(algo, &x, &w).unwrap();
+        assert!(snap.settled);
+        assert_eq!(snap.resolved, ExecMode::Fused);
+        // a genuine level shift (3x the mean) is far outside 3σ: trips
+        s.record_exec_time(algo, &x, &w, ExecMode::Fused, 0.060);
+        assert_eq!(s.decay_stats().drift_events, 1);
+        assert_eq!(s.tuning_for(algo, &x, &w).unwrap().state, TuneState::Stale);
+    }
+
+    #[test]
+    fn sigma_drift_still_trips_on_a_perfectly_quiet_stream() {
+        // a zero-variance stream (identical injected timings) must not
+        // be blind: the σ floor keeps a genuine level shift trippable
+        let (x, w, algo) = small_fusable_layer();
+        let mut s = StaticScheduler::new(2);
+        s.set_decay_policy(DecayPolicy::OnDriftSigma { k: 3.0 });
+        s.record_exec_time(algo, &x, &w, ExecMode::Staged, 2.0);
+        for _ in 0..6 {
+            s.record_exec_time(algo, &x, &w, ExecMode::Fused, 0.020);
+        }
+        assert_eq!(s.decay_stats().drift_events, 0, "constant stream is calm");
+        // 3x degradation on the quiet stream: trips on the FIRST sample
+        s.record_exec_time(algo, &x, &w, ExecMode::Fused, 0.060);
+        assert_eq!(s.decay_stats().drift_events, 1);
+        assert_eq!(s.tuning_for(algo, &x, &w).unwrap().state, TuneState::Stale);
+    }
+
+    #[test]
+    fn fixed_rel_tol_trips_where_sigma_does_not() {
+        // the contrast case motivating OnDriftSigma: the identical
+        // stationary stream under a tight fixed tolerance churns
+        let (x, w, algo) = small_fusable_layer();
+        let mut s = StaticScheduler::new(2);
+        s.set_decay_policy(DecayPolicy::OnDrift { rel_tol: 0.05 });
+        s.record_exec_time(algo, &x, &w, ExecMode::Staged, 2.0);
+        s.record_exec_time(algo, &x, &w, ExecMode::Fused, 0.020);
+        s.record_exec_time(algo, &x, &w, ExecMode::Fused, 0.022);
+        assert_eq!(
+            s.decay_stats().drift_events,
+            1,
+            "fixed 5% tolerance trips on 10% jitter"
+        );
     }
 
     #[test]

@@ -1,52 +1,207 @@
 //! The convolution service: registered layers (weights + chosen
 //! algorithm), request intake with batching, static-scheduled execution,
 //! and metrics — the L3 composition of everything below it.
+//!
+//! ## The v2 serving surface
+//!
+//! * **Typed handles** — `register*` returns a copyable [`LayerId`];
+//!   requests carry it instead of a layer-name `String`, so the
+//!   submit→execute path never allocates or hashes strings.  Names are
+//!   a registration-time concern: [`ConvService::resolve`] maps one to
+//!   its handle once, then the handle is the address.
+//! * **Ticket-routed completion** — [`ConvService::submit`] returns a
+//!   [`Ticket`] immediately; executed responses wait in the service's
+//!   completion store until *their* ticket claims them
+//!   ([`ConvService::take`] / [`ConvService::drain_completed`]).
+//!   Interleaved multi-tenant callers can no longer receive each
+//!   other's outputs; `tick`/`flush` report how many responses
+//!   completed, not whose.
+//! * **Builder configuration** — [`ConvService::builder`] replaces the
+//!   positional constructor; every knob is a named fluent setter over
+//!   one [`ServiceConfig`], and the runtime setters
+//!   (`set_tuning_policy`, …) keep working for live reconfiguration.
+//! * **Structured errors** — every fallible call returns
+//!   [`ServiceError`]; no `assert!` is reachable from bad user input.
+//! * **Layer lifecycle** — [`ConvService::swap_weights`] re-warms the
+//!   plan under new weights (the scheduler deletes the dead
+//!   fingerprint's plan and tuning entries outright) and
+//!   [`ConvService::unregister`] retires a layer, flushing its pending
+//!   requests first so no ticket dangles.
 
 use super::batcher::{Batch, Batcher};
+use super::error::ServiceError;
 use super::metrics::Metrics;
-use super::request::{validate, ConvRequest, ConvResponse};
-use super::scheduler::{DecayPolicy, DecayStats, StaticScheduler, TuningPolicy};
+use super::request::{validate, ConvRequest, ConvResponse, LayerId, Ticket};
+use super::scheduler::{DecayPolicy, DecayStats, PlanHandle, StaticScheduler, TuningPolicy};
 use crate::conv::{ConvAlgorithm, ConvProblem, Tensor4};
 use crate::model::machine::Machine;
 use crate::model::select::{method_algo, select, select_measured};
 use crate::model::stages::LayerShape;
 use crate::util::threadpool::ThreadPool;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
-/// A registered layer: problem, weights, and the algorithm in force.
+/// Process-unique nonce source for ticket scoping: every service gets
+/// its own, so a ticket presented to the wrong service can never claim
+/// a response even when sequence numbers collide.
+static SERVICE_NONCE: AtomicU64 = AtomicU64::new(1);
+
+/// A registered layer: problem, weights, the algorithm in force, and
+/// the scheduler plan handle serving it.
 pub struct LayerEntry {
+    /// the directory name the layer was registered under
+    pub name: String,
     pub problem: ConvProblem,
     pub weights: Tensor4,
     pub algo: ConvAlgorithm,
+    /// pre-resolved plan reference (weight fingerprint included) — what
+    /// `execute_batch` hands the scheduler instead of re-fingerprinting
+    plan: PlanHandle,
 }
 
-/// The service.  Synchronous API: `submit` enqueues, `flush`/`tick`
-/// execute ready batches and return responses.
+/// Everything configurable about a [`ConvService`], in one place.  The
+/// builder fills it fluently; the service's runtime setters mutate the
+/// live equivalents.
+#[derive(Clone, Copy, Debug)]
+pub struct ServiceConfig {
+    /// worker threads in the scheduler's fork-join pool
+    pub workers: usize,
+    /// requests per signature group before a batch executes
+    pub max_batch: usize,
+    /// latency bound: the oldest pending request waits at most this
+    pub max_wait: Duration,
+    /// how staged-vs-fused verdicts are refined per batch bucket
+    pub tuning: TuningPolicy,
+    /// when settled verdicts stop being trusted
+    pub decay: DecayPolicy,
+    /// plan-cache byte ceiling (`None` keeps the scheduler default)
+    pub plan_budget: Option<usize>,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            workers: 1,
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            tuning: TuningPolicy::default(),
+            decay: DecayPolicy::default(),
+            plan_budget: None,
+        }
+    }
+}
+
+/// Fluent constructor for [`ConvService`] — see [`ConvService::builder`].
+pub struct ConvServiceBuilder {
+    machine: Machine,
+    cfg: ServiceConfig,
+}
+
+impl ConvServiceBuilder {
+    /// Worker threads for the scheduler's fork-join pool (min 1).
+    pub fn workers(mut self, n: usize) -> Self {
+        self.cfg.workers = n.max(1);
+        self
+    }
+
+    /// Requests per signature group before a batch executes (min 1).
+    pub fn max_batch(mut self, n: usize) -> Self {
+        self.cfg.max_batch = n.max(1);
+        self
+    }
+
+    /// Latency bound for partially filled groups (see `tick`).
+    pub fn max_wait(mut self, d: Duration) -> Self {
+        self.cfg.max_wait = d;
+        self
+    }
+
+    /// How the scheduler refines staged-vs-fused per batch bucket.
+    pub fn tuning_policy(mut self, p: TuningPolicy) -> Self {
+        self.cfg.tuning = p;
+        self
+    }
+
+    /// When settled exec verdicts stop being trusted.
+    pub fn decay_policy(mut self, p: DecayPolicy) -> Self {
+        self.cfg.decay = p;
+        self
+    }
+
+    /// Plan-cache byte ceiling (defaults to the scheduler's 256 MB).
+    pub fn plan_budget(mut self, bytes: usize) -> Self {
+        self.cfg.plan_budget = Some(bytes);
+        self
+    }
+
+    pub fn build(self) -> ConvService {
+        // the service's machine model also drives the scheduler's
+        // fused-vs-staged plan resolution and plan-cache sizing
+        let mut scheduler = StaticScheduler::new(self.cfg.workers);
+        scheduler.set_machine(self.machine.clone());
+        scheduler.set_tuning_policy(self.cfg.tuning);
+        scheduler.set_decay_policy(self.cfg.decay);
+        if let Some(bytes) = self.cfg.plan_budget {
+            scheduler.set_plan_budget(bytes);
+        }
+        ConvService {
+            entries: Vec::new(),
+            directory: HashMap::new(),
+            batcher: Batcher::new(self.cfg.max_batch, self.cfg.max_wait),
+            scheduler,
+            metrics: Metrics::default(),
+            machine: self.machine,
+            completed: HashMap::new(),
+            nonce: SERVICE_NONCE.fetch_add(1, Ordering::Relaxed),
+            next_seq: 0,
+        }
+    }
+}
+
+/// The service.  Synchronous API: `submit` enqueues and returns a
+/// [`Ticket`]; `flush`/`tick` execute ready batches into the completion
+/// store; `take`/`drain_completed` hand each caller its own responses.
 pub struct ConvService {
-    layers: HashMap<String, LayerEntry>,
+    /// layer slots indexed by `LayerId` — a retired slot stays `None`
+    /// forever (ids are not reused), so stale handles error cleanly
+    entries: Vec<Option<LayerEntry>>,
+    /// name → handle, consulted once per caller at resolve time
+    directory: HashMap<String, LayerId>,
     batcher: Batcher,
     scheduler: StaticScheduler,
     pub metrics: Metrics,
     machine: Machine,
+    /// executed responses waiting for their ticket to claim them,
+    /// keyed by the ticket's sequence number
+    completed: HashMap<u64, ConvResponse>,
+    /// this service's ticket nonce — `take` rejects tickets issued by
+    /// any other service before consulting the store
+    nonce: u64,
+    next_seq: u64,
 }
 
 impl ConvService {
-    pub fn new(machine: Machine, workers: usize, max_batch: usize, max_wait: Duration) -> Self {
-        // the service's machine model also drives the scheduler's
-        // fused-vs-staged plan resolution and plan-cache sizing
-        let mut scheduler = StaticScheduler::new(workers);
-        scheduler.set_machine(machine.clone());
-        ConvService {
-            layers: HashMap::new(),
-            batcher: Batcher::new(max_batch, max_wait),
-            scheduler,
-            metrics: Metrics::default(),
+    /// Start configuring a service for `machine` — finish with
+    /// [`ConvServiceBuilder::build`]:
+    ///
+    /// ```ignore
+    /// let svc = ConvService::builder(probe_host())
+    ///     .workers(8)
+    ///     .max_batch(16)
+    ///     .max_wait(Duration::from_millis(2))
+    ///     .tuning_policy(TuningPolicy::Hybrid)
+    ///     .build();
+    /// ```
+    pub fn builder(machine: Machine) -> ConvServiceBuilder {
+        ConvServiceBuilder {
             machine,
+            cfg: ServiceConfig::default(),
         }
     }
 
-    /// Register a layer with an explicit algorithm choice.
+    /// Register a layer with an explicit algorithm choice; returns its
+    /// typed handle.
     ///
     /// Registration pre-builds the layer's persistent [`LayerPlan`]
     /// (kernel transform + per-worker codelets) in the scheduler's plan
@@ -60,25 +215,66 @@ impl ConvService {
         problem: ConvProblem,
         weights: Tensor4,
         algo: ConvAlgorithm,
-    ) {
-        assert_eq!(weights.shape, problem.weight_shape(), "weight shape");
-        self.scheduler
+    ) -> Result<LayerId, ServiceError> {
+        self.check_registration(name, &problem, &weights)?;
+        let plan = self
+            .scheduler
             .warm(algo, &weights, problem.h, problem.w, problem.batch);
-        self.layers.insert(
-            name.to_string(),
-            LayerEntry {
-                problem,
-                weights,
-                algo,
-            },
-        );
+        let id = LayerId {
+            svc: self.nonce,
+            slot: self.entries.len() as u32,
+        };
+        self.entries.push(Some(LayerEntry {
+            name: name.to_string(),
+            problem,
+            weights,
+            algo,
+            plan,
+        }));
+        self.directory.insert(name.to_string(), id);
+        Ok(id)
+    }
+
+    /// The registration preconditions, checked before any expensive
+    /// work (plan warming, shortlist measurement): the name must be
+    /// fresh, the problem must be usable (nonzero dims, kernel fits the
+    /// input — the engine computes `h - r + 1` output pixels, which
+    /// must not underflow), and the weights must match the problem.
+    fn check_registration(
+        &self,
+        name: &str,
+        problem: &ConvProblem,
+        weights: &Tensor4,
+    ) -> Result<(), ServiceError> {
+        if self.directory.contains_key(name) {
+            return Err(ServiceError::DuplicateLayer {
+                name: name.to_string(),
+            });
+        }
+        let (c_in, c_out, h, w, r) =
+            (problem.c_in, problem.c_out, problem.h, problem.w, problem.r);
+        if c_in == 0 || c_out == 0 || r == 0 || h < r || w < r {
+            return Err(ServiceError::InvalidProblem { c_in, c_out, h, w, r });
+        }
+        if weights.shape != problem.weight_shape() {
+            return Err(ServiceError::WeightShape {
+                got: weights.shape,
+                want: problem.weight_shape(),
+            });
+        }
+        Ok(())
     }
 
     /// Register a layer, letting the Roofline model pick (method, tile).
-    pub fn register(&mut self, name: &str, problem: ConvProblem, weights: Tensor4) {
+    pub fn register(
+        &mut self,
+        name: &str,
+        problem: ConvProblem,
+        weights: Tensor4,
+    ) -> Result<LayerId, ServiceError> {
         let choice = select(&Self::problem_shape(&problem), &self.machine);
         let algo = method_algo(choice.method, choice.m);
-        self.register_with_algo(name, problem, weights, algo);
+        self.register_with_algo(name, problem, weights, algo)
     }
 
     /// Register a layer by *measurement*: run the roofline shortlist on
@@ -97,7 +293,15 @@ impl ConvService {
     /// should prefer [`ConvService::register`] plus
     /// [`TuningPolicy::Hybrid`], which spreads the measurement over the
     /// first real batches instead.
-    pub fn register_measured(&mut self, name: &str, problem: ConvProblem, weights: Tensor4) {
+    pub fn register_measured(
+        &mut self,
+        name: &str,
+        problem: ConvProblem,
+        weights: Tensor4,
+    ) -> Result<LayerId, ServiceError> {
+        // reject before measuring: a doomed registration must not pay
+        // the shortlist timings or seed the tuning table
+        self.check_registration(name, &problem, &weights)?;
         let shape = Self::problem_shape(&problem);
         // measure under the serving pool shape: fork-join overheads and
         // per-worker cache pressure are part of what decides the winner
@@ -110,7 +314,57 @@ impl ConvService {
         let algo = method_algo(mc.choice.method, mc.choice.m);
         self.scheduler
             .seed_exec_verdict(algo, &weights, problem.h, problem.w, problem.batch, &mc.exec);
-        self.register_with_algo(name, problem, weights, algo);
+        self.register_with_algo(name, problem, weights, algo)
+    }
+
+    /// Look up the handle a name was registered under — the one-time
+    /// directory step; everything after addresses the layer by handle.
+    pub fn resolve(&self, name: &str) -> Option<LayerId> {
+        self.directory.get(name).copied()
+    }
+
+    /// Replace a layer's weights in place.  The scheduler discards the
+    /// old fingerprint's plan *and* its tuning entries outright (they
+    /// can never recur) and pre-warms a plan for the new weights, so the
+    /// next batch already serves the update allocation-free.  Pending
+    /// requests for the layer are unaffected — same shapes, new weights.
+    pub fn swap_weights(&mut self, id: LayerId, weights: Tensor4) -> Result<(), ServiceError> {
+        let entry = self.entry_mut(id)?;
+        if weights.shape != entry.problem.weight_shape() {
+            return Err(ServiceError::WeightShape {
+                got: weights.shape,
+                want: entry.problem.weight_shape(),
+            });
+        }
+        let (old_plan, algo, h, w, batch) = (
+            entry.plan,
+            entry.algo,
+            entry.problem.h,
+            entry.problem.w,
+            entry.problem.batch,
+        );
+        self.scheduler.discard(old_plan);
+        let plan = self.scheduler.warm(algo, &weights, h, w, batch);
+        let entry = self.entry_mut(id).expect("checked above");
+        entry.weights = weights;
+        entry.plan = plan;
+        Ok(())
+    }
+
+    /// Retire a layer.  Its pending batches execute first (into the
+    /// completion store — no submitted ticket dangles), its plan and
+    /// tuning entries are discarded, and its id is never reused, so a
+    /// stale handle errors with `UnknownLayer` instead of addressing a
+    /// later registration.
+    pub fn unregister(&mut self, id: LayerId) -> Result<(), ServiceError> {
+        self.entry(id)?;
+        for batch in self.batcher.drain_layer(id) {
+            self.execute_batch(batch);
+        }
+        let entry = self.entries[id.index()].take().expect("checked above");
+        self.scheduler.discard(entry.plan);
+        self.directory.remove(&entry.name);
+        Ok(())
     }
 
     /// Set how the scheduler resolves staged-vs-fused per batch bucket.
@@ -128,9 +382,21 @@ impl ConvService {
         self.scheduler.tuning_disagreements()
     }
 
+    /// Total tuning-table entries (observability / tests).
+    pub fn tuning_entries(&self) -> usize {
+        self.scheduler.tuning_entries()
+    }
+
+    /// Cached layer plans in the scheduler (observability / tests).
+    pub fn cached_plans(&self) -> usize {
+        self.scheduler.cached_plans()
+    }
+
     /// Set when settled staged-vs-fused verdicts stop being trusted
     /// (see [`DecayPolicy`]): never, after serving N batches, or when a
-    /// warm winner sample drifts out of tolerance against its EWMA.
+    /// warm winner sample drifts out of tolerance against its EWMA —
+    /// fixed (`OnDrift`) or scaled to the stream's own noise
+    /// (`OnDriftSigma`).
     pub fn set_decay_policy(&mut self, policy: DecayPolicy) {
         self.scheduler.set_decay_policy(policy);
     }
@@ -155,81 +421,140 @@ impl ConvService {
         }
     }
 
-    pub fn layer(&self, name: &str) -> Option<&LayerEntry> {
-        self.layers.get(name)
-    }
-
-    /// Enqueue a request; executes immediately if it fills a batch.
-    pub fn submit(&mut self, req: ConvRequest) -> Result<Vec<ConvResponse>, String> {
-        let entry = self
-            .layers
-            .get(&req.layer)
-            .ok_or_else(|| format!("unknown layer '{}'", req.layer))?;
-        validate(&req, &entry.problem)?;
-        match self.batcher.push(req) {
-            Some(batch) => Ok(self.execute_batch(batch)),
-            None => Ok(Vec::new()),
+    pub fn layer(&self, id: LayerId) -> Option<&LayerEntry> {
+        if id.svc != self.nonce {
+            // another service's handle: its slot number means nothing
+            // here — never alias whatever layer occupies that slot
+            return None;
         }
+        self.entries.get(id.index()).and_then(|e| e.as_ref())
     }
 
-    /// Execute any batches whose latency deadline expired.
-    pub fn tick(&mut self) -> Vec<ConvResponse> {
+    fn entry(&self, id: LayerId) -> Result<&LayerEntry, ServiceError> {
+        self.layer(id).ok_or(ServiceError::UnknownLayer { id })
+    }
+
+    fn entry_mut(&mut self, id: LayerId) -> Result<&mut LayerEntry, ServiceError> {
+        if id.svc != self.nonce {
+            return Err(ServiceError::UnknownLayer { id });
+        }
+        self.entries
+            .get_mut(id.index())
+            .and_then(|e| e.as_mut())
+            .ok_or(ServiceError::UnknownLayer { id })
+    }
+
+    /// Enqueue a request; returns the claim ticket immediately.  If the
+    /// arrival filled a batch, the batch executes synchronously and its
+    /// responses (this one included) land in the completion store —
+    /// claim yours with [`ConvService::take`].
+    pub fn submit(&mut self, req: ConvRequest) -> Result<Ticket, ServiceError> {
+        let entry = self.entry(req.layer)?;
+        validate(&req, &entry.problem)?;
+        let ticket = Ticket {
+            svc: self.nonce,
+            seq: self.next_seq,
+        };
+        self.next_seq += 1;
+        if let Some(batch) = self.batcher.push(ticket, req) {
+            self.execute_batch(batch);
+        }
+        Ok(ticket)
+    }
+
+    /// Execute any batches whose latency deadline expired; returns how
+    /// many responses completed into the store.
+    pub fn tick(&mut self) -> usize {
         let batches = self.batcher.poll_expired();
-        batches
-            .into_iter()
-            .flat_map(|b| self.execute_batch(b))
-            .collect()
+        batches.into_iter().map(|b| self.execute_batch(b)).sum()
     }
 
-    /// Execute everything still pending.
-    pub fn flush(&mut self) -> Vec<ConvResponse> {
+    /// Execute everything still pending; returns how many responses
+    /// completed into the store.
+    pub fn flush(&mut self) -> usize {
         let batches = self.batcher.drain();
-        batches
-            .into_iter()
-            .flat_map(|b| self.execute_batch(b))
-            .collect()
+        batches.into_iter().map(|b| self.execute_batch(b)).sum()
     }
 
-    fn execute_batch(&mut self, batch: Batch) -> Vec<ConvResponse> {
-        let entry = self.layers.get(&batch.layer).expect("validated at submit");
+    /// Claim the response for `ticket`.  Returns `None` while the
+    /// request is still pending (tick/flush it first), if the ticket was
+    /// already claimed (tickets are single-use), or if the ticket was
+    /// issued by a different service — the ticket's service nonce is
+    /// checked before the store, so sequence-number collisions across
+    /// services can never leak a stranger's response.
+    pub fn take(&mut self, ticket: Ticket) -> Option<ConvResponse> {
+        if ticket.svc != self.nonce {
+            return None;
+        }
+        let resp = self.completed.remove(&ticket.seq);
+        self.metrics.record_unclaimed(self.completed.len());
+        resp
+    }
+
+    /// Claim every completed response (a single-tenant convenience and
+    /// the relief valve against abandoned tickets), in ticket order.
+    pub fn drain_completed(&mut self) -> Vec<ConvResponse> {
+        let mut all: Vec<ConvResponse> = self.completed.drain().map(|(_, r)| r).collect();
+        all.sort_by_key(|r| r.ticket);
+        self.metrics.record_unclaimed(0);
+        all
+    }
+
+    /// Responses executed but not yet claimed by their ticket.
+    pub fn unclaimed(&self) -> usize {
+        self.completed.len()
+    }
+
+    /// Requests submitted but not yet executed.
+    pub fn pending(&self) -> usize {
+        self.batcher.pending_count()
+    }
+
+    /// Run one batch and park its responses in the completion store;
+    /// returns how many completed.
+    fn execute_batch(&mut self, batch: Batch) -> usize {
+        let entry = self.entries[batch.layer.index()]
+            .as_ref()
+            .expect("layer validated at submit and retired only after draining");
         let n = batch.len();
-        let [_, c, h, w] = batch.requests[0].0.input.shape;
+        let [_, c, h, w] = batch.shape;
         // stack inputs into one (N, C, H, W) tensor
         let mut stacked = Tensor4::zeros([n, c, h, w]);
         let per = c * h * w;
-        for (i, (req, _)) in batch.requests.iter().enumerate() {
-            stacked.data[i * per..(i + 1) * per].copy_from_slice(&req.input.data);
+        for (i, p) in batch.requests.iter().enumerate() {
+            stacked.data[i * per..(i + 1) * per].copy_from_slice(&p.request.input.data);
         }
+        // the planned hot path: no string work, no weight re-scan — the
+        // handle already carries the plan key
         let out = self
             .scheduler
-            .run_batch(entry.algo, &stacked, &entry.weights);
+            .run_planned(entry.plan, &stacked, &entry.weights);
         let done = Instant::now();
         let [_, k, oh, ow] = out.shape;
         let oper = k * oh * ow;
         let mut latencies = Vec::with_capacity(n);
-        let responses: Vec<ConvResponse> = batch
-            .requests
-            .iter()
-            .enumerate()
-            .map(|(i, (req, t0))| {
-                let latency = done.duration_since(*t0).as_secs_f64();
-                latencies.push(latency);
+        for (i, p) in batch.requests.iter().enumerate() {
+            let latency = done.duration_since(p.enqueued).as_secs_f64();
+            latencies.push(latency);
+            self.completed.insert(
+                p.ticket.seq,
                 ConvResponse {
-                    id: req.id,
+                    ticket: p.ticket,
                     output: Tensor4::from_vec(
                         [1, k, oh, ow],
                         out.data[i * oper..(i + 1) * oper].to_vec(),
                     ),
                     latency,
                     batch_size: n,
-                }
-            })
-            .collect();
+                },
+            );
+        }
         self.metrics.record_batch(n, &latencies);
         // publish the scheduler's decay counters alongside the latency
         // stats, so one snapshot answers "is the tuning table churning?"
         self.metrics.record_decay(self.scheduler.decay_stats());
-        responses
+        self.metrics.record_unclaimed(self.completed.len());
+        n
     }
 }
 
@@ -240,7 +565,11 @@ mod tests {
     use crate::model::machine::xeon_gold;
 
     fn service(max_batch: usize) -> ConvService {
-        ConvService::new(xeon_gold(), 2, max_batch, Duration::from_millis(1))
+        ConvService::builder(xeon_gold())
+            .workers(2)
+            .max_batch(max_batch)
+            .max_wait(Duration::from_millis(1))
+            .build()
     }
 
     fn problem() -> ConvProblem {
@@ -258,27 +587,28 @@ mod tests {
     fn end_to_end_batched_correctness() {
         let mut svc = service(3);
         let w = Tensor4::random(problem().weight_shape(), 50);
-        svc.register("conv1", problem(), w.clone());
+        let id = svc.register("conv1", problem(), w.clone()).unwrap();
+        assert_eq!(svc.resolve("conv1"), Some(id));
 
         let inputs: Vec<Tensor4> = (0..3)
             .map(|i| Tensor4::random([1, 3, 12, 12], 60 + i))
             .collect();
-        let mut responses = Vec::new();
-        for (i, x) in inputs.iter().enumerate() {
-            responses.extend(
-                svc.submit(ConvRequest::new(i as u64, "conv1", x.clone()))
-                    .unwrap(),
-            );
-        }
-        assert_eq!(responses.len(), 3, "batch of 3 flushes on third submit");
-        for (i, resp) in responses.iter().enumerate() {
+        let tickets: Vec<Ticket> = inputs
+            .iter()
+            .map(|x| svc.submit(ConvRequest::new(id, x.clone()).unwrap()).unwrap())
+            .collect();
+        assert_eq!(svc.unclaimed(), 3, "batch of 3 executes on third submit");
+        for (i, t) in tickets.iter().enumerate() {
+            let resp = svc.take(*t).expect("each ticket claims its response");
+            assert_eq!(resp.ticket, *t);
             assert_eq!(resp.batch_size, 3);
-            let want = direct::naive(&inputs[resp.id as usize], &w);
+            let want = direct::naive(&inputs[i], &w);
             assert!(
                 resp.output.max_abs_diff(&want) < 2e-3 * want.max_abs().max(1.0),
                 "request {i}"
             );
         }
+        assert_eq!(svc.unclaimed(), 0);
         let snap = svc.metrics.snapshot();
         assert_eq!(snap.requests, 3);
         assert_eq!(snap.batches, 1);
@@ -287,47 +617,180 @@ mod tests {
     #[test]
     fn flush_executes_partial_batches() {
         let mut svc = service(100);
-        svc.register(
-            "conv1",
-            problem(),
-            Tensor4::random(problem().weight_shape(), 51),
-        );
-        svc.submit(ConvRequest::new(1, "conv1", Tensor4::random([1, 3, 12, 12], 70)))
+        let id = svc
+            .register(
+                "conv1",
+                problem(),
+                Tensor4::random(problem().weight_shape(), 51),
+            )
             .unwrap();
-        let rs = svc.flush();
-        assert_eq!(rs.len(), 1);
-        assert_eq!(rs[0].batch_size, 1);
+        let t = svc
+            .submit(ConvRequest::new(id, Tensor4::random([1, 3, 12, 12], 70)).unwrap())
+            .unwrap();
+        assert_eq!(svc.pending(), 1);
+        assert_eq!(svc.flush(), 1);
+        let resp = svc.take(t).unwrap();
+        assert_eq!(resp.batch_size, 1);
     }
 
     #[test]
     fn tick_honors_deadline() {
         let mut svc = service(100);
-        svc.register(
-            "conv1",
-            problem(),
-            Tensor4::random(problem().weight_shape(), 52),
-        );
-        svc.submit(ConvRequest::new(1, "conv1", Tensor4::random([1, 3, 12, 12], 71)))
+        let id = svc
+            .register(
+                "conv1",
+                problem(),
+                Tensor4::random(problem().weight_shape(), 52),
+            )
             .unwrap();
+        let t = svc
+            .submit(ConvRequest::new(id, Tensor4::random([1, 3, 12, 12], 71)).unwrap())
+            .unwrap();
+        assert_eq!(svc.tick(), 0, "deadline not reached yet");
         std::thread::sleep(Duration::from_millis(3));
-        let rs = svc.tick();
-        assert_eq!(rs.len(), 1);
+        assert_eq!(svc.tick(), 1);
+        assert!(svc.take(t).is_some());
     }
 
     #[test]
-    fn rejects_unknown_layer_and_bad_shape() {
+    fn structured_errors_for_unknown_layer_and_bad_shape() {
         let mut svc = service(4);
-        svc.register(
-            "conv1",
-            problem(),
-            Tensor4::random(problem().weight_shape(), 53),
+        let id = svc
+            .register(
+                "conv1",
+                problem(),
+                Tensor4::random(problem().weight_shape(), 53),
+            )
+            .unwrap();
+        // a retired handle errors; it never aliases a later registration
+        svc.unregister(id).unwrap();
+        let err = svc
+            .submit(ConvRequest::new(id, Tensor4::zeros([1, 3, 12, 12])).unwrap())
+            .unwrap_err();
+        assert_eq!(err, ServiceError::UnknownLayer { id });
+        let id2 = svc
+            .register(
+                "conv2",
+                problem(),
+                Tensor4::random(problem().weight_shape(), 54),
+            )
+            .unwrap();
+        let err = svc
+            .submit(ConvRequest::new(id2, Tensor4::zeros([1, 2, 12, 12])).unwrap())
+            .unwrap_err();
+        assert_eq!(
+            err,
+            ServiceError::ShapeMismatch {
+                got: [1, 2, 12, 12],
+                want: [1, 3, 12, 12],
+            }
         );
-        assert!(svc
-            .submit(ConvRequest::new(1, "nope", Tensor4::zeros([1, 3, 12, 12])))
-            .is_err());
-        assert!(svc
-            .submit(ConvRequest::new(2, "conv1", Tensor4::zeros([1, 2, 12, 12])))
-            .is_err());
+    }
+
+    #[test]
+    fn register_rejects_degenerate_problems() {
+        // kernel larger than the input: the engine's h - r + 1 output
+        // arithmetic must never be reached with this
+        let mut svc = service(4);
+        let p = ConvProblem {
+            batch: 1,
+            c_in: 3,
+            c_out: 4,
+            h: 1,
+            w: 1,
+            r: 3,
+        };
+        let err = svc
+            .register("tiny", p, Tensor4::zeros(p.weight_shape()))
+            .unwrap_err();
+        assert_eq!(
+            err,
+            ServiceError::InvalidProblem {
+                c_in: 3,
+                c_out: 4,
+                h: 1,
+                w: 1,
+                r: 3,
+            }
+        );
+        let zero_c = ConvProblem { c_in: 0, ..problem() };
+        assert!(matches!(
+            svc.register("zc", zero_c, Tensor4::zeros(zero_c.weight_shape())),
+            Err(ServiceError::InvalidProblem { .. })
+        ));
+    }
+
+    #[test]
+    fn foreign_layer_handle_is_unknown_not_an_alias() {
+        // two services, colliding slot numbers: a handle from one must
+        // never address the other's layer
+        let mut a = service(4);
+        let mut b = service(4);
+        let ia = a
+            .register("al", problem(), Tensor4::random(problem().weight_shape(), 60))
+            .unwrap();
+        let ib = b
+            .register("bl", problem(), Tensor4::random(problem().weight_shape(), 61))
+            .unwrap();
+        assert_eq!(ia.index(), ib.index(), "slots collide by construction");
+        assert_ne!(ia, ib, "handles still differ: the nonce disambiguates");
+        assert!(a.layer(ib).is_none());
+        let err = a
+            .submit(ConvRequest::new(ib, Tensor4::zeros([1, 3, 12, 12])).unwrap())
+            .unwrap_err();
+        assert_eq!(err, ServiceError::UnknownLayer { id: ib });
+        assert!(a.swap_weights(ib, Tensor4::zeros(problem().weight_shape())).is_err());
+    }
+
+    #[test]
+    fn register_rejects_duplicates_and_bad_weight_shapes() {
+        let mut svc = service(4);
+        let w = Tensor4::random(problem().weight_shape(), 55);
+        svc.register("conv1", problem(), w.clone()).unwrap();
+        assert_eq!(
+            svc.register("conv1", problem(), w.clone()).unwrap_err(),
+            ServiceError::DuplicateLayer {
+                name: "conv1".into()
+            }
+        );
+        let bad = Tensor4::zeros([4, 3, 5, 5]); // r=5 against an r=3 problem
+        assert_eq!(
+            svc.register("conv2", problem(), bad).unwrap_err(),
+            ServiceError::WeightShape {
+                got: [4, 3, 5, 5],
+                want: problem().weight_shape(),
+            }
+        );
+    }
+
+    #[test]
+    fn unregister_flushes_pending_and_frees_the_name() {
+        let mut svc = service(100);
+        let id = svc
+            .register(
+                "conv1",
+                problem(),
+                Tensor4::random(problem().weight_shape(), 56),
+            )
+            .unwrap();
+        let t = svc
+            .submit(ConvRequest::new(id, Tensor4::random([1, 3, 12, 12], 72)).unwrap())
+            .unwrap();
+        svc.unregister(id).unwrap();
+        assert!(svc.take(t).is_some(), "pending work completed, not dropped");
+        assert_eq!(svc.resolve("conv1"), None);
+        assert_eq!(svc.unregister(id).unwrap_err(), ServiceError::UnknownLayer { id });
+        // the name is reusable, the old handle is not
+        let id2 = svc
+            .register(
+                "conv1",
+                problem(),
+                Tensor4::random(problem().weight_shape(), 57),
+            )
+            .unwrap();
+        assert_ne!(id, id2);
+        assert!(svc.layer(id).is_none());
+        assert!(svc.layer(id2).is_some());
     }
 
     #[test]
@@ -336,17 +799,34 @@ mod tests {
         svc.set_tuning_policy(TuningPolicy::Hybrid);
         assert_eq!(svc.tuning_policy(), TuningPolicy::Hybrid);
         let w = Tensor4::random(problem().weight_shape(), 55);
-        svc.register_measured("conv1", problem(), w.clone());
-        let algo = svc.layer("conv1").unwrap().algo;
+        let id = svc.register_measured("conv1", problem(), w.clone()).unwrap();
+        let algo = svc.layer(id).unwrap().algo;
         assert!(algo.tile_m().is_some(), "measured pick is a tiled method");
         let x = Tensor4::random([1, 3, 12, 12], 72);
-        svc.submit(ConvRequest::new(9, "conv1", x.clone())).unwrap();
-        let rs = svc.flush();
-        assert_eq!(rs.len(), 1);
+        let t = svc.submit(ConvRequest::new(id, x.clone()).unwrap()).unwrap();
+        assert_eq!(svc.flush(), 1);
+        let resp = svc.take(t).unwrap();
         let want = direct::naive(&x, &w);
-        assert!(rs[0].output.max_abs_diff(&want) < 2e-3 * want.max_abs().max(1.0));
+        assert!(resp.output.max_abs_diff(&want) < 2e-3 * want.max_abs().max(1.0));
         // the disagreement counter is servable regardless of the verdict
         let _ = svc.tuning_disagreements();
+    }
+
+    #[test]
+    fn builder_wires_every_knob() {
+        let svc = ConvService::builder(xeon_gold())
+            .workers(3)
+            .max_batch(5)
+            .max_wait(Duration::from_millis(7))
+            .tuning_policy(TuningPolicy::Measured)
+            .decay_policy(DecayPolicy::AfterBatches(9))
+            .plan_budget(64 << 20)
+            .build();
+        assert_eq!(svc.tuning_policy(), TuningPolicy::Measured);
+        assert_eq!(svc.decay_policy(), DecayPolicy::AfterBatches(9));
+        assert_eq!(svc.batcher.max_batch, 5);
+        assert_eq!(svc.batcher.max_wait, Duration::from_millis(7));
+        assert_eq!(svc.scheduler.workers(), 3);
     }
 
     #[test]
@@ -356,12 +836,12 @@ mod tests {
         svc.set_decay_policy(DecayPolicy::OnDrift { rel_tol: 0.5 });
         assert_eq!(svc.decay_policy(), DecayPolicy::OnDrift { rel_tol: 0.5 });
         let w = Tensor4::random(problem().weight_shape(), 56);
-        svc.register("conv1", problem(), w);
+        let id = svc.register("conv1", problem(), w).unwrap();
         let x = Tensor4::random([1, 3, 12, 12], 73);
-        let mut rs = svc.submit(ConvRequest::new(1, "conv1", x.clone())).unwrap();
-        rs.extend(svc.submit(ConvRequest::new(2, "conv1", x)).unwrap());
-        rs.extend(svc.flush());
-        assert_eq!(rs.len(), 2);
+        let t1 = svc.submit(ConvRequest::new(id, x.clone()).unwrap()).unwrap();
+        let t2 = svc.submit(ConvRequest::new(id, x).unwrap()).unwrap();
+        svc.flush();
+        assert!(svc.take(t1).is_some() && svc.take(t2).is_some());
         // steady single-bucket traffic: counters exist and are quiet
         let snap = svc.metrics.snapshot();
         assert_eq!(snap.drift_events, 0);
@@ -373,12 +853,14 @@ mod tests {
     #[test]
     fn register_picks_model_choice() {
         let mut svc = service(4);
-        svc.register(
-            "conv1",
-            problem(),
-            Tensor4::random(problem().weight_shape(), 54),
-        );
-        let algo = svc.layer("conv1").unwrap().algo;
+        let id = svc
+            .register(
+                "conv1",
+                problem(),
+                Tensor4::random(problem().weight_shape(), 54),
+            )
+            .unwrap();
+        let algo = svc.layer(id).unwrap().algo;
         assert!(algo.tile_m().is_some(), "model should pick a tiled method");
     }
 }

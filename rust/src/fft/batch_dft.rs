@@ -150,7 +150,14 @@ impl BatchDft {
     /// s == r for implicitly zero-padded kernels).
     ///
     /// `x`: (nb, s, s) row-major; outputs: (nb, th, t) planes.
-    pub fn forward(&mut self, x: &[f32], nb: usize, s: usize, out_re: &mut [f32], out_im: &mut [f32]) {
+    pub fn forward(
+        &mut self,
+        x: &[f32],
+        nb: usize,
+        s: usize,
+        out_re: &mut [f32],
+        out_im: &mut [f32],
+    ) {
         let (t, th) = (self.t, self.th);
         debug_assert_eq!(x.len(), nb * s * s);
         debug_assert_eq!(out_re.len(), nb * th * t);

@@ -18,7 +18,12 @@
 //!   convolution requests, re-resolving each layer's staged-vs-fused
 //!   execution per batch-size bucket with drift-aware verdict decay —
 //!   EWMA-tracked timings, expiring verdicts, bounded shadow
-//!   re-measurement (`coordinator::scheduler`).
+//!   re-measurement (`coordinator::scheduler`).  The serving API is
+//!   typed end to end: layers are addressed by copyable [`LayerId`]
+//!   handles, submissions return [`Ticket`]s that route each response
+//!   back to its own caller, services are built fluently
+//!   (`ConvService::builder`), and every fallible call returns a
+//!   structured [`ServiceError`].
 //!
 //! A guided tour of the serving path — `ConvService` → `StaticScheduler`
 //! → `LayerPlan` → the staged/fused pipelines → `ThreadPool` — with the
@@ -48,4 +53,5 @@ pub mod util;
 pub mod winograd;
 
 pub use conv::{ConvAlgorithm, ConvProblem};
+pub use coordinator::{ConvRequest, ConvResponse, ConvService, LayerId, ServiceError, Ticket};
 pub use model::machine::Machine;

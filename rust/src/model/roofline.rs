@@ -87,7 +87,12 @@ pub struct FusedBreakdown {
 }
 
 /// Fused-pipeline prediction for (method, layer, m) on `machine`.
-pub fn fused_layer_time(method: Method, l: &LayerShape, m: usize, machine: &Machine) -> FusedBreakdown {
+pub fn fused_layer_time(
+    method: Method,
+    l: &LayerShape,
+    m: usize,
+    machine: &Machine,
+) -> FusedBreakdown {
     let lm = layer_model(method, l, m, machine.cache);
     let fpo = lm.stages[0].fpo + lm.stages[2].fpo + lm.stages[3].fpo;
     let t = m + l.r - 1;

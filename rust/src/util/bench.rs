@@ -146,7 +146,12 @@ impl Table {
 
 /// ASCII scatter/line plot: series of (x, y) with labels — used by the
 /// figure benches to sketch the paper's plots in the terminal.
-pub fn ascii_plot(title: &str, series: &[(&str, Vec<(f64, f64)>)], width: usize, height: usize) -> String {
+pub fn ascii_plot(
+    title: &str,
+    series: &[(&str, Vec<(f64, f64)>)],
+    width: usize,
+    height: usize,
+) -> String {
     let mut pts: Vec<(f64, f64)> = Vec::new();
     for (_, s) in series {
         pts.extend_from_slice(s);

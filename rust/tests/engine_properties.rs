@@ -4,7 +4,7 @@
 //! batching, scheduling).
 
 use fftconv::conv::{self, direct, ConvAlgorithm, Tensor4, TileGrid};
-use fftconv::coordinator::{ConvRequest, ConvService};
+use fftconv::coordinator::{ConvRequest, ConvService, Ticket};
 use fftconv::model::machine::xeon_gold;
 use fftconv::util::quickcheck::{assert_close, check, gen_conv_dims};
 use fftconv::util::Rng;
@@ -118,40 +118,48 @@ fn prop_service_routes_responses_to_correct_ids() {
             w: hw,
             r: 3,
         };
-        let mut svc = ConvService::new(xeon_gold(), 2, 4, Duration::from_millis(1));
+        let mut svc = ConvService::builder(xeon_gold())
+            .workers(2)
+            .max_batch(4)
+            .max_wait(Duration::from_millis(1))
+            .build();
         let weights = Tensor4::random(problem.weight_shape(), rng.next_u64());
-        svc.register("l", problem, weights.clone());
+        let layer = svc
+            .register("l", problem, weights.clone())
+            .map_err(|e| e.to_string())?;
 
         let n_req = rng.range(1, 9);
         let inputs: Vec<Tensor4> = (0..n_req)
             .map(|_| Tensor4::random([1, c, hw, hw], rng.next_u64()))
             .collect();
-        let mut responses = Vec::new();
-        for (i, x) in inputs.iter().enumerate() {
-            responses.extend(
-                svc.submit(ConvRequest::new(i as u64, "l", x.clone()))
-                    .map_err(|e| e.to_string())?,
-            );
+        let mut tickets: Vec<Ticket> = Vec::new();
+        for x in &inputs {
+            let req = ConvRequest::new(layer, x.clone()).map_err(|e| e.to_string())?;
+            tickets.push(svc.submit(req).map_err(|e| e.to_string())?);
         }
-        responses.extend(svc.flush());
-        if responses.len() != n_req {
-            return Err(format!("{} responses for {n_req} requests", responses.len()));
-        }
-        // every id answered exactly once, with the right numerics
-        let mut seen = vec![false; n_req];
-        for resp in &responses {
-            let i = resp.id as usize;
-            if seen[i] {
-                return Err(format!("duplicate response for id {i}"));
+        svc.flush();
+        // every ticket claims exactly its own response, with the right
+        // numerics; a second take on the same ticket yields nothing
+        for (i, t) in tickets.iter().enumerate() {
+            let resp = svc
+                .take(*t)
+                .ok_or_else(|| format!("ticket {i} unanswered"))?;
+            if resp.ticket != *t {
+                return Err(format!("ticket {i} claimed a stranger's response"));
             }
-            seen[i] = true;
             if resp.batch_size > 4 {
                 return Err(format!("batch {} exceeds max 4", resp.batch_size));
             }
             let want = direct::naive(&inputs[i], &weights);
             let scale = want.max_abs().max(1.0) as f64;
             assert_close(&resp.output.data, &want.data, 5e-3 * scale, 1e-3)
-                .map_err(|e| format!("id {i}: {e}"))?;
+                .map_err(|e| format!("ticket {i}: {e}"))?;
+            if svc.take(*t).is_some() {
+                return Err(format!("ticket {i} claimed twice"));
+            }
+        }
+        if svc.unclaimed() != 0 {
+            return Err(format!("{} orphan responses", svc.unclaimed()));
         }
         Ok(())
     });

@@ -1,0 +1,211 @@
+//! The v2 serving-API contract, end to end (ISSUE 5 acceptance):
+//! ticket-routed completion under interleaved multi-layer traffic —
+//! every ticket resolves to exactly its own output, foreign and
+//! already-claimed tickets yield `None` — plus the layer lifecycle:
+//! `swap_weights` re-warms the plan and deletes the dead fingerprint's
+//! tuning entries, `unregister` retires handles without dangling
+//! tickets, and the error taxonomy is structured (no stringly-typed
+//! results, no panics on bad user input).
+
+use fftconv::conv::{direct, ConvProblem, Tensor4};
+use fftconv::coordinator::{ConvRequest, ConvService, ServiceError, Ticket, TuningPolicy};
+use fftconv::model::machine::xeon_gold;
+use std::time::Duration;
+
+fn problem(c_in: usize, hw: usize) -> ConvProblem {
+    ConvProblem {
+        batch: 4,
+        c_in,
+        c_out: 4,
+        h: hw,
+        w: hw,
+        r: 3,
+    }
+}
+
+fn service(max_batch: usize) -> ConvService {
+    ConvService::builder(xeon_gold())
+        .workers(2)
+        .max_batch(max_batch)
+        .max_wait(Duration::from_millis(1))
+        .build()
+}
+
+#[test]
+fn tickets_route_interleaved_multi_layer_traffic_to_their_own_callers() {
+    let mut svc = service(3);
+    let (pa, pb) = (problem(3, 12), problem(2, 10));
+    let wa = Tensor4::random(pa.weight_shape(), 80);
+    let wb = Tensor4::random(pb.weight_shape(), 81);
+    let la = svc.register("layer-a", pa, wa.clone()).unwrap();
+    let lb = svc.register("layer-b", pb, wb.clone()).unwrap();
+
+    // interleaved, out-of-order submits across the two layers: layer A
+    // fills its batch of 3 mid-stream (executing while B still waits),
+    // the leftovers flush at the end — completion order is nothing like
+    // submission order
+    let plan = [la, lb, lb, la, la, lb, la, lb, la];
+    let inputs: Vec<Tensor4> = plan
+        .iter()
+        .enumerate()
+        .map(|(i, id)| {
+            let p = if *id == la { &pa } else { &pb };
+            Tensor4::random([1, p.c_in, p.h, p.w], 90 + i as u64)
+        })
+        .collect();
+    let tickets: Vec<Ticket> = inputs
+        .iter()
+        .zip(&plan)
+        .map(|(x, id)| svc.submit(ConvRequest::new(*id, x.clone()).unwrap()).unwrap())
+        .collect();
+    svc.flush();
+
+    // a foreign ticket — another service's, with a sequence number that
+    // collides with an UNCLAIMED response here — is None, not a
+    // stranger's payload, and must not consume the rightful response
+    let mut other = service(1);
+    let lo = other.register("layer-a", pa, wa.clone()).unwrap();
+    let xo = Tensor4::random([1, pa.c_in, pa.h, pa.w], 7);
+    let foreign = other.submit(ConvRequest::new(lo, xo).unwrap()).unwrap();
+    assert_eq!(foreign.id(), tickets[0].id(), "colliding sequence numbers");
+    assert!(svc.take(foreign).is_none(), "foreign ticket leaked a response");
+
+    // every ticket resolves to exactly its own output
+    for ((t, x), id) in tickets.iter().zip(&inputs).zip(&plan) {
+        let resp = svc.take(*t).expect("every submitted ticket completes");
+        assert_eq!(resp.ticket, *t);
+        let w = if *id == la { &wa } else { &wb };
+        let want = direct::naive(x, w);
+        assert!(
+            resp.output.max_abs_diff(&want) < 2e-3 * want.max_abs().max(1.0),
+            "ticket {} received a stranger's (or wrong) output",
+            t.id()
+        );
+    }
+    assert_eq!(svc.unclaimed(), 0, "no orphan responses");
+
+    // a duplicate take is None: tickets are single-use
+    assert!(svc.take(tickets[0]).is_none());
+}
+
+#[test]
+fn pending_tickets_resolve_only_after_execution() {
+    let mut svc = service(100);
+    let p = problem(3, 12);
+    let id = svc
+        .register("conv", p, Tensor4::random(p.weight_shape(), 82))
+        .unwrap();
+    let x = Tensor4::random([1, 3, 12, 12], 83);
+    let t = svc.submit(ConvRequest::new(id, x).unwrap()).unwrap();
+    assert!(svc.take(t).is_none(), "still batched, not executed");
+    assert_eq!(svc.pending(), 1);
+    assert_eq!(svc.flush(), 1);
+    assert!(svc.take(t).is_some());
+}
+
+#[test]
+fn swap_weights_serves_new_weights_rewarns_plan_and_drops_dead_tuning_entries() {
+    let mut svc = service(2);
+    svc.set_tuning_policy(TuningPolicy::Hybrid);
+    let p = problem(3, 12);
+    let w1 = Tensor4::random(p.weight_shape(), 84);
+    let w2 = Tensor4::random(p.weight_shape(), 85);
+    let id = svc.register("conv", p, w1.clone()).unwrap();
+    assert_eq!(svc.cached_plans(), 1, "registration pre-warms the plan");
+
+    // serve a few batches so the old fingerprint accumulates tuning
+    // entries at two buckets (batch 1 via flush, batch 2 via fill)
+    let x = Tensor4::random([1, 3, 12, 12], 86);
+    let t1 = svc.submit(ConvRequest::new(id, x.clone()).unwrap()).unwrap();
+    svc.flush();
+    let t2 = svc.submit(ConvRequest::new(id, x.clone()).unwrap()).unwrap();
+    let t3 = svc.submit(ConvRequest::new(id, x.clone()).unwrap()).unwrap();
+    for t in [t1, t2, t3] {
+        let resp = svc.take(t).unwrap();
+        let want = direct::naive(&x, &w1);
+        assert!(resp.output.max_abs_diff(&want) < 2e-3 * want.max_abs().max(1.0));
+    }
+    let entries_before = svc.tuning_entries();
+    assert!(entries_before >= 2, "traffic at two buckets tuned two entries");
+
+    // wrong-shape weights are rejected with a structured error
+    let bad = Tensor4::zeros([4, 3, 5, 5]);
+    assert_eq!(
+        svc.swap_weights(id, bad).unwrap_err(),
+        ServiceError::WeightShape {
+            got: [4, 3, 5, 5],
+            want: p.weight_shape(),
+        }
+    );
+
+    svc.swap_weights(id, w2.clone()).unwrap();
+    // the plan cache re-warmed eagerly: old plan discarded, new one
+    // already resident before any post-swap traffic
+    assert_eq!(svc.cached_plans(), 1, "one plan: re-warmed, not duplicated");
+    // the dead fingerprint's tuning entries are gone; only the re-warm
+    // seed for the new fingerprint's nominal bucket remains
+    let entries_after = svc.tuning_entries();
+    assert!(
+        entries_after < entries_before,
+        "stale entries survived the swap: {entries_before} -> {entries_after}"
+    );
+
+    // the next batch serves the NEW weights
+    let t4 = svc.submit(ConvRequest::new(id, x.clone()).unwrap()).unwrap();
+    svc.flush();
+    let resp = svc.take(t4).unwrap();
+    let want_new = direct::naive(&x, &w2);
+    let want_old = direct::naive(&x, &w1);
+    assert!(
+        resp.output.max_abs_diff(&want_new) < 2e-3 * want_new.max_abs().max(1.0),
+        "post-swap output does not match the new weights"
+    );
+    assert!(
+        resp.output.max_abs_diff(&want_old) > 1e-2,
+        "post-swap output still matches the old weights"
+    );
+
+    // swapping an unknown handle errors
+    svc.unregister(id).unwrap();
+    assert_eq!(
+        svc.swap_weights(id, w2).unwrap_err(),
+        ServiceError::UnknownLayer { id }
+    );
+}
+
+#[test]
+fn error_taxonomy_is_matchable_and_panic_free() {
+    let mut svc = service(4);
+    let p = problem(3, 12);
+    let id = svc
+        .register("conv", p, Tensor4::random(p.weight_shape(), 87))
+        .unwrap();
+
+    // batched input is a value, not a panic
+    assert_eq!(
+        ConvRequest::new(id, Tensor4::zeros([2, 3, 12, 12])).unwrap_err(),
+        ServiceError::BatchedInput { got: 2 }
+    );
+    // wrong request shape carries got/want
+    let err = svc
+        .submit(ConvRequest::new(id, Tensor4::zeros([1, 2, 12, 12])).unwrap())
+        .unwrap_err();
+    assert_eq!(
+        err,
+        ServiceError::ShapeMismatch {
+            got: [1, 2, 12, 12],
+            want: [1, 3, 12, 12],
+        }
+    );
+    // duplicate registration names the offender
+    assert_eq!(
+        svc.register("conv", p, Tensor4::random(p.weight_shape(), 88))
+            .unwrap_err(),
+        ServiceError::DuplicateLayer {
+            name: "conv".into()
+        }
+    );
+    // errors display actionably (std::error::Error is implemented)
+    let dyn_err: Box<dyn std::error::Error> = Box::new(err);
+    assert!(dyn_err.to_string().contains("[1, 2, 12, 12]"));
+}

@@ -23,6 +23,8 @@ if [[ "${1:-}" != "--quick" ]]; then
     # and disagreement count; schema in docs/ARCHITECTURE.md)
     cargo bench --bench micro_hotpaths
     if [[ -f BENCH_hotpaths.json ]]; then
+        echo "---- submit path (v2 typed-handle intake) ----"
+        grep -E '"(scheduler_batch8_us|submit_path_us)"' BENCH_hotpaths.json || true
         echo "---- fused vs staged summary (BENCH_hotpaths.json) ----"
         grep -E '"(vgg|alexnet)_(staged_ms|fused_ms|fused_speedup|pred_staged_bytes|pred_fused_bytes|panel_tiles|exec_selected)"' \
             BENCH_hotpaths.json || true
