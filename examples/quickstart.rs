@@ -64,6 +64,7 @@ fn main() {
         let opts = PlanOptions {
             exec,
             fused_budget: 1 << 20, // bytes of per-worker cache for panels
+            ..PlanOptions::default()
         };
         let mut plan = LayerPlan::with_options(
             ConvAlgorithm::RegularFft { m: 6 },

@@ -1,5 +1,7 @@
 //! Micro-benchmarks of the engine hot paths (the §Perf working set):
-//! blocked GEMM, FFT plans by size class (incl. Rader primes), Winograd
+//! the selected ISA kernel set and its calibrated compute ceilings,
+//! blocked GEMM (real/complex/Gauss) with roofline-attainment
+//! percentages, FFT plans by size class (incl. Rader primes), Winograd
 //! tile transforms, tiling gather/scatter, coordinator overhead, the
 //! stage-parallel engine on a VGG-shaped layer, and the measured-exec
 //! autotuning verdicts (analytic vs empirical staged/fused pick) —
@@ -7,15 +9,17 @@
 //! successive PRs have a machine-readable perf trajectory (schema:
 //! docs/ARCHITECTURE.md §BENCH).
 
-use fftconv::conv::gemm::{cgemm_acc, gemm_acc};
+use fftconv::conv::gemm::{cgemm_acc, gauss_gemm_acc, gemm_acc, GaussScratch};
 use fftconv::conv::{
     ConvAlgorithm, ConvProblem, ExecMode, ExecPolicy, LayerPlan, PlanOptions, Tensor4, TileGrid,
 };
 use fftconv::coordinator::{ConvRequest, ConvService, DecayPolicy, StaticScheduler};
 use fftconv::fft::{C32, Plan, TileFft};
-use fftconv::model::machine::xeon_gold;
+use fftconv::model::machine::{calibrate_isa, xeon_gold};
+use fftconv::model::roofline::fused_layer_time;
 use fftconv::model::select::{choose_exec, measure_exec};
 use fftconv::model::stages::{LayerShape, Method};
+use fftconv::simd::Isa;
 use fftconv::util::bench::{bench, Table};
 use fftconv::util::json::Json;
 use fftconv::util::threadpool::ThreadPool;
@@ -30,7 +34,37 @@ fn main() {
     let mut json = BTreeMap::new();
     let mut rng = Rng::new(7);
 
-    // GEMM sizes: the element-wise stage shapes (tall-skinny)
+    // ---- ISA dispatch + calibrated compute ceilings ----
+    // The kernel set plans bind on this host, plus every available set's
+    // one-shot FMA calibration (sustained in-cache 96^3 GEMM) — the
+    // per-ISA roofline ceilings of §BENCH `isa` / `peak_gflops`.
+    let active_isa = Isa::resolved();
+    let ceiling = calibrate_isa(active_isa);
+    {
+        json.insert("isa".to_string(), Json::Str(active_isa.name().to_string()));
+        json.insert("peak_gflops".to_string(), Json::Num(ceiling));
+        let mut per_isa = BTreeMap::new();
+        for isa in Isa::available() {
+            let gf = calibrate_isa(isa);
+            t.row(vec![
+                "isa-ceiling".into(),
+                format!(
+                    "{}{}",
+                    isa.name(),
+                    if isa == active_isa { " (active)" } else { "" }
+                ),
+                "-".into(),
+                format!("{gf:.2}"),
+            ]);
+            per_isa.insert(isa.name().to_string(), Json::Num(gf));
+        }
+        json.insert("isa_peak_gflops".to_string(), Json::Obj(per_isa));
+    }
+
+    // GEMM sizes: the element-wise stage shapes (tall-skinny).  Each
+    // family's best GF/s is held against the calibrated ceiling below
+    // (roofline attainment).
+    let mut real_gf = 0.0f64;
     for (m, k, n) in [(64usize, 64usize, 64usize), (256, 64, 64), (1024, 64, 64), (256, 256, 256)] {
         let a = rng.vec_f32(m * k);
         let b = rng.vec_f32(k * n);
@@ -40,6 +74,7 @@ fn main() {
             std::hint::black_box(&c);
         });
         let gf = 2.0 * (m * k * n) as f64 / r.median.as_secs_f64() / 1e9;
+        real_gf = real_gf.max(gf);
         t.row(vec![
             "gemm".into(),
             format!("{m}x{k}x{n}"),
@@ -47,6 +82,7 @@ fn main() {
             format!("{gf:.2}"),
         ]);
     }
+    let mut cgemm_gf = 0.0f64;
     {
         let (m, k, n) = (256usize, 64usize, 64usize);
         let (ur, ui) = (rng.vec_f32(m * k), rng.vec_f32(m * k));
@@ -57,13 +93,51 @@ fn main() {
             cgemm_acc(&mut zr, &mut zi, &ur, &ui, &vr, &vi, m, k, n);
             std::hint::black_box(&zr);
         });
-        let gf = 8.0 * (m * k * n) as f64 / r.median.as_secs_f64() / 1e9;
+        cgemm_gf = 8.0 * (m * k * n) as f64 / r.median.as_secs_f64() / 1e9;
         t.row(vec![
             "cgemm".into(),
             format!("{m}x{k}x{n}"),
             format!("{:.1}", r.median.as_secs_f64() * 1e6),
-            format!("{gf:.2}"),
+            format!("{cgemm_gf:.2}"),
         ]);
+    }
+    let mut gauss_gf = 0.0f64;
+    {
+        let (m, k, n) = (256usize, 64usize, 64usize);
+        let (ur, ui, us) = (rng.vec_f32(m * k), rng.vec_f32(m * k), rng.vec_f32(m * k));
+        let (vr, vd, vs) = (rng.vec_f32(k * n), rng.vec_f32(k * n), rng.vec_f32(k * n));
+        let mut zr = vec![0.0f32; m * n];
+        let mut zi = vec![0.0f32; m * n];
+        let mut scratch = GaussScratch::default();
+        let r = bench("gauss", 200, || {
+            gauss_gemm_acc(
+                &mut zr, &mut zi, &ur, &ui, &us, &vr, &vd, &vs, m, k, n, &mut scratch,
+            );
+            std::hint::black_box(&zr);
+        });
+        gauss_gf = 6.0 * (m * k * n) as f64 / r.median.as_secs_f64() / 1e9;
+        t.row(vec![
+            "gauss-gemm".into(),
+            format!("{m}x{k}x{n}"),
+            format!("{:.1}", r.median.as_secs_f64() * 1e6),
+            format!("{gauss_gf:.2}"),
+        ]);
+    }
+    // roofline attainment of each GEMM family vs the active ceiling
+    {
+        let mut kernels = BTreeMap::new();
+        for (name, gf) in [("real", real_gf), ("cgemm", cgemm_gf), ("gauss", gauss_gf)] {
+            let pct = 100.0 * gf / ceiling.max(1e-9);
+            t.row(vec![
+                "attainment".into(),
+                format!("{name} vs {} ceiling", active_isa.name()),
+                format!("{pct:.0}%"),
+                format!("{gf:.2}"),
+            ]);
+            kernels.insert(format!("{name}_gflops"), Json::Num(gf));
+            kernels.insert(format!("{name}_attainment_pct"), Json::Num(pct));
+        }
+        json.insert("kernels".to_string(), Json::Obj(kernels));
     }
 
     // FFT plans: powers of two vs smooth vs prime (Rader)
@@ -325,6 +399,18 @@ fn main() {
             let l = LayerShape { b, c, k, x: hw, r };
             let choice = choose_exec(method, &l, m, &machine);
             let speedup = rs.median.as_secs_f64() / rf.median.as_secs_f64();
+            // roofline attainment of the fused run: execution FLOPs (from
+            // the model's layer accounting) over measured time, against
+            // the calibrated per-core ceiling scaled by worker count
+            let fpo = fused_layer_time(method, &l, m, &machine).fpo;
+            let layer_gf = fpo / rf.median.as_secs_f64() / 1e9;
+            let attain = 100.0 * layer_gf / (ceiling * workers as f64).max(1e-9);
+            t.row(vec![
+                format!("{tag}-attainment"),
+                format!("{} x{workers} ceiling", active_isa.name()),
+                format!("{attain:.0}%"),
+                format!("{layer_gf:.2}"),
+            ]);
             for (name, rr) in [("staged", &rs), ("fused", &rf)] {
                 t.row(vec![
                     format!("{tag}-{name}"),
@@ -350,6 +436,8 @@ fn main() {
             json.insert(format!("{tag}_staged_ms"), Json::Num(rs.median_ms()));
             json.insert(format!("{tag}_fused_ms"), Json::Num(rf.median_ms()));
             json.insert(format!("{tag}_fused_speedup"), Json::Num(speedup));
+            json.insert(format!("{tag}_fused_gflops"), Json::Num(layer_gf));
+            json.insert(format!("{tag}_attainment_pct"), Json::Num(attain));
             json.insert(
                 format!("{tag}_pred_staged_bytes"),
                 Json::Num(choice.staged_dm),

@@ -4,7 +4,8 @@
 //! *transposed* — consistent across input/kernel transforms, and the
 //! output transform un-transposes (`(M X M^T)^T` composed twice).
 
-use super::gemm::gemm_acc;
+use super::gemm::gemm_acc_isa;
+use crate::simd::Isa;
 
 /// One transform matrix M (a x b) applied as a sandwich over tile batches.
 #[derive(Clone, Debug)]
@@ -15,6 +16,8 @@ pub struct BatchSandwich {
     pub b: usize,
     /// M^T, row-major (b, a)
     mt: Vec<f32>,
+    /// kernel set for the GEMM passes, bound at construction
+    isa: Isa,
     y: Vec<f32>,
     tr: Vec<f32>,
     /// staging for the panel-layout variant
@@ -22,8 +25,15 @@ pub struct BatchSandwich {
 }
 
 impl BatchSandwich {
-    /// `mat`: M row-major (a, b).
+    /// `mat`: M row-major (a, b).  Uses the process-wide resolved kernel
+    /// set; plans that carry their own ISA use [`BatchSandwich::with_isa`].
     pub fn new(mat: &[f32], a: usize, b: usize) -> BatchSandwich {
+        BatchSandwich::with_isa(mat, a, b, Isa::resolved())
+    }
+
+    /// [`BatchSandwich::new`] with an explicit kernel set (clamped to the
+    /// host by the GEMM dispatcher).
+    pub fn with_isa(mat: &[f32], a: usize, b: usize, isa: Isa) -> BatchSandwich {
         assert_eq!(mat.len(), a * b);
         let mut mt = vec![0.0f32; b * a];
         for i in 0..a {
@@ -35,6 +45,7 @@ impl BatchSandwich {
             a,
             b,
             mt,
+            isa,
             y: Vec::new(),
             tr: Vec::new(),
             pbuf: Vec::new(),
@@ -57,7 +68,7 @@ impl BatchSandwich {
 
         // pass 1: Y = X @ M^T  — (nb*b, b) x (b, a)
         y[..nb * b * a].fill(0.0);
-        gemm_acc(&mut y[..nb * b * a], x, &self.mt, nb * b, b, a);
+        gemm_acc_isa(&mut y[..nb * b * a], x, &self.mt, nb * b, b, a, self.isa);
         // transpose tiles (b, a) -> (a, b)
         for t_ in 0..nb {
             for i in 0..b {
@@ -68,7 +79,7 @@ impl BatchSandwich {
         }
         // pass 2: out = Y' @ M^T — (nb*a, b) x (b, a)
         out.fill(0.0);
-        gemm_acc(out, &tr[..nb * a * b], &self.mt, nb * a, b, a);
+        gemm_acc_isa(out, &tr[..nb * a * b], &self.mt, nb * a, b, a, self.isa);
 
         self.y = y;
         self.tr = tr;

@@ -67,13 +67,15 @@
 use super::batch_wino::BatchSandwich;
 use super::fft_conv::FftVariant;
 use super::gemm::{
-    cgemm_acc, cgemm_panel_acc, gauss_gemm_acc, gauss_panel_acc, gemm_acc, gemm_panel,
-    GaussScratch,
+    cgemm_acc_isa, cgemm_panel_acc_isa, gauss_gemm_acc_isa, gauss_panel_acc_isa, gemm_acc_isa,
+    gemm_panel_isa, GaussScratch,
 };
 use super::tensor::Tensor4;
 use super::tiles::TileGrid;
 use super::ConvAlgorithm;
 use crate::fft::batch_dft::BatchDft;
+use crate::simd::Isa;
+use crate::util::aligned::AlignedVec;
 use crate::util::threadpool::{even_ranges, ThreadPool};
 use crate::winograd::matrices::winograd_matrices_f32;
 use std::marker::PhantomData;
@@ -135,6 +137,11 @@ pub struct PlanOptions {
     pub exec: ExecPolicy,
     /// per-worker cache budget (bytes) that sizes the fused tile panel
     pub fused_budget: usize,
+    /// kernel set override — `None` resolves the process-wide default
+    /// ([`Isa::resolved`]: runtime detection, or the `FFTCONV_FORCE_ISA`
+    /// environment override).  Either way the value is clamped to what
+    /// the host can execute and bound into the plan at construction.
+    pub isa: Option<Isa>,
 }
 
 impl Default for PlanOptions {
@@ -142,6 +149,7 @@ impl Default for PlanOptions {
         PlanOptions {
             exec: ExecPolicy::Auto,
             fused_budget: DEFAULT_FUSED_BUDGET,
+            isa: None,
         }
     }
 }
@@ -295,13 +303,14 @@ struct WorkerState {
     /// inverse output tiles, cap x m x m
     ob: Vec<f32>,
     gauss: GaussScratch,
-    /// fused panel U planes: [P][C][pb] re / im / re+im
-    fur: Vec<f32>,
-    fui: Vec<f32>,
-    fus: Vec<f32>,
+    /// fused panel U planes: [P][C][pb] re / im / re+im — 64-byte-aligned,
+    /// these are the SIMD panel GEMMs' streaming operands
+    fur: AlignedVec,
+    fui: AlignedVec,
+    fus: AlignedVec,
     /// fused panel Z planes: [P][K][pb] re / im
-    fzr: Vec<f32>,
-    fzi: Vec<f32>,
+    fzr: AlignedVec,
+    fzi: AlignedVec,
 }
 
 impl WorkerState {
@@ -313,11 +322,11 @@ impl WorkerState {
             tim: if is_fft { vec![0.0; cap * p] } else { Vec::new() },
             ob: vec![0.0; cap * m * m],
             gauss: GaussScratch::default(),
-            fur: Vec::new(),
-            fui: Vec::new(),
-            fus: Vec::new(),
-            fzr: Vec::new(),
-            fzi: Vec::new(),
+            fur: AlignedVec::new(),
+            fui: AlignedVec::new(),
+            fus: AlignedVec::new(),
+            fzr: AlignedVec::new(),
+            fzi: AlignedVec::new(),
         }
     }
 
@@ -325,22 +334,26 @@ impl WorkerState {
     /// (no-op after the first fused batch, or after a `trim`-then-rerun).
     fn ensure_fused(&mut self, need_u: usize, need_z: usize, is_fft: bool, gauss: bool) {
         if self.fur.len() < need_u {
-            self.fur.resize(need_u, 0.0);
+            self.fur.resize(need_u);
         }
         if self.fzr.len() < need_z {
-            self.fzr.resize(need_z, 0.0);
+            self.fzr.resize(need_z);
         }
         if is_fft {
             if self.fui.len() < need_u {
-                self.fui.resize(need_u, 0.0);
+                self.fui.resize(need_u);
             }
             if self.fzi.len() < need_z {
-                self.fzi.resize(need_z, 0.0);
+                self.fzi.resize(need_z);
             }
         }
         if gauss && self.fus.len() < need_u {
-            self.fus.resize(need_u, 0.0);
+            self.fus.resize(need_u);
         }
+        debug_assert!(
+            self.fur.is_aligned() && self.fzr.is_aligned(),
+            "fused panels must be 64-byte-aligned"
+        );
     }
 
     /// Bytes of droppable fused-panel scratch (the shared Gauss buffers
@@ -356,11 +369,11 @@ impl WorkerState {
 
     /// Free the droppable scratch (regrown on the next batch).
     fn trim(&mut self) {
-        self.fur = Vec::new();
-        self.fui = Vec::new();
-        self.fus = Vec::new();
-        self.fzr = Vec::new();
-        self.fzi = Vec::new();
+        self.fur = AlignedVec::new();
+        self.fui = AlignedVec::new();
+        self.fus = AlignedVec::new();
+        self.fzr = AlignedVec::new();
+        self.fzi = AlignedVec::new();
         self.gauss.clear();
     }
 }
@@ -388,6 +401,10 @@ pub struct LayerPlan {
     variant: Option<FftVariant>,
     /// resolved execution mode (see [`PlanOptions::exec`])
     mode: ExecMode,
+    /// resolved kernel set, bound at construction (clamped to the host) —
+    /// every GEMM and codelet this plan runs uses exactly this ISA, so the
+    /// per-batch hot path never re-detects or branches on features
+    isa: Isa,
     /// tiles per fused panel (0 in staged mode)
     pb: usize,
     grid: TileGrid,
@@ -396,12 +413,13 @@ pub struct LayerPlan {
     vi: Vec<f32>,
     vd: Vec<f32>,
     vs: Vec<f32>,
-    // grow-only hot-path arenas (U[P][C][BN], Z[P][K][BN] planes)
-    ur: Vec<f32>,
-    ui: Vec<f32>,
-    us: Vec<f32>,
-    zr: Vec<f32>,
-    zi: Vec<f32>,
+    // grow-only hot-path arenas (U[P][C][BN], Z[P][K][BN] planes),
+    // 64-byte-aligned for the SIMD kernels
+    ur: AlignedVec,
+    ui: AlignedVec,
+    us: AlignedVec,
+    zr: AlignedVec,
+    zi: AlignedVec,
     workers: Vec<WorkerState>,
 }
 
@@ -448,6 +466,7 @@ impl LayerPlan {
             None => t * t,
             Some(_) => (t / 2 + 1) * t,
         };
+        let isa = opts.isa.unwrap_or_else(Isa::resolved).clamp_to_host();
         let fit = fused_panel_tiles(p, c, k, is_fft, gauss, opts.fused_budget);
         // fused *capability* (pb > 0) is kept whenever a useful panel fits
         // the budget, regardless of the default mode below — the per-batch
@@ -481,8 +500,8 @@ impl LayerPlan {
                 for _ in 0..nworkers {
                     workers.push(WorkerState::new(
                         Codelets::Winograd {
-                            input: BatchSandwich::new(&bt, t, t),
-                            output: BatchSandwich::new(&at, m, t),
+                            input: BatchSandwich::with_isa(&bt, t, t, isa),
+                            output: BatchSandwich::with_isa(&at, m, t, isa),
                         },
                         t,
                         p,
@@ -491,12 +510,12 @@ impl LayerPlan {
                         cap,
                     ));
                 }
-                let mut kernel_tf = BatchSandwich::new(&g, t, r);
+                let mut kernel_tf = BatchSandwich::with_isa(&g, t, r, isa);
                 let vr = wino_kernel_transform(weights, &mut kernel_tf, p);
                 (workers, vr, Vec::new(), Vec::new(), Vec::new())
             }
             Some(_) => {
-                let tf = BatchDft::new(m, r);
+                let tf = BatchDft::with_isa(m, r, isa);
                 debug_assert_eq!(p, tf.th * tf.t);
                 let mut workers = Vec::with_capacity(nworkers);
                 for _ in 0..nworkers {
@@ -521,19 +540,26 @@ impl LayerPlan {
             p,
             variant,
             mode,
+            isa,
             pb,
             grid,
             vr,
             vi,
             vd,
             vs,
-            ur: Vec::new(),
-            ui: Vec::new(),
-            us: Vec::new(),
-            zr: Vec::new(),
-            zi: Vec::new(),
+            ur: AlignedVec::new(),
+            ui: AlignedVec::new(),
+            us: AlignedVec::new(),
+            zr: AlignedVec::new(),
+            zi: AlignedVec::new(),
             workers,
         }
+    }
+
+    /// The kernel set this plan bound at construction (after clamping the
+    /// requested/resolved ISA to the host's capability).
+    pub fn isa(&self) -> Isa {
+        self.isa
     }
 
     /// Shape of the output for a batch of `b` images.
@@ -646,11 +672,11 @@ impl LayerPlan {
     /// traffic can shed its staged high-water mark without a fused warm-up
     /// on the next batch.
     pub fn trim_staged(&mut self) {
-        self.ur = Vec::new();
-        self.ui = Vec::new();
-        self.us = Vec::new();
-        self.zr = Vec::new();
-        self.zi = Vec::new();
+        self.ur = AlignedVec::new();
+        self.ui = AlignedVec::new();
+        self.us = AlignedVec::new();
+        self.zr = AlignedVec::new();
+        self.zi = AlignedVec::new();
         for ws in &mut self.workers {
             ws.gauss.clear();
         }
@@ -741,22 +767,26 @@ impl LayerPlan {
         let need_u = p * c * bn;
         let need_z = p * k * bn;
         if self.ur.len() < need_u {
-            self.ur.resize(need_u, 0.0);
+            self.ur.resize(need_u);
         }
         if self.zr.len() < need_z {
-            self.zr.resize(need_z, 0.0);
+            self.zr.resize(need_z);
         }
         if is_fft {
             if self.ui.len() < need_u {
-                self.ui.resize(need_u, 0.0);
+                self.ui.resize(need_u);
             }
             if self.zi.len() < need_z {
-                self.zi.resize(need_z, 0.0);
+                self.zi.resize(need_z);
             }
         }
         if gauss && self.us.len() < need_u {
-            self.us.resize(need_u, 0.0);
+            self.us.resize(need_u);
         }
+        debug_assert!(
+            self.ur.is_aligned() && self.zr.is_aligned(),
+            "staged arenas must be 64-byte-aligned"
+        );
 
         // ---- stage 1: input transform, sharded over (b, c, tile) ----
         {
@@ -838,6 +868,7 @@ impl LayerPlan {
             let ui = &self.ui[..if is_fft { need_u } else { 0 }];
             let us = &self.us[..if gauss { need_u } else { 0 }];
             let (vr, vi, vd, vs) = (&self.vr, &self.vi, &self.vd, &self.vs);
+            let isa = self.isa;
             let mut parts = Vec::with_capacity(nw);
             for (((range, zr_s), zi_s), ws) in shards
                 .iter()
@@ -857,7 +888,7 @@ impl LayerPlan {
                     let vr_p = &vr[pp * k * c..(pp + 1) * k * c];
                     if !is_fft {
                         // Z_p (K x BN) = V_p (K x C) @ U_p (C x BN)
-                        gemm_acc(zr_p, vr_p, ur_p, k, c, bn);
+                        gemm_acc_isa(zr_p, vr_p, ur_p, k, c, bn, isa);
                         continue;
                     }
                     let zi_p = &mut zi_s[z0..z0 + k * bn];
@@ -869,7 +900,7 @@ impl LayerPlan {
                         // (gauss_gemm_acc computes t1 = arg_us@arg_vr etc., so
                         // the kernel-side planes go in the "u" slots and vice
                         // versa — identical to the pre-engine layer code)
-                        gauss_gemm_acc(
+                        gauss_gemm_acc_isa(
                             zr_p,
                             zi_p,
                             &vd[pp * k * c..(pp + 1) * k * c], // arg ur -> t2 lhs
@@ -882,9 +913,10 @@ impl LayerPlan {
                             c,
                             bn,
                             &mut ws.gauss,
+                            isa,
                         );
                     } else {
-                        cgemm_acc(zr_p, zi_p, vr_p, vi_p, ur_p, ui_p, k, c, bn);
+                        cgemm_acc_isa(zr_p, zi_p, vr_p, vi_p, ur_p, ui_p, k, c, bn, isa);
                     }
                 }
             });
@@ -999,6 +1031,7 @@ impl LayerPlan {
         // split can express — same argument as the staged U writes.
         let out_sh = SharedSlice::new(&mut out.data[..]);
         let (vr, vi, vd, vs) = (&self.vr, &self.vi, &self.vd, &self.vs);
+        let isa = self.isa;
         let parts: Vec<(Range<usize>, &mut WorkerState)> =
             shards.into_iter().zip(self.workers.iter_mut()).collect();
         execute(pool, parts, |_wi, (range, ws)| {
@@ -1062,7 +1095,7 @@ impl LayerPlan {
                     let vr_p = &vr[pp * k * c..(pp + 1) * k * c];
                     if !is_fft {
                         // Z_p (K x cnt) = V_p (K x C) @ U_p (C x cnt)
-                        gemm_panel(zr_p, vr_p, ur_p, k, c, cnt, 1.0);
+                        gemm_panel_isa(zr_p, vr_p, ur_p, k, c, cnt, 1.0, isa);
                         continue;
                     }
                     let zi_p = &mut ws.fzi[z0..z0 + k * cnt];
@@ -1070,7 +1103,7 @@ impl LayerPlan {
                     let ui_p = &ws.fui[u0..u0 + c * cnt];
                     let vi_p = &vi[pp * k * c..(pp + 1) * k * c];
                     if gauss {
-                        gauss_panel_acc(
+                        gauss_panel_acc_isa(
                             zr_p,
                             zi_p,
                             vr_p,
@@ -1083,9 +1116,10 @@ impl LayerPlan {
                             c,
                             cnt,
                             &mut ws.gauss,
+                            isa,
                         );
                     } else {
-                        cgemm_panel_acc(zr_p, zi_p, vr_p, vi_p, ur_p, ui_p, k, c, cnt);
+                        cgemm_panel_acc_isa(zr_p, zi_p, vr_p, vi_p, ur_p, ui_p, k, c, cnt, isa);
                     }
                 }
 
@@ -1358,6 +1392,7 @@ mod tests {
         let opts = PlanOptions {
             exec: ExecPolicy::Auto,
             fused_budget: 64,
+            ..PlanOptions::default()
         };
         let plan = LayerPlan::with_options(ConvAlgorithm::Winograd { m: 4 }, &w, 13, 12, 2, opts);
         assert_eq!(plan.exec_mode(), ExecMode::Staged);
@@ -1461,6 +1496,7 @@ mod tests {
         let opts = PlanOptions {
             exec: ExecPolicy::Auto,
             fused_budget: 64,
+            ..PlanOptions::default()
         };
         let mut plan =
             LayerPlan::with_options(ConvAlgorithm::Winograd { m: 4 }, &w, 13, 12, 1, opts);

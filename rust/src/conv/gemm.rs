@@ -9,33 +9,82 @@
 //! * Gauss complex GEMM   — 3 real GEMMs + recombination
 //!
 //! Layout: row-major everywhere; `a` is M x K, `b` is K x N, `c` is M x N.
-//! The micro-kernel keeps a row of C in registers and walks B rows
-//! (i-k-j order), which LLVM autovectorizes; cache blocking over K keeps
-//! the B panel resident, mirroring Eqn. 13's "sub-matrix of V in cache".
+//! Cache blocking over K keeps the B panel resident, mirroring Eqn. 13's
+//! "sub-matrix of V in cache".
+//!
+//! ## ISA dispatch
+//!
+//! Every entry point has an `_isa` variant taking a [`Isa`] that selects
+//! the register micro-kernel (the paper's kernels are hand-vectorized
+//! AVX-512, §4 — relying on autovectorization leaves the FMA ports idle):
+//!
+//! | ISA      | tile (MR x NR) | accumulators                 |
+//! |----------|----------------|------------------------------|
+//! | scalar   | 4 x 16         | stack arrays (LLVM autovec)  |
+//! | avx2+fma | 6 x 16         | 12 ymm + 2 B + 1 broadcast   |
+//! | avx512f  | 8 x 32         | 16 zmm + 2 B + 1 broadcast   |
+//!
+//! All variants share one scalar [`kernel_edge`] tail path for
+//! `m % MR` / `n % NR` residues (bounded by [`MR_MAX`] x [`NR_MAX`]), so
+//! the residue logic exists exactly once.  The ISA argument is clamped to
+//! the host's detected capability, so a mis-forced value degrades instead
+//! of faulting.  The legacy names (`gemm_acc`, `gemm_panel`, ...) forward
+//! to the process-wide [`Isa::resolved`] kernel set; plan-bound callers
+//! (`conv::engine`, the transform codelets) pass their own resolved value
+//! so the per-batch hot path never re-detects.
+
+use crate::simd::Isa;
+use crate::util::aligned::AlignedVec;
 
 /// C += A * B (real).
 pub fn gemm_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
-    gemm_scaled(c, a, b, m, k, n, 1.0)
+    gemm_acc_isa(c, a, b, m, k, n, Isa::resolved())
 }
 
 /// C -= A * B (real).
 pub fn gemm_sub(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
-    gemm_scaled(c, a, b, m, k, n, -1.0)
+    gemm_sub_isa(c, a, b, m, k, n, Isa::resolved())
 }
 
-/// Rows per register block (accumulators live in stack arrays the
+/// [`gemm_acc`] with an explicit kernel set.
+pub fn gemm_acc_isa(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize, isa: Isa) {
+    gemm_scaled_isa(c, a, b, m, k, n, 1.0, isa)
+}
+
+/// [`gemm_sub`] with an explicit kernel set.
+pub fn gemm_sub_isa(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize, isa: Isa) {
+    gemm_scaled_isa(c, a, b, m, k, n, -1.0, isa)
+}
+
+/// Rows per scalar register block (accumulators live in stack arrays the
 /// compiler keeps in vector registers).
 const MR: usize = 4;
-/// Columns per register block (2 AVX2 lanes x 4 rows = 8 accumulators).
+/// Columns per scalar register block (2 AVX2 lanes x 4 rows = 8 accumulators).
 const NR: usize = 16;
+
+/// Largest MR any ISA variant uses — the shared edge kernel's row bound.
+const MR_MAX: usize = 8;
+/// Largest NR any ISA variant uses — the shared edge kernel's column bound.
+const NR_MAX: usize = 32;
+
+/// The (MR, NR) register blocking of an ISA's full-tile micro-kernel
+/// (nominal — what the variant uses where it is available; dispatch
+/// clamps to the host before selecting).
+pub fn blocking(isa: Isa) -> (usize, usize) {
+    match isa {
+        Isa::Scalar => (MR, NR),
+        Isa::Avx2 => (6, 16),
+        Isa::Avx512 => (8, 32),
+    }
+}
 
 /// C += alpha * A * B.
 ///
-/// Register-blocked micro-kernel: MR x NR accumulator tile held in stack
-/// arrays across the whole K loop (one store per C element per call,
-/// instead of one per (k, element)); the B panel streams row-wise and
-/// stays L1/L2-resident for all MR rows.  See EXPERIMENTS.md §Perf for
-/// the measured effect (~16 -> >40 GF/s on the dev host).
+/// Register-blocked micro-kernel: MR x NR accumulator tile held across the
+/// whole K loop (one store per C element per call, instead of one per
+/// (k, element)); the B panel streams row-wise and stays L1/L2-resident
+/// for all MR rows.  See EXPERIMENTS.md §Perf for the measured effect
+/// (~16 -> >40 GF/s on the dev host).
 pub fn gemm_scaled(
     c: &mut [f32],
     a: &[f32],
@@ -45,10 +94,24 @@ pub fn gemm_scaled(
     n: usize,
     alpha: f32,
 ) {
+    gemm_scaled_isa(c, a, b, m, k, n, alpha, Isa::resolved())
+}
+
+/// [`gemm_scaled`] with an explicit kernel set.
+pub fn gemm_scaled_isa(
+    c: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    alpha: f32,
+    isa: Isa,
+) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
-    gemm_strided(c, a, b, m, k, n, k, n, n, alpha);
+    gemm_strided_isa(c, a, b, m, k, n, k, n, n, alpha, isa);
 }
 
 /// C += alpha * A * B with explicit leading dimensions (row strides): `a`
@@ -70,10 +133,53 @@ pub fn gemm_strided(
     ldc: usize,
     alpha: f32,
 ) {
+    gemm_strided_isa(c, a, b, m, k, n, lda, ldb, ldc, alpha, Isa::resolved());
+}
+
+/// [`gemm_strided`] with an explicit kernel set — the single dispatch
+/// point every GEMM flavor funnels through.  `isa` is clamped to the
+/// host's capability, so this is safe for any [`Isa`] value.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_strided_isa(
+    c: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    lda: usize,
+    ldb: usize,
+    ldc: usize,
+    alpha: f32,
+    isa: Isa,
+) {
     debug_assert!(m == 0 || k == 0 || a.len() > (m - 1) * lda + k - 1);
     debug_assert!(k == 0 || n == 0 || b.len() > (k - 1) * ldb + n - 1);
     debug_assert!(m == 0 || n == 0 || c.len() > (m - 1) * ldc + n - 1);
+    match isa.clamp_to_host() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => x86::gemm_strided_avx2(c, a, b, m, k, n, lda, ldb, ldc, alpha),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx512 => x86::gemm_strided_avx512(c, a, b, m, k, n, lda, ldb, ldc, alpha),
+        _ => gemm_strided_scalar(c, a, b, m, k, n, lda, ldb, ldc, alpha),
+    }
+}
 
+/// The portable tile loop: full 4 x 16 tiles via [`kernel_4x16`], residues
+/// via the shared [`kernel_edge`].
+#[allow(clippy::too_many_arguments)]
+fn gemm_strided_scalar(
+    c: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    lda: usize,
+    ldb: usize,
+    ldc: usize,
+    alpha: f32,
+) {
     let mut j0 = 0;
     while j0 < n {
         let nb = NR.min(n - j0);
@@ -91,7 +197,7 @@ pub fn gemm_strided(
     }
 }
 
-/// The MR x NR = 4 x 16 register tile.
+/// The scalar MR x NR = 4 x 16 register tile.
 #[inline]
 #[allow(clippy::too_many_arguments)]
 fn kernel_4x16(
@@ -125,11 +231,12 @@ fn kernel_4x16(
     }
 }
 
-/// Register-blocked edge kernel for partial tiles (m % MR / n % NR
-/// residues): same accumulator-tile strategy as [`kernel_4x16`] — a full
-/// MR x NR stack array held across the whole K loop, with only the first
-/// `mb` rows / `nb` columns live — instead of the former scalar-ish
-/// fallback that re-loaded and re-stored C once per k step.
+/// The one shared edge/residue path: register-blocked partial tiles for
+/// `m % MR` / `n % NR` remainders of *every* ISA variant (hence the
+/// [`MR_MAX`] x [`NR_MAX`] accumulator bound — large enough for the
+/// AVX-512 tile's leftovers).  Same accumulator-tile strategy as the full
+/// kernels: a stack array held across the whole K loop with only the
+/// first `mb` rows / `nb` columns live.
 #[inline]
 #[allow(clippy::too_many_arguments)]
 fn kernel_edge(
@@ -146,8 +253,8 @@ fn kernel_edge(
     ldc: usize,
     alpha: f32,
 ) {
-    debug_assert!(mb <= MR && nb <= NR);
-    let mut acc = [[0.0f32; NR]; MR];
+    debug_assert!(mb <= MR_MAX && nb <= NR_MAX);
+    let mut acc = [[0.0f32; NR_MAX]; MR_MAX];
     for kk in 0..k {
         let brow = &b[kk * ldb + j0..kk * ldb + j0 + nb];
         for (r, accr) in acc.iter_mut().take(mb).enumerate() {
@@ -161,6 +268,207 @@ fn kernel_edge(
         let crow = &mut c[(i0 + r) * ldc + j0..(i0 + r) * ldc + j0 + nb];
         for (cv, &x) in crow.iter_mut().zip(accr) {
             *cv += alpha * x;
+        }
+    }
+}
+
+/// Explicit `std::arch` micro-kernels.  Only the full-tile bodies are
+/// `unsafe` (raw pointers + `target_feature`); the drivers are safe code
+/// that promotes the strided-bounds contract to hard asserts before any
+/// pointer arithmetic, and routes partial tiles to the shared scalar
+/// [`kernel_edge`].
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::kernel_edge;
+    use std::arch::x86_64::*;
+
+    /// AVX2+FMA register blocking: 6 x 16 (12 ymm accumulators, 2 B-row
+    /// vectors, 1 broadcast — 15 of 16 ymm).
+    pub const AVX2_MR: usize = 6;
+    pub const AVX2_NR: usize = 16;
+    /// AVX-512F register blocking: 8 x 32 (16 zmm accumulators, 2 B-row
+    /// vectors, 1 broadcast — 19 of 32 zmm).
+    pub const AVX512_MR: usize = 8;
+    pub const AVX512_NR: usize = 32;
+
+    /// Hard (release-mode) bounds for the raw-pointer kernels: the exact
+    /// strided extents every tile access stays inside.
+    fn assert_bounds(
+        c: &[f32],
+        a: &[f32],
+        b: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        lda: usize,
+        ldb: usize,
+        ldc: usize,
+    ) {
+        assert!(m == 0 || k == 0 || a.len() > (m - 1) * lda + k - 1);
+        assert!(k == 0 || n == 0 || b.len() > (k - 1) * ldb + n - 1);
+        assert!(m == 0 || n == 0 || c.len() > (m - 1) * ldc + n - 1);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn gemm_strided_avx2(
+        c: &mut [f32],
+        a: &[f32],
+        b: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        lda: usize,
+        ldb: usize,
+        ldc: usize,
+        alpha: f32,
+    ) {
+        assert_bounds(c, a, b, m, k, n, lda, ldb, ldc);
+        let mut i0 = 0;
+        while i0 < m {
+            let mb = AVX2_MR.min(m - i0);
+            let mut j0 = 0;
+            while j0 < n {
+                let nb = AVX2_NR.min(n - j0);
+                if mb == AVX2_MR && nb == AVX2_NR {
+                    // SAFETY: the dispatcher clamped to the detected ISA,
+                    // so avx2+fma are present; the full tile at (i0, j0)
+                    // stays inside the extents checked by assert_bounds.
+                    unsafe {
+                        kernel_6x16_avx2(
+                            c.as_mut_ptr().add(i0 * ldc + j0),
+                            a.as_ptr().add(i0 * lda),
+                            b.as_ptr().add(j0),
+                            k,
+                            lda,
+                            ldb,
+                            ldc,
+                            alpha,
+                        )
+                    };
+                } else {
+                    kernel_edge(c, a, b, i0, j0, mb, nb, k, lda, ldb, ldc, alpha);
+                }
+                j0 += nb;
+            }
+            i0 += mb;
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn gemm_strided_avx512(
+        c: &mut [f32],
+        a: &[f32],
+        b: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        lda: usize,
+        ldb: usize,
+        ldc: usize,
+        alpha: f32,
+    ) {
+        assert_bounds(c, a, b, m, k, n, lda, ldb, ldc);
+        let mut i0 = 0;
+        while i0 < m {
+            let mb = AVX512_MR.min(m - i0);
+            let mut j0 = 0;
+            while j0 < n {
+                let nb = AVX512_NR.min(n - j0);
+                if mb == AVX512_MR && nb == AVX512_NR {
+                    // SAFETY: as in gemm_strided_avx2, with avx512f.
+                    unsafe {
+                        kernel_8x32_avx512(
+                            c.as_mut_ptr().add(i0 * ldc + j0),
+                            a.as_ptr().add(i0 * lda),
+                            b.as_ptr().add(j0),
+                            k,
+                            lda,
+                            ldb,
+                            ldc,
+                            alpha,
+                        )
+                    };
+                } else {
+                    kernel_edge(c, a, b, i0, j0, mb, nb, k, lda, ldb, ldc, alpha);
+                }
+                j0 += nb;
+            }
+            i0 += mb;
+        }
+    }
+
+    /// One full 6 x 16 tile: `C[r][j] += alpha * sum_k A[r][k] B[k][j]`,
+    /// pointers pre-offset to the tile origin.
+    ///
+    /// # Safety
+    /// Caller must guarantee AVX2+FMA at runtime and that `a`, `b`, `c`
+    /// are valid for the strided full-tile extents (6 rows x 16 cols x
+    /// `k` depth under `lda`/`ldb`/`ldc`).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn kernel_6x16_avx2(
+        c: *mut f32,
+        a: *const f32,
+        b: *const f32,
+        k: usize,
+        lda: usize,
+        ldb: usize,
+        ldc: usize,
+        alpha: f32,
+    ) {
+        let mut acc = [[_mm256_setzero_ps(); 2]; AVX2_MR];
+        for kk in 0..k {
+            let bp = b.add(kk * ldb);
+            let b0 = _mm256_loadu_ps(bp);
+            let b1 = _mm256_loadu_ps(bp.add(8));
+            for (r, accr) in acc.iter_mut().enumerate() {
+                let av = _mm256_set1_ps(*a.add(r * lda + kk));
+                accr[0] = _mm256_fmadd_ps(av, b0, accr[0]);
+                accr[1] = _mm256_fmadd_ps(av, b1, accr[1]);
+            }
+        }
+        let al = _mm256_set1_ps(alpha);
+        for (r, accr) in acc.iter().enumerate() {
+            let cp = c.add(r * ldc);
+            _mm256_storeu_ps(cp, _mm256_fmadd_ps(al, accr[0], _mm256_loadu_ps(cp)));
+            _mm256_storeu_ps(cp.add(8), _mm256_fmadd_ps(al, accr[1], _mm256_loadu_ps(cp.add(8))));
+        }
+    }
+
+    /// One full 8 x 32 tile (two zmm per row).
+    ///
+    /// # Safety
+    /// Caller must guarantee AVX-512F at runtime and full-tile extents as
+    /// in [`kernel_6x16_avx2`] (8 rows x 32 cols).
+    #[target_feature(enable = "avx512f")]
+    unsafe fn kernel_8x32_avx512(
+        c: *mut f32,
+        a: *const f32,
+        b: *const f32,
+        k: usize,
+        lda: usize,
+        ldb: usize,
+        ldc: usize,
+        alpha: f32,
+    ) {
+        let mut acc = [[_mm512_setzero_ps(); 2]; AVX512_MR];
+        for kk in 0..k {
+            let bp = b.add(kk * ldb);
+            let b0 = _mm512_loadu_ps(bp);
+            let b1 = _mm512_loadu_ps(bp.add(16));
+            for (r, accr) in acc.iter_mut().enumerate() {
+                let av = _mm512_set1_ps(*a.add(r * lda + kk));
+                accr[0] = _mm512_fmadd_ps(av, b0, accr[0]);
+                accr[1] = _mm512_fmadd_ps(av, b1, accr[1]);
+            }
+        }
+        let al = _mm512_set1_ps(alpha);
+        for (r, accr) in acc.iter().enumerate() {
+            let cp = c.add(r * ldc);
+            _mm512_storeu_ps(cp, _mm512_fmadd_ps(al, accr[0], _mm512_loadu_ps(cp)));
+            _mm512_storeu_ps(
+                cp.add(16),
+                _mm512_fmadd_ps(al, accr[1], _mm512_loadu_ps(cp.add(16))),
+            );
         }
     }
 }
@@ -179,10 +487,27 @@ pub fn cgemm_acc(
     k: usize,
     n: usize,
 ) {
-    gemm_acc(zr, ur, vr, m, k, n);
-    gemm_sub(zr, ui, vi, m, k, n);
-    gemm_acc(zi, ur, vi, m, k, n);
-    gemm_acc(zi, ui, vr, m, k, n);
+    cgemm_acc_isa(zr, zi, ur, ui, vr, vi, m, k, n, Isa::resolved())
+}
+
+/// [`cgemm_acc`] with an explicit kernel set.
+#[allow(clippy::too_many_arguments)]
+pub fn cgemm_acc_isa(
+    zr: &mut [f32],
+    zi: &mut [f32],
+    ur: &[f32],
+    ui: &[f32],
+    vr: &[f32],
+    vi: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    isa: Isa,
+) {
+    gemm_acc_isa(zr, ur, vr, m, k, n, isa);
+    gemm_sub_isa(zr, ui, vi, m, k, n, isa);
+    gemm_acc_isa(zi, ur, vi, m, k, n, isa);
+    gemm_acc_isa(zi, ui, vr, m, k, n, isa);
 }
 
 /// Gauss-FFT element-wise stage (§2.3): with precomputed
@@ -205,17 +530,51 @@ pub fn gauss_gemm_acc(
     n: usize,
     scratch: &mut GaussScratch,
 ) {
+    gauss_gemm_acc_isa(
+        zr,
+        zi,
+        ur,
+        ui,
+        us,
+        vr,
+        vd,
+        vs,
+        m,
+        k,
+        n,
+        scratch,
+        Isa::resolved(),
+    )
+}
+
+/// [`gauss_gemm_acc`] with an explicit kernel set.
+#[allow(clippy::too_many_arguments)]
+pub fn gauss_gemm_acc_isa(
+    zr: &mut [f32],
+    zi: &mut [f32],
+    ur: &[f32],
+    ui: &[f32],
+    us: &[f32],
+    vr: &[f32],
+    vd: &[f32],
+    vs: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    scratch: &mut GaussScratch,
+    isa: Isa,
+) {
     scratch.ensure(m * n);
     let t1 = &mut scratch.t1[..m * n];
     t1.fill(0.0);
-    gemm_acc(t1, us, vr, m, k, n);
+    gemm_acc_isa(t1, us, vr, m, k, n, isa);
     // Zr += t1; Zi += t1
     for i in 0..m * n {
         zr[i] += t1[i];
         zi[i] += t1[i];
     }
-    gemm_acc(zi, ur, vd, m, k, n); // Zi += t2
-    gemm_sub(zr, ui, vs, m, k, n); // Zr -= t3
+    gemm_acc_isa(zi, ur, vd, m, k, n, isa); // Zi += t2
+    gemm_sub_isa(zr, ui, vs, m, k, n, isa); // Zr -= t3
 }
 
 /// Reduction block of the panel GEMMs: the `KC x n` slice of the tile
@@ -228,13 +587,28 @@ pub const PANEL_KC: usize = 256;
 /// handful of cache-resident tiles), so unlike the staged element-wise
 /// stage the right-hand side never round-trips through memory.
 pub fn gemm_panel(z: &mut [f32], v: &[f32], u: &[f32], k: usize, c: usize, n: usize, alpha: f32) {
+    gemm_panel_isa(z, v, u, k, c, n, alpha, Isa::resolved())
+}
+
+/// [`gemm_panel`] with an explicit kernel set.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_panel_isa(
+    z: &mut [f32],
+    v: &[f32],
+    u: &[f32],
+    k: usize,
+    c: usize,
+    n: usize,
+    alpha: f32,
+    isa: Isa,
+) {
     debug_assert_eq!(v.len(), k * c);
     debug_assert_eq!(u.len(), c * n);
     debug_assert_eq!(z.len(), k * n);
     let mut c0 = 0;
     while c0 < c {
         let kc = PANEL_KC.min(c - c0);
-        gemm_strided(z, &v[c0..], &u[c0 * n..], k, kc, n, c, n, n, alpha);
+        gemm_strided_isa(z, &v[c0..], &u[c0 * n..], k, kc, n, c, n, n, alpha, isa);
         c0 += kc;
     }
 }
@@ -254,10 +628,27 @@ pub fn cgemm_panel_acc(
     c: usize,
     n: usize,
 ) {
-    gemm_panel(zr, vr, ur, k, c, n, 1.0);
-    gemm_panel(zr, vi, ui, k, c, n, -1.0);
-    gemm_panel(zi, vr, ui, k, c, n, 1.0);
-    gemm_panel(zi, vi, ur, k, c, n, 1.0);
+    cgemm_panel_acc_isa(zr, zi, vr, vi, ur, ui, k, c, n, Isa::resolved())
+}
+
+/// [`cgemm_panel_acc`] with an explicit kernel set.
+#[allow(clippy::too_many_arguments)]
+pub fn cgemm_panel_acc_isa(
+    zr: &mut [f32],
+    zi: &mut [f32],
+    vr: &[f32],
+    vi: &[f32],
+    ur: &[f32],
+    ui: &[f32],
+    k: usize,
+    c: usize,
+    n: usize,
+    isa: Isa,
+) {
+    gemm_panel_isa(zr, vr, ur, k, c, n, 1.0, isa);
+    gemm_panel_isa(zr, vi, ui, k, c, n, -1.0, isa);
+    gemm_panel_isa(zi, vr, ui, k, c, n, 1.0, isa);
+    gemm_panel_isa(zi, vi, ur, k, c, n, 1.0, isa);
 }
 
 /// Gauss panel GEMM (3 real panel GEMMs + recombination), mirroring
@@ -279,28 +670,64 @@ pub fn gauss_panel_acc(
     n: usize,
     scratch: &mut GaussScratch,
 ) {
+    gauss_panel_acc_isa(
+        zr,
+        zi,
+        vr,
+        vd,
+        vs,
+        ur,
+        ui,
+        us,
+        k,
+        c,
+        n,
+        scratch,
+        Isa::resolved(),
+    )
+}
+
+/// [`gauss_panel_acc`] with an explicit kernel set.
+#[allow(clippy::too_many_arguments)]
+pub fn gauss_panel_acc_isa(
+    zr: &mut [f32],
+    zi: &mut [f32],
+    vr: &[f32],
+    vd: &[f32],
+    vs: &[f32],
+    ur: &[f32],
+    ui: &[f32],
+    us: &[f32],
+    k: usize,
+    c: usize,
+    n: usize,
+    scratch: &mut GaussScratch,
+    isa: Isa,
+) {
     scratch.ensure(k * n);
     let t1 = &mut scratch.t1[..k * n];
     t1.fill(0.0);
-    gemm_panel(t1, vr, us, k, c, n, 1.0);
+    gemm_panel_isa(t1, vr, us, k, c, n, 1.0, isa);
     for i in 0..k * n {
         zr[i] += t1[i];
         zi[i] += t1[i];
     }
-    gemm_panel(zi, vd, ur, k, c, n, 1.0); // Zi += t2
-    gemm_panel(zr, vs, ui, k, c, n, -1.0); // Zr -= t3
+    gemm_panel_isa(zi, vd, ur, k, c, n, 1.0, isa); // Zi += t2
+    gemm_panel_isa(zr, vs, ui, k, c, n, -1.0, isa); // Zr -= t3
 }
 
-/// Reusable scratch for the Gauss recombination.
+/// Reusable scratch for the Gauss recombination.  Backed by an
+/// [`AlignedVec`]: `t1` is itself a panel-GEMM output, so it gets the
+/// same 64-byte alignment as the engine arenas.
 #[derive(Default, Clone)]
 pub struct GaussScratch {
-    t1: Vec<f32>,
+    t1: AlignedVec,
 }
 
 impl GaussScratch {
     fn ensure(&mut self, n: usize) {
         if self.t1.len() < n {
-            self.t1.resize(n, 0.0);
+            self.t1.resize(n);
         }
     }
 
@@ -311,7 +738,7 @@ impl GaussScratch {
 
     /// Free the scratch (regrown on the next use).
     pub fn clear(&mut self) {
-        self.t1 = Vec::new();
+        self.t1 = AlignedVec::new();
     }
 }
 
@@ -350,29 +777,71 @@ mod tests {
     #[test]
     fn edge_kernel_all_residues() {
         // sweep every m % MR and n % NR residue (plus sub-tile m < MR,
-        // n < NR) so the register-blocked edge kernel is fully covered
+        // n < NR) for every compiled kernel set, so the shared
+        // register-blocked edge path is fully covered at each tile shape
         let k = 19; // odd K to exercise the whole accumulator loop
-        for m in 1..=2 * MR + 1 {
-            for n in 1..=2 * NR + 1 {
-                let mut rng = Rng::new((m * 1000 + n) as u64);
-                let a = rng.vec_f32(m * k);
-                let b = rng.vec_f32(k * n);
-                // non-trivial initial C so accumulation (not overwrite) is tested
-                let init = rng.vec_f32(m * n);
-                let mut c = init.clone();
-                gemm_scaled(&mut c, &a, &b, m, k, n, 0.5);
-                let want = gemm_ref(&a, &b, m, k, n);
-                for i in 0..m * n {
-                    let w = init[i] + 0.5 * want[i];
-                    assert!(
-                        (c[i] - w).abs() < 1e-3,
-                        "m={m} n={n} (residues {}, {}): {} vs {w}",
-                        m % MR,
-                        n % NR,
-                        c[i]
-                    );
+        for isa in Isa::available() {
+            let (mr, nr) = blocking(isa);
+            for m in 1..=2 * mr + 1 {
+                for n in 1..=2 * nr + 1 {
+                    let mut rng = Rng::new((m * 1000 + n) as u64);
+                    let a = rng.vec_f32(m * k);
+                    let b = rng.vec_f32(k * n);
+                    // non-trivial initial C so accumulation (not
+                    // overwrite) is tested
+                    let init = rng.vec_f32(m * n);
+                    let mut c = init.clone();
+                    gemm_scaled_isa(&mut c, &a, &b, m, k, n, 0.5, isa);
+                    let want = gemm_ref(&a, &b, m, k, n);
+                    for i in 0..m * n {
+                        let w = init[i] + 0.5 * want[i];
+                        assert!(
+                            (c[i] - w).abs() < 1e-3,
+                            "{isa:?} m={m} n={n} (residues {}, {}): {} vs {w}",
+                            m % mr,
+                            n % nr,
+                            c[i]
+                        );
+                    }
                 }
             }
+        }
+    }
+
+    #[test]
+    fn isa_variants_match_scalar_strided() {
+        // strided operands (lda/ldb/ldc > logical width) with padding
+        // lanes that must come through untouched
+        let (m, k, n) = (13, 37, 29);
+        let (lda, ldb, ldc) = (k + 3, n + 2, n + 5);
+        let mut rng = Rng::new(99);
+        let a = rng.vec_f32(m * lda);
+        let b = rng.vec_f32(k * ldb);
+        let init = rng.vec_f32(m * ldc);
+        let mut want = init.clone();
+        gemm_strided_isa(&mut want, &a, &b, m, k, n, lda, ldb, ldc, 0.75, Isa::Scalar);
+        for isa in Isa::available() {
+            let mut got = init.clone();
+            gemm_strided_isa(&mut got, &a, &b, m, k, n, lda, ldb, ldc, 0.75, isa);
+            let tol = 1e-5 * (k as f32).max(1.0);
+            for i in 0..m {
+                for j in 0..n {
+                    let d = (got[i * ldc + j] - want[i * ldc + j]).abs();
+                    assert!(d < tol, "{isa:?} ({i},{j}): diff {d}");
+                }
+                for j in n..ldc {
+                    assert_eq!(got[i * ldc + j], init[i * ldc + j], "{isa:?} padding");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocking_fits_shared_edge_buffer() {
+        for isa in [Isa::Scalar, Isa::Avx2, Isa::Avx512] {
+            let (mr, nr) = blocking(isa);
+            assert!((1..=MR_MAX).contains(&mr), "{isa:?}");
+            assert!((1..=NR_MAX).contains(&nr), "{isa:?}");
         }
     }
 

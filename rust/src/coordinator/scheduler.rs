@@ -610,6 +610,7 @@ fn resolve_options(key: &PlanKey, b: usize, machine: &Machine) -> PlanOptions {
     PlanOptions {
         exec: choose_exec(method, &key_shape(key, b), m, machine).policy,
         fused_budget: machine.cache,
+        ..PlanOptions::default()
     }
 }
 

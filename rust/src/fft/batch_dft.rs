@@ -20,7 +20,8 @@
 //!   rows:  y = Re(W_c Y) via half-spectrum weights w_k
 
 use super::rfft::half_len;
-use crate::conv::gemm::{gemm_acc, gemm_sub};
+use crate::conv::gemm::{gemm_acc_isa, gemm_sub_isa};
+use crate::simd::Isa;
 use std::sync::Arc;
 
 /// The precomputed DFT matrix set for one (m, r) configuration, shared
@@ -50,6 +51,8 @@ pub struct BatchDft {
     pub m: usize,
     pub r: usize,
     mats: Arc<DftMats>,
+    /// kernel set for the GEMM passes, bound at construction
+    isa: Isa,
     // scratch (grown on demand)
     yr: Vec<f32>,
     yi: Vec<f32>,
@@ -62,7 +65,15 @@ pub struct BatchDft {
 }
 
 impl BatchDft {
+    /// Uses the process-wide resolved kernel set; plans that carry their
+    /// own ISA use [`BatchDft::with_isa`].
     pub fn new(m: usize, r: usize) -> BatchDft {
+        BatchDft::with_isa(m, r, Isa::resolved())
+    }
+
+    /// [`BatchDft::new`] with an explicit kernel set (clamped to the host
+    /// by the GEMM dispatcher).
+    pub fn with_isa(m: usize, r: usize, isa: Isa) -> BatchDft {
         let t = m + r - 1;
         let th = half_len(t);
         let tau = 2.0 * std::f64::consts::PI;
@@ -129,6 +140,7 @@ impl BatchDft {
                 cwt,
                 swt,
             }),
+            isa,
             yr: Vec::new(),
             yi: Vec::new(),
             tr: Vec::new(),
@@ -175,8 +187,8 @@ impl BatchDft {
         let yi = &mut yi_buf[..nb * s * th];
         yr.fill(0.0);
         yi.fill(0.0);
-        gemm_acc(yr, x, &self.mats.cht[..s * th], nb * s, s, th);
-        gemm_acc(yi, x, &self.mats.sht[..s * th], nb * s, s, th);
+        gemm_acc_isa(yr, x, &self.mats.cht[..s * th], nb * s, s, th, self.isa);
+        gemm_acc_isa(yi, x, &self.mats.sht[..s * th], nb * s, s, th, self.isa);
 
         // transpose each tile (s, th) -> (th, s)
         let tr = &mut tr_buf[..nb * th * s];
@@ -196,10 +208,10 @@ impl BatchDft {
         out_im.fill(0.0);
         let ct = &self.mats.ctt[..s * t];
         let st = &self.mats.stt[..s * t];
-        gemm_acc(out_re, tr, ct, nb * th, s, t);
-        gemm_sub(out_re, ti, st, nb * th, s, t);
-        gemm_acc(out_im, tr, st, nb * th, s, t);
-        gemm_acc(out_im, ti, ct, nb * th, s, t);
+        gemm_acc_isa(out_re, tr, ct, nb * th, s, t, self.isa);
+        gemm_sub_isa(out_re, ti, st, nb * th, s, t, self.isa);
+        gemm_acc_isa(out_im, tr, st, nb * th, s, t, self.isa);
+        gemm_acc_isa(out_im, ti, ct, nb * th, s, t, self.isa);
 
         self.yr = yr_buf;
         self.yi = yi_buf;
@@ -263,10 +275,10 @@ impl BatchDft {
         let yi = &mut yi_buf[..nb * th * m];
         yr.fill(0.0);
         yi.fill(0.0);
-        gemm_acc(yr, z_re, &self.mats.bct, nb * th, t, m);
-        gemm_sub(yr, z_im, &self.mats.bst, nb * th, t, m);
-        gemm_acc(yi, z_re, &self.mats.bst, nb * th, t, m);
-        gemm_acc(yi, z_im, &self.mats.bct, nb * th, t, m);
+        gemm_acc_isa(yr, z_re, &self.mats.bct, nb * th, t, m, self.isa);
+        gemm_sub_isa(yr, z_im, &self.mats.bst, nb * th, t, m, self.isa);
+        gemm_acc_isa(yi, z_re, &self.mats.bst, nb * th, t, m, self.isa);
+        gemm_acc_isa(yi, z_im, &self.mats.bct, nb * th, t, m, self.isa);
 
         // transpose each tile (th, m) -> (m, th)
         let tr = &mut tr_buf[..nb * m * th];
@@ -283,8 +295,8 @@ impl BatchDft {
         // rows (half spectrum -> real, pruned): out = Yr @ W_c - Yi @ W_s
         // A: (nb*m, th); B: (th, m)
         out.fill(0.0);
-        gemm_acc(out, tr, &self.mats.cwt, nb * m, th, m);
-        gemm_sub(out, ti, &self.mats.swt, nb * m, th, m);
+        gemm_acc_isa(out, tr, &self.mats.cwt, nb * m, th, m, self.isa);
+        gemm_sub_isa(out, ti, &self.mats.swt, nb * m, th, m, self.isa);
 
         self.yr = yr_buf;
         self.yi = yi_buf;

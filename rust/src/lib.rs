@@ -49,6 +49,7 @@ pub mod harness;
 pub mod model;
 pub mod nets;
 pub mod runtime;
+pub mod simd;
 pub mod util;
 pub mod winograd;
 

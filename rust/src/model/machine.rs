@@ -6,8 +6,23 @@
 //! peak FLOPS and memory bandwidth of the machine the empirical anchors
 //! run on (DESIGN.md §3 substitution).
 
-use crate::conv::gemm::gemm_acc;
+use crate::conv::gemm::gemm_acc_isa;
+use crate::simd::Isa;
+use std::sync::OnceLock;
 use std::time::Instant;
+
+/// Result of the one-shot FMA calibration micro-bench: the sustained
+/// GFLOP/s of one kernel set on this host's in-cache GEMM.  Attached to a
+/// [`Machine`] it replaces the catalog `gflops` as the roofline's compute
+/// ceiling, so predictions track the kernels the engine actually runs
+/// (scalar vs AVX2 vs AVX-512) instead of a nameplate number.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct IsaCalibration {
+    /// kernel set the micro-bench ran through
+    pub isa: Isa,
+    /// sustained single-core GFLOP/s of that kernel set
+    pub peak_gflops: f64,
+}
 
 /// One benchmark system (paper Table 1 row).
 #[derive(Clone, Debug, PartialEq)]
@@ -22,12 +37,39 @@ pub struct Machine {
     pub cache: usize,
     /// peak memory bandwidth GB/s
     pub mb: f64,
+    /// measured per-ISA compute ceiling; `None` for catalog entries (the
+    /// roofline then falls back to `gflops`)
+    pub calibrated: Option<IsaCalibration>,
 }
 
 impl Machine {
-    /// Compute-to-memory ratio (FLOPs per byte), Eqn. 8.
+    /// Compute-to-memory ratio (FLOPs per byte), Eqn. 8.  Catalog
+    /// semantics: always the nameplate `gflops`, so Table-1 CMRs stay
+    /// pinned to the paper regardless of host calibration.
     pub fn cmr(&self) -> f64 {
         self.gflops / self.mb
+    }
+
+    /// The roofline's compute ceiling in GFLOP/s: the calibrated per-ISA
+    /// figure when present, the catalog `gflops` otherwise.
+    pub fn peak_gflops(&self) -> f64 {
+        match self.calibrated {
+            Some(c) => c.peak_gflops,
+            None => self.gflops,
+        }
+    }
+
+    /// This machine with the host's resolved kernel set calibrated in:
+    /// `peak_gflops()` becomes the measured ceiling of the ISA the engine
+    /// will dispatch to.  The underlying micro-bench runs once per
+    /// (process, ISA) — repeat calls are free.
+    pub fn with_host_calibration(mut self) -> Machine {
+        let isa = Isa::resolved();
+        self.calibrated = Some(IsaCalibration {
+            isa,
+            peak_gflops: calibrate_isa(isa),
+        });
+        self
     }
 
     pub const fn new(
@@ -45,6 +87,7 @@ impl Machine {
             avx,
             cache,
             mb,
+            calibrated: None,
         }
     }
 }
@@ -76,18 +119,38 @@ pub fn xeon_gold() -> Machine {
 /// Measure this host's sustainable single-core GFLOP/s with an in-cache
 /// GEMM (the same micro-kernel the engine uses — so the model's "peak"
 /// matches what the engine can actually attain, mirroring the paper's
-/// effective-CMR discussion in §5.3).
+/// effective-CMR discussion in §5.3).  Routed through the host's resolved
+/// kernel set and cached per ISA.
 pub fn probe_flops() -> f64 {
+    calibrate_isa(Isa::resolved())
+}
+
+/// One-shot FMA calibration micro-bench for one kernel set: sustained
+/// GFLOP/s of the in-cache 96^3 GEMM dispatched to `isa` (clamped to the
+/// host by the GEMM dispatcher).  Measured once per (process, ISA) and
+/// cached, so plan construction and benches can consult it freely.
+pub fn calibrate_isa(isa: Isa) -> f64 {
+    static CACHE: [OnceLock<f64>; 3] = [OnceLock::new(), OnceLock::new(), OnceLock::new()];
+    let slot = match isa.clamp_to_host() {
+        Isa::Scalar => 0,
+        Isa::Avx2 => 1,
+        Isa::Avx512 => 2,
+    };
+    *CACHE[slot].get_or_init(|| probe_flops_isa(isa))
+}
+
+/// The uncached measurement behind [`calibrate_isa`].
+fn probe_flops_isa(isa: Isa) -> f64 {
     let n = 96; // 3 x 96^2 x 4B = ~108 KB: L2-resident, not L1-trivial
     let a = vec![1.001f32; n * n];
     let b = vec![0.999f32; n * n];
     let mut c = vec![0.0f32; n * n];
     // warmup
-    gemm_acc(&mut c, &a, &b, n, n, n);
+    gemm_acc_isa(&mut c, &a, &b, n, n, n, isa);
     let reps = 40;
     let t0 = Instant::now();
     for _ in 0..reps {
-        gemm_acc(&mut c, &a, &b, n, n, n);
+        gemm_acc_isa(&mut c, &a, &b, n, n, n, isa);
     }
     let dt = t0.elapsed().as_secs_f64();
     std::hint::black_box(&c);
@@ -119,19 +182,33 @@ pub fn probe_bandwidth() -> f64 {
 /// Probe a `Machine` record for the current host (single-threaded figures;
 /// the coordinator scales with worker count).
 pub fn probe_host() -> Machine {
+    let isa = Isa::resolved();
     let gflops = probe_flops();
     let mb = probe_bandwidth();
     // leak the name: probes run once per process
     let name: &'static str = Box::leak(
-        format!("host (measured {:.1} GF/s, {:.1} GB/s)", gflops, mb).into_boxed_str(),
+        format!(
+            "host (measured {:.1} GF/s via {}, {:.1} GB/s)",
+            gflops,
+            isa.name(),
+            mb
+        )
+        .into_boxed_str(),
     );
     Machine {
         name,
         cores: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
         gflops,
-        avx: 256,
+        avx: match isa {
+            Isa::Avx512 => 512,
+            _ => 256,
+        },
         cache: MB1,
         mb,
+        calibrated: Some(IsaCalibration {
+            isa,
+            peak_gflops: gflops,
+        }),
     }
 }
 
@@ -174,5 +251,36 @@ mod tests {
         let m = xeon_gold();
         assert_eq!(m.cores, 20);
         assert!((m.cmr() - 24.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn peak_gflops_prefers_calibration() {
+        let mut m = xeon_gold();
+        assert_eq!(m.peak_gflops(), m.gflops);
+        m.calibrated = Some(IsaCalibration {
+            isa: Isa::Scalar,
+            peak_gflops: 7.25,
+        });
+        assert_eq!(m.peak_gflops(), 7.25);
+        // CMR stays on catalog semantics regardless of calibration
+        assert!((m.cmr() - 24.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn calibrate_isa_is_cached_and_sane() {
+        for isa in Isa::available() {
+            let first = calibrate_isa(isa);
+            assert!(first > 0.05 && first < 10_000.0, "{isa:?}: {first}");
+            // second call must return the cached measurement bit-for-bit
+            assert_eq!(first.to_bits(), calibrate_isa(isa).to_bits());
+        }
+    }
+
+    #[test]
+    fn host_calibration_binds_resolved_isa() {
+        let m = xeon_gold().with_host_calibration();
+        let c = m.calibrated.expect("calibrated");
+        assert_eq!(c.isa, Isa::resolved());
+        assert!((m.peak_gflops() - c.peak_gflops).abs() < 1e-12);
     }
 }

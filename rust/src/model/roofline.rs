@@ -45,7 +45,7 @@ pub struct TimeBreakdown {
 /// Eqns. 8-9 for one (method, layer, m) on `machine`.
 pub fn layer_time(method: Method, l: &LayerShape, m: usize, machine: &Machine) -> TimeBreakdown {
     let lm = layer_model(method, l, m, machine.cache);
-    let peak = machine.gflops * 1e9;
+    let peak = machine.peak_gflops() * 1e9;
     let mb = machine.mb * 1e9;
     let mut stages = [0.0f64; 4];
     let mut bound = [false; 4];
@@ -131,7 +131,7 @@ pub fn fused_layer_time(
     let dm = 4.0 * (l.b * l.c) as f64 * x2          // input read
         + 4.0 * (l.b * l.k) as f64 * m2 * l.tiles(m) as f64 // output write
         + v_traffic;
-    let peak = machine.gflops * 1e9;
+    let peak = machine.peak_gflops() * 1e9;
     let mb = machine.mb * 1e9;
     FusedBreakdown {
         feasible: true,
@@ -250,7 +250,7 @@ mod tests {
         // sanity: the fused estimate is still floored by FPO/peak
         let m = xeon_gold();
         let f = fused_layer_time(Method::RegularFft, &vgg12(), 6, &m);
-        assert!(f.time >= f.fpo / (m.gflops * 1e9) - 1e-12);
+        assert!(f.time >= f.fpo / (m.peak_gflops() * 1e9) - 1e-12);
         assert!(f.dm > 0.0 && f.fpo > 0.0);
     }
 

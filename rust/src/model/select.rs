@@ -167,6 +167,7 @@ pub fn measure_exec(
         PlanOptions {
             exec: ExecPolicy::Auto,
             fused_budget: machine.cache,
+            ..PlanOptions::default()
         },
     );
     measure_exec_with(&mut plan, &x, analytic, pool)

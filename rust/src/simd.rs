@@ -1,0 +1,152 @@
+//! Runtime ISA detection and dispatch for the explicit SIMD micro-kernels.
+//!
+//! The paper's kernels are hand-vectorized AVX-512 (§4); this crate keeps a
+//! scalar reference path compiled on every target and adds AVX2+FMA and
+//! AVX-512F variants of the panel GEMMs (`conv::gemm`).  An [`Isa`] value
+//! names one of those kernel sets.  Detection runs once per process
+//! ([`Isa::detect_max`]); plans resolve their kernel set once at
+//! construction ([`Isa::resolved`] honours the `FFTCONV_FORCE_ISA`
+//! environment override, clamped to what the host supports) so the
+//! per-batch hot path stays branch-free.
+//!
+//! Ordering is total and meaningful: `Scalar < Avx2 < Avx512`, so clamping
+//! a requested ISA to the host's capability is `request.min(detected)` —
+//! a safe-code-constructed [`Isa`] can never select an illegal instruction.
+
+use std::sync::OnceLock;
+
+/// One compiled kernel set. Ordered by capability: `Scalar < Avx2 < Avx512`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Isa {
+    /// Portable Rust loops — always compiled, always correct.
+    Scalar,
+    /// AVX2 + FMA: 8-lane f32, 6x16 register blocking.
+    Avx2,
+    /// AVX-512F: 16-lane f32, 8x32 register blocking.
+    Avx512,
+}
+
+/// Environment variable that forces a kernel set (`scalar` | `avx2` |
+/// `avx512`).  Requests above the host's capability are clamped down, so
+/// `FFTCONV_FORCE_ISA=avx512` on an AVX2-only host runs AVX2, not UB.
+pub const FORCE_ISA_ENV: &str = "FFTCONV_FORCE_ISA";
+
+impl Isa {
+    /// Short stable name, used in logs / BENCH_hotpaths.json.
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Avx512 => "avx512",
+        }
+    }
+
+    /// Parse a [`FORCE_ISA_ENV`] value. Unknown strings yield `None`.
+    pub fn parse(s: &str) -> Option<Isa> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(Isa::Scalar),
+            "avx2" => Some(Isa::Avx2),
+            "avx512" | "avx512f" => Some(Isa::Avx512),
+            _ => None,
+        }
+    }
+
+    /// The widest kernel set this host can execute. Detected once per
+    /// process with `is_x86_feature_detected!`; non-x86 targets are Scalar.
+    pub fn detect_max() -> Isa {
+        static DETECTED: OnceLock<Isa> = OnceLock::new();
+        *DETECTED.get_or_init(detect_max_uncached)
+    }
+
+    /// Clamp this (possibly user-requested) ISA to the host's capability.
+    pub fn clamp_to_host(self) -> Isa {
+        self.min(Isa::detect_max())
+    }
+
+    /// The process-wide default kernel set: the [`FORCE_ISA_ENV`] override
+    /// if set and parseable (clamped to the host), else the detected
+    /// maximum.  Read once; plans built later all agree.
+    pub fn resolved() -> Isa {
+        static RESOLVED: OnceLock<Isa> = OnceLock::new();
+        *RESOLVED.get_or_init(|| match std::env::var(FORCE_ISA_ENV) {
+            Ok(v) => match Isa::parse(&v) {
+                Some(isa) => isa.clamp_to_host(),
+                None => Isa::detect_max(),
+            },
+            Err(_) => Isa::detect_max(),
+        })
+    }
+
+    /// Every kernel set the host can execute, narrowest first.  The
+    /// equivalence suite iterates this so it is green on any x86-64 host
+    /// (and degenerates to `[Scalar]` elsewhere).
+    pub fn available() -> Vec<Isa> {
+        let max = Isa::detect_max();
+        [Isa::Scalar, Isa::Avx2, Isa::Avx512]
+            .into_iter()
+            .filter(|isa| *isa <= max)
+            .collect()
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_max_uncached() -> Isa {
+    if is_x86_feature_detected!("avx512f") {
+        Isa::Avx512
+    } else if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+        Isa::Avx2
+    } else {
+        Isa::Scalar
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn detect_max_uncached() -> Isa {
+    Isa::Scalar
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordering_is_by_capability() {
+        assert!(Isa::Scalar < Isa::Avx2);
+        assert!(Isa::Avx2 < Isa::Avx512);
+    }
+
+    #[test]
+    fn parse_round_trips_names() {
+        for isa in [Isa::Scalar, Isa::Avx2, Isa::Avx512] {
+            assert_eq!(Isa::parse(isa.name()), Some(isa));
+        }
+        assert_eq!(Isa::parse("AVX512F"), Some(Isa::Avx512));
+        assert_eq!(Isa::parse("neon"), None);
+        assert_eq!(Isa::parse(""), None);
+    }
+
+    #[test]
+    fn clamp_never_exceeds_host() {
+        let max = Isa::detect_max();
+        for isa in [Isa::Scalar, Isa::Avx2, Isa::Avx512] {
+            assert!(isa.clamp_to_host() <= max);
+        }
+        assert_eq!(Isa::Scalar.clamp_to_host(), Isa::Scalar);
+    }
+
+    #[test]
+    fn available_starts_scalar_and_is_sorted() {
+        let avail = Isa::available();
+        assert_eq!(avail[0], Isa::Scalar);
+        assert!(avail.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(*avail.last().unwrap(), Isa::detect_max());
+    }
+
+    #[test]
+    fn resolved_is_stable_and_executable() {
+        let a = Isa::resolved();
+        let b = Isa::resolved();
+        assert_eq!(a, b);
+        assert!(a <= Isa::detect_max());
+    }
+}

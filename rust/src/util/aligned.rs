@@ -1,0 +1,228 @@
+//! 64-byte-aligned growable `f32` buffer for GEMM arenas and panels.
+//!
+//! The SIMD micro-kernels use unaligned load/store intrinsics, so 64-byte
+//! alignment is a performance property (no cache-line-split accesses on
+//! full vectors when offsets are round), not a correctness requirement —
+//! but the arenas and worker panels are exactly the buffers those kernels
+//! stream through, so the engine allocates them here and asserts the
+//! alignment in debug builds.
+//!
+//! The semantics mirror how the engine used `Vec<f32>`: grow-only
+//! `resize(n)` (never shrinks capacity), zero-filled growth, `Deref` to
+//! `[f32]`, and `new()` replaces a trimmed buffer without allocating.
+
+use std::alloc::{alloc_zeroed, dealloc, handle_alloc_error, Layout};
+use std::ops::{Deref, DerefMut};
+use std::ptr::NonNull;
+
+/// Cache-line alignment for all kernel-visible buffers.
+pub const BUF_ALIGN: usize = 64;
+
+/// Grow-only, zero-filled, 64-byte-aligned `f32` buffer.
+pub struct AlignedVec {
+    ptr: NonNull<f32>,
+    len: usize,
+    cap: usize,
+}
+
+// The buffer owns its allocation and holds plain f32s; sharing &self or
+// moving across threads is as safe as for Vec<f32>.
+unsafe impl Send for AlignedVec {}
+unsafe impl Sync for AlignedVec {}
+
+impl AlignedVec {
+    /// An empty buffer. Does not allocate; the pointer is a 64-byte-aligned
+    /// dangling sentinel so `as_ptr()` alignment holds even at len 0.
+    pub const fn new() -> AlignedVec {
+        AlignedVec {
+            // BUF_ALIGN is non-zero, so this invalid-but-well-aligned
+            // address is a valid NonNull dangling pointer.
+            ptr: unsafe { NonNull::new_unchecked(BUF_ALIGN as *mut f32) },
+            len: 0,
+            cap: 0,
+        }
+    }
+
+    /// A zero-filled buffer of `n` elements.
+    pub fn zeroed(n: usize) -> AlignedVec {
+        let mut v = AlignedVec::new();
+        v.resize(n);
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn layout(cap: usize) -> Layout {
+        Layout::from_size_align(cap * std::mem::size_of::<f32>(), BUF_ALIGN)
+            .expect("AlignedVec layout overflow")
+    }
+
+    /// Resize to exactly `n` elements. Growth beyond capacity reallocates
+    /// (preserving the prefix, zero-filling the rest); shrinking just drops
+    /// `len` — capacity is retained, matching the arenas' grow-only use.
+    pub fn resize(&mut self, n: usize) {
+        if n > self.cap {
+            let layout = Self::layout(n);
+            // alloc_zeroed gives the zero fill for the grown region free
+            let raw = unsafe { alloc_zeroed(layout) } as *mut f32;
+            let Some(ptr) = NonNull::new(raw) else {
+                handle_alloc_error(layout)
+            };
+            if self.len > 0 {
+                unsafe {
+                    std::ptr::copy_nonoverlapping(self.ptr.as_ptr(), ptr.as_ptr(), self.len)
+                };
+            }
+            if self.cap > 0 {
+                unsafe { dealloc(self.ptr.as_ptr() as *mut u8, Self::layout(self.cap)) };
+            }
+            self.ptr = ptr;
+            self.cap = n;
+        } else if n > self.len {
+            // reused capacity may hold stale values from a larger run
+            unsafe { std::ptr::write_bytes(self.ptr.as_ptr().add(self.len), 0, n - self.len) };
+        }
+        self.len = n;
+    }
+
+    /// Set every live element to zero.
+    pub fn clear_to_zero(&mut self) {
+        unsafe { std::ptr::write_bytes(self.ptr.as_ptr(), 0, self.len) };
+    }
+
+    pub fn as_ptr(&self) -> *const f32 {
+        self.ptr.as_ptr()
+    }
+
+    pub fn as_mut_ptr(&mut self) -> *mut f32 {
+        self.ptr.as_ptr()
+    }
+
+    /// True when the storage satisfies [`BUF_ALIGN`] (always, by
+    /// construction — exposed for the engine's debug assertions).
+    pub fn is_aligned(&self) -> bool {
+        self.ptr.as_ptr() as usize % BUF_ALIGN == 0
+    }
+}
+
+impl Drop for AlignedVec {
+    fn drop(&mut self) {
+        if self.cap > 0 {
+            unsafe { dealloc(self.ptr.as_ptr() as *mut u8, Self::layout(self.cap)) };
+        }
+    }
+}
+
+impl Default for AlignedVec {
+    fn default() -> AlignedVec {
+        AlignedVec::new()
+    }
+}
+
+impl Deref for AlignedVec {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl DerefMut for AlignedVec {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl Clone for AlignedVec {
+    fn clone(&self) -> AlignedVec {
+        let mut v = AlignedVec::zeroed(self.len);
+        v.copy_from_slice(self);
+        v
+    }
+}
+
+impl std::fmt::Debug for AlignedVec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("AlignedVec")
+            .field("len", &self.len)
+            .field("cap", &self.cap)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_is_aligned_and_unallocated() {
+        let v = AlignedVec::new();
+        assert!(v.is_empty());
+        assert!(v.is_aligned());
+        assert_eq!(v.len(), 0);
+        assert_eq!(&v[..], &[] as &[f32]);
+    }
+
+    #[test]
+    fn grow_zero_fills_and_preserves_prefix() {
+        let mut v = AlignedVec::zeroed(7);
+        assert!(v.iter().all(|&x| x == 0.0));
+        for (i, x) in v.iter_mut().enumerate() {
+            *x = i as f32 + 1.0;
+        }
+        v.resize(100);
+        assert!(v.is_aligned());
+        for i in 0..7 {
+            assert_eq!(v[i], i as f32 + 1.0);
+        }
+        assert!(v[7..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn shrink_then_regrow_rezeroes_reused_tail() {
+        let mut v = AlignedVec::zeroed(32);
+        for x in v.iter_mut() {
+            *x = 5.0;
+        }
+        v.resize(4);
+        assert_eq!(v.len(), 4);
+        v.resize(32); // within retained capacity
+        assert!(v[4..].iter().all(|&x| x == 0.0), "stale tail survived");
+        assert!(v[..4].iter().all(|&x| x == 5.0));
+    }
+
+    #[test]
+    fn alignment_holds_across_many_sizes() {
+        for n in [1usize, 3, 15, 16, 17, 63, 64, 65, 1000] {
+            let v = AlignedVec::zeroed(n);
+            assert!(v.is_aligned(), "n={n}");
+            assert_eq!(v.as_ptr() as usize % BUF_ALIGN, 0);
+        }
+    }
+
+    #[test]
+    fn clone_copies_contents() {
+        let mut v = AlignedVec::zeroed(10);
+        for (i, x) in v.iter_mut().enumerate() {
+            *x = i as f32;
+        }
+        let w = v.clone();
+        assert_eq!(&v[..], &w[..]);
+        assert!(w.is_aligned());
+    }
+
+    #[test]
+    fn clear_to_zero_wipes_live_elements() {
+        let mut v = AlignedVec::zeroed(9);
+        for x in v.iter_mut() {
+            *x = 2.5;
+        }
+        v.clear_to_zero();
+        assert!(v.iter().all(|&x| x == 0.0));
+    }
+}

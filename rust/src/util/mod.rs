@@ -6,6 +6,7 @@
 //! suspects (serde, criterion, rayon, proptest) are re-implemented here at
 //! the scale this repo needs — see DESIGN.md §3 (substitutions).
 
+pub mod aligned;
 pub mod bench;
 pub mod json;
 pub mod quickcheck;
@@ -13,5 +14,6 @@ pub mod rng;
 pub mod stats;
 pub mod threadpool;
 
+pub use aligned::AlignedVec;
 pub use bench::{bench, BenchResult};
 pub use rng::Rng;

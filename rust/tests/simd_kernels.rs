@@ -1,0 +1,275 @@
+//! ISA-variant equivalence suite: every kernel set the host can run
+//! (scalar, AVX2+FMA, AVX-512F) must agree with the scalar reference on
+//! all three panel GEMM families — real, complex, Gauss — across full
+//! tiles, edge residues, and strided layouts, and end-to-end through the
+//! staged and fused engine pipelines with a forced-ISA plan.
+//!
+//! ISA is forced through `PlanOptions { isa: Some(..) }` / the `_isa`
+//! GEMM entry points rather than the `FFTCONV_FORCE_ISA` env var: tests
+//! run in parallel threads and process-global env mutation would race.
+
+#![allow(clippy::needless_range_loop)]
+
+use fftconv::conv::direct;
+use fftconv::conv::gemm::{
+    blocking, cgemm_acc_isa, cgemm_panel_acc_isa, gauss_gemm_acc_isa, gauss_panel_acc_isa,
+    gemm_scaled_isa, gemm_strided_isa, GaussScratch,
+};
+use fftconv::conv::{ConvAlgorithm, ExecPolicy, LayerPlan, PlanOptions, Tensor4};
+use fftconv::simd::Isa;
+use fftconv::util::Rng;
+
+/// Absolute tolerance for a length-`k` f32 reduction: FMA contraction and
+/// re-association shift each element by O(k · eps · |acc|).
+fn tol(k: usize) -> f32 {
+    1e-5 * (k as f32).max(1.0)
+}
+
+fn assert_close(got: &[f32], want: &[f32], k: usize, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (g - w).abs() <= tol(k),
+            "{what}[{i}]: {g} vs {w} (k = {k})"
+        );
+    }
+}
+
+/// Residue-revealing sizes around a register-block edge `nb`.
+fn residues(nb: usize) -> Vec<usize> {
+    vec![1, nb - 1, nb, nb + 1, 2 * nb + 1]
+}
+
+#[test]
+fn real_gemm_matches_scalar_on_residue_shapes() {
+    let mut rng = Rng::new(0xB10C);
+    for isa in Isa::available() {
+        let (mr, nr) = blocking(isa);
+        for m in residues(mr) {
+            for n in residues(nr) {
+                for k in [1usize, 3, 37, 263] {
+                    let a = rng.vec_f32(m * k);
+                    let b = rng.vec_f32(k * n);
+                    let mut want = rng.vec_f32(m * n);
+                    let mut got = want.clone();
+                    gemm_scaled_isa(&mut want, &a, &b, m, k, n, 0.75, Isa::Scalar);
+                    gemm_scaled_isa(&mut got, &a, &b, m, k, n, 0.75, isa);
+                    assert_close(&got, &want, k, &format!("{}/{m}x{k}x{n}", isa.name()));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn strided_gemm_matches_scalar_and_preserves_padding() {
+    let mut rng = Rng::new(0x57A1);
+    let (m, k, n) = (19, 41, 53);
+    let (lda, ldb, ldc) = (k + 5, n + 3, n + 7);
+    let a = rng.vec_f32(m * lda);
+    let b = rng.vec_f32(k * ldb);
+    let seed = rng.vec_f32(m * ldc);
+    let mut want = seed.clone();
+    gemm_strided_isa(&mut want, &a, &b, m, k, n, lda, ldb, ldc, -0.5, Isa::Scalar);
+    for isa in Isa::available() {
+        let mut got = seed.clone();
+        gemm_strided_isa(&mut got, &a, &b, m, k, n, lda, ldb, ldc, -0.5, isa);
+        for i in 0..m {
+            let (g, w) = (&got[i * ldc..i * ldc + n], &want[i * ldc..i * ldc + n]);
+            assert_close(g, w, k, &format!("{} row {i}", isa.name()));
+            // the ldc padding beyond each row must be untouched
+            for j in n..ldc.min(got.len() - i * ldc) {
+                assert_eq!(
+                    got[i * ldc + j],
+                    seed[i * ldc + j],
+                    "{}: padding ({i},{j}) clobbered",
+                    isa.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn complex_gemm_matches_scalar() {
+    let mut rng = Rng::new(0xC0FE);
+    for isa in Isa::available() {
+        let (mr, nr) = blocking(isa);
+        for (m, k, n) in [(1, 1, 1), (mr + 1, 17, nr + 1), (2 * mr + 1, 37, 2 * nr + 1)] {
+            let (ur, ui) = (rng.vec_f32(m * k), rng.vec_f32(m * k));
+            let (vr, vi) = (rng.vec_f32(k * n), rng.vec_f32(k * n));
+            let seed_r = rng.vec_f32(m * n);
+            let seed_i = rng.vec_f32(m * n);
+            let (mut wr, mut wi) = (seed_r.clone(), seed_i.clone());
+            cgemm_acc_isa(&mut wr, &mut wi, &ur, &ui, &vr, &vi, m, k, n, Isa::Scalar);
+            let (mut gr, mut gi) = (seed_r.clone(), seed_i.clone());
+            cgemm_acc_isa(&mut gr, &mut gi, &ur, &ui, &vr, &vi, m, k, n, isa);
+            assert_close(&gr, &wr, k, &format!("{} cgemm re", isa.name()));
+            assert_close(&gi, &wi, k, &format!("{} cgemm im", isa.name()));
+        }
+    }
+}
+
+#[test]
+fn complex_panel_gemm_matches_scalar() {
+    let mut rng = Rng::new(0xC0F7);
+    for isa in Isa::available() {
+        let (mr, nr) = blocking(isa);
+        for (k, c, n) in [(1, 1, 1), (mr + 1, 13, nr + 1), (2 * mr + 1, 29, 2 * nr + 1)] {
+            let (vr, vi) = (rng.vec_f32(k * c), rng.vec_f32(k * c));
+            let (ur, ui) = (rng.vec_f32(c * n), rng.vec_f32(c * n));
+            let seed_r = rng.vec_f32(k * n);
+            let seed_i = rng.vec_f32(k * n);
+            let (mut wr, mut wi) = (seed_r.clone(), seed_i.clone());
+            cgemm_panel_acc_isa(&mut wr, &mut wi, &vr, &vi, &ur, &ui, k, c, n, Isa::Scalar);
+            let (mut gr, mut gi) = (seed_r.clone(), seed_i.clone());
+            cgemm_panel_acc_isa(&mut gr, &mut gi, &vr, &vi, &ur, &ui, k, c, n, isa);
+            assert_close(&gr, &wr, c, &format!("{} cpanel re", isa.name()));
+            assert_close(&gi, &wi, c, &format!("{} cpanel im", isa.name()));
+        }
+    }
+}
+
+#[test]
+fn gauss_gemm_matches_scalar() {
+    let mut rng = Rng::new(0x6A55);
+    for isa in Isa::available() {
+        let (mr, nr) = blocking(isa);
+        for (m, k, n) in [(1, 1, 1), (mr + 1, 17, nr + 1), (2 * mr + 1, 37, 2 * nr + 1)] {
+            let (ur, ui, us) = (rng.vec_f32(m * k), rng.vec_f32(m * k), rng.vec_f32(m * k));
+            let (vr, vd, vs) = (rng.vec_f32(k * n), rng.vec_f32(k * n), rng.vec_f32(k * n));
+            let seed_r = rng.vec_f32(m * n);
+            let seed_i = rng.vec_f32(m * n);
+            let mut scratch = GaussScratch::default();
+            let (mut wr, mut wi) = (seed_r.clone(), seed_i.clone());
+            gauss_gemm_acc_isa(
+                &mut wr,
+                &mut wi,
+                &ur,
+                &ui,
+                &us,
+                &vr,
+                &vd,
+                &vs,
+                m,
+                k,
+                n,
+                &mut scratch,
+                Isa::Scalar,
+            );
+            let (mut gr, mut gi) = (seed_r.clone(), seed_i.clone());
+            gauss_gemm_acc_isa(
+                &mut gr,
+                &mut gi,
+                &ur,
+                &ui,
+                &us,
+                &vr,
+                &vd,
+                &vs,
+                m,
+                k,
+                n,
+                &mut scratch,
+                isa,
+            );
+            assert_close(&gr, &wr, k, &format!("{} gauss re", isa.name()));
+            assert_close(&gi, &wi, k, &format!("{} gauss im", isa.name()));
+        }
+    }
+}
+
+#[test]
+fn gauss_panel_gemm_matches_scalar() {
+    let mut rng = Rng::new(0x6A57);
+    for isa in Isa::available() {
+        let (mr, nr) = blocking(isa);
+        for (k, c, n) in [(1, 1, 1), (mr + 1, 13, nr + 1), (2 * mr + 1, 29, 2 * nr + 1)] {
+            let (vr, vd, vs) = (rng.vec_f32(k * c), rng.vec_f32(k * c), rng.vec_f32(k * c));
+            let (ur, ui, us) = (rng.vec_f32(c * n), rng.vec_f32(c * n), rng.vec_f32(c * n));
+            let seed_r = rng.vec_f32(k * n);
+            let seed_i = rng.vec_f32(k * n);
+            let mut scratch = GaussScratch::default();
+            let (mut wr, mut wi) = (seed_r.clone(), seed_i.clone());
+            gauss_panel_acc_isa(
+                &mut wr,
+                &mut wi,
+                &vr,
+                &vd,
+                &vs,
+                &ur,
+                &ui,
+                &us,
+                k,
+                c,
+                n,
+                &mut scratch,
+                Isa::Scalar,
+            );
+            let (mut gr, mut gi) = (seed_r.clone(), seed_i.clone());
+            gauss_panel_acc_isa(
+                &mut gr,
+                &mut gi,
+                &vr,
+                &vd,
+                &vs,
+                &ur,
+                &ui,
+                &us,
+                k,
+                c,
+                n,
+                &mut scratch,
+                isa,
+            );
+            assert_close(&gr, &wr, c, &format!("{} gpanel re", isa.name()));
+            assert_close(&gi, &wi, c, &format!("{} gpanel im", isa.name()));
+        }
+    }
+}
+
+#[test]
+fn plan_binds_requested_isa_clamped_to_host() {
+    let w = Tensor4::random([4, 3, 3, 3], 11);
+    for req in [Isa::Scalar, Isa::Avx2, Isa::Avx512] {
+        let opts = PlanOptions {
+            isa: Some(req),
+            ..PlanOptions::default()
+        };
+        let plan = LayerPlan::with_options(ConvAlgorithm::RegularFft { m: 6 }, &w, 12, 12, 1, opts);
+        assert_eq!(plan.isa(), req.clamp_to_host(), "requested {}", req.name());
+        assert!(plan.isa() <= Isa::detect_max());
+    }
+}
+
+#[test]
+fn forced_isa_end_to_end_matches_direct() {
+    let x = Tensor4::random([2, 3, 13, 12], 21);
+    let w = Tensor4::random([4, 3, 3, 3], 22);
+    let want = direct::naive(&x, &w);
+    for isa in Isa::available() {
+        for algo in [
+            ConvAlgorithm::Winograd { m: 4 },
+            ConvAlgorithm::RegularFft { m: 6 },
+            ConvAlgorithm::GaussFft { m: 6 },
+        ] {
+            for exec in [ExecPolicy::Staged, ExecPolicy::Fused] {
+                let opts = PlanOptions {
+                    exec,
+                    isa: Some(isa),
+                    ..PlanOptions::default()
+                };
+                let mut plan = LayerPlan::with_options(algo, &w, 13, 12, 1, opts);
+                let got = plan.run(&x, None);
+                assert_eq!(got.shape, want.shape);
+                let err = got.max_abs_diff(&want);
+                assert!(
+                    err < 2e-3 * want.max_abs().max(1.0),
+                    "{} {} {exec:?}: err {err}",
+                    isa.name(),
+                    algo.name()
+                );
+            }
+        }
+    }
+}

@@ -9,6 +9,12 @@ cd "$(dirname "$0")/rust"
 cargo build --release
 cargo test -q
 
+# the same suite again with SIMD dispatch pinned to the scalar kernels:
+# proves the portable path stays correct (and that the equivalence suite
+# in tests/simd_kernels.rs really is comparing against a live baseline)
+echo "---- forced-scalar pass (FFTCONV_FORCE_ISA=scalar) ----"
+FFTCONV_FORCE_ISA=scalar cargo test -q
+
 if cargo clippy --version >/dev/null 2>&1; then
     cargo clippy -- -D warnings
 else
@@ -23,6 +29,9 @@ if [[ "${1:-}" != "--quick" ]]; then
     # and disagreement count; schema in docs/ARCHITECTURE.md)
     cargo bench --bench micro_hotpaths
     if [[ -f BENCH_hotpaths.json ]]; then
+        echo "---- ISA dispatch + roofline attainment ----"
+        grep -E '"(isa|peak_gflops|scalar|avx2|avx512|real_gflops|real_attainment_pct|cgemm_gflops|cgemm_attainment_pct|gauss_gflops|gauss_attainment_pct|vgg_attainment_pct|alexnet_attainment_pct)"' \
+            BENCH_hotpaths.json || true
         echo "---- submit path (v2 typed-handle intake) ----"
         grep -E '"(scheduler_batch8_us|submit_path_us)"' BENCH_hotpaths.json || true
         echo "---- fused vs staged summary (BENCH_hotpaths.json) ----"
