@@ -14,8 +14,8 @@ use fftconv::conv::{
     ConvAlgorithm, ConvProblem, ExecMode, ExecPolicy, LayerPlan, PlanOptions, Tensor4, TileGrid,
 };
 use fftconv::coordinator::{ConvRequest, ConvService, DecayPolicy, StaticScheduler};
-use fftconv::fft::{C32, Plan, TileFft};
-use fftconv::model::machine::{calibrate_isa, xeon_gold};
+use fftconv::fft::{BatchDft, C32, Plan, TileFft};
+use fftconv::model::machine::{calibrate_bandwidth, calibrate_isa, xeon_gold};
 use fftconv::model::roofline::fused_layer_time;
 use fftconv::model::select::{choose_exec, measure_exec};
 use fftconv::model::stages::{LayerShape, Method};
@@ -463,6 +463,102 @@ fn main() {
                 ),
             );
         }
+    }
+
+    // ---- transform-phase bandwidth: the xform block ----
+    // The paper's central claim is that the transforms are memory-bound:
+    // time the staged input phase (gather + forward DFT) and output phase
+    // (pruned inverse + scatter) over the same VGG- and AlexNet-shaped
+    // layers, convert moved bytes to achieved GB/s, and report attainment
+    // against the calibrated stream-triad ceiling (Eqn. 8's measured
+    // memory roof).  Single-threaded, like the triad it is compared to.
+    {
+        let bw_ceiling = calibrate_bandwidth();
+        let mut xform = BTreeMap::new();
+        xform.insert("bw_ceiling_gbps".to_string(), Json::Num(bw_ceiling));
+        // (tag, c, hw, r, m): transform shapes of the acceptance pair
+        let cases = [("vgg", 64usize, 56usize, 3usize, 6usize), ("alexnet", 64, 31, 5, 4)];
+        for (tag, c, hw, r, m) in cases {
+            let grid = TileGrid::new(hw, hw, m, r);
+            let mut dft = BatchDft::new(m, r);
+            let (tt, p) = (dft.t * dft.t, dft.th * dft.t);
+            let n = grid.tiles();
+            let nb = 32usize.min(n);
+            let planes: Vec<Vec<f32>> = (0..c).map(|_| rng.vec_f32(hw * hw)).collect();
+            let mut xb = vec![0.0f32; nb * tt];
+            let mut zre = vec![0.0f32; nb * p];
+            let mut zim = vec![0.0f32; nb * p];
+            let mut ob = vec![0.0f32; nb * m * m];
+            let mut oplane = vec![0.0f32; grid.oh * grid.ow];
+            let rin = bench("xform-in", 60, || {
+                for plane in &planes {
+                    let mut done = 0;
+                    while done < n {
+                        let cnt = nb.min(n - done);
+                        for s in 0..cnt {
+                            let ni = done + s;
+                            let tile = &mut xb[s * tt..(s + 1) * tt];
+                            grid.gather(plane, ni / grid.nw, ni % grid.nw, tile);
+                        }
+                        let re = &mut zre[..cnt * p];
+                        let im = &mut zim[..cnt * p];
+                        dft.forward(&xb[..cnt * tt], cnt, grid.t, re, im);
+                        done += cnt;
+                    }
+                }
+                std::hint::black_box(&zre);
+            });
+            let rout = bench("xform-out", 60, || {
+                for _ in 0..c {
+                    let mut done = 0;
+                    while done < n {
+                        let cnt = nb.min(n - done);
+                        let out = &mut ob[..cnt * m * m];
+                        dft.inverse_valid(&zre[..cnt * p], &zim[..cnt * p], cnt, out);
+                        for s in 0..cnt {
+                            let ni = done + s;
+                            let tile = &ob[s * m * m..(s + 1) * m * m];
+                            grid.scatter(tile, ni / grid.nw, ni % grid.nw, &mut oplane);
+                        }
+                        done += cnt;
+                    }
+                }
+                std::hint::black_box(&oplane);
+            });
+            // bytes each phase must move: input reads t x t pixels and
+            // writes both spectral planes per tile; output reads both
+            // planes and writes m x m valid pixels per tile
+            let in_bytes = (c * n * (tt + 2 * p) * 4) as f64;
+            let out_bytes = (c * n * (2 * p + m * m) * 4) as f64;
+            let in_gbps = in_bytes / rin.median.as_secs_f64() / 1e9;
+            let out_gbps = out_bytes / rout.median.as_secs_f64() / 1e9;
+            let attain = 100.0 * in_gbps.max(out_gbps) / bw_ceiling.max(1e-9);
+            for (name, ms, gbps) in [
+                ("xform-in", rin.median_ms(), in_gbps),
+                ("xform-out", rout.median_ms(), out_gbps),
+            ] {
+                t.row(vec![
+                    format!("{tag}-{name}"),
+                    format!("{c}ch {hw}x{hw} m={m} t={}", grid.t),
+                    format!("{:.0}", ms * 1e3),
+                    format!("{gbps:.2} GB/s"),
+                ]);
+            }
+            t.row(vec![
+                format!("{tag}-xform-attainment"),
+                format!("vs {bw_ceiling:.1} GB/s triad"),
+                format!("{attain:.0}%"),
+                "-".into(),
+            ]);
+            let mut o = BTreeMap::new();
+            o.insert("input_ms".to_string(), Json::Num(rin.median_ms()));
+            o.insert("output_ms".to_string(), Json::Num(rout.median_ms()));
+            o.insert("input_gbps".to_string(), Json::Num(in_gbps));
+            o.insert("output_gbps".to_string(), Json::Num(out_gbps));
+            o.insert("bw_attainment_pct".to_string(), Json::Num(attain));
+            xform.insert(tag.to_string(), Json::Obj(o));
+        }
+        json.insert("xform".to_string(), Json::Obj(xform));
     }
 
     // ---- measured exec autotuning: analytic seed vs empirical verdict ----

@@ -5,6 +5,7 @@
 //! output transform un-transposes (`(M X M^T)^T` composed twice).
 
 use super::gemm::gemm_acc_isa;
+use crate::simd::transpose::{transpose, transpose_ld};
 use crate::simd::Isa;
 
 /// One transform matrix M (a x b) applied as a sandwich over tile batches.
@@ -69,13 +70,11 @@ impl BatchSandwich {
         // pass 1: Y = X @ M^T  — (nb*b, b) x (b, a)
         y[..nb * b * a].fill(0.0);
         gemm_acc_isa(&mut y[..nb * b * a], x, &self.mt, nb * b, b, a, self.isa);
-        // transpose tiles (b, a) -> (a, b)
+        // transpose tiles (b, a) -> (a, b) via the in-register kernels
+        let ab = a * b;
         for t_ in 0..nb {
-            for i in 0..b {
-                for j in 0..a {
-                    tr[(t_ * a + j) * b + i] = y[(t_ * b + i) * a + j];
-                }
-            }
+            let (lo, hi) = (t_ * ab, (t_ + 1) * ab);
+            transpose(&mut tr[lo..hi], &y[lo..hi], b, a, self.isa);
         }
         // pass 2: out = Y' @ M^T — (nb*a, b) x (b, a)
         out.fill(0.0);
@@ -106,12 +105,8 @@ impl BatchSandwich {
         }
         let mut tmp = std::mem::take(&mut self.pbuf);
         self.apply(x, nb, &mut tmp[..nb * p]);
-        for pp in 0..p {
-            let dst = &mut out[base + pp * stride..base + pp * stride + nb];
-            for (s, d) in dst.iter_mut().enumerate() {
-                *d = tmp[s * p + pp];
-            }
-        }
+        // (tile, element) -> [element][tile]: one strided transpose
+        transpose_ld(&mut out[base..], &tmp[..nb * p], nb, p, p, stride, self.isa);
         self.pbuf = tmp;
     }
 }

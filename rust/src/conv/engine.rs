@@ -74,8 +74,9 @@ use super::tensor::Tensor4;
 use super::tiles::TileGrid;
 use super::ConvAlgorithm;
 use crate::fft::batch_dft::BatchDft;
+use crate::simd::transpose::{transpose, transpose_ld};
 use crate::simd::Isa;
-use crate::util::aligned::AlignedVec;
+use crate::util::aligned::{stream_fence, stream_run, AlignedVec};
 use crate::util::threadpool::{even_ranges, ThreadPool};
 use crate::winograd::matrices::winograd_matrices_f32;
 use std::marker::PhantomData;
@@ -238,6 +239,20 @@ impl<'a> SharedSlice<'a> {
         debug_assert!(i + src.len() <= self.len);
         std::ptr::copy_nonoverlapping(src.as_ptr(), self.ptr.add(i), src.len());
     }
+
+    /// [`SharedSlice::write_run`] with non-temporal stores where the ISA
+    /// allows (see [`crate::util::aligned::stream_run`]).  NT stores stay
+    /// cache-coherent, so partial lines shared with a neighbouring
+    /// worker's normal stores are safe; they are only weakly *ordered*,
+    /// which the per-worker [`stream_fence`] before the join handles.
+    ///
+    /// # Safety
+    /// Same contract as [`SharedSlice::write_run`].
+    #[inline]
+    unsafe fn stream(&self, i: usize, src: &[f32], isa: Isa) {
+        debug_assert!(i + src.len() <= self.len);
+        stream_run(self.ptr.add(i), src.as_ptr(), src.len(), isa);
+    }
 }
 
 /// Run `f(i, part)` for every part — on the pool's static fork-join when a
@@ -311,6 +326,13 @@ struct WorkerState {
     /// fused panel Z planes: [P][K][pb] re / im
     fzr: AlignedVec,
     fzi: AlignedVec,
+    /// staged stage-1 staging: the (cnt, P) codelet output re-laid as
+    /// (P, cnt) so every element row streams into `U` as one contiguous
+    /// (non-temporal) run — grown on the first staged batch, freed by
+    /// `trim_staged` (re / im / re+im)
+    tpr: Vec<f32>,
+    tpi: Vec<f32>,
+    tps: Vec<f32>,
 }
 
 impl WorkerState {
@@ -327,7 +349,36 @@ impl WorkerState {
             fus: AlignedVec::new(),
             fzr: AlignedVec::new(),
             fzi: AlignedVec::new(),
+            tpr: Vec::new(),
+            tpi: Vec::new(),
+            tps: Vec::new(),
         }
+    }
+
+    /// Grow the stage-1 element-major staging buffers (no-op after the
+    /// first staged batch, or after a `trim_staged`-then-rerun).
+    fn ensure_stage1(&mut self, need: usize, is_fft: bool, gauss: bool) {
+        if self.tpr.len() < need {
+            self.tpr.resize(need, 0.0);
+        }
+        if is_fft && self.tpi.len() < need {
+            self.tpi.resize(need, 0.0);
+        }
+        if gauss && self.tps.len() < need {
+            self.tps.resize(need, 0.0);
+        }
+    }
+
+    /// Bytes of droppable staged-side staging scratch.
+    fn staged_bytes(&self) -> usize {
+        (self.tpr.len() + self.tpi.len() + self.tps.len()) * 4
+    }
+
+    /// Free the staged-side staging scratch (regrown on the next batch).
+    fn trim_staged_scratch(&mut self) {
+        self.tpr = Vec::new();
+        self.tpi = Vec::new();
+        self.tps = Vec::new();
     }
 
     /// Grow the fused panel arenas to the plan's fixed panel footprint
@@ -588,6 +639,9 @@ impl LayerPlan {
             for buf in [&ws.fur, &ws.fui, &ws.fus, &ws.fzr, &ws.fzi] {
                 v.push((buf.as_ptr() as usize, buf.len()));
             }
+            for buf in [&ws.tpr, &ws.tpi, &ws.tps] {
+                v.push((buf.as_ptr() as usize, buf.len()));
+            }
         }
         v
     }
@@ -624,12 +678,12 @@ impl LayerPlan {
     }
 
     /// Bytes held by the staged variant's droppable scratch (the global
-    /// `U`/`Z` arenas) — what [`LayerPlan::trim_staged`] frees, minus the
-    /// shared Gauss buffers.
+    /// `U`/`Z` arenas plus the per-worker stage-1 staging) — what
+    /// [`LayerPlan::trim_staged`] frees, minus the shared Gauss buffers.
     pub fn staged_arena_bytes(&self) -> usize {
         let f32s =
             self.ur.len() + self.ui.len() + self.us.len() + self.zr.len() + self.zi.len();
-        f32s * 4
+        f32s * 4 + self.workers.iter().map(|w| w.staged_bytes()).sum::<usize>()
     }
 
     /// Bytes held by the fused variant's droppable scratch (every worker's
@@ -679,6 +733,7 @@ impl LayerPlan {
         self.zi = AlignedVec::new();
         for ws in &mut self.workers {
             ws.gauss.clear();
+            ws.trim_staged_scratch();
         }
     }
 
@@ -802,9 +857,11 @@ impl LayerPlan {
             } else {
                 None
             };
+            let isa = self.isa;
             let parts: Vec<(Range<usize>, &mut WorkerState)> =
                 shards.into_iter().zip(self.workers.iter_mut()).collect();
             execute(pool, parts, |_wi, (range, ws)| {
+                ws.ensure_stage1(NB * p, is_fft, gauss);
                 let mut g = range.start;
                 while g < range.end {
                     let bc = g / n;
@@ -831,26 +888,38 @@ impl LayerPlan {
                             );
                         }
                     }
+                    // Re-lay the (cnt, P) codelet output as (P, cnt) so
+                    // each element row lands in U as ONE contiguous run —
+                    // streamed non-temporally, since U is only read a full
+                    // stage later (write-allocate traffic saved).
                     // Disjointness: workers own disjoint (bi, ci, ni)
                     // ranges, and U index (pp*c + ci)*bn + bi*n + ni is
                     // injective in (ci, bi, ni) for every pp.
                     let base = bi * n + ni0;
+                    transpose(&mut ws.tpr[..p * cnt], &ws.tre[..cnt * p], cnt, p, isa);
+                    if is_fft {
+                        transpose(&mut ws.tpi[..p * cnt], &ws.tim[..cnt * p], cnt, p, isa);
+                    }
+                    if gauss {
+                        for i in 0..p * cnt {
+                            ws.tps[i] = ws.tpr[i] + ws.tpi[i];
+                        }
+                    }
                     for pp in 0..p {
                         let off = (pp * c + ci) * bn + base;
-                        for s in 0..cnt {
-                            let re = ws.tre[s * p + pp];
-                            unsafe { u_re.set(off + s, re) };
-                            if let Some(u_im) = &u_im {
-                                let im = ws.tim[s * p + pp];
-                                unsafe { u_im.set(off + s, im) };
-                                if let Some(u_s) = &u_s {
-                                    unsafe { u_s.set(off + s, re + im) };
-                                }
+                        unsafe { u_re.stream(off, &ws.tpr[pp * cnt..(pp + 1) * cnt], isa) };
+                        if let Some(u_im) = &u_im {
+                            unsafe { u_im.stream(off, &ws.tpi[pp * cnt..(pp + 1) * cnt], isa) };
+                            if let Some(u_s) = &u_s {
+                                unsafe { u_s.stream(off, &ws.tps[pp * cnt..(pp + 1) * cnt], isa) };
                             }
                         }
                     }
                     g += cnt;
                 }
+                // NT stores are weakly ordered: publish them before this
+                // worker reaches the stage's join barrier.
+                stream_fence();
             });
         }
 
@@ -947,6 +1016,7 @@ impl LayerPlan {
             }
             let zr = &self.zr[..need_z];
             let zi = &self.zi[..if is_fft { need_z } else { 0 }];
+            let isa = self.isa;
             execute(pool, parts, |_wi, (range, out_s, ws)| {
                 let mut local = 0usize; // pixel offset into out_s
                 let mut gr = range.start;
@@ -961,16 +1031,13 @@ impl LayerPlan {
                     let mut done = ni_start;
                     while done < ni_end {
                         let cnt = NB.min(ni_end - done);
-                        for pp in 0..p {
-                            let off = (pp * k + ki) * bn + bi * n + done;
-                            for (s, &v) in zr[off..off + cnt].iter().enumerate() {
-                                ws.tre[s * p + pp] = v;
-                            }
-                            if is_fft {
-                                for (s, &v) in zi[off..off + cnt].iter().enumerate() {
-                                    ws.tim[s * p + pp] = v;
-                                }
-                            }
+                        // gather the (P, cnt) arena stripe (rows k*bn
+                        // apart) back into tile-major (cnt, P) staging:
+                        // one strided transpose per plane
+                        let zb = ki * bn + bi * n + done;
+                        transpose_ld(&mut ws.tre[..cnt * p], &zr[zb..], p, cnt, k * bn, p, isa);
+                        if is_fft {
+                            transpose_ld(&mut ws.tim[..cnt * p], &zi[zb..], p, cnt, k * bn, p, isa);
                         }
                         match &mut ws.codelets {
                             Codelets::Winograd { output, .. } => {
@@ -1125,16 +1192,13 @@ impl LayerPlan {
 
                 // -- fused stage C: inverse transform + scatter --
                 for ki in 0..k {
-                    for pp in 0..p {
-                        let off = (pp * k + ki) * cnt;
-                        for s in 0..cnt {
-                            ws.tre[s * p + pp] = ws.fzr[off + s];
-                        }
-                        if is_fft {
-                            for s in 0..cnt {
-                                ws.tim[s * p + pp] = ws.fzi[off + s];
-                            }
-                        }
+                    // panel rows sit k*cnt apart: one strided transpose
+                    // gathers the (P, cnt) plane into tile-major staging
+                    let zb = ki * cnt;
+                    transpose_ld(&mut ws.tre[..cnt * p], &ws.fzr[zb..], p, cnt, k * cnt, p, isa);
+                    if is_fft {
+                        let zi = &ws.fzi[zb..];
+                        transpose_ld(&mut ws.tim[..cnt * p], zi, p, cnt, k * cnt, p, isa);
                     }
                     match &mut ws.codelets {
                         Codelets::Winograd { output, .. } => {

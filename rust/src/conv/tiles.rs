@@ -47,22 +47,33 @@ impl TileGrid {
 
     /// Gather tile (ti, tj) of `plane` (h x w) into `out` (t x t),
     /// zero-padding outside the image.
+    ///
+    /// Fully interior tiles — the overwhelming majority on real layers —
+    /// take a branch-free path of `t` unconditional row copies with no
+    /// zero-fill at all; only tiles straddling the right/bottom image
+    /// edge pay for padding, and even there only the fringe is memset.
     pub fn gather(&self, plane: &[f32], ti: usize, tj: usize, out: &mut [f32]) {
         debug_assert_eq!(plane.len(), self.h * self.w);
         debug_assert_eq!(out.len(), self.t * self.t);
+        let (t, w) = (self.t, self.w);
         let (i0, j0) = (ti * self.m, tj * self.m);
-        for u in 0..self.t {
-            let src_i = i0 + u;
-            let dst = &mut out[u * self.t..(u + 1) * self.t];
-            if src_i >= self.h {
-                dst.fill(0.0);
-                continue;
+        if i0 + t <= self.h && j0 + t <= w {
+            for u in 0..t {
+                let row = (i0 + u) * w + j0;
+                out[u * t..(u + 1) * t].copy_from_slice(&plane[row..row + t]);
             }
-            let row = &plane[src_i * self.w..(src_i + 1) * self.w];
-            let avail = self.w.saturating_sub(j0).min(self.t);
-            dst[..avail].copy_from_slice(&row[j0..j0 + avail]);
+            return;
+        }
+        // edge tile: copy the in-bounds sub-rectangle, zero only the fringe
+        let rows = self.h.saturating_sub(i0).min(t);
+        let avail = w.saturating_sub(j0).min(t);
+        for u in 0..rows {
+            let row = (i0 + u) * w + j0;
+            let dst = &mut out[u * t..(u + 1) * t];
+            dst[..avail].copy_from_slice(&plane[row..row + avail]);
             dst[avail..].fill(0.0);
         }
+        out[rows * t..].fill(0.0);
     }
 
     /// Scatter an m x m output tile (ti, tj) into `plane` (oh x ow),
@@ -99,6 +110,7 @@ impl TileGrid {
         debug_assert_eq!(dst.len() % self.ow, 0);
         let rows = dst.len() / self.ow;
         let (i0, j0) = (ti * self.m, tj * self.m);
+        let count = self.ow.saturating_sub(j0).min(self.m);
         for u in 0..self.m {
             let dst_i = i0 + u;
             if dst_i >= self.oh || dst_i >= row0 + rows {
@@ -108,7 +120,6 @@ impl TileGrid {
                 continue;
             }
             let local = dst_i - row0;
-            let count = self.ow.saturating_sub(j0).min(self.m);
             let out = &mut dst[local * self.ow + j0..local * self.ow + j0 + count];
             out.copy_from_slice(&tile[u * self.m..u * self.m + count]);
         }

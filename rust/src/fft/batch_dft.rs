@@ -21,6 +21,7 @@
 
 use super::rfft::half_len;
 use crate::conv::gemm::{gemm_acc_isa, gemm_sub_isa};
+use crate::simd::transpose::{transpose, transpose_ld};
 use crate::simd::Isa;
 use std::sync::Arc;
 
@@ -190,16 +191,14 @@ impl BatchDft {
         gemm_acc_isa(yr, x, &self.mats.cht[..s * th], nb * s, s, th, self.isa);
         gemm_acc_isa(yi, x, &self.mats.sht[..s * th], nb * s, s, th, self.isa);
 
-        // transpose each tile (s, th) -> (th, s)
+        // transpose each tile (s, th) -> (th, s) via the in-register kernels
         let tr = &mut tr_buf[..nb * th * s];
         let ti = &mut ti_buf[..nb * th * s];
+        let sth = s * th;
         for b in 0..nb {
-            for i in 0..s {
-                for k in 0..th {
-                    tr[(b * th + k) * s + i] = yr[(b * s + i) * th + k];
-                    ti[(b * th + k) * s + i] = yi[(b * s + i) * th + k];
-                }
-            }
+            let (lo, hi) = (b * sth, (b + 1) * sth);
+            transpose(&mut tr[lo..hi], &yr[lo..hi], s, th, self.isa);
+            transpose(&mut ti[lo..hi], &yi[lo..hi], s, th, self.isa);
         }
 
         // cols: Z = Y @ D_t^T over the original axis-0 (length s nonzero)
@@ -246,14 +245,9 @@ impl BatchDft {
         let mut pr = std::mem::take(&mut self.pr);
         let mut pi = std::mem::take(&mut self.pi);
         self.forward(x, nb, s, &mut pr[..nb * p], &mut pi[..nb * p]);
-        for pp in 0..p {
-            let dr = &mut out_re[base + pp * stride..base + pp * stride + nb];
-            let di = &mut out_im[base + pp * stride..base + pp * stride + nb];
-            for sidx in 0..nb {
-                dr[sidx] = pr[sidx * p + pp];
-                di[sidx] = pi[sidx * p + pp];
-            }
-        }
+        // (tile, element) -> [element][tile]: one strided transpose each
+        transpose_ld(&mut out_re[base..], &pr[..nb * p], nb, p, p, stride, self.isa);
+        transpose_ld(&mut out_im[base..], &pi[..nb * p], nb, p, p, stride, self.isa);
         self.pr = pr;
         self.pi = pi;
     }
@@ -280,16 +274,14 @@ impl BatchDft {
         gemm_acc_isa(yi, z_re, &self.mats.bst, nb * th, t, m, self.isa);
         gemm_acc_isa(yi, z_im, &self.mats.bct, nb * th, t, m, self.isa);
 
-        // transpose each tile (th, m) -> (m, th)
+        // transpose each tile (th, m) -> (m, th) via the in-register kernels
         let tr = &mut tr_buf[..nb * m * th];
         let ti = &mut ti_buf[..nb * m * th];
+        let thm = th * m;
         for b in 0..nb {
-            for k in 0..th {
-                for i in 0..m {
-                    tr[(b * m + i) * th + k] = yr[(b * th + k) * m + i];
-                    ti[(b * m + i) * th + k] = yi[(b * th + k) * m + i];
-                }
-            }
+            let (lo, hi) = (b * thm, (b + 1) * thm);
+            transpose(&mut tr[lo..hi], &yr[lo..hi], th, m, self.isa);
+            transpose(&mut ti[lo..hi], &yi[lo..hi], th, m, self.isa);
         }
 
         // rows (half spectrum -> real, pruned): out = Yr @ W_c - Yi @ W_s

@@ -40,6 +40,9 @@ pub struct Machine {
     /// measured per-ISA compute ceiling; `None` for catalog entries (the
     /// roofline then falls back to `gflops`)
     pub calibrated: Option<IsaCalibration>,
+    /// measured stream-triad memory bandwidth in GB/s; `None` for catalog
+    /// entries (the roofline then falls back to `mb`)
+    pub mem_calibrated: Option<f64>,
 }
 
 impl Machine {
@@ -59,16 +62,25 @@ impl Machine {
         }
     }
 
-    /// This machine with the host's resolved kernel set calibrated in:
+    /// The roofline's memory ceiling in GB/s: the measured stream-triad
+    /// figure when present, the catalog `mb` otherwise.  (`cmr()` stays on
+    /// catalog numbers either way — Table-1 semantics.)
+    pub fn peak_bandwidth(&self) -> f64 {
+        self.mem_calibrated.unwrap_or(self.mb)
+    }
+
+    /// This machine with *both* host ceilings calibrated in:
     /// `peak_gflops()` becomes the measured ceiling of the ISA the engine
-    /// will dispatch to.  The underlying micro-bench runs once per
-    /// (process, ISA) — repeat calls are free.
+    /// will dispatch to, and `peak_bandwidth()` the measured stream-triad
+    /// bandwidth.  The underlying micro-benches run once per process
+    /// (per ISA for the FMA side) — repeat calls are free.
     pub fn with_host_calibration(mut self) -> Machine {
         let isa = Isa::resolved();
         self.calibrated = Some(IsaCalibration {
             isa,
             peak_gflops: calibrate_isa(isa),
         });
+        self.mem_calibrated = Some(calibrate_bandwidth());
         self
     }
 
@@ -88,6 +100,7 @@ impl Machine {
             cache,
             mb,
             calibrated: None,
+            mem_calibrated: None,
         }
     }
 }
@@ -157,6 +170,41 @@ fn probe_flops_isa(isa: Isa) -> f64 {
     (2.0 * (n * n * n) as f64 * reps as f64) / dt / 1e9
 }
 
+/// One-shot stream-triad bandwidth calibration: sustained GB/s of
+/// `a[i] = b[i] + s * c[i]` over three buffers far larger than any cache,
+/// counting the STREAM-convention 3 x N x 4 bytes per pass.  Measured
+/// once per process and cached (alongside [`calibrate_isa`]), so plan
+/// construction, the roofline, and the benches can consult it freely.
+/// This is the Eqn. 8 memory ceiling for calibrated machines — the
+/// bandwidth the transform phase is actually racing against.
+pub fn calibrate_bandwidth() -> f64 {
+    static CACHE: OnceLock<f64> = OnceLock::new();
+    *CACHE.get_or_init(probe_bandwidth_triad)
+}
+
+/// The uncached measurement behind [`calibrate_bandwidth`].
+fn probe_bandwidth_triad() -> f64 {
+    let n = 32 * 1024 * 1024 / 4; // 3 x 32 MB: ~4x any L3
+    let b = vec![1.5f32; n];
+    let c = vec![0.25f32; n];
+    let mut a = vec![0.0f32; n];
+    // warmup (also faults the pages in)
+    for ((d, &x), &y) in a.iter_mut().zip(&b).zip(&c) {
+        *d = x + 3.0 * y;
+    }
+    let reps = 4;
+    let t0 = Instant::now();
+    for r in 0..reps {
+        let s = 3.0 + r as f32;
+        for ((d, &x), &y) in a.iter_mut().zip(&b).zip(&c) {
+            *d = x + s * y;
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    std::hint::black_box(&a);
+    (3.0 * (n * 4) as f64 * reps as f64) / dt / 1e9
+}
+
 /// Measure this host's streaming memory bandwidth (GB/s) with a large
 /// read+write sweep (~4x any L3).
 pub fn probe_bandwidth() -> f64 {
@@ -184,7 +232,7 @@ pub fn probe_bandwidth() -> f64 {
 pub fn probe_host() -> Machine {
     let isa = Isa::resolved();
     let gflops = probe_flops();
-    let mb = probe_bandwidth();
+    let mb = calibrate_bandwidth();
     // leak the name: probes run once per process
     let name: &'static str = Box::leak(
         format!(
@@ -209,6 +257,7 @@ pub fn probe_host() -> Machine {
             isa,
             peak_gflops: gflops,
         }),
+        mem_calibrated: Some(mb),
     }
 }
 
@@ -282,5 +331,31 @@ mod tests {
         let c = m.calibrated.expect("calibrated");
         assert_eq!(c.isa, Isa::resolved());
         assert!((m.peak_gflops() - c.peak_gflops).abs() < 1e-12);
+    }
+
+    #[test]
+    fn host_calibration_binds_both_ceilings() {
+        let m = xeon_gold().with_host_calibration();
+        let bw = m.mem_calibrated.expect("bandwidth calibrated");
+        assert!(bw > 0.05 && bw < 10_000.0, "bw {bw}");
+        assert_eq!(bw.to_bits(), calibrate_bandwidth().to_bits());
+        assert_eq!(m.peak_bandwidth().to_bits(), bw.to_bits());
+        // CMR stays on catalog semantics regardless of calibration
+        assert!((m.cmr() - 24.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn calibrate_bandwidth_is_cached() {
+        let first = calibrate_bandwidth();
+        assert_eq!(first.to_bits(), calibrate_bandwidth().to_bits());
+    }
+
+    #[test]
+    fn peak_bandwidth_prefers_calibration() {
+        let mut m = xeon_gold();
+        assert_eq!(m.peak_bandwidth(), m.mb);
+        m.mem_calibrated = Some(33.5);
+        assert_eq!(m.peak_bandwidth(), 33.5);
+        assert!((m.cmr() - 24.0).abs() < 0.1);
     }
 }

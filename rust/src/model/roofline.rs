@@ -46,7 +46,7 @@ pub struct TimeBreakdown {
 pub fn layer_time(method: Method, l: &LayerShape, m: usize, machine: &Machine) -> TimeBreakdown {
     let lm = layer_model(method, l, m, machine.cache);
     let peak = machine.peak_gflops() * 1e9;
-    let mb = machine.mb * 1e9;
+    let mb = machine.peak_bandwidth() * 1e9;
     let mut stages = [0.0f64; 4];
     let mut bound = [false; 4];
     for (i, s) in lm.stages.iter().enumerate() {
@@ -132,7 +132,7 @@ pub fn fused_layer_time(
         + 4.0 * (l.b * l.k) as f64 * m2 * l.tiles(m) as f64 // output write
         + v_traffic;
     let peak = machine.peak_gflops() * 1e9;
-    let mb = machine.mb * 1e9;
+    let mb = machine.peak_bandwidth() * 1e9;
     FusedBreakdown {
         feasible: true,
         pb,
@@ -386,5 +386,31 @@ mod tests {
         let sa = speedup(Method::RegularFft, Method::Winograd, &l, &a);
         let sb = speedup(Method::RegularFft, Method::Winograd, &l, &b);
         assert!((sa - sb).abs() < 1e-9);
+    }
+
+    #[test]
+    fn calibrated_bandwidth_is_the_memory_ceiling() {
+        // halving the measured bandwidth exactly doubles the memory-bound
+        // stage times while leaving compute-bound stages (and catalog CMR)
+        // untouched — Eqn. 8 now runs on peak_bandwidth()
+        let base = xeon_gold();
+        let tb0 = layer_time(Method::RegularFft, &vgg12(), 6, &base);
+        let mut slow = base.clone();
+        slow.mem_calibrated = Some(base.mb / 2.0);
+        let tb1 = layer_time(Method::RegularFft, &vgg12(), 6, &slow);
+        assert!(tb1.total > tb0.total);
+        for i in 0..4 {
+            if tb0.memory_bound[i] {
+                let ratio = tb1.stages[i] / tb0.stages[i];
+                assert!((ratio - 2.0).abs() < 1e-9, "stage {i} ratio {ratio}");
+            }
+        }
+        assert!(tb0.memory_bound.iter().any(|&b| b), "vgg1.2 FFT has memory-bound stages");
+        // fused predictions move the same way
+        let f0 = fused_layer_time(Method::RegularFft, &vgg12(), 6, &base);
+        let f1 = fused_layer_time(Method::RegularFft, &vgg12(), 6, &slow);
+        assert!(f1.time >= f0.time);
+        // Table-1 CMR semantics survive calibration
+        assert!((slow.cmr() - base.cmr()).abs() < 1e-12);
     }
 }

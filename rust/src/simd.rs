@@ -15,6 +15,8 @@
 
 use std::sync::OnceLock;
 
+pub mod transpose;
+
 /// One compiled kernel set. Ordered by capability: `Scalar < Avx2 < Avx512`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum Isa {

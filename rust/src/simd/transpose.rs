@@ -1,0 +1,343 @@
+//! In-register f32 block transposes behind the [`Isa`] funnel.
+//!
+//! The transform phase moves every tile through a (tiles, P) <-> (P,
+//! tiles) relayout — codelet sandwiches transpose between the two
+//! one-dimensional passes, panel scatters relayout GEMM panels into the
+//! element-major arenas, and the engine's stage gathers do the reverse.
+//! After PR 6 vectorized the GEMMs these scalar transpose loops were the
+//! largest remaining scalar residue (ROADMAP §SIMD), and they are pure
+//! bandwidth: 8x8 AVX2 and 16x16 AVX-512 in-register kernels move the
+//! same bytes in 1/8th..1/16th the instructions.
+//!
+//! Everything funnels through [`transpose_ld`]: dual-stride semantics
+//! `dst[j * ldd + i] = src[i * lds + j]`, i.e. `src` is a `rows` x `cols`
+//! row-major matrix with leading dimension `lds`, and `dst` receives its
+//! transpose (`cols` x `rows`, leading dimension `ldd`).  The result is a
+//! pure permutation of the inputs — bit-for-bit identical across ISAs —
+//! which the forced-ISA suite (`tests/transform_simd.rs`) checks with
+//! exact equality.
+
+use super::Isa;
+
+/// Contiguous transpose: `dst[j * rows + i] = src[i * cols + j]`.
+///
+/// The codelet-tile form: one `rows` x `cols` tile packed densely into
+/// `cols` x `rows`.  Thin wrapper over [`transpose_ld`].
+pub fn transpose(dst: &mut [f32], src: &[f32], rows: usize, cols: usize, isa: Isa) {
+    transpose_ld(dst, src, rows, cols, cols, rows, isa);
+}
+
+/// Strided transpose: `dst[j * ldd + i] = src[i * lds + j]` for
+/// `i < rows`, `j < cols`.
+///
+/// The panel-scatter / arena-gather form: `src` rows may sit `lds` apart
+/// (`lds >= cols`) and `dst` rows `ldd` apart (`ldd >= rows`), so one
+/// call relayouts a GEMM panel into an element-major arena slice or
+/// gathers an arena stripe back into a packed panel.  Bounds are promoted
+/// to hard asserts here; the ISA kernels below only ever touch addresses
+/// inside the asserted extents.
+#[allow(clippy::too_many_arguments)]
+pub fn transpose_ld(
+    dst: &mut [f32],
+    src: &[f32],
+    rows: usize,
+    cols: usize,
+    lds: usize,
+    ldd: usize,
+    isa: Isa,
+) {
+    if rows == 0 || cols == 0 {
+        return;
+    }
+    assert!(lds >= cols && ldd >= rows);
+    assert!(src.len() >= (rows - 1) * lds + cols);
+    assert!(dst.len() >= (cols - 1) * ldd + rows);
+    match isa.clamp_to_host() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => x86::transpose_avx2(dst, src, rows, cols, lds, ldd),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx512 => x86::transpose_avx512(dst, src, rows, cols, lds, ldd),
+        _ => transpose_scalar(dst, src, rows, cols, lds, ldd),
+    }
+}
+
+/// Portable fallback: two-level 8x8 blocking so both the `src` row reads
+/// and the `dst` row writes stay within an L1-resident working set even
+/// for large panels (a naive ij loop strides one side by `ld` every
+/// element).
+fn transpose_scalar(
+    dst: &mut [f32],
+    src: &[f32],
+    rows: usize,
+    cols: usize,
+    lds: usize,
+    ldd: usize,
+) {
+    const B: usize = 8;
+    let mut i0 = 0;
+    while i0 < rows {
+        let ib = B.min(rows - i0);
+        let mut j0 = 0;
+        while j0 < cols {
+            let jb = B.min(cols - j0);
+            block_scalar(dst, src, i0, j0, ib, jb, lds, ldd);
+            j0 += jb;
+        }
+        i0 += ib;
+    }
+}
+
+/// One `ib` x `jb` scalar block at (`i0`, `j0`): the shared edge path for
+/// every ISA variant.
+fn block_scalar(
+    dst: &mut [f32],
+    src: &[f32],
+    i0: usize,
+    j0: usize,
+    ib: usize,
+    jb: usize,
+    lds: usize,
+    ldd: usize,
+) {
+    for i in i0..i0 + ib {
+        let row = &src[i * lds + j0..i * lds + j0 + jb];
+        for (j, &v) in row.iter().enumerate() {
+            dst[(j0 + j) * ldd + i] = v;
+        }
+    }
+}
+
+/// Explicit `std::arch` kernels.  Only the full-block bodies are `unsafe`
+/// (raw pointers + `target_feature`); the drivers are safe code running
+/// after [`transpose_ld`]'s hard asserts, and route partial edge blocks
+/// to the shared scalar [`block_scalar`].
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::block_scalar;
+    use std::arch::x86_64::*;
+
+    pub fn transpose_avx2(
+        dst: &mut [f32],
+        src: &[f32],
+        rows: usize,
+        cols: usize,
+        lds: usize,
+        ldd: usize,
+    ) {
+        let fr = rows - rows % 8;
+        let fc = cols - cols % 8;
+        for i0 in (0..fr).step_by(8) {
+            for j0 in (0..fc).step_by(8) {
+                // SAFETY: the dispatcher clamped to the detected ISA, so
+                // avx2 is present; the full 8x8 block at (i0, j0) stays
+                // inside the extents asserted by transpose_ld.
+                unsafe {
+                    t8x8(
+                        src.as_ptr().add(i0 * lds + j0),
+                        lds,
+                        dst.as_mut_ptr().add(j0 * ldd + i0),
+                        ldd,
+                    )
+                };
+            }
+        }
+        if fc < cols {
+            block_scalar(dst, src, 0, fc, fr, cols - fc, lds, ldd);
+        }
+        if fr < rows {
+            block_scalar(dst, src, fr, 0, rows - fr, cols, lds, ldd);
+        }
+    }
+
+    pub fn transpose_avx512(
+        dst: &mut [f32],
+        src: &[f32],
+        rows: usize,
+        cols: usize,
+        lds: usize,
+        ldd: usize,
+    ) {
+        let fr = rows - rows % 16;
+        let fc = cols - cols % 16;
+        for i0 in (0..fr).step_by(16) {
+            for j0 in (0..fc).step_by(16) {
+                // SAFETY: as in transpose_avx2, with avx512f and a full
+                // 16x16 block.
+                unsafe {
+                    t16x16(
+                        src.as_ptr().add(i0 * lds + j0),
+                        lds,
+                        dst.as_mut_ptr().add(j0 * ldd + i0),
+                        ldd,
+                    )
+                };
+            }
+        }
+        if fc < cols {
+            block_scalar(dst, src, 0, fc, fr, cols - fc, lds, ldd);
+        }
+        if fr < rows {
+            block_scalar(dst, src, fr, 0, rows - fr, cols, lds, ldd);
+        }
+    }
+
+    /// One 8x8 block fully in ymm registers: unpack (32-bit interleave)
+    /// -> shuffle (64-bit interleave) -> permute2f128 (lane join), the
+    /// classic 24-instruction sequence.  After the shuffles, `s{q}`/
+    /// `s{q+4}` hold column `q` / `q+4` of rows 0..3 in lane 0 and of
+    /// rows 4..7 in lane 1; the permutes splice the matching lanes.
+    #[target_feature(enable = "avx")]
+    unsafe fn t8x8(src: *const f32, lds: usize, dst: *mut f32, ldd: usize) {
+        let r0 = _mm256_loadu_ps(src);
+        let r1 = _mm256_loadu_ps(src.add(lds));
+        let r2 = _mm256_loadu_ps(src.add(2 * lds));
+        let r3 = _mm256_loadu_ps(src.add(3 * lds));
+        let r4 = _mm256_loadu_ps(src.add(4 * lds));
+        let r5 = _mm256_loadu_ps(src.add(5 * lds));
+        let r6 = _mm256_loadu_ps(src.add(6 * lds));
+        let r7 = _mm256_loadu_ps(src.add(7 * lds));
+        let t0 = _mm256_unpacklo_ps(r0, r1);
+        let t1 = _mm256_unpackhi_ps(r0, r1);
+        let t2 = _mm256_unpacklo_ps(r2, r3);
+        let t3 = _mm256_unpackhi_ps(r2, r3);
+        let t4 = _mm256_unpacklo_ps(r4, r5);
+        let t5 = _mm256_unpackhi_ps(r4, r5);
+        let t6 = _mm256_unpacklo_ps(r6, r7);
+        let t7 = _mm256_unpackhi_ps(r6, r7);
+        let s0 = _mm256_shuffle_ps(t0, t2, 0x44);
+        let s1 = _mm256_shuffle_ps(t0, t2, 0xee);
+        let s2 = _mm256_shuffle_ps(t1, t3, 0x44);
+        let s3 = _mm256_shuffle_ps(t1, t3, 0xee);
+        let s4 = _mm256_shuffle_ps(t4, t6, 0x44);
+        let s5 = _mm256_shuffle_ps(t4, t6, 0xee);
+        let s6 = _mm256_shuffle_ps(t5, t7, 0x44);
+        let s7 = _mm256_shuffle_ps(t5, t7, 0xee);
+        _mm256_storeu_ps(dst, _mm256_permute2f128_ps(s0, s4, 0x20));
+        _mm256_storeu_ps(dst.add(ldd), _mm256_permute2f128_ps(s1, s5, 0x20));
+        _mm256_storeu_ps(dst.add(2 * ldd), _mm256_permute2f128_ps(s2, s6, 0x20));
+        _mm256_storeu_ps(dst.add(3 * ldd), _mm256_permute2f128_ps(s3, s7, 0x20));
+        _mm256_storeu_ps(dst.add(4 * ldd), _mm256_permute2f128_ps(s0, s4, 0x31));
+        _mm256_storeu_ps(dst.add(5 * ldd), _mm256_permute2f128_ps(s1, s5, 0x31));
+        _mm256_storeu_ps(dst.add(6 * ldd), _mm256_permute2f128_ps(s2, s6, 0x31));
+        _mm256_storeu_ps(dst.add(7 * ldd), _mm256_permute2f128_ps(s3, s7, 0x31));
+    }
+
+    /// One 16x16 block fully in zmm registers, four stages: 32-bit
+    /// unpack, 64-bit shuffle (after which `s[4g + q]` lane `L` holds
+    /// column `q + 4L` of rows `4g..4g + 4`), then two rounds of
+    /// 128-bit-lane `shuffle_f32x4` (0x88 keeps even lanes, 0xdd odd) to
+    /// splice the four row groups.
+    #[target_feature(enable = "avx512f")]
+    unsafe fn t16x16(src: *const f32, lds: usize, dst: *mut f32, ldd: usize) {
+        let mut r = [_mm512_setzero_ps(); 16];
+        for (i, ri) in r.iter_mut().enumerate() {
+            *ri = _mm512_loadu_ps(src.add(i * lds));
+        }
+        let mut t = [_mm512_setzero_ps(); 16];
+        for i in 0..8 {
+            t[2 * i] = _mm512_unpacklo_ps(r[2 * i], r[2 * i + 1]);
+            t[2 * i + 1] = _mm512_unpackhi_ps(r[2 * i], r[2 * i + 1]);
+        }
+        for g in 0..4 {
+            r[4 * g] = _mm512_shuffle_ps(t[4 * g], t[4 * g + 2], 0x44);
+            r[4 * g + 1] = _mm512_shuffle_ps(t[4 * g], t[4 * g + 2], 0xee);
+            r[4 * g + 2] = _mm512_shuffle_ps(t[4 * g + 1], t[4 * g + 3], 0x44);
+            r[4 * g + 3] = _mm512_shuffle_ps(t[4 * g + 1], t[4 * g + 3], 0xee);
+        }
+        for q in 0..4 {
+            t[q] = _mm512_shuffle_f32x4(r[q], r[q + 4], 0x88);
+            t[q + 4] = _mm512_shuffle_f32x4(r[q], r[q + 4], 0xdd);
+            t[q + 8] = _mm512_shuffle_f32x4(r[q + 8], r[q + 12], 0x88);
+            t[q + 12] = _mm512_shuffle_f32x4(r[q + 8], r[q + 12], 0xdd);
+        }
+        for q in 0..4 {
+            _mm512_storeu_ps(dst.add(q * ldd), _mm512_shuffle_f32x4(t[q], t[q + 8], 0x88));
+            _mm512_storeu_ps(
+                dst.add((q + 4) * ldd),
+                _mm512_shuffle_f32x4(t[q + 4], t[q + 12], 0x88),
+            );
+            _mm512_storeu_ps(
+                dst.add((q + 8) * ldd),
+                _mm512_shuffle_f32x4(t[q], t[q + 8], 0xdd),
+            );
+            _mm512_storeu_ps(
+                dst.add((q + 12) * ldd),
+                _mm512_shuffle_f32x4(t[q + 4], t[q + 12], 0xdd),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive(dst: &mut [f32], src: &[f32], rows: usize, cols: usize, lds: usize, ldd: usize) {
+        for i in 0..rows {
+            for j in 0..cols {
+                dst[j * ldd + i] = src[i * lds + j];
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_matches_naive_exactly_on_every_host_isa() {
+        let mut rng = Rng::new(701);
+        for &(rows, cols) in &[
+            (1usize, 1usize),
+            (4, 4),
+            (6, 6),
+            (8, 8),
+            (16, 16),
+            (31, 31),
+            (5, 33),
+            (33, 5),
+            (17, 64),
+            (64, 17),
+            (32, 1156),
+        ] {
+            let src = rng.vec_f32(rows * cols);
+            let mut want = vec![0.0f32; cols * rows];
+            naive(&mut want, &src, rows, cols, cols, rows);
+            for isa in Isa::available() {
+                let mut got = vec![-1.0f32; cols * rows];
+                transpose(&mut got, &src, rows, cols, isa);
+                assert_eq!(got, want, "{rows}x{cols} on {}", isa.name());
+            }
+        }
+    }
+
+    #[test]
+    fn strided_transpose_touches_only_the_submatrix() {
+        let mut rng = Rng::new(702);
+        for &(rows, cols, lds, ldd) in &[
+            (8usize, 8usize, 13usize, 11usize),
+            (16, 16, 40, 17),
+            (31, 32, 33, 40),
+            (7, 24, 100, 9),
+            (24, 7, 7, 300),
+        ] {
+            let src = rng.vec_f32((rows - 1) * lds + cols);
+            let canary = -7.5f32;
+            let mut want = vec![canary; (cols - 1) * ldd + rows];
+            naive(&mut want, &src, rows, cols, lds, ldd);
+            for isa in Isa::available() {
+                let mut got = vec![canary; (cols - 1) * ldd + rows];
+                transpose_ld(&mut got, &src, rows, cols, lds, ldd, isa);
+                assert_eq!(got, want, "{rows}x{cols} lds={lds} ldd={ldd} on {}", isa.name());
+            }
+        }
+    }
+
+    #[test]
+    fn empty_shapes_are_no_ops() {
+        let src = [1.0f32; 4];
+        let mut dst = [2.0f32; 4];
+        for isa in Isa::available() {
+            transpose(&mut dst, &src, 0, 4, isa);
+            transpose(&mut dst, &src, 4, 0, isa);
+        }
+        assert_eq!(dst, [2.0f32; 4]);
+    }
+}

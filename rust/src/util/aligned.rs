@@ -11,6 +11,7 @@
 //! `resize(n)` (never shrinks capacity), zero-filled growth, `Deref` to
 //! `[f32]`, and `new()` replaces a trimmed buffer without allocating.
 
+use crate::simd::Isa;
 use std::alloc::{alloc_zeroed, dealloc, handle_alloc_error, Layout};
 use std::ops::{Deref, DerefMut};
 use std::ptr::NonNull;
@@ -155,6 +156,82 @@ impl std::fmt::Debug for AlignedVec {
     }
 }
 
+/// Minimum run length for the non-temporal path: below this the scalar
+/// head/tail fixup dominates and a plain copy wins.
+const STREAM_MIN: usize = 16;
+
+/// Copy `src` into `dst` with non-temporal (streaming) stores where the
+/// ISA allows.
+///
+/// NT stores bypass the cache hierarchy and combine into full-line DRAM
+/// writes, eliminating the read-for-ownership a normal store performs on
+/// a missing line — exactly the Table-1 write-allocate traffic the staged
+/// engine pays when filling the `U`/`Z` arenas it will not read again
+/// until a whole stage later.  They are only weakly *ordered*, not
+/// incoherent: making them visible to other threads needs [`stream_fence`]
+/// before the publishing synchronisation point, but partial cache lines
+/// mixed with neighbouring workers' normal stores stay correct.
+pub fn stream_copy(dst: &mut [f32], src: &[f32], isa: Isa) {
+    assert_eq!(dst.len(), src.len());
+    // SAFETY: equal-length slices; &mut guarantees no overlap.
+    unsafe { stream_run(dst.as_mut_ptr(), src.as_ptr(), src.len(), isa) };
+}
+
+/// Raw-pointer form of [`stream_copy`] for shared-arena writers that hand
+/// out disjoint regions by index (`SharedSlice` in the engine).
+///
+/// # Safety
+///
+/// `dst..dst + len` must be valid for writes, `src..src + len` valid for
+/// reads, and the two ranges must not overlap.
+pub unsafe fn stream_run(dst: *mut f32, src: *const f32, len: usize, isa: Isa) {
+    #[cfg(target_arch = "x86_64")]
+    if isa.clamp_to_host() >= Isa::Avx2 && len >= STREAM_MIN {
+        // SAFETY: clamp_to_host guarantees AVX2 (hence AVX) is present;
+        // caller upholds the range contract.
+        unsafe { x86_stream_run(dst, src, len) };
+        return;
+    }
+    let _ = isa;
+    // SAFETY: caller upholds the range contract.
+    unsafe { std::ptr::copy_nonoverlapping(src, dst, len) };
+}
+
+/// Make this thread's prior non-temporal stores globally visible.
+///
+/// NT stores are weakly ordered: on x86 even a `Release` atomic store
+/// does not order them, so every worker must fence once before the
+/// stage's join barrier.  No-op on targets without streaming stores.
+#[inline]
+pub fn stream_fence() {
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: sfence is unconditionally available on x86_64.
+    unsafe { std::arch::x86_64::_mm_sfence() };
+}
+
+/// The AVX interior: scalar head until `dst` reaches 32-byte alignment
+/// (f32 pointers are always 4-aligned, so alignment is reachable), then
+/// 8-wide `movntps`, then a scalar tail.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx")]
+unsafe fn x86_stream_run(dst: *mut f32, src: *const f32, len: usize) {
+    use std::arch::x86_64::*;
+    debug_assert_eq!(dst as usize % 4, 0);
+    let head = (((32 - (dst as usize & 31)) & 31) / 4).min(len);
+    for i in 0..head {
+        *dst.add(i) = *src.add(i);
+    }
+    let mut i = head;
+    while i + 8 <= len {
+        _mm256_stream_ps(dst.add(i), _mm256_loadu_ps(src.add(i)));
+        i += 8;
+    }
+    while i < len {
+        *dst.add(i) = *src.add(i);
+        i += 1;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -224,5 +301,23 @@ mod tests {
         }
         v.clear_to_zero();
         assert!(v.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn stream_copy_is_bitwise_exact_at_every_offset_and_length() {
+        // misaligned destinations exercise the scalar head fixup; the
+        // length sweep covers below/at/above STREAM_MIN and odd tails
+        let src: Vec<f32> = (0..200).map(|i| i as f32 * 0.5 - 31.0).collect();
+        for isa in Isa::available() {
+            for off in 0..9usize {
+                for len in [0usize, 1, 7, 15, 16, 17, 40, 64, 191] {
+                    let mut dst = vec![f32::NAN; off + len];
+                    stream_copy(&mut dst[off..], &src[..len], isa);
+                    assert_eq!(&dst[off..], &src[..len], "isa={} off={off}", isa.name());
+                    assert!(dst[..off].iter().all(|x| x.is_nan()), "front canary");
+                }
+            }
+        }
+        stream_fence();
     }
 }

@@ -1,0 +1,286 @@
+//! Forced-ISA equivalence of the vectorized transform phase: the
+//! in-register tile transposes, the tiling gather/scatter fast paths,
+//! and the staged engine's streaming-store arena writes must match the
+//! scalar reference on every kernel set the host can execute
+//! (`Isa::available()` always includes `Scalar`, so on a plain x86-64
+//! or non-x86 host these tests degenerate to scalar-vs-scalar).
+//!
+//! Transposes and gather/scatter are pure permutations, so they are
+//! compared bit-for-bit.  Whole-codelet and whole-plan comparisons
+//! cross GEMM kernel sets (FMA vs separate multiply/add reassociate
+//! rounding differently), so those use close tolerances instead.
+
+use fftconv::conv::batch_wino::BatchSandwich;
+use fftconv::conv::{direct, ConvAlgorithm, ExecPolicy, LayerPlan, PlanOptions, Tensor4, TileGrid};
+use fftconv::fft::BatchDft;
+use fftconv::simd::transpose::{transpose, transpose_ld};
+use fftconv::simd::Isa;
+use fftconv::util::quickcheck::{assert_close, check, gen_conv_dims};
+use fftconv::util::threadpool::ThreadPool;
+use fftconv::util::Rng;
+
+/// Tile side lengths that sweep the transpose kernel classes: 4 and 6
+/// (pure scalar blocks), 8 (exactly one AVX2 block), 16 (exactly one
+/// AVX-512 block), 31 (full blocks plus both edge strips).
+const TILE_SIDES: [usize; 5] = [4, 6, 8, 16, 31];
+
+/// Residue tile counts a remainder panel can take: below, at, and just
+/// past the engine's NB = 32 transform batch.
+const RESIDUE_COUNTS: [usize; 5] = [1, 5, 31, 32, 33];
+
+fn naive_transpose(src: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut dst = vec![0.0f32; rows * cols];
+    for i in 0..rows {
+        for j in 0..cols {
+            dst[j * rows + i] = src[i * cols + j];
+        }
+    }
+    dst
+}
+
+fn close(tag: &str, a: &[f32], b: &[f32]) {
+    if let Err(e) = assert_close(a, b, 1e-5, 1e-4) {
+        panic!("{tag}: {e}");
+    }
+}
+
+#[test]
+fn tile_transposes_are_bit_for_bit_across_kernel_sets() {
+    let mut rng = Rng::new(71);
+    for t in TILE_SIDES {
+        let x = rng.vec_f32(t * t);
+        let want = naive_transpose(&x, t, t);
+        for isa in Isa::available() {
+            let mut got = vec![0.0f32; t * t];
+            transpose(&mut got, &x, t, t, isa);
+            assert_eq!(got, want, "t={t} isa={}", isa.name());
+        }
+    }
+}
+
+#[test]
+fn panel_transposes_are_exact_for_every_residue_count() {
+    // the staged gather and the fused panel scatter are strided
+    // transposes ((tile, element) <-> [element][tile]); sweep the
+    // residue tile counts against the scalar path, bit-for-bit
+    let mut rng = Rng::new(72);
+    for t in TILE_SIDES {
+        let p = t * t;
+        for nb in RESIDUE_COUNTS {
+            let x = rng.vec_f32(nb * p);
+            let stride = nb + 7; // panel wider than the batch (channel offset room)
+            let len = (p - 1) * stride + nb;
+            let mut want = vec![-3.0f32; len];
+            transpose_ld(&mut want, &x, nb, p, p, stride, Isa::Scalar);
+            for isa in Isa::available() {
+                let mut got = vec![-3.0f32; len];
+                transpose_ld(&mut got, &x, nb, p, p, stride, isa);
+                assert_eq!(got, want, "t={t} nb={nb} isa={}", isa.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn dft_codelets_match_forced_scalar_on_every_kernel_set() {
+    // (m, r) pairs chosen so t = m + r - 1 sweeps TILE_SIDES
+    for (m, r) in [(2usize, 3usize), (4, 3), (6, 3), (14, 3), (27, 5)] {
+        let mut sc = BatchDft::with_isa(m, r, Isa::Scalar);
+        let (t, th) = (sc.t, sc.th);
+        let p = th * t;
+        let nb = 5;
+        let mut rng = Rng::new((m * 100 + r) as u64);
+        let x = rng.vec_f32(nb * t * t);
+        let (mut wre, mut wim) = (vec![0.0f32; nb * p], vec![0.0f32; nb * p]);
+        sc.forward(&x, nb, t, &mut wre, &mut wim);
+        let mut wout = vec![0.0f32; nb * m * m];
+        sc.inverse_valid(&wre, &wim, nb, &mut wout);
+        for isa in Isa::available() {
+            let mut bd = BatchDft::with_isa(m, r, isa);
+            let (mut gre, mut gim) = (vec![0.0f32; nb * p], vec![0.0f32; nb * p]);
+            bd.forward(&x, nb, t, &mut gre, &mut gim);
+            let tag = format!("F({m},{r}) {}", isa.name());
+            close(&format!("{tag} fwd re"), &gre, &wre);
+            close(&format!("{tag} fwd im"), &gim, &wim);
+            let mut gout = vec![0.0f32; nb * m * m];
+            bd.inverse_valid(&gre, &gim, nb, &mut gout);
+            close(&format!("{tag} inv"), &gout, &wout);
+        }
+    }
+}
+
+#[test]
+fn sandwich_codelets_match_forced_scalar_on_every_kernel_set() {
+    let mut rng = Rng::new(73);
+    for t in TILE_SIDES {
+        let mat = rng.vec_f32(t * t);
+        let nb = 7;
+        let x = rng.vec_f32(nb * t * t);
+        let mut sc = BatchSandwich::with_isa(&mat, t, t, Isa::Scalar);
+        let mut want = vec![0.0f32; nb * t * t];
+        sc.apply(&x, nb, &mut want);
+        for isa in Isa::available() {
+            let mut bs = BatchSandwich::with_isa(&mat, t, t, isa);
+            let mut got = vec![0.0f32; nb * t * t];
+            bs.apply(&x, nb, &mut got);
+            close(&format!("sandwich t={t} {}", isa.name()), &got, &want);
+            // the panel form must be exactly its own apply, transposed
+            // into the strided layout — a pure permutation
+            let p = t * t;
+            let stride = nb + 3;
+            let mut panel = vec![0.0f32; p * stride];
+            bs.apply_panel(&x, nb, &mut panel, 0, stride);
+            for pp in 0..p {
+                for s in 0..nb {
+                    assert_eq!(
+                        panel[pp * stride + s].to_bits(),
+                        got[s * p + pp].to_bits(),
+                        "panel t={t} {} pp={pp} s={s}",
+                        isa.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn gather_scatter_property_matches_naive_reference() {
+    check("tile gather/scatter vs naive", 40, |rng| {
+        let d = gen_conv_dims(rng);
+        let g = TileGrid::new(d.h, d.w, d.m, d.r);
+        let plane = rng.vec_f32(d.h * d.w);
+        let mut tile = vec![f32::NAN; g.t * g.t];
+        for ti in 0..g.nh {
+            for tj in 0..g.nw {
+                g.gather(&plane, ti, tj, &mut tile);
+                for u in 0..g.t {
+                    for v in 0..g.t {
+                        let (i, j) = (ti * g.m + u, tj * g.m + v);
+                        let want = if i < g.h && j < g.w {
+                            plane[i * g.w + j]
+                        } else {
+                            0.0
+                        };
+                        let got = tile[u * g.t + v];
+                        if got.to_bits() != want.to_bits() {
+                            return Err(format!(
+                                "gather tile ({ti},{tj}) elem ({u},{v}): {got} vs {want}"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        // scatter: the valid sub-rectangle lands, the pad remainder drops
+        let mut got_p = vec![0.0f32; g.oh * g.ow];
+        let mut want_p = vec![0.0f32; g.oh * g.ow];
+        for ti in 0..g.nh {
+            for tj in 0..g.nw {
+                let otile = rng.vec_f32(g.m * g.m);
+                g.scatter(&otile, ti, tj, &mut got_p);
+                for u in 0..g.m {
+                    for v in 0..g.m {
+                        let (i, j) = (ti * g.m + u, tj * g.m + v);
+                        if i < g.oh && j < g.ow {
+                            want_p[i * g.ow + j] = otile[u * g.m + v];
+                        }
+                    }
+                }
+            }
+        }
+        if got_p != want_p {
+            return Err("scatter diverged from naive reference".to_string());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn edge_tiles_zero_exactly_the_fringe() {
+    // 13x11, m=4, r=3 (t=6): tile (1,1) is fully interior, tile (2,2)
+    // straddles both the bottom and the right image edge.  Values start
+    // at 1.0 so 0.0 unambiguously means padding; the NaN canary proves
+    // every slot is written (the fast path never skips the fringe).
+    let g = TileGrid::new(13, 11, 4, 3);
+    let plane: Vec<f32> = (0..13 * 11).map(|i| i as f32 + 1.0).collect();
+    let mut tile = vec![f32::NAN; 36];
+    g.gather(&plane, 1, 1, &mut tile);
+    for u in 0..6 {
+        for v in 0..6 {
+            assert_eq!(tile[u * 6 + v], plane[(4 + u) * 11 + 4 + v], "interior ({u},{v})");
+        }
+    }
+    let mut tile = vec![f32::NAN; 36];
+    g.gather(&plane, 2, 2, &mut tile);
+    for u in 0..6 {
+        for v in 0..6 {
+            let (i, j) = (8 + u, 8 + v);
+            let want = if i < 13 && j < 11 {
+                plane[i * 11 + j]
+            } else {
+                0.0
+            };
+            assert_eq!(tile[u * 6 + v], want, "edge ({u},{v})");
+        }
+    }
+}
+
+fn plan_with(algo: ConvAlgorithm, w: &Tensor4, h: usize, wd: usize, isa: Isa) -> [LayerPlan; 2] {
+    [ExecPolicy::Staged, ExecPolicy::Fused].map(|exec| {
+        LayerPlan::with_options(
+            algo,
+            w,
+            h,
+            wd,
+            4,
+            PlanOptions {
+                exec,
+                isa: Some(isa),
+                ..PlanOptions::default()
+            },
+        )
+    })
+}
+
+#[test]
+fn plans_match_forced_scalar_on_every_kernel_set() {
+    // staged exercises the streaming-store arena writes (and the fence
+    // before the join barrier); fused exercises the panel transposes —
+    // both compared per available kernel set against a forced-scalar
+    // plan on a shape with odd tile remainders on both axes
+    let (b, c, k, h, wd) = (3usize, 4usize, 5usize, 17usize, 15usize);
+    let x = Tensor4::random([b, c, h, wd], 700);
+    let w = Tensor4::random([k, c, 3, 3], 701);
+    let pool = ThreadPool::new(4);
+    let reference = direct::naive(&x, &w);
+    for algo in [
+        ConvAlgorithm::Winograd { m: 4 },
+        ConvAlgorithm::RegularFft { m: 6 },
+        ConvAlgorithm::GaussFft { m: 4 },
+    ] {
+        let wants = plan_with(algo, &w, h, wd, Isa::Scalar).map(|mut p| p.run(&x, Some(&pool)));
+        for want in &wants {
+            assert!(
+                want.max_abs_diff(&reference) < 2e-3 * reference.max_abs().max(1.0),
+                "{}: scalar plan is not a convolution",
+                algo.name()
+            );
+        }
+        for isa in Isa::available() {
+            let plans = plan_with(algo, &w, h, wd, isa);
+            for (mut plan, want) in plans.into_iter().zip(&wants) {
+                let got = plan.run(&x, Some(&pool));
+                let scale = want.max_abs().max(1.0);
+                assert!(
+                    got.max_abs_diff(want) < 1e-4 * scale,
+                    "{} {} {}: diverges by {}",
+                    algo.name(),
+                    plan.exec_mode().name(),
+                    isa.name(),
+                    got.max_abs_diff(want)
+                );
+            }
+        }
+    }
+}

@@ -119,7 +119,11 @@ fn measured_policy_times_both_pipelines_and_settles_warm() {
     assert!(snap.settled, "measured settles once samples are warm");
     let (ss, fs) = (snap.staged_secs.unwrap(), snap.fused_secs.unwrap());
     assert!(ss > 0.0 && fs > 0.0);
-    let faster = if fs < ss { ExecMode::Fused } else { ExecMode::Staged };
+    let faster = if fs < ss {
+        ExecMode::Fused
+    } else {
+        ExecMode::Staged
+    };
     assert_eq!(snap.resolved, faster, "verdict is the measured argmin");
     // a second, smaller bucket reuses the already-grown scratch, so its
     // very first batch is warm and settles immediately
@@ -328,6 +332,48 @@ fn set_machine_marks_settled_verdicts_stale_not_cleared() {
     let (ss, fs) = (snap.staged_secs.unwrap(), snap.fused_secs.unwrap());
     assert!(ss < 0.5, "staged stream re-measured, not old history");
     assert!(fs > 1e-6, "fused stream re-measured, not old history");
+}
+
+#[test]
+fn set_machine_reseeds_analytic_picks_from_calibrated_bandwidth() {
+    // Two live entries with opposite bandwidth-driven verdicts.  Under a
+    // memory-bound roofline the fused-vs-staged pick is decided purely
+    // by predicted DRAM bytes:
+    //  * 8x8 channels (V = 20 KB, cache-resident): fused moves ~67 KB vs
+    //    ~231 KB staged — Fused by 3.4x.
+    //  * 96x96 channels (V = 2.9 MB > 1 MB cache, re-streamed once per
+    //    fused panel): fused moves ~6.5 MB vs ~2.8 MB staged — Staged by
+    //    2.3x, with the panel still cache-feasible (17 tiles), so the
+    //    verdict is the bandwidth model's, not the feasibility cutoff's.
+    // The catalog bandwidth is absurdly high on purpose: if the reseed
+    // consulted it instead of the measured ceiling, every stage would
+    // look compute-bound and the small entry would not reseed to Fused.
+    let w_small = layer_weights(380);
+    let x_small = batch(2, 381);
+    let w_big = Tensor4::random([96, 96, 3, 3], 382);
+    let x_big = Tensor4::random([2, 96, 20, 20], 383);
+    let mut s = StaticScheduler::new(2);
+    let got = s.run_batch(ALGO, &x_small, &w_small);
+    assert_close(&got, &x_small, &w_small, "small-channel seed batch");
+    let got = s.run_batch(ALGO, &x_big, &w_big);
+    assert_close(&got, &x_big, &w_big, "big-channel seed batch");
+
+    // the operator re-probes: the machine carries a measured stream-triad
+    // bandwidth (1 MB/s stand-in for badly throttled DRAM) that the
+    // reseed must prefer over the catalog figure
+    let mut recal = Machine::new("recalibrated-host", 4, 2000.0, 512, 1 << 20, 1e6);
+    recal.mem_calibrated = Some(1e-3);
+    s.set_machine(recal);
+    assert_eq!(
+        s.tuning_for(ALGO, &x_small, &w_small).unwrap().analytic,
+        ExecMode::Fused,
+        "small-channel entry reseeds Fused under the measured ceiling"
+    );
+    assert_eq!(
+        s.tuning_for(ALGO, &x_big, &w_big).unwrap().analytic,
+        ExecMode::Staged,
+        "V-thrashing entry reseeds Staged under the measured ceiling"
+    );
 }
 
 #[test]

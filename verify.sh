@@ -21,6 +21,17 @@ else
     echo "clippy not installed; skipping lint"
 fi
 
+# cross-check the portable (non-x86) build: every x86 intrinsic block —
+# transpose kernels, streaming stores, GEMM micro-kernels — must stay
+# behind cfg(target_arch) with a scalar path that still compiles
+if command -v rustup >/dev/null 2>&1 \
+    && rustup target list --installed 2>/dev/null | grep -q '^aarch64-unknown-linux-gnu$'; then
+    echo "---- aarch64 cross-check (cargo check) ----"
+    cargo check --target aarch64-unknown-linux-gnu
+else
+    echo "aarch64-unknown-linux-gnu target not installed; skipping cross-check"
+fi
+
 if [[ "${1:-}" != "--quick" ]]; then
     # regenerates rust/BENCH_hotpaths.json (the perf trajectory record:
     # VGG-layer single-thread vs stage-parallel, plan cold vs warm, fused
@@ -42,6 +53,9 @@ if [[ "${1:-}" != "--quick" ]]; then
             BENCH_hotpaths.json | tail -12 || true
         echo "---- decay: drift events / expiries / flips ----"
         grep -E '"(policy|rel_tol|drift_events|expiries|remeasurements|flips|shadow_batches|resolved_after)"' \
+            BENCH_hotpaths.json || true
+        echo "---- transform phase: achieved GB/s vs calibrated ceiling ----"
+        grep -E '"(bw_ceiling_gbps|input_ms|output_ms|input_gbps|output_gbps|bw_attainment_pct)"' \
             BENCH_hotpaths.json || true
     fi
 fi
