@@ -14,18 +14,13 @@ use fftconv::conv::{
     self, ConvAlgorithm, ConvProblem, ExecPolicy, LayerPlan, PlanOptions, Tensor4,
 };
 use fftconv::coordinator::{ConvRequest, ConvService, DecayPolicy, StaticScheduler, TuningPolicy};
+use fftconv::nets::graph::{LayerSpec, NetworkGraph};
 use std::time::Instant;
 
 fn main() {
     // a small VGG-ish layer: 32 -> 32 channels, 34x34 input, 3x3 kernels
-    let problem = ConvProblem {
-        batch: 2,
-        c_in: 32,
-        c_out: 32,
-        h: 34,
-        w: 34,
-        r: 3,
-    };
+    // (unit stride, no padding; ConvProblem::with_geometry adds both)
+    let problem = ConvProblem::unit(2, 32, 32, 34, 34, 3);
     let x = Tensor4::random(problem.input_shape(), 1);
     let w = Tensor4::random(problem.weight_shape(), 2);
 
@@ -196,4 +191,42 @@ fn main() {
     // errors are typed values, not panics or strings
     let err = ConvRequest::new(conv1, Tensor4::zeros([2, 1, 1, 1])).unwrap_err();
     println!("  structured error demo: {err}");
+
+    // --- serving a whole network -----------------------------------------
+    // One registration compiles a full network: per-layer algorithms are
+    // resolved (pin or roofline), every plan is warmed once, and a run
+    // flows layer N's output into layer N+1 through two grow-only
+    // ping-pong arenas — no per-layer round trip, no steady-state
+    // allocation (docs/ARCHITECTURE.md §1).  Strided and 1x1 layers are
+    // first-class: the stem below runs Direct, the head runs the 1x1
+    // GEMM fast path, the 3x3 bodies run a tiled transform.
+    println!("\nwhole-network serving (register_network + submit_network):");
+    let graph = NetworkGraph::new("demo", 3, 16, 16)
+        .layer(LayerSpec::strided("stem", 8, 3, 2, 1)) // 16 -> 8, Direct
+        .layer(LayerSpec::conv("body1", 16, 3, 1))     // 8 -> 8, tiled
+        .layer(LayerSpec::conv("body2", 16, 3, 1))     // 8 -> 8, tiled
+        .layer(LayerSpec::pointwise("head", 10));      // 1x1 GEMM path
+    let net_weights: Vec<Tensor4> = graph
+        .problems(1)
+        .expect("valid chain")
+        .iter()
+        .enumerate()
+        .map(|(i, p)| Tensor4::random(p.weight_shape(), 60 + i as u64))
+        .collect();
+    let net = svc
+        .register_network("demo", graph, net_weights, 2)
+        .expect("fresh name, matching weights");
+    for layer in svc.network(net).unwrap().net.layers() {
+        println!("  layer {:8} -> {}", layer.name, layer.algo.name());
+    }
+    let builds_before = svc.plan_builds();
+    let img = Tensor4::random([1, 3, 16, 16], 70);
+    let ticket = svc.submit_network(net, img).expect("matching input shape");
+    svc.flush();
+    let resp = svc.take(ticket).expect("executed");
+    println!(
+        "  output {:?}, plans warmed at registration: {} new builds serving",
+        resp.output.shape,
+        svc.plan_builds() - builds_before
+    );
 }

@@ -23,9 +23,9 @@ fn main() {
 
     // three registered layers of different shapes
     let specs = [
-        ("small", ConvProblem { batch: 8, c_in: 16, c_out: 16, h: 18, w: 18, r: 3 }),
-        ("wide", ConvProblem { batch: 8, c_in: 64, c_out: 32, h: 14, w: 14, r: 3 }),
-        ("fivebyfive", ConvProblem { batch: 8, c_in: 16, c_out: 32, h: 15, w: 15, r: 5 }),
+        ("small", ConvProblem::unit(8, 16, 16, 18, 18, 3)),
+        ("wide", ConvProblem::unit(8, 64, 32, 14, 14, 3)),
+        ("fivebyfive", ConvProblem::unit(8, 16, 32, 15, 15, 5)),
     ];
     let handles: Vec<LayerId> = specs
         .iter()

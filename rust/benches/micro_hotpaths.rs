@@ -19,6 +19,7 @@ use fftconv::model::machine::{calibrate_bandwidth, calibrate_isa, xeon_gold};
 use fftconv::model::roofline::fused_layer_time;
 use fftconv::model::select::{choose_exec, measure_exec};
 use fftconv::model::stages::{LayerShape, Method};
+use fftconv::nets::graph::{alexnet, vgg16, CompiledNetwork};
 use fftconv::simd::Isa;
 use fftconv::util::bench::{bench, Table};
 use fftconv::util::json::Json;
@@ -245,14 +246,7 @@ fn main() {
             .max_batch(8)
             .max_wait(Duration::from_secs(3600))
             .build();
-        let p = ConvProblem {
-            batch: 8,
-            c_in: 4,
-            c_out: 4,
-            h: 12,
-            w: 12,
-            r: 3,
-        };
+        let p = ConvProblem::unit(8, 4, 4, 12, 12, 3);
         let layer = svc
             .register("bench", p, Tensor4::random(p.weight_shape(), 14))
             .expect("register");
@@ -674,6 +668,92 @@ fn main() {
             Json::Str(snap.resolved.name().to_string()),
         );
         json.insert("decay".to_string(), Json::Obj(obj));
+    }
+
+    // ---- whole-network graph executor: per-net serving cost ----
+    // The `network` block of the BENCH schema (docs/ARCHITECTURE.md):
+    // host-scaled VGG-16 and AlexNet compiled once and run batched
+    // through the ping-pong arenas — per-net total, the per-layer
+    // breakdown from the executor's own timers, and the inter-layer DRAM
+    // bytes the arena dataflow saves against a caller round-trip (two
+    // f32 copies of every interior activation).
+    {
+        let workers = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let mut s = StaticScheduler::new(workers);
+        let b = 4usize;
+        let nets = [("vgg16", vgg16(32, 8)), ("alexnet", alexnet(35, 4))];
+        let mut block = BTreeMap::new();
+        for (tag, graph) in nets {
+            let problems = graph.problems(b).expect("host-scaled graph");
+            let weights: Vec<Tensor4> = problems
+                .iter()
+                .enumerate()
+                .map(|(i, p)| Tensor4::random(p.weight_shape(), 50 + i as u64))
+                .collect();
+            let mut net =
+                CompiledNetwork::compile(&graph, weights, b, &mut s).expect("compile");
+            let x = Tensor4::random(net.input_shape(b), 60);
+            let r = bench("net", 20, || {
+                std::hint::black_box(net.run(&mut s, &x));
+            });
+            let saved = net.interlayer_bytes_saved(b);
+            // per-layer breakdown from the executor's last run, ordered
+            let layer_ms: Vec<(String, f64)> = net
+                .layers()
+                .iter()
+                .zip(&net.last_layer_secs)
+                .map(|(l, secs)| (l.name.clone(), secs * 1e3))
+                .collect();
+            let (slow_name, slow_ms) = layer_ms
+                .iter()
+                .max_by(|a, b| a.1.total_cmp(&b.1))
+                .map(|(n, m)| (n.clone(), *m))
+                .expect("non-empty network");
+            t.row(vec![
+                format!("net-{tag}"),
+                format!(
+                    "B{b} {} layers, {:.1}MB arena-saved",
+                    net.layers().len(),
+                    saved as f64 / 1e6
+                ),
+                format!("{:.0}", r.median.as_secs_f64() * 1e6),
+                "-".into(),
+            ]);
+            t.row(vec![
+                format!("net-{tag}-slowest"),
+                slow_name.clone(),
+                format!("{:.0}", slow_ms * 1e3),
+                "-".into(),
+            ]);
+            let mut obj = BTreeMap::new();
+            obj.insert("batch".to_string(), Json::Num(b as f64));
+            obj.insert("layers".to_string(), Json::Num(net.layers().len() as f64));
+            obj.insert("total_ms".to_string(), Json::Num(r.median_ms()));
+            obj.insert(
+                "interlayer_bytes_saved".to_string(),
+                Json::Num(saved as f64),
+            );
+            obj.insert("slowest_layer".to_string(), Json::Str(slow_name));
+            obj.insert(
+                "per_layer_ms".to_string(),
+                Json::Arr(
+                    layer_ms
+                        .iter()
+                        .map(|(name, ms)| {
+                            let mut l = BTreeMap::new();
+                            l.insert("layer".to_string(), Json::Str(name.clone()));
+                            l.insert("ms".to_string(), Json::Num(*ms));
+                            Json::Obj(l)
+                        })
+                        .collect(),
+                ),
+            );
+            block.insert(tag.to_string(), Json::Obj(obj));
+            net.discard(&mut s);
+        }
+        json.insert("network".to_string(), Json::Obj(block));
     }
 
     t.emit("micro_hotpaths");

@@ -1,63 +1,73 @@
-//! Direct convolution baselines.
+//! Direct convolution baselines — and the repo's single shared oracle.
 //!
-//! * [`naive`] — textbook 7-loop direct convolution; the correctness
-//!   oracle every other algorithm is validated against.
+//! * [`reference`] — textbook direct convolution with first-class stride
+//!   and zero-padding; THE correctness oracle every other algorithm,
+//!   execution mode, and the whole-network graph executor are validated
+//!   against ([`naive`] is its unit-geometry shorthand).
 //! * [`im2col`] — direct convolution lowered to one big GEMM (the
 //!   "optimized direct" comparator standing in for MKL-DNN's direct
 //!   implementation in Figs. 1/6/7; DESIGN.md §3).
+//! * [`conv1x1`] — the pointwise fast path: per-pixel GEMM with no tile
+//!   transforms and (at unit stride, zero pad) no patch materialization,
+//!   because the image plane already is the (C x HW) GEMM operand.
 
 use super::gemm::gemm_acc;
 use super::tensor::Tensor4;
+use super::ConvProblem;
 
 /// out[b,k,i,j] = sum_{c,u,v} x[b,c,i+u,j+v] * w[k,c,u,v]
+/// (unit stride, no padding — shorthand for [`reference`] on the paper's
+/// benchmark geometry).
 pub fn naive(x: &Tensor4, w: &Tensor4) -> Tensor4 {
     let [b, c, h, wd] = x.shape;
     let [k, c2, r, r2] = w.shape;
     assert_eq!(c, c2, "channel mismatch");
     assert_eq!(r, r2, "non-square kernel");
-    let (oh, ow) = (h - r + 1, wd - r + 1);
-    let mut out = Tensor4::zeros([b, k, oh, ow]);
-    for bi in 0..b {
-        for ki in 0..k {
+    reference(&ConvProblem::unit(b, c, k, h, wd, r), x, w)
+}
+
+/// The shared oracle: textbook direct convolution of a fully specified
+/// [`ConvProblem`] (stride, zero-padding, 1x1 all supported).
+///
+/// out[b,k,i,j] = sum_{c,u,v} x[b,c,i*s+u-p,j*s+v-p] * w[k,c,u,v]
+/// with x read as zero outside its bounds.
+///
+/// Every differential suite (`fused_equivalence`, `transform_simd`,
+/// `network_e2e`, `shape_sweep`) diffs against this one function — no
+/// private reference copies.
+pub fn reference(p: &ConvProblem, x: &Tensor4, w: &Tensor4) -> Tensor4 {
+    assert_eq!(x.shape, p.input_shape(), "input/problem mismatch");
+    assert_eq!(w.shape, p.weight_shape(), "weight/problem mismatch");
+    assert!(p.geometry_valid(), "degenerate geometry: {p:?}");
+    let (oh, ow) = (p.out_h(), p.out_w());
+    let mut out = Tensor4::zeros(p.output_shape());
+    for bi in 0..p.batch {
+        for ki in 0..p.c_out {
             let oplane = out.plane_mut(bi, ki);
-            for ci in 0..c {
-                let xoff = ((bi * c + ci) * h) * wd;
-                let xplane = &x.data[xoff..xoff + h * wd];
-                for u in 0..r {
-                    for v in 0..r {
-                        let wv = w.at(ki, ci, u, v);
-                        if wv == 0.0 {
-                            continue;
-                        }
-                        for i in 0..oh {
-                            let xrow = &xplane[(i + u) * wd + v..(i + u) * wd + v + ow];
-                            let orow = &mut oplane[i * ow..(i + 1) * ow];
-                            for (o, &xv) in orow.iter_mut().zip(xrow) {
-                                *o += wv * xv;
-                            }
-                        }
-                    }
-                }
-            }
+            conv_rows(x, w, p.stride, p.pad, bi, ki, 0..oh, oplane);
         }
     }
+    debug_assert_eq!(out.data.len(), p.batch * p.c_out * oh * ow);
     out
 }
 
 /// Direct convolution of output rows `rows` of plane (bi, ki) into `dst`
 /// (`rows.len() * ow` pixels) — the shardable unit the zero-copy scheduler
-/// hands to each worker as a disjoint `&mut` output slice.
+/// hands to each worker as a disjoint `&mut` output slice, generalized to
+/// stride `s` and symmetric zero-padding `pad`.
 pub fn conv_rows(
     x: &Tensor4,
     w: &Tensor4,
+    s: usize,
+    pad: usize,
     bi: usize,
     ki: usize,
     rows: std::ops::Range<usize>,
     dst: &mut [f32],
 ) {
-    let [_, c, _, wd] = x.shape;
+    let [_, c, h, wd] = x.shape;
     let [_, _, r, _] = w.shape;
-    let ow = wd - r + 1;
+    let ow = (wd + 2 * pad - r) / s + 1;
     debug_assert_eq!(dst.len(), rows.len() * ow);
     dst.fill(0.0);
     for ci in 0..c {
@@ -69,10 +79,19 @@ pub fn conv_rows(
                     continue;
                 }
                 for (oi, i) in rows.clone().enumerate() {
-                    let xrow = &xplane[(i + u) * wd + v..(i + u) * wd + v + ow];
+                    // source row i*s + u - pad; skip rows in the pad halo
+                    let si = (i * s + u) as isize - pad as isize;
+                    if si < 0 || si >= h as isize {
+                        continue;
+                    }
+                    let xrow = &xplane[si as usize * wd..(si as usize + 1) * wd];
                     let orow = &mut dst[oi * ow..(oi + 1) * ow];
-                    for (o, &xv) in orow.iter_mut().zip(xrow) {
-                        *o += wv * xv;
+                    for (j, o) in orow.iter_mut().enumerate() {
+                        let sj = (j * s + v) as isize - pad as isize;
+                        if sj < 0 || sj >= wd as isize {
+                            continue;
+                        }
+                        *o += wv * xrow[sj as usize];
                     }
                 }
             }
@@ -97,12 +116,15 @@ pub fn weights_matrix(w: &Tensor4) -> Vec<f32> {
     wm
 }
 
-/// im2col + GEMM for one image: patches (OH*OW x Cr^2) @ wm (Cr^2 x K),
-/// written into `dst` as a (K, OH, OW) plane block.  Per-image so the
-/// scheduler can shard a batch without copying sub-batches.
-pub fn im2col_image(x: &Tensor4, wm: &[f32], k: usize, r: usize, bi: usize, dst: &mut [f32]) {
+/// im2col + GEMM for one image of a fully specified problem: patches
+/// (OH*OW x Cr^2) @ wm (Cr^2 x K), written into `dst` as a (K, OH, OW)
+/// plane block.  Per-image so the scheduler can shard a batch without
+/// copying sub-batches.  Patch gathering honors stride and zero-padding
+/// (out-of-bounds patch elements stay zero).
+pub fn im2col_image(p: &ConvProblem, x: &Tensor4, wm: &[f32], bi: usize, dst: &mut [f32]) {
     let [_, c, h, wd] = x.shape;
-    let (oh, ow) = (h - r + 1, wd - r + 1);
+    let (r, s, pad, k) = (p.r, p.stride, p.pad, p.c_out);
+    let (oh, ow) = (p.out_h(), p.out_w());
     let patch = c * r * r;
     debug_assert_eq!(wm.len(), patch * k);
     debug_assert_eq!(dst.len(), k * oh * ow);
@@ -113,9 +135,19 @@ pub fn im2col_image(x: &Tensor4, wm: &[f32], k: usize, r: usize, bi: usize, dst:
             let row = (i * ow + j) * patch;
             for ci in 0..c {
                 for u in 0..r {
-                    let src = x.idx(bi, ci, i + u, j);
+                    let si = (i * s + u) as isize - pad as isize;
+                    if si < 0 || si >= h as isize {
+                        continue; // padded patch row stays zero
+                    }
                     let d = row + (ci * r + u) * r;
-                    cols[d..d + r].copy_from_slice(&x.data[src..src + r]);
+                    // clip the r-wide patch row against the image columns
+                    for v in 0..r {
+                        let sj = (j * s + v) as isize - pad as isize;
+                        if sj < 0 || sj >= wd as isize {
+                            continue;
+                        }
+                        cols[d + v] = x.data[x.idx(bi, ci, si as usize, sj as usize)];
+                    }
                 }
             }
         }
@@ -133,17 +165,83 @@ pub fn im2col_image(x: &Tensor4, wm: &[f32], k: usize, r: usize, bi: usize, dst:
     }
 }
 
-/// Direct convolution as im2col + GEMM: patches (BHW x Cr^2) @ (Cr^2 x K).
+/// Direct convolution as im2col + GEMM: patches (BHW x Cr^2) @ (Cr^2 x K),
+/// unit geometry.
 pub fn im2col(x: &Tensor4, w: &Tensor4) -> Tensor4 {
     let [b, c, h, wd] = x.shape;
     let [k, c2, r, _] = w.shape;
     assert_eq!(c, c2);
-    let (oh, ow) = (h - r + 1, wd - r + 1);
+    im2col_problem(&ConvProblem::unit(b, c, k, h, wd, r), x, w)
+}
+
+/// im2col + GEMM honoring the problem's stride and padding.
+pub fn im2col_problem(p: &ConvProblem, x: &Tensor4, w: &Tensor4) -> Tensor4 {
+    assert_eq!(x.shape, p.input_shape());
+    assert_eq!(w.shape, p.weight_shape());
     let wm = weights_matrix(w);
-    let mut out = Tensor4::zeros([b, k, oh, ow]);
-    let per = k * oh * ow;
-    for bi in 0..b {
-        im2col_image(x, &wm, k, r, bi, &mut out.data[bi * per..(bi + 1) * per]);
+    let (oh, ow) = (p.out_h(), p.out_w());
+    let mut out = Tensor4::zeros(p.output_shape());
+    let per = p.c_out * oh * ow;
+    for bi in 0..p.batch {
+        im2col_image(p, x, &wm, bi, &mut out.data[bi * per..(bi + 1) * per]);
+    }
+    out
+}
+
+/// The 1x1 GEMM fast path for one image, written into `dst` as a
+/// (K, OH, OW) plane block (the scheduler's per-image shardable unit).
+///
+/// At unit stride / zero pad the output plane block is exactly
+/// W (K x C) @ X (C x HW) — both operands are the tensors' native
+/// layouts, so nothing is gathered, transformed, or transposed.  Strided
+/// or padded 1x1 problems first subsample the image into a (C x OH*OW)
+/// panel (zeros in the pad halo), then run the same GEMM.
+pub fn conv1x1_image(p: &ConvProblem, x: &Tensor4, bi: usize, w: &Tensor4, dst: &mut [f32]) {
+    let [_, c, h, wd] = x.shape;
+    let (k, s, pad) = (p.c_out, p.stride, p.pad);
+    let (oh, ow) = (p.out_h(), p.out_w());
+    debug_assert_eq!(p.r, 1, "conv1x1 requires 1x1 kernels");
+    debug_assert_eq!(dst.len(), k * oh * ow);
+    dst.fill(0.0);
+    if s == 1 && pad == 0 {
+        // dst (K x HW) += w (K x C) @ x-plane-block (C x HW), in place
+        let xoff = bi * c * h * wd;
+        let xmat = &x.data[xoff..xoff + c * h * wd];
+        gemm_acc(dst, &w.data, xmat, k, c, h * wd);
+        return;
+    }
+    let pix = oh * ow;
+    let mut panel = vec![0.0f32; c * pix];
+    for ci in 0..c {
+        let xplane = x.plane(bi, ci);
+        let prow = &mut panel[ci * pix..(ci + 1) * pix];
+        for i in 0..oh {
+            let si = (i * s) as isize - pad as isize;
+            if si < 0 || si >= h as isize {
+                continue;
+            }
+            for j in 0..ow {
+                let sj = (j * s) as isize - pad as isize;
+                if sj < 0 || sj >= wd as isize {
+                    continue;
+                }
+                prow[i * ow + j] = xplane[si as usize * wd + sj as usize];
+            }
+        }
+    }
+    gemm_acc(dst, &w.data, &panel, k, c, pix);
+}
+
+/// 1x1 convolution over the whole batch via [`conv1x1_image`].
+pub fn conv1x1(p: &ConvProblem, x: &Tensor4, w: &Tensor4) -> Tensor4 {
+    assert_eq!(p.r, 1, "conv1x1 requires 1x1 kernels");
+    assert_eq!(x.shape, p.input_shape());
+    assert_eq!(w.shape, p.weight_shape());
+    let (oh, ow) = (p.out_h(), p.out_w());
+    let mut out = Tensor4::zeros(p.output_shape());
+    let per = p.c_out * oh * ow;
+    for bi in 0..p.batch {
+        conv1x1_image(p, x, bi, w, &mut out.data[bi * per..(bi + 1) * per]);
     }
     out
 }
@@ -175,6 +273,29 @@ mod tests {
     }
 
     #[test]
+    fn padded_known_values() {
+        // ones image, ones 3x3 kernel, pad 1: corner output sees a 2x2
+        // window (4), edges 2x3 (6), interior 3x3 (9)
+        let p = ConvProblem::with_geometry(1, 1, 1, 3, 3, 3, 1, 1);
+        let x = Tensor4::from_vec([1, 1, 3, 3], vec![1.0; 9]);
+        let w = Tensor4::from_vec([1, 1, 3, 3], vec![1.0; 9]);
+        let y = reference(&p, &x, &w);
+        assert_eq!(y.shape, [1, 1, 3, 3]);
+        assert_eq!(y.data, vec![4.0, 6.0, 4.0, 6.0, 9.0, 6.0, 4.0, 6.0, 4.0]);
+    }
+
+    #[test]
+    fn strided_known_values() {
+        // 1..=25 image, delta kernel, stride 2: picks every other pixel
+        let p = ConvProblem::with_geometry(1, 1, 1, 5, 5, 1, 2, 0);
+        let x = Tensor4::from_vec([1, 1, 5, 5], (1..=25).map(|v| v as f32).collect());
+        let w = Tensor4::from_vec([1, 1, 1, 1], vec![1.0]);
+        let y = reference(&p, &x, &w);
+        assert_eq!(y.shape, [1, 1, 3, 3]);
+        assert_eq!(y.data, vec![1.0, 3.0, 5.0, 11.0, 13.0, 15.0, 21.0, 23.0, 25.0]);
+    }
+
+    #[test]
     fn im2col_matches_naive() {
         for (b, c, k, h, w_, r) in [(1, 1, 1, 5, 5, 3), (2, 3, 4, 8, 7, 3), (1, 4, 2, 6, 6, 5)] {
             let x = Tensor4::random([b, c, h, w_], 42);
@@ -182,6 +303,44 @@ mod tests {
             let a = naive(&x, &w);
             let bb = im2col(&x, &w);
             assert!(a.max_abs_diff(&bb) < 1e-3, "({b},{c},{k},{h},{w_},{r})");
+        }
+    }
+
+    #[test]
+    fn im2col_matches_oracle_on_strided_padded_problems() {
+        for (h, w_, r, s, pad) in [
+            (8, 7, 3, 2, 1),
+            (11, 11, 5, 2, 2),
+            (9, 9, 3, 4, 0),
+            (6, 8, 1, 2, 0),
+            (7, 7, 3, 1, 2),
+        ] {
+            let p = ConvProblem::with_geometry(2, 3, 4, h, w_, r, s, pad);
+            let x = Tensor4::random(p.input_shape(), 77);
+            let w = Tensor4::random(p.weight_shape(), 78);
+            let want = reference(&p, &x, &w);
+            let got = im2col_problem(&p, &x, &w);
+            assert!(
+                got.max_abs_diff(&want) < 1e-3,
+                "h={h} w={w_} r={r} s={s} pad={pad}"
+            );
+        }
+    }
+
+    #[test]
+    fn conv1x1_matches_oracle() {
+        for (h, w_, s, pad) in [(6, 6, 1, 0), (7, 5, 2, 0), (9, 9, 4, 0), (5, 5, 1, 1), (8, 6, 2, 1)] {
+            let p = ConvProblem::with_geometry(2, 3, 4, h, w_, 1, s, pad);
+            let x = Tensor4::random(p.input_shape(), 55);
+            let w = Tensor4::random(p.weight_shape(), 56);
+            let want = reference(&p, &x, &w);
+            let got = conv1x1(&p, &x, &w);
+            assert_eq!(got.shape, want.shape);
+            assert!(
+                got.max_abs_diff(&want) < 1e-4,
+                "h={h} w={w_} s={s} pad={pad}: {}",
+                got.max_abs_diff(&want)
+            );
         }
     }
 
@@ -197,13 +356,30 @@ mod tests {
                 let mid = oh / 2;
                 let mut top = vec![0.0f32; mid * ow];
                 let mut bot = vec![0.0f32; (oh - mid) * ow];
-                conv_rows(&x, &w, bi, ki, 0..mid, &mut top);
-                conv_rows(&x, &w, bi, ki, mid..oh, &mut bot);
+                conv_rows(&x, &w, 1, 0, bi, ki, 0..mid, &mut top);
+                conv_rows(&x, &w, 1, 0, bi, ki, mid..oh, &mut bot);
                 let plane = want.plane(bi, ki);
                 assert_eq!(&plane[..mid * ow], &top[..]);
                 assert_eq!(&plane[mid * ow..], &bot[..]);
             }
         }
+    }
+
+    #[test]
+    fn conv_rows_shards_strided_padded_planes() {
+        let p = ConvProblem::with_geometry(1, 2, 2, 9, 9, 3, 2, 1);
+        let x = Tensor4::random(p.input_shape(), 46);
+        let w = Tensor4::random(p.weight_shape(), 47);
+        let want = reference(&p, &x, &w);
+        let [_, _, oh, ow] = want.shape;
+        let mid = oh / 2;
+        let mut top = vec![0.0f32; mid * ow];
+        let mut bot = vec![0.0f32; (oh - mid) * ow];
+        conv_rows(&x, &w, 2, 1, 0, 1, 0..mid, &mut top);
+        conv_rows(&x, &w, 2, 1, 0, 1, mid..oh, &mut bot);
+        let plane = want.plane(0, 1);
+        assert_eq!(&plane[..mid * ow], &top[..]);
+        assert_eq!(&plane[mid * ow..], &bot[..]);
     }
 
     #[test]

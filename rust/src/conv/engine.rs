@@ -143,6 +143,9 @@ pub struct PlanOptions {
     /// environment override).  Either way the value is clamped to what
     /// the host can execute and bound into the plan at construction.
     pub isa: Option<Isa>,
+    /// the problem's symmetric zero-padding — the tiling grid gathers
+    /// the halo as zeros, so the input tensor is never padded in memory
+    pub pad: usize,
 }
 
 impl Default for PlanOptions {
@@ -151,6 +154,7 @@ impl Default for PlanOptions {
             exec: ExecPolicy::Auto,
             fused_budget: DEFAULT_FUSED_BUDGET,
             isa: None,
+            pad: 0,
         }
     }
 }
@@ -507,7 +511,7 @@ impl LayerPlan {
             ConvAlgorithm::GaussFft { .. } => Some(FftVariant::Gauss),
             _ => unreachable!("tile_m() returned Some for a non-tiled algorithm"),
         };
-        let grid = TileGrid::new(h, w, m, r);
+        let grid = TileGrid::with_pad(h, w, m, r, opts.pad);
         let t = m + r - 1;
         let nworkers = nworkers.max(1);
         let gauss = variant == Some(FftVariant::Gauss);
@@ -618,12 +622,18 @@ impl LayerPlan {
         [b, self.k, self.grid.oh, self.grid.ow]
     }
 
-    /// Does this plan serve (algo, input shape, these weights)?
-    pub fn matches(&self, algo: ConvAlgorithm, x: &Tensor4, weights_fp: u64) -> bool {
+    /// The symmetric zero-padding this plan's grid gathers.
+    pub fn pad(&self) -> usize {
+        self.grid.pad
+    }
+
+    /// Does this plan serve (algo, input shape, padding, these weights)?
+    pub fn matches(&self, algo: ConvAlgorithm, x: &Tensor4, pad: usize, weights_fp: u64) -> bool {
         self.algo == algo
             && x.shape[1] == self.c
             && x.shape[2] == self.h
             && x.shape[3] == self.w
+            && self.grid.pad == pad
             && self.weights_fp == weights_fp
     }
 
@@ -1242,7 +1252,7 @@ pub fn run_cached(
 ) -> Tensor4 {
     let fp = weights_fingerprint(w);
     let stale = match cache {
-        Some(plan) => !plan.matches(algo, x, fp),
+        Some(plan) => !plan.matches(algo, x, 0, fp),
         None => true,
     };
     if stale {

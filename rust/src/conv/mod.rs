@@ -16,10 +16,16 @@ pub use fft_conv::FftVariant;
 pub use tensor::Tensor4;
 pub use tiles::TileGrid;
 
-/// A convolution layer problem: x (B,C,H,W) * w (K,C,r,r), valid, unit
-/// stride (the layers the paper benchmarks; strided layers like AlexNet-1
-/// are excluded there too).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// A convolution layer problem: x (B,C,H,W) * w (K,C,r,r) with symmetric
+/// zero-padding `pad` and square stride `stride`.
+///
+/// `stride == 1, pad == 0` is the valid unit-stride convolution the paper
+/// benchmarks; VGG's pad=1 layers and AlexNet's strided layer 1 are
+/// expressed explicitly instead of being pre-baked into spatial sizes.
+/// The tiled transform algorithms (Winograd/FFT) support any `pad` but
+/// require `stride == 1`; strided problems run through the direct,
+/// im2col, and 1x1-GEMM paths.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct ConvProblem {
     pub batch: usize,
     pub c_in: usize,
@@ -27,15 +33,62 @@ pub struct ConvProblem {
     pub h: usize,
     pub w: usize,
     pub r: usize,
+    /// square output stride (>= 1)
+    pub stride: usize,
+    /// symmetric zero-padding on every spatial edge
+    pub pad: usize,
 }
 
 impl ConvProblem {
+    /// Unit-stride, unpadded problem (the paper's benchmark geometry).
+    pub const fn unit(batch: usize, c_in: usize, c_out: usize, h: usize, w: usize, r: usize) -> ConvProblem {
+        ConvProblem {
+            batch,
+            c_in,
+            c_out,
+            h,
+            w,
+            r,
+            stride: 1,
+            pad: 0,
+        }
+    }
+
+    /// Fully general problem with explicit stride and padding.
+    pub const fn with_geometry(
+        batch: usize,
+        c_in: usize,
+        c_out: usize,
+        h: usize,
+        w: usize,
+        r: usize,
+        stride: usize,
+        pad: usize,
+    ) -> ConvProblem {
+        ConvProblem {
+            batch,
+            c_in,
+            c_out,
+            h,
+            w,
+            r,
+            stride,
+            pad,
+        }
+    }
+
+    /// True when the padded image covers the kernel and the stride is
+    /// positive — the geometry precondition every execution path assumes.
+    pub fn geometry_valid(&self) -> bool {
+        self.stride >= 1 && self.h + 2 * self.pad >= self.r && self.w + 2 * self.pad >= self.r
+    }
+
     pub fn out_h(&self) -> usize {
-        self.h - self.r + 1
+        (self.h + 2 * self.pad - self.r) / self.stride + 1
     }
 
     pub fn out_w(&self) -> usize {
-        self.w - self.r + 1
+        (self.w + 2 * self.pad - self.r) / self.stride + 1
     }
 
     pub fn input_shape(&self) -> [usize; 4] {
@@ -51,21 +104,36 @@ impl ConvProblem {
     }
 
     /// FLOPs of the direct algorithm (2 ops per MAC) — the paper's
-    /// baseline work measure.
+    /// baseline work measure.  Stride shrinks the output plane, so the
+    /// count falls with `stride^2`; padding grows it.
     pub fn direct_flops(&self) -> usize {
         2 * self.batch * self.c_out * self.c_in * self.out_h() * self.out_w() * self.r * self.r
+    }
+
+    /// DRAM bytes of one pass assuming no reuse beyond the caches:
+    /// input read + weights read + output write (f32).  The roofline
+    /// estimators for the non-tiled paths build on this.
+    pub fn io_bytes(&self) -> usize {
+        4 * (self.batch * self.c_in * self.h * self.w
+            + self.c_out * self.c_in * self.r * self.r
+            + self.batch * self.c_out * self.out_h() * self.out_w())
     }
 }
 
 /// The algorithms under study (Fig. 1's five bars, minus the vendor
-/// libraries we substitute per DESIGN.md §3).  `Hash` so the scheduler's
-/// persistent plan cache can key on the algorithm.
+/// libraries we substitute per DESIGN.md §3), plus the 1x1 fast path the
+/// whole-network graphs need.  `Hash` so the scheduler's persistent plan
+/// cache can key on the algorithm.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum ConvAlgorithm {
     /// Textbook direct convolution (correctness oracle).
     Direct,
     /// Direct convolution via im2col + GEMM (optimized-direct comparator).
     Im2col,
+    /// 1x1 ("pointwise") convolution as a per-pixel GEMM — no tile
+    /// transforms, no patch materialization at unit stride: the image is
+    /// already the (C x HW) operand.
+    Gemm1x1,
     /// Winograd F(m^2, r^2).
     Winograd { m: usize },
     /// Regular-FFT 𝔉(m^2, r^2).
@@ -79,6 +147,7 @@ impl ConvAlgorithm {
         match self {
             ConvAlgorithm::Direct => "direct".into(),
             ConvAlgorithm::Im2col => "im2col".into(),
+            ConvAlgorithm::Gemm1x1 => "gemm_1x1".into(),
             ConvAlgorithm::Winograd { m } => format!("winograd(m={m})"),
             ConvAlgorithm::RegularFft { m } => format!("regular_fft(m={m})"),
             ConvAlgorithm::GaussFft { m } => format!("gauss_fft(m={m})"),
@@ -94,17 +163,71 @@ impl ConvAlgorithm {
             _ => None,
         }
     }
+
+    /// Can this algorithm execute the problem's geometry?  The tiled
+    /// transforms require unit stride; `Gemm1x1` requires r == 1.
+    pub fn supports(&self, p: &ConvProblem) -> bool {
+        if !p.geometry_valid() {
+            return false;
+        }
+        match self {
+            ConvAlgorithm::Direct | ConvAlgorithm::Im2col => true,
+            ConvAlgorithm::Gemm1x1 => p.r == 1,
+            _ => p.stride == 1,
+        }
+    }
 }
 
-/// Execute `algo` on the problem's tensors.
+/// Execute `algo` on the problem's tensors (unit stride, no padding —
+/// the paper's benchmark geometry).  See [`run_problem`] for explicit
+/// stride/padding.
 pub fn run(algo: ConvAlgorithm, x: &Tensor4, w: &Tensor4) -> Tensor4 {
+    let [b, c, h, wd] = x.shape;
+    let [k, _, r, _] = w.shape;
+    run_problem(algo, &ConvProblem::unit(b, c, k, h, wd, r), x, w)
+}
+
+/// Execute `algo` on a fully specified problem (stride + padding).
+pub fn run_problem(algo: ConvAlgorithm, p: &ConvProblem, x: &Tensor4, w: &Tensor4) -> Tensor4 {
+    assert_eq!(x.shape, p.input_shape(), "input/problem mismatch");
+    assert_eq!(w.shape, p.weight_shape(), "weight/problem mismatch");
+    assert!(
+        algo.supports(p),
+        "{} cannot run stride={} pad={} r={}",
+        algo.name(),
+        p.stride,
+        p.pad,
+        p.r
+    );
     match algo {
-        ConvAlgorithm::Direct => direct::naive(x, w),
-        ConvAlgorithm::Im2col => direct::im2col(x, w),
-        ConvAlgorithm::Winograd { m } => winograd::run(x, w, m),
-        ConvAlgorithm::RegularFft { m } => fft_conv::run_regular(x, w, m),
-        ConvAlgorithm::GaussFft { m } => fft_conv::run_gauss(x, w, m),
+        ConvAlgorithm::Direct => direct::reference(p, x, w),
+        ConvAlgorithm::Im2col => direct::im2col_problem(p, x, w),
+        ConvAlgorithm::Gemm1x1 => direct::conv1x1(p, x, w),
+        // unpadded tiled problems keep the lightweight one-shot paths;
+        // padding routes through the engine plan (the gather stage
+        // materializes the halo)
+        ConvAlgorithm::Winograd { m } if p.pad == 0 => winograd::run(x, w, m),
+        ConvAlgorithm::RegularFft { m } if p.pad == 0 => fft_conv::run_regular(x, w, m),
+        ConvAlgorithm::GaussFft { m } if p.pad == 0 => fft_conv::run_gauss(x, w, m),
+        tiled => tiled_problem(tiled, p, x, w),
     }
+}
+
+/// One-shot tiled execution honoring the problem's padding (builds a
+/// throwaway plan; serving callers use the scheduler's plan cache).
+fn tiled_problem(algo: ConvAlgorithm, p: &ConvProblem, x: &Tensor4, w: &Tensor4) -> Tensor4 {
+    let mut plan = LayerPlan::with_options(
+        algo,
+        w,
+        p.h,
+        p.w,
+        1,
+        PlanOptions {
+            pad: p.pad,
+            ..PlanOptions::default()
+        },
+    );
+    plan.run(x, None)
 }
 
 #[cfg(test)]
@@ -113,28 +236,31 @@ mod tests {
 
     #[test]
     fn problem_shapes() {
-        let p = ConvProblem {
-            batch: 2,
-            c_in: 3,
-            c_out: 4,
-            h: 14,
-            w: 12,
-            r: 3,
-        };
+        let p = ConvProblem::unit(2, 3, 4, 14, 12, 3);
         assert_eq!(p.output_shape(), [2, 4, 12, 10]);
         assert_eq!(p.direct_flops(), 2 * 2 * 4 * 3 * 12 * 10 * 9);
     }
 
     #[test]
+    fn problem_shapes_with_stride_and_pad() {
+        // AlexNet-1 geometry: 227 -> (227 - 11)/4 + 1 = 55
+        let p = ConvProblem::with_geometry(1, 3, 64, 227, 227, 11, 4, 0);
+        assert_eq!(p.output_shape(), [1, 64, 55, 55]);
+        // VGG geometry: pad 1 keeps the feature map size
+        let p = ConvProblem::with_geometry(2, 64, 64, 224, 224, 3, 1, 1);
+        assert_eq!(p.output_shape(), [2, 64, 224, 224]);
+        // strided + padded
+        let p = ConvProblem::with_geometry(1, 2, 2, 9, 9, 3, 2, 1);
+        assert_eq!(p.out_h(), 5);
+        assert!(p.geometry_valid());
+        // degenerate: kernel larger than padded image
+        let bad = ConvProblem::with_geometry(1, 1, 1, 2, 2, 5, 1, 1);
+        assert!(!bad.geometry_valid());
+    }
+
+    #[test]
     fn dispatch_all_algorithms_agree() {
-        let p = ConvProblem {
-            batch: 1,
-            c_in: 3,
-            c_out: 2,
-            h: 12,
-            w: 12,
-            r: 3,
-        };
+        let p = ConvProblem::unit(1, 3, 2, 12, 12, 3);
         let x = Tensor4::random(p.input_shape(), 1);
         let w = Tensor4::random(p.weight_shape(), 2);
         let want = run(ConvAlgorithm::Direct, &x, &w);
@@ -155,9 +281,45 @@ mod tests {
     }
 
     #[test]
+    fn padded_dispatch_agrees_with_oracle() {
+        let p = ConvProblem::with_geometry(2, 3, 4, 10, 9, 3, 1, 1);
+        let x = Tensor4::random(p.input_shape(), 11);
+        let w = Tensor4::random(p.weight_shape(), 12);
+        let want = run_problem(ConvAlgorithm::Direct, &p, &x, &w);
+        assert_eq!(want.shape, p.output_shape());
+        for algo in [
+            ConvAlgorithm::Im2col,
+            ConvAlgorithm::Winograd { m: 4 },
+            ConvAlgorithm::RegularFft { m: 4 },
+            ConvAlgorithm::GaussFft { m: 4 },
+        ] {
+            let got = run_problem(algo, &p, &x, &w);
+            assert_eq!(got.shape, want.shape, "{}", algo.name());
+            assert!(
+                got.max_abs_diff(&want) < 2e-3 * want.max_abs().max(1.0),
+                "{}",
+                algo.name()
+            );
+        }
+    }
+
+    #[test]
+    fn supports_matrix() {
+        let strided = ConvProblem::with_geometry(1, 2, 2, 8, 8, 3, 2, 0);
+        let pointwise = ConvProblem::with_geometry(1, 2, 2, 8, 8, 1, 1, 0);
+        assert!(ConvAlgorithm::Direct.supports(&strided));
+        assert!(ConvAlgorithm::Im2col.supports(&strided));
+        assert!(!ConvAlgorithm::Gemm1x1.supports(&strided)); // r != 1
+        assert!(!ConvAlgorithm::Winograd { m: 2 }.supports(&strided));
+        assert!(ConvAlgorithm::Gemm1x1.supports(&pointwise));
+        assert!(ConvAlgorithm::RegularFft { m: 4 }.supports(&pointwise));
+    }
+
+    #[test]
     fn names_stable() {
         assert_eq!(ConvAlgorithm::Winograd { m: 4 }.name(), "winograd(m=4)");
         assert_eq!(ConvAlgorithm::RegularFft { m: 9 }.tile_m(), Some(9));
         assert_eq!(ConvAlgorithm::Direct.tile_m(), None);
+        assert_eq!(ConvAlgorithm::Gemm1x1.name(), "gemm_1x1");
     }
 }

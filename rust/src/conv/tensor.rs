@@ -61,6 +61,26 @@ impl Tensor4 {
         &mut self.data[start..start + len]
     }
 
+    /// Reshape in place to `shape`, zero-filling the live region.  The
+    /// backing `Vec` only ever grows its capacity: shrinking the logical
+    /// size never releases memory, so a tensor reused as a grow-only
+    /// arena (the graph executor's ping-pong buffers) stops allocating
+    /// once it has seen its largest shape.
+    pub fn reshape_zeroed(&mut self, shape: [usize; 4]) {
+        let n = shape.iter().product();
+        self.shape = shape;
+        self.data.truncate(n); // logical shrink; capacity retained
+        self.data.fill(0.0);
+        self.data.resize(n, 0.0);
+    }
+
+    /// (pointer, capacity) of the backing allocation — stable across
+    /// reuses that stay within capacity, so tests can assert a buffer
+    /// was not reallocated.
+    pub fn alloc_stamp(&self) -> (usize, usize) {
+        (self.data.as_ptr() as usize, self.data.capacity())
+    }
+
     /// Largest absolute difference to another tensor of identical shape.
     pub fn max_abs_diff(&self, other: &Tensor4) -> f32 {
         assert_eq!(self.shape, other.shape);
@@ -102,6 +122,20 @@ mod tests {
         let b = Tensor4::from_vec([1, 1, 1, 2], vec![1.5, -3.0]);
         assert_eq!(a.max_abs_diff(&b), 0.5);
         assert_eq!(a.max_abs(), 3.0);
+    }
+
+    #[test]
+    fn reshape_zeroed_is_grow_only() {
+        let mut t = Tensor4::zeros([2, 2, 4, 4]);
+        t.data.iter_mut().for_each(|v| *v = 9.0);
+        t.reshape_zeroed([1, 1, 2, 2]);
+        assert_eq!(t.shape, [1, 1, 2, 2]);
+        assert_eq!(t.data, vec![0.0; 4]);
+        let stamp = t.alloc_stamp();
+        // growing back within the original capacity must not reallocate
+        t.reshape_zeroed([2, 2, 4, 4]);
+        assert_eq!(t.alloc_stamp(), stamp);
+        assert!(t.data.iter().all(|&v| v == 0.0));
     }
 
     #[test]

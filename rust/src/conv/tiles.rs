@@ -1,17 +1,20 @@
 //! Overlap-add tiling (§2.2): gather t x t input tiles with stride m and
-//! overlap r-1 (implicit zero-padding at the bottom/right edges), and
-//! scatter the m x m output tiles back.
+//! overlap r-1 (implicit zero-padding at the bottom/right edges, plus the
+//! problem's own symmetric zero-padding on all four), and scatter the
+//! m x m output tiles back.
 
-/// Tiling geometry for one (image, m, r) configuration.
+/// Tiling geometry for one (image, m, r, pad) configuration.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct TileGrid {
     pub m: usize,
     pub r: usize,
     pub t: usize,
-    /// input spatial size
+    /// input spatial size (unpadded)
     pub h: usize,
     pub w: usize,
-    /// output spatial size (valid conv)
+    /// the problem's symmetric zero-padding: tile origins start at -pad
+    pub pad: usize,
+    /// output spatial size (padded conv)
     pub oh: usize,
     pub ow: usize,
     /// tiles along each axis
@@ -21,10 +24,18 @@ pub struct TileGrid {
 
 impl TileGrid {
     pub fn new(h: usize, w: usize, m: usize, r: usize) -> TileGrid {
-        assert!(h >= r && w >= r, "image smaller than kernel");
+        TileGrid::with_pad(h, w, m, r, 0)
+    }
+
+    /// Geometry for a problem with symmetric zero-padding `pad`: the
+    /// first tile's origin sits at (-pad, -pad) and the output plane is
+    /// (h + 2*pad - r + 1) square-ish — the gather stage materializes the
+    /// halo as zeros, so no padded copy of the input ever exists.
+    pub fn with_pad(h: usize, w: usize, m: usize, r: usize, pad: usize) -> TileGrid {
+        assert!(h + 2 * pad >= r && w + 2 * pad >= r, "image smaller than kernel");
         let t = m + r - 1;
-        let oh = h - r + 1;
-        let ow = w - r + 1;
+        let oh = h + 2 * pad - r + 1;
+        let ow = w + 2 * pad - r + 1;
         let nh = oh.div_ceil(m);
         let nw = ow.div_ceil(m);
         TileGrid {
@@ -33,6 +44,7 @@ impl TileGrid {
             t,
             h,
             w,
+            pad,
             oh,
             ow,
             nh,
@@ -46,34 +58,43 @@ impl TileGrid {
     }
 
     /// Gather tile (ti, tj) of `plane` (h x w) into `out` (t x t),
-    /// zero-padding outside the image.
+    /// zero-padding outside the image (both the overlap-add remainder at
+    /// the bottom/right and the problem's own pad halo on all sides).
     ///
     /// Fully interior tiles — the overwhelming majority on real layers —
     /// take a branch-free path of `t` unconditional row copies with no
-    /// zero-fill at all; only tiles straddling the right/bottom image
-    /// edge pay for padding, and even there only the fringe is memset.
+    /// zero-fill at all; only tiles straddling an image edge pay for
+    /// padding, and even there only the fringe is memset.
     pub fn gather(&self, plane: &[f32], ti: usize, tj: usize, out: &mut [f32]) {
         debug_assert_eq!(plane.len(), self.h * self.w);
         debug_assert_eq!(out.len(), self.t * self.t);
         let (t, w) = (self.t, self.w);
-        let (i0, j0) = (ti * self.m, tj * self.m);
-        if i0 + t <= self.h && j0 + t <= w {
+        let i0 = (ti * self.m) as isize - self.pad as isize;
+        let j0 = (tj * self.m) as isize - self.pad as isize;
+        if i0 >= 0 && j0 >= 0 && i0 as usize + t <= self.h && j0 as usize + t <= w {
+            let (i0, j0) = (i0 as usize, j0 as usize);
             for u in 0..t {
                 let row = (i0 + u) * w + j0;
                 out[u * t..(u + 1) * t].copy_from_slice(&plane[row..row + t]);
             }
             return;
         }
-        // edge tile: copy the in-bounds sub-rectangle, zero only the fringe
-        let rows = self.h.saturating_sub(i0).min(t);
-        let avail = w.saturating_sub(j0).min(t);
-        for u in 0..rows {
-            let row = (i0 + u) * w + j0;
+        // edge tile: copy the in-bounds sub-rectangle row by row, zero
+        // the fringe (left/top halo rows and right/bottom remainder)
+        let col_lo = (-j0).max(0) as usize; // first in-bounds tile column
+        let col_hi = ((w as isize - j0).max(0) as usize).min(t); // one past last
+        for u in 0..t {
+            let si = i0 + u as isize;
             let dst = &mut out[u * t..(u + 1) * t];
-            dst[..avail].copy_from_slice(&plane[row..row + avail]);
-            dst[avail..].fill(0.0);
+            if si < 0 || si >= self.h as isize || col_lo >= col_hi {
+                dst.fill(0.0);
+                continue;
+            }
+            let row = si as usize * w + (j0 + col_lo as isize) as usize;
+            dst[..col_lo].fill(0.0);
+            dst[col_lo..col_hi].copy_from_slice(&plane[row..row + (col_hi - col_lo)]);
+            dst[col_hi..].fill(0.0);
         }
-        out[rows * t..].fill(0.0);
     }
 
     /// Scatter an m x m output tile (ti, tj) into `plane` (oh x ow),
@@ -234,6 +255,89 @@ mod tests {
             }
         }
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn padded_geometry_and_halo_gather() {
+        // 8x8 image, pad 1, r=3: output stays 8x8, first tile origin at -1
+        let g = TileGrid::with_pad(8, 8, 4, 3, 1);
+        assert_eq!((g.oh, g.ow, g.nh, g.nw), (8, 8, 2, 2));
+        let plane: Vec<f32> = (0..64).map(|i| i as f32 + 1.0).collect();
+        let mut tile = vec![f32::NAN; 36];
+        g.gather(&plane, 0, 0, &mut tile);
+        // row 0 and column 0 of the tile are the zero halo
+        for v in 0..6 {
+            assert_eq!(tile[v], 0.0, "halo row, col {v}");
+            assert_eq!(tile[v * 6], 0.0, "halo col, row {v}");
+        }
+        // interior of the tile is the image's top-left corner
+        for u in 1..6 {
+            for v in 1..6 {
+                assert_eq!(tile[u * 6 + v], plane[(u - 1) * 8 + (v - 1)], "({u},{v})");
+            }
+        }
+        // tile (1,1): origin (3,3), fully interior despite the pad
+        let mut tile = vec![f32::NAN; 36];
+        g.gather(&plane, 1, 1, &mut tile);
+        for u in 0..6 {
+            for v in 0..6 {
+                let (i, j) = (3 + u, 3 + v);
+                let want = if i < 8 && j < 8 { plane[i * 8 + j] } else { 0.0 };
+                assert_eq!(tile[u * 6 + v], want, "({u},{v})");
+            }
+        }
+    }
+
+    #[test]
+    fn padded_gather_then_direct_equals_padded_direct() {
+        // correlating gathered tiles of a padded grid reproduces the
+        // zero-padded direct convolution
+        let (h, w, m, r, pad) = (9, 8, 3, 3, 2);
+        let g = TileGrid::with_pad(h, w, m, r, pad);
+        let mut rng = Rng::new(12);
+        let plane = rng.vec_f32(h * w);
+        let kern = rng.vec_f32(r * r);
+        // padded direct reference
+        let mut want = vec![0.0f32; g.oh * g.ow];
+        for i in 0..g.oh {
+            for j in 0..g.ow {
+                let mut s = 0.0;
+                for u in 0..r {
+                    for v in 0..r {
+                        let (si, sj) = (i + u, j + v);
+                        if si < pad || sj < pad || si >= h + pad || sj >= w + pad {
+                            continue;
+                        }
+                        s += plane[(si - pad) * w + (sj - pad)] * kern[u * r + v];
+                    }
+                }
+                want[i * g.ow + j] = s;
+            }
+        }
+        // tile-wise
+        let mut got = vec![0.0f32; g.oh * g.ow];
+        let mut tile = vec![0.0f32; g.t * g.t];
+        let mut otile = vec![0.0f32; g.m * g.m];
+        for ti in 0..g.nh {
+            for tj in 0..g.nw {
+                g.gather(&plane, ti, tj, &mut tile);
+                for u in 0..m {
+                    for v in 0..m {
+                        let mut s = 0.0;
+                        for a in 0..r {
+                            for b in 0..r {
+                                s += tile[(u + a) * g.t + v + b] * kern[a * r + b];
+                            }
+                        }
+                        otile[u * m + v] = s;
+                    }
+                }
+                g.scatter(&otile, ti, tj, &mut got);
+            }
+        }
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert!((a - b).abs() < 1e-4, "pixel {i}: {a} vs {b}");
+        }
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //! [`ConvService`]: super::ConvService
 //! [`ConvRequest`]: super::ConvRequest
 
-use super::request::LayerId;
+use super::request::{LayerId, NetworkId};
 use std::fmt;
 
 /// Why a serving-API call was rejected.
@@ -47,6 +47,22 @@ pub enum ServiceError {
     ///
     /// [`ConvRequest`]: super::ConvRequest
     BatchedInput { got: usize },
+    /// `register_with_algo` pinned an algorithm that cannot execute the
+    /// problem's geometry (a tiled transform on a strided layer, or the
+    /// 1x1 GEMM path on a larger kernel).
+    UnsupportedAlgo {
+        algo: String,
+        stride: usize,
+        r: usize,
+    },
+    /// `register_network` was called with a name already mapped.
+    DuplicateNetwork { name: String },
+    /// The [`NetworkId`] does not name a live network on this service.
+    UnknownNetwork { id: NetworkId },
+    /// The network graph failed validation or compilation; `reason` is
+    /// the graph compiler's diagnostic
+    /// ([`crate::nets::graph::GraphError`]'s display).
+    Graph { reason: String },
 }
 
 impl fmt::Display for ServiceError {
@@ -74,6 +90,22 @@ impl fmt::Display for ServiceError {
             }
             ServiceError::BatchedInput { got } => {
                 write!(f, "requests carry single images; got a batch of {got}")
+            }
+            ServiceError::UnsupportedAlgo { algo, stride, r } => {
+                write!(
+                    f,
+                    "{algo} cannot execute this geometry (stride {stride}, {r}x{r} \
+                     kernel): tiled transforms need unit stride, gemm_1x1 needs r == 1"
+                )
+            }
+            ServiceError::DuplicateNetwork { name } => {
+                write!(f, "network '{name}' is already registered")
+            }
+            ServiceError::UnknownNetwork { id } => {
+                write!(f, "unknown network {id:?} (unregistered or never registered)")
+            }
+            ServiceError::Graph { reason } => {
+                write!(f, "network graph rejected: {reason}")
             }
         }
     }

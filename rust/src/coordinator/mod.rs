@@ -35,9 +35,9 @@ pub mod service;
 pub use batcher::{Batch, Batcher, Pending};
 pub use error::ServiceError;
 pub use metrics::Metrics;
-pub use request::{ConvRequest, ConvResponse, LayerId, Ticket};
+pub use request::{ConvRequest, ConvResponse, LayerId, NetworkId, Ticket};
 pub use scheduler::{
     batch_bucket, DecayPolicy, DecayStats, PlanHandle, StaticScheduler, TuneSnapshot, TuneState,
     TuningPolicy,
 };
-pub use service::{ConvService, ConvServiceBuilder, LayerEntry, ServiceConfig};
+pub use service::{ConvService, ConvServiceBuilder, LayerEntry, NetworkEntry, ServiceConfig};

@@ -34,6 +34,27 @@ impl LayerId {
     }
 }
 
+/// Typed handle for a registered whole network
+/// (`ConvService::register_network`) — the same nonce-scoped, never
+/// reused discipline as [`LayerId`], addressing a compiled network of
+/// layers instead of a single one.  Requests against it
+/// (`ConvService::submit_network`) run every layer back-to-back through
+/// the graph executor's ping-pong arenas.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NetworkId {
+    /// nonce of the issuing service (process-unique)
+    pub(crate) svc: u64,
+    /// slot index in the issuing service's network table
+    pub(crate) slot: u32,
+}
+
+impl NetworkId {
+    /// The raw slot index (observability / logging).
+    pub fn index(self) -> usize {
+        self.slot as usize
+    }
+}
+
 /// Claim check for one submitted request.  `ConvService::submit` returns
 /// it immediately; once the request's batch executes, the response waits
 /// in the service's completion store until *this* ticket claims it via
@@ -134,14 +155,7 @@ mod tests {
 
     #[test]
     fn validate_checks_shape() {
-        let p = ConvProblem {
-            batch: 8,
-            c_in: 2,
-            c_out: 4,
-            h: 8,
-            w: 8,
-            r: 3,
-        };
+        let p = ConvProblem::unit(8, 2, 4, 8, 8, 3);
         let lid = LayerId { svc: 0, slot: 0 };
         let ok = ConvRequest::new(lid, Tensor4::zeros([1, 2, 8, 8])).unwrap();
         let bad = ConvRequest::new(lid, Tensor4::zeros([1, 3, 8, 8])).unwrap();

@@ -105,7 +105,7 @@
 
 use crate::conv::direct;
 use crate::conv::engine::{weights_fingerprint, LayerPlan, PlanOptions};
-use crate::conv::{ConvAlgorithm, ExecMode, ExecPolicy, Tensor4};
+use crate::conv::{ConvAlgorithm, ConvProblem, ExecMode, ExecPolicy, Tensor4};
 use crate::model::machine::{xeon_gold, Machine};
 use crate::model::select::{choose_exec, measure_exec_with, ExecChoice, ExecVerdict};
 use crate::model::stages::{LayerShape, Method};
@@ -137,6 +137,10 @@ struct PlanKey {
     w: usize,
     k: usize,
     r: usize,
+    /// symmetric zero-padding baked into the plan's tile grid — part of
+    /// the key because a padded and an unpadded plan for the same layer
+    /// shape have different tile geometries
+    pad: usize,
     weights_fp: u64,
 }
 
@@ -575,7 +579,14 @@ fn algo_method(algo: ConvAlgorithm) -> Option<Method> {
 /// The FNV fingerprint scan is O(|weights|) per batch — orders of
 /// magnitude below the convolution itself — and is what lets callers
 /// swap weights without a stale-plan hazard.
-fn make_key(algo: ConvAlgorithm, c: usize, h: usize, w_sp: usize, weights: &Tensor4) -> PlanKey {
+fn make_key(
+    algo: ConvAlgorithm,
+    c: usize,
+    h: usize,
+    w_sp: usize,
+    pad: usize,
+    weights: &Tensor4,
+) -> PlanKey {
     PlanKey {
         algo,
         c,
@@ -583,17 +594,21 @@ fn make_key(algo: ConvAlgorithm, c: usize, h: usize, w_sp: usize, weights: &Tens
         w: w_sp,
         k: weights.shape[0],
         r: weights.shape[2],
+        pad,
         weights_fp: weights_fingerprint(weights),
     }
 }
 
-/// The layer shape a [`PlanKey`] serves, at batch size `b`.
+/// The layer shape a [`PlanKey`] serves, at batch size `b`.  The model's
+/// `x` is the *padded* spatial extent — the tile grid the roofline costs
+/// spans the halo, matching how the paper's layer tables count pre-padded
+/// sizes.
 fn key_shape(key: &PlanKey, b: usize) -> LayerShape {
     LayerShape {
         b: b.max(1),
         c: key.c,
         k: key.k,
-        x: key.h.max(key.w),
+        x: key.h.max(key.w) + 2 * key.pad,
         r: key.r,
     }
 }
@@ -610,6 +625,7 @@ fn resolve_options(key: &PlanKey, b: usize, machine: &Machine) -> PlanOptions {
     PlanOptions {
         exec: choose_exec(method, &key_shape(key, b), m, machine).policy,
         fused_budget: machine.cache,
+        pad: key.pad,
         ..PlanOptions::default()
     }
 }
@@ -623,6 +639,7 @@ fn plan_entry<'a>(
     tuning: &mut HashMap<TuneKey, TuneEntry>,
     stats: &mut DecayStats,
     pins: &HashMap<PlanKey, u32>,
+    builds: &mut u64,
     workers: usize,
     key: PlanKey,
     weights: &Tensor4,
@@ -647,6 +664,7 @@ fn plan_entry<'a>(
                     && k2.w == key.w
                     && k2.k == key.k
                     && k2.r == key.r
+                    && k2.pad == key.pad
                     && !pins.contains_key(k2)
             })
             .copied();
@@ -670,6 +688,7 @@ fn plan_entry<'a>(
     }
     let entry = plans.entry(key).or_insert_with_key(|key| {
         let opts = resolve_options(key, b, machine);
+        *builds += 1;
         PlanEntry {
             plan: LayerPlan::with_options(key.algo, weights, key.h, key.w, workers, opts),
             last_used: tick,
@@ -741,8 +760,16 @@ pub struct StaticScheduler {
     tune_prune_len: usize,
     /// monotonic access counter driving the LRU order
     tick: u64,
+    /// monotonic count of plan *builds* (kernel transform paid) — stays
+    /// flat while warmed plans are reused, which is exactly what the
+    /// network plan-reuse tests assert
+    plan_builds: u64,
     /// resident-byte ceiling across all cached plans
     plan_budget: usize,
+    /// pinned execution mode: bypass the tuning table and run every
+    /// tiled batch in this mode (downgraded to staged when the plan
+    /// cannot fuse) — the operator/differential-test knob
+    exec_override: Option<ExecMode>,
     /// machine model driving fused-vs-staged plan resolution
     machine: Machine,
 }
@@ -760,7 +787,9 @@ impl StaticScheduler {
             decay_stats: DecayStats::default(),
             tune_prune_len: 0,
             tick: 0,
+            plan_builds: 0,
             plan_budget: DEFAULT_PLAN_BUDGET,
+            exec_override: None,
             // nominal modern-CPU model (1MB core-exclusive cache, CMR 24)
             // until the owner provides the real machine via `set_machine`
             machine: xeon_gold(),
@@ -776,6 +805,18 @@ impl StaticScheduler {
         self.plans.len()
     }
 
+    /// The machine model driving plan and algorithm resolution.
+    pub fn machine(&self) -> &Machine {
+        &self.machine
+    }
+
+    /// Monotonic count of plan builds (kernel transforms paid).  A warm
+    /// serving loop holds this flat: if it moves between two identical
+    /// requests, a plan was evicted and rebuilt.
+    pub fn plan_builds(&self) -> u64 {
+        self.plan_builds
+    }
+
     /// Total resident bytes across all cached plans.
     pub fn plan_bytes(&self) -> usize {
         self.plans.values().map(|e| e.plan.resident_bytes()).sum()
@@ -784,6 +825,21 @@ impl StaticScheduler {
     /// Set the plan-cache byte ceiling (applies from the next batch).
     pub fn set_plan_budget(&mut self, bytes: usize) {
         self.plan_budget = bytes;
+    }
+
+    /// Pin every tiled batch to one execution mode, bypassing the
+    /// staged-vs-fused tuning table (downgraded to staged when a plan
+    /// cannot fuse).  `None` restores normal tuned resolution.  Pinned
+    /// runs neither feed nor consult the tuning EWMAs — the table
+    /// resumes exactly where it left off.  This is the knob the
+    /// end-to-end differential suites use to force both pipelines over
+    /// identical traffic.
+    pub fn set_exec_override(&mut self, mode: Option<ExecMode>) {
+        self.exec_override = mode;
+    }
+
+    pub fn exec_override(&self) -> Option<ExecMode> {
+        self.exec_override
     }
 
     /// Provide the machine model that drives fused-vs-staged resolution
@@ -890,7 +946,7 @@ impl StaticScheduler {
         let fp = weights_fingerprint(w);
         self.plans
             .values()
-            .find(|e| e.plan.matches(algo, x, fp))
+            .find(|e| e.plan.matches(algo, x, e.plan.pad(), fp))
             .map(|e| e.plan.exec_mode())
     }
 
@@ -902,7 +958,7 @@ impl StaticScheduler {
         x: &Tensor4,
         w: &Tensor4,
     ) -> Option<TuneSnapshot> {
-        let key = make_key(algo, x.shape[1], x.shape[2], x.shape[3], w);
+        let key = make_key(algo, x.shape[1], x.shape[2], x.shape[3], 0, w);
         let bucket = batch_bucket(x.shape[0]);
         self.tuning
             .get(&TuneKey { plan: key, bucket })
@@ -955,7 +1011,7 @@ impl StaticScheduler {
         if algo.tile_m().is_none() {
             return;
         }
-        let key = make_key(algo, x.shape[1], x.shape[2], x.shape[3], w);
+        let key = make_key(algo, x.shape[1], x.shape[2], x.shape[3], 0, w);
         let bucket = batch_bucket(x.shape[0]);
         let can_fuse = self
             .plans
@@ -1027,13 +1083,14 @@ impl StaticScheduler {
         weights: &Tensor4,
         h: usize,
         w: usize,
+        pad: usize,
         batch_hint: usize,
         verdict: &ExecVerdict,
     ) {
         if algo.tile_m().is_none() {
             return;
         }
-        let key = make_key(algo, weights.shape[1], h, w, weights);
+        let key = make_key(algo, weights.shape[1], h, w, pad, weights);
         let bucket = batch_bucket(batch_hint);
         let can_fuse = verdict.fused_secs.is_some();
         // verdict times are whole-micro-batch seconds measured at
@@ -1087,17 +1144,34 @@ impl StaticScheduler {
         w: usize,
         batch_hint: usize,
     ) -> PlanHandle {
+        self.warm_padded(algo, weights, h, w, 0, batch_hint)
+    }
+
+    /// [`StaticScheduler::warm`] for a layer with symmetric zero-padding:
+    /// the plan's tile grid gathers a `pad`-wide halo, and `pad` joins the
+    /// cache key (a padded and an unpadded plan for the same layer shape
+    /// have different tile geometries).
+    pub fn warm_padded(
+        &mut self,
+        algo: ConvAlgorithm,
+        weights: &Tensor4,
+        h: usize,
+        w: usize,
+        pad: usize,
+        batch_hint: usize,
+    ) -> PlanHandle {
         if algo.tile_m().is_none() {
             return PlanHandle { algo, key: None };
         }
         let workers = self.pool.workers();
         self.tick += 1;
-        let key = make_key(algo, weights.shape[1], h, w, weights);
+        let key = make_key(algo, weights.shape[1], h, w, pad, weights);
         let plan = plan_entry(
             &mut self.plans,
             &mut self.tuning,
             &mut self.decay_stats,
             &self.pins,
+            &mut self.plan_builds,
             workers,
             key,
             weights,
@@ -1170,7 +1244,7 @@ impl StaticScheduler {
         let [b, c, h, wd] = x.shape;
         let workers = self.pool.workers();
         self.tick += 1;
-        let key = make_key(algo, c, h, wd, w);
+        let key = make_key(algo, c, h, wd, 0, w);
         let bucket = batch_bucket(b);
         let analytic = choose_exec(method, &key_shape(&key, bucket), m, &self.machine);
         let plan = plan_entry(
@@ -1178,6 +1252,7 @@ impl StaticScheduler {
             &mut self.tuning,
             &mut self.decay_stats,
             &self.pins,
+            &mut self.plan_builds,
             workers,
             key,
             w,
@@ -1230,14 +1305,14 @@ impl StaticScheduler {
     pub fn run_batch(&mut self, algo: ConvAlgorithm, x: &Tensor4, w: &Tensor4) -> Tensor4 {
         let [b, c, h, wd] = x.shape;
         assert_eq!(c, w.shape[1], "channel mismatch");
-        let r = w.shape[2];
-        let (oh, ow) = (h - r + 1, wd - r + 1);
-        let mut out = Tensor4::zeros([b, w.shape[0], oh, ow]);
+        let p = ConvProblem::unit(b, c, w.shape[0], h, wd, w.shape[2]);
+        let mut out = Tensor4::zeros(p.output_shape());
         match algo {
-            ConvAlgorithm::Direct => self.run_direct(x, w, &mut out),
-            ConvAlgorithm::Im2col => self.run_im2col(x, w, &mut out),
+            ConvAlgorithm::Direct => self.run_direct(&p, x, w, &mut out),
+            ConvAlgorithm::Im2col => self.run_im2col(&p, x, w, &mut out),
+            ConvAlgorithm::Gemm1x1 => self.run_1x1(&p, x, w, &mut out),
             _ => {
-                let key = make_key(algo, c, h, wd, w);
+                let key = make_key(algo, c, h, wd, 0, w);
                 self.run_tiled(key, x, w, &mut out);
             }
         }
@@ -1255,17 +1330,43 @@ impl StaticScheduler {
     pub fn run_planned(&mut self, handle: PlanHandle, x: &Tensor4, w: &Tensor4) -> Tensor4 {
         let [b, c, h, wd] = x.shape;
         assert_eq!(c, w.shape[1], "channel mismatch");
-        let r = w.shape[2];
-        let (oh, ow) = (h - r + 1, wd - r + 1);
-        let mut out = Tensor4::zeros([b, w.shape[0], oh, ow]);
+        let pad = handle.key.map_or(0, |k| k.pad);
+        let p = ConvProblem::with_geometry(b, c, w.shape[0], h, wd, w.shape[2], 1, pad);
+        let mut out = Tensor4::zeros(p.output_shape());
+        self.run_planned_into(handle, &p, x, w, &mut out);
+        out
+    }
+
+    /// [`StaticScheduler::run_planned`] with the full problem geometry and
+    /// a caller-owned output — the graph executor's per-layer entry point.
+    /// `out` must already have `p.output_shape()` (the executor reshapes
+    /// its ping-pong arena in place); every algorithm writes it fully, so
+    /// no pre-zeroing beyond the reshape is assumed.  Strided problems
+    /// route through the non-tiled paths (tiled plans are unit-stride by
+    /// construction — [`ConvAlgorithm::supports`] gates registration).
+    pub fn run_planned_into(
+        &mut self,
+        handle: PlanHandle,
+        p: &ConvProblem,
+        x: &Tensor4,
+        w: &Tensor4,
+        out: &mut Tensor4,
+    ) {
+        assert_eq!(x.shape, p.input_shape(), "input/problem mismatch");
+        assert_eq!(w.shape, p.weight_shape(), "weight/problem mismatch");
+        assert_eq!(out.shape, p.output_shape(), "output/problem mismatch");
         match handle.key {
-            Some(key) => self.run_tiled(key, x, w, &mut out),
+            Some(key) => {
+                debug_assert_eq!(p.stride, 1, "tiled plans are unit-stride");
+                debug_assert_eq!(key.pad, p.pad, "plan/problem pad mismatch");
+                self.run_tiled(key, x, w, out);
+            }
             None => match handle.algo {
-                ConvAlgorithm::Im2col => self.run_im2col(x, w, &mut out),
-                _ => self.run_direct(x, w, &mut out),
+                ConvAlgorithm::Im2col => self.run_im2col(p, x, w, out),
+                ConvAlgorithm::Gemm1x1 => self.run_1x1(p, x, w, out),
+                _ => self.run_direct(p, x, w, out),
             },
         }
-        out
     }
 
     /// The tiled-algorithm body shared by `run_batch` (key computed per
@@ -1294,6 +1395,7 @@ impl StaticScheduler {
             &mut self.tuning,
             &mut self.decay_stats,
             &self.pins,
+            &mut self.plan_builds,
             workers,
             key,
             w,
@@ -1302,6 +1404,13 @@ impl StaticScheduler {
             self.tick,
         );
         let can_fuse = plan.can_fuse();
+        if let Some(forced) = self.exec_override {
+            // pinned mode: run outside the tuning lifecycle entirely —
+            // no samples recorded, no verdict advanced
+            let mode = if can_fuse { forced } else { ExecMode::Staged };
+            plan.run_with_mode(x, out, Some(&self.pool), mode);
+            return;
+        }
         let entry = tune_entry(&mut self.tuning, &key, bucket, can_fuse, &self.machine);
         let pool = &self.pool;
         // Timed run with two fairness rules: the time is stored
@@ -1516,8 +1625,11 @@ impl StaticScheduler {
 
     /// Direct convolution sharded over global output rows (image, k, row):
     /// a contiguous row range is a contiguous `&mut` slice of `out.data`.
-    fn run_direct(&self, x: &Tensor4, w: &Tensor4, out: &mut Tensor4) {
+    /// Honors the problem's stride and padding through
+    /// [`direct::conv_rows`].
+    fn run_direct(&self, p: &ConvProblem, x: &Tensor4, w: &Tensor4, out: &mut Tensor4) {
         let [_, k, oh, ow] = out.shape;
+        let (s, pad) = (p.stride, p.pad);
         let shards = even_ranges(out.shape[0] * k * oh, self.pool.workers());
         let parts = split_row_parts(&mut out.data, &shards, ow);
         self.pool.run_parts(parts, |_wi, (range, dst)| {
@@ -1530,6 +1642,8 @@ impl StaticScheduler {
                 direct::conv_rows(
                     x,
                     w,
+                    s,
+                    pad,
                     bi,
                     ki,
                     row0..row0 + rows,
@@ -1543,9 +1657,8 @@ impl StaticScheduler {
 
     /// im2col sharded over images; each worker writes its images' (K, OH,
     /// OW) blocks in place.
-    fn run_im2col(&self, x: &Tensor4, w: &Tensor4, out: &mut Tensor4) {
+    fn run_im2col(&self, p: &ConvProblem, x: &Tensor4, w: &Tensor4, out: &mut Tensor4) {
         let [b, k, oh, ow] = out.shape;
-        let r = w.shape[2];
         let wm = direct::weights_matrix(w);
         let per = k * oh * ow;
         let shards = even_ranges(b, self.pool.workers());
@@ -1553,7 +1666,22 @@ impl StaticScheduler {
         let wm = &wm;
         self.pool.run_parts(parts, |_wi, (range, dst)| {
             for (li, bi) in range.enumerate() {
-                direct::im2col_image(x, wm, k, r, bi, &mut dst[li * per..(li + 1) * per]);
+                direct::im2col_image(p, x, wm, bi, &mut dst[li * per..(li + 1) * per]);
+            }
+        });
+    }
+
+    /// The 1x1 GEMM fast path sharded over images: each worker's
+    /// [`direct::conv1x1_image`] is a single K x C x pixels GEMM on native
+    /// layouts (no gathering at unit geometry).
+    fn run_1x1(&self, p: &ConvProblem, x: &Tensor4, w: &Tensor4, out: &mut Tensor4) {
+        let [b, k, oh, ow] = out.shape;
+        let per = k * oh * ow;
+        let shards = even_ranges(b, self.pool.workers());
+        let parts = split_row_parts(&mut out.data, &shards, per);
+        self.pool.run_parts(parts, |_wi, (range, dst)| {
+            for (li, bi) in range.enumerate() {
+                direct::conv1x1_image(p, x, bi, w, &mut dst[li * per..(li + 1) * per]);
             }
         });
     }

@@ -31,12 +31,13 @@
 use super::batcher::{Batch, Batcher};
 use super::error::ServiceError;
 use super::metrics::Metrics;
-use super::request::{validate, ConvRequest, ConvResponse, LayerId, Ticket};
+use super::request::{validate, ConvRequest, ConvResponse, LayerId, NetworkId, Ticket};
 use super::scheduler::{DecayPolicy, DecayStats, PlanHandle, StaticScheduler, TuningPolicy};
 use crate::conv::{ConvAlgorithm, ConvProblem, Tensor4};
 use crate::model::machine::Machine;
-use crate::model::select::{method_algo, select, select_measured};
+use crate::model::select::{algo_for_problem, method_algo, select_measured};
 use crate::model::stages::LayerShape;
+use crate::nets::graph::{CompiledNetwork, NetworkGraph};
 use crate::util::threadpool::ThreadPool;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -58,6 +59,17 @@ pub struct LayerEntry {
     /// pre-resolved plan reference (weight fingerprint included) — what
     /// `execute_batch` hands the scheduler instead of re-fingerprinting
     plan: PlanHandle,
+}
+
+/// A registered whole network: the compiled executor plus its pending
+/// single-image requests (networks batch per network, not per layer —
+/// every layer of one batch runs back-to-back through the arenas).
+pub struct NetworkEntry {
+    /// the directory name the network was registered under
+    pub name: String,
+    /// the compiled executor (warmed per-layer plans + ping-pong arenas)
+    pub net: CompiledNetwork,
+    pending: Vec<(Ticket, Tensor4, Instant)>,
 }
 
 /// Everything configurable about a [`ConvService`], in one place.  The
@@ -148,6 +160,8 @@ impl ConvServiceBuilder {
         ConvService {
             entries: Vec::new(),
             directory: HashMap::new(),
+            networks: Vec::new(),
+            net_directory: HashMap::new(),
             batcher: Batcher::new(self.cfg.max_batch, self.cfg.max_wait),
             scheduler,
             metrics: Metrics::default(),
@@ -168,6 +182,11 @@ pub struct ConvService {
     entries: Vec<Option<LayerEntry>>,
     /// name → handle, consulted once per caller at resolve time
     directory: HashMap<String, LayerId>,
+    /// network slots indexed by `NetworkId` — same retire-forever
+    /// discipline as layer slots
+    networks: Vec<Option<NetworkEntry>>,
+    /// network name → handle
+    net_directory: HashMap<String, NetworkId>,
     batcher: Batcher,
     scheduler: StaticScheduler,
     pub metrics: Metrics,
@@ -217,9 +236,21 @@ impl ConvService {
         algo: ConvAlgorithm,
     ) -> Result<LayerId, ServiceError> {
         self.check_registration(name, &problem, &weights)?;
-        let plan = self
-            .scheduler
-            .warm(algo, &weights, problem.h, problem.w, problem.batch);
+        if !algo.supports(&problem) {
+            return Err(ServiceError::UnsupportedAlgo {
+                algo: algo.name(),
+                stride: problem.stride,
+                r: problem.r,
+            });
+        }
+        let plan = self.scheduler.warm_padded(
+            algo,
+            &weights,
+            problem.h,
+            problem.w,
+            problem.pad,
+            problem.batch,
+        );
         let id = LayerId {
             svc: self.nonce,
             slot: self.entries.len() as u32,
@@ -237,9 +268,10 @@ impl ConvService {
 
     /// The registration preconditions, checked before any expensive
     /// work (plan warming, shortlist measurement): the name must be
-    /// fresh, the problem must be usable (nonzero dims, kernel fits the
-    /// input — the engine computes `h - r + 1` output pixels, which
-    /// must not underflow), and the weights must match the problem.
+    /// fresh, the problem's geometry must be valid (nonzero dims and
+    /// stride, kernel covered by the *padded* input — the output-pixel
+    /// arithmetic `(h + 2·pad - r)/s + 1` must not underflow), and the
+    /// weights must match the problem.
     fn check_registration(
         &self,
         name: &str,
@@ -253,7 +285,7 @@ impl ConvService {
         }
         let (c_in, c_out, h, w, r) =
             (problem.c_in, problem.c_out, problem.h, problem.w, problem.r);
-        if c_in == 0 || c_out == 0 || r == 0 || h < r || w < r {
+        if c_in == 0 || c_out == 0 || r == 0 || !problem.geometry_valid() {
             return Err(ServiceError::InvalidProblem { c_in, c_out, h, w, r });
         }
         if weights.shape != problem.weight_shape() {
@@ -265,15 +297,21 @@ impl ConvService {
         Ok(())
     }
 
-    /// Register a layer, letting the Roofline model pick (method, tile).
+    /// Register a layer, letting the model pick the algorithm: 1x1
+    /// kernels take the GEMM fast path, strided layers the direct path
+    /// (the tiled transforms are unit-stride), everything else the
+    /// roofline winner over the padded shape
+    /// ([`crate::model::select::algo_for_problem`]).
     pub fn register(
         &mut self,
         name: &str,
         problem: ConvProblem,
         weights: Tensor4,
     ) -> Result<LayerId, ServiceError> {
-        let choice = select(&Self::problem_shape(&problem), &self.machine);
-        let algo = method_algo(choice.method, choice.m);
+        // validate before consulting the model: the roofline tile sweep
+        // assumes a kernel that fits the padded input
+        self.check_registration(name, &problem, &weights)?;
+        let algo = algo_for_problem(&problem, &self.machine);
         self.register_with_algo(name, problem, weights, algo)
     }
 
@@ -302,6 +340,12 @@ impl ConvService {
         // reject before measuring: a doomed registration must not pay
         // the shortlist timings or seed the tuning table
         self.check_registration(name, &problem, &weights)?;
+        if problem.r == 1 || problem.stride != 1 {
+            // nothing to shortlist: the tiled candidates cannot run this
+            // geometry — route analytically (Gemm1x1 / Direct)
+            let algo = algo_for_problem(&problem, &self.machine);
+            return self.register_with_algo(name, problem, weights, algo);
+        }
         let shape = Self::problem_shape(&problem);
         // measure under the serving pool shape: fork-join overheads and
         // per-worker cache pressure are part of what decides the winner
@@ -312,8 +356,15 @@ impl ConvService {
         let micro = problem.batch.clamp(1, 8);
         let mc = select_measured(&shape, &self.machine, 3, micro, Some(&pool));
         let algo = method_algo(mc.choice.method, mc.choice.m);
-        self.scheduler
-            .seed_exec_verdict(algo, &weights, problem.h, problem.w, problem.batch, &mc.exec);
+        self.scheduler.seed_exec_verdict(
+            algo,
+            &weights,
+            problem.h,
+            problem.w,
+            problem.pad,
+            problem.batch,
+            &mc.exec,
+        );
         self.register_with_algo(name, problem, weights, algo)
     }
 
@@ -336,15 +387,16 @@ impl ConvService {
                 want: entry.problem.weight_shape(),
             });
         }
-        let (old_plan, algo, h, w, batch) = (
+        let (old_plan, algo, h, w, pad, batch) = (
             entry.plan,
             entry.algo,
             entry.problem.h,
             entry.problem.w,
+            entry.problem.pad,
             entry.problem.batch,
         );
         self.scheduler.discard(old_plan);
-        let plan = self.scheduler.warm(algo, &weights, h, w, batch);
+        let plan = self.scheduler.warm_padded(algo, &weights, h, w, pad, batch);
         let entry = self.entry_mut(id).expect("checked above");
         entry.weights = weights;
         entry.plan = plan;
@@ -367,9 +419,170 @@ impl ConvService {
         Ok(())
     }
 
+    /// Register a whole network: validate the graph, compile it into
+    /// warmed per-layer plans (each layer routed per
+    /// [`crate::model::select::algo_for_problem`] unless its spec pins an
+    /// algorithm), and return the typed handle requests carry.
+    ///
+    /// A network's layers batch *as a network*: submitted images queue
+    /// per network and execute through the compiled executor's ping-pong
+    /// arenas — layer N's output never round-trips through the caller.
+    pub fn register_network(
+        &mut self,
+        name: &str,
+        graph: NetworkGraph,
+        weights: Vec<Tensor4>,
+        batch_hint: usize,
+    ) -> Result<NetworkId, ServiceError> {
+        if self.net_directory.contains_key(name) {
+            return Err(ServiceError::DuplicateNetwork {
+                name: name.to_string(),
+            });
+        }
+        let net = CompiledNetwork::compile(&graph, weights, batch_hint, &mut self.scheduler)
+            .map_err(|e| ServiceError::Graph {
+                reason: e.to_string(),
+            })?;
+        let id = NetworkId {
+            svc: self.nonce,
+            slot: self.networks.len() as u32,
+        };
+        self.networks.push(Some(NetworkEntry {
+            name: name.to_string(),
+            net,
+            pending: Vec::new(),
+        }));
+        self.net_directory.insert(name.to_string(), id);
+        Ok(id)
+    }
+
+    /// Look up the handle a network name was registered under.
+    pub fn resolve_network(&self, name: &str) -> Option<NetworkId> {
+        self.net_directory.get(name).copied()
+    }
+
+    /// The registered network behind a handle (observability).
+    pub fn network(&self, id: NetworkId) -> Option<&NetworkEntry> {
+        if id.svc != self.nonce {
+            return None;
+        }
+        self.networks.get(id.index()).and_then(|e| e.as_ref())
+    }
+
+    /// Enqueue one image for a whole-network pass; returns the claim
+    /// ticket immediately.  When the network's queue reaches the
+    /// service's batch size, the batch executes synchronously — every
+    /// layer back-to-back through the compiled executor — and each
+    /// image's final activation lands in the completion store under its
+    /// own ticket.
+    pub fn submit_network(
+        &mut self,
+        id: NetworkId,
+        input: Tensor4,
+    ) -> Result<Ticket, ServiceError> {
+        if id.svc != self.nonce {
+            return Err(ServiceError::UnknownNetwork { id });
+        }
+        let max_batch = self.batcher.max_batch;
+        let entry = self
+            .networks
+            .get_mut(id.index())
+            .and_then(|e| e.as_mut())
+            .ok_or(ServiceError::UnknownNetwork { id })?;
+        if input.shape[0] != 1 {
+            return Err(ServiceError::BatchedInput { got: input.shape[0] });
+        }
+        let want = entry.net.input_shape(1);
+        if input.shape != want {
+            return Err(ServiceError::ShapeMismatch {
+                got: input.shape,
+                want,
+            });
+        }
+        let ticket = Ticket {
+            svc: self.nonce,
+            seq: self.next_seq,
+        };
+        self.next_seq += 1;
+        entry.pending.push((ticket, input, Instant::now()));
+        if entry.pending.len() >= max_batch {
+            self.execute_network(id.index());
+        }
+        Ok(ticket)
+    }
+
+    /// Retire a network: pending images execute first (no ticket
+    /// dangles), every layer's plan pin is released, and the slot is
+    /// never reused.
+    pub fn unregister_network(&mut self, id: NetworkId) -> Result<(), ServiceError> {
+        if self.network(id).is_none() {
+            return Err(ServiceError::UnknownNetwork { id });
+        }
+        self.execute_network(id.index());
+        let entry = self.networks[id.index()].take().expect("checked above");
+        entry.net.discard(&mut self.scheduler);
+        self.net_directory.remove(&entry.name);
+        Ok(())
+    }
+
+    /// Run one network's pending queue as a stacked batch through the
+    /// compiled executor; returns how many responses completed.
+    fn execute_network(&mut self, slot: usize) -> usize {
+        let entry = match self.networks.get_mut(slot).and_then(|e| e.as_mut()) {
+            Some(e) => e,
+            None => return 0,
+        };
+        if entry.pending.is_empty() {
+            return 0;
+        }
+        let pending = std::mem::take(&mut entry.pending);
+        let n = pending.len();
+        let [_, c, h, w] = entry.net.input_shape(1);
+        let mut stacked = Tensor4::zeros([n, c, h, w]);
+        let per = c * h * w;
+        for (i, (_, x, _)) in pending.iter().enumerate() {
+            stacked.data[i * per..(i + 1) * per].copy_from_slice(&x.data);
+        }
+        // disjoint field borrows: the executor (networks) drives the
+        // scheduler; outputs flow arena-to-arena inside `run`
+        let out = entry.net.run(&mut self.scheduler, &stacked);
+        let done = Instant::now();
+        let [_, k, oh, ow] = out.shape;
+        let oper = k * oh * ow;
+        let mut latencies = Vec::with_capacity(n);
+        for (i, (ticket, _, enqueued)) in pending.iter().enumerate() {
+            let latency = done.duration_since(*enqueued).as_secs_f64();
+            latencies.push(latency);
+            self.completed.insert(
+                ticket.seq,
+                ConvResponse {
+                    ticket: *ticket,
+                    output: Tensor4::from_vec(
+                        [1, k, oh, ow],
+                        out.data[i * oper..(i + 1) * oper].to_vec(),
+                    ),
+                    latency,
+                    batch_size: n,
+                },
+            );
+        }
+        self.metrics.record_batch(n, &latencies);
+        self.metrics.record_decay(self.scheduler.decay_stats());
+        self.metrics.record_unclaimed(self.completed.len());
+        n
+    }
+
     /// Set how the scheduler resolves staged-vs-fused per batch bucket.
     pub fn set_tuning_policy(&mut self, policy: TuningPolicy) {
         self.scheduler.set_tuning_policy(policy);
+    }
+
+    /// Pin every tiled batch to one execution mode (staged/fused),
+    /// bypassing the tuning table; `None` restores tuned resolution.
+    /// The differential-test / operator knob —
+    /// see [`StaticScheduler::set_exec_override`].
+    pub fn set_exec_override(&mut self, mode: Option<crate::conv::ExecMode>) {
+        self.scheduler.set_exec_override(mode);
     }
 
     pub fn tuning_policy(&self) -> TuningPolicy {
@@ -392,6 +605,13 @@ impl ConvService {
         self.scheduler.cached_plans()
     }
 
+    /// Monotonic count of plan builds (kernel transforms paid) in the
+    /// scheduler — flat across a warm serving loop; if it moves between
+    /// identical requests, a plan was evicted and rebuilt.
+    pub fn plan_builds(&self) -> u64 {
+        self.scheduler.plan_builds()
+    }
+
     /// Set when settled staged-vs-fused verdicts stop being trusted
     /// (see [`DecayPolicy`]): never, after serving N batches, or when a
     /// warm winner sample drifts out of tolerance against its EWMA —
@@ -411,14 +631,11 @@ impl ConvService {
         self.scheduler.decay_stats()
     }
 
+    /// The shape the analytic model consumes for a problem — spatial
+    /// size *including* the padding halo (the paper's tables fold
+    /// framework padding into the size).
     fn problem_shape(problem: &ConvProblem) -> LayerShape {
-        LayerShape {
-            b: problem.batch.max(1),
-            c: problem.c_in,
-            k: problem.c_out,
-            x: problem.h.max(problem.w),
-            r: problem.r,
-        }
+        LayerShape::for_problem(problem)
     }
 
     pub fn layer(&self, id: LayerId) -> Option<&LayerEntry> {
@@ -462,18 +679,36 @@ impl ConvService {
         Ok(ticket)
     }
 
-    /// Execute any batches whose latency deadline expired; returns how
-    /// many responses completed into the store.
+    /// Execute any batches whose latency deadline expired — layer groups
+    /// and network queues alike; returns how many responses completed
+    /// into the store.
     pub fn tick(&mut self) -> usize {
         let batches = self.batcher.poll_expired();
-        batches.into_iter().map(|b| self.execute_batch(b)).sum()
+        let mut done: usize = batches.into_iter().map(|b| self.execute_batch(b)).sum();
+        let now = Instant::now();
+        let max_wait = self.batcher.max_wait;
+        for slot in 0..self.networks.len() {
+            let expired = self.networks[slot].as_ref().is_some_and(|e| {
+                e.pending
+                    .first()
+                    .is_some_and(|(_, _, t)| now.duration_since(*t) >= max_wait)
+            });
+            if expired {
+                done += self.execute_network(slot);
+            }
+        }
+        done
     }
 
-    /// Execute everything still pending; returns how many responses
-    /// completed into the store.
+    /// Execute everything still pending — layer groups and network
+    /// queues; returns how many responses completed into the store.
     pub fn flush(&mut self) -> usize {
         let batches = self.batcher.drain();
-        batches.into_iter().map(|b| self.execute_batch(b)).sum()
+        let mut done: usize = batches.into_iter().map(|b| self.execute_batch(b)).sum();
+        for slot in 0..self.networks.len() {
+            done += self.execute_network(slot);
+        }
+        done
     }
 
     /// Claim the response for `ticket`.  Returns `None` while the
@@ -505,9 +740,16 @@ impl ConvService {
         self.completed.len()
     }
 
-    /// Requests submitted but not yet executed.
+    /// Requests submitted but not yet executed (layer groups plus
+    /// network queues).
     pub fn pending(&self) -> usize {
         self.batcher.pending_count()
+            + self
+                .networks
+                .iter()
+                .flatten()
+                .map(|e| e.pending.len())
+                .sum::<usize>()
     }
 
     /// Run one batch and park its responses in the completion store;
@@ -525,10 +767,15 @@ impl ConvService {
             stacked.data[i * per..(i + 1) * per].copy_from_slice(&p.request.input.data);
         }
         // the planned hot path: no string work, no weight re-scan — the
-        // handle already carries the plan key
-        let out = self
-            .scheduler
-            .run_planned(entry.plan, &stacked, &entry.weights);
+        // handle already carries the plan key, and the entry's problem
+        // carries the full geometry (stride + pad) rebatched to n
+        let p = ConvProblem {
+            batch: n,
+            ..entry.problem
+        };
+        let mut out = Tensor4::zeros(p.output_shape());
+        self.scheduler
+            .run_planned_into(entry.plan, &p, &stacked, &entry.weights, &mut out);
         let done = Instant::now();
         let [_, k, oh, ow] = out.shape;
         let oper = k * oh * ow;
@@ -573,14 +820,7 @@ mod tests {
     }
 
     fn problem() -> ConvProblem {
-        ConvProblem {
-            batch: 4,
-            c_in: 3,
-            c_out: 4,
-            h: 12,
-            w: 12,
-            r: 3,
-        }
+        ConvProblem::unit(4, 3, 4, 12, 12, 3)
     }
 
     #[test]
@@ -692,14 +932,7 @@ mod tests {
         // kernel larger than the input: the engine's h - r + 1 output
         // arithmetic must never be reached with this
         let mut svc = service(4);
-        let p = ConvProblem {
-            batch: 1,
-            c_in: 3,
-            c_out: 4,
-            h: 1,
-            w: 1,
-            r: 3,
-        };
+        let p = ConvProblem::unit(1, 3, 4, 1, 1, 3);
         let err = svc
             .register("tiny", p, Tensor4::zeros(p.weight_shape()))
             .unwrap_err();
@@ -848,6 +1081,116 @@ mod tests {
         assert_eq!(snap.expiries, 0);
         assert_eq!(snap.decay_flips, 0);
         assert_eq!(svc.decay_stats(), DecayStats::default());
+    }
+
+    #[test]
+    fn register_routes_strided_and_pointwise_geometry() {
+        let mut svc = service(4);
+        // AlexNet-stem-like strided problem: no tiled method can run it
+        let strided = ConvProblem::with_geometry(1, 3, 8, 19, 19, 11, 4, 0);
+        let id = svc
+            .register("stem", strided, Tensor4::random(strided.weight_shape(), 90))
+            .unwrap();
+        assert_eq!(svc.layer(id).unwrap().algo, ConvAlgorithm::Direct);
+        // 1x1 problem: the GEMM fast path
+        let pw = ConvProblem::unit(1, 6, 8, 9, 9, 1);
+        let id = svc
+            .register("pw", pw, Tensor4::random(pw.weight_shape(), 91))
+            .unwrap();
+        assert_eq!(svc.layer(id).unwrap().algo, ConvAlgorithm::Gemm1x1);
+        // pinning a tiled algorithm onto the strided geometry is refused
+        let err = svc
+            .register_with_algo(
+                "bad",
+                strided,
+                Tensor4::random(strided.weight_shape(), 92),
+                ConvAlgorithm::Winograd { m: 2 },
+            )
+            .unwrap_err();
+        assert!(matches!(err, ServiceError::UnsupportedAlgo { .. }));
+    }
+
+    #[test]
+    fn network_round_trip_matches_oracle() {
+        use crate::nets::graph::LayerSpec;
+        let mut svc = service(2);
+        let graph = NetworkGraph::new("tiny", 2, 10, 10)
+            .layer(LayerSpec::conv("c1", 4, 3, 1))
+            .layer(LayerSpec::strided("pool", 4, 2, 2, 0))
+            .layer(LayerSpec::pointwise("head", 3));
+        let problems = graph.problems(1).unwrap();
+        let weights: Vec<Tensor4> = problems
+            .iter()
+            .enumerate()
+            .map(|(i, p)| Tensor4::random(p.weight_shape(), 80 + i as u64))
+            .collect();
+        let id = svc
+            .register_network("tiny", graph, weights.clone(), 2)
+            .unwrap();
+        assert_eq!(svc.resolve_network("tiny"), Some(id));
+        let xs: Vec<Tensor4> = (0..2).map(|i| Tensor4::random([1, 2, 10, 10], 85 + i)).collect();
+        let t0 = svc.submit_network(id, xs[0].clone()).unwrap();
+        assert_eq!(svc.pending(), 1);
+        let t1 = svc.submit_network(id, xs[1].clone()).unwrap();
+        assert_eq!(svc.unclaimed(), 2, "batch of 2 executes on second submit");
+        for (x, t) in xs.iter().zip([t0, t1]) {
+            let resp = svc.take(t).unwrap();
+            let mut want = x.clone();
+            for (p, w) in problems.iter().zip(&weights) {
+                want = direct::reference(p, &want, w);
+            }
+            assert!(
+                resp.output.max_abs_diff(&want) < 2e-3 * want.max_abs().max(1.0),
+                "network output must match the layer-chained oracle"
+            );
+        }
+    }
+
+    #[test]
+    fn network_errors_are_structured() {
+        use crate::nets::graph::LayerSpec;
+        let mut svc = service(4);
+        let graph = NetworkGraph::new("n", 2, 8, 8).layer(LayerSpec::conv("c", 3, 3, 0));
+        let w = vec![Tensor4::random([3, 2, 3, 3], 95)];
+        let id = svc.register_network("n", graph.clone(), w.clone(), 1).unwrap();
+        // duplicate name
+        assert!(matches!(
+            svc.register_network("n", graph.clone(), w, 1).unwrap_err(),
+            ServiceError::DuplicateNetwork { .. }
+        ));
+        // wrong weight count surfaces the graph compiler's reason
+        assert!(matches!(
+            svc.register_network("m", graph, vec![], 1).unwrap_err(),
+            ServiceError::Graph { .. }
+        ));
+        // wrong input shape
+        assert!(matches!(
+            svc.submit_network(id, Tensor4::zeros([1, 3, 8, 8])).unwrap_err(),
+            ServiceError::ShapeMismatch { .. }
+        ));
+        // unregister flushes pending, then the handle is dead
+        let t = svc.submit_network(id, Tensor4::random([1, 2, 8, 8], 96)).unwrap();
+        svc.unregister_network(id).unwrap();
+        assert!(svc.take(t).is_some(), "pending image completed, not dropped");
+        assert_eq!(svc.resolve_network("n"), None);
+        assert!(matches!(
+            svc.submit_network(id, Tensor4::zeros([1, 2, 8, 8])).unwrap_err(),
+            ServiceError::UnknownNetwork { .. }
+        ));
+    }
+
+    #[test]
+    fn network_tick_honors_deadline() {
+        use crate::nets::graph::LayerSpec;
+        let mut svc = service(100);
+        let graph = NetworkGraph::new("n", 1, 6, 6).layer(LayerSpec::conv("c", 2, 3, 0));
+        let w = vec![Tensor4::random([2, 1, 3, 3], 97)];
+        let id = svc.register_network("n", graph, w, 1).unwrap();
+        let t = svc.submit_network(id, Tensor4::random([1, 1, 6, 6], 98)).unwrap();
+        assert_eq!(svc.tick(), 0, "deadline not reached yet");
+        std::thread::sleep(Duration::from_millis(3));
+        assert_eq!(svc.tick(), 1);
+        assert!(svc.take(t).is_some());
     }
 
     #[test]

@@ -34,9 +34,9 @@ pub fn fig1(cfg: &BenchConfig) -> Table {
     );
     let mut totals = [0.0f64; 5];
     for layer in &layers {
-        let wm = best_tile(Method::Winograd, &layer.shape, &host).m;
-        let fm = best_tile(Method::RegularFft, &layer.shape, &host).m;
-        let gm = best_tile(Method::GaussFft, &layer.shape, &host).m;
+        let wm = best_tile(Method::Winograd, &layer.model_shape(), &host).m;
+        let fm = best_tile(Method::RegularFft, &layer.model_shape(), &host).m;
+        let gm = best_tile(Method::GaussFft, &layer.model_shape(), &host).m;
         let times: Vec<f64> = [
             algo_for(Method::Winograd, wm),
             algo_for(Method::RegularFft, fm),
@@ -97,7 +97,7 @@ pub fn fig2(_cfg: &BenchConfig) -> Table {
         for layer in &layers {
             let ts: Vec<f64> = Method::ALL
                 .iter()
-                .map(|&m| best_tile(m, &layer.shape, mach).total)
+                .map(|&m| best_tile(m, &layer.model_shape(), mach).total)
                 .collect();
             let worst = ts.iter().cloned().fold(0.0, f64::max);
             table.row(vec![
@@ -140,7 +140,7 @@ pub fn fig3(cfg: &BenchConfig, a: Method, b: Method) -> (Table, String) {
             let s = stats::geomean(
                 &layers
                     .iter()
-                    .map(|l| speedup(a, b, &l.shape, &mach))
+                    .map(|l| speedup(a, b, &l.model_shape(), &mach))
                     .collect::<Vec<_>>(),
             );
             pts.push((cmr, s));
@@ -158,12 +158,12 @@ pub fn fig3(cfg: &BenchConfig, a: Method, b: Method) -> (Table, String) {
     let mut meas = Vec::new();
     for layer in &host_layers {
         let ta = measure_algo(
-            algo_for(a, best_tile(a, &layer.shape, &host).m),
+            algo_for(a, best_tile(a, &layer.model_shape(), &host).m),
             layer,
             cfg.budget_ms,
         );
         let tb = measure_algo(
-            algo_for(b, best_tile(b, &layer.shape, &host).m),
+            algo_for(b, best_tile(b, &layer.model_shape(), &host).m),
             layer,
             cfg.budget_ms,
         );
@@ -196,14 +196,14 @@ pub fn fit_quality(cfg: &BenchConfig, a: Method, b: Method) -> (f64, f64, usize)
     let mut pred = Vec::new();
     let mut meas = Vec::new();
     for layer in &layers {
-        pred.push(speedup(a, b, &layer.shape, &host));
+        pred.push(speedup(a, b, &layer.model_shape(), &host));
         let ta = measure_algo(
-            algo_for(a, best_tile(a, &layer.shape, &host).m),
+            algo_for(a, best_tile(a, &layer.model_shape(), &host).m),
             layer,
             cfg.budget_ms / 2,
         );
         let tb = measure_algo(
-            algo_for(b, best_tile(b, &layer.shape, &host).m),
+            algo_for(b, best_tile(b, &layer.model_shape(), &host).m),
             layer,
             cfg.budget_ms / 2,
         );
@@ -262,9 +262,9 @@ pub fn fig67(cfg: &BenchConfig) -> Table {
     );
     for layer in &layers {
         let configs = vec![
-            algo_for(Method::Winograd, best_tile(Method::Winograd, &layer.shape, &host).m),
-            algo_for(Method::RegularFft, best_tile(Method::RegularFft, &layer.shape, &host).m),
-            algo_for(Method::GaussFft, best_tile(Method::GaussFft, &layer.shape, &host).m),
+            algo_for(Method::Winograd, best_tile(Method::Winograd, &layer.model_shape(), &host).m),
+            algo_for(Method::RegularFft, best_tile(Method::RegularFft, &layer.model_shape(), &host).m),
+            algo_for(Method::GaussFft, best_tile(Method::GaussFft, &layer.model_shape(), &host).m),
             ConvAlgorithm::Im2col,
             ConvAlgorithm::Direct,
         ];
@@ -294,8 +294,8 @@ pub fn alexnet_totals(cfg: &BenchConfig) -> (f64, f64) {
     let mut wino = 0.0;
     let mut fft = 0.0;
     for layer in &layers {
-        let wm = best_tile(Method::Winograd, &layer.shape, &host).m;
-        let fm = best_tile(Method::RegularFft, &layer.shape, &host).m;
+        let wm = best_tile(Method::Winograd, &layer.model_shape(), &host).m;
+        let fm = best_tile(Method::RegularFft, &layer.model_shape(), &host).m;
         wino += measure_algo(algo_for(Method::Winograd, wm), layer, cfg.budget_ms).median_ms();
         fft += measure_algo(algo_for(Method::RegularFft, fm), layer, cfg.budget_ms).median_ms();
     }

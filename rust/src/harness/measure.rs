@@ -8,7 +8,7 @@
 //! * `FFTCONV_BENCH_MAXX`   — spatial cap (default 58; 226 = paper-full)
 //! * `FFTCONV_BENCH_BUDGET` — ms of measurement budget per config (default 300)
 
-use crate::conv::{run, ConvAlgorithm, Tensor4};
+use crate::conv::{run_problem, ConvAlgorithm, Tensor4};
 use crate::nets::NetLayer;
 use crate::util::bench::{bench, BenchResult};
 
@@ -47,7 +47,7 @@ pub fn measure_algo(algo: ConvAlgorithm, layer: &NetLayer, budget_ms: u64) -> Be
     let x = Tensor4::random(p.input_shape(), 0x5EED);
     let w = Tensor4::random(p.weight_shape(), 0xF00D);
     bench(&format!("{}/{}", layer.name, algo.name()), budget_ms, || {
-        std::hint::black_box(run(algo, &x, &w));
+        std::hint::black_box(run_problem(algo, &p, &x, &w));
     })
 }
 
@@ -70,7 +70,7 @@ mod tests {
         };
         let layers = host_workloads(&cfg);
         assert_eq!(layers.len(), 12);
-        assert!(layers.iter().all(|l| l.shape.x <= 58 && l.shape.b == 1));
+        assert!(layers.iter().all(|l| l.base.x <= 58 && l.base.b == 1));
     }
 
     #[test]

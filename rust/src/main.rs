@@ -75,9 +75,9 @@ fn predict(layer_filter: Option<String>) {
         for mach in TABLE1.iter().take(1).chain([&host]) {
             let times: Vec<f64> = Method::ALL
                 .iter()
-                .map(|&m| best_tile(m, &l.shape, mach).total * 1e3)
+                .map(|&m| best_tile(m, &l.model_shape(), mach).total * 1e3)
                 .collect();
-            let c = select(&l.shape, mach);
+            let c = select(&l.model_shape(), mach);
             t.row(vec![
                 l.name.into(),
                 mach.name.chars().take(20).collect(),
@@ -155,7 +155,7 @@ fn run_layer(args: &[String]) {
         })
         .scaled(batch, max_x);
     let host = probe_host();
-    let choice = select(&layer.shape, &host);
+    let choice = select(&layer.model_shape(), &host);
     let algo = match choice.method {
         Method::Winograd => ConvAlgorithm::Winograd { m: choice.m },
         Method::RegularFft => ConvAlgorithm::RegularFft { m: choice.m },
@@ -165,11 +165,11 @@ fn run_layer(args: &[String]) {
     let x = Tensor4::random(p.input_shape(), 5);
     let w = Tensor4::random(p.weight_shape(), 6);
     let t0 = std::time::Instant::now();
-    let out = conv::run(algo, &x, &w);
+    let out = conv::run_problem(algo, &p, &x, &w);
     let dt = t0.elapsed().as_secs_f64();
     println!(
         "{name} (B={batch}, x={}): {} -> {:?} in {:.2} ms ({:.2} eff GF/s)",
-        layer.shape.x,
+        layer.base.x,
         algo.name(),
         out.shape,
         dt * 1e3,

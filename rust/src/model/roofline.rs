@@ -189,6 +189,29 @@ pub fn speedup(a: Method, b: Method, l: &LayerShape, machine: &Machine) -> f64 {
     tb / ta
 }
 
+/// Eqn. 8 applied to the direct algorithm as one stage: FPO is the
+/// problem's MAC count, DM its single-pass input + weights + output
+/// traffic.  The estimator for layers the tiled methods cannot run
+/// (strided geometries), and the baseline the graph executor's per-layer
+/// resolution compares tiled estimates against.
+pub fn direct_time(p: &crate::conv::ConvProblem, machine: &Machine) -> f64 {
+    let peak = machine.peak_gflops() * 1e9;
+    let mb = machine.peak_bandwidth() * 1e9;
+    (p.direct_flops() as f64 / peak).max(p.io_bytes() as f64 / mb)
+}
+
+/// Eqn. 8 for the 1x1 GEMM fast path: identical FLOPs to direct (r = 1
+/// collapses the patch to a pixel) but pure-GEMM traffic — the image is
+/// already the (C x HW) operand, so DM is exactly one read of x, one of
+/// w, one write of the output.  At unit geometry this is the same DM as
+/// [`direct_time`]; it exists as its own estimator so callers can rank
+/// the pointwise path explicitly (its *compute* runs at GEMM efficiency
+/// rather than the direct loop nest's).
+pub fn pointwise_time(p: &crate::conv::ConvProblem, machine: &Machine) -> f64 {
+    debug_assert_eq!(p.r, 1, "pointwise estimator requires 1x1 kernels");
+    direct_time(p, machine)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -283,7 +306,7 @@ mod tests {
         let s: f64 = layers
             .iter()
             .map(|l| {
-                speedup(Method::RegularFft, Method::Winograd, &l.shape, machine).ln()
+                speedup(Method::RegularFft, Method::Winograd, &l.model_shape(), machine).ln()
             })
             .sum();
         (s / layers.len() as f64).exp()
@@ -315,7 +338,7 @@ mod tests {
         for mach in TABLE1.iter() {
             for l in &layers {
                 total += 1;
-                if speedup(Method::RegularFft, Method::Winograd, &l.shape, mach) > 1.0 {
+                if speedup(Method::RegularFft, Method::Winograd, &l.model_shape(), mach) > 1.0 {
                     wins += 1;
                 }
             }
@@ -386,6 +409,19 @@ mod tests {
         let sa = speedup(Method::RegularFft, Method::Winograd, &l, &a);
         let sb = speedup(Method::RegularFft, Method::Winograd, &l, &b);
         assert!((sa - sb).abs() < 1e-9);
+    }
+
+    #[test]
+    fn non_tiled_estimators_positive_and_stride_aware() {
+        let m = xeon_gold();
+        let unit = crate::conv::ConvProblem::unit(8, 64, 64, 56, 56, 3);
+        let strided = crate::conv::ConvProblem::with_geometry(8, 64, 64, 56, 56, 3, 2, 0);
+        let (tu, ts) = (direct_time(&unit, &m), direct_time(&strided, &m));
+        assert!(tu.is_finite() && tu > 0.0);
+        // stride 2 quarters the output plane: strictly less predicted time
+        assert!(ts < tu, "strided {ts:.3e} !< unit {tu:.3e}");
+        let pw = crate::conv::ConvProblem::unit(8, 64, 256, 56, 56, 1);
+        assert!(pointwise_time(&pw, &m) > 0.0);
     }
 
     #[test]

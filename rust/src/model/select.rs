@@ -233,6 +233,25 @@ pub fn select(l: &LayerShape, machine: &Machine) -> Choice {
     best.unwrap()
 }
 
+/// Resolve the serving algorithm for a fully specified problem — the
+/// graph compiler's per-layer resolution:
+///
+/// * `r == 1` → the [`ConvAlgorithm::Gemm1x1`] fast path (no transforms
+///   could beat a GEMM that needs no gathering);
+/// * `stride > 1` → [`ConvAlgorithm::Direct`] (tiled transforms require
+///   unit stride — see [`ConvAlgorithm::supports`]);
+/// * otherwise the roofline [`select`] over the padded model shape.
+pub fn algo_for_problem(p: &crate::conv::ConvProblem, machine: &Machine) -> ConvAlgorithm {
+    if p.r == 1 {
+        return ConvAlgorithm::Gemm1x1;
+    }
+    if p.stride != 1 {
+        return ConvAlgorithm::Direct;
+    }
+    let choice = select(&LayerShape::for_problem(p), machine);
+    method_algo(choice.method, choice.m)
+}
+
 /// Per-method best tiles (for reporting the paper's tile-size table).
 pub fn best_tiles_per_method(l: &LayerShape, machine: &Machine) -> Vec<Choice> {
     Method::ALL
@@ -334,6 +353,17 @@ mod tests {
             x: 34,
             r: 3,
         }
+    }
+
+    #[test]
+    fn algo_for_problem_routes_geometry() {
+        let m = xeon_gold();
+        let pw = crate::conv::ConvProblem::unit(1, 16, 64, 28, 28, 1);
+        assert_eq!(algo_for_problem(&pw, &m), ConvAlgorithm::Gemm1x1);
+        let strided = crate::conv::ConvProblem::with_geometry(1, 3, 64, 227, 227, 11, 4, 0);
+        assert_eq!(algo_for_problem(&strided, &m), ConvAlgorithm::Direct);
+        let tiled = crate::conv::ConvProblem::with_geometry(1, 64, 64, 56, 56, 3, 1, 1);
+        assert!(algo_for_problem(&tiled, &m).tile_m().is_some());
     }
 
     #[test]

@@ -51,6 +51,21 @@ impl LayerShape {
         let n1 = (self.x - self.r + 1).div_ceil(m);
         n1 * n1
     }
+
+    /// The model shape of a [`ConvProblem`]: `x` is the *padded* spatial
+    /// extent (the tile grid spans the halo), matching the paper's layer
+    /// tables, which count pre-padded sizes.  Strided problems have no
+    /// tiled model — callers gate on `stride == 1` before consulting the
+    /// transform-stage estimators.
+    pub fn for_problem(p: &crate::conv::ConvProblem) -> LayerShape {
+        LayerShape {
+            b: p.batch,
+            c: p.c_in,
+            k: p.c_out,
+            x: p.h.max(p.w) + 2 * p.pad,
+            r: p.r,
+        }
+    }
 }
 
 /// One stage's model numbers.

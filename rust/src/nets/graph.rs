@@ -1,0 +1,562 @@
+//! The whole-network graph executor: compile a chain of conv layers into
+//! warmed per-layer plans behind one handle, then run full networks per
+//! request with layer N's output feeding layer N+1's input through a
+//! pair of ping-pong grow-only arenas — no round-trip through the
+//! caller, no per-layer allocation after the first run.
+//!
+//! ## Dataflow
+//!
+//! ```text
+//!   x ──layer0──► ping ──layer1──► pong ──layer2──► ping ── ... ──► out
+//! ```
+//!
+//! Both arenas are [`Tensor4`]s reshaped in place per layer
+//! ([`Tensor4::reshape_zeroed`]): the backing `Vec` only ever grows its
+//! capacity, so once each arena has seen the network's largest
+//! intermediate activation, running the network again performs **zero**
+//! allocations in the inter-layer plumbing — asserted by
+//! [`CompiledNetwork::arena_stamp`] in the e2e suite.  Per-layer scratch
+//! lives in the scheduler's cached [`LayerPlan`]s, which are equally
+//! grow-only, and plan reuse is observable through
+//! `StaticScheduler::plan_builds`.
+//!
+//! ## Per-layer resolution
+//!
+//! Each layer either names its algorithm explicitly or defers to
+//! [`model::select::algo_for_problem`]: 1x1 kernels take the
+//! [`ConvAlgorithm::Gemm1x1`] per-pixel GEMM fast path, strided layers
+//! the direct path (tiled transforms are unit-stride), and everything
+//! else the roofline winner over the padded model shape.  Staged-vs-fused
+//! execution is *not* decided here — every tiled layer flows through the
+//! scheduler's `(plan, batch bucket)` tuning table like any registered
+//! layer, so a network's layers can resolve to different execution modes
+//! and refine them from live traffic.
+//!
+//! [`LayerPlan`]: crate::conv::LayerPlan
+//! [`model::select::algo_for_problem`]: crate::model::select::algo_for_problem
+
+use crate::conv::{ConvAlgorithm, ConvProblem, Tensor4};
+use crate::coordinator::scheduler::{PlanHandle, StaticScheduler};
+use crate::model::select::algo_for_problem;
+use std::fmt;
+use std::time::Instant;
+
+/// One layer of a network description: output channels and kernel
+/// geometry; input channels and spatial size are inferred by chaining.
+#[derive(Clone, Debug)]
+pub struct LayerSpec {
+    pub name: String,
+    pub c_out: usize,
+    pub r: usize,
+    pub stride: usize,
+    pub pad: usize,
+    /// `None` defers to the roofline model at compile time
+    pub algo: Option<ConvAlgorithm>,
+}
+
+impl LayerSpec {
+    /// Unit-stride conv layer with symmetric padding.
+    pub fn conv(name: &str, c_out: usize, r: usize, pad: usize) -> LayerSpec {
+        LayerSpec {
+            name: name.to_string(),
+            c_out,
+            r,
+            stride: 1,
+            pad,
+            algo: None,
+        }
+    }
+
+    /// Strided layer (downsampler or AlexNet-style strided stem).
+    pub fn strided(name: &str, c_out: usize, r: usize, stride: usize, pad: usize) -> LayerSpec {
+        LayerSpec {
+            stride,
+            ..LayerSpec::conv(name, c_out, r, pad)
+        }
+    }
+
+    /// 1x1 pointwise layer — compiles to the GEMM fast path.
+    pub fn pointwise(name: &str, c_out: usize) -> LayerSpec {
+        LayerSpec::conv(name, c_out, 1, 0)
+    }
+
+    /// Pin the algorithm instead of deferring to the model.
+    pub fn with_algo(mut self, algo: ConvAlgorithm) -> LayerSpec {
+        self.algo = Some(algo);
+        self
+    }
+}
+
+/// A network description: an input plane and a chain of [`LayerSpec`]s.
+#[derive(Clone, Debug)]
+pub struct NetworkGraph {
+    pub name: String,
+    pub c_in: usize,
+    pub h: usize,
+    pub w: usize,
+    pub layers: Vec<LayerSpec>,
+}
+
+/// Why a graph failed validation or compilation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum GraphError {
+    /// a network must have at least one layer
+    Empty,
+    /// layer `index`'s geometry is degenerate where the chain put it
+    /// (kernel larger than the padded activation, or zero stride/dims)
+    BadGeometry {
+        index: usize,
+        name: String,
+        c_in: usize,
+        h: usize,
+        w: usize,
+        r: usize,
+        stride: usize,
+        pad: usize,
+    },
+    /// layer `index` pinned an algorithm that cannot run its geometry
+    /// (tiled + strided, or Gemm1x1 with r != 1)
+    UnsupportedAlgo {
+        index: usize,
+        name: String,
+        algo: String,
+    },
+    /// `compile` received the wrong number of weight tensors
+    WeightCount { got: usize, want: usize },
+    /// layer `index`'s weights do not match its (K, C, r, r) shape
+    WeightShape {
+        index: usize,
+        got: [usize; 4],
+        want: [usize; 4],
+    },
+}
+
+impl fmt::Display for GraphError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            GraphError::Empty => write!(f, "network has no layers"),
+            GraphError::BadGeometry {
+                index,
+                name,
+                c_in,
+                h,
+                w,
+                r,
+                stride,
+                pad,
+            } => write!(
+                f,
+                "layer {index} '{name}': degenerate geometry (c_in {c_in}, {h}x{w} \
+                 activation, {r}x{r} kernel, stride {stride}, pad {pad})"
+            ),
+            GraphError::UnsupportedAlgo { index, name, algo } => write!(
+                f,
+                "layer {index} '{name}': {algo} cannot run this geometry"
+            ),
+            GraphError::WeightCount { got, want } => {
+                write!(f, "got {got} weight tensors for {want} layers")
+            }
+            GraphError::WeightShape { index, got, want } => {
+                write!(f, "layer {index}: weight shape {got:?} != {want:?}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for GraphError {}
+
+impl NetworkGraph {
+    pub fn new(name: &str, c_in: usize, h: usize, w: usize) -> NetworkGraph {
+        NetworkGraph {
+            name: name.to_string(),
+            c_in,
+            h,
+            w,
+            layers: Vec::new(),
+        }
+    }
+
+    /// Append a layer (builder style).
+    pub fn layer(mut self, spec: LayerSpec) -> NetworkGraph {
+        self.layers.push(spec);
+        self
+    }
+
+    /// Chain the layer shapes at batch `b`: each layer's input channels
+    /// and spatial size come from its predecessor's output.  The one
+    /// validation pass every entry point (compile, submit) builds on.
+    pub fn problems(&self, b: usize) -> Result<Vec<ConvProblem>, GraphError> {
+        if self.layers.is_empty() {
+            return Err(GraphError::Empty);
+        }
+        let (mut c, mut h, mut w) = (self.c_in, self.h, self.w);
+        let mut out = Vec::with_capacity(self.layers.len());
+        for (index, spec) in self.layers.iter().enumerate() {
+            let p = ConvProblem::with_geometry(
+                b.max(1),
+                c,
+                spec.c_out,
+                h,
+                w,
+                spec.r,
+                spec.stride,
+                spec.pad,
+            );
+            if c == 0 || spec.c_out == 0 || spec.r == 0 || !p.geometry_valid() {
+                return Err(GraphError::BadGeometry {
+                    index,
+                    name: spec.name.clone(),
+                    c_in: c,
+                    h,
+                    w,
+                    r: spec.r,
+                    stride: spec.stride,
+                    pad: spec.pad,
+                });
+            }
+            if let Some(algo) = spec.algo {
+                if !algo.supports(&p) {
+                    return Err(GraphError::UnsupportedAlgo {
+                        index,
+                        name: spec.name.clone(),
+                        algo: algo.name(),
+                    });
+                }
+            }
+            (c, h, w) = (spec.c_out, p.out_h(), p.out_w());
+            out.push(p);
+        }
+        Ok(out)
+    }
+
+    /// The network's output shape at batch `b`.
+    pub fn output_shape(&self, b: usize) -> Result<[usize; 4], GraphError> {
+        Ok(self.problems(b)?.last().expect("non-empty").output_shape())
+    }
+}
+
+/// One compiled layer: resolved algorithm, owned weights, warmed plan.
+pub struct CompiledLayer {
+    pub name: String,
+    pub algo: ConvAlgorithm,
+    /// geometry at the compile-time batch hint; `run` rebinds the batch
+    problem: ConvProblem,
+    weights: Tensor4,
+    handle: PlanHandle,
+}
+
+impl CompiledLayer {
+    pub fn problem_at(&self, b: usize) -> ConvProblem {
+        ConvProblem {
+            batch: b.max(1),
+            ..self.problem
+        }
+    }
+}
+
+/// A compiled network: warmed per-layer plans plus the two ping-pong
+/// arenas.  Create with [`CompiledNetwork::compile`], run with
+/// [`CompiledNetwork::run`], release plan pins with
+/// [`CompiledNetwork::discard`].
+pub struct CompiledNetwork {
+    pub name: String,
+    c_in: usize,
+    h: usize,
+    w: usize,
+    layers: Vec<CompiledLayer>,
+    ping: Tensor4,
+    pong: Tensor4,
+    /// wall seconds per layer of the most recent [`CompiledNetwork::run`]
+    pub last_layer_secs: Vec<f64>,
+}
+
+impl CompiledNetwork {
+    /// Validate the graph, resolve each layer's algorithm (explicit pin
+    /// or roofline), and warm every plan in the scheduler's cache so the
+    /// first request already runs the allocation-free hot path.
+    pub fn compile(
+        graph: &NetworkGraph,
+        weights: Vec<Tensor4>,
+        batch_hint: usize,
+        sched: &mut StaticScheduler,
+    ) -> Result<CompiledNetwork, GraphError> {
+        let problems = graph.problems(batch_hint)?;
+        if weights.len() != problems.len() {
+            return Err(GraphError::WeightCount {
+                got: weights.len(),
+                want: problems.len(),
+            });
+        }
+        for (index, (p, w)) in problems.iter().zip(&weights).enumerate() {
+            if w.shape != p.weight_shape() {
+                return Err(GraphError::WeightShape {
+                    index,
+                    got: w.shape,
+                    want: p.weight_shape(),
+                });
+            }
+        }
+        let mut layers = Vec::with_capacity(problems.len());
+        for ((spec, p), w) in graph.layers.iter().zip(&problems).zip(weights) {
+            let algo = spec
+                .algo
+                .unwrap_or_else(|| algo_for_problem(p, sched.machine()));
+            debug_assert!(algo.supports(p), "resolver must honor geometry");
+            let handle = sched.warm_padded(algo, &w, p.h, p.w, p.pad, batch_hint);
+            layers.push(CompiledLayer {
+                name: spec.name.clone(),
+                algo,
+                problem: *p,
+                weights: w,
+                handle,
+            });
+        }
+        Ok(CompiledNetwork {
+            name: graph.name.clone(),
+            c_in: graph.c_in,
+            h: graph.h,
+            w: graph.w,
+            layers,
+            ping: Tensor4::zeros([0, 0, 0, 0]),
+            pong: Tensor4::zeros([0, 0, 0, 0]),
+            last_layer_secs: Vec::new(),
+        })
+    }
+
+    /// The input shape the network accepts at batch `b`.
+    pub fn input_shape(&self, b: usize) -> [usize; 4] {
+        [b, self.c_in, self.h, self.w]
+    }
+
+    /// The compiled layers (names, resolved algorithms) — observability.
+    pub fn layers(&self) -> &[CompiledLayer] {
+        &self.layers
+    }
+
+    /// Run the whole network on a stacked batch.  Layer outputs flow
+    /// through the two arenas (never back to the caller); only the final
+    /// activation is copied out as the owned result.
+    pub fn run(&mut self, sched: &mut StaticScheduler, x: &Tensor4) -> Tensor4 {
+        let b = x.shape[0];
+        assert_eq!(x.shape, self.input_shape(b), "network input mismatch");
+        self.last_layer_secs.clear();
+        let mut flip = false; // false: the next destination is `ping`
+        for (i, layer) in self.layers.iter().enumerate() {
+            let p = layer.problem_at(b);
+            let t0 = Instant::now();
+            let (prev, dst) = if flip {
+                (&self.ping, &mut self.pong)
+            } else {
+                (&self.pong, &mut self.ping)
+            };
+            let src: &Tensor4 = if i == 0 { x } else { prev };
+            dst.reshape_zeroed(p.output_shape());
+            sched.run_planned_into(layer.handle, &p, src, &layer.weights, dst);
+            self.last_layer_secs.push(t0.elapsed().as_secs_f64());
+            flip = !flip;
+        }
+        let out = if flip { &self.ping } else { &self.pong };
+        Tensor4::from_vec(out.shape, out.data.clone())
+    }
+
+    /// Allocation stamps of both arenas — unchanged across a run means
+    /// the inter-layer plumbing allocated nothing (see module docs).
+    pub fn arena_stamp(&self) -> [(usize, usize); 2] {
+        [self.ping.alloc_stamp(), self.pong.alloc_stamp()]
+    }
+
+    /// DRAM bytes per batch-`b` run the arena dataflow saves against a
+    /// caller round-trip, where every interior activation is copied out
+    /// of the service (response) and back in (request re-stacking):
+    /// two f32 copies of each intermediate output.
+    pub fn interlayer_bytes_saved(&self, b: usize) -> usize {
+        self.layers
+            .iter()
+            .take(self.layers.len().saturating_sub(1))
+            .map(|l| {
+                let p = l.problem_at(b);
+                2 * 4 * p.batch * p.c_out * p.out_h() * p.out_w()
+            })
+            .sum()
+    }
+
+    /// Release the plan pins held for every layer (the unregister path);
+    /// the scheduler frees plans whose last pin dropped.
+    pub fn discard(self, sched: &mut StaticScheduler) {
+        for layer in self.layers {
+            sched.discard(layer.handle);
+        }
+    }
+}
+
+/// The channel divisor helper for host-scaled graphs (min 1 channel).
+fn ch(c: usize, cdiv: usize) -> usize {
+    (c / cdiv.max(1)).max(1)
+}
+
+/// VGG-16's full conv stack, host-scaled: 13 conv layers (3x3 pad=1) in
+/// five blocks, stride-2 2x2 conv downsamplers standing in for the max
+/// pools (so shapes chain through one algebra), and the classifier head
+/// as 1x1 convs — the [`ConvAlgorithm::Gemm1x1`] fast path.  `input_x`
+/// must survive four halvings (divisible by 16); `cdiv` scales channels.
+pub fn vgg16(input_x: usize, cdiv: usize) -> NetworkGraph {
+    assert!(input_x % 16 == 0, "vgg16 needs input_x divisible by 16");
+    let mut g = NetworkGraph::new("vgg16", 3, input_x, input_x);
+    let blocks: [(usize, usize); 5] = [(64, 2), (128, 2), (256, 3), (512, 3), (512, 3)];
+    for (bi, (c, reps)) in blocks.iter().enumerate() {
+        let k = ch(*c, cdiv);
+        for li in 0..*reps {
+            g = g.layer(LayerSpec::conv(&format!("conv{}_{}", bi + 1, li + 1), k, 3, 1));
+        }
+        if bi < 4 {
+            // pool-as-conv: stride-2 2x2, channels preserved
+            g = g.layer(LayerSpec::strided(&format!("pool{}", bi + 1), k, 2, 2, 0));
+        }
+    }
+    let k5 = ch(512, cdiv);
+    g.layer(LayerSpec::pointwise("fc7", k5))
+        .layer(LayerSpec::pointwise("fc8", 10))
+}
+
+/// AlexNet's conv stack, host-scaled, *including* the strided 11x11
+/// stem the paper's tiled benchmarks exclude — here it exercises the
+/// direct path inside a mixed-algorithm network.  `input_x` must
+/// satisfy `(input_x - 11) % 4 == 0`.
+pub fn alexnet(input_x: usize, cdiv: usize) -> NetworkGraph {
+    assert!(input_x >= 11 && (input_x - 11) % 4 == 0, "alexnet stem needs (x-11)%4==0");
+    NetworkGraph::new("alexnet", 3, input_x, input_x)
+        .layer(LayerSpec::strided("conv1", ch(64, cdiv), 11, 4, 0))
+        .layer(LayerSpec::conv("conv2", ch(192, cdiv), 5, 2))
+        .layer(LayerSpec::conv("conv3", ch(384, cdiv), 3, 1))
+        .layer(LayerSpec::conv("conv4", ch(256, cdiv), 3, 1))
+        .layer(LayerSpec::conv("conv5", ch(256, cdiv), 3, 1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::direct;
+
+    fn seeded_weights(problems: &[ConvProblem], seed: u64) -> Vec<Tensor4> {
+        problems
+            .iter()
+            .enumerate()
+            .map(|(i, p)| Tensor4::random(p.weight_shape(), seed + i as u64))
+            .collect()
+    }
+
+    #[test]
+    fn vgg16_graph_chains_to_the_classifier() {
+        let g = vgg16(32, 16);
+        let ps = g.problems(2).unwrap();
+        assert_eq!(ps.len(), 13 + 4 + 2);
+        // blocks run at 32, 16, 8, 4, 2; the head keeps 2x2
+        assert_eq!(g.output_shape(2).unwrap(), [2, 10, 2, 2]);
+        // pool-as-conv halves, pad keeps conv sizes
+        assert_eq!(ps[2].stride, 2);
+        assert_eq!(ps[2].out_h(), 16);
+        // the head is pointwise
+        assert_eq!(ps[ps.len() - 1].r, 1);
+    }
+
+    #[test]
+    fn alexnet_graph_keeps_the_strided_stem() {
+        let g = alexnet(19, 8);
+        let ps = g.problems(1).unwrap();
+        assert_eq!(ps[0].stride, 4);
+        assert_eq!(ps[0].out_h(), 3); // (19 - 11)/4 + 1
+        assert_eq!(g.output_shape(1).unwrap()[2], 3);
+    }
+
+    #[test]
+    fn validation_rejects_broken_chains() {
+        let empty = NetworkGraph::new("none", 3, 8, 8);
+        assert_eq!(empty.problems(1).unwrap_err(), GraphError::Empty);
+        // 5x5 kernel cannot fit the 2x2 activation a stride-4 layer leaves
+        let g = NetworkGraph::new("bad", 3, 8, 8)
+            .layer(LayerSpec::strided("s", 4, 3, 4, 0))
+            .layer(LayerSpec::conv("c", 4, 5, 0));
+        assert!(matches!(
+            g.problems(1).unwrap_err(),
+            GraphError::BadGeometry { index: 1, .. }
+        ));
+        // a tiled algorithm pinned onto a strided layer
+        let g = NetworkGraph::new("pin", 3, 8, 8).layer(
+            LayerSpec::strided("s", 4, 3, 2, 0).with_algo(ConvAlgorithm::Winograd { m: 2 }),
+        );
+        assert!(matches!(
+            g.problems(1).unwrap_err(),
+            GraphError::UnsupportedAlgo { index: 0, .. }
+        ));
+    }
+
+    #[test]
+    fn compile_checks_weights() {
+        let mut s = StaticScheduler::new(1);
+        let g = NetworkGraph::new("tiny", 2, 6, 6)
+            .layer(LayerSpec::conv("a", 3, 3, 0))
+            .layer(LayerSpec::pointwise("b", 4));
+        let ps = g.problems(1).unwrap();
+        assert_eq!(
+            CompiledNetwork::compile(&g, vec![], 1, &mut s).unwrap_err(),
+            GraphError::WeightCount { got: 0, want: 2 }
+        );
+        let mut w = seeded_weights(&ps, 7);
+        w[1] = Tensor4::zeros([4, 3, 3, 3]); // b is 1x1, not 3x3
+        assert!(matches!(
+            CompiledNetwork::compile(&g, w, 1, &mut s).unwrap_err(),
+            GraphError::WeightShape { index: 1, .. }
+        ));
+    }
+
+    #[test]
+    fn compiled_network_matches_layerwise_oracle() {
+        let mut s = StaticScheduler::new(2);
+        let g = NetworkGraph::new("mix", 2, 12, 12)
+            .layer(LayerSpec::conv("c1", 4, 3, 1))
+            .layer(LayerSpec::strided("pool", 4, 2, 2, 0))
+            .layer(LayerSpec::pointwise("pw", 6))
+            .layer(LayerSpec::conv("c2", 3, 3, 0));
+        let ps = g.problems(3).unwrap();
+        let weights = seeded_weights(&ps, 40);
+        let mut net = CompiledNetwork::compile(&g, weights.clone(), 3, &mut s).unwrap();
+        // the resolver routed each geometry to a legal algorithm
+        let algos: Vec<ConvAlgorithm> = net.layers().iter().map(|l| l.algo).collect();
+        assert_eq!(algos[2], ConvAlgorithm::Gemm1x1);
+        assert!(algos[1].supports(&ps[1]));
+        let x = Tensor4::random([3, 2, 12, 12], 41);
+        let got = net.run(&mut s, &x);
+        // oracle: chain direct::reference layer by layer
+        let mut want = x.clone();
+        for (p, w) in ps.iter().zip(&weights) {
+            want = direct::reference(p, &want, w);
+        }
+        assert_eq!(got.shape, want.shape);
+        assert!(
+            got.max_abs_diff(&want) < 1e-4 * want.max_abs().max(1.0),
+            "diff {}",
+            got.max_abs_diff(&want)
+        );
+        assert_eq!(net.last_layer_secs.len(), 4);
+    }
+
+    #[test]
+    fn second_run_reuses_arenas_and_plans() {
+        let mut s = StaticScheduler::new(1);
+        let g = vgg16(16, 32);
+        let ps = g.problems(1).unwrap();
+        let mut net = CompiledNetwork::compile(&g, seeded_weights(&ps, 9), 1, &mut s).unwrap();
+        let builds_after_compile = s.plan_builds();
+        let x = Tensor4::random([1, 3, 16, 16], 10);
+        let a = net.run(&mut s, &x);
+        let stamp = net.arena_stamp();
+        let builds = s.plan_builds();
+        assert_eq!(builds, builds_after_compile, "run must reuse warmed plans");
+        let b = net.run(&mut s, &x);
+        assert_eq!(net.arena_stamp(), stamp, "arenas must not reallocate");
+        assert_eq!(s.plan_builds(), builds, "no plan rebuilt");
+        assert_eq!(a.max_abs_diff(&b), 0.0, "deterministic replay");
+        assert!(net.interlayer_bytes_saved(1) > 0);
+        net.discard(&mut s);
+    }
+}

@@ -1,6 +1,16 @@
 //! The paper's benchmark workloads: every distinct convolutional layer of
 //! VGG-16 and AlexNet (§4), with the paper's naming, plus scaled variants
-//! for single-host measurement.
+//! for single-host measurement, and [`graph`] — whole-network graphs the
+//! serving executor compiles and runs end-to-end.
+//!
+//! Layers declare their *unpadded* feature-map size with explicit
+//! `stride`/`pad` (VGG convolves 224 maps at pad=1; AlexNet layer 1 runs
+//! 227 maps at stride 4).  [`NetLayer::model_shape`] reconstructs the
+//! padded spatial extent the analytic model counts — identical numbers to
+//! the paper's tables, which fold the framework padding into the size
+//! (224 + 2·1 = 226).
+
+pub mod graph;
 
 use crate::conv::ConvProblem;
 use crate::model::stages::LayerShape;
@@ -9,72 +19,116 @@ use crate::model::stages::LayerShape;
 #[derive(Clone, Copy, Debug)]
 pub struct NetLayer {
     pub name: &'static str,
-    pub shape: LayerShape,
+    /// channel/batch structure with the **unpadded** spatial size
+    pub base: LayerShape,
+    pub stride: usize,
+    pub pad: usize,
 }
 
 impl NetLayer {
-    pub const fn new(name: &'static str, b: usize, c: usize, k: usize, x: usize, r: usize) -> Self {
+    #[allow(clippy::too_many_arguments)]
+    pub const fn new(
+        name: &'static str,
+        b: usize,
+        c: usize,
+        k: usize,
+        x: usize,
+        r: usize,
+        stride: usize,
+        pad: usize,
+    ) -> Self {
         NetLayer {
             name,
-            shape: LayerShape { b, c, k, x, r },
+            base: LayerShape { b, c, k, x, r },
+            stride,
+            pad,
         }
     }
 
-    /// As an engine problem (square images).
+    /// Unit-stride layer with symmetric padding (most conv layers).
+    pub const fn conv(
+        name: &'static str,
+        b: usize,
+        c: usize,
+        k: usize,
+        x: usize,
+        r: usize,
+        pad: usize,
+    ) -> Self {
+        NetLayer::new(name, b, c, k, x, r, 1, pad)
+    }
+
+    /// As an engine problem (square images, explicit geometry).
     pub fn problem(&self) -> ConvProblem {
-        ConvProblem {
-            batch: self.shape.b,
-            c_in: self.shape.c,
-            c_out: self.shape.k,
-            h: self.shape.x,
-            w: self.shape.x,
-            r: self.shape.r,
+        ConvProblem::with_geometry(
+            self.base.b,
+            self.base.c,
+            self.base.k,
+            self.base.x,
+            self.base.x,
+            self.base.r,
+            self.stride,
+            self.pad,
+        )
+    }
+
+    /// The shape the analytic model consumes: spatial size *including*
+    /// the padding halo, exactly the pre-padded sizes the paper's layer
+    /// tables list (vgg1.2: 224 + 2 = 226, alexnet2: 27 + 4 = 31).
+    pub fn model_shape(&self) -> LayerShape {
+        LayerShape {
+            x: self.base.x + 2 * self.pad,
+            ..self.base
         }
     }
 
     /// Scale batch (and optionally spatial size) for host-sized runs.
     pub fn scaled(&self, batch: usize, max_x: usize) -> NetLayer {
         let mut l = *self;
-        l.shape.b = batch;
-        if l.shape.x > max_x {
-            l.shape.x = max_x;
+        l.base.b = batch;
+        if l.base.x > max_x {
+            l.base.x = max_x;
         }
         l
     }
 }
 
-/// VGG-16's distinct conv layers (paper Fig. 1 naming; spatial sizes
-/// include VGG's pad=1, i.e. a 224 feature map convolves at 226).
-/// vgg1.1 (C=3) is excluded, as in the paper; vgg5.2 == vgg5.1.
+/// VGG-16's distinct conv layers (paper Fig. 1 naming): 224-per-block
+/// feature maps halving per block, all 3x3 pad=1 stride=1.  vgg1.1 (C=3)
+/// is excluded, as in the paper; vgg5.2 == vgg5.1.
 pub fn vgg(batch: usize) -> Vec<NetLayer> {
     vec![
-        NetLayer::new("vgg1.2", batch, 64, 64, 226, 3),
-        NetLayer::new("vgg2.1", batch, 64, 128, 114, 3),
-        NetLayer::new("vgg2.2", batch, 128, 128, 114, 3),
-        NetLayer::new("vgg3.1", batch, 128, 256, 58, 3),
-        NetLayer::new("vgg3.2", batch, 256, 256, 58, 3),
-        NetLayer::new("vgg4.1", batch, 256, 512, 30, 3),
-        NetLayer::new("vgg4.2", batch, 512, 512, 30, 3),
-        NetLayer::new("vgg5.1", batch, 512, 512, 16, 3),
+        NetLayer::conv("vgg1.2", batch, 64, 64, 224, 3, 1),
+        NetLayer::conv("vgg2.1", batch, 64, 128, 112, 3, 1),
+        NetLayer::conv("vgg2.2", batch, 128, 128, 112, 3, 1),
+        NetLayer::conv("vgg3.1", batch, 128, 256, 56, 3, 1),
+        NetLayer::conv("vgg3.2", batch, 256, 256, 56, 3, 1),
+        NetLayer::conv("vgg4.1", batch, 256, 512, 28, 3, 1),
+        NetLayer::conv("vgg4.2", batch, 512, 512, 28, 3, 1),
+        NetLayer::conv("vgg5.1", batch, 512, 512, 14, 3, 1),
     ]
 }
 
-/// AlexNet's distinct unit-stride conv layers 2-5 (layer 1 is strided and
-/// excluded by the paper).  Layer 2 has the 5x5 kernels the vendor
-/// Winograd libraries cannot handle.
+/// AlexNet's distinct conv layers, *including* the strided layer 1
+/// (11x11, stride 4 — runnable by the direct paths and the graph
+/// executor; the tiled methods and [`paper_layers`] still exclude it,
+/// as the paper does).  Layer 2 has the 5x5 kernels the vendor Winograd
+/// libraries cannot handle.
 pub fn alexnet(batch: usize) -> Vec<NetLayer> {
     vec![
-        NetLayer::new("alexnet2", batch, 64, 192, 31, 5),
-        NetLayer::new("alexnet3", batch, 192, 384, 15, 3),
-        NetLayer::new("alexnet4", batch, 384, 256, 15, 3),
-        NetLayer::new("alexnet5", batch, 256, 256, 15, 3),
+        NetLayer::new("alexnet1", batch, 3, 64, 227, 11, 4, 0),
+        NetLayer::conv("alexnet2", batch, 64, 192, 27, 5, 2),
+        NetLayer::conv("alexnet3", batch, 192, 384, 13, 3, 1),
+        NetLayer::conv("alexnet4", batch, 384, 256, 13, 3, 1),
+        NetLayer::conv("alexnet5", batch, 256, 256, 13, 3, 1),
     ]
 }
 
-/// The paper's full 12-layer benchmark set (VGG B=64, AlexNet B=128).
+/// The paper's full 12-layer benchmark set (VGG B=64, AlexNet B=128;
+/// unit-stride only — AlexNet layer 1 is excluded, as in the paper).
 pub fn paper_layers() -> Vec<NetLayer> {
     let mut v = vgg(64);
-    v.extend(alexnet(128));
+    v.extend(alexnet(128).into_iter().filter(|l| l.stride == 1));
     v
 }
 
@@ -94,6 +148,7 @@ mod tests {
     #[test]
     fn twelve_distinct_layers() {
         assert_eq!(paper_layers().len(), 12);
+        assert!(paper_layers().iter().all(|l| l.stride == 1));
     }
 
     #[test]
@@ -109,15 +164,34 @@ mod tests {
     }
 
     #[test]
-    fn alexnet2_is_5x5() {
+    fn model_shapes_match_paper_prepadded_sizes() {
+        // the paper's tables fold padding into the size: these exact
+        // numbers fed every previous model figure and must not move
+        let xs: Vec<usize> = paper_layers().iter().map(|l| l.model_shape().x).collect();
+        assert_eq!(xs, [226, 114, 114, 58, 58, 30, 30, 16, 31, 15, 15, 15]);
+    }
+
+    #[test]
+    fn alexnet1_is_strided() {
         let l = &alexnet(128)[0];
-        assert_eq!(l.shape.r, 5);
+        assert_eq!((l.base.r, l.stride, l.pad), (11, 4, 0));
+        let p = l.problem();
+        assert_eq!(p.out_h(), 55); // (227 - 11)/4 + 1
+    }
+
+    #[test]
+    fn alexnet2_is_5x5() {
+        let l = &alexnet(128)[1];
+        assert_eq!(l.base.r, 5);
+        assert_eq!(l.model_shape().x, 31);
     }
 
     #[test]
     fn problem_roundtrip() {
         let l = &vgg(64)[0];
         let p = l.problem();
+        assert_eq!((p.h, p.pad, p.stride), (224, 1, 1));
+        // pad=1 keeps VGG feature maps at their input size
         assert_eq!(p.out_h(), 224);
         assert_eq!(p.c_in, 64);
     }
@@ -125,9 +199,10 @@ mod tests {
     #[test]
     fn scaling_caps_spatial() {
         let l = vgg(64)[0].scaled(1, 66);
-        assert_eq!(l.shape.b, 1);
-        assert_eq!(l.shape.x, 66);
-        // channels preserved
-        assert_eq!(l.shape.c, 64);
+        assert_eq!(l.base.b, 1);
+        assert_eq!(l.base.x, 66);
+        // channels and geometry preserved
+        assert_eq!(l.base.c, 64);
+        assert_eq!(l.pad, 1);
     }
 }

@@ -110,14 +110,7 @@ fn prop_service_routes_responses_to_correct_ids() {
         let c = rng.range(1, 4);
         let k = rng.range(1, 4);
         let hw = rng.range(8, 14);
-        let problem = conv::ConvProblem {
-            batch: 8,
-            c_in: c,
-            c_out: k,
-            h: hw,
-            w: hw,
-            r: 3,
-        };
+        let problem = conv::ConvProblem::unit(8, c, k, hw, hw, 3);
         let mut svc = ConvService::builder(xeon_gold())
             .workers(2)
             .max_batch(4)

@@ -1,0 +1,219 @@
+//! Whole-network end-to-end differential suite: host-scaled VGG-16 and
+//! AlexNet run through the serving stack — `ConvService::register_network`
+//! / `submit_network` and the graph executor's ping-pong arenas — and
+//! every output is diffed against the one shared oracle
+//! (`conv::direct::reference` chained layer by layer).
+//!
+//! Axes covered here: the three tiled algorithms × forced staged/fused
+//! execution (the scheduler's `set_exec_override` knob), model-driven
+//! mixed-algorithm routing (tiled convs + direct strided layers + the
+//! 1x1 GEMM head in one network), and plan/arena reuse across repeat
+//! requests.  The ISA axis rides on `verify.sh`, which runs this suite
+//! twice — natively and under `FFTCONV_FORCE_ISA=scalar`.
+
+use fftconv::conv::{direct, ConvAlgorithm, ConvProblem, ExecMode, Tensor4};
+use fftconv::coordinator::{ConvService, StaticScheduler};
+use fftconv::model::machine::xeon_gold;
+use fftconv::nets::graph::{alexnet, vgg16, CompiledNetwork, NetworkGraph};
+use std::time::Duration;
+
+/// The acceptance tolerance: relative to the oracle's magnitude, after
+/// chaining every layer of the network.
+const REL_TOL: f32 = 1e-4;
+
+fn seeded_weights(problems: &[ConvProblem], seed: u64) -> Vec<Tensor4> {
+    problems
+        .iter()
+        .enumerate()
+        .map(|(i, p)| Tensor4::random(p.weight_shape(), seed + i as u64))
+        .collect()
+}
+
+/// The oracle: the naive direct reference applied layer by layer.
+fn oracle_chain(problems: &[ConvProblem], weights: &[Tensor4], x: &Tensor4) -> Tensor4 {
+    let b = x.shape[0];
+    let mut cur = x.clone();
+    for (p, w) in problems.iter().zip(weights) {
+        let p = ConvProblem { batch: b, ..*p };
+        cur = direct::reference(&p, &cur, w);
+    }
+    cur
+}
+
+fn assert_close(got: &Tensor4, want: &Tensor4, what: &str) {
+    assert_eq!(got.shape, want.shape, "{what}: shape");
+    let scale = want.max_abs().max(1.0);
+    let diff = got.max_abs_diff(want);
+    assert!(
+        diff < REL_TOL * scale,
+        "{what}: diverges from the oracle by {diff} (scale {scale})"
+    );
+}
+
+/// Pin every unit-stride multi-tap conv layer to `algo`; strided and 1x1
+/// layers keep their forced routing (Direct / Gemm1x1), so the pinned
+/// network still exercises the mixed-dispatch path.
+fn pin_tiled(g: NetworkGraph, algo: ConvAlgorithm) -> NetworkGraph {
+    let mut g = g;
+    for spec in g.layers.iter_mut() {
+        if spec.stride == 1 && spec.r > 1 {
+            spec.algo = Some(algo);
+        }
+    }
+    g
+}
+
+fn service(max_batch: usize) -> ConvService {
+    ConvService::builder(xeon_gold())
+        .workers(2)
+        .max_batch(max_batch)
+        .max_wait(Duration::from_millis(1))
+        .build()
+}
+
+#[test]
+fn vgg16_through_service_matches_oracle() {
+    let graph = vgg16(16, 32);
+    let problems = graph.problems(1).unwrap();
+    assert_eq!(problems.len(), 19, "13 convs + 4 pools + fc7/fc8");
+    let weights = seeded_weights(&problems, 7_000);
+    let mut svc = service(2);
+    let id = svc
+        .register_network("vgg16", graph, weights.clone(), 2)
+        .unwrap();
+    let xs: Vec<Tensor4> = (0..2).map(|i| Tensor4::random([1, 3, 16, 16], 7_100 + i)).collect();
+    let t0 = svc.submit_network(id, xs[0].clone()).unwrap();
+    let t1 = svc.submit_network(id, xs[1].clone()).unwrap();
+    assert_eq!(svc.unclaimed(), 2, "max_batch 2 executes on the 2nd submit");
+    for (x, t) in xs.iter().zip([t0, t1]) {
+        let resp = svc.take(t).unwrap();
+        let want = oracle_chain(&problems, &weights, x);
+        assert_close(&resp.output, &want, "vgg16 network response");
+        assert_eq!(resp.batch_size, 2);
+    }
+}
+
+#[test]
+fn alexnet_through_service_matches_oracle_including_strided_stem() {
+    let graph = alexnet(19, 8);
+    let problems = graph.problems(1).unwrap();
+    assert_eq!(problems[0].stride, 4, "the 11x11 stride-4 stem is served");
+    let weights = seeded_weights(&problems, 8_000);
+    let mut svc = service(2);
+    let id = svc
+        .register_network("alexnet", graph, weights.clone(), 2)
+        .unwrap();
+    // the compiled network is a genuinely mixed-algorithm pipeline
+    let algos: Vec<ConvAlgorithm> = svc
+        .network(id)
+        .unwrap()
+        .net
+        .layers()
+        .iter()
+        .map(|l| l.algo)
+        .collect();
+    assert_eq!(algos[0], ConvAlgorithm::Direct, "strided stem runs direct");
+    assert!(
+        algos[1..].iter().any(|a| a.tile_m().is_some()),
+        "model routing should pick a tiled method for some interior layer"
+    );
+    let x = Tensor4::random([1, 3, 19, 19], 8_100);
+    let t = svc.submit_network(id, x.clone()).unwrap();
+    svc.flush();
+    let resp = svc.take(t).unwrap();
+    let want = oracle_chain(&problems, &weights, &x);
+    assert_close(&resp.output, &want, "alexnet network response");
+}
+
+#[test]
+fn every_tiled_algorithm_matches_oracle_in_both_exec_modes() {
+    let tiled = [
+        ConvAlgorithm::Winograd { m: 2 },
+        ConvAlgorithm::RegularFft { m: 4 },
+        ConvAlgorithm::GaussFft { m: 4 },
+    ];
+    let x = Tensor4::random([2, 3, 16, 16], 9_000);
+    for algo in tiled {
+        let graph = pin_tiled(vgg16(16, 32), algo);
+        let problems = graph.problems(2).unwrap();
+        let weights = seeded_weights(&problems, 9_100);
+        let want = oracle_chain(&problems, &weights, &x);
+        let mut sched = StaticScheduler::new(2);
+        let mut net = CompiledNetwork::compile(&graph, weights, 2, &mut sched).unwrap();
+        // every unit-stride multi-tap layer really compiled to the pin
+        for (l, p) in net.layers().iter().zip(&problems) {
+            if p.stride == 1 && p.r > 1 {
+                assert_eq!(l.algo, algo);
+            }
+        }
+        for mode in [ExecMode::Staged, ExecMode::Fused] {
+            sched.set_exec_override(Some(mode));
+            let got = net.run(&mut sched, &x);
+            assert_close(&got, &want, &format!("{} / {mode:?}", algo.name()));
+        }
+        sched.set_exec_override(None);
+        net.discard(&mut sched);
+    }
+}
+
+#[test]
+fn repeat_requests_reuse_plans_and_arenas() {
+    let graph = vgg16(16, 32);
+    let problems = graph.problems(1).unwrap();
+    let weights = seeded_weights(&problems, 10_000);
+    let mut svc = service(2);
+    let id = svc
+        .register_network("vgg16", graph, weights.clone(), 2)
+        .unwrap();
+    let xs: Vec<Tensor4> = (0..2).map(|i| Tensor4::random([1, 3, 16, 16], 10_100 + i)).collect();
+
+    // first round: arenas grow to the network's high-water mark
+    let t0 = svc.submit_network(id, xs[0].clone()).unwrap();
+    let t1 = svc.submit_network(id, xs[1].clone()).unwrap();
+    let first: Vec<Tensor4> = [t0, t1]
+        .into_iter()
+        .map(|t| svc.take(t).unwrap().output)
+        .collect();
+    let builds = svc.plan_builds();
+    let stamps = svc.network(id).unwrap().net.arena_stamp();
+
+    // second round, identical traffic: zero new plan builds (the warmed
+    // plans serve it) and zero arena reallocation (grow-only ping-pong)
+    let t0 = svc.submit_network(id, xs[0].clone()).unwrap();
+    let t1 = svc.submit_network(id, xs[1].clone()).unwrap();
+    let second: Vec<Tensor4> = [t0, t1]
+        .into_iter()
+        .map(|t| svc.take(t).unwrap().output)
+        .collect();
+    assert_eq!(svc.plan_builds(), builds, "repeat request rebuilt a plan");
+    assert_eq!(
+        svc.network(id).unwrap().net.arena_stamp(),
+        stamps,
+        "repeat request reallocated an inter-layer arena"
+    );
+    for (a, b) in first.iter().zip(&second) {
+        assert_eq!(a.max_abs_diff(b), 0.0, "identical traffic must replay exactly");
+    }
+    for (x, got) in xs.iter().zip(&second) {
+        assert_close(got, &oracle_chain(&problems, &weights, x), "repeat response");
+    }
+}
+
+#[test]
+fn unregister_then_stale_network_handle_errors() {
+    use fftconv::coordinator::ServiceError;
+    let graph = alexnet(19, 8);
+    let problems = graph.problems(1).unwrap();
+    let weights = seeded_weights(&problems, 11_000);
+    let mut svc = service(4);
+    let id = svc.register_network("a", graph, weights, 1).unwrap();
+    let t = svc
+        .submit_network(id, Tensor4::random([1, 3, 19, 19], 11_100))
+        .unwrap();
+    svc.unregister_network(id).unwrap();
+    assert!(svc.take(t).is_some(), "pending image executed before retire");
+    assert!(matches!(
+        svc.submit_network(id, Tensor4::zeros([1, 3, 19, 19])).unwrap_err(),
+        ServiceError::UnknownNetwork { .. }
+    ));
+}

@@ -13,14 +13,7 @@ use fftconv::model::machine::xeon_gold;
 use std::time::Duration;
 
 fn problem(c_in: usize, hw: usize) -> ConvProblem {
-    ConvProblem {
-        batch: 4,
-        c_in,
-        c_out: 4,
-        h: hw,
-        w: hw,
-        r: 3,
-    }
+    ConvProblem::unit(4, c_in, 4, hw, hw, 3)
 }
 
 fn service(max_batch: usize) -> ConvService {

@@ -1,0 +1,146 @@
+//! Seeded-random shape sweep: ~40 `ConvProblem`s drawn from the full
+//! geometry space the serving stack now accepts — strides 2 and 4,
+//! zero-padding 0..=2, 1x1 kernels, the `h == r` edge, single-channel
+//! layers, batches smaller than the worker pool — each run through every
+//! algorithm that supports it and diffed against the shared naive oracle
+//! (`conv::direct::reference`).
+//!
+//! Tiled algorithms run three ways per problem: the one-shot
+//! `conv::run_problem` path, and the scheduler's planned path forced to
+//! Staged and to Fused via `set_exec_override`.  Failures print the
+//! per-case seed so any shape reproduces standalone.
+
+use fftconv::conv::{self, direct, ConvAlgorithm, ConvProblem, ExecMode, Tensor4};
+use fftconv::coordinator::StaticScheduler;
+use fftconv::util::Rng;
+
+const BASE_SEED: u64 = 0x5EED_CAFE;
+const RANDOM_CASES: u64 = 34;
+/// Relative tolerance vs the oracle — the repo's customary slop for the
+/// transform paths (`fused_equivalence` uses the same vs naive).
+const REL_TOL: f32 = 2e-3;
+
+/// Hand-picked geometry edges that must always be in the sweep, whatever
+/// the random draw does.
+fn pinned_cases() -> Vec<ConvProblem> {
+    vec![
+        // 1x1 kernel, strided: the Gemm1x1 path with subsampling
+        ConvProblem::with_geometry(2, 3, 4, 9, 9, 1, 2, 0),
+        // h == r: a single output pixel per plane
+        ConvProblem::with_geometry(1, 2, 3, 5, 5, 5, 1, 0),
+        // single in/out channel with padding
+        ConvProblem::with_geometry(1, 1, 1, 8, 8, 3, 1, 1),
+        // batch smaller than the worker pool
+        ConvProblem::with_geometry(1, 3, 2, 12, 12, 3, 1, 1),
+        // AlexNet-style large strided kernel
+        ConvProblem::with_geometry(2, 2, 3, 11, 11, 5, 4, 2),
+        // input smaller than the kernel, rescued by padding
+        ConvProblem::with_geometry(1, 3, 2, 3, 6, 5, 1, 2),
+    ]
+}
+
+fn random_problem(rng: &mut Rng) -> ConvProblem {
+    let r = [1, 3, 5][rng.below(3)];
+    let stride = [1, 1, 1, 2, 4][rng.below(5)];
+    let pad = rng.below(3);
+    // smallest h/w the geometry admits (padding can rescue h < r)
+    let min_hw = r.saturating_sub(2 * pad).max(1);
+    let h = min_hw + rng.below(10);
+    let w = min_hw + rng.below(10);
+    let b = 1 + rng.below(3);
+    let c_in = 1 + rng.below(4);
+    let c_out = 1 + rng.below(4);
+    ConvProblem::with_geometry(b, c_in, c_out, h, w, r, stride, pad)
+}
+
+/// Every algorithm worth diffing on this problem.  `supports` is the
+/// final arbiter; the tiled list stays to tile sizes the transform
+/// builders accept for the sampled kernels (r in {3, 5}).
+fn candidates(p: &ConvProblem) -> Vec<ConvAlgorithm> {
+    let mut v = vec![ConvAlgorithm::Direct, ConvAlgorithm::Im2col];
+    if p.r == 1 {
+        v.push(ConvAlgorithm::Gemm1x1);
+    }
+    if p.stride == 1 && p.r > 1 {
+        v.push(ConvAlgorithm::Winograd { m: 2 });
+        v.push(ConvAlgorithm::RegularFft { m: 4 });
+        v.push(ConvAlgorithm::GaussFft { m: 4 });
+        if p.r == 3 {
+            v.push(ConvAlgorithm::Winograd { m: 4 });
+        }
+    }
+    v.retain(|a| a.supports(p));
+    v
+}
+
+fn check(got: &Tensor4, want: &Tensor4, ctx: &str) {
+    assert_eq!(got.shape, want.shape, "{ctx}: output shape");
+    let scale = want.max_abs().max(1.0);
+    let diff = got.max_abs_diff(want);
+    assert!(
+        diff < REL_TOL * scale,
+        "{ctx}: off by {diff} (scale {scale})"
+    );
+}
+
+fn sweep_one(sched: &mut StaticScheduler, p: &ConvProblem, seed: u64, ctx: &str) {
+    let x = Tensor4::random(p.input_shape(), seed);
+    let w = Tensor4::random(p.weight_shape(), seed ^ 0xFFFF);
+    let want = direct::reference(p, &x, &w);
+    for algo in candidates(p) {
+        let ctx = format!("{ctx} seed={seed} {p:?} algo={}", algo.name());
+
+        // one-shot dispatch
+        let got = conv::run_problem(algo, p, &x, &w);
+        check(&got, &want, &format!("{ctx} one-shot"));
+
+        // the scheduler's planned path (the graph executor's entry);
+        // tiled plans additionally run under both forced exec modes
+        let handle = sched.warm_padded(algo, &w, p.h, p.w, p.pad, p.batch);
+        let modes: &[Option<ExecMode>] = if algo.tile_m().is_some() {
+            &[Some(ExecMode::Staged), Some(ExecMode::Fused)]
+        } else {
+            &[None]
+        };
+        for &mode in modes {
+            sched.set_exec_override(mode);
+            let mut out = Tensor4::zeros(p.output_shape());
+            sched.run_planned_into(handle, p, &x, &w, &mut out);
+            check(&out, &want, &format!("{ctx} planned mode={mode:?}"));
+        }
+        sched.set_exec_override(None);
+        sched.discard(handle);
+    }
+}
+
+#[test]
+fn pinned_edge_geometries_match_the_oracle() {
+    let mut sched = StaticScheduler::new(2);
+    for (i, p) in pinned_cases().iter().enumerate() {
+        assert!(p.geometry_valid(), "pinned case #{i} must be valid");
+        sweep_one(&mut sched, p, BASE_SEED ^ (i as u64), &format!("pinned#{i}"));
+    }
+}
+
+#[test]
+fn random_shape_sweep_matches_the_oracle() {
+    let mut sched = StaticScheduler::new(2);
+    let mut covered_strided = false;
+    let mut covered_padded = false;
+    let mut covered_1x1 = false;
+    for case in 0..RANDOM_CASES {
+        let seed = BASE_SEED + case;
+        let mut rng = Rng::new(seed);
+        let p = random_problem(&mut rng);
+        assert!(p.geometry_valid(), "sampler produced invalid geometry {p:?}");
+        covered_strided |= p.stride > 1;
+        covered_padded |= p.pad > 0;
+        covered_1x1 |= p.r == 1;
+        sweep_one(&mut sched, &p, seed, &format!("case#{case}"));
+    }
+    // the sampler is deterministic: make sure this seed range actually
+    // exercises the new geometry axes, not just unit problems
+    assert!(covered_strided, "sweep drew no strided problem");
+    assert!(covered_padded, "sweep drew no padded problem");
+    assert!(covered_1x1, "sweep drew no 1x1 problem");
+}

@@ -11,7 +11,12 @@ cargo test -q
 
 # the same suite again with SIMD dispatch pinned to the scalar kernels:
 # proves the portable path stays correct (and that the equivalence suite
-# in tests/simd_kernels.rs really is comparing against a live baseline)
+# in tests/simd_kernels.rs really is comparing against a live baseline).
+# This pass includes the whole-network differential suite
+# (tests/network_e2e.rs) and the random shape sweep (tests/shape_sweep.rs),
+# so every served network and sampled geometry is diffed against the
+# naive oracle on BOTH the native and the portable kernel sets — in
+# --quick mode too.
 echo "---- forced-scalar pass (FFTCONV_FORCE_ISA=scalar) ----"
 FFTCONV_FORCE_ISA=scalar cargo test -q
 
@@ -56,6 +61,9 @@ if [[ "${1:-}" != "--quick" ]]; then
             BENCH_hotpaths.json || true
         echo "---- transform phase: achieved GB/s vs calibrated ceiling ----"
         grep -E '"(bw_ceiling_gbps|input_ms|output_ms|input_gbps|output_gbps|bw_attainment_pct)"' \
+            BENCH_hotpaths.json || true
+        echo "---- network serving: per-net totals + arena savings ----"
+        grep -E '"(total_ms|interlayer_bytes_saved|slowest_layer)"' \
             BENCH_hotpaths.json || true
     fi
 fi
