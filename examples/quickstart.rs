@@ -229,4 +229,34 @@ fn main() {
         resp.output.shape,
         svc.plan_builds() - builds_before
     );
+
+    // --- profile warm-start: verdicts survive the process ----------------
+    // The tuning table's shareable half serializes (docs/ARCHITECTURE.md
+    // §8): export_profile() snapshots verdicts + EWMA streams + the
+    // calibrated machine ceilings; a fresh service built with
+    // .profile(..) imports matching-machine entries as Settled and
+    // serves its first batches with zero re-measurement (mismatched
+    // ceilings import Stale, and the decay machinery re-confirms them
+    // on local timings instead).  On disk: profile.save(path) /
+    // TuningProfile::load(path) — see examples/profile_warmstart.rs for
+    // the end-to-end smoke verify.sh runs.
+    let profile = svc.export_profile();
+    println!(
+        "\nprofile warm-start: exported {} tuning entries ({} settled) for {}",
+        profile.entries.len(),
+        profile.entries.iter().filter(|e| e.settled).count(),
+        profile.machine.name,
+    );
+    let mut warm = ConvService::builder(fftconv::model::machine::xeon_gold())
+        .workers(2)
+        .tuning_policy(TuningPolicy::Hybrid)
+        .profile(profile)
+        .build();
+    warm.register("conv1", problem, w.clone())
+        .expect("fresh service, fresh name");
+    println!(
+        "  fresh service imported {} entries, re-measurements owed: {}",
+        warm.tuning_entries(),
+        warm.decay_stats().remeasurements,
+    );
 }

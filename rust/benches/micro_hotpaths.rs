@@ -13,7 +13,9 @@ use fftconv::conv::gemm::{cgemm_acc, gauss_gemm_acc, gemm_acc, GaussScratch};
 use fftconv::conv::{
     ConvAlgorithm, ConvProblem, ExecMode, ExecPolicy, LayerPlan, PlanOptions, Tensor4, TileGrid,
 };
-use fftconv::coordinator::{ConvRequest, ConvService, DecayPolicy, StaticScheduler};
+use fftconv::coordinator::{
+    ConvRequest, ConvService, DecayPolicy, LayerId, ShardedService, StaticScheduler, TuningPolicy,
+};
 use fftconv::fft::{BatchDft, C32, Plan, TileFft};
 use fftconv::model::machine::{calibrate_bandwidth, calibrate_isa, xeon_gold};
 use fftconv::model::roofline::fused_layer_time;
@@ -754,6 +756,108 @@ fn main() {
             net.discard(&mut s);
         }
         json.insert("network".to_string(), Json::Obj(block));
+    }
+
+    // ---- sharded serving: one tuning store, N replicas ----
+    // The `shard` block of the BENCH schema (docs/ARCHITECTURE.md): a
+    // 2-replica ShardedService over one shared tuning store.  Replica 0
+    // earns a measured verdict from its own traffic; replica 1's first
+    // batch on the same (weights, shape, bucket) is then a cross-replica
+    // verdict hit.  A second shard warm-started from the exported
+    // profile serves every replica's first batch already settled — the
+    // re-measurements saved are the zero-warm-up payoff the
+    // store/executor split exists for.
+    {
+        let p = ConvProblem::unit(1, 8, 8, 20, 20, 3);
+        let w = Tensor4::random(p.weight_shape(), 70);
+        let algo = ConvAlgorithm::RegularFft { m: 6 };
+        let serve = |shard: &mut ShardedService, id: LayerId, n: usize, seed: u64| {
+            for i in 0..n {
+                let x = Tensor4::random([1, 8, 20, 20], seed + i as u64);
+                let t = shard
+                    .submit(ConvRequest::new(id, x).expect("single image"))
+                    .expect("known layer");
+                std::hint::black_box(shard.take(t));
+            }
+        };
+        let mut shard = ShardedService::builder(xeon_gold())
+            .replicas(2)
+            .workers(2)
+            .max_batch(1)
+            .max_wait(Duration::from_millis(1))
+            .tuning_policy(TuningPolicy::Measured)
+            .build();
+        let la = shard
+            .register_with_algo_on(0, "bench-a", p, w.clone(), algo)
+            .expect("register");
+        let lb = shard
+            .register_with_algo_on(1, "bench-b", p, w.clone(), algo)
+            .expect("register");
+        serve(&mut shard, la, 4, 71); // replica 0 earns the verdict
+        serve(&mut shard, lb, 2, 75); // replica 1 serves it for free
+        let st = shard.shard_stats();
+        let per_replica: Vec<u64> = (0..shard.replicas())
+            .map(|r| shard.replica(r).metrics.snapshot().batches)
+            .collect();
+
+        // warm-start a fresh shard from the exported profile: every
+        // settled entry arrives pre-measured, so the serving run below
+        // owes the tuning table zero re-measurements
+        let profile = shard.export_profile();
+        let settled_imported = profile.entries.iter().filter(|e| e.settled).count();
+        let mut warm = ShardedService::builder(xeon_gold())
+            .replicas(2)
+            .workers(2)
+            .max_batch(1)
+            .max_wait(Duration::from_millis(1))
+            .tuning_policy(TuningPolicy::Measured)
+            .profile(profile)
+            .build();
+        let wa = warm
+            .register_with_algo_on(0, "bench-a", p, w.clone(), algo)
+            .expect("register");
+        let wb = warm
+            .register_with_algo_on(1, "bench-b", p, w, algo)
+            .expect("register");
+        serve(&mut warm, wa, 2, 80);
+        serve(&mut warm, wb, 2, 85);
+        let wst = warm.shard_stats();
+
+        t.row(vec![
+            "shard-serve".into(),
+            format!("{} replicas, batches {per_replica:?}", st.replicas),
+            "-".into(),
+            format!("{} cross-replica hits", st.warm_hits),
+        ]);
+        t.row(vec![
+            "shard-warmstart".into(),
+            format!("{settled_imported} verdicts imported settled"),
+            "-".into(),
+            format!("{} hits / {} remeasured", wst.warm_hits, wst.remeasurements),
+        ]);
+        let mut obj = BTreeMap::new();
+        obj.insert("replicas".to_string(), Json::Num(st.replicas as f64));
+        obj.insert(
+            "per_replica_batches".to_string(),
+            Json::Arr(per_replica.iter().map(|b| Json::Num(*b as f64)).collect()),
+        );
+        obj.insert(
+            "cross_replica_hits".to_string(),
+            Json::Num(st.warm_hits as f64),
+        );
+        obj.insert(
+            "tuning_entries".to_string(),
+            Json::Num(st.tuning_entries as f64),
+        );
+        obj.insert(
+            "warmstart_hits".to_string(),
+            Json::Num(wst.warm_hits as f64),
+        );
+        obj.insert(
+            "warmstart_remeasurements_saved".to_string(),
+            Json::Num(settled_imported as f64 - wst.remeasurements as f64),
+        );
+        json.insert("shard".to_string(), Json::Obj(obj));
     }
 
     t.emit("micro_hotpaths");

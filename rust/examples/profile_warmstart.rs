@@ -1,0 +1,86 @@
+//! Profile warm-start quickstart (docs/ARCHITECTURE.md §8): export a
+//! tuning snapshot from a short serving run, save it to JSON, load it
+//! into a fresh service, and verify the warm-started run serves its
+//! first batches off the imported verdicts with zero re-measurements.
+//!
+//!     cargo run --release --example profile_warmstart [profile.json]
+//!
+//! Exits non-zero if any step fails — verify.sh runs it as the
+//! export → import → serve smoke test.
+
+use fftconv::conv::{ConvAlgorithm, ConvProblem, Tensor4};
+use fftconv::coordinator::{ConvRequest, ConvService, LayerId, TuningPolicy, TuningProfile};
+use fftconv::model::machine::xeon_gold;
+use std::time::Duration;
+
+const ALGO: ConvAlgorithm = ConvAlgorithm::RegularFft { m: 6 };
+
+fn serve(svc: &mut ConvService, id: LayerId, n: usize, seed: u64) {
+    for i in 0..n {
+        let x = Tensor4::random([1, 8, 20, 20], seed + i as u64);
+        let t = svc
+            .submit(ConvRequest::new(id, x).expect("single image"))
+            .expect("known layer");
+        svc.take(t).expect("batch of 1 executes on submit");
+    }
+}
+
+fn main() {
+    let path = std::env::args()
+        .nth(1)
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| {
+            std::env::temp_dir().join(format!("fftconv-profile-{}.json", std::process::id()))
+        });
+    let p = ConvProblem::unit(1, 8, 8, 20, 20, 3);
+    let w = Tensor4::random(p.weight_shape(), 7);
+
+    // 1. a measuring service earns verdicts from live traffic
+    let mut src = ConvService::builder(xeon_gold())
+        .workers(2)
+        .max_batch(1)
+        .max_wait(Duration::from_millis(1))
+        .tuning_policy(TuningPolicy::Measured)
+        .build();
+    let id = src
+        .register_with_algo("conv3x3", p, w.clone(), ALGO)
+        .expect("register");
+    serve(&mut src, id, 4, 100);
+    let profile = src.export_profile();
+    let settled = profile.entries.iter().filter(|e| e.settled).count();
+    if settled == 0 {
+        eprintln!("error: the serving run settled no verdict to export");
+        std::process::exit(1);
+    }
+
+    // 2. save → load round-trip through the JSON snapshot
+    profile.save(&path).expect("save profile");
+    let loaded = TuningProfile::load(&path).expect("load profile");
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(loaded, profile, "save/load must round-trip bit-exact");
+
+    // 3. a fresh service on the same machine warm-starts from the file:
+    // first batches serve the imported verdicts, nothing is re-measured
+    let mut svc = ConvService::builder(xeon_gold())
+        .workers(2)
+        .max_batch(1)
+        .max_wait(Duration::from_millis(1))
+        .tuning_policy(TuningPolicy::Measured)
+        .profile(loaded)
+        .build();
+    let id = svc
+        .register_with_algo("conv3x3", p, w, ALGO)
+        .expect("register");
+    serve(&mut svc, id, 4, 200);
+
+    let hits = svc.verdict_warm_hits();
+    let remeasured = svc.decay_stats().remeasurements;
+    println!(
+        "profile warm-start: {settled} settled verdicts exported, \
+         {hits} warm hits, {remeasured} re-measurements"
+    );
+    if hits == 0 || remeasured != 0 {
+        eprintln!("error: warm start did not serve the imported verdicts measurement-free");
+        std::process::exit(1);
+    }
+}

@@ -18,26 +18,48 @@
 //!        StaticScheduler   completion  <---  execute_batch
 //!         (PlanHandle ->     store            (run_planned)
 //!          conv engine)        ^                  |
-//!                  |           +---- responses ---+
 //!                  +---------- Metrics <----------+
 //! ```
 //!
+//! The scheduler itself is split into shareable and socket-local halves
+//! (see [`store`] and [`scheduler`]):
+//!
+//! ```text
+//!   Arc<Mutex<SharedStores>>            per-replica (each ConvService)
+//!   +--------------------+             +---------------------------+
+//!   | TuningStore        |<---lock-----| Executor                  |
+//!   |  verdicts + EWMAs  |             |  ThreadPool (fftconv-r{n})|
+//!   |  decay state       |   ...       |  plan cache + arenas      |
+//!   |  Machine ceilings  |<---lock-----|  shadow re-measure slot   |
+//!   | PlanStore          |             +---------------------------+
+//!   |  pins + budget     |      save/load: profile::TuningProfile
+//!   +--------------------+      front-end: shard::ShardedService
+//! ```
+//!
 //! Every fallible call returns [`ServiceError`] — see the module docs of
-//! [`service`] for the v2 API tour and [`error`] for the taxonomy.
+//! [`service`] for the v2 API tour, [`error`] for the taxonomy,
+//! [`profile`] for warm-start snapshots, and [`shard`] for the
+//! multi-replica front-end.
 
 pub mod batcher;
 pub mod error;
 pub mod metrics;
+pub mod profile;
 pub mod request;
 pub mod scheduler;
 pub mod service;
+pub mod shard;
+pub mod store;
 
 pub use batcher::{Batch, Batcher, Pending};
 pub use error::ServiceError;
 pub use metrics::Metrics;
+pub use profile::{MachineProfile, ProfileError, ProfileImport, TuningProfile};
 pub use request::{ConvRequest, ConvResponse, LayerId, NetworkId, Ticket};
 pub use scheduler::{
     batch_bucket, DecayPolicy, DecayStats, PlanHandle, StaticScheduler, TuneSnapshot, TuneState,
     TuningPolicy,
 };
 pub use service::{ConvService, ConvServiceBuilder, LayerEntry, NetworkEntry, ServiceConfig};
+pub use shard::{CoreAssignment, ShardStats, ShardedService, ShardedServiceBuilder};
+pub use store::{PlanStore, SharedStores, TuningStore};

@@ -1,0 +1,711 @@
+//! Serialized tuning profiles: snapshot the shareable half of the
+//! scheduler ([`TuningStore`]) to JSON and warm-start a fresh process
+//! from it.
+//!
+//! The paper's central lesson is that the staged-vs-fused verdict is a
+//! function of the *machine* — compute ceiling, DRAM bandwidth, cache
+//! budget — not just FLOP counts.  A profile therefore carries the
+//! ceilings it was earned under ([`MachineProfile`]): on load they are
+//! compared against the host's calibrated [`Machine`], and
+//!
+//! * **matching ceilings** seed the entries as `Settled` — the verdicts
+//!   transfer wholesale and a serving run pays **zero** re-measurements
+//!   (`DecayStats.remeasurements` stays 0);
+//! * **mismatched ISA or ceilings** seed them as `Stale` — the entries
+//!   keep serving their recorded winner while the existing decay
+//!   machinery re-confirms each one through the shadow slot, so a stale
+//!   profile degrades to "one shadow pass", never to wrong-forever.
+//!
+//! The host's own calibration stays authoritative either way: importing
+//! never overwrites the store's machine model, and `analytic` seeds are
+//! recomputed against the *current* roofline so the disagreement gauge
+//! keeps meaning "measurement overturned this host's prediction".
+//!
+//! EWMA streams round-trip bit-exactly: the JSON emitter prints `f64`
+//! via Rust's shortest-roundtrip `Display`, so `mean`/`var` survive
+//! save → load unchanged and a re-imported stream continues exactly
+//! where it left off.  Fingerprints are hex *strings* — `u64` does not
+//! fit in a JSON double.
+//!
+//! Untrusted input: profiles are read from files, so every failure is a
+//! typed [`ProfileError`] (I/O, positioned JSON parse error via
+//! [`JsonError`], or schema violation) — never a panic — and the entry
+//! count is capped at [`MAX_TUNE_ENTRIES`] like the live table.
+
+use std::collections::BTreeMap;
+
+use crate::conv::{ConvAlgorithm, ExecMode, ExecPolicy};
+use crate::model::machine::Machine;
+use crate::model::select::choose_exec;
+use crate::util::json::{Json, JsonError};
+
+use super::store::{
+    algo_method, key_shape, other_mode, Ewma, PlanKey, TuneEntry, TuneKey, TuneState, TuningStore,
+    MAX_TUNE_ENTRIES,
+};
+
+/// Profile schema version this build reads and writes.
+pub const PROFILE_VERSION: u64 = 1;
+
+/// Relative tolerance for "same machine": calibrated ceilings are
+/// micro-benchmarks and jitter a little run to run, so ceilings within
+/// 5% (and an identical kernel ISA) count as matching.
+pub const MACHINE_MATCH_TOL: f64 = 0.05;
+
+/// A profile load/save failure.  `Parse` carries the byte position from
+/// the JSON layer; `Schema` means well-formed JSON that is not a valid
+/// profile.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ProfileError {
+    /// Filesystem error (message from `std::io::Error`).
+    Io(String),
+    /// Malformed JSON, with the byte offset of the failure.
+    Parse { pos: usize, msg: String },
+    /// Structurally valid JSON that violates the profile schema.
+    Schema(String),
+}
+
+impl std::fmt::Display for ProfileError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProfileError::Io(m) => write!(f, "profile io: {m}"),
+            ProfileError::Parse { pos, msg } => write!(f, "profile parse: {msg} at byte {pos}"),
+            ProfileError::Schema(m) => write!(f, "profile schema: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ProfileError {}
+
+impl From<JsonError> for ProfileError {
+    fn from(e: JsonError) -> ProfileError {
+        ProfileError::Parse {
+            pos: e.pos,
+            msg: e.msg,
+        }
+    }
+}
+
+fn schema<T>(msg: impl Into<String>) -> Result<T, ProfileError> {
+    Err(ProfileError::Schema(msg.into()))
+}
+
+/// The machine identity a profile's verdicts were earned under — the
+/// resolved roofline ceilings, not the catalog row.  `name` is
+/// informational (two hosts of the same SKU transfer verdicts even if
+/// their catalog labels differ); matching is by kernel ISA and ceilings.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MachineProfile {
+    pub name: String,
+    /// kernel-set name (`scalar`/`avx2`/`avx512`) when the source
+    /// machine was host-calibrated; `None` for catalog-only models
+    pub isa: Option<String>,
+    pub cores: usize,
+    /// per-core-exclusive cache in bytes (sizes the fused panel budget)
+    pub cache: usize,
+    /// resolved compute ceiling, GFLOP/s
+    pub peak_gflops: f64,
+    /// resolved memory ceiling, GB/s
+    pub peak_bandwidth: f64,
+}
+
+impl MachineProfile {
+    /// Capture the resolved identity of `m`.
+    pub fn of(m: &Machine) -> MachineProfile {
+        MachineProfile {
+            name: m.name.to_string(),
+            isa: m.calibrated.map(|c| c.isa.name().to_string()),
+            cores: m.cores,
+            cache: m.cache,
+            peak_gflops: m.peak_gflops(),
+            peak_bandwidth: m.peak_bandwidth(),
+        }
+    }
+
+    /// Do this profile's ceilings transfer to `m`?  Same kernel ISA,
+    /// same core count and cache budget, and both ceilings within
+    /// [`MACHINE_MATCH_TOL`] relative.
+    pub fn matches(&self, m: &Machine) -> bool {
+        let close = |a: f64, b: f64| {
+            let denom = a.abs().max(b.abs());
+            denom == 0.0 || (a - b).abs() / denom <= MACHINE_MATCH_TOL
+        };
+        self.isa == m.calibrated.map(|c| c.isa.name().to_string())
+            && self.cores == m.cores
+            && self.cache == m.cache
+            && close(self.peak_gflops, m.peak_gflops())
+            && close(self.peak_bandwidth, m.peak_bandwidth())
+    }
+}
+
+/// One serialized `(plan, batch-bucket)` tuning entry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ProfileEntry {
+    pub algo: ConvAlgorithm,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub k: usize,
+    pub r: usize,
+    pub pad: usize,
+    pub weights_fp: u64,
+    pub bucket: usize,
+    pub resolved: ExecMode,
+    pub staged: EwmaProfile,
+    pub fused: EwmaProfile,
+    pub settled: bool,
+    pub fusable: bool,
+    pub age: u64,
+}
+
+/// A serialized EWMA stream — the exact field set of the live one.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EwmaProfile {
+    pub mean: f64,
+    pub var: f64,
+    pub samples: u64,
+    pub fresh: u64,
+}
+
+impl EwmaProfile {
+    fn of(e: &Ewma) -> EwmaProfile {
+        EwmaProfile {
+            mean: e.mean,
+            var: e.var,
+            samples: e.samples,
+            fresh: e.fresh,
+        }
+    }
+
+    fn to_live(self) -> Ewma {
+        Ewma {
+            mean: self.mean,
+            var: self.var,
+            samples: self.samples,
+            fresh: self.fresh,
+        }
+    }
+}
+
+/// A complete tuning snapshot: machine identity + entry table.
+/// Produced by [`profile_of_store`] / consumed by [`import_into_store`];
+/// round-trips through JSON via [`TuningProfile::to_json`] /
+/// [`TuningProfile::from_json`] and files via `save`/`load`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TuningProfile {
+    pub machine: MachineProfile,
+    pub entries: Vec<ProfileEntry>,
+}
+
+/// What an import did: whether the machine matched, and how the
+/// profile's entries landed in the store.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ProfileImport {
+    /// profile ceilings/ISA matched the store's machine
+    pub matched: bool,
+    /// entries imported as `Settled` (zero re-measurement warm-start)
+    pub settled: usize,
+    /// entries imported as `Stale` (heal via the shadow slot)
+    pub stale: usize,
+    /// entries imported still unsettled (partial streams preserved)
+    pub unsettled: usize,
+    /// entries NOT imported: key already live in the store (local
+    /// measurements win over the file) or table cap reached
+    pub skipped: usize,
+}
+
+/// Snapshot the store's tuning table.  Entries are emitted in a
+/// deterministic order so identical stores produce byte-identical
+/// profiles (diff-able artifacts).
+pub fn profile_of_store(store: &TuningStore) -> TuningProfile {
+    let mut entries: Vec<ProfileEntry> = store
+        .entries
+        .iter()
+        .map(|(k, e)| ProfileEntry {
+            algo: k.plan.algo,
+            c: k.plan.c,
+            h: k.plan.h,
+            w: k.plan.w,
+            k: k.plan.k,
+            r: k.plan.r,
+            pad: k.plan.pad,
+            weights_fp: k.plan.weights_fp,
+            bucket: k.bucket,
+            resolved: e.resolved,
+            staged: EwmaProfile::of(&e.staged),
+            fused: EwmaProfile::of(&e.fused),
+            // Stale/Remeasuring entries were doubted at snapshot time:
+            // they re-enter as unsettled and re-earn their verdict
+            settled: e.state == TuneState::Settled,
+            fusable: e.fusable,
+            age: e.age,
+        })
+        .collect();
+    entries.sort_by(|a, b| {
+        (a.algo.name(), a.c, a.h, a.w, a.k, a.r, a.pad, a.weights_fp, a.bucket).cmp(&(
+            b.algo.name(),
+            b.c,
+            b.h,
+            b.w,
+            b.k,
+            b.r,
+            b.pad,
+            b.weights_fp,
+            b.bucket,
+        ))
+    });
+    TuningProfile {
+        machine: MachineProfile::of(&store.machine),
+        entries,
+    }
+}
+
+/// Load a profile's entries into `store`.
+///
+/// Per entry: the `analytic` seed is recomputed against the store's
+/// *current* machine (the profile's prediction belonged to its machine);
+/// then
+///
+/// * machine matched + settled → imported `Settled` with the recorded
+///   winner — the warm-start path, no re-measurement owed;
+/// * machine mismatched + settled + two-pipeline → imported `Stale`
+///   with both streams doubted (`winner_doubted`), so the shadow slot
+///   re-measures both modes before the verdict is trusted again;
+/// * one-pipeline (`fusable == false`) → `Settled` on `Staged`
+///   regardless — there is nothing to re-measure against;
+/// * unsettled → imported unsettled, partial warm samples preserved.
+///
+/// Keys already live in the store are skipped — verdicts measured on
+/// this host in this process outrank the file.  The table cap
+/// ([`MAX_TUNE_ENTRIES`]) bounds hostile/huge profiles.  The store's
+/// machine model and decay counters are left untouched.
+pub fn import_into_store(store: &mut TuningStore, profile: &TuningProfile) -> ProfileImport {
+    let matched = profile.machine.matches(&store.machine);
+    let mut out = ProfileImport {
+        matched,
+        ..ProfileImport::default()
+    };
+    for pe in &profile.entries {
+        let plan = PlanKey {
+            algo: pe.algo,
+            c: pe.c,
+            h: pe.h,
+            w: pe.w,
+            k: pe.k,
+            r: pe.r,
+            pad: pe.pad,
+            weights_fp: pe.weights_fp,
+        };
+        let key = TuneKey {
+            plan,
+            bucket: pe.bucket,
+        };
+        if store.entries.contains_key(&key) || store.entries.len() >= MAX_TUNE_ENTRIES {
+            out.skipped += 1;
+            continue;
+        }
+        let analytic = match (algo_method(pe.algo), pe.algo.tile_m()) {
+            (Some(method), Some(m)) => {
+                let choice = choose_exec(method, &key_shape(&plan, pe.bucket), m, &store.machine);
+                match choice.policy {
+                    ExecPolicy::Fused if pe.fusable => ExecMode::Fused,
+                    _ => ExecMode::Staged,
+                }
+            }
+            _ => ExecMode::Staged,
+        };
+        let mut entry = TuneEntry {
+            analytic,
+            staged: pe.staged.to_live(),
+            fused: pe.fused.to_live(),
+            resolved: if pe.fusable { pe.resolved } else { ExecMode::Staged },
+            state: TuneState::Unsettled,
+            fusable: pe.fusable,
+            age: pe.age,
+            pending: None,
+            winner_doubted: false,
+        };
+        if !pe.fusable {
+            entry.state = TuneState::Settled;
+            out.settled += 1;
+        } else if pe.settled && matched {
+            entry.state = TuneState::Settled;
+            out.settled += 1;
+        } else if pe.settled {
+            // foreign ceilings: serve the recorded winner but trust
+            // neither stream until the shadow pass re-measures both
+            entry.state = TuneState::Stale;
+            entry.pending = Some(other_mode(entry.resolved));
+            entry.winner_doubted = true;
+            entry.age = 0;
+            out.stale += 1;
+        } else {
+            out.unsettled += 1;
+        }
+        store.entries.insert(key, entry);
+    }
+    // the table grew behind the pruner's back: let the next prune rescan
+    store.prune_len = 0;
+    out
+}
+
+// ---------------------------------------------------------------- JSON
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(
+        pairs
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect::<BTreeMap<_, _>>(),
+    )
+}
+
+fn num(n: f64) -> Json {
+    Json::Num(n)
+}
+
+fn mode_str(m: ExecMode) -> &'static str {
+    match m {
+        ExecMode::Staged => "staged",
+        ExecMode::Fused => "fused",
+    }
+}
+
+fn parse_mode(s: &str) -> Result<ExecMode, ProfileError> {
+    match s {
+        "staged" => Ok(ExecMode::Staged),
+        "fused" => Ok(ExecMode::Fused),
+        other => schema(format!("unknown exec mode {other:?}")),
+    }
+}
+
+/// Algorithm kind tag + tile parameter (`m` = 0 for non-tiled kinds).
+fn algo_tag(a: ConvAlgorithm) -> (&'static str, usize) {
+    match a {
+        ConvAlgorithm::Direct => ("direct", 0),
+        ConvAlgorithm::Im2col => ("im2col", 0),
+        ConvAlgorithm::Gemm1x1 => ("gemm_1x1", 0),
+        ConvAlgorithm::Winograd { m } => ("winograd", m),
+        ConvAlgorithm::RegularFft { m } => ("regular_fft", m),
+        ConvAlgorithm::GaussFft { m } => ("gauss_fft", m),
+    }
+}
+
+fn parse_algo(kind: &str, m: usize) -> Result<ConvAlgorithm, ProfileError> {
+    match kind {
+        "direct" => Ok(ConvAlgorithm::Direct),
+        "im2col" => Ok(ConvAlgorithm::Im2col),
+        "gemm_1x1" => Ok(ConvAlgorithm::Gemm1x1),
+        "winograd" => Ok(ConvAlgorithm::Winograd { m }),
+        "regular_fft" => Ok(ConvAlgorithm::RegularFft { m }),
+        "gauss_fft" => Ok(ConvAlgorithm::GaussFft { m }),
+        other => schema(format!("unknown algorithm {other:?}")),
+    }
+}
+
+fn get<'a>(j: &'a Json, key: &str) -> Result<&'a Json, ProfileError> {
+    match j.get(key) {
+        Some(v) => Ok(v),
+        None => schema(format!("missing field {key:?}")),
+    }
+}
+
+fn get_f64(j: &Json, key: &str) -> Result<f64, ProfileError> {
+    match get(j, key)?.as_f64() {
+        Some(n) if n.is_finite() => Ok(n),
+        _ => schema(format!("field {key:?} is not a finite number")),
+    }
+}
+
+fn get_usize(j: &Json, key: &str) -> Result<usize, ProfileError> {
+    let n = get_f64(j, key)?;
+    if n < 0.0 || n.fract() != 0.0 {
+        return schema(format!("field {key:?} is not a non-negative integer"));
+    }
+    Ok(n as usize)
+}
+
+fn get_str<'a>(j: &'a Json, key: &str) -> Result<&'a str, ProfileError> {
+    match get(j, key)?.as_str() {
+        Some(s) => Ok(s),
+        None => schema(format!("field {key:?} is not a string")),
+    }
+}
+
+fn get_bool(j: &Json, key: &str) -> Result<bool, ProfileError> {
+    match get(j, key)? {
+        Json::Bool(b) => Ok(*b),
+        _ => schema(format!("field {key:?} is not a bool")),
+    }
+}
+
+fn ewma_json(e: &EwmaProfile) -> Json {
+    obj(vec![
+        ("mean", num(e.mean)),
+        ("var", num(e.var)),
+        ("samples", num(e.samples as f64)),
+        ("fresh", num(e.fresh as f64)),
+    ])
+}
+
+fn ewma_of_json(j: &Json) -> Result<EwmaProfile, ProfileError> {
+    let mean = get_f64(j, "mean")?;
+    let var = get_f64(j, "var")?;
+    if mean < 0.0 || var < 0.0 {
+        return schema("negative EWMA statistics");
+    }
+    Ok(EwmaProfile {
+        mean,
+        var,
+        samples: get_usize(j, "samples")? as u64,
+        fresh: get_usize(j, "fresh")? as u64,
+    })
+}
+
+impl TuningProfile {
+    /// Serialize to pretty JSON (schema version [`PROFILE_VERSION`]).
+    pub fn to_json(&self) -> String {
+        let m = &self.machine;
+        let machine = obj(vec![
+            ("name", Json::Str(m.name.clone())),
+            (
+                "isa",
+                m.isa.clone().map(Json::Str).unwrap_or(Json::Null),
+            ),
+            ("cores", num(m.cores as f64)),
+            ("cache", num(m.cache as f64)),
+            ("peak_gflops", num(m.peak_gflops)),
+            ("peak_bandwidth", num(m.peak_bandwidth)),
+        ]);
+        let entries: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|e| {
+                let (kind, m) = algo_tag(e.algo);
+                obj(vec![
+                    ("algo", Json::Str(kind.to_string())),
+                    ("m", num(m as f64)),
+                    ("c", num(e.c as f64)),
+                    ("h", num(e.h as f64)),
+                    ("w", num(e.w as f64)),
+                    ("k", num(e.k as f64)),
+                    ("r", num(e.r as f64)),
+                    ("pad", num(e.pad as f64)),
+                    // u64 exceeds f64 integer precision: hex string
+                    ("weights_fp", Json::Str(format!("{:016x}", e.weights_fp))),
+                    ("bucket", num(e.bucket as f64)),
+                    ("resolved", Json::Str(mode_str(e.resolved).to_string())),
+                    ("staged", ewma_json(&e.staged)),
+                    ("fused", ewma_json(&e.fused)),
+                    ("settled", Json::Bool(e.settled)),
+                    ("fusable", Json::Bool(e.fusable)),
+                    ("age", num(e.age as f64)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("version", num(PROFILE_VERSION as f64)),
+            ("machine", machine),
+            ("entries", Json::Arr(entries)),
+        ])
+        .to_string_pretty()
+    }
+
+    /// Parse a profile from JSON text.  Structured errors, never panics:
+    /// malformed JSON yields [`ProfileError::Parse`] with a byte
+    /// position, a valid document with wrong shape/values yields
+    /// [`ProfileError::Schema`].
+    pub fn from_json(text: &str) -> Result<TuningProfile, ProfileError> {
+        let j = Json::parse(text)?;
+        let version = get_usize(&j, "version")? as u64;
+        if version != PROFILE_VERSION {
+            return schema(format!(
+                "unsupported profile version {version} (this build reads {PROFILE_VERSION})"
+            ));
+        }
+        let mj = get(&j, "machine")?;
+        let isa = match get(mj, "isa")? {
+            Json::Null => None,
+            Json::Str(s) => Some(s.clone()),
+            _ => return schema("field \"isa\" is not a string or null"),
+        };
+        let machine = MachineProfile {
+            name: get_str(mj, "name")?.to_string(),
+            isa,
+            cores: get_usize(mj, "cores")?,
+            cache: get_usize(mj, "cache")?,
+            peak_gflops: get_f64(mj, "peak_gflops")?,
+            peak_bandwidth: get_f64(mj, "peak_bandwidth")?,
+        };
+        let entries = match get(&j, "entries")?.as_arr() {
+            Some(a) => a,
+            None => return schema("field \"entries\" is not an array"),
+        };
+        let mut out = Vec::with_capacity(entries.len());
+        for ej in entries {
+            let algo = parse_algo(get_str(ej, "algo")?, get_usize(ej, "m")?)?;
+            let fp_hex = get_str(ej, "weights_fp")?;
+            let weights_fp = match u64::from_str_radix(fp_hex, 16) {
+                Ok(fp) => fp,
+                Err(_) => return schema(format!("bad weights_fp {fp_hex:?}")),
+            };
+            let bucket = get_usize(ej, "bucket")?;
+            if bucket == 0 || !bucket.is_power_of_two() {
+                return schema(format!("bucket {bucket} is not a power of two"));
+            }
+            out.push(ProfileEntry {
+                algo,
+                c: get_usize(ej, "c")?,
+                h: get_usize(ej, "h")?,
+                w: get_usize(ej, "w")?,
+                k: get_usize(ej, "k")?,
+                r: get_usize(ej, "r")?,
+                pad: get_usize(ej, "pad")?,
+                weights_fp,
+                bucket,
+                resolved: parse_mode(get_str(ej, "resolved")?)?,
+                staged: ewma_of_json(get(ej, "staged")?)?,
+                fused: ewma_of_json(get(ej, "fused")?)?,
+                settled: get_bool(ej, "settled")?,
+                fusable: get_bool(ej, "fusable")?,
+                age: get_usize(ej, "age")? as u64,
+            });
+        }
+        Ok(TuningProfile {
+            machine,
+            entries: out,
+        })
+    }
+
+    /// Write the profile to `path` (pretty JSON).
+    pub fn save(&self, path: &std::path::Path) -> Result<(), ProfileError> {
+        std::fs::write(path, self.to_json()).map_err(|e| ProfileError::Io(e.to_string()))
+    }
+
+    /// Read a profile from `path`.
+    pub fn load(path: &std::path::Path) -> Result<TuningProfile, ProfileError> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| ProfileError::Io(e.to_string()))?;
+        TuningProfile::from_json(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::machine::xeon_gold;
+
+    fn sample_profile() -> TuningProfile {
+        TuningProfile {
+            machine: MachineProfile::of(&xeon_gold()),
+            entries: vec![ProfileEntry {
+                algo: ConvAlgorithm::RegularFft { m: 6 },
+                c: 8,
+                h: 20,
+                w: 20,
+                k: 8,
+                r: 3,
+                pad: 0,
+                weights_fp: 0xdead_beef_cafe_f00d,
+                bucket: 2,
+                resolved: ExecMode::Fused,
+                staged: EwmaProfile {
+                    mean: 1.25e-3,
+                    var: 3.0e-9,
+                    samples: 7,
+                    fresh: 7,
+                },
+                fused: EwmaProfile {
+                    mean: 0.5e-3,
+                    var: 1.0e-9,
+                    samples: 7,
+                    fresh: 7,
+                },
+                settled: true,
+                fusable: true,
+                age: 12,
+            }],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let p = sample_profile();
+        let back = TuningProfile::from_json(&p.to_json()).unwrap();
+        assert_eq!(p, back);
+        // and the serialization itself is deterministic
+        assert_eq!(p.to_json(), back.to_json());
+    }
+
+    #[test]
+    fn matching_machine_imports_settled() {
+        let mut store = TuningStore::new(xeon_gold());
+        let report = import_into_store(&mut store, &sample_profile());
+        assert!(report.matched);
+        assert_eq!(
+            (report.settled, report.stale, report.unsettled, report.skipped),
+            (1, 0, 0, 0)
+        );
+        assert_eq!(store.len(), 1);
+        let e = store.entries.values().next().unwrap();
+        assert_eq!(e.state, TuneState::Settled);
+        assert_eq!(e.resolved, ExecMode::Fused);
+        // the stream continues exactly where the source process left off
+        assert_eq!(e.fused.mean, 0.5e-3);
+        assert_eq!(e.fused.samples, 7);
+    }
+
+    #[test]
+    fn mismatched_machine_imports_stale_with_both_streams_doubted() {
+        let mut profile = sample_profile();
+        profile.machine.peak_bandwidth *= 3.0;
+        let mut store = TuningStore::new(xeon_gold());
+        let report = import_into_store(&mut store, &profile);
+        assert!(!report.matched);
+        assert_eq!((report.settled, report.stale), (0, 1));
+        let e = store.entries.values().next().unwrap();
+        assert_eq!(e.state, TuneState::Stale);
+        assert_eq!(e.resolved, ExecMode::Fused, "keeps serving the winner");
+        assert_eq!(e.pending, Some(ExecMode::Staged));
+        assert!(e.winner_doubted);
+    }
+
+    #[test]
+    fn local_entries_outrank_the_file() {
+        let mut store = TuningStore::new(xeon_gold());
+        import_into_store(&mut store, &sample_profile());
+        // second import of the same key: skipped, not overwritten
+        let mut p2 = sample_profile();
+        p2.entries[0].resolved = ExecMode::Staged;
+        let report = import_into_store(&mut store, &p2);
+        assert_eq!(report.skipped, 1);
+        let e = store.entries.values().next().unwrap();
+        assert_eq!(e.resolved, ExecMode::Fused);
+    }
+
+    #[test]
+    fn corrupted_profiles_return_structured_errors() {
+        // malformed JSON → positioned parse error
+        let text = sample_profile().to_json();
+        let truncated = &text[..text.len() / 2];
+        match TuningProfile::from_json(truncated) {
+            Err(ProfileError::Parse { pos, .. }) => assert!(pos <= truncated.len()),
+            other => panic!("expected parse error, got {other:?}"),
+        }
+        // valid JSON, wrong schema → schema error
+        assert!(matches!(
+            TuningProfile::from_json("{\"version\": 99, \"machine\": {}, \"entries\": []}"),
+            Err(ProfileError::Schema(_))
+        ));
+        assert!(matches!(
+            TuningProfile::from_json("[1, 2, 3]"),
+            Err(ProfileError::Schema(_))
+        ));
+    }
+
+    #[test]
+    fn missing_file_is_an_io_error() {
+        let e = TuningProfile::load(std::path::Path::new("/nonexistent/profile.json"));
+        assert!(matches!(e, Err(ProfileError::Io(_))));
+    }
+}

@@ -2,14 +2,37 @@
 //! is executed as a single fork-join in which every core receives a
 //! statically precomputed, equal-FLOP share of the work.
 //!
+//! ## Shared stores + per-replica executor (the split)
+//!
+//! A scheduler is two layers with different lifetimes:
+//!
+//! * [`SharedStores`] (`coordinator::store`) — everything shareable and
+//!   serializable: the tuning table with its EWMA streams and decay
+//!   state, plan pin refcounts, the byte budget, and the calibrated
+//!   [`Machine`].  Lives behind an `Arc<Mutex<..>>` ([`SharedHandle`])
+//!   so N replicas share one table, and round-trips through
+//!   `coordinator::profile::TuningProfile`.
+//! * [`Executor`] (here) — what must stay socket-local: the
+//!   [`ThreadPool`], the plan cache with its grow-only arenas and fused
+//!   panel scratch, the single shadow re-measurement slot, and the LRU
+//!   clock.
+//!
+//! [`StaticScheduler`] binds one executor to one store handle.
+//! [`StaticScheduler::new`] creates a private store (the historical
+//! single-replica behavior); [`StaticScheduler::with_shared`] joins an
+//! existing one — a verdict earned through any replica serves every
+//! replica's next batch, and each replica counts the verdicts it got
+//! for free in [`StaticScheduler::verdict_warm_hits`].
+//!
 //! ## Zero-copy design
 //!
-//! `run_batch` never copies sub-batches and holds no locks.  Workers read
-//! the input tensor through shared borrows and write through **disjoint
-//! `&mut` output slices** carved out of the one output tensor before the
-//! fork (where a `Mutex<Tensor4>` plus per-worker `to_vec()` sub-batch
-//! copies used to live).  The shardable units are fine-grained enough
-//! that batches smaller than the worker count still use every core:
+//! `run_batch` never copies sub-batches and holds no locks across the
+//! fork-join.  Workers read the input tensor through shared borrows and
+//! write through **disjoint `&mut` output slices** carved out of the one
+//! output tensor before the fork (where a `Mutex<Tensor4>` plus
+//! per-worker `to_vec()` sub-batch copies used to live).  The shardable
+//! units are fine-grained enough that batches smaller than the worker
+//! count still use every core:
 //!
 //! * tiled algorithms (Winograd / Regular-FFT / Gauss-FFT) run on the
 //!   stage-parallel [`LayerPlan`] engine, sharded over global tile and
@@ -73,21 +96,11 @@
 //! bandwidth, cache occupancy, co-tenant pressure — not just FLOPs, so a
 //! verdict settled once is not right forever.  Timings are therefore
 //! EWMA-smoothed streams rather than single samples, and settled
-//! verdicts age and can expire under a [`DecayPolicy`]:
-//!
-//! * [`DecayPolicy::Never`] — verdicts are final (the pre-decay default).
-//! * [`DecayPolicy::AfterBatches`] — a verdict that has served `n`
-//!   batches expires and must re-confirm.
-//! * [`DecayPolicy::OnDrift`] — warm samples of the *winning* mode keep
-//!   feeding its EWMA; one deviating more than `rel_tol` from the mean
-//!   re-opens the verdict.
-//! * [`DecayPolicy::OnDriftSigma`] — the variance-aware flavor: the
-//!   EWMA also tracks the stream's spread, and only a sample more than
-//!   `k`·σ from the mean re-opens the verdict — a fixed `rel_tol` trips
-//!   on every hiccup of a noisy co-tenanted host, k·σ adapts to it.
+//! verdicts age and can expire under a [`DecayPolicy`] (see
+//! `coordinator::store` for the policy and entry state machines).
 //!
 //! A re-opened (stale) entry keeps serving its old winner while it waits
-//! for the scheduler's single **shadow slot**: at most one bucket per
+//! for this executor's single **shadow slot**: at most one bucket per
 //! `run_batch` wave runs its doubted (losing) mode instead of the winner
 //! — the batch output is identical either way, so steady-state latency
 //! stays flat while the table heals one bucket at a time.  Re-settling
@@ -100,49 +113,36 @@
 //! roofline and keeping the timing history — instead of deleting them;
 //! those transitions doubt *both* streams, so their shadow phase
 //! refreshes the loser and then the winner before re-settling.
+//! With shared stores the slot is per-replica but the entry states are
+//! shared: an executor whose slot points at an entry another replica
+//! already healed (or deleted) frees the slot on its next wave.
 //! The full state machine (settled → stale → re-measuring → settled) is
 //! documented in docs/ARCHITECTURE.md §4.
 
 use crate::conv::direct;
-use crate::conv::engine::{weights_fingerprint, LayerPlan, PlanOptions};
-use crate::conv::{ConvAlgorithm, ConvProblem, ExecMode, ExecPolicy, Tensor4};
+use crate::conv::engine::{weights_fingerprint, LayerPlan};
+use crate::conv::{ConvAlgorithm, ConvProblem, ExecMode, Tensor4};
 use crate::model::machine::{xeon_gold, Machine};
-use crate::model::select::{choose_exec, measure_exec_with, ExecChoice, ExecVerdict};
-use crate::model::stages::{LayerShape, Method};
+use crate::model::select::{choose_exec, measure_exec_with, ExecVerdict};
 use crate::util::threadpool::{even_ranges, weighted_ranges, ThreadPool};
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::ops::Range;
+use std::sync::MutexGuard;
 use std::time::Instant;
 
-/// Most plans kept before eviction — bounds memory under weight churn
-/// while letting every distinct serving layer keep its plan resident.
-const MAX_PLANS: usize = 64;
+use super::profile::{import_into_store, profile_of_store, ProfileImport, TuningProfile};
+use super::store::{
+    algo_method, finish_remeasure, is_drift_policy, key_shape, make_key, other_mode,
+    resolve_options, stale_plan_entries, Ewma, PlanKey, SharedHandle, SharedStores, TuneEntry,
+    TuneKey, MAX_PLANS, MAX_TUNE_ENTRIES,
+};
 
-/// Default plan-cache byte budget: generous for a many-layer service, but
-/// a hard ceiling — byte-aware LRU trims idle plans' arenas first and
-/// evicts whole plans only when kernel transforms alone blow the budget.
-const DEFAULT_PLAN_BUDGET: usize = 256 << 20;
-
-/// Cache key for a persistent layer plan.  The weight fingerprint is part
-/// of the key so two same-shape layers with different weights each keep
-/// their plan (no thrash); staleness under weight *updates* is handled by
-/// the eviction in [`plan_entry`], which prefers dropping a same-shape
-/// plan with an outdated fingerprint.  All fields are machine words, so
-/// the key is `Copy` and hashing it never touches the heap.
-#[derive(Clone, Copy, PartialEq, Eq, Hash)]
-struct PlanKey {
-    algo: ConvAlgorithm,
-    c: usize,
-    h: usize,
-    w: usize,
-    k: usize,
-    r: usize,
-    /// symmetric zero-padding baked into the plan's tile grid — part of
-    /// the key because a padded and an unpadded plan for the same layer
-    /// shape have different tile geometries
-    pad: usize,
-    weights_fp: u64,
-}
+// The tuning/decay vocabulary moved to `coordinator::store` with the
+// shared-store split; re-exported here so existing
+// `coordinator::scheduler::{TuningPolicy, ..}` paths keep compiling.
+pub use super::store::{
+    batch_bucket, DecayPolicy, DecayStats, TuneSnapshot, TuneState, TuningPolicy,
+};
 
 /// One cached plan plus its LRU stamp.
 struct PlanEntry {
@@ -175,464 +175,11 @@ impl PlanHandle {
     }
 }
 
-/// How the scheduler decides staged-vs-fused per `(plan, batch bucket)`.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
-pub enum TuningPolicy {
-    /// Trust the roofline seed of every bucket; never measure.
-    #[default]
-    Analytic,
-    /// Run both pipelines back to back on each batch of an unsettled
-    /// bucket (double work per measuring batch) and settle on the
-    /// empirical winner as soon as both have warm samples — typically
-    /// the bucket's second batch (the first grows scratch).
-    Measured,
-    /// Run the analytic pick until it has a warm sample, then the
-    /// alternative, then settle on the faster — never runs a batch
-    /// twice, converging a couple of batches later than `Measured`.
-    Hybrid,
-}
-
-/// Bucket a batch size for the tuning table: the next power of two.
-/// Coarse enough that steady traffic lands on few entries, fine enough
-/// that batch-1 latency traffic and batch-64 throughput traffic tune
-/// independently.  Sizes beyond the largest representable power of two
-/// clamp to it (`next_power_of_two` would panic in debug and wrap to 0
-/// in release for `b > 2^63`).
-pub fn batch_bucket(b: usize) -> usize {
-    b.max(1)
-        .checked_next_power_of_two()
-        .unwrap_or(1usize << (usize::BITS - 1))
-}
-
-/// Tuning-table key: one resolution per (plan identity, batch bucket).
-#[derive(Clone, Copy, PartialEq, Eq, Hash)]
-struct TuneKey {
-    plan: PlanKey,
-    bucket: usize,
-}
-
-/// EWMA smoothing factor for the per-mode timing streams: heavy enough
-/// that a persistent shift moves the mean within a few batches, light
-/// enough that a single noisy batch cannot swing it past a sensible
-/// `rel_tol` by itself.
-const EWMA_ALPHA: f64 = 0.3;
-
-/// Post-(re)seed samples the variance stream needs before its σ is
-/// trusted for [`DecayPolicy::OnDriftSigma`]: a just-reseeded stream has
-/// zero variance, so without a warm-up every subsequent sample would
-/// trip the detector on its own scatter.
-const SIGMA_WARM_SAMPLES: u64 = 4;
-
-/// Relative floor for the sigma tolerance: σ is never taken below this
-/// fraction of the mean, so a zero-variance (perfectly quiet) stream
-/// still trips on any genuine level shift instead of absorbing it into
-/// a co-moving mean+variance.  Well below real timing jitter (~1–10%),
-/// far above f64 rounding noise.
-const SIGMA_FLOOR_REL: f64 = 1e-4;
-
-/// An exponentially weighted moving average over timing samples, with a
-/// matching exponentially weighted variance stream (the k·σ drift
-/// tolerance of [`DecayPolicy::OnDriftSigma`] reads it).
-#[derive(Clone, Copy, Debug, Default)]
-struct Ewma {
-    mean: f64,
-    /// exponentially weighted variance (same α as the mean, so the
-    /// noise estimate and the level estimate age at the same rate)
-    var: f64,
-    samples: u64,
-    /// samples since the stream was last (re)seeded — σ is consulted
-    /// only once a fresh stream has re-learned its spread
-    fresh: u64,
-}
-
-impl Ewma {
-    fn record(&mut self, x: f64) {
-        if self.samples == 0 {
-            self.mean = x;
-            self.var = 0.0;
-        } else {
-            // EW mean + variance in one pass (West's update): the
-            // variance absorbs the pre-update deviation, so a level
-            // shift raises σ exactly when it starts moving the mean
-            let d = x - self.mean;
-            let incr = EWMA_ALPHA * d;
-            self.mean += incr;
-            self.var = (1.0 - EWMA_ALPHA) * (self.var + d * incr);
-        }
-        self.samples += 1;
-        self.fresh += 1;
-    }
-
-    /// Replace the stream with a fresh measurement — used when a stale
-    /// verdict re-measures: pre-drift history must not outvote reality.
-    /// The variance restarts too; σ re-learns from the new regime.
-    fn reseed(&mut self, x: f64) {
-        self.mean = x;
-        self.var = 0.0;
-        self.samples += 1;
-        self.fresh = 1;
-    }
-
-    fn value(&self) -> Option<f64> {
-        (self.samples > 0).then_some(self.mean)
-    }
-
-    /// The stream's EW standard deviation, once enough post-(re)seed
-    /// samples exist to trust it.
-    fn sigma(&self) -> Option<f64> {
-        (self.fresh >= SIGMA_WARM_SAMPLES).then(|| self.var.max(0.0).sqrt())
-    }
-}
-
-/// The other pipeline — what a drifted winner is re-measured against.
-fn other_mode(mode: ExecMode) -> ExecMode {
-    match mode {
-        ExecMode::Staged => ExecMode::Fused,
-        ExecMode::Fused => ExecMode::Staged,
-    }
-}
-
-/// Lifecycle of a tuning verdict (docs/ARCHITECTURE.md §4):
-/// `Unsettled → Settled → Stale → Remeasuring → Settled → …`
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum TuneState {
-    /// still collecting first samples per the [`TuningPolicy`]
-    Unsettled,
-    /// verdict in force; serves its winner with zero overhead
-    Settled,
-    /// verdict doubted (drift, expiry, `set_machine`, plan eviction);
-    /// keeps serving the old winner while waiting for the shadow slot
-    Stale,
-    /// holds the scheduler's single shadow slot: this bucket's next warm
-    /// batch runs the doubted (losing) mode once, then re-settles
-    Remeasuring,
-}
-
-/// When a settled staged-vs-fused verdict stops being trusted.
-#[derive(Clone, Copy, Debug, Default, PartialEq)]
-pub enum DecayPolicy {
-    /// Verdicts are final once settled (the pre-decay behavior).
-    #[default]
-    Never,
-    /// A verdict expires after serving `n` batches and re-confirms
-    /// through one shadow re-measurement.
-    AfterBatches(u64),
-    /// Warm samples of the winning mode keep feeding its EWMA; a sample
-    /// deviating more than `rel_tol` (relative) from the mean re-opens
-    /// the verdict and schedules a shadow re-measurement of the loser.
-    OnDrift { rel_tol: f64 },
-    /// Variance-aware drift: like [`DecayPolicy::OnDrift`], but the
-    /// tolerance scales with the stream's own measured noise — a warm
-    /// winner sample trips only when it lands more than `k` standard
-    /// deviations (the EWMA's exponentially weighted σ) from the mean.
-    /// On noisy co-tenanted hosts a fixed `rel_tol` fires on every
-    /// scheduling hiccup; k·σ adapts to the host's baseline jitter and
-    /// re-opens verdicts only on genuine level shifts.  `k = 3` is the
-    /// usual control-chart setting.
-    OnDriftSigma { k: f64 },
-}
-
-/// Monotonic counters for the decay subsystem (observability; surfaced
-/// through `Metrics::Snapshot` by `ConvService`).
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
-pub struct DecayStats {
-    /// settled verdicts re-opened by an out-of-tolerance winner sample
-    pub drift_events: u64,
-    /// settled verdicts re-opened by age, `set_machine`, or plan eviction
-    pub expiries: u64,
-    /// completed re-measurements (fresh loser sample, verdict re-settled)
-    pub remeasurements: u64,
-    /// re-measurements whose fresh verdict changed the winning mode
-    pub flips: u64,
-}
-
-/// One tuning-table entry: the roofline seed, the per-mode EWMA timing
-/// streams, the currently resolved winner, and its lifecycle state.
-///
-/// Timings are stored **per image** (batch seconds / batch size): a
-/// bucket spans actual batch sizes up to 2x apart, so raw batch times of
-/// the two pipelines would not compare like-for-like.
-struct TuneEntry {
-    /// the roofline prediction at this bucket's batch size
-    analytic: ExecMode,
-    staged: Ewma,
-    fused: Ewma,
-    /// the mode `run_batch` executes for this bucket right now
-    resolved: ExecMode,
-    state: TuneState,
-    /// false once the serving plan proved unable to fuse: one-pipeline
-    /// entries settle immediately and never decay (nothing to flip to)
-    fusable: bool,
-    /// batches served while settled since the verdict (re-)settled
-    age: u64,
-    /// the mode owed a fresh sample while stale / re-measuring
-    pending: Option<ExecMode>,
-    /// true while stale/re-measuring when the *winner's* stream is also
-    /// doubted (`set_machine` / plan eviction invalidate both sides;
-    /// drift already reseeds the winner from the tripping sample, and an
-    /// age expiry's winner stream was fed live throughout the lease) —
-    /// the re-measurement then refreshes both modes before re-settling
-    winner_doubted: bool,
-}
-
-impl TuneEntry {
-    /// Seed from the analytic choice.  A plan that cannot fuse settles
-    /// immediately on `Staged` — there is no alternative to measure.
-    fn seed(choice: &ExecChoice, can_fuse: bool) -> TuneEntry {
-        let analytic = match choice.policy {
-            ExecPolicy::Fused if can_fuse => ExecMode::Fused,
-            _ => ExecMode::Staged,
-        };
-        TuneEntry {
-            analytic,
-            staged: Ewma::default(),
-            fused: Ewma::default(),
-            resolved: if can_fuse { analytic } else { ExecMode::Staged },
-            state: if can_fuse {
-                TuneState::Unsettled
-            } else {
-                TuneState::Settled
-            },
-            fusable: can_fuse,
-            age: 0,
-            pending: None,
-            winner_doubted: false,
-        }
-    }
-
-    fn ewma(&self, mode: ExecMode) -> &Ewma {
-        match mode {
-            ExecMode::Staged => &self.staged,
-            ExecMode::Fused => &self.fused,
-        }
-    }
-
-    fn ewma_mut(&mut self, mode: ExecMode) -> &mut Ewma {
-        match mode {
-            ExecMode::Staged => &mut self.staged,
-            ExecMode::Fused => &mut self.fused,
-        }
-    }
-
-    fn time_of(&self, mode: ExecMode) -> Option<f64> {
-        self.ewma(mode).value()
-    }
-
-    fn record(&mut self, mode: ExecMode, secs: f64) {
-        self.ewma_mut(mode).record(secs);
-    }
-
-    /// Settle on the measured winner once both pipelines have a timing.
-    /// Also how a re-measuring entry re-settles (clearing the pending
-    /// mode).  The age — the `AfterBatches` lease — restarts only on a
-    /// genuine (re-)settle transition or a changed winner: a routine
-    /// sample recorded on an already-settled entry must not keep
-    /// postponing expiry.
-    fn try_settle(&mut self) {
-        if let (Some(s), Some(f)) = (self.staged.value(), self.fused.value()) {
-            let winner = if f < s {
-                ExecMode::Fused
-            } else {
-                ExecMode::Staged
-            };
-            if self.state != TuneState::Settled || self.resolved != winner {
-                self.age = 0;
-            }
-            self.resolved = winner;
-            self.state = TuneState::Settled;
-            self.pending = None;
-        }
-    }
-
-    /// Settled → Stale: keep serving the current winner, owe the losing
-    /// mode a fresh sample (and, when `doubt_winner`, the winner too —
-    /// its stream predates the change that triggered the staleness).
-    /// No-op on one-pipeline or not-yet-settled entries; returns whether
-    /// the transition happened.
-    fn mark_stale(&mut self, doubt_winner: bool) -> bool {
-        if self.state == TuneState::Settled && self.fusable {
-            self.state = TuneState::Stale;
-            self.pending = Some(other_mode(self.resolved));
-            self.age = 0;
-            self.winner_doubted = doubt_winner;
-            true
-        } else {
-            false
-        }
-    }
-
-    /// Is `secs` a drift event for `mode` under `decay`?  `OnDrift`
-    /// compares against a fixed relative tolerance; `OnDriftSigma`
-    /// against k· the stream's own EW standard deviation, so a
-    /// noisy-but-stationary stream does not trip.  A freshly (re)seeded
-    /// stream has no trusted σ yet and cannot sigma-trip until it
-    /// re-warms ([`SIGMA_WARM_SAMPLES`]).  σ is floored at a sliver of
-    /// the mean ([`SIGMA_FLOOR_REL`]): a perfectly quiet stream (e.g.
-    /// identical injected timings) would otherwise have σ = 0 — and a
-    /// genuine level shift would be absorbed sample by sample as the
-    /// variance grew in step with the moving mean, leaving the quietest
-    /// streams permanently blind to the exact failure the detector
-    /// exists to catch.
-    fn drift_tripped(&self, mode: ExecMode, secs: f64, decay: DecayPolicy) -> bool {
-        let e = self.ewma(mode);
-        match (decay, e.value()) {
-            (DecayPolicy::OnDrift { rel_tol }, Some(mean)) if mean > 0.0 => {
-                (secs - mean).abs() > rel_tol * mean
-            }
-            (DecayPolicy::OnDriftSigma { k }, Some(mean)) if mean > 0.0 => {
-                e.sigma().is_some_and(|sigma| {
-                    (secs - mean).abs() > k * sigma.max(SIGMA_FLOOR_REL * mean)
-                })
-            }
-            _ => false,
-        }
-    }
-}
-
-/// Does `decay` re-open settled verdicts on out-of-tolerance winner
-/// samples (either drift flavor)?
-fn is_drift_policy(decay: DecayPolicy) -> bool {
-    matches!(
-        decay,
-        DecayPolicy::OnDrift { .. } | DecayPolicy::OnDriftSigma { .. }
-    )
-}
-
-/// Absorb one shadow sample: it *replaces* the doubted mode's EWMA.  If
-/// the winner's stream is also doubted (`set_machine` / plan eviction)
-/// and this was the loser's sample, the winner is queued for its own
-/// fresh sample instead of settling against stale history.  Returns
-/// true when the re-measurement completed (entry re-settled — a changed
-/// winner counts as a flip) so the caller can release the shadow slot.
-/// (Free function so `run_batch` can call it while holding split
-/// borrows of the scheduler's fields.)
-fn finish_remeasure(
-    entry: &mut TuneEntry,
-    mode: ExecMode,
-    secs: f64,
-    stats: &mut DecayStats,
-) -> bool {
-    entry.ewma_mut(mode).reseed(secs);
-    if entry.winner_doubted && mode != entry.resolved {
-        entry.pending = Some(entry.resolved);
-        return false;
-    }
-    entry.winner_doubted = false;
-    let before = entry.resolved;
-    entry.try_settle();
-    stats.remeasurements += 1;
-    if entry.resolved != before {
-        stats.flips += 1;
-    }
-    true
-}
-
-/// Plan eviction doubts (but keeps) the plan's settled verdicts: a
-/// rebuilt plan re-pays first-touch costs, so each verdict re-confirms
-/// through the shadow path before being trusted again.  Returns how
-/// many entries went stale.
-fn stale_plan_entries(tuning: &mut HashMap<TuneKey, TuneEntry>, plan: &PlanKey) -> u64 {
-    let mut staled = 0;
-    for (k, e) in tuning.iter_mut() {
-        // the rebuild invalidates both streams' cold-cost assumptions:
-        // doubt the winner too
-        if &k.plan == plan && e.mark_stale(true) {
-            staled += 1;
-        }
-    }
-    staled
-}
-
-/// Read-only view of one tuning-table entry (observability / tests).
-#[derive(Clone, Copy, Debug)]
-pub struct TuneSnapshot {
-    pub bucket: usize,
-    /// the roofline seed
-    pub analytic: ExecMode,
-    /// the mode currently served for this bucket
-    pub resolved: ExecMode,
-    /// EWMA seconds **per image** (batch time / batch size, so samples
-    /// from different batch sizes within the bucket compare)
-    pub staged_secs: Option<f64>,
-    pub fused_secs: Option<f64>,
-    /// `state == Settled` — stale / re-measuring entries report false
-    /// (their verdict is doubted even though it is still being served)
-    pub settled: bool,
-    /// where the verdict sits in the decay lifecycle
-    pub state: TuneState,
-    /// batches served since the verdict (re-)settled
-    pub age: u64,
-}
-
-/// The tiled `Method` behind a [`ConvAlgorithm`], if any.
-fn algo_method(algo: ConvAlgorithm) -> Option<Method> {
-    match algo {
-        ConvAlgorithm::Winograd { .. } => Some(Method::Winograd),
-        ConvAlgorithm::RegularFft { .. } => Some(Method::RegularFft),
-        ConvAlgorithm::GaussFft { .. } => Some(Method::GaussFft),
-        _ => None,
-    }
-}
-
-/// The plan-cache key for (algo, input shape, weights).
-///
-/// The FNV fingerprint scan is O(|weights|) per batch — orders of
-/// magnitude below the convolution itself — and is what lets callers
-/// swap weights without a stale-plan hazard.
-fn make_key(
-    algo: ConvAlgorithm,
-    c: usize,
-    h: usize,
-    w_sp: usize,
-    pad: usize,
-    weights: &Tensor4,
-) -> PlanKey {
-    PlanKey {
-        algo,
-        c,
-        h,
-        w: w_sp,
-        k: weights.shape[0],
-        r: weights.shape[2],
-        pad,
-        weights_fp: weights_fingerprint(weights),
-    }
-}
-
-/// The layer shape a [`PlanKey`] serves, at batch size `b`.  The model's
-/// `x` is the *padded* spatial extent — the tile grid the roofline costs
-/// spans the halo, matching how the paper's layer tables count pre-padded
-/// sizes.
-fn key_shape(key: &PlanKey, b: usize) -> LayerShape {
-    LayerShape {
-        b: b.max(1),
-        c: key.c,
-        k: key.k,
-        x: key.h.max(key.w) + 2 * key.pad,
-        r: key.r,
-    }
-}
-
-/// The roofline execution choice for a tiled algorithm on `machine` —
-/// this only seeds the plan's *default* mode; `run_batch` re-resolves
-/// per batch bucket through the tuning table.
-fn resolve_options(key: &PlanKey, b: usize, machine: &Machine) -> PlanOptions {
-    let method = match algo_method(key.algo) {
-        Some(m) => m,
-        None => return PlanOptions::default(),
-    };
-    let m = key.algo.tile_m().expect("tiled algorithm");
-    PlanOptions {
-        exec: choose_exec(method, &key_shape(key, b), m, machine).policy,
-        fused_budget: machine.cache,
-        pad: key.pad,
-        ..PlanOptions::default()
-    }
-}
-
 /// Get-or-build the cached plan for `key`.  An eviction transitions the
 /// evicted plan's settled tuning verdicts to stale (counted in `stats`)
-/// rather than deleting them — see the module docs on decay.
+/// rather than deleting them — see the module docs on decay.  The
+/// tuning/pin arguments come from the [`SharedStores`]; the plan cache
+/// and build counter belong to the calling [`Executor`].
 #[allow(clippy::too_many_arguments)]
 fn plan_entry<'a>(
     plans: &'a mut HashMap<PlanKey, PlanEntry>,
@@ -700,7 +247,7 @@ fn plan_entry<'a>(
 
 /// Get-or-seed the tuning entry for `(key, bucket)` — the seed is the
 /// roofline prediction evaluated at the bucket's batch size (a free
-/// function so callers can split-borrow the scheduler's fields).
+/// function so callers can split-borrow the shared store's fields).
 fn tune_entry<'a>(
     tuning: &'a mut HashMap<TuneKey, TuneEntry>,
     key: &PlanKey,
@@ -717,114 +264,152 @@ fn tune_entry<'a>(
         })
 }
 
-/// Tuning-table size threshold: a plan sees roughly one entry per
-/// power-of-two batch size (~10 for batches up to 1024), so 16 per plan
-/// is headroom; past it, entries whose plan is gone (weight churn, LRU
-/// eviction) are dropped.  A table of all-live entries may legitimately
-/// exceed this — the prune is skipped until the table grows again, so a
-/// full-table scan is paid at most once per insertion beyond the
-/// threshold, never per batch.
-const MAX_TUNE_ENTRIES: usize = MAX_PLANS * 16;
-
 /// Waves a bucket may hold the shadow re-measurement slot without
 /// completing (its traffic stopped mid-re-measurement).  After this the
 /// slot is stolen so other stale buckets can heal; the holder returns
 /// to the stale queue.
 const REMEASURE_STEAL_WAVES: u64 = 64;
 
-/// A static fork-join scheduler over a worker pool, with a persistent
-/// byte-budgeted LRU plan cache for the tiled algorithms.
-pub struct StaticScheduler {
+/// Acquire the shared stores.  A poisoned mutex is recovered, not
+/// propagated: poisoning means a sibling replica panicked mid-batch
+/// (its worker panics already surfaced there), and wedging every other
+/// replica's serving loop on it would turn one bad batch into a fleet
+/// outage.  The store's state is step-consistent — every locked section
+/// leaves the table in a valid (at worst conservatively stale) state.
+fn lock(shared: &SharedHandle) -> MutexGuard<'_, SharedStores> {
+    shared.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// The socket-local half of a scheduler: the worker pool, the plan
+/// cache with its grow-only arenas and fused panel scratch, the LRU
+/// clock, and the single shadow re-measurement slot.  Everything here
+/// is meaningless on another socket (arenas are first-touched by this
+/// pool's workers) or per-replica by design (one in-flight shadow
+/// re-measurement per replica bounds measurement overhead per wave).
+pub struct Executor {
     pool: ThreadPool,
     plans: HashMap<PlanKey, PlanEntry>,
-    /// the per-batch-bucket staged/fused resolution memo (see module docs)
-    tuning: HashMap<TuneKey, TuneEntry>,
-    /// how tuning entries are refined (analytic / measured / hybrid)
-    policy: TuningPolicy,
-    /// when settled verdicts stop being trusted (see module docs)
-    decay: DecayPolicy,
-    /// pin refcounts per plan key: how many live [`PlanHandle`]s (one
-    /// per registered layer, via `warm`) reference the key.  Two layers
-    /// registered with identical weights share a key; `discard` only
-    /// deletes plan + tuning entries when the last pin drops, and the
-    /// same-shape fast eviction in [`plan_entry`] never takes a pinned
-    /// key for a dead weight swap.
-    pins: HashMap<PlanKey, u32>,
     /// the single shadow re-measurement slot: the stale bucket currently
     /// allowed to run its doubted mode, and the tick it claimed the slot
     remeasuring: Option<(TuneKey, u64)>,
-    /// monotonic decay counters (drift / expiry / re-measure / flip)
-    decay_stats: DecayStats,
-    /// table size after the last dead-entry prune (skip re-scanning an
-    /// over-threshold table until it grows past this again)
-    tune_prune_len: usize,
     /// monotonic access counter driving the LRU order
     tick: u64,
     /// monotonic count of plan *builds* (kernel transform paid) — stays
     /// flat while warmed plans are reused, which is exactly what the
     /// network plan-reuse tests assert
     plan_builds: u64,
-    /// resident-byte ceiling across all cached plans
-    plan_budget: usize,
     /// pinned execution mode: bypass the tuning table and run every
     /// tiled batch in this mode (downgraded to staged when the plan
     /// cannot fuse) — the operator/differential-test knob
     exec_override: Option<ExecMode>,
-    /// machine model driving fused-vs-staged plan resolution
-    machine: Machine,
+    /// tuning keys this executor has served at least once — lets
+    /// `warm_hits` count only verdicts earned *elsewhere* (another
+    /// replica, or a warm-start profile import)
+    seen: HashSet<TuneKey>,
+    /// first-touch batches that found an already-settled verdict in the
+    /// shared table: the cross-replica / warm-start payoff counter
+    warm_hits: u64,
+}
+
+impl Executor {
+    fn new(pool: ThreadPool) -> Executor {
+        Executor {
+            pool,
+            plans: HashMap::new(),
+            remeasuring: None,
+            tick: 0,
+            plan_builds: 0,
+            exec_override: None,
+            seen: HashSet::new(),
+            warm_hits: 0,
+        }
+    }
+}
+
+/// A static fork-join scheduler over a worker pool, with a persistent
+/// byte-budgeted LRU plan cache for the tiled algorithms: one
+/// [`Executor`] bound to one [`SharedHandle`].
+pub struct StaticScheduler {
+    shared: SharedHandle,
+    exec: Executor,
 }
 
 impl StaticScheduler {
+    /// A scheduler over a private store — the historical single-replica
+    /// constructor.  The store seeds with the nominal modern-CPU model
+    /// (1MB core-exclusive cache, CMR 24) until the owner provides the
+    /// real machine via [`StaticScheduler::set_machine`].
     pub fn new(workers: usize) -> StaticScheduler {
+        StaticScheduler::with_shared(workers, SharedStores::handle(xeon_gold()))
+    }
+
+    /// A scheduler (replica) over an existing shared store: tuning
+    /// verdicts, pins, the byte budget, and the machine model are read
+    /// and written through `shared`, so sibling replicas serve each
+    /// other's verdicts.  The pool, plan cache, and shadow slot stay
+    /// private to this replica.
+    pub fn with_shared(workers: usize, shared: SharedHandle) -> StaticScheduler {
+        StaticScheduler::from_pool(ThreadPool::new(workers), shared)
+    }
+
+    /// [`StaticScheduler::with_shared`] with a caller-built pool — how
+    /// the sharded service installs named / core-pinned workers.
+    pub fn from_pool(pool: ThreadPool, shared: SharedHandle) -> StaticScheduler {
         StaticScheduler {
-            pool: ThreadPool::new(workers),
-            plans: HashMap::new(),
-            tuning: HashMap::new(),
-            policy: TuningPolicy::default(),
-            decay: DecayPolicy::default(),
-            pins: HashMap::new(),
-            remeasuring: None,
-            decay_stats: DecayStats::default(),
-            tune_prune_len: 0,
-            tick: 0,
-            plan_builds: 0,
-            plan_budget: DEFAULT_PLAN_BUDGET,
-            exec_override: None,
-            // nominal modern-CPU model (1MB core-exclusive cache, CMR 24)
-            // until the owner provides the real machine via `set_machine`
-            machine: xeon_gold(),
+            shared,
+            exec: Executor::new(pool),
         }
     }
 
+    /// The handle to this scheduler's shared stores (clone it to attach
+    /// further replicas or to export a profile elsewhere).
+    pub fn shared(&self) -> SharedHandle {
+        self.shared.clone()
+    }
+
     pub fn workers(&self) -> usize {
-        self.pool.workers()
+        self.exec.pool.workers()
     }
 
-    /// Number of cached layer plans (observability / tests).
+    /// Number of cached layer plans in this replica (observability / tests).
     pub fn cached_plans(&self) -> usize {
-        self.plans.len()
+        self.exec.plans.len()
     }
 
-    /// The machine model driving plan and algorithm resolution.
-    pub fn machine(&self) -> &Machine {
-        &self.machine
+    /// The machine model driving plan and algorithm resolution.  Owned
+    /// snapshot: the live model sits inside the shared store's mutex.
+    pub fn machine(&self) -> Machine {
+        lock(&self.shared).tuning.machine.clone()
     }
 
-    /// Monotonic count of plan builds (kernel transforms paid).  A warm
-    /// serving loop holds this flat: if it moves between two identical
-    /// requests, a plan was evicted and rebuilt.
+    /// Monotonic count of plan builds (kernel transforms paid) by this
+    /// replica.  A warm serving loop holds this flat: if it moves
+    /// between two identical requests, a plan was evicted and rebuilt.
     pub fn plan_builds(&self) -> u64 {
-        self.plan_builds
+        self.exec.plan_builds
     }
 
-    /// Total resident bytes across all cached plans.
+    /// Total resident bytes across this replica's cached plans.
     pub fn plan_bytes(&self) -> usize {
-        self.plans.values().map(|e| e.plan.resident_bytes()).sum()
+        self.exec
+            .plans
+            .values()
+            .map(|e| e.plan.resident_bytes())
+            .sum()
+    }
+
+    /// First-touch batches served off a verdict already settled in the
+    /// shared table — earned by a sibling replica or a warm-start
+    /// profile import, not by this replica's own measurements.
+    pub fn verdict_warm_hits(&self) -> u64 {
+        self.exec.warm_hits
     }
 
     /// Set the plan-cache byte ceiling (applies from the next batch).
+    /// Shared-store scoped: every replica enforces it over its own
+    /// resident plans.
     pub fn set_plan_budget(&mut self, bytes: usize) {
-        self.plan_budget = bytes;
+        lock(&self.shared).plans.budget = bytes;
     }
 
     /// Pin every tiled batch to one execution mode, bypassing the
@@ -833,106 +418,61 @@ impl StaticScheduler {
     /// runs neither feed nor consult the tuning EWMAs — the table
     /// resumes exactly where it left off.  This is the knob the
     /// end-to-end differential suites use to force both pipelines over
-    /// identical traffic.
+    /// identical traffic.  Per-replica: pinning one replica leaves its
+    /// siblings tuning normally.
     pub fn set_exec_override(&mut self, mode: Option<ExecMode>) {
-        self.exec_override = mode;
+        self.exec.exec_override = mode;
     }
 
     pub fn exec_override(&self) -> Option<ExecMode> {
-        self.exec_override
+        self.exec.exec_override
     }
 
     /// Provide the machine model that drives fused-vs-staged resolution
     /// and fused panel sizing for plans built *after* this call.
     ///
     /// Verdicts measured under the old machine state are doubted, not
-    /// deleted: every tuning entry reseeds its analytic pick from the
-    /// new roofline, and settled fusable entries transition to stale —
-    /// they keep serving their winner (and their EWMA history, for the
-    /// re-settle comparison) but owe the losing mode a fresh confirming
-    /// sample through the shadow path.  This closes the stale-verdict
-    /// leak where entries settled under the old machine would keep their
-    /// winner unchallenged forever.
+    /// deleted — see `TuningStore::set_machine` for the full lifecycle.
+    /// This replica's in-flight shadow re-measurement (taken under the
+    /// old machine) is dropped; sibling replicas drop theirs lazily on
+    /// their next wave when they find their slot's entry re-opened.
     pub fn set_machine(&mut self, machine: Machine) {
-        self.machine = machine;
-        self.remeasuring = None;
-        let mut staled = 0u64;
-        for (key, entry) in self.tuning.iter_mut() {
-            let (method, m) = match (algo_method(key.plan.algo), key.plan.algo.tile_m()) {
-                (Some(method), Some(m)) => (method, m),
-                _ => continue,
-            };
-            let choice = choose_exec(method, &key_shape(&key.plan, key.bucket), m, &self.machine);
-            entry.analytic = match choice.policy {
-                ExecPolicy::Fused if entry.fusable => ExecMode::Fused,
-                _ => ExecMode::Staged,
-            };
-            match entry.state {
-                // no measurements bind an unsettled entry to the old
-                // machine: follow the new seed outright
-                TuneState::Unsettled => {
-                    entry.resolved = if entry.fusable {
-                        entry.analytic
-                    } else {
-                        ExecMode::Staged
-                    };
-                }
-                // already re-opened entries (including the in-flight
-                // shadow-slot holder, invalidated above) restart their
-                // re-measurement with BOTH streams doubted — whatever
-                // samples they had were taken under the old machine.
-                // Not re-counted as expiries: they were already open.
-                TuneState::Remeasuring | TuneState::Stale => {
-                    entry.state = TuneState::Stale;
-                    entry.pending = Some(other_mode(entry.resolved));
-                    entry.winner_doubted = true;
-                }
-                TuneState::Settled => {
-                    // both streams were measured under the old machine
-                    // state: doubt the winner as well as the loser
-                    if entry.mark_stale(true) {
-                        staled += 1;
-                    }
-                }
-            }
-        }
-        self.decay_stats.expiries += staled;
-        self.tune_prune_len = 0;
+        self.exec.remeasuring = None;
+        lock(&self.shared).tuning.set_machine(machine);
     }
 
     /// Set when settled verdicts stop being trusted (see [`DecayPolicy`]).
     /// Takes effect on the next batch; ages already accumulated count.
+    /// Shared-store scoped.
     pub fn set_decay_policy(&mut self, policy: DecayPolicy) {
-        self.decay = policy;
+        lock(&self.shared).tuning.decay = policy;
     }
 
     pub fn decay_policy(&self) -> DecayPolicy {
-        self.decay
+        lock(&self.shared).tuning.decay
     }
 
     /// Monotonic decay counters (drift events, expiries, re-measurements,
-    /// flips) — the numbers `Metrics::Snapshot` surfaces.
+    /// flips) — the numbers `Metrics::Snapshot` surfaces.  Shared-store
+    /// scoped: with replicas, events from every sibling aggregate here.
     pub fn decay_stats(&self) -> DecayStats {
-        self.decay_stats
+        lock(&self.shared).tuning.stats
     }
 
     /// Entries currently doubting their verdict (stale + re-measuring).
     pub fn stale_entries(&self) -> usize {
-        self.tuning
-            .values()
-            .filter(|e| matches!(e.state, TuneState::Stale | TuneState::Remeasuring))
-            .count()
+        lock(&self.shared).tuning.stale_count()
     }
 
     /// Set how staged-vs-fused is resolved per batch bucket (see
     /// [`TuningPolicy`]).  Takes effect on the next batch; already
-    /// settled entries keep their verdicts.
+    /// settled entries keep their verdicts.  Shared-store scoped.
     pub fn set_tuning_policy(&mut self, policy: TuningPolicy) {
-        self.policy = policy;
+        lock(&self.shared).tuning.policy = policy;
     }
 
     pub fn tuning_policy(&self) -> TuningPolicy {
-        self.policy
+        lock(&self.shared).tuning.policy
     }
 
     /// Exec mode of the cached plan serving (algo, shape, weights), if any
@@ -944,7 +484,8 @@ impl StaticScheduler {
         w: &Tensor4,
     ) -> Option<crate::conv::ExecMode> {
         let fp = weights_fingerprint(w);
-        self.plans
+        self.exec
+            .plans
             .values()
             .find(|e| e.plan.matches(algo, x, e.plan.pad(), fp))
             .map(|e| e.plan.exec_mode())
@@ -960,33 +501,38 @@ impl StaticScheduler {
     ) -> Option<TuneSnapshot> {
         let key = make_key(algo, x.shape[1], x.shape[2], x.shape[3], 0, w);
         let bucket = batch_bucket(x.shape[0]);
-        self.tuning
-            .get(&TuneKey { plan: key, bucket })
-            .map(|e| TuneSnapshot {
-                bucket,
-                analytic: e.analytic,
-                resolved: e.resolved,
-                staged_secs: e.staged.value(),
-                fused_secs: e.fused.value(),
-                settled: e.state == TuneState::Settled,
-                state: e.state,
-                age: e.age,
-            })
+        lock(&self.shared).tuning.snapshot(&key, bucket)
     }
 
     /// Number of settled tuning entries whose empirical winner disagrees
     /// with the roofline seed — the "how wrong was the model" counter the
     /// perf snapshot records.
     pub fn tuning_disagreements(&self) -> usize {
-        self.tuning
-            .values()
-            .filter(|e| e.state == TuneState::Settled && e.resolved != e.analytic)
-            .count()
+        lock(&self.shared).tuning.disagreements()
     }
 
     /// Total tuning-table entries (observability / tests).
     pub fn tuning_entries(&self) -> usize {
-        self.tuning.len()
+        lock(&self.shared).tuning.len()
+    }
+
+    /// Serialize the shared tuning state — machine ceilings plus every
+    /// tuning entry with its EWMA streams — into a [`TuningProfile`]
+    /// snapshot for `save`/JSON export.
+    pub fn export_profile(&self) -> TuningProfile {
+        profile_of_store(&lock(&self.shared).tuning)
+    }
+
+    /// Load a [`TuningProfile`] snapshot into the shared tuning table.
+    /// Entries from a profile whose machine ceilings match the current
+    /// model import as settled (zero re-measurement warm-start);
+    /// mismatched ceilings import them as stale so the decay machinery
+    /// heals them through the shadow path.  See
+    /// `coordinator::profile::import_into_store`.
+    pub fn import_profile(&mut self, profile: &TuningProfile) -> ProfileImport {
+        // any in-flight shadow re-measurement refers to pre-import state
+        self.exec.remeasuring = None;
+        import_into_store(&mut lock(&self.shared).tuning, profile)
     }
 
     /// Feed an externally measured execution time for one (layer, batch
@@ -1014,6 +560,7 @@ impl StaticScheduler {
         let key = make_key(algo, x.shape[1], x.shape[2], x.shape[3], 0, w);
         let bucket = batch_bucket(x.shape[0]);
         let can_fuse = self
+            .exec
             .plans
             .get(&key)
             .is_none_or(|e| e.plan.can_fuse());
@@ -1021,9 +568,17 @@ impl StaticScheduler {
             return; // a mode the plan cannot run is not actionable
         }
         let per = secs / x.shape[0].max(1) as f64;
-        let decay = self.decay;
         let tkey = TuneKey { plan: key, bucket };
-        let entry = tune_entry(&mut self.tuning, &key, bucket, can_fuse, &self.machine);
+        let mut g = lock(&self.shared);
+        let shared = &mut *g;
+        let decay = shared.tuning.decay;
+        let entry = tune_entry(
+            &mut shared.tuning.entries,
+            &key,
+            bucket,
+            can_fuse,
+            &shared.tuning.machine,
+        );
         match entry.state {
             TuneState::Settled => {
                 if is_drift_policy(decay)
@@ -1038,9 +593,9 @@ impl StaticScheduler {
                     // a genuinely degraded winner)
                     entry.ewma_mut(mode).reseed(per);
                     if entry.mark_stale(false) {
-                        self.decay_stats.drift_events += 1;
+                        shared.tuning.stats.drift_events += 1;
                     }
-                    self.prune_tuning();
+                    self.exec.prune_tuning(shared);
                     return;
                 }
                 entry.record(mode, per);
@@ -1052,10 +607,10 @@ impl StaticScheduler {
             }
             TuneState::Stale | TuneState::Remeasuring => {
                 if entry.pending == Some(mode) {
-                    if finish_remeasure(entry, mode, per, &mut self.decay_stats)
-                        && matches!(&self.remeasuring, Some((k, _)) if *k == tkey)
+                    if finish_remeasure(entry, mode, per, &mut shared.tuning.stats)
+                        && matches!(&self.exec.remeasuring, Some((k, _)) if *k == tkey)
                     {
-                        self.remeasuring = None;
+                        self.exec.remeasuring = None;
                     }
                 } else if entry.winner_doubted && mode == entry.resolved {
                     // a doubted winner's fresh sample replaces its stream
@@ -1068,7 +623,7 @@ impl StaticScheduler {
                 }
             }
         }
-        self.prune_tuning();
+        self.exec.prune_tuning(shared);
     }
 
     /// Consume the micro-batch staged-vs-fused verdict of
@@ -1097,7 +652,15 @@ impl StaticScheduler {
         // `batch_hint` images — store per image like every other sample
         let per = batch_hint.max(1) as f64;
         let tkey = TuneKey { plan: key, bucket };
-        let entry = tune_entry(&mut self.tuning, &key, bucket, can_fuse, &self.machine);
+        let mut g = lock(&self.shared);
+        let shared = &mut *g;
+        let entry = tune_entry(
+            &mut shared.tuning.entries,
+            &key,
+            bucket,
+            can_fuse,
+            &shared.tuning.machine,
+        );
         let was_doubted = matches!(entry.state, TuneState::Stale | TuneState::Remeasuring);
         let before = entry.resolved;
         // a full fresh dual verdict *replaces* both streams — blending
@@ -1119,16 +682,16 @@ impl StaticScheduler {
         }
         entry.age = 0; // a fresh verdict renews the AfterBatches lease
         if was_doubted {
-            self.decay_stats.remeasurements += 1;
+            shared.tuning.stats.remeasurements += 1;
             if entry.resolved != before {
-                self.decay_stats.flips += 1;
+                shared.tuning.stats.flips += 1;
             }
         }
         // a full fresh verdict also heals a stale / re-measuring entry
-        if matches!(&self.remeasuring, Some((k, _)) if *k == tkey) {
-            self.remeasuring = None;
+        if matches!(&self.exec.remeasuring, Some((k, _)) if *k == tkey) {
+            self.exec.remeasuring = None;
         }
-        self.prune_tuning();
+        self.exec.prune_tuning(shared);
     }
 
     /// Pre-build (and cache) the plan for a layer so the first request
@@ -1163,32 +726,34 @@ impl StaticScheduler {
         if algo.tile_m().is_none() {
             return PlanHandle { algo, key: None };
         }
-        let workers = self.pool.workers();
-        self.tick += 1;
+        let workers = self.exec.pool.workers();
+        self.exec.tick += 1;
         let key = make_key(algo, weights.shape[1], h, w, pad, weights);
+        let mut g = lock(&self.shared);
+        let shared = &mut *g;
         let plan = plan_entry(
-            &mut self.plans,
-            &mut self.tuning,
-            &mut self.decay_stats,
-            &self.pins,
-            &mut self.plan_builds,
+            &mut self.exec.plans,
+            &mut shared.tuning.entries,
+            &mut shared.tuning.stats,
+            &shared.plans.pins,
+            &mut self.exec.plan_builds,
             workers,
             key,
             weights,
             batch_hint,
-            &self.machine,
-            self.tick,
+            &shared.tuning.machine,
+            self.exec.tick,
         );
         let can_fuse = plan.can_fuse();
         let _ = tune_entry(
-            &mut self.tuning,
+            &mut shared.tuning.entries,
             &key,
             batch_bucket(batch_hint),
             can_fuse,
-            &self.machine,
+            &shared.tuning.machine,
         );
-        *self.pins.entry(key).or_insert(0) += 1;
-        self.enforce_budget();
+        *shared.plans.pins.entry(key).or_insert(0) += 1;
+        self.exec.enforce_budget(shared);
         PlanHandle {
             algo,
             key: Some(key),
@@ -1204,25 +769,28 @@ impl StaticScheduler {
     /// that can never heal.  While other registered layers still share
     /// the key (identical weights), everything is kept — their plan and
     /// settled verdicts stay live.  The shadow slot is freed if one of
-    /// the deleted entries held it.
+    /// the deleted entries held it; sibling replicas' plans and slots
+    /// clean up lazily on their next wave.
     pub fn discard(&mut self, handle: PlanHandle) {
         let Some(key) = handle.key else { return };
-        match self.pins.get_mut(&key) {
+        let mut g = lock(&self.shared);
+        let shared = &mut *g;
+        match shared.plans.pins.get_mut(&key) {
             Some(n) if *n > 1 => {
                 *n -= 1;
                 return;
             }
             Some(_) => {
-                self.pins.remove(&key);
+                shared.plans.pins.remove(&key);
             }
             None => {}
         }
-        self.plans.remove(&key);
-        self.tuning.retain(|k, _| k.plan != key);
-        if matches!(&self.remeasuring, Some((held, _)) if held.plan == key) {
-            self.remeasuring = None;
+        self.exec.plans.remove(&key);
+        shared.tuning.entries.retain(|k, _| k.plan != key);
+        if matches!(&self.exec.remeasuring, Some((held, _)) if held.plan == key) {
+            self.exec.remeasuring = None;
         }
-        self.tune_prune_len = self.tune_prune_len.min(self.tuning.len());
+        shared.tuning.prune_len = shared.tuning.prune_len.min(shared.tuning.entries.len());
     }
 
     /// Force a synchronous dual re-measurement of one (layer, batch
@@ -1242,29 +810,37 @@ impl StaticScheduler {
         let method = algo_method(algo)?;
         let m = algo.tile_m()?;
         let [b, c, h, wd] = x.shape;
-        let workers = self.pool.workers();
-        self.tick += 1;
+        let workers = self.exec.pool.workers();
+        self.exec.tick += 1;
         let key = make_key(algo, c, h, wd, 0, w);
         let bucket = batch_bucket(b);
-        let analytic = choose_exec(method, &key_shape(&key, bucket), m, &self.machine);
+        let mut g = lock(&self.shared);
+        let shared = &mut *g;
+        let analytic = choose_exec(method, &key_shape(&key, bucket), m, &shared.tuning.machine);
         let plan = plan_entry(
-            &mut self.plans,
-            &mut self.tuning,
-            &mut self.decay_stats,
-            &self.pins,
-            &mut self.plan_builds,
+            &mut self.exec.plans,
+            &mut shared.tuning.entries,
+            &mut shared.tuning.stats,
+            &shared.plans.pins,
+            &mut self.exec.plan_builds,
             workers,
             key,
             w,
             b,
-            &self.machine,
-            self.tick,
+            &shared.tuning.machine,
+            self.exec.tick,
         );
-        let verdict = measure_exec_with(plan, x, analytic, Some(&self.pool));
+        let verdict = measure_exec_with(plan, x, analytic, Some(&self.exec.pool));
         let can_fuse = plan.can_fuse();
         let per = b.max(1) as f64;
         let tkey = TuneKey { plan: key, bucket };
-        let entry = tune_entry(&mut self.tuning, &key, bucket, can_fuse, &self.machine);
+        let entry = tune_entry(
+            &mut shared.tuning.entries,
+            &key,
+            bucket,
+            can_fuse,
+            &shared.tuning.machine,
+        );
         let before = entry.resolved;
         entry.ewma_mut(ExecMode::Staged).reseed(verdict.staged_secs / per);
         entry.winner_doubted = false;
@@ -1281,22 +857,22 @@ impl StaticScheduler {
             entry.pending = None;
         }
         entry.age = 0; // fresh dual timings renew the AfterBatches lease
-        self.decay_stats.remeasurements += 1;
+        shared.tuning.stats.remeasurements += 1;
         if entry.resolved != before {
-            self.decay_stats.flips += 1;
+            shared.tuning.stats.flips += 1;
         }
-        if matches!(&self.remeasuring, Some((k, _)) if *k == tkey) {
-            self.remeasuring = None;
+        if matches!(&self.exec.remeasuring, Some((k, _)) if *k == tkey) {
+            self.exec.remeasuring = None;
         }
-        self.enforce_budget();
-        self.tuning_for(algo, x, w)
+        self.exec.enforce_budget(shared);
+        shared.tuning.snapshot(&key, bucket)
     }
 
     /// Run `algo` over a stacked batch (B, C, H, W), statically sharding
     /// across workers; returns the stacked output.
     ///
     /// Zero-copy: workers write disjoint `&mut` slices of the one output
-    /// tensor — no sub-batch copies, no `Mutex`.
+    /// tensor — no sub-batch copies, no `Mutex` around the data.
     ///
     /// For tiled algorithms the execution mode (staged vs fused) is
     /// re-resolved **per batch** through the `(plan, batch bucket)`
@@ -1308,12 +884,13 @@ impl StaticScheduler {
         let p = ConvProblem::unit(b, c, w.shape[0], h, wd, w.shape[2]);
         let mut out = Tensor4::zeros(p.output_shape());
         match algo {
-            ConvAlgorithm::Direct => self.run_direct(&p, x, w, &mut out),
-            ConvAlgorithm::Im2col => self.run_im2col(&p, x, w, &mut out),
-            ConvAlgorithm::Gemm1x1 => self.run_1x1(&p, x, w, &mut out),
+            ConvAlgorithm::Direct => self.exec.run_direct(&p, x, w, &mut out),
+            ConvAlgorithm::Im2col => self.exec.run_im2col(&p, x, w, &mut out),
+            ConvAlgorithm::Gemm1x1 => self.exec.run_1x1(&p, x, w, &mut out),
             _ => {
                 let key = make_key(algo, c, h, wd, 0, w);
-                self.run_tiled(key, x, w, &mut out);
+                let mut g = lock(&self.shared);
+                self.exec.run_tiled(&mut g, key, x, w, &mut out);
             }
         }
         out
@@ -1359,48 +936,87 @@ impl StaticScheduler {
             Some(key) => {
                 debug_assert_eq!(p.stride, 1, "tiled plans are unit-stride");
                 debug_assert_eq!(key.pad, p.pad, "plan/problem pad mismatch");
-                self.run_tiled(key, x, w, out);
+                let mut g = lock(&self.shared);
+                self.exec.run_tiled(&mut g, key, x, w, out);
             }
             None => match handle.algo {
-                ConvAlgorithm::Im2col => self.run_im2col(p, x, w, out),
-                ConvAlgorithm::Gemm1x1 => self.run_1x1(p, x, w, out),
-                _ => self.run_direct(p, x, w, out),
+                ConvAlgorithm::Im2col => self.exec.run_im2col(p, x, w, out),
+                ConvAlgorithm::Gemm1x1 => self.exec.run_1x1(p, x, w, out),
+                _ => self.exec.run_direct(p, x, w, out),
             },
         }
     }
 
+    /// Equal-FLOP shard weights for a tile grid with remainder tiles:
+    /// full tiles cost m^2 output pixels, edge tiles cost their remainder.
+    ///
+    /// Used for *output-pixel-cost* sharding (direct conv).  The engine's
+    /// transform stages deliberately shard by tile count instead: every
+    /// tile — remainder or not — pays the same transform FLOPs (gathers
+    /// zero-pad), so `even_ranges` over tiles already is the equal-FLOP
+    /// split there.
+    pub fn tile_row_weights(oh: usize, m: usize) -> Vec<f64> {
+        let nh = oh.div_ceil(m);
+        (0..nh)
+            .map(|i| {
+                let rows = m.min(oh - i * m);
+                rows as f64
+            })
+            .collect()
+    }
+
+    /// Shard tile rows by weight across workers.
+    pub fn shard_tile_rows(&self, oh: usize, m: usize) -> Vec<Range<usize>> {
+        weighted_ranges(&Self::tile_row_weights(oh, m), self.workers())
+    }
+}
+
+impl Executor {
     /// The tiled-algorithm body shared by `run_batch` (key computed per
-    /// call) and `run_planned` (key carried by the [`PlanHandle`]).
-    fn run_tiled(&mut self, key: PlanKey, x: &Tensor4, w: &Tensor4, out: &mut Tensor4) {
+    /// call) and `run_planned` (key carried by the [`PlanHandle`]),
+    /// executed with the shared stores locked for the whole batch.
+    fn run_tiled(&mut self, shared: &mut SharedStores, key: PlanKey, x: &Tensor4, w: &Tensor4, out: &mut Tensor4) {
         let b = x.shape[0];
         let workers = self.pool.workers();
         self.tick += 1;
         let bucket = batch_bucket(b);
         let tkey = TuneKey { plan: key, bucket };
-        // free a wedged shadow slot before serving: a bucket
-        // whose traffic stopped mid-re-measurement must not
-        // block every other stale bucket forever
+        // shadow-slot hygiene before serving.  (1) With shared stores a
+        // sibling replica (or a profile import / remeasure_now) may have
+        // healed or deleted the entry this executor was shadowing — a
+        // slot pointing at a no-longer-doubted entry is freed outright.
+        // (2) A bucket whose traffic stopped mid-re-measurement must not
+        // block every other stale bucket forever: after enough waves the
+        // slot is stolen and the holder returns to the stale queue.
         if let Some((held, since)) = self.remeasuring {
-            if held != tkey && self.tick.saturating_sub(since) > REMEASURE_STEAL_WAVES {
-                if let Some(e) = self.tuning.get_mut(&held) {
-                    if e.state == TuneState::Remeasuring {
-                        e.state = TuneState::Stale;
+            match shared.tuning.entries.get(&held) {
+                None => self.remeasuring = None,
+                Some(e) if !matches!(e.state, TuneState::Stale | TuneState::Remeasuring) => {
+                    self.remeasuring = None;
+                }
+                Some(_) => {
+                    if held != tkey && self.tick.saturating_sub(since) > REMEASURE_STEAL_WAVES {
+                        if let Some(e) = shared.tuning.entries.get_mut(&held) {
+                            if e.state == TuneState::Remeasuring {
+                                e.state = TuneState::Stale;
+                            }
+                        }
+                        self.remeasuring = None;
                     }
                 }
-                self.remeasuring = None;
             }
         }
         let plan = plan_entry(
             &mut self.plans,
-            &mut self.tuning,
-            &mut self.decay_stats,
-            &self.pins,
+            &mut shared.tuning.entries,
+            &mut shared.tuning.stats,
+            &shared.plans.pins,
             &mut self.plan_builds,
             workers,
             key,
             w,
             b,
-            &self.machine,
+            &shared.tuning.machine,
             self.tick,
         );
         let can_fuse = plan.can_fuse();
@@ -1411,7 +1027,26 @@ impl StaticScheduler {
             plan.run_with_mode(x, out, Some(&self.pool), mode);
             return;
         }
-        let entry = tune_entry(&mut self.tuning, &key, bucket, can_fuse, &self.machine);
+        // cross-replica / warm-start payoff accounting: the first time
+        // THIS executor touches a bucket and finds it already settled,
+        // the verdict was earned elsewhere (a sibling replica or an
+        // imported profile) — count it before seeding can create one
+        if self.seen.insert(tkey) {
+            if let Some(e) = shared.tuning.entries.get(&tkey) {
+                if e.state == TuneState::Settled {
+                    self.warm_hits += 1;
+                }
+            }
+        }
+        let policy = shared.tuning.policy;
+        let decay = shared.tuning.decay;
+        let entry = tune_entry(
+            &mut shared.tuning.entries,
+            &key,
+            bucket,
+            can_fuse,
+            &shared.tuning.machine,
+        );
         let pool = &self.pool;
         // Timed run with two fairness rules: the time is stored
         // per image (entries compare samples across the up-to-2x
@@ -1447,16 +1082,16 @@ impl StaticScheduler {
         // allotted batches is no longer trusted and re-confirms
         // through the shadow path.  (The winner's stream is not
         // doubted: it was fed warm samples throughout the lease.)
-        if let DecayPolicy::AfterBatches(n) = self.decay {
+        if let DecayPolicy::AfterBatches(n) = decay {
             if entry.state == TuneState::Settled
                 && entry.age >= n
                 && entry.mark_stale(false)
             {
-                self.decay_stats.expiries += 1;
+                shared.tuning.stats.expiries += 1;
             }
         }
-        // stale buckets queue for the single shadow slot — at
-        // most one re-measuring bucket per run_batch wave keeps
+        // stale buckets queue for this replica's single shadow slot —
+        // at most one re-measuring bucket per run_batch wave keeps
         // steady-state latency flat while the table heals.  A
         // slot left pointing at this bucket by an inconsistency
         // (e.g. the entry was pruned and recreated) is reclaimed
@@ -1474,16 +1109,20 @@ impl StaticScheduler {
             // way — and absorb a warm sample (a cold run retries
             // on the next batch).  With a doubted winner the
             // shadow phase takes two warm batches (loser, then
-            // winner) before the fresh-vs-fresh re-settle.
+            // winner) before the fresh-vs-fresh re-settle.  With
+            // replicas, a sibling may be serving the same entry:
+            // only this replica's own slot is released on finish.
             let mode = entry.pending.unwrap_or(entry.resolved);
             if let Some(secs) = timed(plan, &mut *out, mode) {
-                if finish_remeasure(entry, mode, secs, &mut self.decay_stats) {
+                if finish_remeasure(entry, mode, secs, &mut shared.tuning.stats)
+                    && matches!(&self.remeasuring, Some((k, _)) if *k == tkey)
+                {
                     self.remeasuring = None;
                 }
             }
         } else if entry.state == TuneState::Settled
             || entry.state == TuneState::Stale
-            || self.policy == TuningPolicy::Analytic
+            || policy == TuningPolicy::Analytic
         {
             let mode = if can_fuse { entry.resolved } else { ExecMode::Staged };
             let sample = timed(plan, &mut *out, mode);
@@ -1498,7 +1137,7 @@ impl StaticScheduler {
             }
             if entry.state == TuneState::Settled && entry.fusable {
                 entry.age = entry.age.saturating_add(1);
-                match (self.decay, sample) {
+                match (decay, sample) {
                     // warm winner samples feed the EWMA so the
                     // detector tracks slow drift; one out of
                     // tolerance (fixed rel_tol, or k·σ of the
@@ -1510,10 +1149,10 @@ impl StaticScheduler {
                         DecayPolicy::OnDrift { .. } | DecayPolicy::OnDriftSigma { .. },
                         Some(secs),
                     ) => {
-                        if entry.drift_tripped(mode, secs, self.decay) {
+                        if entry.drift_tripped(mode, secs, decay) {
                             entry.ewma_mut(mode).reseed(secs);
                             if entry.mark_stale(false) {
-                                self.decay_stats.drift_events += 1;
+                                shared.tuning.stats.drift_events += 1;
                             }
                         } else {
                             entry.record(mode, secs);
@@ -1531,7 +1170,7 @@ impl StaticScheduler {
             // unsettled + a fusable plan (every !can_fuse entry
             // was pinned to Settled/Staged by the correction
             // above or at seed time) — refine per the policy
-            match self.policy {
+            match policy {
                 TuningPolicy::Measured => {
                     // run both pipelines back to back (identical
                     // output) until both have warm samples — the
@@ -1561,38 +1200,48 @@ impl StaticScheduler {
                 TuningPolicy::Analytic => unreachable!("handled above"),
             }
         }
-        self.enforce_budget();
+        self.enforce_budget(shared);
     }
 
     /// Drop tuning entries whose plan is gone once the table crosses the
     /// size threshold — and only when it has grown since the last prune,
-    /// so an all-live table never pays a rescan per batch.
-    fn prune_tuning(&mut self) {
-        if self.tuning.len() > MAX_TUNE_ENTRIES && self.tuning.len() > self.tune_prune_len {
+    /// so an all-live table never pays a rescan per batch.  With shared
+    /// stores, entries serving a *pinned* key survive even when this
+    /// replica holds no plan for it: the plan may be resident only on a
+    /// sibling replica, and pins are the shared record of liveness.
+    fn prune_tuning(&mut self, shared: &mut SharedStores) {
+        let t = &mut shared.tuning;
+        if t.entries.len() > MAX_TUNE_ENTRIES && t.entries.len() > t.prune_len {
             let plans = &self.plans;
-            self.tuning.retain(|k, _| plans.contains_key(&k.plan));
-            self.tune_prune_len = self.tuning.len();
+            let pins = &shared.plans.pins;
+            t.entries
+                .retain(|k, _| plans.contains_key(&k.plan) || pins.contains_key(&k.plan));
+            t.prune_len = t.entries.len();
             // if the prune took the shadow-slot holder with it, free the
             // slot — otherwise no completion path ever clears it and
             // stale buckets could queue behind a ghost forever
             if let Some((held, _)) = &self.remeasuring {
-                if !self.tuning.contains_key(held) {
+                if !t.entries.contains_key(held) {
                     self.remeasuring = None;
                 }
             }
+            // the warm-hit first-touch set tracks the same keys: drop
+            // dead ones with the same cadence so it stays bounded
+            self.seen.retain(|k| t.entries.contains_key(k));
         }
     }
 
-    /// Byte-aware LRU enforcement: while the cache exceeds its byte
-    /// budget, first `trim()` least-recently-used plans (freeing their
-    /// U/Z arenas and fused panels while keeping the kernel transform),
-    /// then — if kernel transforms alone still exceed the budget — evict
-    /// whole LRU plans, always keeping the most recent one.
-    fn enforce_budget(&mut self) {
-        self.prune_tuning();
+    /// Byte-aware LRU enforcement: while this replica's cache exceeds
+    /// the shared byte budget, first `trim()` least-recently-used plans
+    /// (freeing their U/Z arenas and fused panels while keeping the
+    /// kernel transform), then — if kernel transforms alone still exceed
+    /// the budget — evict whole LRU plans, always keeping the most
+    /// recent one.
+    fn enforce_budget(&mut self, shared: &mut SharedStores) {
+        self.prune_tuning(shared);
         loop {
             let total: usize = self.plans.values().map(|e| e.plan.resident_bytes()).sum();
-            if total <= self.plan_budget {
+            if total <= shared.plans.budget {
                 return;
             }
             // LRU plan that still has droppable arenas
@@ -1619,7 +1268,7 @@ impl StaticScheduler {
             self.plans.remove(&lru);
             // the evicted plan's verdicts are doubted, not deleted: if
             // the plan is rebuilt they re-confirm via the shadow path
-            self.decay_stats.expiries += stale_plan_entries(&mut self.tuning, &lru);
+            shared.tuning.stats.expiries += stale_plan_entries(&mut shared.tuning.entries, &lru);
         }
     }
 
@@ -1684,29 +1333,6 @@ impl StaticScheduler {
                 direct::conv1x1_image(p, x, bi, w, &mut dst[li * per..(li + 1) * per]);
             }
         });
-    }
-
-    /// Equal-FLOP shard weights for a tile grid with remainder tiles:
-    /// full tiles cost m^2 output pixels, edge tiles cost their remainder.
-    ///
-    /// Used for *output-pixel-cost* sharding (direct conv).  The engine's
-    /// transform stages deliberately shard by tile count instead: every
-    /// tile — remainder or not — pays the same transform FLOPs (gathers
-    /// zero-pad), so `even_ranges` over tiles already is the equal-FLOP
-    /// split there.
-    pub fn tile_row_weights(oh: usize, m: usize) -> Vec<f64> {
-        let nh = oh.div_ceil(m);
-        (0..nh)
-            .map(|i| {
-                let rows = m.min(oh - i * m);
-                rows as f64
-            })
-            .collect()
-    }
-
-    /// Shard tile rows by weight across workers.
-    pub fn shard_tile_rows(&self, oh: usize, m: usize) -> Vec<Range<usize>> {
-        weighted_ranges(&Self::tile_row_weights(oh, m), self.workers())
     }
 }
 

@@ -31,14 +31,16 @@
 use super::batcher::{Batch, Batcher};
 use super::error::ServiceError;
 use super::metrics::Metrics;
+use super::profile::{ProfileImport, TuningProfile};
 use super::request::{validate, ConvRequest, ConvResponse, LayerId, NetworkId, Ticket};
 use super::scheduler::{DecayPolicy, DecayStats, PlanHandle, StaticScheduler, TuningPolicy};
+use super::store::{SharedHandle, SharedStores};
 use crate::conv::{ConvAlgorithm, ConvProblem, Tensor4};
 use crate::model::machine::Machine;
 use crate::model::select::{algo_for_problem, method_algo, select_measured};
 use crate::model::stages::LayerShape;
 use crate::nets::graph::{CompiledNetwork, NetworkGraph};
-use crate::util::threadpool::ThreadPool;
+use crate::util::threadpool::{PoolOptions, ThreadPool};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
@@ -108,6 +110,13 @@ impl Default for ServiceConfig {
 pub struct ConvServiceBuilder {
     machine: Machine,
     cfg: ServiceConfig,
+    /// attach to an existing shared store instead of creating one —
+    /// how `ShardedService` replicas join a common tuning table
+    shared: Option<SharedHandle>,
+    /// thread-pool naming / spawn-hook options (core-pinning groundwork)
+    pool: Option<PoolOptions>,
+    /// tuning profile to import right after construction (warm-start)
+    profile: Option<TuningProfile>,
 }
 
 impl ConvServiceBuilder {
@@ -147,15 +156,52 @@ impl ConvServiceBuilder {
         self
     }
 
+    /// Attach this service to an existing shared tuning/plan store
+    /// instead of creating a private one — how [`ShardedService`]
+    /// replicas join a common verdict table.  The store's machine model
+    /// is authoritative; the builder's `machine` then only routes
+    /// registration-time algorithm choices.
+    ///
+    /// [`ShardedService`]: super::shard::ShardedService
+    pub(crate) fn shared(mut self, handle: SharedHandle) -> Self {
+        self.shared = Some(handle);
+        self
+    }
+
+    /// Thread-pool options: worker-name prefix and the per-worker spawn
+    /// hook (core-pinning / NUMA groundwork).
+    pub fn pool_options(mut self, opts: PoolOptions) -> Self {
+        self.pool = Some(opts);
+        self
+    }
+
+    /// Import a [`TuningProfile`] right after construction: verdicts
+    /// earned under matching machine ceilings serve from the first batch
+    /// with zero re-measurement (see `coordinator::profile`).
+    pub fn profile(mut self, profile: TuningProfile) -> Self {
+        self.profile = Some(profile);
+        self
+    }
+
     pub fn build(self) -> ConvService {
-        // the service's machine model also drives the scheduler's
-        // fused-vs-staged plan resolution and plan-cache sizing
-        let mut scheduler = StaticScheduler::new(self.cfg.workers);
-        scheduler.set_machine(self.machine.clone());
+        // the machine model drives the scheduler's fused-vs-staged plan
+        // resolution and plan-cache sizing; a provided shared store
+        // already carries its own (authoritative) model
+        let pool = match self.pool {
+            Some(opts) => ThreadPool::with_options(self.cfg.workers, opts),
+            None => ThreadPool::new(self.cfg.workers),
+        };
+        let shared = self
+            .shared
+            .unwrap_or_else(|| SharedStores::handle(self.machine.clone()));
+        let mut scheduler = StaticScheduler::from_pool(pool, shared);
         scheduler.set_tuning_policy(self.cfg.tuning);
         scheduler.set_decay_policy(self.cfg.decay);
         if let Some(bytes) = self.cfg.plan_budget {
             scheduler.set_plan_budget(bytes);
+        }
+        if let Some(p) = &self.profile {
+            scheduler.import_profile(p);
         }
         ConvService {
             entries: Vec::new(),
@@ -216,6 +262,9 @@ impl ConvService {
         ConvServiceBuilder {
             machine,
             cfg: ServiceConfig::default(),
+            shared: None,
+            pool: None,
+            profile: None,
         }
     }
 
@@ -629,6 +678,34 @@ impl ConvService {
     /// flips) — also surfaced in every `Metrics::Snapshot`.
     pub fn decay_stats(&self) -> DecayStats {
         self.scheduler.decay_stats()
+    }
+
+    /// Snapshot the shared tuning table as a serializable
+    /// [`TuningProfile`] — save it with `TuningProfile::save` and
+    /// warm-start a future process via
+    /// [`ConvServiceBuilder::profile`].
+    pub fn export_profile(&self) -> TuningProfile {
+        self.scheduler.export_profile()
+    }
+
+    /// Load a [`TuningProfile`] into the live shared tuning table; see
+    /// `coordinator::profile::import_into_store` for the
+    /// matched-vs-stale semantics.  Returns what the import did.
+    pub fn import_profile(&mut self, profile: &TuningProfile) -> ProfileImport {
+        self.scheduler.import_profile(profile)
+    }
+
+    /// Batches this service served whose verdict was already settled by
+    /// someone else on first touch — an imported profile or a sibling
+    /// replica sharing the store.  The warm-start payoff gauge.
+    pub fn verdict_warm_hits(&self) -> u64 {
+        self.scheduler.verdict_warm_hits()
+    }
+
+    /// The shared store handle this service's scheduler works against
+    /// (replica plumbing for `ShardedService`).
+    pub(crate) fn shared_handle(&self) -> SharedHandle {
+        self.scheduler.shared()
     }
 
     /// The shape the analytic model consumes for a problem — spatial

@@ -1,0 +1,822 @@
+//! Shared tuning / plan stores — the serializable half of the scheduler.
+//!
+//! The paper's central lesson is that the staged-vs-fused verdict is a
+//! function of the *machine* (compute ceiling, DRAM bandwidth, cache
+//! budget), not of any one serving thread.  This module therefore holds
+//! everything about a scheduler that is **machine knowledge** rather than
+//! **execution state**:
+//!
+//! * [`TuningStore`] — the `(plan key, batch bucket)` tuning table with
+//!   its EWMA timing streams and decay lifecycle, the [`TuningPolicy`] /
+//!   [`DecayPolicy`] knobs, the monotonic [`DecayStats`] counters, and
+//!   the calibrated [`Machine`] whose roofline seeds every entry.
+//! * [`PlanStore`] — plan-key pin refcounts (which keys belong to live
+//!   registered layers) and the shared plan-cache byte budget.
+//!
+//! Both live behind one [`SharedHandle`] (`Arc<Mutex<SharedStores>>`), so
+//! N per-replica `Executor`s can serve against a single table: a verdict
+//! earned on replica 0 serves replica 1's first batch, and a
+//! [`crate::coordinator::profile::TuningProfile`] snapshot of the store
+//! warm-starts the next process.  What must stay socket-local — the
+//! `ThreadPool`, the grow-only plan arenas and fused panel scratch, the
+//! single shadow re-measurement slot — stays in the executor
+//! (`coordinator::scheduler`).
+
+use crate::conv::engine::{weights_fingerprint, PlanOptions};
+use crate::conv::{ConvAlgorithm, ExecMode, ExecPolicy, Tensor4};
+use crate::model::machine::Machine;
+use crate::model::select::{choose_exec, ExecChoice};
+use crate::model::stages::{LayerShape, Method};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Most plans kept before eviction — bounds memory under weight churn
+/// while letting every distinct serving layer keep its plan resident.
+pub(crate) const MAX_PLANS: usize = 64;
+
+/// Default plan-cache byte budget: generous for a many-layer service, but
+/// a hard ceiling — byte-aware LRU trims idle plans' arenas first and
+/// evicts whole plans only when kernel transforms alone blow the budget.
+pub(crate) const DEFAULT_PLAN_BUDGET: usize = 256 << 20;
+
+/// Tuning-table size threshold: a plan sees roughly one entry per
+/// power-of-two batch size (~10 for batches up to 1024), so 16 per plan
+/// is headroom; past it, entries whose plan is gone (weight churn, LRU
+/// eviction) are dropped.  A table of all-live entries may legitimately
+/// exceed this — the prune is skipped until the table grows again, so a
+/// full-table scan is paid at most once per insertion beyond the
+/// threshold, never per batch.
+pub(crate) const MAX_TUNE_ENTRIES: usize = MAX_PLANS * 16;
+
+/// Cache key for a persistent layer plan.  The weight fingerprint is part
+/// of the key so two same-shape layers with different weights each keep
+/// their plan (no thrash); staleness under weight *updates* is handled by
+/// the eviction in the executor's plan cache, which prefers dropping a
+/// same-shape plan with an outdated fingerprint.  All fields are machine
+/// words, so the key is `Copy` and hashing it never touches the heap.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub(crate) algo: ConvAlgorithm,
+    pub(crate) c: usize,
+    pub(crate) h: usize,
+    pub(crate) w: usize,
+    pub(crate) k: usize,
+    pub(crate) r: usize,
+    /// symmetric zero-padding baked into the plan's tile grid — part of
+    /// the key because a padded and an unpadded plan for the same layer
+    /// shape have different tile geometries
+    pub(crate) pad: usize,
+    pub(crate) weights_fp: u64,
+}
+
+/// How the scheduler decides staged-vs-fused per `(plan, batch bucket)`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TuningPolicy {
+    /// Trust the roofline seed of every bucket; never measure.
+    #[default]
+    Analytic,
+    /// Run both pipelines back to back on each batch of an unsettled
+    /// bucket (double work per measuring batch) and settle on the
+    /// empirical winner as soon as both have warm samples — typically
+    /// the bucket's second batch (the first grows scratch).
+    Measured,
+    /// Run the analytic pick until it has a warm sample, then the
+    /// alternative, then settle on the faster — never runs a batch
+    /// twice, converging a couple of batches later than `Measured`.
+    Hybrid,
+}
+
+/// Bucket a batch size for the tuning table: the next power of two.
+/// Coarse enough that steady traffic lands on few entries, fine enough
+/// that batch-1 latency traffic and batch-64 throughput traffic tune
+/// independently.  Sizes beyond the largest representable power of two
+/// clamp to it (`next_power_of_two` would panic in debug and wrap to 0
+/// in release for `b > 2^63`).
+pub fn batch_bucket(b: usize) -> usize {
+    b.max(1)
+        .checked_next_power_of_two()
+        .unwrap_or(1usize << (usize::BITS - 1))
+}
+
+/// Tuning-table key: one resolution per (plan identity, batch bucket).
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TuneKey {
+    pub(crate) plan: PlanKey,
+    pub(crate) bucket: usize,
+}
+
+/// EWMA smoothing factor for the per-mode timing streams: heavy enough
+/// that a persistent shift moves the mean within a few batches, light
+/// enough that a single noisy batch cannot swing it past a sensible
+/// `rel_tol` by itself.
+const EWMA_ALPHA: f64 = 0.3;
+
+/// Post-(re)seed samples the variance stream needs before its σ is
+/// trusted for [`DecayPolicy::OnDriftSigma`]: a just-reseeded stream has
+/// zero variance, so without a warm-up every subsequent sample would
+/// trip the detector on its own scatter.
+const SIGMA_WARM_SAMPLES: u64 = 4;
+
+/// Relative floor for the sigma tolerance: σ is never taken below this
+/// fraction of the mean, so a zero-variance (perfectly quiet) stream
+/// still trips on any genuine level shift instead of absorbing it into
+/// a co-moving mean+variance.  Well below real timing jitter (~1–10%),
+/// far above f64 rounding noise.
+const SIGMA_FLOOR_REL: f64 = 1e-4;
+
+/// An exponentially weighted moving average over timing samples, with a
+/// matching exponentially weighted variance stream (the k·σ drift
+/// tolerance of [`DecayPolicy::OnDriftSigma`] reads it).  Every field is
+/// serialized by the profile snapshot, so a warm-started process resumes
+/// the stream exactly where the exporting process left it.
+#[derive(Clone, Copy, Debug, Default)]
+pub(crate) struct Ewma {
+    pub(crate) mean: f64,
+    /// exponentially weighted variance (same α as the mean, so the
+    /// noise estimate and the level estimate age at the same rate)
+    pub(crate) var: f64,
+    pub(crate) samples: u64,
+    /// samples since the stream was last (re)seeded — σ is consulted
+    /// only once a fresh stream has re-learned its spread
+    pub(crate) fresh: u64,
+}
+
+impl Ewma {
+    pub(crate) fn record(&mut self, x: f64) {
+        if self.samples == 0 {
+            self.mean = x;
+            self.var = 0.0;
+        } else {
+            // EW mean + variance in one pass (West's update): the
+            // variance absorbs the pre-update deviation, so a level
+            // shift raises σ exactly when it starts moving the mean
+            let d = x - self.mean;
+            let incr = EWMA_ALPHA * d;
+            self.mean += incr;
+            self.var = (1.0 - EWMA_ALPHA) * (self.var + d * incr);
+        }
+        self.samples += 1;
+        self.fresh += 1;
+    }
+
+    /// Replace the stream with a fresh measurement — used when a stale
+    /// verdict re-measures: pre-drift history must not outvote reality.
+    /// The variance restarts too; σ re-learns from the new regime.
+    pub(crate) fn reseed(&mut self, x: f64) {
+        self.mean = x;
+        self.var = 0.0;
+        self.samples += 1;
+        self.fresh = 1;
+    }
+
+    pub(crate) fn value(&self) -> Option<f64> {
+        (self.samples > 0).then_some(self.mean)
+    }
+
+    /// The stream's EW standard deviation, once enough post-(re)seed
+    /// samples exist to trust it.
+    pub(crate) fn sigma(&self) -> Option<f64> {
+        (self.fresh >= SIGMA_WARM_SAMPLES).then(|| self.var.max(0.0).sqrt())
+    }
+}
+
+/// The other pipeline — what a drifted winner is re-measured against.
+pub(crate) fn other_mode(mode: ExecMode) -> ExecMode {
+    match mode {
+        ExecMode::Staged => ExecMode::Fused,
+        ExecMode::Fused => ExecMode::Staged,
+    }
+}
+
+/// Lifecycle of a tuning verdict (docs/ARCHITECTURE.md §4):
+/// `Unsettled → Settled → Stale → Remeasuring → Settled → …`
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TuneState {
+    /// still collecting first samples per the [`TuningPolicy`]
+    Unsettled,
+    /// verdict in force; serves its winner with zero overhead
+    Settled,
+    /// verdict doubted (drift, expiry, `set_machine`, plan eviction,
+    /// ceiling-mismatched profile import); keeps serving the old winner
+    /// while waiting for an executor's shadow slot
+    Stale,
+    /// holds an executor's single shadow slot: this bucket's next warm
+    /// batch runs the doubted (losing) mode once, then re-settles
+    Remeasuring,
+}
+
+/// When a settled staged-vs-fused verdict stops being trusted.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum DecayPolicy {
+    /// Verdicts are final once settled (the pre-decay behavior).
+    #[default]
+    Never,
+    /// A verdict expires after serving `n` batches and re-confirms
+    /// through one shadow re-measurement.
+    AfterBatches(u64),
+    /// Warm samples of the winning mode keep feeding its EWMA; a sample
+    /// deviating more than `rel_tol` (relative) from the mean re-opens
+    /// the verdict and schedules a shadow re-measurement of the loser.
+    OnDrift { rel_tol: f64 },
+    /// Variance-aware drift: like [`DecayPolicy::OnDrift`], but the
+    /// tolerance scales with the stream's own measured noise — a warm
+    /// winner sample trips only when it lands more than `k` standard
+    /// deviations (the EWMA's exponentially weighted σ) from the mean.
+    /// On noisy co-tenanted hosts a fixed `rel_tol` fires on every
+    /// scheduling hiccup; k·σ adapts to the host's baseline jitter and
+    /// re-opens verdicts only on genuine level shifts.  `k = 3` is the
+    /// usual control-chart setting.
+    OnDriftSigma { k: f64 },
+}
+
+/// Monotonic counters for the decay subsystem (observability; surfaced
+/// through `Metrics::Snapshot` by `ConvService`).  Shared-store scoped:
+/// with multiple replicas over one store, the counters aggregate every
+/// replica's events.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DecayStats {
+    /// settled verdicts re-opened by an out-of-tolerance winner sample
+    pub drift_events: u64,
+    /// settled verdicts re-opened by age, `set_machine`, or plan eviction
+    pub expiries: u64,
+    /// completed re-measurements (fresh loser sample, verdict re-settled)
+    pub remeasurements: u64,
+    /// re-measurements whose fresh verdict changed the winning mode
+    pub flips: u64,
+}
+
+/// One tuning-table entry: the roofline seed, the per-mode EWMA timing
+/// streams, the currently resolved winner, and its lifecycle state.
+///
+/// Timings are stored **per image** (batch seconds / batch size): a
+/// bucket spans actual batch sizes up to 2x apart, so raw batch times of
+/// the two pipelines would not compare like-for-like.
+pub(crate) struct TuneEntry {
+    /// the roofline prediction at this bucket's batch size
+    pub(crate) analytic: ExecMode,
+    pub(crate) staged: Ewma,
+    pub(crate) fused: Ewma,
+    /// the mode `run_batch` executes for this bucket right now
+    pub(crate) resolved: ExecMode,
+    pub(crate) state: TuneState,
+    /// false once the serving plan proved unable to fuse: one-pipeline
+    /// entries settle immediately and never decay (nothing to flip to)
+    pub(crate) fusable: bool,
+    /// batches served while settled since the verdict (re-)settled
+    pub(crate) age: u64,
+    /// the mode owed a fresh sample while stale / re-measuring
+    pub(crate) pending: Option<ExecMode>,
+    /// true while stale/re-measuring when the *winner's* stream is also
+    /// doubted (`set_machine` / plan eviction / mismatched profile
+    /// import invalidate both sides; drift already reseeds the winner
+    /// from the tripping sample, and an age expiry's winner stream was
+    /// fed live throughout the lease) — the re-measurement then
+    /// refreshes both modes before re-settling
+    pub(crate) winner_doubted: bool,
+}
+
+impl TuneEntry {
+    /// Seed from the analytic choice.  A plan that cannot fuse settles
+    /// immediately on `Staged` — there is no alternative to measure.
+    pub(crate) fn seed(choice: &ExecChoice, can_fuse: bool) -> TuneEntry {
+        let analytic = match choice.policy {
+            ExecPolicy::Fused if can_fuse => ExecMode::Fused,
+            _ => ExecMode::Staged,
+        };
+        TuneEntry {
+            analytic,
+            staged: Ewma::default(),
+            fused: Ewma::default(),
+            resolved: if can_fuse { analytic } else { ExecMode::Staged },
+            state: if can_fuse {
+                TuneState::Unsettled
+            } else {
+                TuneState::Settled
+            },
+            fusable: can_fuse,
+            age: 0,
+            pending: None,
+            winner_doubted: false,
+        }
+    }
+
+    pub(crate) fn ewma(&self, mode: ExecMode) -> &Ewma {
+        match mode {
+            ExecMode::Staged => &self.staged,
+            ExecMode::Fused => &self.fused,
+        }
+    }
+
+    pub(crate) fn ewma_mut(&mut self, mode: ExecMode) -> &mut Ewma {
+        match mode {
+            ExecMode::Staged => &mut self.staged,
+            ExecMode::Fused => &mut self.fused,
+        }
+    }
+
+    pub(crate) fn time_of(&self, mode: ExecMode) -> Option<f64> {
+        self.ewma(mode).value()
+    }
+
+    pub(crate) fn record(&mut self, mode: ExecMode, secs: f64) {
+        self.ewma_mut(mode).record(secs);
+    }
+
+    /// Settle on the measured winner once both pipelines have a timing.
+    /// Also how a re-measuring entry re-settles (clearing the pending
+    /// mode).  The age — the `AfterBatches` lease — restarts only on a
+    /// genuine (re-)settle transition or a changed winner: a routine
+    /// sample recorded on an already-settled entry must not keep
+    /// postponing expiry.
+    pub(crate) fn try_settle(&mut self) {
+        if let (Some(s), Some(f)) = (self.staged.value(), self.fused.value()) {
+            let winner = if f < s {
+                ExecMode::Fused
+            } else {
+                ExecMode::Staged
+            };
+            if self.state != TuneState::Settled || self.resolved != winner {
+                self.age = 0;
+            }
+            self.resolved = winner;
+            self.state = TuneState::Settled;
+            self.pending = None;
+        }
+    }
+
+    /// Settled → Stale: keep serving the current winner, owe the losing
+    /// mode a fresh sample (and, when `doubt_winner`, the winner too —
+    /// its stream predates the change that triggered the staleness).
+    /// No-op on one-pipeline or not-yet-settled entries; returns whether
+    /// the transition happened.
+    pub(crate) fn mark_stale(&mut self, doubt_winner: bool) -> bool {
+        if self.state == TuneState::Settled && self.fusable {
+            self.state = TuneState::Stale;
+            self.pending = Some(other_mode(self.resolved));
+            self.age = 0;
+            self.winner_doubted = doubt_winner;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Is `secs` a drift event for `mode` under `decay`?  `OnDrift`
+    /// compares against a fixed relative tolerance; `OnDriftSigma`
+    /// against k· the stream's own EW standard deviation, so a
+    /// noisy-but-stationary stream does not trip.  A freshly (re)seeded
+    /// stream has no trusted σ yet and cannot sigma-trip until it
+    /// re-warms ([`SIGMA_WARM_SAMPLES`]).  σ is floored at a sliver of
+    /// the mean ([`SIGMA_FLOOR_REL`]): a perfectly quiet stream (e.g.
+    /// identical injected timings) would otherwise have σ = 0 — and a
+    /// genuine level shift would be absorbed sample by sample as the
+    /// variance grew in step with the moving mean, leaving the quietest
+    /// streams permanently blind to the exact failure the detector
+    /// exists to catch.
+    pub(crate) fn drift_tripped(&self, mode: ExecMode, secs: f64, decay: DecayPolicy) -> bool {
+        let e = self.ewma(mode);
+        match (decay, e.value()) {
+            (DecayPolicy::OnDrift { rel_tol }, Some(mean)) if mean > 0.0 => {
+                (secs - mean).abs() > rel_tol * mean
+            }
+            (DecayPolicy::OnDriftSigma { k }, Some(mean)) if mean > 0.0 => {
+                e.sigma().is_some_and(|sigma| {
+                    (secs - mean).abs() > k * sigma.max(SIGMA_FLOOR_REL * mean)
+                })
+            }
+            _ => false,
+        }
+    }
+
+    pub(crate) fn snapshot(&self, bucket: usize) -> TuneSnapshot {
+        TuneSnapshot {
+            bucket,
+            analytic: self.analytic,
+            resolved: self.resolved,
+            staged_secs: self.staged.value(),
+            fused_secs: self.fused.value(),
+            settled: self.state == TuneState::Settled,
+            state: self.state,
+            age: self.age,
+        }
+    }
+}
+
+/// Does `decay` re-open settled verdicts on out-of-tolerance winner
+/// samples (either drift flavor)?
+pub(crate) fn is_drift_policy(decay: DecayPolicy) -> bool {
+    matches!(
+        decay,
+        DecayPolicy::OnDrift { .. } | DecayPolicy::OnDriftSigma { .. }
+    )
+}
+
+/// Absorb one shadow sample: it *replaces* the doubted mode's EWMA.  If
+/// the winner's stream is also doubted (`set_machine` / plan eviction)
+/// and this was the loser's sample, the winner is queued for its own
+/// fresh sample instead of settling against stale history.  Returns
+/// true when the re-measurement completed (entry re-settled — a changed
+/// winner counts as a flip) so the caller can release its shadow slot.
+/// (Free function so the executor can call it while holding split
+/// borrows of the shared store's fields.)
+pub(crate) fn finish_remeasure(
+    entry: &mut TuneEntry,
+    mode: ExecMode,
+    secs: f64,
+    stats: &mut DecayStats,
+) -> bool {
+    entry.ewma_mut(mode).reseed(secs);
+    if entry.winner_doubted && mode != entry.resolved {
+        entry.pending = Some(entry.resolved);
+        return false;
+    }
+    entry.winner_doubted = false;
+    let before = entry.resolved;
+    entry.try_settle();
+    stats.remeasurements += 1;
+    if entry.resolved != before {
+        stats.flips += 1;
+    }
+    true
+}
+
+/// Plan eviction doubts (but keeps) the plan's settled verdicts: a
+/// rebuilt plan re-pays first-touch costs, so each verdict re-confirms
+/// through the shadow path before being trusted again.  Returns how
+/// many entries went stale.
+pub(crate) fn stale_plan_entries(
+    tuning: &mut HashMap<TuneKey, TuneEntry>,
+    plan: &PlanKey,
+) -> u64 {
+    let mut staled = 0;
+    for (k, e) in tuning.iter_mut() {
+        // the rebuild invalidates both streams' cold-cost assumptions:
+        // doubt the winner too
+        if &k.plan == plan && e.mark_stale(true) {
+            staled += 1;
+        }
+    }
+    staled
+}
+
+/// Read-only view of one tuning-table entry (observability / tests).
+#[derive(Clone, Copy, Debug)]
+pub struct TuneSnapshot {
+    pub bucket: usize,
+    /// the roofline seed
+    pub analytic: ExecMode,
+    /// the mode currently served for this bucket
+    pub resolved: ExecMode,
+    /// EWMA seconds **per image** (batch time / batch size, so samples
+    /// from different batch sizes within the bucket compare)
+    pub staged_secs: Option<f64>,
+    pub fused_secs: Option<f64>,
+    /// `state == Settled` — stale / re-measuring entries report false
+    /// (their verdict is doubted even though it is still being served)
+    pub settled: bool,
+    /// where the verdict sits in the decay lifecycle
+    pub state: TuneState,
+    /// batches served since the verdict (re-)settled
+    pub age: u64,
+}
+
+/// The tiled `Method` behind a [`ConvAlgorithm`], if any.
+pub(crate) fn algo_method(algo: ConvAlgorithm) -> Option<Method> {
+    match algo {
+        ConvAlgorithm::Winograd { .. } => Some(Method::Winograd),
+        ConvAlgorithm::RegularFft { .. } => Some(Method::RegularFft),
+        ConvAlgorithm::GaussFft { .. } => Some(Method::GaussFft),
+        _ => None,
+    }
+}
+
+/// The plan-cache key for (algo, input shape, weights).
+///
+/// The FNV fingerprint scan is O(|weights|) per batch — orders of
+/// magnitude below the convolution itself — and is what lets callers
+/// swap weights without a stale-plan hazard.
+pub(crate) fn make_key(
+    algo: ConvAlgorithm,
+    c: usize,
+    h: usize,
+    w_sp: usize,
+    pad: usize,
+    weights: &Tensor4,
+) -> PlanKey {
+    PlanKey {
+        algo,
+        c,
+        h,
+        w: w_sp,
+        k: weights.shape[0],
+        r: weights.shape[2],
+        pad,
+        weights_fp: weights_fingerprint(weights),
+    }
+}
+
+/// The layer shape a [`PlanKey`] serves, at batch size `b`.  The model's
+/// `x` is the *padded* spatial extent — the tile grid the roofline costs
+/// spans the halo, matching how the paper's layer tables count pre-padded
+/// sizes.
+pub(crate) fn key_shape(key: &PlanKey, b: usize) -> LayerShape {
+    LayerShape {
+        b: b.max(1),
+        c: key.c,
+        k: key.k,
+        x: key.h.max(key.w) + 2 * key.pad,
+        r: key.r,
+    }
+}
+
+/// The roofline execution choice for a tiled algorithm on `machine` —
+/// this only seeds the plan's *default* mode; serving re-resolves per
+/// batch bucket through the tuning table.
+pub(crate) fn resolve_options(key: &PlanKey, b: usize, machine: &Machine) -> PlanOptions {
+    let method = match algo_method(key.algo) {
+        Some(m) => m,
+        None => return PlanOptions::default(),
+    };
+    let m = key.algo.tile_m().expect("tiled algorithm");
+    PlanOptions {
+        exec: choose_exec(method, &key_shape(key, b), m, machine).policy,
+        fused_budget: machine.cache,
+        pad: key.pad,
+        ..PlanOptions::default()
+    }
+}
+
+/// The shareable, serializable tuning state: the `(plan, bucket)` verdict
+/// table, the policies refining and decaying it, the decay counters, and
+/// the machine model whose roofline seeds every entry.  One store can sit
+/// behind any number of per-replica executors (via [`SharedHandle`]);
+/// its contents round-trip through
+/// [`crate::coordinator::profile::TuningProfile`].
+pub struct TuningStore {
+    /// the per-batch-bucket staged/fused resolution memo
+    pub(crate) entries: HashMap<TuneKey, TuneEntry>,
+    /// how tuning entries are refined (analytic / measured / hybrid)
+    pub(crate) policy: TuningPolicy,
+    /// when settled verdicts stop being trusted
+    pub(crate) decay: DecayPolicy,
+    /// monotonic decay counters (drift / expiry / re-measure / flip)
+    pub(crate) stats: DecayStats,
+    /// machine model driving fused-vs-staged plan resolution
+    pub(crate) machine: Machine,
+    /// table size after the last dead-entry prune (skip re-scanning an
+    /// over-threshold table until it grows past this again)
+    pub(crate) prune_len: usize,
+}
+
+impl TuningStore {
+    pub fn new(machine: Machine) -> TuningStore {
+        TuningStore {
+            entries: HashMap::new(),
+            policy: TuningPolicy::default(),
+            decay: DecayPolicy::default(),
+            stats: DecayStats::default(),
+            machine,
+            prune_len: 0,
+        }
+    }
+
+    /// Replace the machine model that drives fused-vs-staged resolution.
+    ///
+    /// Verdicts measured under the old machine state are doubted, not
+    /// deleted: every tuning entry reseeds its analytic pick from the
+    /// new roofline, and settled fusable entries transition to stale —
+    /// they keep serving their winner (and their EWMA history, for the
+    /// re-settle comparison) but owe the losing mode a fresh confirming
+    /// sample through the shadow path.  Executors must also drop their
+    /// shadow slot (the in-flight re-measurement was taken under the old
+    /// machine) — `StaticScheduler::set_machine` does both.
+    pub fn set_machine(&mut self, machine: Machine) {
+        self.machine = machine;
+        let mut staled = 0u64;
+        for (key, entry) in self.entries.iter_mut() {
+            let (method, m) = match (algo_method(key.plan.algo), key.plan.algo.tile_m()) {
+                (Some(method), Some(m)) => (method, m),
+                _ => continue,
+            };
+            let choice = choose_exec(method, &key_shape(&key.plan, key.bucket), m, &self.machine);
+            entry.analytic = match choice.policy {
+                ExecPolicy::Fused if entry.fusable => ExecMode::Fused,
+                _ => ExecMode::Staged,
+            };
+            match entry.state {
+                // no measurements bind an unsettled entry to the old
+                // machine: follow the new seed outright
+                TuneState::Unsettled => {
+                    entry.resolved = if entry.fusable {
+                        entry.analytic
+                    } else {
+                        ExecMode::Staged
+                    };
+                }
+                // already re-opened entries (including any in-flight
+                // shadow-slot holder, invalidated by the caller) restart
+                // their re-measurement with BOTH streams doubted —
+                // whatever samples they had were taken under the old
+                // machine.  Not re-counted as expiries: already open.
+                TuneState::Remeasuring | TuneState::Stale => {
+                    entry.state = TuneState::Stale;
+                    entry.pending = Some(other_mode(entry.resolved));
+                    entry.winner_doubted = true;
+                }
+                TuneState::Settled => {
+                    // both streams were measured under the old machine
+                    // state: doubt the winner as well as the loser
+                    if entry.mark_stale(true) {
+                        staled += 1;
+                    }
+                }
+            }
+        }
+        self.stats.expiries += staled;
+        self.prune_len = 0;
+    }
+
+    /// Get-or-seed the entry for `(key, bucket)` alongside the decay
+    /// counters — the seed is the roofline prediction evaluated at the
+    /// bucket's batch size.  Returned as a pair of disjoint borrows so
+    /// the executor's state machine can mutate the entry and bump the
+    /// counters under one lock acquisition.
+    pub(crate) fn entry_and_stats(
+        &mut self,
+        key: &PlanKey,
+        bucket: usize,
+        can_fuse: bool,
+    ) -> (&mut TuneEntry, &mut DecayStats) {
+        let machine = &self.machine;
+        let entry = self
+            .entries
+            .entry(TuneKey { plan: *key, bucket })
+            .or_insert_with(|| {
+                let method = algo_method(key.algo).expect("tiled algorithm");
+                let m = key.algo.tile_m().expect("tiled algorithm");
+                TuneEntry::seed(
+                    &choose_exec(method, &key_shape(key, bucket), m, machine),
+                    can_fuse,
+                )
+            });
+        (entry, &mut self.stats)
+    }
+
+    /// Read-only snapshot of one entry (observability / tests).
+    pub fn snapshot(&self, key: &PlanKey, bucket: usize) -> Option<TuneSnapshot> {
+        self.entries
+            .get(&TuneKey { plan: *key, bucket })
+            .map(|e| e.snapshot(bucket))
+    }
+
+    /// Total tuning-table entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Entries currently doubting their verdict (stale + re-measuring).
+    pub fn stale_count(&self) -> usize {
+        self.entries
+            .values()
+            .filter(|e| matches!(e.state, TuneState::Stale | TuneState::Remeasuring))
+            .count()
+    }
+
+    /// Settled entries whose empirical winner disagrees with the
+    /// roofline seed — the "how wrong was the model" counter.
+    pub fn disagreements(&self) -> usize {
+        self.entries
+            .values()
+            .filter(|e| e.state == TuneState::Settled && e.resolved != e.analytic)
+            .count()
+    }
+}
+
+/// The shareable plan bookkeeping: pin refcounts (which plan keys belong
+/// to live registered layers — shared so one replica's eviction pass
+/// never mistakes another replica's registered layer for a dead weight
+/// swap) and the plan-cache byte budget each executor enforces on its
+/// own resident plans.
+pub struct PlanStore {
+    /// pin refcounts per plan key: how many live `PlanHandle`s (one per
+    /// registered layer, via `warm`) reference the key across all
+    /// replicas.  Two layers registered with identical weights share a
+    /// key; `discard` only deletes plan + tuning entries when the last
+    /// pin drops.
+    pub(crate) pins: HashMap<PlanKey, u32>,
+    /// resident-byte ceiling each executor enforces over its own cache
+    pub(crate) budget: usize,
+}
+
+impl PlanStore {
+    pub fn new() -> PlanStore {
+        PlanStore {
+            pins: HashMap::new(),
+            budget: DEFAULT_PLAN_BUDGET,
+        }
+    }
+
+    /// Live pinned plan keys (registered layers across all replicas).
+    pub fn pinned(&self) -> usize {
+        self.pins.len()
+    }
+}
+
+impl Default for PlanStore {
+    fn default() -> Self {
+        PlanStore::new()
+    }
+}
+
+/// The full shared half of a scheduler: tuning knowledge + plan
+/// bookkeeping, locked as one unit (the two are updated together on
+/// eviction and discard paths, so a single mutex avoids lock-order
+/// hazards between them).
+pub struct SharedStores {
+    pub tuning: TuningStore,
+    pub plans: PlanStore,
+}
+
+impl SharedStores {
+    pub fn new(machine: Machine) -> SharedStores {
+        SharedStores {
+            tuning: TuningStore::new(machine),
+            plans: PlanStore::new(),
+        }
+    }
+
+    /// A fresh store behind the `Arc<Mutex<..>>` handle executors share.
+    pub fn handle(machine: Machine) -> SharedHandle {
+        Arc::new(Mutex::new(SharedStores::new(machine)))
+    }
+}
+
+/// How executors (and services) share one [`SharedStores`]: plain
+/// `Arc<Mutex<..>>` — the paper's serving loops are batch-granular, so
+/// one uncontended lock per batch is noise next to a convolution.
+pub type SharedHandle = Arc<Mutex<SharedStores>>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::machine::xeon_gold;
+
+    fn fusable_key() -> PlanKey {
+        PlanKey {
+            algo: ConvAlgorithm::RegularFft { m: 6 },
+            c: 8,
+            h: 20,
+            w: 20,
+            k: 8,
+            r: 3,
+            pad: 0,
+            weights_fp: 0x1234,
+        }
+    }
+
+    #[test]
+    fn entry_and_stats_seeds_from_the_roofline() {
+        let mut store = TuningStore::new(xeon_gold());
+        let key = fusable_key();
+        {
+            let (entry, stats) = store.entry_and_stats(&key, 2, true);
+            assert_eq!(entry.state, TuneState::Unsettled);
+            assert_eq!(stats.remeasurements, 0);
+        }
+        assert_eq!(store.len(), 1);
+        let snap = store.snapshot(&key, 2).expect("seeded");
+        assert_eq!(snap.bucket, 2);
+        assert!(!snap.settled);
+    }
+
+    #[test]
+    fn set_machine_stales_settled_entries_in_the_store() {
+        let mut store = TuningStore::new(xeon_gold());
+        let key = fusable_key();
+        {
+            let (entry, _) = store.entry_and_stats(&key, 2, true);
+            entry.ewma_mut(ExecMode::Staged).record(1.0);
+            entry.ewma_mut(ExecMode::Fused).record(1e-6);
+            entry.try_settle();
+            assert_eq!(entry.state, TuneState::Settled);
+        }
+        store.set_machine(xeon_gold());
+        assert_eq!(store.stale_count(), 1, "settled verdicts are doubted");
+        assert_eq!(store.stats.expiries, 1);
+        let snap = store.snapshot(&key, 2).unwrap();
+        assert_eq!(snap.state, TuneState::Stale);
+        assert_eq!(snap.resolved, ExecMode::Fused, "winner keeps serving");
+    }
+
+    #[test]
+    fn shared_handle_is_cloneable_across_owners() {
+        let h = SharedStores::handle(xeon_gold());
+        let h2 = h.clone();
+        h.lock().unwrap().plans.budget = 123;
+        assert_eq!(h2.lock().unwrap().plans.budget, 123);
+    }
+}

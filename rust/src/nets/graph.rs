@@ -300,7 +300,7 @@ impl CompiledNetwork {
         for ((spec, p), w) in graph.layers.iter().zip(&problems).zip(weights) {
             let algo = spec
                 .algo
-                .unwrap_or_else(|| algo_for_problem(p, sched.machine()));
+                .unwrap_or_else(|| algo_for_problem(p, &sched.machine()));
             debug_assert!(algo.supports(p), "resolver must honor geometry");
             let handle = sched.warm_padded(algo, &w, p.h, p.w, p.pad, batch_hint);
             layers.push(CompiledLayer {

@@ -1,8 +1,40 @@
-//! Minimal JSON: enough to read the artifact manifest and write bench
-//! reports.  (serde is not available offline — DESIGN.md §3.)
+//! Minimal JSON: enough to read the artifact manifest, write bench
+//! reports, and round-trip tuning profiles.  (serde is not available
+//! offline — DESIGN.md §3.)
+//!
+//! Profiles made this module the first consumer of [`Json::parse`] on
+//! untrusted files, so errors are typed ([`JsonError`]) and carry the
+//! byte position of the failure, and the emitter escapes everything the
+//! parser can produce (quotes, backslashes, control characters) so
+//! parse → emit → parse is the identity.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
+
+/// A parse failure: what went wrong and the byte offset where.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct JsonError {
+    /// Byte offset into the input where the failure was detected (the
+    /// input length for truncation errors).
+    pub pos: usize,
+    /// Human-readable description of the failure.
+    pub msg: String,
+}
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} at byte {}", self.msg, self.pos)
+    }
+}
+
+impl std::error::Error for JsonError {}
+
+fn err<T>(pos: usize, msg: impl Into<String>) -> Result<T, JsonError> {
+    Err(JsonError {
+        pos,
+        msg: msg.into(),
+    })
+}
 
 /// A JSON value. Numbers are kept as f64 (the manifest only holds small
 /// integers, exactly representable).
@@ -17,7 +49,7 @@ pub enum Json {
 }
 
 impl Json {
-    pub fn parse(text: &str) -> Result<Json, String> {
+    pub fn parse(text: &str) -> Result<Json, JsonError> {
         let mut p = Parser {
             b: text.as_bytes(),
             i: 0,
@@ -26,7 +58,7 @@ impl Json {
         let v = p.value()?;
         p.ws();
         if p.i != p.b.len() {
-            return Err(format!("trailing data at byte {}", p.i));
+            return err(p.i, "trailing data");
         }
         Ok(v)
     }
@@ -150,21 +182,23 @@ impl<'a> Parser<'a> {
         self.b.get(self.i).copied()
     }
 
-    fn expect(&mut self, c: u8) -> Result<(), String> {
+    fn expect(&mut self, c: u8) -> Result<(), JsonError> {
         if self.peek() == Some(c) {
             self.i += 1;
             Ok(())
         } else {
-            Err(format!(
-                "expected '{}' at byte {}, found {:?}",
-                c as char,
+            err(
                 self.i,
-                self.peek().map(|b| b as char)
-            ))
+                format!(
+                    "expected '{}', found {:?}",
+                    c as char,
+                    self.peek().map(|b| b as char)
+                ),
+            )
         }
     }
 
-    fn value(&mut self) -> Result<Json, String> {
+    fn value(&mut self) -> Result<Json, JsonError> {
         match self.peek() {
             Some(b'{') => self.object(),
             Some(b'[') => self.array(),
@@ -173,20 +207,21 @@ impl<'a> Parser<'a> {
             Some(b'f') => self.lit("false", Json::Bool(false)),
             Some(b'n') => self.lit("null", Json::Null),
             Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
-            other => Err(format!("unexpected {:?} at byte {}", other, self.i)),
+            Some(c) => err(self.i, format!("unexpected {:?}", c as char)),
+            None => err(self.b.len(), "unexpected end of input"),
         }
     }
 
-    fn lit(&mut self, word: &str, v: Json) -> Result<Json, String> {
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json, JsonError> {
         if self.b[self.i..].starts_with(word.as_bytes()) {
             self.i += word.len();
             Ok(v)
         } else {
-            Err(format!("bad literal at byte {}", self.i))
+            err(self.i, "bad literal")
         }
     }
 
-    fn number(&mut self) -> Result<Json, String> {
+    fn number(&mut self) -> Result<Json, JsonError> {
         let start = self.i;
         while let Some(c) = self.peek() {
             if c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E') {
@@ -195,19 +230,21 @@ impl<'a> Parser<'a> {
                 break;
             }
         }
-        std::str::from_utf8(&self.b[start..self.i])
+        match std::str::from_utf8(&self.b[start..self.i])
             .ok()
             .and_then(|s| s.parse::<f64>().ok())
-            .map(Json::Num)
-            .ok_or_else(|| format!("bad number at byte {start}"))
+        {
+            Some(n) => Ok(Json::Num(n)),
+            None => err(start, "bad number"),
+        }
     }
 
-    fn string(&mut self) -> Result<String, String> {
+    fn string(&mut self) -> Result<String, JsonError> {
         self.expect(b'"')?;
         let mut s = String::new();
         loop {
             match self.peek() {
-                None => return Err("unterminated string".into()),
+                None => return err(self.b.len(), "unterminated string"),
                 Some(b'"') => {
                     self.i += 1;
                     return Ok(s);
@@ -222,26 +259,32 @@ impl<'a> Parser<'a> {
                         Some(b'\\') => s.push('\\'),
                         Some(b'/') => s.push('/'),
                         Some(b'u') => {
-                            let hex = self
-                                .b
-                                .get(self.i + 1..self.i + 5)
-                                .ok_or("bad \\u escape")?;
-                            let code = u32::from_str_radix(
-                                std::str::from_utf8(hex).map_err(|e| e.to_string())?,
-                                16,
-                            )
-                            .map_err(|e| e.to_string())?;
+                            let Some(hex) = self.b.get(self.i + 1..self.i + 5) else {
+                                return err(self.i, "truncated \\u escape");
+                            };
+                            let code = std::str::from_utf8(hex)
+                                .ok()
+                                .and_then(|h| u32::from_str_radix(h, 16).ok());
+                            let Some(code) = code else {
+                                return err(self.i, "bad \\u escape");
+                            };
                             s.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
                             self.i += 4;
                         }
-                        other => return Err(format!("bad escape {other:?}")),
+                        other => {
+                            return err(
+                                self.i,
+                                format!("bad escape {:?}", other.map(|b| b as char)),
+                            )
+                        }
                     }
                     self.i += 1;
                 }
                 Some(_) => {
                     // copy a full UTF-8 scalar
-                    let rest = std::str::from_utf8(&self.b[self.i..])
-                        .map_err(|e| e.to_string())?;
+                    let Ok(rest) = std::str::from_utf8(&self.b[self.i..]) else {
+                        return err(self.i, "invalid utf-8 in string");
+                    };
                     let c = rest.chars().next().unwrap();
                     s.push(c);
                     self.i += c.len_utf8();
@@ -250,7 +293,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn array(&mut self) -> Result<Json, String> {
+    fn array(&mut self) -> Result<Json, JsonError> {
         self.expect(b'[')?;
         let mut out = Vec::new();
         self.ws();
@@ -268,12 +311,13 @@ impl<'a> Parser<'a> {
                     self.i += 1;
                     return Ok(Json::Arr(out));
                 }
-                other => return Err(format!("expected , or ] found {other:?}")),
+                Some(c) => return err(self.i, format!("expected , or ], found {:?}", c as char)),
+                None => return err(self.b.len(), "unterminated array"),
             }
         }
     }
 
-    fn object(&mut self) -> Result<Json, String> {
+    fn object(&mut self) -> Result<Json, JsonError> {
         self.expect(b'{')?;
         let mut out = BTreeMap::new();
         self.ws();
@@ -296,7 +340,8 @@ impl<'a> Parser<'a> {
                     self.i += 1;
                     return Ok(Json::Obj(out));
                 }
-                other => return Err(format!("expected , or }} found {other:?}")),
+                Some(c) => return err(self.i, format!("expected , or }}, found {:?}", c as char)),
+                None => return err(self.b.len(), "unterminated object"),
             }
         }
     }
@@ -351,5 +396,89 @@ mod tests {
             cur = &cur.as_arr().unwrap()[0];
         }
         assert_eq!(cur.as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn errors_carry_byte_positions() {
+        // truncation points at the end of the input
+        let e = Json::parse("{\"a\": [1, 2").unwrap_err();
+        assert_eq!(e.pos, 11, "{e}");
+        let e = Json::parse("\"unterminated").unwrap_err();
+        assert_eq!(e.pos, 13, "{e}");
+        // a syntax error points at the offending byte
+        let e = Json::parse("[1, ?]").unwrap_err();
+        assert_eq!(e.pos, 4, "{e}");
+        let e = Json::parse("").unwrap_err();
+        assert_eq!(e.pos, 0, "{e}");
+        // Display embeds the position for log lines
+        assert!(e.to_string().contains("at byte 0"), "{e}");
+    }
+
+    #[test]
+    fn emitter_escapes_quotes_backslashes_and_control_chars() {
+        let nasty = "q\" b\\ n\n t\t r\r bell\u{7} nul\u{0} café ∂".to_string();
+        let v = Json::Obj(
+            [(nasty.clone(), Json::Str(nasty.clone()))]
+                .into_iter()
+                .collect(),
+        );
+        let text = v.to_string_pretty();
+        // control chars must leave as escapes, never raw bytes
+        assert!(!text.contains('\u{7}'));
+        assert!(text.contains("\\u0007"));
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get(&nasty).and_then(Json::as_str), Some(nasty.as_str()));
+    }
+
+    /// Depth-limited random JSON value with adversarial strings (quotes,
+    /// backslashes, control characters, multi-byte UTF-8).
+    fn gen_value(rng: &mut crate::util::Rng, depth: usize) -> Json {
+        let palette = ['a', '"', '\\', '\n', '\t', '\u{3}', 'é', '∂', '/', ' '];
+        let top = if depth < 3 { 6 } else { 4 };
+        match rng.below(top) {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => {
+                // mix of exact integers and shortest-roundtrip floats
+                if rng.below(2) == 0 {
+                    Json::Num(rng.below(2_000_000) as f64 - 1e6)
+                } else {
+                    Json::Num((rng.next_f64() - 0.5) * 1e9)
+                }
+            }
+            3 => {
+                let n = rng.below(12);
+                Json::Str((0..n).map(|_| palette[rng.below(palette.len())]).collect())
+            }
+            4 => {
+                let n = rng.below(5);
+                Json::Arr((0..n).map(|_| gen_value(rng, depth + 1)).collect())
+            }
+            _ => {
+                let n = rng.below(5);
+                Json::Obj(
+                    (0..n)
+                        .map(|i| {
+                            let key: String =
+                                (0..rng.range(1, 8)).map(|_| palette[rng.below(palette.len())]).collect();
+                            (format!("{key}{i}"), gen_value(rng, depth + 1))
+                        })
+                        .collect(),
+                )
+            }
+        }
+    }
+
+    #[test]
+    fn parse_emit_parse_roundtrip_property() {
+        crate::util::quickcheck::check("json roundtrip", 200, |rng| {
+            let v = gen_value(rng, 0);
+            let text = v.to_string_pretty();
+            let back = Json::parse(&text).map_err(|e| format!("{e} in {text}"))?;
+            if back != v {
+                return Err(format!("roundtrip mismatch: {v:?} vs {back:?}"));
+            }
+            Ok(())
+        });
     }
 }

@@ -58,6 +58,40 @@ impl Completion {
     }
 }
 
+/// Per-worker spawn callback: runs **on the worker thread** before it
+/// serves its first job, receiving the worker index.  The core-pinning /
+/// NUMA hook — a sharded service installs one that binds replica `r`'s
+/// worker `i` to a core of `r`'s socket.
+pub type SpawnHook = Arc<dyn Fn(usize) + Send + Sync>;
+
+/// Construction options for [`ThreadPool::with_options`]: worker naming
+/// and the per-worker spawn hook.
+#[derive(Clone, Default)]
+pub struct PoolOptions {
+    /// worker threads are named `{prefix}-w{i}`; empty → `fftconv`
+    pub name_prefix: String,
+    /// runs once on each worker thread before its first job
+    pub spawn_hook: Option<SpawnHook>,
+}
+
+impl PoolOptions {
+    pub fn new() -> PoolOptions {
+        PoolOptions::default()
+    }
+
+    /// Worker-name prefix (threads become `{prefix}-w{i}`).
+    pub fn name_prefix(mut self, prefix: impl Into<String>) -> PoolOptions {
+        self.name_prefix = prefix.into();
+        self
+    }
+
+    /// Install the per-worker spawn callback (see [`SpawnHook`]).
+    pub fn spawn_hook(mut self, hook: impl Fn(usize) + Send + Sync + 'static) -> PoolOptions {
+        self.spawn_hook = Some(Arc::new(hook));
+        self
+    }
+}
+
 /// A fixed-size fork-join pool.
 pub struct ThreadPool {
     senders: Vec<mpsc::Sender<Msg>>,
@@ -65,24 +99,58 @@ pub struct ThreadPool {
 }
 
 impl ThreadPool {
-    /// Spawn `n` workers (n >= 1).
+    /// Spawn `n` workers (n >= 1) with default naming and no spawn hook.
     pub fn new(n: usize) -> Self {
+        Self::with_options(n, PoolOptions::default())
+    }
+
+    /// Spawn `n` workers (n >= 1).  Each thread is named
+    /// `{prefix}-w{i}`, and `opts.spawn_hook` runs on it — exactly once,
+    /// before its first job — with the worker index.  The constructor
+    /// waits for every hook to complete, so by the time it returns all
+    /// pinning/affinity side effects are in place; a panicking hook is
+    /// re-raised on the caller (after all workers checked in), not
+    /// swallowed on a detached thread.
+    pub fn with_options(n: usize, opts: PoolOptions) -> Self {
         let n = n.max(1);
+        let prefix = if opts.name_prefix.is_empty() {
+            "fftconv".to_string()
+        } else {
+            opts.name_prefix
+        };
+        // barrier only when there are side effects to wait for
+        let ready = opts
+            .spawn_hook
+            .is_some()
+            .then(|| Arc::new(Completion::new(n)));
         let mut senders = Vec::with_capacity(n);
         let mut handles = Vec::with_capacity(n);
         for i in 0..n {
             let (tx, rx) = mpsc::channel::<Msg>();
             senders.push(tx);
+            let hook = opts.spawn_hook.clone();
+            let ready = ready.clone();
             handles.push(
                 thread::Builder::new()
-                    .name(format!("fftconv-worker-{i}"))
+                    .name(format!("{prefix}-w{i}"))
                     .spawn(move || {
+                        if let Some(hook) = hook {
+                            // a panicking hook must still check in, or
+                            // the constructor would deadlock in wait()
+                            let r = catch_unwind(AssertUnwindSafe(|| hook(i)));
+                            ready.expect("barrier exists with hook").finish(r.err());
+                        }
                         while let Ok(Msg::Run(job)) = rx.recv() {
                             job();
                         }
                     })
                     .expect("spawn worker"),
             );
+        }
+        if let Some(ready) = ready {
+            if let Some(p) = ready.wait() {
+                resume_unwind(p);
+            }
         }
         ThreadPool { senders, handles }
     }
@@ -363,6 +431,60 @@ mod tests {
             sum.fetch_add(v, Ordering::SeqCst);
         });
         assert_eq!(sum.load(Ordering::SeqCst), 21);
+    }
+
+    #[test]
+    fn spawn_hook_runs_once_per_worker_before_first_job() {
+        let hits = Arc::new(Mutex::new(Vec::<usize>::new()));
+        let h = hits.clone();
+        let pool = ThreadPool::with_options(
+            4,
+            PoolOptions::new()
+                .name_prefix("hooked")
+                .spawn_hook(move |i| h.lock().unwrap().push(i)),
+        );
+        // with_options waits on the hook barrier: all hooks already ran
+        let mut seen = hits.lock().unwrap().clone();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2, 3], "once per worker, exactly");
+        // hooks never re-run on later waves
+        pool.run_static(|_| {});
+        pool.run_static(|_| {});
+        assert_eq!(hits.lock().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn spawn_hook_sees_the_named_worker_thread() {
+        let names = Arc::new(Mutex::new(Vec::<(usize, String)>::new()));
+        let n = names.clone();
+        let _pool = ThreadPool::with_options(
+            2,
+            PoolOptions::new().name_prefix("fftconv-r1").spawn_hook(move |i| {
+                let name = thread::current().name().unwrap_or("").to_string();
+                n.lock().unwrap().push((i, name));
+            }),
+        );
+        let mut got = names.lock().unwrap().clone();
+        got.sort();
+        assert_eq!(
+            got,
+            vec![(0, "fftconv-r1-w0".to_string()), (1, "fftconv-r1-w1".to_string())]
+        );
+    }
+
+    #[test]
+    fn spawn_hook_panic_reaches_the_constructor() {
+        let r = std::panic::catch_unwind(|| {
+            ThreadPool::with_options(
+                2,
+                PoolOptions::new().spawn_hook(|i| {
+                    if i == 1 {
+                        panic!("pinning failed");
+                    }
+                }),
+            )
+        });
+        assert!(r.is_err(), "hook panic must not be swallowed");
     }
 
     #[test]

@@ -1,0 +1,236 @@
+//! The profile-snapshot lifecycle (ISSUE 9 acceptance): export → save →
+//! load on matching ceilings warm-starts a fresh service with identical
+//! verdicts and zero re-measurements over a serving run; a profile from
+//! a host with a different kernel ISA or memory ceiling imports the same
+//! entries Stale — the old winner keeps serving while the decay
+//! machinery re-settles them through the shadow slot; corrupted or
+//! truncated profile files return structured [`ProfileError`]s, never
+//! panic.
+
+use fftconv::conv::{direct, ConvAlgorithm, ConvProblem, ExecMode, Tensor4};
+use fftconv::coordinator::{
+    ConvRequest, ConvService, LayerId, ProfileError, StaticScheduler, TuneState, TuningPolicy,
+    TuningProfile,
+};
+use fftconv::model::machine::xeon_gold;
+use std::time::Duration;
+
+/// A small-channel fusable layer (V fits every 1MB-cache machine model).
+const ALGO: ConvAlgorithm = ConvAlgorithm::RegularFft { m: 6 };
+
+fn problem() -> ConvProblem {
+    ConvProblem::unit(1, 8, 8, 20, 20, 3)
+}
+
+/// A measuring service that executes every request as a batch of one.
+fn measured_service() -> fftconv::coordinator::ConvServiceBuilder {
+    ConvService::builder(xeon_gold())
+        .workers(2)
+        .max_batch(1)
+        .max_wait(Duration::from_millis(1))
+        .tuning_policy(TuningPolicy::Measured)
+}
+
+/// Serve `n` single-image batches through a layer, checking every output
+/// against the direct-convolution oracle.
+fn serve(svc: &mut ConvService, id: LayerId, w: &Tensor4, n: usize, seed: u64) {
+    for i in 0..n {
+        let x = Tensor4::random([1, 8, 20, 20], seed + i as u64);
+        let t = svc.submit(ConvRequest::new(id, x.clone()).unwrap()).unwrap();
+        let resp = svc.take(t).expect("batch of 1 executes on submit");
+        let want = direct::naive(&x, w);
+        assert!(
+            resp.output.max_abs_diff(&want) < 2e-3 * want.max_abs().max(1.0),
+            "wrong convolution on serving batch {i}"
+        );
+    }
+}
+
+fn assert_close(got: &Tensor4, x: &Tensor4, w: &Tensor4, what: &str) {
+    let want = direct::naive(x, w);
+    assert!(
+        got.max_abs_diff(&want) < 2e-3 * want.max_abs().max(1.0),
+        "{what}: wrong convolution"
+    );
+}
+
+/// Verdict comparison that ignores the lease clock: ages advance with
+/// every served batch, everything else (winner, settledness, both EWMA
+/// streams) must be exactly the imported state.
+fn sans_age(mut p: TuningProfile) -> TuningProfile {
+    for e in &mut p.entries {
+        e.age = 0;
+    }
+    p
+}
+
+#[test]
+fn matching_profile_warm_starts_a_serving_run_with_zero_remeasurements() {
+    // a source service earns a settled verdict from real traffic
+    let w = Tensor4::random(problem().weight_shape(), 900);
+    let mut a = measured_service().build();
+    let id = a.register_with_algo("conv", problem(), w.clone(), ALGO).unwrap();
+    serve(&mut a, id, &w, 4, 910);
+    let profile = a.export_profile();
+    assert!(
+        profile.entries.iter().any(|e| e.settled),
+        "source run must settle a verdict to export"
+    );
+
+    // file round-trip is exact (f64 Display is shortest-roundtrip)
+    let path = std::env::temp_dir().join(format!("fftconv-warmstart-{}.json", std::process::id()));
+    profile.save(&path).unwrap();
+    let loaded = TuningProfile::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded, profile, "save/load must be bit-exact");
+
+    // a fresh service on the same machine warm-starts from the file:
+    // its first batch already serves the imported winner
+    let mut b = measured_service().profile(loaded).build();
+    let id = b.register_with_algo("conv", problem(), w.clone(), ALGO).unwrap();
+    serve(&mut b, id, &w, 4, 920);
+    assert!(
+        b.verdict_warm_hits() >= 1,
+        "the first batch should have found the imported verdict settled"
+    );
+    assert_eq!(
+        b.decay_stats().remeasurements,
+        0,
+        "a matching-ceilings warm start must re-measure nothing"
+    );
+    assert_eq!(b.decay_stats().drift_events, 0);
+    assert_eq!(b.decay_stats().flips, 0);
+    assert_eq!(
+        sans_age(b.export_profile()),
+        sans_age(profile),
+        "the warm-started table must hold the identical verdicts"
+    );
+}
+
+#[test]
+fn mismatched_ceilings_import_stale_and_heal_through_the_shadow_slot() {
+    // settle a verdict with injected ground truth: staged wins big
+    let w = Tensor4::random([8, 8, 3, 3], 930);
+    let x = Tensor4::random([2, 8, 20, 20], 931);
+    let mut s1 = StaticScheduler::new(2);
+    s1.set_tuning_policy(TuningPolicy::Hybrid);
+    let got = s1.run_batch(ALGO, &x, &w);
+    assert_close(&got, &x, &w, "source seed batch");
+    s1.record_exec_time(ALGO, &x, &w, ExecMode::Staged, 1e-9);
+    s1.record_exec_time(ALGO, &x, &w, ExecMode::Fused, 1.0);
+    let snap = s1.tuning_for(ALGO, &x, &w).unwrap();
+    assert!(snap.settled);
+    assert_eq!(snap.resolved, ExecMode::Staged);
+    let profile = s1.export_profile();
+
+    // a replica whose measured memory ceiling is 10x the profile's: the
+    // verdicts were earned on a different machine and must not be trusted
+    let mut s2 = StaticScheduler::new(2);
+    s2.set_tuning_policy(TuningPolicy::Hybrid);
+    let mut m = s2.machine();
+    m.mem_calibrated = Some(m.peak_bandwidth() * 10.0);
+    s2.set_machine(m);
+    let imp = s2.import_profile(&profile);
+    assert!(!imp.matched, "10x bandwidth is outside the ceiling tolerance");
+    assert_eq!(imp.settled, 0, "no verdict may import settled on a mismatch");
+    assert!(imp.stale >= 1, "settled verdicts import stale, history kept");
+
+    let snap = s2.tuning_for(ALGO, &x, &w).unwrap();
+    assert_eq!(snap.state, TuneState::Stale);
+    assert!(!snap.settled);
+    assert_eq!(
+        snap.resolved,
+        ExecMode::Staged,
+        "the imported winner keeps serving while doubted"
+    );
+
+    // live traffic heals through the shadow slot: the loser stream is
+    // refreshed, then the doubted winner, then a fresh-vs-fresh re-settle
+    let mut resettled = false;
+    for _ in 0..12 {
+        let got = s2.run_batch(ALGO, &x, &w);
+        assert_close(&got, &x, &w, "healing batch");
+        if s2.tuning_for(ALGO, &x, &w).unwrap().settled {
+            resettled = true;
+            break;
+        }
+    }
+    assert!(resettled, "a mismatched import must re-settle from live traffic");
+    assert_eq!(s2.stale_entries(), 0);
+    assert!(
+        s2.decay_stats().remeasurements >= 1,
+        "healing must go through the shadow re-measurement path"
+    );
+    // the imported extremes (1 ns and 1 s per image) were both replaced
+    // by this machine's real timings
+    let snap = s2.tuning_for(ALGO, &x, &w).unwrap();
+    assert!(snap.staged_secs.unwrap() > 1e-8, "staged stream re-measured");
+    assert!(snap.fused_secs.unwrap() < 0.5, "fused stream re-measured");
+
+    // a kernel-ISA mismatch alone also disqualifies the ceilings
+    let mut tweaked = profile.clone();
+    tweaked.machine.isa = Some("avx512".to_string());
+    let mut s3 = StaticScheduler::new(2);
+    let imp = s3.import_profile(&tweaked);
+    assert!(!imp.matched, "kernel-set mismatch must disqualify the profile");
+    assert!(imp.stale >= 1);
+}
+
+#[test]
+fn corrupted_and_truncated_profiles_error_structurally_never_panic() {
+    // a real exported profile as the corruption substrate
+    let mut s = StaticScheduler::new(1);
+    let w = Tensor4::random([8, 8, 3, 3], 940);
+    let x = Tensor4::random([1, 8, 20, 20], 941);
+    let _ = s.run_batch(ALGO, &x, &w);
+    let json = s.export_profile().to_json();
+    assert!(TuningProfile::from_json(&json).is_ok());
+
+    // EVERY truncation point yields a structured error (no panic, no
+    // silently half-loaded profile), and parse positions stay in range
+    for cut in 0..json.len() {
+        if !json.is_char_boundary(cut) {
+            continue;
+        }
+        let err = TuningProfile::from_json(&json[..cut])
+            .expect_err("a proper prefix of a profile must not parse");
+        match err {
+            ProfileError::Parse { pos, .. } => assert!(pos <= cut, "position past the input"),
+            ProfileError::Schema(_) => {}
+            ProfileError::Io(m) => panic!("io error without a file: {m}"),
+        }
+    }
+
+    // a flipped byte is a parse error with a position
+    let corrupt = json.replacen(':', ";", 1);
+    assert!(matches!(
+        TuningProfile::from_json(&corrupt),
+        Err(ProfileError::Parse { .. })
+    ));
+
+    // well-formed JSON that is not a profile is a schema error
+    assert!(matches!(
+        TuningProfile::from_json("[1, 2, 3]"),
+        Err(ProfileError::Schema(_))
+    ));
+    assert!(matches!(
+        TuningProfile::from_json("{\"version\": 99}"),
+        Err(ProfileError::Schema(_))
+    ));
+
+    // load(): a missing file is Io, a truncated file is Parse/Schema
+    let dir = std::env::temp_dir();
+    let missing = dir.join(format!("fftconv-missing-{}.json", std::process::id()));
+    assert!(matches!(
+        TuningProfile::load(&missing),
+        Err(ProfileError::Io(_))
+    ));
+    let truncated = dir.join(format!("fftconv-truncated-{}.json", std::process::id()));
+    std::fs::write(&truncated, &json[..json.len() / 2]).unwrap();
+    let err = TuningProfile::load(&truncated).expect_err("truncated file must not load");
+    std::fs::remove_file(&truncated).ok();
+    assert!(matches!(
+        err,
+        ProfileError::Parse { .. } | ProfileError::Schema(_)
+    ));
+}

@@ -1,0 +1,204 @@
+//! The sharded front-end (ISSUE 9 acceptance): a 1-replica
+//! `ShardedService` is indistinguishable from the plain `ConvService`
+//! path — bit-identical outputs and the same tuning verdicts over the
+//! same traffic — and with 2 replicas a verdict earned by replica 0's
+//! traffic serves replica 1's *first* batch off the shared store,
+//! counted as a warm hit in `shard_stats` (the BENCH shard block).
+
+use fftconv::conv::{direct, ConvAlgorithm, ConvProblem, Tensor4};
+use fftconv::coordinator::{ConvRequest, ConvService, ShardedService, TuningPolicy};
+use fftconv::model::machine::xeon_gold;
+use std::time::Duration;
+
+/// A small-channel fusable layer (V fits every 1MB-cache machine model).
+const ALGO: ConvAlgorithm = ConvAlgorithm::RegularFft { m: 6 };
+
+fn problem() -> ConvProblem {
+    ConvProblem::unit(1, 8, 8, 20, 20, 3)
+}
+
+fn assert_close(got: &Tensor4, x: &Tensor4, w: &Tensor4, what: &str) {
+    let want = direct::naive(x, w);
+    assert!(
+        got.max_abs_diff(&want) < 2e-3 * want.max_abs().max(1.0),
+        "{what}: wrong convolution"
+    );
+}
+
+#[test]
+fn one_replica_shard_is_bit_identical_to_the_plain_service() {
+    // Analytic tuning keeps the differential deterministic: both sides
+    // resolve every bucket from the same roofline seed, so same machine
+    // model + same pool width + same mode = the same float ops in the
+    // same order.
+    let w = Tensor4::random(problem().weight_shape(), 950);
+    let mut plain = ConvService::builder(xeon_gold())
+        .workers(2)
+        .max_batch(2)
+        .max_wait(Duration::from_millis(1))
+        .tuning_policy(TuningPolicy::Analytic)
+        .build();
+    let mut shard = ShardedService::builder(xeon_gold())
+        .replicas(1)
+        .workers(2)
+        .max_batch(2)
+        .max_wait(Duration::from_millis(1))
+        .tuning_policy(TuningPolicy::Analytic)
+        .build();
+    let lp = plain
+        .register_with_algo("conv", problem(), w.clone(), ALGO)
+        .unwrap();
+    let ls = shard
+        .register_with_algo_on(0, "conv", problem(), w.clone(), ALGO)
+        .unwrap();
+
+    // 5 single-image submits at max_batch 2: two full batches mid-stream,
+    // one leftover flushed — identical batch-size traffic on both sides
+    let inputs: Vec<Tensor4> = (0..5)
+        .map(|i| Tensor4::random([1, 8, 20, 20], 960 + i))
+        .collect();
+    let tp: Vec<_> = inputs
+        .iter()
+        .map(|x| plain.submit(ConvRequest::new(lp, x.clone()).unwrap()).unwrap())
+        .collect();
+    let ts: Vec<_> = inputs
+        .iter()
+        .map(|x| shard.submit(ConvRequest::new(ls, x.clone()).unwrap()).unwrap())
+        .collect();
+    plain.flush();
+    shard.flush();
+    for ((tp, ts), x) in tp.iter().zip(&ts).zip(&inputs) {
+        let rp = plain.take(*tp).expect("plain response");
+        let rs = shard.take(*ts).expect("shard response");
+        assert_eq!(rp.output.shape, rs.output.shape);
+        assert!(
+            rp.output.max_abs_diff(&rs.output) == 0.0,
+            "1-replica shard output diverged from the pre-split path"
+        );
+        assert_close(&rp.output, x, &w, "plain path");
+    }
+
+    // same tuning verdicts, entry for entry (EWMAs untouched under
+    // Analytic, so the snapshots must be exactly equal)
+    assert_eq!(
+        shard.export_profile(),
+        plain.export_profile(),
+        "shard and plain paths resolved different verdicts"
+    );
+    let st = shard.shard_stats();
+    assert_eq!(st.replicas, 1);
+    assert_eq!(st.layers, 1);
+    assert_eq!(st.batches, 3, "2 full batches + 1 flushed leftover");
+    assert_eq!(st.warm_hits, 0, "no sibling, no profile: nothing to be warm about");
+}
+
+#[test]
+fn verdict_earned_on_one_replica_serves_the_other_replicas_first_batch() {
+    let w = Tensor4::random(problem().weight_shape(), 970);
+    let mut s = ShardedService::builder(xeon_gold())
+        .replicas(2)
+        .workers(2)
+        .max_batch(1)
+        .max_wait(Duration::from_millis(1))
+        .tuning_policy(TuningPolicy::Measured)
+        .build();
+    // same weights on both replicas: the tuning key (algo, shape,
+    // fingerprint, bucket) is identical, only the executor differs
+    let la = s
+        .register_with_algo_on(0, "a", problem(), w.clone(), ALGO)
+        .unwrap();
+    let lb = s
+        .register_with_algo_on(1, "b", problem(), w.clone(), ALGO)
+        .unwrap();
+
+    // replica 0 earns the verdict from its own traffic (Measured
+    // settles once both pipelines have a warm sample)
+    let mut settled = false;
+    for i in 0..6 {
+        let x = Tensor4::random([1, 8, 20, 20], 980 + i);
+        let t = s.submit(ConvRequest::new(la, x.clone()).unwrap()).unwrap();
+        let resp = s.take(t).expect("batch of 1 executes on submit");
+        assert_close(&resp.output, &x, &w, "replica 0 measuring batch");
+        if s.export_profile().entries.iter().any(|e| e.settled) {
+            settled = true;
+            break;
+        }
+    }
+    assert!(settled, "replica 0 must settle its bucket within 6 batches");
+    assert_eq!(
+        s.shard_stats().warm_hits,
+        0,
+        "the earner's own first touch is not a warm hit"
+    );
+
+    // replica 1's FIRST batch on the same (weights, shape, bucket)
+    // already runs the settled winner: a cross-replica cache hit
+    let x = Tensor4::random([1, 8, 20, 20], 990);
+    let t = s.submit(ConvRequest::new(lb, x.clone()).unwrap()).unwrap();
+    let resp = s.take(t).expect("batch of 1 executes on submit");
+    assert_close(&resp.output, &x, &w, "replica 1 first batch");
+    let st = s.shard_stats();
+    assert_eq!(
+        st.warm_hits, 1,
+        "replica 1's first touch must be a cross-replica verdict hit"
+    );
+    assert_eq!(st.replicas, 2);
+    assert_eq!(st.layers, 2);
+    assert_eq!(st.remeasurements, 0);
+    // one shared table: both replicas see the same entries
+    let e0 = s.replica(0).tuning_entries();
+    let e1 = s.replica(1).tuning_entries();
+    assert_eq!(e0, e1, "replicas must read one shared tuning table");
+}
+
+#[test]
+fn shard_builder_profile_warm_starts_every_replica() {
+    // earn a profile on a throwaway single service
+    let w = Tensor4::random(problem().weight_shape(), 1000);
+    let mut src = ConvService::builder(xeon_gold())
+        .workers(2)
+        .max_batch(1)
+        .max_wait(Duration::from_millis(1))
+        .tuning_policy(TuningPolicy::Measured)
+        .build();
+    let id = src
+        .register_with_algo("conv", problem(), w.clone(), ALGO)
+        .unwrap();
+    for i in 0..5 {
+        let x = Tensor4::random([1, 8, 20, 20], 1010 + i);
+        let t = src.submit(ConvRequest::new(id, x.clone()).unwrap()).unwrap();
+        let resp = src.take(t).expect("batch of 1 executes on submit");
+        assert_close(&resp.output, &x, &w, "profile-earning batch");
+    }
+    let profile = src.export_profile();
+    assert!(profile.entries.iter().any(|e| e.settled));
+
+    // both replicas of a profile-seeded shard serve their first batch
+    // off the imported verdict — zero re-measurement across the fleet
+    let mut s = ShardedService::builder(xeon_gold())
+        .replicas(2)
+        .workers(1)
+        .max_batch(1)
+        .max_wait(Duration::from_millis(1))
+        .tuning_policy(TuningPolicy::Measured)
+        .profile(profile)
+        .build();
+    let la = s
+        .register_with_algo_on(0, "a", problem(), w.clone(), ALGO)
+        .unwrap();
+    let lb = s
+        .register_with_algo_on(1, "b", problem(), w.clone(), ALGO)
+        .unwrap();
+    for (id, seed) in [(la, 1020u64), (lb, 1021)] {
+        let x = Tensor4::random([1, 8, 20, 20], seed);
+        let t = s.submit(ConvRequest::new(id, x.clone()).unwrap()).unwrap();
+        let resp = s.take(t).expect("batch of 1 executes on submit");
+        assert_close(&resp.output, &x, &w, "warm-started batch");
+    }
+    let st = s.shard_stats();
+    assert_eq!(
+        st.warm_hits, 2,
+        "both replicas' first batches must be profile cache hits"
+    );
+    assert_eq!(st.remeasurements, 0, "warm start re-measures nothing");
+}

@@ -37,6 +37,13 @@ else
     echo "aarch64-unknown-linux-gnu target not installed; skipping cross-check"
 fi
 
+# profile warm-start smoke: export a tuning profile from a short serving
+# run, import it into a fresh service, and serve again with zero
+# re-measurements (examples/profile_warmstart.rs exits non-zero if the
+# warm-started run re-measures anything) — runs in --quick mode too
+echo "---- profile export -> import -> serve smoke ----"
+cargo run --release --example profile_warmstart
+
 if [[ "${1:-}" != "--quick" ]]; then
     # regenerates rust/BENCH_hotpaths.json (the perf trajectory record:
     # VGG-layer single-thread vs stage-parallel, plan cold vs warm, fused
@@ -64,6 +71,9 @@ if [[ "${1:-}" != "--quick" ]]; then
             BENCH_hotpaths.json || true
         echo "---- network serving: per-net totals + arena savings ----"
         grep -E '"(total_ms|interlayer_bytes_saved|slowest_layer)"' \
+            BENCH_hotpaths.json || true
+        echo "---- shard: replicas / cross-replica hits / warm-start savings ----"
+        grep -E '"(replicas|per_replica_batches|cross_replica_hits|tuning_entries|warmstart_hits|warmstart_remeasurements_saved)"' \
             BENCH_hotpaths.json || true
     fi
 fi
