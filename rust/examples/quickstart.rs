@@ -1,0 +1,113 @@
+//! Serving quickstart (docs/ARCHITECTURE.md §9): the async front-end in
+//! one page — launch a `FrontEnd` over a `ConvService`, push traffic at
+//! it from producer threads through cloned handles, watch admission
+//! control shed an over-quota tenant with structured errors, and shut
+//! down cleanly with every admitted request answered.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Exits non-zero if any step misbehaves — this doubles as a smoke test
+//! for the reactor path.
+
+use fftconv::conv::{direct, ConvAlgorithm, ConvProblem, Tensor4};
+use fftconv::coordinator::{
+    ConvRequest, ConvService, FrontEnd, FrontEndOptions, ServiceError, TenantId, TenantQuota,
+    TuningPolicy,
+};
+use fftconv::model::machine::xeon_gold;
+use std::thread;
+use std::time::Duration;
+
+const ALGO: ConvAlgorithm = ConvAlgorithm::RegularFft { m: 6 };
+
+fn main() {
+    let p = ConvProblem::unit(1, 8, 8, 20, 20, 3);
+    let w = Tensor4::random(p.weight_shape(), 42);
+
+    // 1. build the service exactly as before, then hand it to a
+    // FrontEnd: a driver thread takes ownership, forms batches on the
+    // deadline timer, and nobody ever calls tick()/flush() again
+    let mut svc = ConvService::builder(xeon_gold())
+        .workers(2)
+        .max_batch(4)
+        .max_wait(Duration::from_millis(2))
+        .tuning_policy(TuningPolicy::Analytic)
+        .completion_ttl(Duration::from_secs(5)) // abandoned tickets expire
+        .build();
+    let layer = svc
+        .register_with_algo("conv3x3", p, w.clone(), ALGO)
+        .expect("register");
+    let fe = FrontEnd::with_options(
+        svc,
+        FrontEndOptions::new()
+            .intake_limit(256)
+            // tenant 9 gets 4 requests and not one more (zero refill)
+            .quota(TenantId(9), TenantQuota::with_burst(0.0, 4.0)),
+    );
+
+    // 2. producer threads submit through cloned handles; each submit
+    // returns a TicketWaiter immediately and the thread parks on wait()
+    // (condvar, no spin) until the reactor delivers its response
+    let mut producers = Vec::new();
+    for t in 0..3u32 {
+        let handle = fe.handle();
+        let w = w.clone();
+        producers.push(thread::spawn(move || {
+            for i in 0..8u64 {
+                let x = Tensor4::random([1, 8, 20, 20], 1000 + u64::from(t) * 100 + i);
+                let req = ConvRequest::with_tenant(layer, x.clone(), TenantId(t))
+                    .expect("single image");
+                let resp = handle
+                    .submit(req)
+                    .expect("under quota, under the intake bound")
+                    .wait()
+                    .expect("admitted work always resolves");
+                let want = direct::reference(&p, &x, &w);
+                assert!(
+                    resp.output.max_abs_diff(&want) < 2e-3 * want.max_abs().max(1.0),
+                    "async response must match the direct oracle"
+                );
+            }
+        }));
+    }
+    for producer in producers {
+        producer.join().expect("producer thread");
+    }
+
+    // 3. admission control in action: tenant 9's burst is 4, so its
+    // fifth submit sheds with a structured error — no panic, no queue
+    let x = Tensor4::random([1, 8, 20, 20], 7);
+    let mut ok = 0;
+    let mut shed = 0;
+    for _ in 0..6 {
+        let req = ConvRequest::with_tenant(layer, x.clone(), TenantId(9)).expect("single image");
+        match fe.submit(req) {
+            Ok(waiter) => {
+                waiter.wait().expect("admitted");
+                ok += 1;
+            }
+            Err(ServiceError::QuotaExceeded { tenant }) => {
+                assert_eq!(tenant, TenantId(9));
+                shed += 1;
+            }
+            Err(e) => panic!("unexpected admission error: {e}"),
+        }
+    }
+
+    // 4. the shared metrics now carry both halves of the story: the
+    // front-end's admission gauges and the executor's batch quantiles
+    let snap = fe.snapshot();
+    println!(
+        "quickstart: {} admitted / {} quota-shed, {} batches (mean {:.1} img), \
+         queue-wait p95 {:.3} ms, exec p95 {:.3} ms",
+        snap.admitted, snap.quota_rejected, snap.batches, snap.mean_batch, snap.queue_p95_ms,
+        snap.p95_ms
+    );
+
+    // 5. shutdown drains everything and returns the service
+    let svc = fe.shutdown();
+    if ok != 4 || shed != 2 || snap.quota_rejected != 2 || svc.pending() != 0 {
+        eprintln!("error: quickstart invariants violated (ok {ok}, shed {shed})");
+        std::process::exit(1);
+    }
+}

@@ -150,6 +150,19 @@ impl Batcher {
     pub fn pending_count(&self) -> usize {
         self.pending.values().map(|v| v.len()).sum()
     }
+
+    /// The earliest instant at which any group's `max_wait` expires, or
+    /// `None` when nothing is pending.  O(groups), not O(requests):
+    /// members arrive in order, so each group's oldest deadline is its
+    /// head's — one scan of the heads suffices.  The async front-end
+    /// parks its reactor until exactly this instant instead of polling
+    /// `tick()` on a guess.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.pending
+            .values()
+            .filter_map(|reqs| reqs.first()?.enqueued.checked_add(self.max_wait))
+            .min()
+    }
 }
 
 #[cfg(test)]
@@ -293,6 +306,28 @@ mod tests {
         assert_eq!(batches.len(), 1);
         let ids: Vec<u64> = batches[0].requests.iter().map(|p| p.ticket.id()).collect();
         assert_eq!(ids, [5, 6]);
+    }
+
+    #[test]
+    fn next_deadline_tracks_oldest_head() {
+        let mut b = Batcher::new(100, Duration::from_millis(50));
+        assert!(b.next_deadline().is_none(), "nothing pending, no deadline");
+        let before = Instant::now();
+        push(&mut b, 1, LA);
+        std::thread::sleep(Duration::from_millis(2));
+        push(&mut b, 2, LB);
+        let d = b.next_deadline().expect("two groups pending");
+        // the deadline is the OLDER head (group a) + max_wait
+        assert!(d >= before + Duration::from_millis(50));
+        assert!(d <= Instant::now() + Duration::from_millis(50));
+        let d2 = b.next_deadline().unwrap();
+        assert_eq!(d, d2, "deadline is stable between calls");
+        // draining group a moves the deadline out to group b's head
+        b.drain_layer(LA);
+        let d3 = b.next_deadline().expect("group b still pending");
+        assert!(d3 > d, "older group gone, deadline advances");
+        b.drain();
+        assert!(b.next_deadline().is_none());
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //! [`ConvService`]: super::ConvService
 //! [`ConvRequest`]: super::ConvRequest
 
-use super::request::{LayerId, NetworkId};
+use super::request::{LayerId, NetworkId, TenantId};
 use std::fmt;
 
 /// Why a serving-API call was rejected.
@@ -63,6 +63,19 @@ pub enum ServiceError {
     /// the graph compiler's diagnostic
     /// ([`crate::nets::graph::GraphError`]'s display).
     Graph { reason: String },
+    /// The front-end's bounded intake queue is full — the request was
+    /// shed before touching the service.  Back off and retry; `depth`
+    /// is the queue depth observed at rejection, `limit` the bound.
+    Overloaded { depth: usize, limit: usize },
+    /// The submitting tenant's token bucket is empty: it has exceeded
+    /// its sustained rate and burst allowance.  Other tenants are
+    /// unaffected; this tenant's requests are admitted again once its
+    /// bucket refills.
+    QuotaExceeded { tenant: TenantId },
+    /// The front-end is shutting down (or has shut down): no new work
+    /// is accepted, and any request still in flight at shutdown that
+    /// could not be completed resolves to this.
+    ShuttingDown,
 }
 
 impl fmt::Display for ServiceError {
@@ -106,6 +119,24 @@ impl fmt::Display for ServiceError {
             }
             ServiceError::Graph { reason } => {
                 write!(f, "network graph rejected: {reason}")
+            }
+            ServiceError::Overloaded { depth, limit } => {
+                write!(
+                    f,
+                    "front-end intake queue is full ({depth} pending, limit {limit}): \
+                     request shed, back off and retry"
+                )
+            }
+            ServiceError::QuotaExceeded { tenant } => {
+                write!(
+                    f,
+                    "tenant {} exceeded its token-bucket quota: request shed until \
+                     the bucket refills",
+                    tenant.0
+                )
+            }
+            ServiceError::ShuttingDown => {
+                write!(f, "front-end is shutting down: no new work accepted")
             }
         }
     }

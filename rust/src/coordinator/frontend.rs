@@ -1,0 +1,911 @@
+//! Async serving front-end: a reactor that owns the service on a driver
+//! thread, admission control in front of it, and wakeable completion
+//! handles behind it — the piece that turns the library you poll
+//! (`submit` / `tick` / `take`) into a server you push traffic at.
+//!
+//! ## Shape
+//!
+//! ```text
+//!  callers (any thread)                     driver thread ("fftconv-fe")
+//!  ───────────────────                      ───────────────────────────
+//!  submit(req) ─┬─ admission ──► mpsc ──►   reactor loop:
+//!               │   · open?                   recv_timeout(next_deadline)
+//!               │   · intake depth < limit?   ├─ Submit → svc.submit
+//!               │   · tenant bucket has a     ├─ Call   → f(&mut svc)
+//!               │     token?                  ├─ timeout→ svc.tick()
+//!               ▼                             └─ then: deliver completions
+//!        TicketWaiter ◄──────────────────────   (WaitCell fulfill/notify)
+//!        wait / wait_timeout / poll
+//! ```
+//!
+//! * **No spin anywhere.**  Callers park on a `Condvar` inside their
+//!   [`TicketWaiter`]; the reactor parks in `recv_timeout` against the
+//!   service's [`next_deadline`] — it wakes for a command or at the
+//!   exact instant a partially filled group's `max_wait` expires, so
+//!   deadline batches fire the moment they are due with nobody calling
+//!   `tick` by hand.
+//! * **Admission control is caller-side.**  The depth reservation and
+//!   the per-tenant token bucket run on the *submitting* thread, so an
+//!   overloaded or over-quota caller is turned away in nanoseconds with
+//!   a structured [`ServiceError::Overloaded`] /
+//!   [`ServiceError::QuotaExceeded`] — shed traffic never queues, never
+//!   wakes the reactor, and never steals batch-formation time from
+//!   admitted requests.
+//! * **Bounded end-to-end.**  The intake queue holds at most
+//!   `intake_limit` commands; once inside, a request sits in a batcher
+//!   group bounded by `max_batch` and its response leaves the completion
+//!   store the moment the reactor delivers it to the waiter.  Combined
+//!   with the service-level TTL + per-tenant cap on unclaimed responses,
+//!   no tenant can grow any queue without bound.
+//! * **Shutdown loses nothing.**  [`FrontEnd::shutdown`] closes
+//!   admission, waits out in-flight submitters (an `inflight` handshake
+//!   closes the check-then-send race), flushes the service, delivers
+//!   every response, resolves any still-unresolvable waiter with
+//!   [`ServiceError::ShuttingDown`], and returns the service.
+//!
+//! The reactor is generic over [`ServiceCore`], so the same front-end
+//! drives a single [`ConvService`] or a whole [`ShardedService`].
+//!
+//! [`next_deadline`]: ConvService::next_deadline
+
+use super::error::ServiceError;
+use super::metrics::{Metrics, Snapshot};
+use super::request::{ConvRequest, ConvResponse, LayerId, TenantId, Ticket};
+use super::service::ConvService;
+use super::shard::ShardedService;
+use crate::conv::{ConvAlgorithm, ConvProblem, Tensor4};
+use crate::util::threadpool::{spawn_driver, SpawnHook};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// What the reactor needs from a service: the v2 serving surface plus
+/// the deadline the reactor parks against.  Implemented by
+/// [`ConvService`] and [`ShardedService`]; the bound is `Send` because
+/// the front-end moves the service onto its driver thread.
+pub trait ServiceCore: Send + 'static {
+    /// Enqueue a request, returning its claim ticket.
+    fn submit(&mut self, req: ConvRequest) -> Result<Ticket, ServiceError>;
+    /// Claim the response for `ticket`, if completed.
+    fn take(&mut self, ticket: Ticket) -> Option<ConvResponse>;
+    /// Execute work whose latency deadline expired; responses completed.
+    fn tick(&mut self) -> usize;
+    /// Execute everything pending; responses completed.
+    fn flush(&mut self) -> usize;
+    /// Earliest pending `max_wait` expiry (`None` when idle).
+    fn next_deadline(&self) -> Option<Instant>;
+    /// The metrics sink snapshots read from — shared with the front-end
+    /// so intake-side gauges land next to the execute-side quantiles.
+    fn metrics(&self) -> Arc<Metrics>;
+}
+
+impl ServiceCore for ConvService {
+    fn submit(&mut self, req: ConvRequest) -> Result<Ticket, ServiceError> {
+        ConvService::submit(self, req)
+    }
+
+    fn take(&mut self, ticket: Ticket) -> Option<ConvResponse> {
+        ConvService::take(self, ticket)
+    }
+
+    fn tick(&mut self) -> usize {
+        ConvService::tick(self)
+    }
+
+    fn flush(&mut self) -> usize {
+        ConvService::flush(self)
+    }
+
+    fn next_deadline(&self) -> Option<Instant> {
+        ConvService::next_deadline(self)
+    }
+
+    fn metrics(&self) -> Arc<Metrics> {
+        self.metrics.clone()
+    }
+}
+
+impl ServiceCore for ShardedService {
+    fn submit(&mut self, req: ConvRequest) -> Result<Ticket, ServiceError> {
+        ShardedService::submit(self, req)
+    }
+
+    fn take(&mut self, ticket: Ticket) -> Option<ConvResponse> {
+        ShardedService::take(self, ticket)
+    }
+
+    fn tick(&mut self) -> usize {
+        ShardedService::tick(self)
+    }
+
+    fn flush(&mut self) -> usize {
+        ShardedService::flush(self)
+    }
+
+    fn next_deadline(&self) -> Option<Instant> {
+        ShardedService::next_deadline(self)
+    }
+
+    fn metrics(&self) -> Arc<Metrics> {
+        ShardedService::metrics(self)
+    }
+}
+
+/// Per-tenant token-bucket quota: a sustained `rate` of requests per
+/// second, with bursts of up to `burst` requests on a full bucket.  One
+/// request costs one token; tokens refill continuously at `rate`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TenantQuota {
+    /// sustained requests per second (≥ 0; 0 means "burst only")
+    pub rate: f64,
+    /// bucket capacity, i.e. the largest admissible burst (≥ 1)
+    pub burst: f64,
+}
+
+impl TenantQuota {
+    /// A quota of `rate` requests/sec with a one-second burst allowance
+    /// (`burst == rate`, floored at one token so something can ever run).
+    pub fn per_sec(rate: f64) -> TenantQuota {
+        TenantQuota { rate, burst: rate.max(1.0) }
+    }
+
+    /// A quota with an explicit burst capacity.
+    pub fn with_burst(rate: f64, burst: f64) -> TenantQuota {
+        TenantQuota { rate, burst }
+    }
+}
+
+/// One tenant's live bucket state.
+struct Bucket {
+    tokens: f64,
+    last: Instant,
+}
+
+/// Caller-side admission state, shared by the front-end and every
+/// cloned handle.
+struct Admission {
+    /// false once shutdown begins — checked before any send
+    open: AtomicBool,
+    /// submitters currently between the `open` check and their send —
+    /// the shutdown drain waits for this to hit zero so no accepted
+    /// command can arrive after the reactor's final sweep
+    inflight: AtomicUsize,
+    /// commands currently in the intake queue (reserved on admit,
+    /// released when the reactor pops)
+    depth: AtomicUsize,
+    /// bounded-intake ceiling
+    limit: usize,
+    /// applied to tenants with no explicit quota (`None`: unlimited)
+    default_quota: Option<TenantQuota>,
+    /// per-tenant overrides (frozen at launch)
+    quotas: HashMap<TenantId, TenantQuota>,
+    /// live bucket fills, created lazily per tenant
+    buckets: Mutex<HashMap<TenantId, Bucket>>,
+}
+
+impl Admission {
+    fn new(opts: &FrontEndOptions) -> Admission {
+        Admission {
+            open: AtomicBool::new(true),
+            inflight: AtomicUsize::new(0),
+            depth: AtomicUsize::new(0),
+            limit: opts.intake_limit.max(1),
+            default_quota: opts.default_quota,
+            quotas: opts.quotas.clone(),
+            buckets: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Spend one token from `tenant`'s bucket, refilling it first.  A
+    /// tenant with no quota (explicit or default) is never limited.
+    fn take_token(&self, tenant: TenantId, now: Instant) -> Result<(), ServiceError> {
+        let quota = match self.quotas.get(&tenant).copied().or(self.default_quota) {
+            Some(q) => q,
+            None => return Ok(()),
+        };
+        let rate = quota.rate.max(0.0);
+        let burst = quota.burst.max(1.0);
+        let mut buckets = self.buckets.lock().unwrap();
+        let b = buckets.entry(tenant).or_insert(Bucket { tokens: burst, last: now });
+        // `now` values from racing submitters can arrive out of order;
+        // only refill forward so the clock never rewinds the bucket
+        if now > b.last {
+            let dt = now.duration_since(b.last).as_secs_f64();
+            b.tokens = (b.tokens + dt * rate).min(burst);
+            b.last = now;
+        }
+        if b.tokens < 1.0 {
+            return Err(ServiceError::QuotaExceeded { tenant });
+        }
+        b.tokens -= 1.0;
+        Ok(())
+    }
+}
+
+/// Construction options for [`FrontEnd::with_options`].
+#[derive(Clone)]
+pub struct FrontEndOptions {
+    /// intake-queue bound: submits past this shed with `Overloaded`
+    pub intake_limit: usize,
+    /// quota for tenants without an explicit one (`None`: unlimited)
+    pub default_quota: Option<TenantQuota>,
+    /// per-tenant quota overrides
+    pub quotas: HashMap<TenantId, TenantQuota>,
+    /// driver-thread name (observability: `top -H`, panics, profilers)
+    pub name: String,
+    /// runs on the driver thread before the reactor — the same
+    /// pinning/affinity seam as the worker pools' spawn hook
+    pub driver_hook: Option<SpawnHook>,
+    /// index handed to `driver_hook` (e.g. a core number)
+    pub driver_index: usize,
+}
+
+impl Default for FrontEndOptions {
+    fn default() -> Self {
+        FrontEndOptions {
+            intake_limit: 1024,
+            default_quota: None,
+            quotas: HashMap::new(),
+            name: "fftconv-fe".to_string(),
+            driver_hook: None,
+            driver_index: 0,
+        }
+    }
+}
+
+impl FrontEndOptions {
+    pub fn new() -> FrontEndOptions {
+        FrontEndOptions::default()
+    }
+
+    /// Intake-queue bound (min 1): submits past it shed `Overloaded`.
+    pub fn intake_limit(mut self, n: usize) -> Self {
+        self.intake_limit = n.max(1);
+        self
+    }
+
+    /// Token-bucket quota for every tenant without an explicit one.
+    pub fn default_quota(mut self, q: TenantQuota) -> Self {
+        self.default_quota = Some(q);
+        self
+    }
+
+    /// Token-bucket quota for one specific tenant.
+    pub fn quota(mut self, tenant: TenantId, q: TenantQuota) -> Self {
+        self.quotas.insert(tenant, q);
+        self
+    }
+
+    /// Driver-thread name (default `fftconv-fe`).
+    pub fn name(mut self, name: impl Into<String>) -> Self {
+        self.name = name.into();
+        self
+    }
+
+    /// Pinning/affinity hook for the driver thread, and the index it
+    /// receives (see [`crate::util::threadpool::spawn_driver`]).
+    pub fn driver_hook(
+        mut self,
+        hook: impl Fn(usize) + Send + Sync + 'static,
+        index: usize,
+    ) -> Self {
+        self.driver_hook = Some(Arc::new(hook));
+        self.driver_index = index;
+        self
+    }
+}
+
+/// Completion-cell state machine: `Pending` → `Ready` (reactor) →
+/// `Taken` (waiter).  `fulfill` is first-write-wins, so a late reactor
+/// result can never clobber a shutdown resolution or vice versa.
+enum WaitState {
+    Pending,
+    Ready(Result<ConvResponse, ServiceError>),
+    Taken,
+}
+
+/// The parked-waiter cell behind a [`TicketWaiter`]: a mutex-guarded
+/// state plus the condvar submitter threads sleep on.
+struct WaitCell {
+    state: Mutex<WaitState>,
+    cv: Condvar,
+}
+
+impl WaitCell {
+    fn new() -> WaitCell {
+        WaitCell {
+            state: Mutex::new(WaitState::Pending),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Publish the outcome and wake the waiter.  First write wins.
+    fn fulfill(&self, outcome: Result<ConvResponse, ServiceError>) {
+        let mut g = self.state.lock().unwrap();
+        if matches!(*g, WaitState::Pending) {
+            *g = WaitState::Ready(outcome);
+            self.cv.notify_all();
+        }
+    }
+}
+
+/// A wakeable, future-like handle for one admitted request.  The
+/// submitting thread parks on [`TicketWaiter::wait`] (condvar, no spin)
+/// until the reactor delivers the response — or probes with
+/// [`TicketWaiter::poll`] / bounds the park with
+/// [`TicketWaiter::wait_timeout`].  Single-use: `wait` consumes the
+/// handle and yields the outcome exactly once.
+pub struct TicketWaiter {
+    cell: Arc<WaitCell>,
+    id: u64,
+}
+
+impl TicketWaiter {
+    /// Front-end-assigned submission id (logging / correlation; unlike
+    /// a `Ticket` it is handed out before the service ever sees the
+    /// request).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Non-blocking readiness probe: `true` once the outcome is ready
+    /// to collect without parking.
+    pub fn poll(&self) -> bool {
+        !matches!(*self.cell.state.lock().unwrap(), WaitState::Pending)
+    }
+
+    /// Park until the outcome arrives.  Returns the response, or the
+    /// structured error the request resolved to (a validation error
+    /// from the service, or `ShuttingDown` if the front-end stopped
+    /// before the response could be delivered).
+    pub fn wait(self) -> Result<ConvResponse, ServiceError> {
+        let mut g = self.cell.state.lock().unwrap();
+        while matches!(*g, WaitState::Pending) {
+            g = self.cell.cv.wait(g).unwrap();
+        }
+        match std::mem::replace(&mut *g, WaitState::Taken) {
+            WaitState::Ready(outcome) => outcome,
+            // unreachable: `wait` consumes the only handle, so nothing
+            // else can have taken the outcome — kept panic-free anyway
+            _ => Err(ServiceError::ShuttingDown),
+        }
+    }
+
+    /// Park for at most `timeout`.  `Ok(outcome)` if the request
+    /// resolved in time; `Err(self)` hands the (still live) waiter back
+    /// so the caller can keep waiting or drop it.
+    pub fn wait_timeout(
+        self,
+        timeout: Duration,
+    ) -> Result<Result<ConvResponse, ServiceError>, TicketWaiter> {
+        let deadline = Instant::now().checked_add(timeout);
+        {
+            let mut g = self.cell.state.lock().unwrap();
+            loop {
+                if !matches!(*g, WaitState::Pending) {
+                    let outcome = match std::mem::replace(&mut *g, WaitState::Taken) {
+                        WaitState::Ready(outcome) => outcome,
+                        _ => Err(ServiceError::ShuttingDown),
+                    };
+                    return Ok(outcome);
+                }
+                let left = match deadline {
+                    Some(d) => match d.checked_duration_since(Instant::now()) {
+                        Some(left) if !left.is_zero() => left,
+                        _ => break,
+                    },
+                    // `now + timeout` overflowed Instant: wait unbounded
+                    None => Duration::MAX,
+                };
+                let (g2, _) = self.cell.cv.wait_timeout(g, left).unwrap();
+                g = g2;
+            }
+        }
+        Err(self)
+    }
+}
+
+/// One admitted request on its way to the reactor.
+struct SubmitCmd {
+    req: ConvRequest,
+    cell: Arc<WaitCell>,
+    /// when admission accepted it — the reactor turns this into the
+    /// queue-wait sample
+    enqueued: Instant,
+}
+
+/// The reactor's command alphabet.
+enum Cmd<S> {
+    Submit(SubmitCmd),
+    /// run a closure against the owned service (registration, weight
+    /// swaps, snapshots — anything the sync API exposes)
+    Call(Box<dyn FnOnce(&mut S) + Send>),
+    Shutdown,
+}
+
+/// Caller-side state shared by the front-end and its handles.
+struct Intake {
+    admission: Admission,
+    metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+}
+
+impl Intake {
+    /// Admission control + enqueue.  Runs entirely on the submitting
+    /// thread; the happy path is two atomics, a bucket update, and one
+    /// channel send.
+    fn submit<S: ServiceCore>(
+        &self,
+        tx: &mpsc::Sender<Cmd<S>>,
+        req: ConvRequest,
+    ) -> Result<TicketWaiter, ServiceError> {
+        let adm = &self.admission;
+        // the inflight window covers the whole check→send path, so the
+        // shutdown drain can wait until every send that will ever
+        // succeed has landed in the channel
+        adm.inflight.fetch_add(1, Ordering::SeqCst);
+        let out = self.admit_and_send(tx, req);
+        adm.inflight.fetch_sub(1, Ordering::SeqCst);
+        out
+    }
+
+    fn admit_and_send<S: ServiceCore>(
+        &self,
+        tx: &mpsc::Sender<Cmd<S>>,
+        req: ConvRequest,
+    ) -> Result<TicketWaiter, ServiceError> {
+        let adm = &self.admission;
+        if !adm.open.load(Ordering::SeqCst) {
+            return Err(ServiceError::ShuttingDown);
+        }
+        // bounded intake first: a full queue sheds without charging the
+        // tenant's bucket, so backpressure does not double-penalize
+        let prev = adm.depth.fetch_add(1, Ordering::SeqCst);
+        if prev >= adm.limit {
+            adm.depth.fetch_sub(1, Ordering::SeqCst);
+            self.metrics.record_shed();
+            return Err(ServiceError::Overloaded { depth: prev, limit: adm.limit });
+        }
+        let now = Instant::now();
+        if let Err(e) = adm.take_token(req.tenant, now) {
+            adm.depth.fetch_sub(1, Ordering::SeqCst);
+            self.metrics.record_quota_rejected();
+            return Err(e);
+        }
+        let cell = Arc::new(WaitCell::new());
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let cmd = Cmd::Submit(SubmitCmd { req, cell: cell.clone(), enqueued: now });
+        if tx.send(cmd).is_err() {
+            adm.depth.fetch_sub(1, Ordering::SeqCst);
+            return Err(ServiceError::ShuttingDown);
+        }
+        self.metrics.record_admitted();
+        self.metrics.record_intake_depth(adm.depth.load(Ordering::SeqCst));
+        Ok(TicketWaiter { cell, id })
+    }
+
+    /// Send an admin closure to the reactor and wait for its reply.
+    fn call<S: ServiceCore, R, F>(
+        &self,
+        tx: &mpsc::Sender<Cmd<S>>,
+        f: F,
+    ) -> Result<R, ServiceError>
+    where
+        R: Send + 'static,
+        F: FnOnce(&mut S) -> R + Send + 'static,
+    {
+        let adm = &self.admission;
+        adm.inflight.fetch_add(1, Ordering::SeqCst);
+        let sent = if adm.open.load(Ordering::SeqCst) {
+            let (reply_tx, reply_rx) = mpsc::channel();
+            let cmd = Cmd::Call(Box::new(move |svc: &mut S| {
+                let _ = reply_tx.send(f(svc));
+            }));
+            tx.send(cmd).ok().map(|_| reply_rx)
+        } else {
+            None
+        };
+        adm.inflight.fetch_sub(1, Ordering::SeqCst);
+        match sent {
+            // an executed closure always replies; a dropped one (reactor
+            // gone before running it) drops the sender and errors here
+            Some(reply_rx) => reply_rx.recv().map_err(|_| ServiceError::ShuttingDown),
+            None => Err(ServiceError::ShuttingDown),
+        }
+    }
+}
+
+/// A cloneable submit handle: give one to each producer thread.
+/// (`std::sync::mpsc` senders are single-thread affine, so the
+/// front-end itself is not `Sync` — handles are how traffic fans in.)
+pub struct FrontEndHandle<S: ServiceCore> {
+    tx: mpsc::Sender<Cmd<S>>,
+    intake: Arc<Intake>,
+}
+
+impl<S: ServiceCore> Clone for FrontEndHandle<S> {
+    fn clone(&self) -> Self {
+        FrontEndHandle { tx: self.tx.clone(), intake: self.intake.clone() }
+    }
+}
+
+impl<S: ServiceCore> FrontEndHandle<S> {
+    /// Submit through admission control; see [`FrontEnd::submit`].
+    pub fn submit(&self, req: ConvRequest) -> Result<TicketWaiter, ServiceError> {
+        self.intake.submit(&self.tx, req)
+    }
+
+    /// Run a closure against the owned service on the driver thread and
+    /// return its result — `Err(ShuttingDown)` if the reactor is gone.
+    pub fn call<R, F>(&self, f: F) -> Result<R, ServiceError>
+    where
+        R: Send + 'static,
+        F: FnOnce(&mut S) -> R + Send + 'static,
+    {
+        self.intake.call(&self.tx, f)
+    }
+
+    /// Point-in-time metrics (intake gauges + execute quantiles).
+    pub fn snapshot(&self) -> Snapshot {
+        self.intake.metrics.snapshot()
+    }
+}
+
+/// The reactor front-end: owns the service on a named driver thread and
+/// exposes the async surface — `submit` → [`TicketWaiter`], `call` for
+/// admin work, `shutdown` to drain and get the service back.
+pub struct FrontEnd<S: ServiceCore = ConvService> {
+    tx: mpsc::Sender<Cmd<S>>,
+    intake: Arc<Intake>,
+    driver: Option<thread::JoinHandle<S>>,
+}
+
+impl<S: ServiceCore> FrontEnd<S> {
+    /// Launch with default options (1024-deep intake, no quotas).
+    pub fn launch(svc: S) -> FrontEnd<S> {
+        FrontEnd::with_options(svc, FrontEndOptions::default())
+    }
+
+    /// Move `svc` onto a new driver thread and start the reactor.
+    pub fn with_options(svc: S, opts: FrontEndOptions) -> FrontEnd<S> {
+        let intake = Arc::new(Intake {
+            admission: Admission::new(&opts),
+            metrics: svc.metrics(),
+            next_id: AtomicU64::new(0),
+        });
+        let (tx, rx) = mpsc::channel();
+        let reactor_intake = intake.clone();
+        let driver = spawn_driver(opts.name, opts.driver_hook, opts.driver_index, move || {
+            reactor(svc, rx, reactor_intake)
+        });
+        FrontEnd { tx, intake, driver: Some(driver) }
+    }
+
+    /// Submit a request through admission control.  Non-blocking: on
+    /// admission the request is queued for the reactor and a
+    /// [`TicketWaiter`] is returned immediately; otherwise the request
+    /// is shed right here with `Overloaded` (intake full),
+    /// `QuotaExceeded` (tenant bucket empty), or `ShuttingDown`.
+    pub fn submit(&self, req: ConvRequest) -> Result<TicketWaiter, ServiceError> {
+        self.intake.submit(&self.tx, req)
+    }
+
+    /// A cloneable submit handle for producer threads.
+    pub fn handle(&self) -> FrontEndHandle<S> {
+        FrontEndHandle { tx: self.tx.clone(), intake: self.intake.clone() }
+    }
+
+    /// Run a closure against the owned service on the driver thread and
+    /// return its result.  The synchronous escape hatch: registration,
+    /// weight swaps, profile export — anything the sync API exposes.
+    pub fn call<R, F>(&self, f: F) -> R
+    where
+        R: Send + 'static,
+        F: FnOnce(&mut S) -> R + Send + 'static,
+    {
+        self.intake
+            .call(&self.tx, f)
+            .expect("reactor lives while the front-end owns it")
+    }
+
+    /// Point-in-time metrics (intake gauges + execute quantiles).
+    pub fn snapshot(&self) -> Snapshot {
+        self.intake.metrics.snapshot()
+    }
+
+    /// The shared metrics sink itself.
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.intake.metrics.clone()
+    }
+
+    /// Commands currently queued for the reactor (an instantaneous
+    /// gauge; the snapshot's `intake_depth` is the recorded one).
+    pub fn intake_depth(&self) -> usize {
+        self.intake.admission.depth.load(Ordering::SeqCst)
+    }
+
+    /// Stop admitting, drain everything already accepted, and return
+    /// the service.  Every outstanding [`TicketWaiter`] resolves: with
+    /// its response if the flush completed it, with `ShuttingDown`
+    /// otherwise.  A panic on the driver thread is re-raised here.
+    pub fn shutdown(mut self) -> S {
+        self.begin_shutdown();
+        let driver = self.driver.take().expect("driver present until shutdown");
+        match driver.join() {
+            Ok(svc) => svc,
+            Err(payload) => std::panic::resume_unwind(payload),
+        }
+    }
+
+    fn begin_shutdown(&self) {
+        self.intake.admission.open.store(false, Ordering::SeqCst);
+        let _ = self.tx.send(Cmd::Shutdown);
+    }
+}
+
+impl<S: ServiceCore> Drop for FrontEnd<S> {
+    /// Dropping the front-end shuts the reactor down (same drain as
+    /// [`FrontEnd::shutdown`]) but discards the service and swallows
+    /// driver panics — use `shutdown` when either matters.
+    fn drop(&mut self) {
+        if let Some(driver) = self.driver.take() {
+            self.begin_shutdown();
+            let _ = driver.join();
+        }
+    }
+}
+
+/// Registration conveniences when the front-end drives a plain
+/// [`ConvService`] — each is a [`FrontEnd::call`] round-trip.
+impl FrontEnd<ConvService> {
+    /// [`ConvService::register`] on the driver thread.
+    pub fn register(
+        &self,
+        name: &str,
+        problem: ConvProblem,
+        weights: Tensor4,
+    ) -> Result<LayerId, ServiceError> {
+        let name = name.to_string();
+        self.call(move |s| s.register(&name, problem, weights))
+    }
+
+    /// [`ConvService::register_with_algo`] on the driver thread.
+    pub fn register_with_algo(
+        &self,
+        name: &str,
+        problem: ConvProblem,
+        weights: Tensor4,
+        algo: ConvAlgorithm,
+    ) -> Result<LayerId, ServiceError> {
+        let name = name.to_string();
+        self.call(move |s| s.register_with_algo(&name, problem, weights, algo))
+    }
+
+    /// [`ConvService::resolve`] on the driver thread.
+    pub fn resolve(&self, name: &str) -> Option<LayerId> {
+        let name = name.to_string();
+        self.call(move |s| s.resolve(&name))
+    }
+
+    /// [`ConvService::swap_weights`] on the driver thread.
+    pub fn swap_weights(&self, id: LayerId, weights: Tensor4) -> Result<(), ServiceError> {
+        self.call(move |s| s.swap_weights(id, weights))
+    }
+
+    /// [`ConvService::unregister`] on the driver thread.
+    pub fn unregister(&self, id: LayerId) -> Result<(), ServiceError> {
+        self.call(move |s| s.unregister(id))
+    }
+}
+
+/// The reactor loop (runs on the driver thread; returns the service at
+/// shutdown).  One iteration: park until the next batch deadline or the
+/// next command, handle the command burst, fire anything due, deliver
+/// completions to their waiters.
+fn reactor<S: ServiceCore>(mut svc: S, rx: mpsc::Receiver<Cmd<S>>, intake: Arc<Intake>) -> S {
+    let metrics = intake.metrics.clone();
+    let adm = &intake.admission;
+    let mut waiters: HashMap<Ticket, Arc<WaitCell>> = HashMap::new();
+    let mut shutdown = false;
+    while !shutdown {
+        let first = match svc.next_deadline() {
+            Some(d) => {
+                let now = Instant::now();
+                if d <= now {
+                    // a group is due right now: fire before parking
+                    svc.tick();
+                    deliver(&mut svc, &mut waiters);
+                    continue;
+                }
+                match rx.recv_timeout(d - now) {
+                    Ok(cmd) => Some(cmd),
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        svc.tick();
+                        deliver(&mut svc, &mut waiters);
+                        continue;
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            // nothing pending: park until a command arrives (every
+            // sender dropping means nothing can ever arrive — exit)
+            None => match rx.recv() {
+                Ok(cmd) => Some(cmd),
+                Err(_) => break,
+            },
+        };
+        // handle the burst: the received command plus everything queued
+        // behind it, so one wake-up forms the largest possible batches
+        let mut next = first;
+        while let Some(cmd) = next {
+            if handle_cmd(cmd, &mut svc, &mut waiters, adm, &metrics) {
+                shutdown = true;
+                break;
+            }
+            next = rx.try_recv().ok();
+        }
+        metrics.record_intake_depth(adm.depth.load(Ordering::SeqCst));
+        svc.tick(); // the burst may have pushed a group past its deadline
+        deliver(&mut svc, &mut waiters);
+    }
+    // -- shutdown drain: nothing accepted may be lost --
+    // submitters inside their check→send window may still land commands;
+    // wait them out (admission is closed, so the set only shrinks), then
+    // sweep the channel clean
+    while adm.inflight.load(Ordering::SeqCst) > 0 {
+        while let Ok(cmd) = rx.try_recv() {
+            handle_cmd(cmd, &mut svc, &mut waiters, adm, &metrics);
+        }
+        thread::yield_now();
+    }
+    while let Ok(cmd) = rx.try_recv() {
+        handle_cmd(cmd, &mut svc, &mut waiters, adm, &metrics);
+    }
+    svc.flush();
+    deliver(&mut svc, &mut waiters);
+    // a waiter can survive delivery only if its response is gone for
+    // good (e.g. TTL/cap eviction raced the flush): resolve, don't hang
+    for (_, cell) in waiters.drain() {
+        cell.fulfill(Err(ServiceError::ShuttingDown));
+    }
+    metrics.record_intake_depth(adm.depth.load(Ordering::SeqCst));
+    svc
+}
+
+/// Apply one command to the service; `true` means shutdown was ordered.
+fn handle_cmd<S: ServiceCore>(
+    cmd: Cmd<S>,
+    svc: &mut S,
+    waiters: &mut HashMap<Ticket, Arc<WaitCell>>,
+    adm: &Admission,
+    metrics: &Metrics,
+) -> bool {
+    match cmd {
+        Cmd::Submit(sub) => {
+            // the reactor has the command: its intake slot frees now
+            adm.depth.fetch_sub(1, Ordering::SeqCst);
+            metrics.record_queue_wait(sub.enqueued.elapsed().as_secs_f64());
+            match svc.submit(sub.req) {
+                Ok(ticket) => {
+                    waiters.insert(ticket, sub.cell);
+                }
+                // validation failed: the waiter resolves to the error
+                Err(e) => sub.cell.fulfill(Err(e)),
+            }
+            false
+        }
+        Cmd::Call(f) => {
+            f(svc);
+            false
+        }
+        Cmd::Shutdown => true,
+    }
+}
+
+/// Hand every completed response to its waiter.  `take` is a map lookup
+/// per outstanding waiter; the waiter set stays small because it is
+/// bounded by intake_limit + what the batcher can hold.
+fn deliver<S: ServiceCore>(svc: &mut S, waiters: &mut HashMap<Ticket, Arc<WaitCell>>) {
+    if waiters.is_empty() {
+        return;
+    }
+    waiters.retain(|ticket, cell| match svc.take(*ticket) {
+        Some(resp) => {
+            cell.fulfill(Ok(resp));
+            false
+        }
+        None => true,
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_bucket_enforces_rate_and_burst() {
+        let opts = FrontEndOptions::new()
+            .quota(TenantId(1), TenantQuota::with_burst(0.0, 3.0))
+            .default_quota(TenantQuota::per_sec(1000.0));
+        let adm = Admission::new(&opts);
+        let t0 = Instant::now();
+        // burst of 3 admits, the 4th is out of tokens (rate 0: no refill)
+        for _ in 0..3 {
+            assert!(adm.take_token(TenantId(1), t0).is_ok());
+        }
+        assert_eq!(
+            adm.take_token(TenantId(1), t0),
+            Err(ServiceError::QuotaExceeded { tenant: TenantId(1) })
+        );
+        // refill is continuous: rate 1000/s grants ~1 token per ms
+        let opts = FrontEndOptions::new().default_quota(TenantQuota::with_burst(1000.0, 1.0));
+        let adm = Admission::new(&opts);
+        assert!(adm.take_token(TenantId(9), t0).is_ok());
+        assert!(adm.take_token(TenantId(9), t0).is_err(), "bucket emptied");
+        let later = t0 + Duration::from_millis(2);
+        assert!(adm.take_token(TenantId(9), later).is_ok(), "refilled");
+        // an out-of-order (earlier) timestamp must not rewind the bucket
+        assert!(adm.take_token(TenantId(9), t0).is_err());
+    }
+
+    #[test]
+    fn unquotaed_tenants_are_never_limited() {
+        let opts = FrontEndOptions::new().quota(TenantId(1), TenantQuota::with_burst(0.0, 1.0));
+        let adm = Admission::new(&opts);
+        let t0 = Instant::now();
+        for _ in 0..100 {
+            assert!(adm.take_token(TenantId(2), t0).is_ok());
+        }
+        assert!(adm.take_token(TenantId(1), t0).is_ok());
+        assert!(adm.take_token(TenantId(1), t0).is_err(), "quota'd one is");
+    }
+
+    #[test]
+    fn wait_cell_is_first_write_wins_and_single_take() {
+        let cell = Arc::new(WaitCell::new());
+        let w = TicketWaiter { cell: cell.clone(), id: 7 };
+        assert_eq!(w.id(), 7);
+        assert!(!w.poll());
+        cell.fulfill(Err(ServiceError::ShuttingDown));
+        cell.fulfill(Ok(ConvResponse {
+            ticket: Ticket { svc: 0, seq: 0 },
+            output: Tensor4::zeros([1, 1, 1, 1]),
+            latency: 0.0,
+            batch_size: 1,
+        }));
+        assert!(w.poll());
+        // the first write (ShuttingDown) won; the later Ok was dropped
+        assert!(matches!(w.wait(), Err(ServiceError::ShuttingDown)));
+    }
+
+    #[test]
+    fn wait_timeout_returns_the_waiter_then_the_outcome() {
+        let cell = Arc::new(WaitCell::new());
+        let w = TicketWaiter { cell: cell.clone(), id: 0 };
+        let w = match w.wait_timeout(Duration::from_millis(5)) {
+            Err(w) => w,
+            Ok(_) => panic!("nothing was delivered yet"),
+        };
+        // a parked waiter is woken by fulfill, not by polling
+        let waker = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            cell.fulfill(Err(ServiceError::ShuttingDown));
+        });
+        let out = w.wait_timeout(Duration::from_secs(60)).expect("fulfilled well before");
+        assert!(matches!(out, Err(ServiceError::ShuttingDown)));
+        waker.join().unwrap();
+    }
+
+    #[test]
+    fn options_clamp_and_wire() {
+        let opts = FrontEndOptions::new().intake_limit(0).name("fe-test");
+        assert_eq!(opts.name, "fe-test");
+        let adm = Admission::new(&opts);
+        assert_eq!(adm.limit, 1, "intake limit floors at 1");
+        assert!(adm.open.load(Ordering::SeqCst));
+        let q = TenantQuota::per_sec(0.0);
+        assert!((q.burst - 1.0).abs() < 1e-12, "burst floors at one token");
+    }
+}

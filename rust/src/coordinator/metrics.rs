@@ -23,6 +23,19 @@ struct Inner {
     /// completion-store depth fed via `record_unclaimed` (a gauge:
     /// responses executed but not yet claimed by their ticket)
     unclaimed: u64,
+    /// unclaimed responses evicted by TTL or per-tenant cap
+    expired: u64,
+    /// front-end admissions (requests accepted into the intake queue)
+    admitted: u64,
+    /// front-end rejections: bounded intake queue full
+    shed: u64,
+    /// front-end rejections: tenant token bucket empty
+    quota_rejected: u64,
+    /// intake-queue depth fed via `record_intake_depth` (a gauge)
+    intake_depth: u64,
+    /// sliding window of intake→reactor-pickup waits (seconds), same
+    /// `window` bound as the execute-latency window
+    queue_waits: VecDeque<f64>,
 }
 
 /// A point-in-time snapshot.
@@ -48,9 +61,24 @@ pub struct Snapshot {
     /// re-measurements that changed the winning execution mode
     pub decay_flips: u64,
     /// responses sitting in the completion store awaiting their ticket
-    /// (a steadily growing value means a tenant is abandoning tickets —
-    /// `drain_completed` is the relief valve)
+    /// (bounded when a TTL / per-tenant cap is configured; without one,
+    /// a steadily growing value means a tenant is abandoning tickets)
     pub unclaimed: u64,
+    /// unclaimed responses evicted by the completion store's TTL sweep
+    /// or a tenant's cap — abandoned work reclaimed instead of leaked
+    pub expired_responses: u64,
+    /// requests the front-end accepted into its intake queue
+    pub admitted: u64,
+    /// requests shed with `Overloaded` (bounded intake queue full)
+    pub shed: u64,
+    /// requests shed with `QuotaExceeded` (tenant token bucket empty)
+    pub quota_rejected: u64,
+    /// front-end intake-queue depth at the last recording (a gauge)
+    pub intake_depth: u64,
+    /// median intake→reactor-pickup wait over the sliding window
+    pub queue_p50_ms: f64,
+    /// p95 intake→reactor-pickup wait over the sliding window
+    pub queue_p95_ms: f64,
 }
 
 impl Default for Metrics {
@@ -71,6 +99,12 @@ impl Metrics {
                 dropped: 0,
                 decay: DecayStats::default(),
                 unclaimed: 0,
+                expired: 0,
+                admitted: 0,
+                shed: 0,
+                quota_rejected: 0,
+                intake_depth: 0,
+                queue_waits: VecDeque::new(),
             }),
         }
     }
@@ -108,22 +142,55 @@ impl Metrics {
         self.inner.lock().unwrap().unclaimed = n as u64;
     }
 
+    /// Count unclaimed responses evicted by the completion store's TTL
+    /// sweep or a tenant's cap (monotonic counter).
+    pub fn record_expired(&self, n: usize) {
+        self.inner.lock().unwrap().expired += n as u64;
+    }
+
+    /// Count one request accepted by front-end admission control.
+    pub fn record_admitted(&self) {
+        self.inner.lock().unwrap().admitted += 1;
+    }
+
+    /// Count one request shed because the bounded intake queue is full.
+    pub fn record_shed(&self) {
+        self.inner.lock().unwrap().shed += 1;
+    }
+
+    /// Count one request shed because the tenant's token bucket is empty.
+    pub fn record_quota_rejected(&self) {
+        self.inner.lock().unwrap().quota_rejected += 1;
+    }
+
+    /// Publish the front-end intake-queue depth (latest value wins).
+    pub fn record_intake_depth(&self, n: usize) {
+        self.inner.lock().unwrap().intake_depth = n as u64;
+    }
+
+    /// Record one intake→reactor-pickup wait (seconds).  Same sliding
+    /// window and non-finite discipline as the execute-latency samples.
+    pub fn record_queue_wait(&self, secs: f64) {
+        let mut g = self.inner.lock().unwrap();
+        if !secs.is_finite() {
+            g.dropped += 1;
+            return;
+        }
+        if g.queue_waits.len() == g.window {
+            g.queue_waits.pop_front();
+        }
+        g.queue_waits.push_back(secs);
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let g = self.inner.lock().unwrap();
         let mut ls: Vec<f64> = g.latencies.iter().copied().collect();
         // total order: the window never holds non-finite values, but the
         // sort must not be able to panic regardless
         ls.sort_by(|a, b| a.total_cmp(b));
-        let q = |p: f64| -> f64 {
-            if ls.is_empty() {
-                0.0
-            } else {
-                // nearest-rank: the ⌈p·n⌉-th smallest sample (1-indexed);
-                // a rounded index biases p95 low on small windows
-                let rank = (p * ls.len() as f64).ceil() as usize;
-                ls[rank.clamp(1, ls.len()) - 1] * 1e3
-            }
-        };
+        let mut qs: Vec<f64> = g.queue_waits.iter().copied().collect();
+        qs.sort_by(|a, b| a.total_cmp(b));
+        let q = |p: f64| quantile_ms(&ls, p);
         Snapshot {
             requests: g.requests,
             batches: g.batches,
@@ -141,8 +208,26 @@ impl Metrics {
             remeasurements: g.decay.remeasurements,
             decay_flips: g.decay.flips,
             unclaimed: g.unclaimed,
+            expired_responses: g.expired,
+            admitted: g.admitted,
+            shed: g.shed,
+            quota_rejected: g.quota_rejected,
+            intake_depth: g.intake_depth,
+            queue_p50_ms: quantile_ms(&qs, 0.50),
+            queue_p95_ms: quantile_ms(&qs, 0.95),
         }
     }
+}
+
+/// Nearest-rank quantile of a sorted sample (seconds → milliseconds):
+/// the ⌈p·n⌉-th smallest value, 1-indexed — a rounded index would bias
+/// p95 low on small windows.  Empty samples report 0.
+fn quantile_ms(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = (p * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1] * 1e3
 }
 
 #[cfg(test)]
@@ -227,6 +312,42 @@ mod tests {
         assert_eq!(m.snapshot().unclaimed, 5);
         m.record_unclaimed(0);
         assert_eq!(m.snapshot().unclaimed, 0, "a gauge, not a counter");
+    }
+
+    #[test]
+    fn frontend_counters_and_queue_wait_quantiles() {
+        let m = Metrics::default();
+        let s0 = m.snapshot();
+        assert_eq!(
+            (s0.admitted, s0.shed, s0.quota_rejected, s0.intake_depth, s0.expired_responses),
+            (0, 0, 0, 0, 0)
+        );
+        for _ in 0..5 {
+            m.record_admitted();
+        }
+        m.record_shed();
+        m.record_shed();
+        m.record_quota_rejected();
+        m.record_intake_depth(3);
+        m.record_expired(2);
+        m.record_expired(1);
+        for i in 1..=100 {
+            m.record_queue_wait(i as f64 / 1000.0);
+        }
+        m.record_queue_wait(f64::NAN); // must not poison the window
+        let s = m.snapshot();
+        assert_eq!(s.admitted, 5);
+        assert_eq!(s.shed, 2);
+        assert_eq!(s.quota_rejected, 1);
+        assert_eq!(s.intake_depth, 3);
+        assert_eq!(s.expired_responses, 3, "expired is a counter, not a gauge");
+        assert!((s.queue_p50_ms - 50.0).abs() < 2.0);
+        assert!(s.queue_p50_ms <= s.queue_p95_ms);
+        assert!((s.queue_p95_ms - 95.0).abs() < 2.0);
+        // queue waits live in their own window: execute quantiles untouched
+        assert_eq!(s.p50_ms, 0.0);
+        m.record_intake_depth(0);
+        assert_eq!(m.snapshot().intake_depth, 0, "depth is a gauge");
     }
 
     #[test]

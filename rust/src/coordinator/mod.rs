@@ -36,13 +36,28 @@
 //!   +--------------------+      front-end: shard::ShardedService
 //! ```
 //!
+//! On top of the synchronous surface sits the async serving front-end
+//! (see [`frontend`]): a reactor thread owns the service, callers go
+//! through admission control and get wakeable waiters back:
+//!
+//! ```text
+//!   callers (any thread)                   driver thread
+//!   submit ─► admission ─► mpsc ─►  FrontEnd reactor ─► ConvService /
+//!    │   (depth bound +               │   (deadline-      ShardedService
+//!    │    tenant token                │    timed tick,
+//!    ▼    buckets)                    ▼    flush at stop)
+//!   TicketWaiter ◄─── fulfill ◄── deliver(take)
+//!   (wait / wait_timeout / poll — condvar park, no spin)
+//! ```
+//!
 //! Every fallible call returns [`ServiceError`] — see the module docs of
 //! [`service`] for the v2 API tour, [`error`] for the taxonomy,
-//! [`profile`] for warm-start snapshots, and [`shard`] for the
-//! multi-replica front-end.
+//! [`profile`] for warm-start snapshots, [`shard`] for the
+//! multi-replica fan-out, and [`frontend`] for the async front-end.
 
 pub mod batcher;
 pub mod error;
+pub mod frontend;
 pub mod metrics;
 pub mod profile;
 pub mod request;
@@ -53,9 +68,12 @@ pub mod store;
 
 pub use batcher::{Batch, Batcher, Pending};
 pub use error::ServiceError;
+pub use frontend::{
+    FrontEnd, FrontEndHandle, FrontEndOptions, ServiceCore, TenantQuota, TicketWaiter,
+};
 pub use metrics::Metrics;
 pub use profile::{MachineProfile, ProfileError, ProfileImport, TuningProfile};
-pub use request::{ConvRequest, ConvResponse, LayerId, NetworkId, Ticket};
+pub use request::{ConvRequest, ConvResponse, LayerId, NetworkId, TenantId, Ticket};
 pub use scheduler::{
     batch_bucket, DecayPolicy, DecayStats, PlanHandle, StaticScheduler, TuneSnapshot, TuneState,
     TuningPolicy,

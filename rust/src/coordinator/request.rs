@@ -80,6 +80,20 @@ impl Ticket {
     }
 }
 
+/// Tenant identity for admission control and per-tenant QoS.  A plain
+/// caller-chosen label — the service never allocates these; multi-tenant
+/// deployments assign one per traffic source so the front-end can apply
+/// token-bucket quotas and per-tenant completion-store caps.  Requests
+/// built without one carry [`TenantId::DEFAULT`], which behaves like any
+/// other tenant (single-tenant callers never notice the field exists).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TenantId(pub u32);
+
+impl TenantId {
+    /// The tenant every `ConvRequest::new` request belongs to.
+    pub const DEFAULT: TenantId = TenantId(0);
+}
+
 /// A single-image convolution request against a registered layer.
 #[derive(Clone, Debug)]
 pub struct ConvRequest {
@@ -87,16 +101,30 @@ pub struct ConvRequest {
     pub layer: LayerId,
     /// (1, C, H, W) activation
     pub input: Tensor4,
+    /// traffic source, for quotas and per-tenant store caps
+    pub tenant: TenantId,
 }
 
 impl ConvRequest {
     /// Build a request; rejects multi-image tensors (`BatchedInput`) —
     /// batching is the service's job, one request is one image.
     pub fn new(layer: LayerId, input: Tensor4) -> Result<ConvRequest, ServiceError> {
+        Self::with_tenant(layer, input, TenantId::DEFAULT)
+    }
+
+    /// `new`, tagged with the submitting tenant.  Tenancy does not
+    /// affect batching — same-signature requests from different tenants
+    /// share a batch; the tag only drives admission control and
+    /// completion-store accounting.
+    pub fn with_tenant(
+        layer: LayerId,
+        input: Tensor4,
+        tenant: TenantId,
+    ) -> Result<ConvRequest, ServiceError> {
         if input.shape[0] != 1 {
             return Err(ServiceError::BatchedInput { got: input.shape[0] });
         }
-        Ok(ConvRequest { layer, input })
+        Ok(ConvRequest { layer, input, tenant })
     }
 
     /// The problem signature used for batching compatibility — all
@@ -167,6 +195,21 @@ mod tests {
                 want: [1, 2, 8, 8],
             }
         );
+    }
+
+    #[test]
+    fn tenant_tag_defaults_and_does_not_change_signature() {
+        let lid = LayerId { svc: 0, slot: 0 };
+        let plain = ConvRequest::new(lid, Tensor4::zeros([1, 2, 8, 8])).unwrap();
+        assert_eq!(plain.tenant, TenantId::DEFAULT);
+        let tagged =
+            ConvRequest::with_tenant(lid, Tensor4::zeros([1, 2, 8, 8]), TenantId(7)).unwrap();
+        assert_eq!(tagged.tenant, TenantId(7));
+        // tenancy must not split batches: same layer + shape, same key
+        assert_eq!(plain.signature(), tagged.signature());
+        let err =
+            ConvRequest::with_tenant(lid, Tensor4::zeros([3, 2, 8, 8]), TenantId(7)).unwrap_err();
+        assert_eq!(err, ServiceError::BatchedInput { got: 3 });
     }
 
     #[test]

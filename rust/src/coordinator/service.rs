@@ -32,7 +32,7 @@ use super::batcher::{Batch, Batcher};
 use super::error::ServiceError;
 use super::metrics::Metrics;
 use super::profile::{ProfileImport, TuningProfile};
-use super::request::{validate, ConvRequest, ConvResponse, LayerId, NetworkId, Ticket};
+use super::request::{validate, ConvRequest, ConvResponse, LayerId, NetworkId, TenantId, Ticket};
 use super::scheduler::{DecayPolicy, DecayStats, PlanHandle, StaticScheduler, TuningPolicy};
 use super::store::{SharedHandle, SharedStores};
 use crate::conv::{ConvAlgorithm, ConvProblem, Tensor4};
@@ -41,8 +41,9 @@ use crate::model::select::{algo_for_problem, method_algo, select_measured};
 use crate::model::stages::LayerShape;
 use crate::nets::graph::{CompiledNetwork, NetworkGraph};
 use crate::util::threadpool::{PoolOptions, ThreadPool};
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Process-unique nonce source for ticket scoping: every service gets
@@ -91,6 +92,12 @@ pub struct ServiceConfig {
     pub decay: DecayPolicy,
     /// plan-cache byte ceiling (`None` keeps the scheduler default)
     pub plan_budget: Option<usize>,
+    /// how long an unclaimed response may sit in the completion store
+    /// before the TTL sweep reclaims it (`None`: kept forever)
+    pub completion_ttl: Option<Duration>,
+    /// per-tenant ceiling on unclaimed responses — storing one more
+    /// evicts that tenant's oldest-completed entry (`None`: unbounded)
+    pub completion_cap: Option<usize>,
 }
 
 impl Default for ServiceConfig {
@@ -102,6 +109,8 @@ impl Default for ServiceConfig {
             tuning: TuningPolicy::default(),
             decay: DecayPolicy::default(),
             plan_budget: None,
+            completion_ttl: None,
+            completion_cap: None,
         }
     }
 }
@@ -153,6 +162,23 @@ impl ConvServiceBuilder {
     /// Plan-cache byte ceiling (defaults to the scheduler's 256 MB).
     pub fn plan_budget(mut self, bytes: usize) -> Self {
         self.cfg.plan_budget = Some(bytes);
+        self
+    }
+
+    /// Reclaim unclaimed responses older than `ttl` on every
+    /// `tick`/`flush` — abandoned tickets stop leaking memory.  Evicted
+    /// responses count in `Snapshot::expired_responses`; their tickets
+    /// then claim `None`, exactly like an already-claimed ticket.
+    pub fn completion_ttl(mut self, ttl: Duration) -> Self {
+        self.cfg.completion_ttl = Some(ttl);
+        self
+    }
+
+    /// Cap unclaimed responses *per tenant*: storing one past the cap
+    /// evicts that tenant's oldest-completed entry, so one misbehaving
+    /// tenant bounds only its own storage (min 1).
+    pub fn completion_cap(mut self, cap: usize) -> Self {
+        self.cfg.completion_cap = Some(cap.max(1));
         self
     }
 
@@ -210,13 +236,25 @@ impl ConvServiceBuilder {
             net_directory: HashMap::new(),
             batcher: Batcher::new(self.cfg.max_batch, self.cfg.max_wait),
             scheduler,
-            metrics: Metrics::default(),
+            metrics: Arc::new(Metrics::default()),
             machine: self.machine,
-            completed: HashMap::new(),
+            completed: BTreeMap::new(),
+            tenant_unclaimed: HashMap::new(),
+            completion_ttl: self.cfg.completion_ttl,
+            completion_cap: self.cfg.completion_cap,
             nonce: SERVICE_NONCE.fetch_add(1, Ordering::Relaxed),
             next_seq: 0,
         }
     }
+}
+
+/// One executed response parked in the completion store, with the
+/// accounting the eviction policies need: who it belongs to and when it
+/// completed.
+struct StoredResponse {
+    resp: ConvResponse,
+    tenant: TenantId,
+    done: Instant,
 }
 
 /// The service.  Synchronous API: `submit` enqueues and returns a
@@ -235,11 +273,21 @@ pub struct ConvService {
     net_directory: HashMap<String, NetworkId>,
     batcher: Batcher,
     scheduler: StaticScheduler,
-    pub metrics: Metrics,
+    /// shared so the async front-end can read snapshots while the
+    /// service itself lives on the reactor's driver thread — `Arc`
+    /// derefs transparently, so `svc.metrics.snapshot()` reads as before
+    pub metrics: Arc<Metrics>,
     machine: Machine,
-    /// executed responses waiting for their ticket to claim them,
-    /// keyed by the ticket's sequence number
-    completed: HashMap<u64, ConvResponse>,
+    /// executed responses waiting for their ticket to claim them, keyed
+    /// by the ticket's sequence number — ordered, so `drain_completed`
+    /// walks in ticket order for free
+    completed: BTreeMap<u64, StoredResponse>,
+    /// unclaimed responses per tenant (the completion-cap ledger)
+    tenant_unclaimed: HashMap<TenantId, usize>,
+    /// unclaimed responses older than this are reclaimed on tick/flush
+    completion_ttl: Option<Duration>,
+    /// per-tenant unclaimed ceiling (oldest evicted on overflow)
+    completion_cap: Option<usize>,
     /// this service's ticket nonce — `take` rejects tickets issued by
     /// any other service before consulting the store
     nonce: u64,
@@ -602,8 +650,9 @@ impl ConvService {
         for (i, (ticket, _, enqueued)) in pending.iter().enumerate() {
             let latency = done.duration_since(*enqueued).as_secs_f64();
             latencies.push(latency);
-            self.completed.insert(
-                ticket.seq,
+            // network submissions carry no tenant tag (yet): they are
+            // accounted to the default tenant for cap purposes
+            self.store_response(
                 ConvResponse {
                     ticket: *ticket,
                     output: Tensor4::from_vec(
@@ -613,6 +662,8 @@ impl ConvService {
                     latency,
                     batch_size: n,
                 },
+                TenantId::DEFAULT,
+                done,
             );
         }
         self.metrics.record_batch(n, &latencies);
@@ -758,8 +809,19 @@ impl ConvService {
 
     /// Execute any batches whose latency deadline expired — layer groups
     /// and network queues alike; returns how many responses completed
-    /// into the store.
+    /// into the store.  Also runs the completion store's TTL sweep, so a
+    /// periodically ticked service reclaims abandoned responses even
+    /// with no new traffic.
+    ///
+    /// O(groups) when nothing is due: the `next_deadline` check touches
+    /// one head per group, so an eager caller (or the front-end reactor
+    /// waking spuriously) pays no per-request scan and no allocation.
     pub fn tick(&mut self) -> usize {
+        self.sweep_expired();
+        match self.next_deadline() {
+            Some(d) if d <= Instant::now() => {}
+            _ => return 0,
+        }
         let batches = self.batcher.poll_expired();
         let mut done: usize = batches.into_iter().map(|b| self.execute_batch(b)).sum();
         let now = Instant::now();
@@ -779,13 +841,32 @@ impl ConvService {
 
     /// Execute everything still pending — layer groups and network
     /// queues; returns how many responses completed into the store.
+    /// Runs the TTL sweep first, like `tick`.
     pub fn flush(&mut self) -> usize {
+        self.sweep_expired();
         let batches = self.batcher.drain();
         let mut done: usize = batches.into_iter().map(|b| self.execute_batch(b)).sum();
         for slot in 0..self.networks.len() {
             done += self.execute_network(slot);
         }
         done
+    }
+
+    /// The earliest instant at which any pending group's `max_wait`
+    /// expires — layer groups and network queues; `None` when nothing is
+    /// pending.  O(groups): each group's oldest member is its head.  The
+    /// async front-end parks its reactor until exactly this instant, so
+    /// deadline-expired batches fire the moment they are due instead of
+    /// whenever a caller happens to poll `tick`.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        let mut earliest = self.batcher.next_deadline();
+        let max_wait = self.batcher.max_wait;
+        for e in self.networks.iter().flatten() {
+            if let Some(d) = e.pending.first().and_then(|(_, _, t)| t.checked_add(max_wait)) {
+                earliest = Some(earliest.map_or(d, |cur| cur.min(d)));
+            }
+        }
+        earliest
     }
 
     /// Claim the response for `ticket`.  Returns `None` while the
@@ -798,16 +879,21 @@ impl ConvService {
         if ticket.svc != self.nonce {
             return None;
         }
-        let resp = self.completed.remove(&ticket.seq);
+        let resp = self.remove_completed(ticket.seq);
         self.metrics.record_unclaimed(self.completed.len());
         resp
     }
 
     /// Claim every completed response (a single-tenant convenience and
-    /// the relief valve against abandoned tickets), in ticket order.
+    /// the relief valve against abandoned tickets), in ticket order —
+    /// the store is keyed on sequence numbers, so the ordered map's
+    /// iteration *is* ticket order.
     pub fn drain_completed(&mut self) -> Vec<ConvResponse> {
-        let mut all: Vec<ConvResponse> = self.completed.drain().map(|(_, r)| r).collect();
-        all.sort_by_key(|r| r.ticket);
+        let all: Vec<ConvResponse> = std::mem::take(&mut self.completed)
+            .into_values()
+            .map(|s| s.resp)
+            .collect();
+        self.tenant_unclaimed.clear();
         self.metrics.record_unclaimed(0);
         all
     }
@@ -815,6 +901,94 @@ impl ConvService {
     /// Responses executed but not yet claimed by their ticket.
     pub fn unclaimed(&self) -> usize {
         self.completed.len()
+    }
+
+    /// Unclaimed responses evicted so far by the TTL sweep or a tenant's
+    /// cap (monotonic; also in `Snapshot::expired_responses`).
+    pub fn expired_responses(&self) -> u64 {
+        self.metrics.snapshot().expired_responses
+    }
+
+    /// Change the unclaimed-response TTL on a live service (`None`
+    /// disables the sweep).  Takes effect on the next `tick`/`flush`.
+    pub fn set_completion_ttl(&mut self, ttl: Option<Duration>) {
+        self.completion_ttl = ttl;
+    }
+
+    /// Change the per-tenant unclaimed cap on a live service (`None`
+    /// removes the bound).  Enforced as the next responses store.
+    pub fn set_completion_cap(&mut self, cap: Option<usize>) {
+        self.completion_cap = cap.map(|c| c.max(1));
+    }
+
+    /// Park one executed response, enforcing the submitting tenant's
+    /// unclaimed cap: at the cap, the tenant's oldest-completed entry is
+    /// evicted (and counted as expired) to make room.  The eviction scan
+    /// is O(store) but only runs for a tenant already at its cap — a
+    /// tenant that claims its tickets never pays it.
+    fn store_response(&mut self, resp: ConvResponse, tenant: TenantId, done: Instant) {
+        if let Some(cap) = self.completion_cap {
+            let mut evicted = 0usize;
+            while self.tenant_unclaimed.get(&tenant).copied().unwrap_or(0) >= cap {
+                let oldest = self
+                    .completed
+                    .iter()
+                    .filter(|(_, s)| s.tenant == tenant)
+                    .min_by_key(|(seq, s)| (s.done, **seq))
+                    .map(|(seq, _)| *seq);
+                match oldest {
+                    Some(seq) => {
+                        self.remove_completed(seq);
+                        evicted += 1;
+                    }
+                    None => break,
+                }
+            }
+            if evicted > 0 {
+                self.metrics.record_expired(evicted);
+            }
+        }
+        self.completed.insert(resp.ticket.seq, StoredResponse { resp, tenant, done });
+        *self.tenant_unclaimed.entry(tenant).or_insert(0) += 1;
+    }
+
+    /// Remove one stored response and keep the per-tenant ledger exact.
+    fn remove_completed(&mut self, seq: u64) -> Option<ConvResponse> {
+        let stored = self.completed.remove(&seq)?;
+        if let Some(n) = self.tenant_unclaimed.get_mut(&stored.tenant) {
+            *n = n.saturating_sub(1);
+            if *n == 0 {
+                self.tenant_unclaimed.remove(&stored.tenant);
+            }
+        }
+        Some(stored.resp)
+    }
+
+    /// Reclaim unclaimed responses older than the configured TTL.  A
+    /// later sequence number can complete *earlier* than a smaller one
+    /// (separate batches finish out of order), so this is a full scan —
+    /// gated on the TTL being configured at all, and amortized by
+    /// running only from `tick`/`flush`.
+    fn sweep_expired(&mut self) {
+        let Some(ttl) = self.completion_ttl else {
+            return;
+        };
+        let now = Instant::now();
+        let dead: Vec<u64> = self
+            .completed
+            .iter()
+            .filter(|(_, s)| now.duration_since(s.done) >= ttl)
+            .map(|(seq, _)| *seq)
+            .collect();
+        if dead.is_empty() {
+            return;
+        }
+        let n = dead.len();
+        for seq in dead {
+            self.remove_completed(seq);
+        }
+        self.metrics.record_expired(n);
+        self.metrics.record_unclaimed(self.completed.len());
     }
 
     /// Requests submitted but not yet executed (layer groups plus
@@ -860,8 +1034,7 @@ impl ConvService {
         for (i, p) in batch.requests.iter().enumerate() {
             let latency = done.duration_since(p.enqueued).as_secs_f64();
             latencies.push(latency);
-            self.completed.insert(
-                p.ticket.seq,
+            self.store_response(
                 ConvResponse {
                     ticket: p.ticket,
                     output: Tensor4::from_vec(
@@ -871,6 +1044,8 @@ impl ConvService {
                     latency,
                     batch_size: n,
                 },
+                p.request.tenant,
+                done,
             );
         }
         self.metrics.record_batch(n, &latencies);
@@ -1268,6 +1443,102 @@ mod tests {
         std::thread::sleep(Duration::from_millis(3));
         assert_eq!(svc.tick(), 1);
         assert!(svc.take(t).is_some());
+    }
+
+    #[test]
+    fn completion_cap_evicts_only_the_offending_tenant() {
+        // max_batch 1: every submit executes immediately into the store
+        let mut svc = ConvService::builder(xeon_gold())
+            .workers(1)
+            .max_batch(1)
+            .completion_cap(2)
+            .build();
+        let w = Tensor4::random(problem().weight_shape(), 58);
+        let id = svc.register("conv1", problem(), w).unwrap();
+        let x = || Tensor4::random([1, 3, 12, 12], 74);
+        // a quiet tenant parks one response first...
+        let quiet = svc
+            .submit(ConvRequest::with_tenant(id, x(), TenantId(1)).unwrap())
+            .unwrap();
+        // ...then a greedy tenant abandons four
+        let greedy: Vec<Ticket> = (0..4)
+            .map(|_| {
+                svc.submit(ConvRequest::with_tenant(id, x(), TenantId(2)).unwrap())
+                    .unwrap()
+            })
+            .collect();
+        assert_eq!(svc.unclaimed(), 3, "quiet's 1 + greedy capped at 2");
+        assert_eq!(svc.expired_responses(), 2, "greedy's two oldest evicted");
+        // eviction is oldest-first and lands on the greedy tenant only
+        assert!(svc.take(greedy[0]).is_none());
+        assert!(svc.take(greedy[1]).is_none());
+        assert!(svc.take(greedy[2]).is_some());
+        assert!(svc.take(greedy[3]).is_some());
+        assert!(svc.take(quiet).is_some(), "quiet tenant untouched");
+        assert_eq!(svc.unclaimed(), 0);
+    }
+
+    #[test]
+    fn completion_ttl_reclaims_abandoned_responses_on_tick() {
+        let mut svc = ConvService::builder(xeon_gold())
+            .workers(1)
+            .max_batch(1)
+            .max_wait(Duration::from_millis(1))
+            .completion_ttl(Duration::from_millis(5))
+            .build();
+        let w = Tensor4::random(problem().weight_shape(), 59);
+        let id = svc.register("conv1", problem(), w).unwrap();
+        let t1 = svc
+            .submit(ConvRequest::new(id, Tensor4::random([1, 3, 12, 12], 75)).unwrap())
+            .unwrap();
+        assert_eq!(svc.unclaimed(), 1);
+        svc.tick();
+        assert_eq!(svc.unclaimed(), 1, "younger than the TTL: kept");
+        std::thread::sleep(Duration::from_millis(8));
+        svc.tick();
+        assert_eq!(svc.unclaimed(), 0, "TTL sweep reclaimed it");
+        assert_eq!(svc.expired_responses(), 1);
+        assert!(svc.take(t1).is_none(), "an expired ticket claims nothing");
+        let snap = svc.metrics.snapshot();
+        assert_eq!(snap.expired_responses, 1);
+        assert_eq!(snap.unclaimed, 0);
+        // runtime setters: disabling the TTL stops the sweep
+        svc.set_completion_ttl(None);
+        let t2 = svc
+            .submit(ConvRequest::new(id, Tensor4::random([1, 3, 12, 12], 76)).unwrap())
+            .unwrap();
+        std::thread::sleep(Duration::from_millis(8));
+        svc.tick();
+        assert_eq!(svc.unclaimed(), 1, "sweep disabled: response kept");
+        assert!(svc.take(t2).is_some());
+    }
+
+    #[test]
+    fn next_deadline_covers_layer_groups_and_network_queues() {
+        use crate::nets::graph::LayerSpec;
+        let mut svc = service(100); // max_wait 1ms
+        assert!(svc.next_deadline().is_none(), "idle service: no deadline");
+        let graph = NetworkGraph::new("n", 1, 6, 6).layer(LayerSpec::conv("c", 2, 3, 0));
+        let wn = vec![Tensor4::random([2, 1, 3, 3], 77)];
+        let nid = svc.register_network("n", graph, wn, 1).unwrap();
+        let id = svc
+            .register(
+                "conv1",
+                problem(),
+                Tensor4::random(problem().weight_shape(), 78),
+            )
+            .unwrap();
+        svc.submit_network(nid, Tensor4::random([1, 1, 6, 6], 79)).unwrap();
+        let d_net = svc.next_deadline().expect("network queue sets a deadline");
+        std::thread::sleep(Duration::from_millis(2));
+        svc.submit(ConvRequest::new(id, Tensor4::random([1, 3, 12, 12], 80)).unwrap())
+            .unwrap();
+        let d_both = svc.next_deadline().expect("layer group pending too");
+        assert_eq!(d_both, d_net, "earliest pending head wins");
+        // firing the due work clears the deadline
+        std::thread::sleep(Duration::from_millis(2));
+        assert_eq!(svc.tick(), 2, "both singleton groups were overdue");
+        assert!(svc.next_deadline().is_none());
     }
 
     #[test]

@@ -24,6 +24,7 @@
 //! dependency-free.
 
 use super::error::ServiceError;
+use super::metrics::Metrics;
 use super::profile::{ProfileImport, TuningProfile};
 use super::request::{ConvRequest, ConvResponse, LayerId, Ticket};
 use super::scheduler::{DecayPolicy, DecayStats, TuningPolicy};
@@ -33,7 +34,7 @@ use crate::conv::{ConvAlgorithm, ConvProblem, ExecMode, Tensor4};
 use crate::model::machine::Machine;
 use crate::util::threadpool::PoolOptions;
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// One worker thread's intended core, recorded by the spawn hook.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -73,6 +74,8 @@ pub struct ShardedServiceBuilder {
     plan_budget: Option<usize>,
     profile: Option<TuningProfile>,
     pin_cores: bool,
+    completion_ttl: Option<Duration>,
+    completion_cap: Option<usize>,
 }
 
 impl ShardedServiceBuilder {
@@ -132,6 +135,26 @@ impl ShardedServiceBuilder {
         self
     }
 
+    /// Unclaimed-response TTL applied to every replica's completion
+    /// store (see [`ConvServiceBuilder::completion_ttl`]).
+    ///
+    /// [`ConvServiceBuilder::completion_ttl`]:
+    /// super::service::ConvServiceBuilder::completion_ttl
+    pub fn completion_ttl(mut self, ttl: Duration) -> Self {
+        self.completion_ttl = Some(ttl);
+        self
+    }
+
+    /// Per-tenant unclaimed cap applied to every replica's completion
+    /// store (see [`ConvServiceBuilder::completion_cap`]).
+    ///
+    /// [`ConvServiceBuilder::completion_cap`]:
+    /// super::service::ConvServiceBuilder::completion_cap
+    pub fn completion_cap(mut self, cap: usize) -> Self {
+        self.completion_cap = Some(cap.max(1));
+        self
+    }
+
     pub fn build(self) -> ShardedService {
         let shared = SharedStores::handle(self.machine.clone());
         let assignments = Arc::new(Mutex::new(Vec::new()));
@@ -159,6 +182,12 @@ impl ShardedServiceBuilder {
                 .pool_options(opts);
             if let Some(bytes) = self.plan_budget {
                 b = b.plan_budget(bytes);
+            }
+            if let Some(ttl) = self.completion_ttl {
+                b = b.completion_ttl(ttl);
+            }
+            if let Some(cap) = self.completion_cap {
+                b = b.completion_cap(cap);
             }
             replicas.push(b.build());
         }
@@ -202,6 +231,8 @@ impl ShardedService {
             plan_budget: None,
             profile: None,
             pin_cores: false,
+            completion_ttl: None,
+            completion_cap: None,
         }
     }
 
@@ -321,6 +352,22 @@ impl ShardedService {
     /// Flush everything pending on every replica.
     pub fn flush(&mut self) -> usize {
         self.replicas.iter_mut().map(|s| s.flush()).sum()
+    }
+
+    /// The earliest `max_wait` expiry across every replica's pending
+    /// work (`None` when the whole shard set is idle) — what the async
+    /// front-end parks against when it drives a sharded service.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.replicas.iter().filter_map(|s| s.next_deadline()).min()
+    }
+
+    /// Replica 0's metrics handle.  Replicas route disjoint layer sets,
+    /// so when the front-end drives the shard set it records its
+    /// intake-side gauges here: one snapshot carries the shard set's
+    /// front-end story, while per-replica execute stats stay readable
+    /// via [`ShardedService::replica`].
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.replicas[0].metrics.clone()
     }
 
     /// Pin every replica's tiled batches to one execution mode

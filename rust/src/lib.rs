@@ -54,5 +54,8 @@ pub mod util;
 pub mod winograd;
 
 pub use conv::{ConvAlgorithm, ConvProblem};
-pub use coordinator::{ConvRequest, ConvResponse, ConvService, LayerId, ServiceError, Ticket};
+pub use coordinator::{
+    ConvRequest, ConvResponse, ConvService, FrontEnd, LayerId, ServiceError, TenantId, TenantQuota,
+    Ticket, TicketWaiter,
+};
 pub use model::machine::Machine;

@@ -92,6 +92,33 @@ impl PoolOptions {
     }
 }
 
+/// Spawn a named, long-lived *driver* thread — one that owns a service
+/// or reactor loop rather than serving pool waves.  The optional hook
+/// runs on the new thread before `body`, with `index` as its argument:
+/// the same pinning/affinity seam as [`PoolOptions::spawn_hook`], so an
+/// async front-end's reactor can be bound next to (or away from) its
+/// workers with the same mechanism.
+pub fn spawn_driver<T, F>(
+    name: impl Into<String>,
+    hook: Option<SpawnHook>,
+    index: usize,
+    body: F,
+) -> thread::JoinHandle<T>
+where
+    T: Send + 'static,
+    F: FnOnce() -> T + Send + 'static,
+{
+    thread::Builder::new()
+        .name(name.into())
+        .spawn(move || {
+            if let Some(hook) = &hook {
+                hook(index);
+            }
+            body()
+        })
+        .expect("spawn driver thread")
+}
+
 /// A fixed-size fork-join pool.
 pub struct ThreadPool {
     senders: Vec<mpsc::Sender<Msg>>,
@@ -340,6 +367,24 @@ mod tests {
             sum.fetch_add(1, Ordering::SeqCst);
         });
         assert_eq!(sum.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn spawn_driver_names_thread_runs_hook_and_returns_value() {
+        let hooked = Arc::new(AtomicU64::new(0));
+        let log = hooked.clone();
+        let hook: SpawnHook = Arc::new(move |i| {
+            log.fetch_add(100 + i as u64, Ordering::SeqCst);
+        });
+        let h = spawn_driver("fftconv-fe", Some(hook), 3, || {
+            std::thread::current().name().map(String::from)
+        });
+        let name = h.join().unwrap();
+        assert_eq!(name.as_deref(), Some("fftconv-fe"));
+        assert_eq!(hooked.load(Ordering::SeqCst), 103, "hook ran with index");
+        // no hook: still named, still returns the body's value
+        let h = spawn_driver("fftconv-fe2", None, 0, || 7u32);
+        assert_eq!(h.join().unwrap(), 7);
     }
 
     #[test]

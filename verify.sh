@@ -13,10 +13,11 @@ cargo test -q
 # proves the portable path stays correct (and that the equivalence suite
 # in tests/simd_kernels.rs really is comparing against a live baseline).
 # This pass includes the whole-network differential suite
-# (tests/network_e2e.rs) and the random shape sweep (tests/shape_sweep.rs),
-# so every served network and sampled geometry is diffed against the
-# naive oracle on BOTH the native and the portable kernel sets — in
-# --quick mode too.
+# (tests/network_e2e.rs), the random shape sweep (tests/shape_sweep.rs),
+# and the async front-end suite (tests/async_frontend.rs), so every
+# served network, sampled geometry, and reactor-delivered response is
+# diffed against the naive oracle on BOTH the native and the portable
+# kernel sets — in --quick mode too.
 echo "---- forced-scalar pass (FFTCONV_FORCE_ISA=scalar) ----"
 FFTCONV_FORCE_ISA=scalar cargo test -q
 
@@ -76,4 +77,13 @@ if [[ "${1:-}" != "--quick" ]]; then
         grep -E '"(replicas|per_replica_batches|cross_replica_hits|tuning_entries|warmstart_hits|warmstart_remeasurements_saved)"' \
             BENCH_hotpaths.json || true
     fi
+fi
+
+# front-end summary runs in --quick mode too (against the JSON from the
+# last full run, if one exists): open-loop throughput, latency quantiles,
+# and the 2x-overload shed rate from the reactor + admission-control path
+if [[ -f BENCH_hotpaths.json ]]; then
+    echo "---- frontend: 2x-overload open loop (img/s, p50/p95/p99, shed) ----"
+    grep -E '"(intake_limit|capacity_ips|offered_ips|images_per_sec|p50_ms|p95_ms|p99_ms|shed_rate_pct|p95_ratio_vs_unloaded|queue_wait_p95_ms)"' \
+        BENCH_hotpaths.json || true
 fi
