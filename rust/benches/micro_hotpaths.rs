@@ -798,9 +798,6 @@ fn main() {
         serve(&mut shard, la, 4, 71); // replica 0 earns the verdict
         serve(&mut shard, lb, 2, 75); // replica 1 serves it for free
         let st = shard.shard_stats();
-        let per_replica: Vec<u64> = (0..shard.replicas())
-            .map(|r| shard.replica(r).metrics.snapshot().batches)
-            .collect();
 
         // warm-start a fresh shard from the exported profile: every
         // settled entry arrives pre-measured, so the serving run below
@@ -827,7 +824,7 @@ fn main() {
 
         t.row(vec![
             "shard-serve".into(),
-            format!("{} replicas, batches {per_replica:?}", st.replicas),
+            format!("{} replicas, {} fleet batches", st.replicas, st.batches),
             "-".into(),
             format!("{} cross-replica hits", st.warm_hits),
         ]);
@@ -839,10 +836,9 @@ fn main() {
         ]);
         let mut obj = BTreeMap::new();
         obj.insert("replicas".to_string(), Json::Num(st.replicas as f64));
-        obj.insert(
-            "per_replica_batches".to_string(),
-            Json::Arr(per_replica.iter().map(|b| Json::Num(*b as f64)).collect()),
-        );
+        // the fleet shares one metrics sink (so FrontEnd snapshots
+        // aggregate across replicas) — batch counts are fleet-wide
+        obj.insert("fleet_batches".to_string(), Json::Num(st.batches as f64));
         obj.insert(
             "cross_replica_hits".to_string(),
             Json::Num(st.warm_hits as f64),

@@ -8,7 +8,7 @@
 //! [`ConvService`]: super::ConvService
 //! [`ConvRequest`]: super::ConvRequest
 
-use super::request::{LayerId, NetworkId, TenantId};
+use super::request::{LayerId, NetworkId, TenantId, Ticket};
 use std::fmt;
 
 /// Why a serving-API call was rejected.
@@ -72,6 +72,13 @@ pub enum ServiceError {
     /// unaffected; this tenant's requests are admitted again once its
     /// bucket refills.
     QuotaExceeded { tenant: TenantId },
+    /// The response for this ticket was evicted from the completion
+    /// store (the TTL sweep or the submitting tenant's unclaimed cap)
+    /// before it could be claimed — the output is gone for good.  Seen
+    /// from a `TicketWaiter` when eviction races delivery, e.g. one
+    /// tenant completing more responses in a single batch than its
+    /// `completion_cap` allows.
+    ResponseEvicted { ticket: Ticket },
     /// The front-end is shutting down (or has shut down): no new work
     /// is accepted, and any request still in flight at shutdown that
     /// could not be completed resolves to this.
@@ -133,6 +140,14 @@ impl fmt::Display for ServiceError {
                     "tenant {} exceeded its token-bucket quota: request shed until \
                      the bucket refills",
                     tenant.0
+                )
+            }
+            ServiceError::ResponseEvicted { ticket } => {
+                write!(
+                    f,
+                    "response for ticket seq {} was evicted from the completion \
+                     store (TTL or tenant cap) before it was claimed",
+                    ticket.seq
                 )
             }
             ServiceError::ShuttingDown => {

@@ -36,7 +36,11 @@
 //!   group bounded by `max_batch` and its response leaves the completion
 //!   store the moment the reactor delivers it to the waiter.  Combined
 //!   with the service-level TTL + per-tenant cap on unclaimed responses,
-//!   no tenant can grow any queue without bound.
+//!   no tenant can grow any queue without bound.  When an eviction beats
+//!   delivery (a tenant batching past its `completion_cap`, or a TTL
+//!   shorter than a command burst), the reactor drains the service's
+//!   evicted-ticket record and resolves the orphaned waiters with
+//!   [`ServiceError::ResponseEvicted`] — an error, never a hang.
 //! * **Shutdown loses nothing.**  [`FrontEnd::shutdown`] closes
 //!   admission, waits out in-flight submitters (an `inflight` handshake
 //!   closes the check-then-send race), flushes the service, delivers
@@ -79,6 +83,16 @@ pub trait ServiceCore: Send + 'static {
     /// The metrics sink snapshots read from — shared with the front-end
     /// so intake-side gauges land next to the execute-side quantiles.
     fn metrics(&self) -> Arc<Metrics>;
+    /// Enable/disable recording of completion-store evictions for
+    /// [`ServiceCore::drain_evicted`].  The reactor turns this on while
+    /// it owns the service; off by default so synchronous callers that
+    /// never drain don't accumulate tickets without bound.
+    fn set_track_evictions(&mut self, on: bool);
+    /// Tickets whose unclaimed responses were evicted (TTL sweep or
+    /// tenant cap) since the last drain — the reactor resolves their
+    /// waiters with [`ServiceError::ResponseEvicted`] so an eviction
+    /// that races delivery can never strand a parked caller.
+    fn drain_evicted(&mut self) -> Vec<Ticket>;
 }
 
 impl ServiceCore for ConvService {
@@ -105,6 +119,14 @@ impl ServiceCore for ConvService {
     fn metrics(&self) -> Arc<Metrics> {
         self.metrics.clone()
     }
+
+    fn set_track_evictions(&mut self, on: bool) {
+        ConvService::set_track_evictions(self, on)
+    }
+
+    fn drain_evicted(&mut self) -> Vec<Ticket> {
+        ConvService::drain_evicted(self)
+    }
 }
 
 impl ServiceCore for ShardedService {
@@ -130,6 +152,14 @@ impl ServiceCore for ShardedService {
 
     fn metrics(&self) -> Arc<Metrics> {
         ShardedService::metrics(self)
+    }
+
+    fn set_track_evictions(&mut self, on: bool) {
+        ShardedService::set_track_evictions(self, on)
+    }
+
+    fn drain_evicted(&mut self) -> Vec<Ticket> {
+        ShardedService::drain_evicted(self)
     }
 }
 
@@ -559,7 +589,9 @@ impl<S: ServiceCore> FrontEndHandle<S> {
 pub struct FrontEnd<S: ServiceCore = ConvService> {
     tx: mpsc::Sender<Cmd<S>>,
     intake: Arc<Intake>,
-    driver: Option<thread::JoinHandle<S>>,
+    /// behind a mutex so [`FrontEnd::call`]'s error path can join the
+    /// driver from `&self` and re-raise a panic's original payload
+    driver: Mutex<Option<thread::JoinHandle<S>>>,
 }
 
 impl<S: ServiceCore> FrontEnd<S> {
@@ -580,7 +612,7 @@ impl<S: ServiceCore> FrontEnd<S> {
         let driver = spawn_driver(opts.name, opts.driver_hook, opts.driver_index, move || {
             reactor(svc, rx, reactor_intake)
         });
-        FrontEnd { tx, intake, driver: Some(driver) }
+        FrontEnd { tx, intake, driver: Mutex::new(Some(driver)) }
     }
 
     /// Submit a request through admission control.  Non-blocking: on
@@ -600,14 +632,26 @@ impl<S: ServiceCore> FrontEnd<S> {
     /// Run a closure against the owned service on the driver thread and
     /// return its result.  The synchronous escape hatch: registration,
     /// weight swaps, profile export — anything the sync API exposes.
+    ///
+    /// While the front-end owns it, the reactor can only be gone if the
+    /// driver thread panicked — so a failed round-trip joins the driver
+    /// and re-raises the *original* panic payload here instead of
+    /// masking it behind a generic message.
     pub fn call<R, F>(&self, f: F) -> R
     where
         R: Send + 'static,
         F: FnOnce(&mut S) -> R + Send + 'static,
     {
-        self.intake
-            .call(&self.tx, f)
-            .expect("reactor lives while the front-end owns it")
+        match self.intake.call(&self.tx, f) {
+            Ok(r) => r,
+            Err(_) => match self.driver.lock().unwrap().take() {
+                Some(driver) => match driver.join() {
+                    Err(payload) => std::panic::resume_unwind(payload),
+                    Ok(_) => panic!("reactor exited without shutdown while the front-end owns it"),
+                },
+                None => panic!("reactor gone: driver already joined after an earlier panic"),
+            },
+        }
     }
 
     /// Point-in-time metrics (intake gauges + execute quantiles).
@@ -630,9 +674,14 @@ impl<S: ServiceCore> FrontEnd<S> {
     /// the service.  Every outstanding [`TicketWaiter`] resolves: with
     /// its response if the flush completed it, with `ShuttingDown`
     /// otherwise.  A panic on the driver thread is re-raised here.
-    pub fn shutdown(mut self) -> S {
+    pub fn shutdown(self) -> S {
         self.begin_shutdown();
-        let driver = self.driver.take().expect("driver present until shutdown");
+        let driver = self
+            .driver
+            .lock()
+            .unwrap()
+            .take()
+            .expect("driver present until shutdown");
         match driver.join() {
             Ok(svc) => svc,
             Err(payload) => std::panic::resume_unwind(payload),
@@ -650,7 +699,7 @@ impl<S: ServiceCore> Drop for FrontEnd<S> {
     /// [`FrontEnd::shutdown`]) but discards the service and swallows
     /// driver panics — use `shutdown` when either matters.
     fn drop(&mut self) {
-        if let Some(driver) = self.driver.take() {
+        if let Some(driver) = self.driver.lock().unwrap().take() {
             self.begin_shutdown();
             let _ = driver.join();
         }
@@ -709,6 +758,10 @@ fn reactor<S: ServiceCore>(mut svc: S, rx: mpsc::Receiver<Cmd<S>>, intake: Arc<I
     let adm = &intake.admission;
     let mut waiters: HashMap<Ticket, Arc<WaitCell>> = HashMap::new();
     let mut shutdown = false;
+    // record evictions while we own the service: a TTL/cap eviction that
+    // beats delivery must resolve its waiter, not strand it (deliver
+    // drains the record every pass)
+    svc.set_track_evictions(true);
     while !shutdown {
         let first = match svc.next_deadline() {
             Some(d) => {
@@ -753,24 +806,31 @@ fn reactor<S: ServiceCore>(mut svc: S, rx: mpsc::Receiver<Cmd<S>>, intake: Arc<I
     // -- shutdown drain: nothing accepted may be lost --
     // submitters inside their check→send window may still land commands;
     // wait them out (admission is closed, so the set only shrinks), then
-    // sweep the channel clean
+    // sweep the channel clean.  The bounded recv_timeout park keeps this
+    // a wait, not a spin: a submitter preempted (or blocked on the
+    // bucket mutex) mid-window costs a few short naps, not a pegged core
     while adm.inflight.load(Ordering::SeqCst) > 0 {
-        while let Ok(cmd) = rx.try_recv() {
-            handle_cmd(cmd, &mut svc, &mut waiters, adm, &metrics);
+        match rx.recv_timeout(Duration::from_micros(200)) {
+            Ok(cmd) => {
+                handle_cmd(cmd, &mut svc, &mut waiters, adm, &metrics);
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
         }
-        thread::yield_now();
     }
     while let Ok(cmd) = rx.try_recv() {
         handle_cmd(cmd, &mut svc, &mut waiters, adm, &metrics);
     }
     svc.flush();
     deliver(&mut svc, &mut waiters);
-    // a waiter can survive delivery only if its response is gone for
-    // good (e.g. TTL/cap eviction raced the flush): resolve, don't hang
+    // a waiter can survive delivery only if its request never produced a
+    // response the flush could complete: resolve, don't hang (eviction
+    // races were already resolved by deliver's drain_evicted pass)
     for (_, cell) in waiters.drain() {
         cell.fulfill(Err(ServiceError::ShuttingDown));
     }
     metrics.record_intake_depth(adm.depth.load(Ordering::SeqCst));
+    svc.set_track_evictions(false);
     svc
 }
 
@@ -804,10 +864,21 @@ fn handle_cmd<S: ServiceCore>(
     }
 }
 
-/// Hand every completed response to its waiter.  `take` is a map lookup
-/// per outstanding waiter; the waiter set stays small because it is
-/// bounded by intake_limit + what the batcher can hold.
+/// Hand every completed response to its waiter, and resolve waiters
+/// whose responses the completion store evicted before delivery could
+/// reach them (TTL sweep, or a tenant batching past its cap) — an
+/// evicted response is gone for good, so its waiter errors now instead
+/// of parking until shutdown.  `take` is a map lookup per outstanding
+/// waiter; the waiter set stays small because it is bounded by
+/// intake_limit + what the batcher can hold.
 fn deliver<S: ServiceCore>(svc: &mut S, waiters: &mut HashMap<Ticket, Arc<WaitCell>>) {
+    for ticket in svc.drain_evicted() {
+        // a ticket submitted outside the waiter protocol (the `call`
+        // escape hatch) has no cell here — nothing to resolve
+        if let Some(cell) = waiters.remove(&ticket) {
+            cell.fulfill(Err(ServiceError::ResponseEvicted { ticket }));
+        }
+    }
     if waiters.is_empty() {
         return;
     }

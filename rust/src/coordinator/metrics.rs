@@ -20,8 +20,9 @@ struct Inner {
     dropped: u64,
     /// last scheduler decay counters fed via `record_decay`
     decay: DecayStats,
-    /// completion-store depth fed via `record_unclaimed` (a gauge:
-    /// responses executed but not yet claimed by their ticket)
+    /// completion-store depth, moved by `add_unclaimed`/`sub_unclaimed`
+    /// deltas (a gauge: responses executed but not yet claimed by their
+    /// ticket; delta-based so replicas sharing one sink sum exactly)
     unclaimed: u64,
     /// unclaimed responses evicted by TTL or per-tenant cap
     expired: u64,
@@ -136,10 +137,19 @@ impl Metrics {
         self.inner.lock().unwrap().decay = stats;
     }
 
-    /// Publish the completion-store depth (latest value wins) — the
-    /// service updates it whenever responses complete or are claimed.
-    pub fn record_unclaimed(&self, n: usize) {
-        self.inner.lock().unwrap().unclaimed = n as u64;
+    /// Add newly parked responses to the completion-store gauge.  The
+    /// gauge moves by deltas (store +1, claim/evict −1) rather than
+    /// absolute depths, so services sharing one sink — `ShardedService`
+    /// replicas — aggregate exactly instead of clobbering each other.
+    pub fn add_unclaimed(&self, n: usize) {
+        self.inner.lock().unwrap().unclaimed += n as u64;
+    }
+
+    /// Remove claimed or evicted responses from the completion-store
+    /// gauge (saturating: a mismatched drain must not wrap).
+    pub fn sub_unclaimed(&self, n: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.unclaimed = g.unclaimed.saturating_sub(n as u64);
     }
 
     /// Count unclaimed responses evicted by the completion store's TTL
@@ -305,13 +315,16 @@ mod tests {
     }
 
     #[test]
-    fn unclaimed_gauge_tracks_latest_value() {
+    fn unclaimed_gauge_moves_by_deltas_and_never_wraps() {
         let m = Metrics::default();
         assert_eq!(m.snapshot().unclaimed, 0);
-        m.record_unclaimed(5);
-        assert_eq!(m.snapshot().unclaimed, 5);
-        m.record_unclaimed(0);
-        assert_eq!(m.snapshot().unclaimed, 0, "a gauge, not a counter");
+        m.add_unclaimed(3);
+        m.add_unclaimed(2);
+        assert_eq!(m.snapshot().unclaimed, 5, "deltas accumulate");
+        m.sub_unclaimed(5);
+        assert_eq!(m.snapshot().unclaimed, 0, "claims drain the gauge");
+        m.sub_unclaimed(1);
+        assert_eq!(m.snapshot().unclaimed, 0, "saturating: no wraparound");
     }
 
     #[test]

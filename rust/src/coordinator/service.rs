@@ -126,6 +126,8 @@ pub struct ConvServiceBuilder {
     pool: Option<PoolOptions>,
     /// tuning profile to import right after construction (warm-start)
     profile: Option<TuningProfile>,
+    /// record into an existing metrics sink instead of a private one
+    metrics: Option<Arc<Metrics>>,
 }
 
 impl ConvServiceBuilder {
@@ -194,6 +196,18 @@ impl ConvServiceBuilder {
         self
     }
 
+    /// Record into an existing [`Metrics`] sink instead of a private
+    /// one — how [`ShardedService`] replicas share one sink so a single
+    /// snapshot aggregates the whole fleet (every counter is additive
+    /// and the `unclaimed` gauge moves by deltas, so N recorders sum
+    /// exactly).
+    ///
+    /// [`ShardedService`]: super::shard::ShardedService
+    pub(crate) fn metrics_sink(mut self, metrics: Arc<Metrics>) -> Self {
+        self.metrics = Some(metrics);
+        self
+    }
+
     /// Thread-pool options: worker-name prefix and the per-worker spawn
     /// hook (core-pinning / NUMA groundwork).
     pub fn pool_options(mut self, opts: PoolOptions) -> Self {
@@ -236,12 +250,14 @@ impl ConvServiceBuilder {
             net_directory: HashMap::new(),
             batcher: Batcher::new(self.cfg.max_batch, self.cfg.max_wait),
             scheduler,
-            metrics: Arc::new(Metrics::default()),
+            metrics: self.metrics.unwrap_or_default(),
             machine: self.machine,
             completed: BTreeMap::new(),
             tenant_unclaimed: HashMap::new(),
             completion_ttl: self.cfg.completion_ttl,
             completion_cap: self.cfg.completion_cap,
+            evicted: Vec::new(),
+            track_evictions: false,
             nonce: SERVICE_NONCE.fetch_add(1, Ordering::Relaxed),
             next_seq: 0,
         }
@@ -288,6 +304,12 @@ pub struct ConvService {
     completion_ttl: Option<Duration>,
     /// per-tenant unclaimed ceiling (oldest evicted on overflow)
     completion_cap: Option<usize>,
+    /// tickets whose responses were evicted (TTL / cap) since the last
+    /// `drain_evicted` — only recorded while `track_evictions` is on
+    evicted: Vec<Ticket>,
+    /// off by default: a synchronous caller that never drains must not
+    /// accumulate evicted tickets without bound
+    track_evictions: bool,
     /// this service's ticket nonce — `take` rejects tickets issued by
     /// any other service before consulting the store
     nonce: u64,
@@ -313,6 +335,7 @@ impl ConvService {
             shared: None,
             pool: None,
             profile: None,
+            metrics: None,
         }
     }
 
@@ -668,7 +691,6 @@ impl ConvService {
         }
         self.metrics.record_batch(n, &latencies);
         self.metrics.record_decay(self.scheduler.decay_stats());
-        self.metrics.record_unclaimed(self.completed.len());
         n
     }
 
@@ -879,9 +901,7 @@ impl ConvService {
         if ticket.svc != self.nonce {
             return None;
         }
-        let resp = self.remove_completed(ticket.seq);
-        self.metrics.record_unclaimed(self.completed.len());
-        resp
+        self.remove_completed(ticket.seq)
     }
 
     /// Claim every completed response (a single-tenant convenience and
@@ -894,7 +914,7 @@ impl ConvService {
             .map(|s| s.resp)
             .collect();
         self.tenant_unclaimed.clear();
-        self.metrics.record_unclaimed(0);
+        self.metrics.sub_unclaimed(all.len());
         all
     }
 
@@ -939,6 +959,7 @@ impl ConvService {
                 match oldest {
                     Some(seq) => {
                         self.remove_completed(seq);
+                        self.record_evicted(seq);
                         evicted += 1;
                     }
                     None => break,
@@ -950,6 +971,15 @@ impl ConvService {
         }
         self.completed.insert(resp.ticket.seq, StoredResponse { resp, tenant, done });
         *self.tenant_unclaimed.entry(tenant).or_insert(0) += 1;
+        self.metrics.add_unclaimed(1);
+    }
+
+    /// Remember an evicted ticket for [`ConvService::drain_evicted`]
+    /// (no-op unless tracking is on).
+    fn record_evicted(&mut self, seq: u64) {
+        if self.track_evictions {
+            self.evicted.push(Ticket { svc: self.nonce, seq });
+        }
     }
 
     /// Remove one stored response and keep the per-tenant ledger exact.
@@ -961,6 +991,7 @@ impl ConvService {
                 self.tenant_unclaimed.remove(&stored.tenant);
             }
         }
+        self.metrics.sub_unclaimed(1);
         Some(stored.resp)
     }
 
@@ -986,9 +1017,9 @@ impl ConvService {
         let n = dead.len();
         for seq in dead {
             self.remove_completed(seq);
+            self.record_evicted(seq);
         }
         self.metrics.record_expired(n);
-        self.metrics.record_unclaimed(self.completed.len());
     }
 
     /// Requests submitted but not yet executed (layer groups plus
@@ -1052,8 +1083,29 @@ impl ConvService {
         // publish the scheduler's decay counters alongside the latency
         // stats, so one snapshot answers "is the tuning table churning?"
         self.metrics.record_decay(self.scheduler.decay_stats());
-        self.metrics.record_unclaimed(self.completed.len());
         n
+    }
+
+    /// Record evicted tickets for [`ConvService::drain_evicted`] (off
+    /// by default: a synchronous caller that never drains must not
+    /// accumulate them without bound).  Turning tracking off discards
+    /// anything already recorded.
+    pub fn set_track_evictions(&mut self, on: bool) {
+        self.track_evictions = on;
+        if !on {
+            self.evicted.clear();
+        }
+    }
+
+    /// Tickets whose unclaimed responses were evicted by the TTL sweep
+    /// or a tenant's cap since the last drain (always empty unless
+    /// [`ConvService::set_track_evictions`] enabled tracking).  The
+    /// async front-end drains this after every delivery pass and
+    /// resolves the orphaned waiters with
+    /// [`ServiceError::ResponseEvicted`] instead of leaving them
+    /// parked forever.
+    pub fn drain_evicted(&mut self) -> Vec<Ticket> {
+        std::mem::take(&mut self.evicted)
     }
 }
 

@@ -157,6 +157,11 @@ impl ShardedServiceBuilder {
 
     pub fn build(self) -> ShardedService {
         let shared = SharedStores::handle(self.machine.clone());
+        // one sink for the whole fleet: every replica's execute-side
+        // counters and the front-end's intake gauges land in the same
+        // snapshot, so invariants like admitted == requests hold for a
+        // sharded deployment exactly as they do for a single service
+        let metrics = Arc::new(Metrics::default());
         let assignments = Arc::new(Mutex::new(Vec::new()));
         let mut replicas = Vec::with_capacity(self.replicas);
         for r in 0..self.replicas {
@@ -179,6 +184,7 @@ impl ShardedServiceBuilder {
                 .tuning_policy(self.tuning)
                 .decay_policy(self.decay)
                 .shared(shared.clone())
+                .metrics_sink(metrics.clone())
                 .pool_options(opts);
             if let Some(bytes) = self.plan_budget {
                 b = b.plan_budget(bytes);
@@ -195,6 +201,7 @@ impl ShardedServiceBuilder {
             replicas,
             loads: vec![0; self.replicas],
             shared,
+            metrics,
             assignments,
         };
         debug_assert!(out
@@ -214,6 +221,8 @@ pub struct ShardedService {
     /// layers assigned per replica — the least-loaded routing state
     loads: Vec<usize>,
     shared: SharedHandle,
+    /// the fleet-wide sink every replica records into (see `metrics`)
+    metrics: Arc<Metrics>,
     assignments: Arc<Mutex<Vec<CoreAssignment>>>,
 }
 
@@ -361,13 +370,31 @@ impl ShardedService {
         self.replicas.iter().filter_map(|s| s.next_deadline()).min()
     }
 
-    /// Replica 0's metrics handle.  Replicas route disjoint layer sets,
-    /// so when the front-end drives the shard set it records its
-    /// intake-side gauges here: one snapshot carries the shard set's
-    /// front-end story, while per-replica execute stats stay readable
-    /// via [`ShardedService::replica`].
+    /// The fleet-wide metrics sink: every replica records its
+    /// execute-side counters here (the builder wires one shared sink
+    /// through all of them) and the front-end adds its intake gauges,
+    /// so one snapshot aggregates the whole shard set — `admitted ==
+    /// requests` and the other intake/execute invariants hold exactly
+    /// as they do for a single [`ConvService`].
     pub fn metrics(&self) -> Arc<Metrics> {
-        self.replicas[0].metrics.clone()
+        self.metrics.clone()
+    }
+
+    /// Forward eviction tracking to every replica (see
+    /// [`ConvService::set_track_evictions`]).
+    pub fn set_track_evictions(&mut self, on: bool) {
+        for s in &mut self.replicas {
+            s.set_track_evictions(on);
+        }
+    }
+
+    /// Evicted tickets from every replica since the last drain (see
+    /// [`ConvService::drain_evicted`]).
+    pub fn drain_evicted(&mut self) -> Vec<Ticket> {
+        self.replicas
+            .iter_mut()
+            .flat_map(|s| s.drain_evicted())
+            .collect()
     }
 
     /// Pin every replica's tiled batches to one execution mode
@@ -406,11 +433,8 @@ impl ShardedService {
         ShardStats {
             replicas: self.replicas.len(),
             layers: self.loads.iter().sum(),
-            batches: self
-                .replicas
-                .iter()
-                .map(|s| s.metrics.snapshot().batches)
-                .sum(),
+            // one shared sink: the counter already aggregates the fleet
+            batches: self.metrics.snapshot().batches,
             warm_hits: self.replicas.iter().map(|s| s.verdict_warm_hits()).sum(),
             tuning_entries: self.replicas[0].tuning_entries(),
             remeasurements: self.decay_stats().remeasurements,

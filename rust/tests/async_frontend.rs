@@ -10,8 +10,8 @@
 
 use fftconv::conv::{direct, ConvAlgorithm, ConvProblem, Tensor4};
 use fftconv::coordinator::{
-    ConvRequest, ConvService, FrontEnd, FrontEndOptions, ServiceError, TenantId, TenantQuota,
-    TuningPolicy,
+    ConvRequest, ConvService, FrontEnd, FrontEndOptions, ServiceError, ShardedService, TenantId,
+    TenantQuota, TuningPolicy,
 };
 use fftconv::model::machine::xeon_gold;
 use std::sync::mpsc;
@@ -285,4 +285,111 @@ fn shutdown_resolves_every_outstanding_waiter_losing_nothing() {
     assert!(matches!(late, Err(ServiceError::ShuttingDown)));
     let admin: Result<usize, _> = handle.call(|s: &mut ConvService| s.pending());
     assert!(matches!(admin, Err(ServiceError::ShuttingDown)));
+}
+
+#[test]
+fn cap_eviction_resolves_waiters_instead_of_hanging() {
+    let w = Tensor4::random(problem().weight_shape(), 1800);
+    // completion_cap(1) with a 4-wide batch from ONE tenant: storing the
+    // batch's responses evicts three of them inside a single submit —
+    // before the reactor's deliver pass can hand any of them over
+    let mut svc = ConvService::builder(xeon_gold())
+        .workers(1)
+        .max_batch(4)
+        .max_wait(Duration::from_secs(10))
+        .tuning_policy(TuningPolicy::Analytic)
+        .completion_cap(1)
+        .build();
+    let layer = svc.register_with_algo("conv", problem(), w.clone(), ALGO).unwrap();
+    let fe = FrontEnd::launch(svc);
+
+    let x = Tensor4::random([1, 8, 20, 20], 1801);
+    let waiters: Vec<_> = (0..4)
+        .map(|_| fe.submit(ConvRequest::new(layer, x.clone()).unwrap()).unwrap())
+        .collect();
+
+    let mut delivered = 0;
+    let mut evicted = 0;
+    for waiter in waiters {
+        // a timeout here IS the regression: an orphaned waiter whose
+        // response was cap-evicted used to park until shutdown
+        let outcome = waiter
+            .wait_timeout(Duration::from_secs(5))
+            .unwrap_or_else(|_| panic!("cap-evicted waiter hung instead of resolving"));
+        match outcome {
+            Ok(resp) => {
+                assert_close(&resp.output, &x, &w, "cap-survivor response");
+                delivered += 1;
+            }
+            Err(ServiceError::ResponseEvicted { .. }) => evicted += 1,
+            Err(e) => panic!("unexpected waiter error {e}"),
+        }
+    }
+    assert_eq!(delivered, 1, "exactly the cap's worth of responses survive");
+    assert_eq!(evicted, 3, "the rest resolve with ResponseEvicted, not a hang");
+
+    let snap = fe.snapshot();
+    assert_eq!(snap.expired_responses, 3, "cap evictions are counted");
+    assert_eq!(snap.unclaimed, 0, "delivery + eviction drained the store");
+    fe.shutdown();
+}
+
+#[test]
+fn sharded_frontend_snapshot_aggregates_the_whole_fleet() {
+    let w = Tensor4::random(problem().weight_shape(), 1900);
+    let mut svc = ShardedService::builder(xeon_gold())
+        .replicas(2)
+        .workers(1)
+        .max_batch(1)
+        .max_wait(Duration::from_millis(1))
+        .tuning_policy(TuningPolicy::Analytic)
+        .build();
+    let a = svc.register_with_algo_on(0, "conv_a", problem(), w.clone(), ALGO).unwrap();
+    let b = svc.register_with_algo_on(1, "conv_b", problem(), w.clone(), ALGO).unwrap();
+    let fe = FrontEnd::launch(svc);
+
+    // 5 requests split 3/2 across the two replicas; max_batch(1) makes
+    // every submit an immediate execute on its owning replica
+    let x = Tensor4::random([1, 8, 20, 20], 1901);
+    let waiters: Vec<_> = [a, b, a, b, a]
+        .iter()
+        .map(|&id| fe.submit(ConvRequest::new(id, x.clone()).unwrap()).unwrap())
+        .collect();
+    for waiter in waiters {
+        let resp = waiter.wait().expect("sharded submit completes");
+        assert_close(&resp.output, &x, &w, "sharded-fleet response");
+    }
+
+    // one sink for the whole fleet: the execute-side counters must agree
+    // with the intake gauges even though the work split across replicas
+    // (a replica-0-only sink would report requests == 3 here)
+    let snap = fe.snapshot();
+    assert_eq!(snap.admitted, 5, "intake saw every submit");
+    assert_eq!(snap.requests, 5, "execute counters aggregate across replicas");
+    assert_eq!(snap.unclaimed, 0);
+    fe.shutdown();
+}
+
+#[test]
+fn call_after_driver_panic_resurfaces_the_original_payload() {
+    let fe = FrontEnd::launch(service(2, Duration::from_millis(1)));
+    // a closure panicking on the driver thread kills the reactor; the
+    // failed round-trip must join the driver and re-raise the ORIGINAL
+    // payload — not mask it behind a generic "reactor lives" expect
+    let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        fe.call(|_s: &mut ConvService| -> usize { panic!("injected reactor crash") })
+    }))
+    .expect_err("the driver panic must resurface at the call site");
+    let msg = err
+        .downcast_ref::<&str>()
+        .copied()
+        .or_else(|| err.downcast_ref::<String>().map(String::as_str))
+        .unwrap_or("<non-string payload>");
+    assert!(
+        msg.contains("injected reactor crash"),
+        "expected the original panic payload, got {msg:?}"
+    );
+    // the driver was already joined by the failed call: drop is a no-op,
+    // not a second panic or a hang
+    drop(fe);
 }

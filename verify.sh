@@ -74,7 +74,7 @@ if [[ "${1:-}" != "--quick" ]]; then
         grep -E '"(total_ms|interlayer_bytes_saved|slowest_layer)"' \
             BENCH_hotpaths.json || true
         echo "---- shard: replicas / cross-replica hits / warm-start savings ----"
-        grep -E '"(replicas|per_replica_batches|cross_replica_hits|tuning_entries|warmstart_hits|warmstart_remeasurements_saved)"' \
+        grep -E '"(replicas|fleet_batches|cross_replica_hits|tuning_entries|warmstart_hits|warmstart_remeasurements_saved)"' \
             BENCH_hotpaths.json || true
     fi
 fi
